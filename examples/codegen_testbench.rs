@@ -1,0 +1,41 @@
+//! Codegen round-trip (paper §VI-B): generate the HLS C++ project for every
+//! conv type, compile each generated testbench with the system C++
+//! compiler, run it against the golden GNNW/GNNT binaries, and check the
+//! reported MAE — proving the template-based compiler emits *correct*
+//! accelerators, not just plausible text.
+//!
+//! Run: `cargo run --release --example codegen_testbench` (needs g++ and
+//! `make artifacts`).
+
+use anyhow::Result;
+
+use gnnbuilder::codegen::Project;
+use gnnbuilder::datasets;
+use gnnbuilder::hls::GraphStats;
+use gnnbuilder::model::ConvType;
+use gnnbuilder::runtime::Manifest;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(gnnbuilder::artifacts_dir())?;
+    let ds = &datasets::ESOL;
+    for conv in ConvType::ALL {
+        let name = format!("bench_{}_esol_base", conv.as_str());
+        let meta = manifest.find(&name)?;
+        let dir = std::env::temp_dir().join(format!("gnnb_cgtb_{}", conv.as_str()));
+        let proj = Project::new(meta.config.clone(), &dir, GraphStats::from_dataset(ds))?;
+        proj.gen_all()?;
+        let t0 = std::time::Instant::now();
+        let tb = proj.build_and_run_testbench(&meta.weights_path, &meta.testvecs_path)?;
+        println!(
+            "{:<5} generated C++ testbench: {} graphs, MAE {:.3e}, kernel {:.3} ms/graph (compile+run {:.1}s)",
+            conv.as_str(),
+            tb.graphs,
+            tb.mae,
+            tb.mean_runtime_seconds * 1e3,
+            t0.elapsed().as_secs_f64()
+        );
+        anyhow::ensure!(tb.mae < 5e-3, "{conv:?} MAE {} too high", tb.mae);
+    }
+    println!("all four generated accelerators reproduce the golden outputs ✔");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! DSE workflow (paper §VII): build a design database by "synthesizing" a
+//! sparse sample of the Listing-2 space, fit the direct-fit random-forest
+//! latency/BRAM models, then search tens of thousands of configurations
+//! per second under a BRAM budget — the paper's "seconds instead of days".
+//!
+//! Run: `cargo run --release --example dse_optimizer [db_size] [budget]`
+
+use anyhow::Result;
+
+use gnnbuilder::datasets;
+use gnnbuilder::dse::{self, Constraints};
+use gnnbuilder::hls::{self, GraphStats};
+use gnnbuilder::model::space::DesignSpace;
+use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel, N_FEATURES};
+use gnnbuilder::util::stats::time_it;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let db_size: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let budget: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(50_000);
+    let seed = 2023;
+
+    let space = DesignSpace::default();
+    println!(
+        "design space: {} configurations ({} features per design)",
+        space.size(),
+        N_FEATURES
+    );
+
+    // -- 1. the design database (the paper's 400 synthesized designs) ----
+    let stats = GraphStats::from_dataset(&datasets::QM9);
+    let (db, t_db) = time_it(|| {
+        build_database(&space, db_size, seed, &stats, gnnbuilder::util::pool::default_threads())
+    });
+    let synth_h: f64 = db.synth_seconds.iter().sum::<f64>() / 3600.0;
+    println!(
+        "database: {} designs simulated in {:.2}s (modeled Vitis time: {:.1} h serial)",
+        db.len(),
+        t_db,
+        synth_h
+    );
+
+    // -- 2. direct-fit models ---------------------------------------------
+    let (pm, t_fit) = time_it(|| PerfModel::fit(&db, &ForestParams { seed, ..Default::default() }));
+    println!("fitted latency+BRAM forests in {:.2}s", t_fit);
+
+    // -- 3. constrained search --------------------------------------------
+    for max_bram in [4032.0, 1500.0, 600.0] {
+        let c = Constraints {
+            max_bram,
+            fix_conv: None,
+            min_hidden_dim: Some(128), // accuracy floor: keep capacity
+        };
+        let r = dse::random_search(&space, &pm, &c, budget, seed);
+        print!(
+            "BRAM ≤ {max_bram:>6}: {} evals in {:.2}s ({:.0}/s), {} feasible → ",
+            r.evaluated,
+            r.wall_seconds,
+            r.evaluated as f64 / r.wall_seconds.max(1e-9),
+            r.feasible
+        );
+        match r.best {
+            Some(best) => {
+                let cfg = &best.config;
+                println!(
+                    "{} h={} L={} p=({},{},{}): predicted {:.3} ms / {:.0} BRAM",
+                    cfg.gnn_conv.as_str(),
+                    cfg.gnn_hidden_dim,
+                    cfg.gnn_num_layers,
+                    cfg.gnn_p_in,
+                    cfg.gnn_p_hidden,
+                    cfg.gnn_p_out,
+                    best.pred_latency_ms,
+                    best.pred_bram
+                );
+                // verify against the "synthesizer"
+                let rep = hls::run_synthesis(cfg, &stats, seed);
+                println!(
+                    "{:>22} verified: {:.3} ms / {} BRAM (pred err {:.1}%)",
+                    "",
+                    rep.latency.total_seconds * 1e3,
+                    rep.resources.bram18k,
+                    100.0
+                        * (best.pred_latency_ms - rep.latency.total_seconds * 1e3).abs()
+                        / (rep.latency.total_seconds * 1e3)
+                );
+            }
+            None => println!("no feasible design"),
+        }
+    }
+
+    // -- 4. Pareto frontier -----------------------------------------------
+    let cands = dse::sample_candidates(&space, &pm, 3000, seed);
+    let front = dse::pareto_front(cands);
+    println!("\nlatency/BRAM Pareto frontier ({} points):", front.len());
+    for c in front.iter().take(12) {
+        println!(
+            "  {:8.3} ms  {:6.0} BRAM  {} h={} L={}",
+            c.pred_latency_ms,
+            c.pred_bram,
+            c.config.gnn_conv.as_str(),
+            c.config.gnn_hidden_dim,
+            c.config.gnn_num_layers
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): load real compiled
+//! model artifacts, start the L3 coordinator (router + dynamic batcher +
+//! per-model workers), stream an HIV-like molecular workload through it,
+//! and report latency/throughput — the deployment scenario the paper's
+//! §VI-C host code serves on the Alveo.
+//!
+//! Run: `cargo run --release --example serve_molecules [n_requests]`
+//! (requires `make artifacts`).
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use gnnbuilder::coordinator::{BackendSpec, BatchPolicy, Coordinator};
+use gnnbuilder::datasets;
+use gnnbuilder::engine::Engine;
+use gnnbuilder::runtime::Manifest;
+use gnnbuilder::util::binio::read_weights;
+use gnnbuilder::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+
+    let manifest = Manifest::load(gnnbuilder::artifacts_dir())?;
+
+    // Two deployment targets for the same HIV benchmark model:
+    //  - the compiled PJRT artifact (the "bitstream"),
+    //  - a native-engine replica (the CPP fallback path).
+    let pjrt_meta = manifest.find("bench_gcn_hiv_base")?.clone();
+    let engine_meta = manifest.find("bench_gin_hiv_base")?.clone();
+    let weights = read_weights(&engine_meta.weights_path)?;
+    let engine = Engine::new(engine_meta.config.clone(), &weights, engine_meta.mean_degree)?;
+
+    let coordinator = Coordinator::start(
+        vec![BackendSpec::pjrt(pjrt_meta.clone()), BackendSpec::engine(engine)],
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        },
+    );
+    println!(
+        "coordinator up: models [{}, {}]",
+        pjrt_meta.name, engine_meta.name
+    );
+
+    // HIV-like request stream, 70/30 split across the two models.
+    let ds = &datasets::HIV;
+    let mut rng = Rng::seed_from(42);
+    let graphs = datasets::gen_dataset(ds, n_requests, 7, 600, 600);
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(n_requests);
+    for (i, mol) in graphs.into_iter().enumerate() {
+        let model = if rng.bool(0.7) {
+            &pjrt_meta.name
+        } else {
+            &engine_meta.name
+        };
+        receivers.push((i, coordinator.submit(model, mol.graph, mol.x)));
+    }
+    let mut outputs = 0usize;
+    for (_, rx) in receivers {
+        let resp = rx.recv()?;
+        assert!(!resp.output.is_empty());
+        outputs += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = &coordinator.metrics;
+    let lat = m.latency_summary();
+    println!("served {outputs} requests in {wall:.2}s → {:.1} req/s", outputs as f64 / wall);
+    println!(
+        "latency: mean {:.2} ms | p50 {:.2} | p95 {:.2} | p99 {:.2} | max {:.2}",
+        lat.mean * 1e3,
+        lat.p50 * 1e3,
+        lat.p95 * 1e3,
+        lat.p99 * 1e3,
+        lat.max * 1e3
+    );
+    println!(
+        "batches: {} | peak queue depth: {} | errors: {}",
+        m.batches.load(std::sync::atomic::Ordering::Relaxed),
+        m.peak_queue.load(std::sync::atomic::Ordering::Relaxed),
+        m.errors.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    coordinator.shutdown();
+    Ok(())
+}

@@ -1,0 +1,198 @@
+"""AOT lowering: L2 JAX model → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Per artifact we emit:
+  artifacts/<name>.hlo.txt       — the lowered module (weights baked as
+                                    constants: the "bitstream" analog)
+  artifacts/<name>.weights.bin   — the same weights for the Rust native
+                                    engine (GNNW format, binio.py)
+  artifacts/<name>.testvecs.bin  — golden graphs + expected outputs (GNNT)
+  artifacts/manifest.json        — index: shapes, dims, kernel VMEM/MXU
+                                    estimates, per-artifact metadata
+
+Run via ``make artifacts`` (build-time only; python never serves requests).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .binio import write_testvecs, write_weights
+from .configs import DATASETS, MAX_EDGES, MAX_NODES, ModelConfig, benchmark_config
+from .graphgen import gen_graph, pad_graph
+from .kernels.linear import vmem_bytes
+from .model import forward, init_params
+
+CONVS = ("gcn", "gin", "sage", "pna")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # Two gotchas vs plain `comp.as_hlo_text()` (both found the hard way):
+    #  * the default printer elides big weight constants as `{...}`, which
+    #    xla_extension 0.5.1's text parser silently reads as ZEROS;
+    #  * metadata now carries source_end_line etc. that the old parser
+    #    rejects outright.
+    po = xc._xla.HloPrintOptions()
+    po.print_large_constants = True
+    po.print_metadata = False
+    return comp.as_hlo_module().to_string(po)
+
+
+def lower_model(cfg: ModelConfig, params, mean_degree: float) -> str:
+    """jit-lower the forward closure (weights captured → HLO constants)."""
+
+    def fn(x, edge_index, num_nodes, num_edges):
+        return (
+            forward(
+                cfg, params, x, edge_index, num_nodes, num_edges,
+                mean_degree=mean_degree, use_pallas=True,
+            ),
+        )
+
+    specs = (
+        jax.ShapeDtypeStruct((cfg.max_nodes, cfg.graph_input_dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.max_edges, 2), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def make_testvecs(cfg: ModelConfig, params, stats, n_graphs: int, seed: int):
+    rng = np.random.default_rng(seed)
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    fwd = jax.jit(
+        lambda x, e, nn, ne: forward(
+            cfg, jparams, x, e, nn, ne,
+            mean_degree=stats.mean_degree, use_pallas=True,
+        )
+    )
+    graphs = []
+    for _ in range(n_graphs):
+        x, edges = gen_graph(rng, stats, cfg.max_nodes, cfg.max_edges)
+        xp, ep, n, e = pad_graph(x, edges, cfg.max_nodes, cfg.max_edges)
+        out = np.asarray(fwd(jnp.asarray(xp), jnp.asarray(ep), jnp.int32(n), jnp.int32(e)))
+        graphs.append(
+            {"num_nodes": n, "num_edges": e, "x": x, "edges": edges, "expected": out}
+        )
+    return graphs
+
+
+def emit_artifact(cfg: ModelConfig, stats, out_dir: str, n_testvecs: int) -> dict:
+    t0 = time.time()
+    params = init_params(cfg, seed=0)
+    hlo = lower_model(cfg, {k: jnp.asarray(v) for k, v in params.items()}, stats.mean_degree)
+    hlo_path = os.path.join(out_dir, f"{cfg.name}.hlo.txt")
+    with open(hlo_path, "w") as fh:
+        fh.write(hlo)
+    write_weights(os.path.join(out_dir, f"{cfg.name}.weights.bin"), params)
+    vecs = make_testvecs(cfg, params, stats, n_testvecs, seed=123)
+    write_testvecs(
+        os.path.join(out_dir, f"{cfg.name}.testvecs.bin"),
+        vecs, cfg.graph_input_dim, cfg.output_dim,
+    )
+    entry = {
+        "name": cfg.name,
+        "config": cfg.to_json(),
+        "dataset": stats.name,
+        "mean_degree": stats.mean_degree,
+        "hlo": os.path.basename(hlo_path),
+        "weights": f"{cfg.name}.weights.bin",
+        "testvecs": f"{cfg.name}.testvecs.bin",
+        "inputs": [
+            {"shape": [cfg.max_nodes, cfg.graph_input_dim], "dtype": "f32"},
+            {"shape": [cfg.max_edges, 2], "dtype": "i32"},
+            {"shape": [], "dtype": "i32"},
+            {"shape": [], "dtype": "i32"},
+        ],
+        "output": {"shape": [cfg.output_dim], "dtype": "f32"},
+        "hlo_sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+        # L1 perf estimates for DESIGN.md / EXPERIMENTS.md (interpret mode
+        # gives no TPU wallclock; these derive from the BlockSpecs).
+        "l1_linear_vmem_bytes": vmem_bytes(128, 128, 128),
+        "lower_seconds": round(time.time() - t0, 2),
+    }
+    print(f"  {cfg.name}: {len(hlo)/1e6:.1f} MB hlo, {entry['lower_seconds']}s")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--testvecs", type=int, default=32)
+    ap.add_argument(
+        "--full", action="store_true",
+        help="all 4 convs x 5 datasets (20 artifacts); default is the serving set",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    # Quickstart model: small GCN, fast to lower and execute.
+    quick = ModelConfig(
+        name="quickstart_gcn",
+        graph_input_dim=9,
+        gnn_conv="gcn",
+        gnn_hidden_dim=32,
+        gnn_out_dim=16,
+        gnn_num_layers=2,
+        mlp_hidden_dim=16,
+        mlp_num_layers=1,
+        output_dim=1,
+        max_nodes=100,
+        max_edges=120,
+    )
+    entries.append(emit_artifact(quick, DATASETS["esol"], args.out, args.testvecs))
+
+    datasets = list(DATASETS) if args.full or True else ["hiv", "esol", "qm9"]
+    for conv in CONVS:
+        for ds in datasets:
+            cfg = benchmark_config(conv, ds, parallel=False)
+            # float artifacts: the deployed kernel + the PyG-CPU-analog baseline
+            entries.append(emit_artifact(cfg, DATASETS[ds], args.out, args.testvecs))
+
+    manifest = {
+        "version": 1,
+        "max_nodes": MAX_NODES,
+        "max_edges": MAX_EDGES,
+        "artifacts": entries,
+        "datasets": {
+            k: {
+                "num_graphs": v.num_graphs,
+                "node_dim": v.node_dim,
+                "edge_dim": v.edge_dim,
+                "output_dim": v.output_dim,
+                "task": v.task,
+                "mean_nodes": v.mean_nodes,
+                "mean_edges": v.mean_edges,
+                "median_nodes": v.median_nodes,
+                "median_edges": v.median_edges,
+                "mean_degree": v.mean_degree,
+            }
+            for k, v in DATASETS.items()
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Binary interchange formats shared with the Rust side.
+
+Two little-endian formats (mirrored by ``rust/src/util/binio.rs``):
+
+``GNNW`` — model weights::
+
+    b"GNNW" u32 version=1  u32 ntensors
+    per tensor: u16 name_len, name (utf8), u8 ndim, u32 dims[ndim], f32 data[]
+
+``GNNT`` — golden test vectors (graphs + expected model outputs)::
+
+    b"GNNT" u32 version=1  u32 ngraphs  u32 in_dim  u32 out_dim
+    per graph: u32 num_nodes, u32 num_edges,
+               f32 x[num_nodes*in_dim] (row major),
+               i32 edges[num_edges*2]  (src,dst pairs),
+               f32 expected[out_dim]
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def write_weights(path: str, tensors: "Dict[str, np.ndarray] | List[Tuple[str, np.ndarray]]") -> None:
+    items = list(tensors.items()) if isinstance(tensors, dict) else list(tensors)
+    with open(path, "wb") as fh:
+        fh.write(b"GNNW")
+        fh.write(struct.pack("<II", 1, len(items)))
+        for name, arr in items:
+            arr = np.asarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            fh.write(struct.pack("<H", len(nb)))
+            fh.write(nb)
+            fh.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                fh.write(struct.pack("<I", d))
+            fh.write(arr.astype("<f4").tobytes(order="C"))
+
+
+def write_testvecs(path: str, graphs: list, in_dim: int, out_dim: int) -> None:
+    """graphs: list of dicts {num_nodes, num_edges, x, edges, expected}."""
+    with open(path, "wb") as fh:
+        fh.write(b"GNNT")
+        fh.write(struct.pack("<IIII", 1, len(graphs), in_dim, out_dim))
+        for g in graphs:
+            x = np.asarray(g["x"], dtype="<f4")
+            edges = np.asarray(g["edges"], dtype="<i4")
+            exp = np.asarray(g["expected"], dtype="<f4")
+            nn, ne = int(g["num_nodes"]), int(g["num_edges"])
+            assert x.shape == (nn, in_dim)
+            assert edges.shape == (ne, 2)
+            assert exp.shape == (out_dim,)
+            fh.write(struct.pack("<II", nn, ne))
+            fh.write(x.tobytes(order="C"))
+            fh.write(edges.tobytes(order="C"))
+            fh.write(exp.tobytes(order="C"))

@@ -1,0 +1,212 @@
+"""Shared model / dataset configuration schema.
+
+This is the python mirror of the Rust model IR (``rust/src/model``). The two
+sides exchange configs as JSON (``artifacts/manifest.json``), so the field
+names here are the canonical schema.
+
+The benchmark architecture (paper Listing 3 — the listing body is truncated
+in the archival copy, so the dims below follow the paper's Listing 1/2
+conventions and are recorded as an explicit assumption in DESIGN.md):
+gnn_hidden_dim=128, gnn_out_dim=64, gnn_num_layers=3, skip connections on,
+global pooling [add, mean, max], MLP head hidden=64 with 3 hidden layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+MAX_NODES = 600
+MAX_EDGES = 600
+
+CONV_TYPES = ("gcn", "gin", "sage", "pna")
+ACTIVATIONS = ("relu", "sigmoid", "tanh", "gelu")
+POOLINGS = ("add", "mean", "max")
+# Aggregations supported by the single-pass partial-aggregation kernel
+# (paper §V-B: sum, min, max, mean, variance, std via Welford).
+AGGREGATIONS = ("sum", "min", "max", "mean", "var", "std")
+
+# PNA aggregator/scaler set (Corso et al. 2020, as wired in the paper's PNA
+# kernel): 4 aggregators x 3 degree scalers.
+PNA_AGGREGATORS = ("mean", "min", "max", "std")
+PNA_SCALERS = ("identity", "amplification", "attenuation")
+
+
+@dataclass(frozen=True)
+class FixedPointFormat:
+    """ap_fixed<W, I> analog: W total bits, I integer bits (signed)."""
+
+    total_bits: int = 32
+    int_bits: int = 16
+
+    @property
+    def frac_bits(self) -> int:
+        return self.total_bits - self.int_bits
+
+    def to_json(self) -> dict:
+        return {"total_bits": self.total_bits, "int_bits": self.int_bits}
+
+
+@dataclass
+class ModelConfig:
+    """A full GNNBuilder model: GNN backbone + global pooling + MLP head."""
+
+    name: str
+    graph_input_dim: int
+    graph_input_edge_dim: int = 0
+    gnn_conv: str = "gcn"  # one of CONV_TYPES
+    gnn_hidden_dim: int = 128
+    gnn_out_dim: int = 64
+    gnn_num_layers: int = 3
+    gnn_activation: str = "relu"
+    gnn_skip_connections: bool = True
+    global_pooling: List[str] = field(default_factory=lambda: ["add", "mean", "max"])
+    mlp_hidden_dim: int = 64
+    mlp_num_layers: int = 3  # hidden layers in the MLP head
+    mlp_activation: str = "relu"
+    output_dim: int = 1
+    # Hardware parallelism factors (paper Listing 1/3).
+    gnn_p_in: int = 1
+    gnn_p_hidden: int = 1
+    gnn_p_out: int = 1
+    mlp_p_in: int = 1
+    mlp_p_hidden: int = 1
+    mlp_p_out: int = 1
+    # Numerics: "float" or "fixed".
+    float_or_fixed: str = "float"
+    fpx: FixedPointFormat = field(default_factory=FixedPointFormat)
+    max_nodes: int = MAX_NODES
+    max_edges: int = MAX_EDGES
+
+    def validate(self) -> None:
+        assert self.gnn_conv in CONV_TYPES, self.gnn_conv
+        assert self.gnn_activation in ACTIVATIONS
+        assert self.mlp_activation in ACTIVATIONS
+        assert all(p in POOLINGS for p in self.global_pooling)
+        assert self.gnn_num_layers >= 1 and self.mlp_num_layers >= 0
+        assert self.float_or_fixed in ("float", "fixed")
+        for p in (
+            self.gnn_p_in,
+            self.gnn_p_hidden,
+            self.gnn_p_out,
+            self.mlp_p_in,
+            self.mlp_p_hidden,
+            self.mlp_p_out,
+        ):
+            assert p >= 1 and (p & (p - 1)) == 0, "parallelism must be pow2"
+
+    @property
+    def pooled_dim(self) -> int:
+        return self.gnn_out_dim * len(self.global_pooling)
+
+    def layer_dims(self) -> List[tuple]:
+        """(in, out) dims of each GNN backbone layer."""
+        dims = []
+        d = self.graph_input_dim
+        for i in range(self.gnn_num_layers):
+            out = (
+                self.gnn_out_dim
+                if i == self.gnn_num_layers - 1
+                else self.gnn_hidden_dim
+            )
+            dims.append((d, out))
+            d = out
+        return dims
+
+    def mlp_dims(self) -> List[tuple]:
+        dims = []
+        d = self.pooled_dim
+        for _ in range(self.mlp_num_layers):
+            dims.append((d, self.mlp_hidden_dim))
+            d = self.mlp_hidden_dim
+        dims.append((d, self.output_dim))
+        return dims
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fpx"] = self.fpx.to_json()
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "ModelConfig":
+        d = dict(d)
+        fpx = d.pop("fpx", None)
+        cfg = ModelConfig(**d)
+        if fpx:
+            object.__setattr__(cfg, "fpx", FixedPointFormat(**fpx))
+        return cfg
+
+
+@dataclass(frozen=True)
+class DatasetStats:
+    """Topology statistics of a MoleculeNet-style dataset.
+
+    The synthetic generators (python here; ``rust/src/datasets`` mirrors
+    them) only need these statistics — the evaluation consumes topology and
+    feature dims, not chemistry. Values follow the published datasets
+    (PyG featurization: MoleculeNet 9-dim nodes / 3-dim bonds; QM9 11/4).
+    """
+
+    name: str
+    num_graphs: int
+    node_dim: int
+    edge_dim: int
+    output_dim: int
+    task: str  # "regression" | "classification"
+    mean_nodes: float
+    mean_edges: float  # directed edge count (2x bonds)
+    median_nodes: int
+    median_edges: int
+    mean_degree: float
+
+
+DATASETS = {
+    "qm9": DatasetStats("qm9", 130831, 11, 4, 19, "regression", 18.0, 37.3, 18, 38, 2.07),
+    "esol": DatasetStats("esol", 1128, 9, 3, 1, "regression", 13.3, 27.4, 13, 26, 2.04),
+    "freesolv": DatasetStats("freesolv", 642, 9, 3, 1, "regression", 8.7, 16.8, 8, 16, 1.92),
+    "lipo": DatasetStats("lipo", 4200, 9, 3, 1, "regression", 27.0, 59.0, 26, 58, 2.18),
+    "hiv": DatasetStats("hiv", 41127, 9, 3, 2, "classification", 25.5, 54.9, 23, 50, 2.15),
+}
+
+
+def benchmark_config(conv: str, dataset: str, parallel: bool) -> ModelConfig:
+    """The Table IV / Fig 6 / Fig 7 benchmark architecture."""
+    ds = DATASETS[dataset]
+    if parallel:
+        # FPGA-Parallel parallelism factors (paper §VIII-B).
+        p_hidden, p_out = (8, 8) if conv == "pna" else (16, 8)
+        fpx = FixedPointFormat(16, 10)
+    else:
+        p_hidden, p_out = 1, 1
+        fpx = FixedPointFormat(32, 16)
+    return ModelConfig(
+        name=f"bench_{conv}_{dataset}_{'parallel' if parallel else 'base'}",
+        graph_input_dim=ds.node_dim,
+        graph_input_edge_dim=ds.edge_dim,
+        gnn_conv=conv,
+        gnn_hidden_dim=128,
+        gnn_out_dim=64,
+        gnn_num_layers=3,
+        gnn_activation="relu",
+        gnn_skip_connections=True,
+        global_pooling=["add", "mean", "max"],
+        mlp_hidden_dim=64,
+        mlp_num_layers=3,
+        output_dim=ds.output_dim,
+        gnn_p_in=1,
+        gnn_p_hidden=p_hidden,
+        gnn_p_out=p_out,
+        mlp_p_in=8 if parallel else 1,
+        mlp_p_hidden=8 if parallel else 1,
+        mlp_p_out=1,
+        float_or_fixed="fixed" if parallel else "float",
+        fpx=fpx,
+    )
+
+
+def pna_delta(mean_degree: float) -> float:
+    """PNA degree-scaler normalizer: mean of log(d+1) over the train set."""
+    return math.log(mean_degree + 1.0)

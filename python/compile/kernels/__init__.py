@@ -1,0 +1,5 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from .aggregate import gcn_aggregate, segment_aggregate  # noqa: F401
+from .linear import linear, vmem_bytes  # noqa: F401
+from .pooling import global_pool  # noqa: F401

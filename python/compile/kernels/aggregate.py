@@ -1,0 +1,154 @@
+"""L1 Pallas kernel: explicit message-passing neighbor aggregation.
+
+Direct port of the paper's Fig. 3 per-node dataflow: for each destination
+node, gather its neighbor slice from the neighbor/offset tables, stream the
+neighbor embeddings one at a time, and fold them into O(1)-space *partial
+aggregations* (paper §V-B): running count / Welford (mean, M2) / max / min —
+exactly the single-pass algorithm the HLS kernel uses so no intermediate
+neighbor buffer (BRAM) is needed. Variance uses Welford's one-pass update
+[Welford 1962]; the finalize step derives sum/mean/var/std from the partials.
+
+Grid = one program per destination node (the HLS pipeline's outer node loop);
+the full feature table sits in VMEM (600 x 128 f32 = 300 KB, within a
+TPU core's ~16 MB VMEM) while per-node state lives in loop carries
+(registers). interpret=True — see linear.py for the TPU-adaptation notes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import AGGREGATIONS
+
+
+def _agg_kernel(nn_ref, x_ref, nbr_ref, off_ref, o_ref, *, ops: tuple, f: int):
+    i = pl.program_id(0)
+    num_nodes = nn_ref[0]
+    start = off_ref[i]
+    end = off_ref[i + 1]
+
+    def body(j, carry):
+        cnt, mean, m2, mx, mn = carry
+        idx = nbr_ref[j]
+        v = pl.load(x_ref, (pl.dslice(idx, 1), slice(None)))[0]  # [F]
+        cnt1 = cnt + 1.0
+        d = v - mean
+        mean1 = mean + d / cnt1
+        m21 = m2 + d * (v - mean1)
+        return (cnt1, mean1, m21, jnp.maximum(mx, v), jnp.minimum(mn, v))
+
+    init = (
+        jnp.float32(0.0),
+        jnp.zeros((f,), jnp.float32),
+        jnp.zeros((f,), jnp.float32),
+        jnp.full((f,), -jnp.inf, jnp.float32),
+        jnp.full((f,), jnp.inf, jnp.float32),
+    )
+    cnt, mean, m2, mx, mn = jax.lax.fori_loop(start, end, body, init)
+    has = cnt > 0.0
+    valid = i < num_nodes
+    live = jnp.logical_and(has, valid)
+    safe_cnt = jnp.maximum(cnt, 1.0)
+    var = m2 / safe_cnt
+    pieces = []
+    for op in ops:
+        if op == "sum":
+            v = mean * cnt
+        elif op == "mean":
+            v = mean
+        elif op == "max":
+            v = mx
+        elif op == "min":
+            v = mn
+        elif op == "var":
+            v = var
+        elif op == "std":
+            v = jnp.sqrt(jnp.maximum(var, 0.0))
+        else:
+            raise ValueError(op)
+        pieces.append(jnp.where(live, v, 0.0))
+    o_ref[0, :] = jnp.concatenate(pieces, axis=0)
+
+
+def segment_aggregate(
+    x: jnp.ndarray,  # [N, F]
+    nbr: jnp.ndarray,  # [E] i32
+    offsets: jnp.ndarray,  # [N+1] i32
+    num_nodes: jnp.ndarray,  # scalar i32
+    ops: tuple,
+) -> jnp.ndarray:
+    """Concat of per-node `ops` aggregations over neighbor slices. [N, |ops|*F]."""
+    assert all(op in AGGREGATIONS for op in ops)
+    n, f = x.shape
+    e = nbr.shape[0]
+    nn = jnp.asarray(num_nodes, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        functools.partial(_agg_kernel, ops=tuple(ops), f=f),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n, f), lambda i: (0, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((n + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, len(ops) * f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, len(ops) * f), jnp.float32),
+        interpret=True,
+    )(nn, x.astype(jnp.float32), nbr.astype(jnp.int32), offsets.astype(jnp.int32))
+
+
+def _gcn_kernel(nn_ref, xw_ref, nbr_ref, off_ref, deg_ref, o_ref):
+    i = pl.program_id(0)
+    num_nodes = nn_ref[0]
+    start = off_ref[i]
+    end = off_ref[i + 1]
+    f = xw_ref.shape[1]
+
+    def body(j, acc):
+        idx = nbr_ref[j]
+        v = pl.load(xw_ref, (pl.dslice(idx, 1), slice(None)))[0]
+        dj = pl.load(deg_ref, (pl.dslice(idx, 1),))[0]
+        return acc + v * jax.lax.rsqrt(jnp.maximum(dj, 1.0))
+
+    acc = jax.lax.fori_loop(start, end, body, jnp.zeros((f,), jnp.float32))
+    di = jnp.maximum(deg_ref[i], 1.0)
+    self_v = pl.load(xw_ref, (pl.dslice(i, 1), slice(None)))[0]
+    out = acc * jax.lax.rsqrt(di) + self_v / di
+    o_ref[0, :] = jnp.where(i < num_nodes, out, 0.0)
+
+
+def gcn_aggregate(
+    xw: jnp.ndarray,
+    nbr: jnp.ndarray,
+    offsets: jnp.ndarray,
+    deg_hat: jnp.ndarray,  # [N] f32, in-degree + 1
+    num_nodes: jnp.ndarray,
+) -> jnp.ndarray:
+    """GCN-normalized aggregation with self loop (see ref.gcn_aggregate_ref)."""
+    n, f = xw.shape
+    e = nbr.shape[0]
+    nn = jnp.asarray(num_nodes, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _gcn_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n, f), lambda i: (0, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((n + 1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=True,
+    )(
+        nn,
+        xw.astype(jnp.float32),
+        nbr.astype(jnp.int32),
+        offsets.astype(jnp.int32),
+        deg_hat.astype(jnp.float32),
+    )

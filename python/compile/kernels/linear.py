@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: tiled linear layer (matmul + bias).
+
+This is the TPU re-expression of the paper's HLS tiled linear kernel (§V-B
+"Linear Layer"): the HLS version array-partitions input/weight/bias by
+``BLOCK_SIZE_IN``/``BLOCK_SIZE_OUT`` and unrolls the MAC tree onto DSP48s;
+here the same two parameters pick the BlockSpec tile over (rows, out
+features), the revisited output block in VMEM plays the role of the
+partitioned accumulation BRAM, and the inner ``jnp.dot`` maps onto the MXU
+instead of a DSP MAC array.
+
+Runs interpret=True (CPU PJRT cannot execute Mosaic custom-calls); on real
+TPU hardware the same BlockSpecs drive the HBM→VMEM pipeline. VMEM footprint
+per grid step ≈ (bm*bk + bk*bn + bm*bn + bn) * 4 bytes — the aot manifest
+records this estimate per artifact (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int):
+    """Grid (i, j, k): accumulate x[i,k] @ w[k,j] into the revisited o block."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...][None, :], o_ref.shape)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+# Single-core VMEM budget used to pick block shapes (a TPU core has ~16 MB;
+# keep head-room for double buffering). Perf note (EXPERIMENTS.md #Perf):
+# interpret-mode pallas pays ~0.8 ms per *grid step* on CPU, so the wrapper
+# grows blocks to fill the VMEM budget and minimize grid steps — on the
+# [600,1664]x[1664,128] PNA tower linear this is a 46x speedup (54.7 ms →
+# 1.2 ms) while remaining a valid TPU tiling (4.8 MB < budget).
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _pick_blocks(n: int, k: int, m: int, bm: int, bn: int, bk: int):
+    """Grow tile sizes toward whole-array blocks while the working set
+    (x-tile + w-tile + out-tile) stays inside the VMEM budget."""
+    cand_m = _ceil_to(n, 8)
+    cand_n = _ceil_to(m, 8)
+    cand_k = _ceil_to(k, 8)
+
+    def bytes_of(a, b_, c):
+        return 4 * (a * c + c * b_ + a * b_ + b_)
+
+    # prefer fewer k-steps first (accumulation traffic), then fewer rows
+    if bytes_of(bm, bn, cand_k) <= VMEM_BUDGET_BYTES:
+        bk = cand_k
+    if bytes_of(cand_m, bn, bk) <= VMEM_BUDGET_BYTES:
+        bm = cand_m
+    if bytes_of(bm, cand_n, bk) <= VMEM_BUDGET_BYTES:
+        bn = cand_n
+    return bm, bn, bk
+
+
+def linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_rows: int = 128,
+    block_cols: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """``x[N,K] @ w[K,M] + b[M]`` as a Pallas blocked matmul.
+
+    Shapes are padded to tile multiples (zero padding is exact for matmul);
+    the result is sliced back to [N, M]. Tile sizes clamp to the padded
+    problem so tiny layers don't allocate 128-wide tiles, then grow to fill
+    the VMEM budget (see _pick_blocks).
+    """
+    n, k = x.shape
+    k2, m = w.shape
+    assert k == k2 and b.shape == (m,), (x.shape, w.shape, b.shape)
+    bm = min(block_rows, _ceil_to(n, 8))
+    bn = min(block_cols, _ceil_to(m, 8))
+    bk = min(block_k, _ceil_to(k, 8))
+    bm, bn, bk = _pick_blocks(n, k, m, bm, bn, bk)
+    np_, mp, kp = _ceil_to(n, bm), _ceil_to(m, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, np_ - n), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, mp - m)))
+    bp = jnp.pad(b.astype(jnp.float32), (0, mp - m))
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(np_ // bm, mp // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:n, :m]
+
+
+def vmem_bytes(block_rows: int, block_cols: int, block_k: int) -> int:
+    """Per-grid-step VMEM footprint estimate (f32), for the aot manifest."""
+    return 4 * (
+        block_rows * block_k
+        + block_k * block_cols
+        + block_rows * block_cols
+        + block_cols
+    )

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: masked global graph pooling (paper §V-B).
+
+Reduces the node-embedding table to a single graph embedding under the
+dynamic ``num_nodes`` mask, concatenating the requested poolings
+(add / mean / max). One grid step; the whole table is a single VMEM block —
+the HLS version streams node embeddings through an accumulator FIFO, here
+the masked reduction happens in one vectorized pass (VPU-shaped, no MXU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import POOLINGS
+
+
+def _pool_kernel(nn_ref, x_ref, o_ref, *, poolings: tuple):
+    num_nodes = nn_ref[0]
+    x = x_ref[...]
+    n = x.shape[0]
+    valid = (jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0) < num_nodes)
+    cnt = jnp.maximum(num_nodes.astype(jnp.float32), 1.0)
+    pieces = []
+    for p in poolings:
+        if p == "add":
+            pieces.append(jnp.sum(jnp.where(valid, x, 0.0), axis=0))
+        elif p == "mean":
+            pieces.append(jnp.sum(jnp.where(valid, x, 0.0), axis=0) / cnt)
+        elif p == "max":
+            v = jnp.max(jnp.where(valid, x, -jnp.inf), axis=0)
+            pieces.append(jnp.where(num_nodes > 0, v, 0.0))
+        else:
+            raise ValueError(p)
+    o_ref[...] = jnp.concatenate(pieces, axis=0)
+
+
+def global_pool(
+    x: jnp.ndarray,  # [N, F]
+    num_nodes: jnp.ndarray,  # scalar i32
+    poolings: tuple,
+) -> jnp.ndarray:
+    """Concat of masked global poolings → [len(poolings)*F]."""
+    assert all(p in POOLINGS for p in poolings)
+    n, f = x.shape
+    nn = jnp.asarray(num_nodes, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, poolings=tuple(poolings)),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((len(poolings) * f,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((len(poolings) * f,), jnp.float32),
+        interpret=True,
+    )(nn, x.astype(jnp.float32))

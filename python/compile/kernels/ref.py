@@ -1,0 +1,114 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+These are the ground truth the pytest/hypothesis suites compare the Pallas
+kernels against, and the numerics the Rust native engine must match (golden
+test vectors in ``artifacts/*.testvecs.bin`` are produced from the L2 model,
+which itself is validated against these).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x[N,K] @ w[K,M] + b[M]."""
+    return x @ w + b[None, :]
+
+
+def _neighbor_mask(offsets: jnp.ndarray, max_edges: int, n_max: int):
+    """mask[i, j] = edge slot j belongs to node i (offsets[i] <= j < offsets[i+1])."""
+    e = jnp.arange(max_edges)
+    lo = offsets[:n_max, None]
+    hi = offsets[1 : n_max + 1, None]
+    return (e[None, :] >= lo) & (e[None, :] < hi)  # [N, E]
+
+
+def segment_aggregate_ref(
+    x: jnp.ndarray,  # [N, F] node features
+    nbr: jnp.ndarray,  # [E] neighbor table (source node per slot)
+    offsets: jnp.ndarray,  # [N+1] neighbor offsets per destination node
+    num_nodes,
+    ops: tuple,
+    edge_weight: jnp.ndarray | None = None,  # [E]
+) -> jnp.ndarray:
+    """Per-node aggregation over the neighbor table; concat of `ops` on axis 1.
+
+    Dense O(N*E) formulation — an oracle, not a kernel. Empty neighborhoods
+    produce 0 for every op (matching the accelerator's partial-agg init).
+    Variance is the population variance (Welford finalize: M2 / count).
+    """
+    n_max = x.shape[0]
+    e_max = nbr.shape[0]
+    mask = _neighbor_mask(offsets, e_max, n_max)  # [N, E]
+    feats = x[nbr]  # [E, F]
+    if edge_weight is not None:
+        feats = feats * edge_weight[:, None]
+    m = mask[:, :, None]  # [N, E, 1]
+    cnt = jnp.sum(mask, axis=1).astype(x.dtype)[:, None]  # [N,1]
+    safe_cnt = jnp.maximum(cnt, 1.0)
+    s = jnp.sum(jnp.where(m, feats[None, :, :], 0.0), axis=1)  # [N, F]
+    mean = s / safe_cnt
+    sq = jnp.sum(jnp.where(m, (feats[None, :, :] - mean[:, None, :]) ** 2, 0.0), axis=1)
+    var = sq / safe_cnt
+    has = cnt > 0
+    outs = []
+    for op in ops:
+        if op == "sum":
+            v = s
+        elif op == "mean":
+            v = mean
+        elif op == "max":
+            v = jnp.max(jnp.where(m, feats[None, :, :], -jnp.inf), axis=1)
+        elif op == "min":
+            v = jnp.min(jnp.where(m, feats[None, :, :], jnp.inf), axis=1)
+        elif op == "var":
+            v = var
+        elif op == "std":
+            v = jnp.sqrt(jnp.maximum(var, 0.0))
+        else:
+            raise ValueError(op)
+        v = jnp.where(has, v, 0.0)
+        outs.append(v)
+    out = jnp.concatenate(outs, axis=1)
+    node_valid = (jnp.arange(n_max) < num_nodes)[:, None]
+    return jnp.where(node_valid, out, 0.0)
+
+
+def gcn_aggregate_ref(
+    xw: jnp.ndarray,
+    nbr: jnp.ndarray,
+    offsets: jnp.ndarray,
+    deg_hat: jnp.ndarray,  # [N] in-degree + 1 (self-loop augmented)
+    num_nodes,
+) -> jnp.ndarray:
+    """GCN-normalized sum: sum_{j in N(i)} xw_j / sqrt(d~_i d~_j) + xw_i / d~_i."""
+    n_max = xw.shape[0]
+    e_max = nbr.shape[0]
+    mask = _neighbor_mask(offsets, e_max, n_max)  # [N,E]
+    inv_sqrt = 1.0 / jnp.sqrt(jnp.maximum(deg_hat, 1.0))
+    msgs = xw[nbr] * inv_sqrt[nbr][:, None]  # [E,F]
+    agg = jnp.sum(jnp.where(mask[:, :, None], msgs[None, :, :], 0.0), axis=1)
+    agg = agg * inv_sqrt[:, None]
+    agg = agg + xw * (1.0 / jnp.maximum(deg_hat, 1.0))[:, None]
+    node_valid = (jnp.arange(n_max) < num_nodes)[:, None]
+    return jnp.where(node_valid, agg, 0.0)
+
+
+def global_pool_ref(x: jnp.ndarray, num_nodes, poolings: tuple) -> jnp.ndarray:
+    """Concat of masked global poolings over valid nodes → [len(poolings)*F]."""
+    n_max = x.shape[0]
+    valid = (jnp.arange(n_max) < num_nodes)[:, None]
+    cnt = jnp.maximum(jnp.asarray(num_nodes, x.dtype), 1.0)
+    outs = []
+    for p in poolings:
+        if p == "add":
+            outs.append(jnp.sum(jnp.where(valid, x, 0.0), axis=0))
+        elif p == "mean":
+            outs.append(jnp.sum(jnp.where(valid, x, 0.0), axis=0) / cnt)
+        elif p == "max":
+            v = jnp.max(jnp.where(valid, x, -jnp.inf), axis=0)
+            outs.append(jnp.where(num_nodes > 0, v, 0.0))
+        else:
+            raise ValueError(p)
+    return jnp.concatenate(outs, axis=0)

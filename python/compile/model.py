@@ -1,0 +1,222 @@
+"""L2: the GNNBuilder model forward graph in JAX (paper §IV).
+
+``GNNModel`` mirrors the paper's parameterized architecture: a GNN backbone
+(GCN / GraphSAGE / GIN / PNA conv layers + activation + optional skip
+connections), concatenated global pooling, and an MLP prediction head.
+The forward function consumes a *raw padded COO graph* and — like the
+accelerator (§V-B "Degree + Neighbor Table Computation") — derives the
+degree table, neighbor table, and neighbor-offset table on the fly, so the
+AOT artifact's interface is exactly the accelerator's:
+
+    x[max_nodes, in_dim] f32, edge_index[max_edges, 2] i32 (src, dst),
+    num_nodes i32, num_edges i32  →  output[output_dim] f32
+
+All dense compute routes through the L1 Pallas kernels; ``forward_ref`` is
+the pure-jnp oracle twin used by the pytest suites.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, pna_delta, PNA_AGGREGATORS
+from .kernels import ref as kref
+from .kernels.aggregate import gcn_aggregate, segment_aggregate
+from .kernels.linear import linear
+from .kernels.pooling import global_pool
+from .quant import quantize
+
+GIN_EPS = 0.1  # fixed (non-learned) epsilon, baked into engine + codegen too
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def _glorot(rng: np.random.Generator, fan_in: int, fan_out: int) -> np.ndarray:
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-lim, lim, size=(fan_in, fan_out)).astype(np.float32)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Deterministic Glorot-uniform init; exported verbatim to the Rust engine."""
+    rng = np.random.default_rng(seed)
+    p: Dict[str, np.ndarray] = {}
+    for l, (din, dout) in enumerate(cfg.layer_dims()):
+        key = f"gnn.{l}"
+        if cfg.gnn_conv == "gcn":
+            p[f"{key}.w"] = _glorot(rng, din, dout)
+            p[f"{key}.b"] = np.zeros(dout, np.float32)
+        elif cfg.gnn_conv == "sage":
+            p[f"{key}.w_root"] = _glorot(rng, din, dout)
+            p[f"{key}.w_nbr"] = _glorot(rng, din, dout)
+            p[f"{key}.b"] = np.zeros(dout, np.float32)
+        elif cfg.gnn_conv == "gin":
+            p[f"{key}.w1"] = _glorot(rng, din, dout)
+            p[f"{key}.b1"] = np.zeros(dout, np.float32)
+            p[f"{key}.w2"] = _glorot(rng, dout, dout)
+            p[f"{key}.b2"] = np.zeros(dout, np.float32)
+        elif cfg.gnn_conv == "pna":
+            towers = din * (len(PNA_AGGREGATORS) * 3 + 1)
+            p[f"{key}.w"] = _glorot(rng, towers, dout)
+            p[f"{key}.b"] = np.zeros(dout, np.float32)
+        else:
+            raise ValueError(cfg.gnn_conv)
+    for l, (din, dout) in enumerate(cfg.mlp_dims()):
+        p[f"mlp.{l}.w"] = _glorot(rng, din, dout)
+        p[f"mlp.{l}.b"] = np.zeros(dout, np.float32)
+    return p
+
+
+# --------------------------------------------------------------------------
+# graph preprocessing (in-model, mirrors the accelerator §V-B)
+# --------------------------------------------------------------------------
+
+def build_tables(edge_index: jnp.ndarray, num_edges: jnp.ndarray, max_nodes: int):
+    """COO → (neighbor table, offsets, in-degree), all statically shaped.
+
+    ``edge_index[e] = (src, dst)``; invalid slots (e >= num_edges) are pushed
+    to the end of the sort order so every valid destination's slice is
+    contiguous — the same invariant the accelerator's two-loop table builder
+    establishes.
+    """
+    e_max = edge_index.shape[0]
+    eids = jnp.arange(e_max)
+    valid = eids < num_edges
+    src = jnp.where(valid, edge_index[:, 0], 0)
+    dst_key = jnp.where(valid, edge_index[:, 1], max_nodes)  # pad sorts last
+    order = jnp.argsort(dst_key, stable=True)
+    nbr = src[order].astype(jnp.int32)
+    deg = jnp.zeros((max_nodes,), jnp.int32).at[
+        jnp.clip(edge_index[:, 1], 0, max_nodes - 1)
+    ].add(valid.astype(jnp.int32))
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(deg).astype(jnp.int32)]
+    )
+    return nbr, offsets, deg.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+_ACT = {
+    "relu": jax.nn.relu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+}
+
+
+def _maybe_q(x, cfg: ModelConfig):
+    return quantize(x, cfg.fpx) if cfg.float_or_fixed == "fixed" else x
+
+
+def _pna_scale(aggs: jnp.ndarray, deg: jnp.ndarray, delta: float) -> jnp.ndarray:
+    """[N, 4F] aggregators → [N, 12F] with identity/amplification/attenuation."""
+    ld = jnp.log(deg + 1.0)
+    amp = (ld / delta)[:, None]
+    atten = (delta / jnp.maximum(ld, 1e-6))[:, None]
+    atten = jnp.where(deg[:, None] > 0, atten, 0.0)
+    return jnp.concatenate([aggs, aggs * amp, aggs * atten], axis=1)
+
+
+def _conv(cfg, params, l, h, nbr, offsets, deg, num_nodes, delta, *, use_pallas):
+    """One graph-convolution layer (explicit message passing, Fig. 3)."""
+    key = f"gnn.{l}"
+    lin = linear if use_pallas else kref.linear_ref
+    seg = segment_aggregate if use_pallas else (
+        lambda x, nb, of, nn, ops: kref.segment_aggregate_ref(x, nb, of, nn, ops)
+    )
+    if cfg.gnn_conv == "gcn":
+        xw = lin(h, params[f"{key}.w"], jnp.zeros(params[f"{key}.w"].shape[1]))
+        deg_hat = deg + 1.0
+        if use_pallas:
+            agg = gcn_aggregate(xw, nbr, offsets, deg_hat, num_nodes)
+        else:
+            agg = kref.gcn_aggregate_ref(xw, nbr, offsets, deg_hat, num_nodes)
+        return agg + params[f"{key}.b"][None, :]
+    if cfg.gnn_conv == "sage":
+        mean = seg(h, nbr, offsets, num_nodes, ("mean",))
+        zero = jnp.zeros(params[f"{key}.w_nbr"].shape[1])
+        return (
+            lin(h, params[f"{key}.w_root"], params[f"{key}.b"])
+            + lin(mean, params[f"{key}.w_nbr"], zero)
+        )
+    if cfg.gnn_conv == "gin":
+        s = seg(h, nbr, offsets, num_nodes, ("sum",))
+        z = (1.0 + GIN_EPS) * h + s
+        z = lin(z, params[f"{key}.w1"], params[f"{key}.b1"])
+        z = jax.nn.relu(z)
+        return lin(z, params[f"{key}.w2"], params[f"{key}.b2"])
+    if cfg.gnn_conv == "pna":
+        aggs = seg(h, nbr, offsets, num_nodes, PNA_AGGREGATORS)
+        scaled = _pna_scale(aggs, deg, delta)
+        feat = jnp.concatenate([h, scaled], axis=1)
+        return lin(feat, params[f"{key}.w"], params[f"{key}.b"])
+    raise ValueError(cfg.gnn_conv)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # [max_nodes, in_dim]
+    edge_index: jnp.ndarray,  # [max_edges, 2] i32
+    num_nodes: jnp.ndarray,  # scalar i32
+    num_edges: jnp.ndarray,  # scalar i32
+    *,
+    mean_degree: float = 2.1,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Full GNNModel forward: backbone → global pooling → MLP head."""
+    cfg.validate()
+    act = _ACT[cfg.gnn_activation]
+    mlp_act = _ACT[cfg.mlp_activation]
+    delta = pna_delta(mean_degree)
+    node_valid = (jnp.arange(cfg.max_nodes) < num_nodes)[:, None]
+    nbr, offsets, deg = build_tables(edge_index, num_edges, cfg.max_nodes)
+
+    h = jnp.where(node_valid, x, 0.0)
+    h = _maybe_q(h, cfg)
+    for l in range(cfg.gnn_num_layers):
+        h_new = _conv(
+            cfg, params, l, h, nbr, offsets, deg, num_nodes, delta,
+            use_pallas=use_pallas,
+        )
+        h_new = act(h_new)
+        if cfg.gnn_skip_connections and h_new.shape == h.shape:
+            h_new = h_new + h
+        h = jnp.where(node_valid, h_new, 0.0)
+        h = _maybe_q(h, cfg)
+
+    if use_pallas:
+        pooled = global_pool(h, num_nodes, tuple(cfg.global_pooling))
+    else:
+        pooled = kref.global_pool_ref(h, num_nodes, tuple(cfg.global_pooling))
+    pooled = _maybe_q(pooled, cfg)
+
+    z = pooled[None, :]
+    n_mlp = len(cfg.mlp_dims())
+    for l in range(n_mlp):
+        w, b = params[f"mlp.{l}.w"], params[f"mlp.{l}.b"]
+        if use_pallas:
+            z = linear(z, w, b)
+        else:
+            z = kref.linear_ref(z, w, b)
+        if l < n_mlp - 1:
+            z = mlp_act(z)
+        z = _maybe_q(z, cfg)
+    return z[0]
+
+
+def forward_ref(cfg, params, x, edge_index, num_nodes, num_edges, *, mean_degree=2.1):
+    """Pure-jnp oracle twin of forward()."""
+    return forward(
+        cfg, params, x, edge_index, num_nodes, num_edges,
+        mean_degree=mean_degree, use_pallas=False,
+    )

@@ -1,0 +1,24 @@
+"""Fixed-point fake quantization (ap_fixed<W,I> analog, paper §VI-B).
+
+The HLS testbench casts floats to ``ap_fixed<W, I>`` (round-to-nearest,
+saturating). The L2 model reproduces that numerically with fake
+quantization so the artifact's outputs match what the Rust fixed-point
+engine (``rust/src/fixed``) computes bit-approximately: values are snapped
+to the Q-format grid q = round(x * 2^frac) / 2^frac and clamped to the
+signed range [-2^(I-1), 2^(I-1) - 2^-frac].
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .configs import FixedPointFormat
+
+
+def quantize(x: jnp.ndarray, fpx: FixedPointFormat) -> jnp.ndarray:
+    """Snap to the ap_fixed<W,I> grid with saturation (round half away from 0)."""
+    scale = float(2 ** fpx.frac_bits)
+    lo = -float(2 ** (fpx.int_bits - 1))
+    hi = float(2 ** (fpx.int_bits - 1)) - 1.0 / scale
+    q = jnp.round(x * scale) / scale
+    return jnp.clip(q, lo, hi)

@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/graph topologies; every property asserts
+``assert_allclose`` against ref.py, per the repro brief.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import AGGREGATIONS, POOLINGS
+from compile.kernels import ref
+from compile.kernels.aggregate import gcn_aggregate, segment_aggregate
+from compile.kernels.linear import linear, vmem_bytes
+from compile.kernels.pooling import global_pool
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def random_neighbor_table(rng, n_max, e_max, num_nodes, max_deg=5):
+    """Random valid (nbr, offsets) with padding invariants the model emits."""
+    nbr_list, offs = [], [0]
+    for i in range(num_nodes):
+        d = int(rng.integers(0, max_deg + 1))
+        d = min(d, e_max - len(nbr_list))
+        nbr_list += list(rng.integers(0, num_nodes, size=d))
+        offs.append(len(nbr_list))
+    ne = len(nbr_list)
+    nbr = np.zeros(e_max, np.int32)
+    nbr[:ne] = nbr_list
+    offsets = np.full(n_max + 1, ne, np.int32)
+    offsets[: num_nodes + 1] = offs
+    return nbr, offsets, ne
+
+
+# ---------------------------------------------------------------- linear
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 70),
+    k=st.integers(1, 40),
+    m=st.integers(1, 40),
+    br=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(n, k, m, br, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, k)).astype(np.float32)
+    w = rng.normal(size=(k, m)).astype(np.float32)
+    b = rng.normal(size=(m,)).astype(np.float32)
+    got = np.asarray(linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                            block_rows=br, block_cols=br, block_k=br))
+    want = np.asarray(ref.linear_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=RTOL * 8)
+
+
+def test_linear_zero_bias_identity_weight():
+    n = 17
+    x = np.random.default_rng(0).normal(size=(n, n)).astype(np.float32)
+    got = np.asarray(linear(jnp.asarray(x), jnp.eye(n, dtype=np.float32), jnp.zeros(n)))
+    np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+
+def test_linear_vmem_estimate_positive_monotone():
+    assert vmem_bytes(128, 128, 128) > vmem_bytes(64, 64, 64) > 0
+
+
+# ---------------------------------------------------------- aggregation
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_max=st.integers(4, 48),
+    f=st.integers(1, 24),
+    frac=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segment_aggregate_all_ops(n_max, f, frac, seed):
+    rng = np.random.default_rng(seed)
+    num_nodes = max(1, int(n_max * frac))
+    e_max = 2 * n_max
+    nbr, offsets, _ = random_neighbor_table(rng, n_max, e_max, num_nodes)
+    x = rng.normal(size=(n_max, f)).astype(np.float32)
+    x[num_nodes:] = 0.0
+    got = np.asarray(segment_aggregate(
+        jnp.asarray(x), jnp.asarray(nbr), jnp.asarray(offsets),
+        jnp.int32(num_nodes), AGGREGATIONS))
+    want = np.asarray(ref.segment_aggregate_ref(
+        jnp.asarray(x), jnp.asarray(nbr), jnp.asarray(offsets),
+        num_nodes, AGGREGATIONS))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_segment_aggregate_empty_graph_is_zero():
+    n_max, f = 8, 4
+    nbr = np.zeros(16, np.int32)
+    offsets = np.zeros(n_max + 1, np.int32)
+    x = np.ones((n_max, f), np.float32)
+    out = np.asarray(segment_aggregate(
+        jnp.asarray(x), jnp.asarray(nbr), jnp.asarray(offsets),
+        jnp.int32(0), ("sum", "mean", "max")))
+    assert np.all(out == 0.0)
+
+
+def test_segment_aggregate_single_neighbor_stats():
+    """One neighbor: mean == value, var/std == 0, min == max == value."""
+    n_max, f = 4, 3
+    x = np.arange(n_max * f, dtype=np.float32).reshape(n_max, f)
+    nbr = np.zeros(8, np.int32)
+    nbr[0] = 2  # node 0's single neighbor is node 2
+    offsets = np.array([0, 1, 1, 1, 1], np.int32)
+    out = np.asarray(segment_aggregate(
+        jnp.asarray(x), jnp.asarray(nbr), jnp.asarray(offsets),
+        jnp.int32(4), ("mean", "var", "std", "min", "max")))
+    np.testing.assert_allclose(out[0, :f], x[2], rtol=1e-6)
+    np.testing.assert_allclose(out[0, f:3 * f], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[0, 3 * f:4 * f], x[2], rtol=1e-6)
+    np.testing.assert_allclose(out[0, 4 * f:], x[2], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_max=st.integers(4, 40),
+    f=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gcn_aggregate_matches_ref(n_max, f, seed):
+    rng = np.random.default_rng(seed)
+    num_nodes = max(1, n_max - int(rng.integers(0, 3)))
+    e_max = 2 * n_max
+    nbr, offsets, _ = random_neighbor_table(rng, n_max, e_max, num_nodes)
+    deg_hat = np.zeros(n_max, np.float32)
+    deg_hat[:num_nodes] = np.diff(offsets[: num_nodes + 1]) + 1.0
+    xw = rng.normal(size=(n_max, f)).astype(np.float32)
+    xw[num_nodes:] = 0.0
+    got = np.asarray(gcn_aggregate(
+        jnp.asarray(xw), jnp.asarray(nbr), jnp.asarray(offsets),
+        jnp.asarray(deg_hat), jnp.int32(num_nodes)))
+    want = np.asarray(ref.gcn_aggregate_ref(
+        jnp.asarray(xw), jnp.asarray(nbr), jnp.asarray(offsets),
+        jnp.asarray(deg_hat), num_nodes))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_welford_variance_matches_two_pass_extreme():
+    """Welford must stay accurate when the naive sum-of-squares would not."""
+    n_max, f = 2, 1
+    vals = np.array([1e4, 1e4 + 1, 1e4 + 2], np.float32)
+    x = np.zeros((n_max + 3, f), np.float32)
+    x[2:5, 0] = vals
+    nbr = np.array([2, 3, 4, 0, 0, 0], np.int32)
+    offsets = np.array([0, 3, 3, 3, 3, 3], np.int32)
+    out = np.asarray(segment_aggregate(
+        jnp.asarray(x), jnp.asarray(nbr), jnp.asarray(offsets),
+        jnp.int32(5), ("var",)))
+    np.testing.assert_allclose(out[0, 0], np.var(vals), rtol=1e-3)
+
+
+# -------------------------------------------------------------- pooling
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_max=st.integers(1, 64),
+    f=st.integers(1, 32),
+    frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_global_pool_matches_ref(n_max, f, frac, seed):
+    rng = np.random.default_rng(seed)
+    num_nodes = int(n_max * frac)
+    x = rng.normal(size=(n_max, f)).astype(np.float32)
+    got = np.asarray(global_pool(jnp.asarray(x), jnp.int32(num_nodes), POOLINGS))
+    want = np.asarray(ref.global_pool_ref(jnp.asarray(x), num_nodes, POOLINGS))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_global_pool_mean_of_constant():
+    x = np.full((10, 3), 5.0, np.float32)
+    out = np.asarray(global_pool(jnp.asarray(x), jnp.int32(7), ("mean",)))
+    np.testing.assert_allclose(out, 5.0, rtol=1e-6)

@@ -1,0 +1,142 @@
+"""L2 model correctness: full forward (Pallas path) vs pure-jnp oracle,
+graph-table construction, quantization, and config plumbing."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import ModelConfig, DATASETS, benchmark_config
+from compile.graphgen import gen_graph, pad_graph
+from compile.model import build_tables, forward, forward_ref, init_params
+from compile.quant import quantize
+from compile.configs import FixedPointFormat
+
+MAXN, MAXE = 48, 64
+
+
+def small_cfg(conv, **kw):
+    base = dict(
+        name=f"t_{conv}",
+        graph_input_dim=7,
+        gnn_conv=conv,
+        gnn_hidden_dim=12,
+        gnn_out_dim=8,
+        gnn_num_layers=2,
+        mlp_hidden_dim=8,
+        mlp_num_layers=1,
+        output_dim=3,
+        max_nodes=MAXN,
+        max_edges=MAXE,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def random_padded_graph(seed, in_dim=7):
+    rng = np.random.default_rng(seed)
+    stats = DATASETS["esol"]
+    x, e = gen_graph(rng, stats, MAXN, MAXE)
+    x = np.pad(x, ((0, 0), (0, max(0, in_dim - x.shape[1]))))[:, :in_dim]
+    xp, ep, n, ne = pad_graph(np.ascontiguousarray(x, np.float32), e, MAXN, MAXE)
+    return (
+        jnp.asarray(xp),
+        jnp.asarray(ep),
+        jnp.int32(n),
+        jnp.int32(ne),
+    )
+
+
+@pytest.mark.parametrize("conv", ["gcn", "gin", "sage", "pna"])
+@pytest.mark.parametrize("skip", [True, False])
+def test_forward_pallas_matches_ref(conv, skip):
+    cfg = small_cfg(conv, gnn_skip_connections=skip)
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, 1).items()}
+    args = random_padded_graph(3)
+    got = np.asarray(forward(cfg, params, *args))
+    want = np.asarray(forward_ref(cfg, params, *args))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+    assert got.shape == (cfg.output_dim,)
+
+
+@pytest.mark.parametrize("act", ["relu", "sigmoid", "tanh", "gelu"])
+def test_all_activations_run(act):
+    cfg = small_cfg("gcn", gnn_activation=act)
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, 2).items()}
+    args = random_padded_graph(5)
+    got = np.asarray(forward(cfg, params, *args))
+    want = np.asarray(forward_ref(cfg, params, *args))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+    assert np.all(np.isfinite(got))
+
+
+def test_fixed_mode_outputs_on_quantization_grid():
+    fpx = FixedPointFormat(16, 10)  # frac = 6 bits
+    cfg = small_cfg("gcn", float_or_fixed="fixed", fpx=fpx)
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, 4).items()}
+    args = random_padded_graph(7)
+    out = np.asarray(forward(cfg, params, *args))
+    scaled = out * (2 ** fpx.frac_bits)
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-3)
+
+
+def test_fixed_mode_close_to_float():
+    cfg_f = small_cfg("sage")
+    cfg_q = small_cfg("sage", float_or_fixed="fixed", fpx=FixedPointFormat(32, 16))
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg_f, 5).items()}
+    args = random_padded_graph(11)
+    f = np.asarray(forward(cfg_f, params, *args))
+    q = np.asarray(forward(cfg_q, params, *args))
+    assert np.mean(np.abs(f - q)) < 1e-2
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), ne_frac=st.floats(0.0, 1.0))
+def test_build_tables_invariants(seed, ne_frac):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, MAXN))
+    ne = int(ne_frac * (MAXE - 1))
+    e = np.zeros((MAXE, 2), np.int32)
+    e[:ne] = rng.integers(0, n, size=(ne, 2))
+    nbr, offsets, deg = (np.asarray(v) for v in build_tables(jnp.asarray(e), jnp.int32(ne), MAXN))
+    assert offsets[0] == 0
+    assert np.all(np.diff(offsets) >= 0)
+    assert offsets[-1] == ne
+    # per-node slice contains exactly the sources of its in-edges
+    for i in range(n):
+        want = sorted(e[k, 0] for k in range(ne) if e[k, 1] == i)
+        got = sorted(nbr[offsets[i]:offsets[i + 1]].tolist())
+        assert got == want
+        assert deg[i] == len(want)
+
+
+def test_empty_graph_single_node():
+    cfg = small_cfg("gin")
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, 6).items()}
+    x = jnp.zeros((MAXN, 7), jnp.float32).at[0, 0].set(1.0)
+    e = jnp.zeros((MAXE, 2), jnp.int32)
+    out = np.asarray(forward(cfg, params, x, e, jnp.int32(1), jnp.int32(0)))
+    assert np.all(np.isfinite(out))
+
+
+def test_quantize_matches_rust_semantics():
+    fpx = FixedPointFormat(16, 10)
+    xs = jnp.asarray([0.02, 0.024, 511.999, -600.0, -0.0078])
+    q = np.asarray(quantize(xs, fpx))
+    # lsb = 1/64; saturation at [-512, 512 - 1/64]
+    assert abs(q[0] - 1 / 64) < 1e-9
+    assert abs(q[1] - 2 / 64) < 1e-9 or abs(q[1] - 1 / 64) < 1e-9
+    assert q[2] <= 512 - 1 / 64 + 1e-9
+    assert q[3] == -512.0
+
+
+def test_benchmark_configs_validate_and_dims_flow():
+    for conv in ["gcn", "gin", "sage", "pna"]:
+        for ds in DATASETS:
+            for parallel in (False, True):
+                cfg = benchmark_config(conv, ds, parallel)
+                cfg.validate()
+                dims = cfg.layer_dims()
+                assert dims[0][0] == DATASETS[ds].node_dim
+                assert dims[-1][1] == cfg.gnn_out_dim
+                assert cfg.mlp_dims()[-1][1] == DATASETS[ds].output_dim

@@ -1,0 +1,50 @@
+//! Coordinator benchmarks: router+batcher round-trip overhead with a
+//! zero-work backend (pure L3 cost), and throughput under a batched load.
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use gnnbuilder::bench::Bench;
+use gnnbuilder::coordinator::{Backend, BackendSpec, BatchPolicy, Coordinator};
+use gnnbuilder::graph::Graph;
+
+struct Null;
+impl Backend for Null {
+    fn name(&self) -> &str {
+        "null"
+    }
+    fn infer(&self, _: &Graph, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![x.iter().sum()])
+    }
+}
+
+fn spec() -> BackendSpec {
+    BackendSpec {
+        model: "null".into(),
+        factory: Box::new(|| Ok(Box::new(Null) as Box<dyn Backend>)),
+    }
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let g = || Graph::from_coo(8, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+
+    let c = Coordinator::start(vec![spec()], BatchPolicy {
+        max_batch: 1,
+        max_wait: Duration::from_micros(100),
+    });
+    b.run("roundtrip/unbatched", || {
+        c.infer("null", g(), vec![1.0; 8]).unwrap()
+    });
+    c.shutdown();
+
+    let c = Coordinator::start(vec![spec()], BatchPolicy::default());
+    b.run("throughput/64_inflight", || {
+        let rxs: Vec<_> = (0..64).map(|_| c.submit("null", g(), vec![1.0; 8])).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+    });
+    let batches = c.metrics.batches.load(Ordering::Relaxed);
+    println!("(batches formed: {batches})");
+    c.shutdown();
+}

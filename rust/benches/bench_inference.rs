@@ -1,0 +1,49 @@
+//! Inference-path benchmarks: the native engine (CPP-CPU baseline) per
+//! conv type and the PJRT artifact execution (PyG-CPU analog) — the
+//! measured halves of Table IV / Fig. 6.
+use gnnbuilder::bench::Bench;
+use gnnbuilder::datasets;
+use gnnbuilder::engine::Engine;
+use gnnbuilder::runtime::{Manifest, Runtime};
+use gnnbuilder::util::binio::read_weights;
+
+fn main() {
+    let b = Bench::from_env();
+    let Ok(manifest) = Manifest::load(gnnbuilder::artifacts_dir()) else {
+        eprintln!("run `make artifacts` first");
+        return;
+    };
+    let graphs = datasets::gen_dataset(&datasets::HIV, 32, 11, 600, 600);
+    for conv in ["gcn", "gin", "sage", "pna"] {
+        let meta = manifest.find(&format!("bench_{conv}_hiv_base")).unwrap();
+        let weights = read_weights(&meta.weights_path).unwrap();
+        let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+        let mut i = 0;
+        b.run(&format!("engine_f32/{conv}/hiv"), || {
+            i = (i + 1) % graphs.len();
+            engine.forward(&graphs[i].graph, &graphs[i].x).unwrap()
+        });
+    }
+    // fixed-point path (true quantization simulation)
+    let meta = manifest.find("bench_gcn_hiv_base").unwrap();
+    let weights = read_weights(&meta.weights_path).unwrap();
+    let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+    let mut i = 0;
+    b.run("engine_fixed/gcn/hiv", || {
+        i = (i + 1) % graphs.len();
+        engine.forward_fixed(&graphs[i].graph, &graphs[i].x).unwrap()
+    });
+    // PJRT artifact execution
+    let mut rt = Runtime::cpu().unwrap();
+    let exe = rt.load(meta).unwrap();
+    let cfg = &meta.config;
+    let inputs: Vec<_> = graphs
+        .iter()
+        .map(|g| g.graph.to_input(&g.x, g.node_dim, cfg.max_nodes, cfg.max_edges))
+        .collect();
+    let mut i = 0;
+    b.run("pjrt_execute/gcn/hiv", || {
+        i = (i + 1) % inputs.len();
+        exe.run(&inputs[i]).unwrap()
+    });
+}

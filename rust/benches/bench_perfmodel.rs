@@ -1,0 +1,29 @@
+//! Direct-fit performance-model benchmarks: database build, forest fit,
+//! and the millisecond-scale prediction call the DSE loop hammers
+//! (paper: 1.7 ms/call avg; Fig. 5).
+use gnnbuilder::bench::Bench;
+use gnnbuilder::datasets;
+use gnnbuilder::hls::GraphStats;
+use gnnbuilder::model::space::DesignSpace;
+use gnnbuilder::perfmodel::{build_database, featurize, ForestParams, PerfModel};
+
+fn main() {
+    let b = Bench::from_env();
+    let space = DesignSpace::default();
+    let stats = GraphStats::from_dataset(&datasets::QM9);
+    let db = build_database(&space, 400, 2023, &stats, gnnbuilder::util::pool::default_threads());
+    b.run("fit/forest10_x2_400designs", || {
+        PerfModel::fit(&db, &ForestParams { seed: 1, ..Default::default() })
+    });
+    let pm = PerfModel::fit(&db, &ForestParams { seed: 1, ..Default::default() });
+    let probe = space.sample(256, 9);
+    let mut i = 0;
+    b.run("predict/latency_bram_pair", || {
+        i = (i + 1) % probe.len();
+        pm.predict(&probe[i])
+    });
+    b.run("featurize/config", || {
+        i = (i + 1) % probe.len();
+        featurize(&probe[i])
+    });
+}

@@ -1,0 +1,29 @@
+//! Accelerator-simulator benchmarks: the per-config "synthesis" cost that
+//! Fig. 5 amortizes over 400 designs, plus the resource model alone.
+use gnnbuilder::bench::Bench;
+use gnnbuilder::datasets;
+use gnnbuilder::hls::{estimate_latency, estimate_resources, run_synthesis, GraphStats};
+use gnnbuilder::model::space::DesignSpace;
+use gnnbuilder::model::{benchmark_config, ConvType};
+
+fn main() {
+    let b = Bench::from_env();
+    let stats = GraphStats::from_dataset(&datasets::QM9);
+    for conv in ConvType::ALL {
+        let cfg = benchmark_config(conv, &datasets::QM9, true);
+        b.run(&format!("latency_model/{}", conv.as_str()), || {
+            estimate_latency(&cfg, &stats)
+        });
+    }
+    let cfg = benchmark_config(ConvType::Pna, &datasets::QM9, true);
+    b.run("resource_model/pna", || estimate_resources(&cfg));
+    b.run("full_synthesis/pna", || run_synthesis(&cfg, &stats, 1));
+    // the Fig. 5 unit: one design drawn from the Listing-2 space
+    let space = DesignSpace::default();
+    let configs = space.sample(64, 3);
+    let mut i = 0;
+    b.run("full_synthesis/design_space_sample", || {
+        i = (i + 1) % configs.len();
+        run_synthesis(&configs[i], &stats, 1)
+    });
+}

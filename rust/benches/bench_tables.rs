@@ -1,0 +1,55 @@
+//! End-to-end "table benches": one bench per paper artifact, timing the
+//! harness units that regenerate them (see `gnnbuilder experiments` for
+//! the full tables; EXPERIMENTS.md records the numbers).
+//!
+//! - Table IV / Fig. 6 cell: one (conv, dataset) latency five-way measure
+//! - Fig. 4 unit: 5-fold CV of the latency forest on a design DB
+//! - Fig. 5 unit: one direct-fit call vs one simulated synthesis
+//! - Fig. 7 unit: one resource estimate pair (base vs parallel)
+use gnnbuilder::baselines;
+use gnnbuilder::bench::Bench;
+use gnnbuilder::datasets;
+use gnnbuilder::hls::{estimate_resources, run_synthesis, GraphStats};
+use gnnbuilder::model::space::DesignSpace;
+use gnnbuilder::model::{benchmark_config, ConvType};
+use gnnbuilder::perfmodel::{build_database, forest_cv_mape, ForestParams, PerfModel, N_FEATURES};
+
+fn main() {
+    let b = Bench::from_env();
+    let stats = GraphStats::from_dataset(&datasets::HIV);
+
+    // Table IV / Fig. 6: modeled implementations of one cell (measured
+    // CPU baselines are covered by bench_inference)
+    let base = benchmark_config(ConvType::Gcn, &datasets::HIV, false);
+    let par = benchmark_config(ConvType::Gcn, &datasets::HIV, true);
+    b.run("table4/gpu_model+fpga_pair/gcn_hiv", || {
+        let gpu = baselines::pyg_gpu_model(&base, &stats);
+        let f0 = baselines::fpga(&base, &stats);
+        let f1 = baselines::fpga(&par, &stats);
+        (gpu, f0, f1)
+    });
+
+    // Fig. 4: full 5-fold CV on a 160-design DB (scaled-down unit)
+    let db = build_database(&DesignSpace::default(), 160, 5, &stats, 8);
+    b.run("fig4/cv_latency_forest_160", || {
+        forest_cv_mape(&db.features, N_FEATURES, &db.latency_ms, 5, &ForestParams::default(), true)
+    });
+
+    // Fig. 5: the two sides of the timeline
+    let pm = PerfModel::fit(&db, &ForestParams::default());
+    let cfgs = DesignSpace::default().sample(64, 9);
+    let mut i = 0;
+    b.run("fig5/direct_fit_call", || {
+        i = (i + 1) % cfgs.len();
+        pm.predict(&cfgs[i])
+    });
+    b.run("fig5/simulated_synthesis", || {
+        i = (i + 1) % cfgs.len();
+        run_synthesis(&cfgs[i], &stats, 1)
+    });
+
+    // Fig. 7: resource estimates base vs parallel
+    b.run("fig7/resources_base_vs_parallel", || {
+        (estimate_resources(&base), estimate_resources(&par))
+    });
+}

@@ -1,0 +1,160 @@
+//! Evaluation baselines (paper §VIII-B): the five implementations whose
+//! batch-1 latencies Table IV / Fig. 6 compare.
+//!
+//! | paper          | here                                                   |
+//! |----------------|--------------------------------------------------------|
+//! | PyG-CPU        | measured: XLA/PJRT dense model, batch 1 (`pyg_cpu`)    |
+//! | PyG-GPU        | modeled: A6000 launch-overhead model (`pyg_gpu_model`) |
+//! | CPP-CPU        | measured: native Rust engine (`cpp_cpu`)               |
+//! | FPGA-Base      | simulated: cycle model, p = 1, <32,16> (`fpga`)        |
+//! | FPGA-Parallel  | simulated: cycle model, paper's p, <16,10> (`fpga`)    |
+//!
+//! The GPU substitution (DESIGN.md): at batch 1, PyG GPU inference is
+//! kernel-launch-overhead bound — the paper's own Fig. 6 shows GPU ≈ CPU.
+//! We model latency = launches × overhead + compute/roofline + transfer.
+
+use anyhow::Result;
+
+use crate::datasets::MolGraph;
+use crate::engine::Engine;
+use crate::hls::{estimate_latency, GraphStats};
+use crate::model::{ConvType, ModelConfig};
+use crate::runtime::Executable;
+use crate::util::stats::Summary;
+
+/// Measured or modeled batch-1 latency summary for one implementation.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub implementation: String,
+    pub latency: Summary,
+}
+
+/// PyG-CPU analog: execute the XLA artifact per graph, batch 1.
+pub fn pyg_cpu(exe: &Executable, graphs: &[MolGraph], repeats: usize) -> Result<BaselineResult> {
+    let cfg = &exe.meta.config;
+    let mut times = Vec::with_capacity(graphs.len() * repeats);
+    // warmup
+    if let Some(g) = graphs.first() {
+        let input = g.graph.to_input(&g.x, g.node_dim, cfg.max_nodes, cfg.max_edges);
+        exe.run(&input)?;
+    }
+    for _ in 0..repeats {
+        for g in graphs {
+            let input = g.graph.to_input(&g.x, g.node_dim, cfg.max_nodes, cfg.max_edges);
+            let t0 = std::time::Instant::now();
+            exe.run(&input)?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    Ok(BaselineResult {
+        implementation: "PyG-CPU".into(),
+        latency: Summary::of(&times),
+    })
+}
+
+/// CPP-CPU: the native message-passing engine, measured.
+pub fn cpp_cpu(engine: &Engine, graphs: &[MolGraph], repeats: usize) -> Result<BaselineResult> {
+    let mut times = Vec::with_capacity(graphs.len() * repeats);
+    for _ in 0..repeats {
+        for g in graphs {
+            let t0 = std::time::Instant::now();
+            let out = engine.forward(&g.graph, &g.x)?;
+            std::hint::black_box(&out);
+            times.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    Ok(BaselineResult {
+        implementation: "CPP-CPU".into(),
+        latency: Summary::of(&times),
+    })
+}
+
+/// Analytical A6000 batch-1 model (see module docs): per-op launch
+/// overhead dominates; compute adds a roofline term.
+pub fn pyg_gpu_model(cfg: &ModelConfig, stats: &GraphStats) -> BaselineResult {
+    // CUDA kernel launches per PyG conv layer (gather, scatter, matmul(s),
+    // norm, activation...) — anisotropic convs launch more.
+    let launches_per_layer: f64 = match cfg.gnn_conv {
+        ConvType::Gcn => 9.0,
+        ConvType::Sage => 11.0,
+        ConvType::Gin => 12.0,
+        ConvType::Pna => 28.0, // 4 aggregators x scalers + concat + towers
+    };
+    let launches = 6.0 // featurize + batch assembly
+        + launches_per_layer * cfg.gnn_num_layers as f64
+        + 3.0 * cfg.global_pooling.len() as f64
+        + 4.0 * (cfg.mlp_num_layers + 1) as f64;
+    // PyG's python dispatch + CUDA launch per op: tens of µs at batch 1
+    // (calibrated so GPU lands slightly *slower* than the CPU framework
+    // baseline, the paper's own Fig. 6 / Table IV shape: 7.66x vs 6.46x)
+    const LAUNCH_OVERHEAD_S: f64 = 55.0e-6;
+    const PCIE_TRANSFER_S: f64 = 60.0e-6; // H2D input + D2H output, tiny graphs
+    const A6000_FLOPS: f64 = 38.7e12 * 0.02; // batch-1 tiny-matmul efficiency ~2%
+
+    let mut flops = 0.0;
+    for (din, dout) in cfg.layer_dims() {
+        let factor = match cfg.gnn_conv {
+            ConvType::Gcn => 1.0,
+            ConvType::Sage => 2.0,
+            ConvType::Gin => 2.0,
+            ConvType::Pna => 13.0,
+        };
+        flops += 2.0 * stats.num_nodes * factor * din as f64 * dout as f64;
+        flops += stats.num_edges * din as f64; // message aggregation
+    }
+    for (din, dout) in cfg.mlp_dims() {
+        flops += 2.0 * (din * dout) as f64;
+    }
+    let seconds = launches * LAUNCH_OVERHEAD_S + PCIE_TRANSFER_S + flops / A6000_FLOPS;
+    BaselineResult {
+        implementation: "PyG-GPU".into(),
+        latency: Summary::of(&[seconds]),
+    }
+}
+
+/// FPGA latency from the accelerator simulator (base or parallel config).
+pub fn fpga(cfg: &ModelConfig, stats: &GraphStats) -> BaselineResult {
+    let rep = estimate_latency(cfg, stats);
+    BaselineResult {
+        implementation: if cfg.gnn_p_hidden > 1 {
+            "FPGA-Parallel".into()
+        } else {
+            "FPGA-Base".into()
+        },
+        latency: Summary::of(&[rep.total_seconds]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::model::benchmark_config;
+
+    #[test]
+    fn gpu_model_is_launch_bound_for_small_graphs() {
+        let cfg = benchmark_config(ConvType::Gcn, &datasets::ESOL, false);
+        let stats = GraphStats::from_dataset(&datasets::ESOL);
+        let r = pyg_gpu_model(&cfg, &stats);
+        // small molecular graphs: latency within the ms-scale band of Fig. 6
+        assert!(r.latency.mean > 1e-3 && r.latency.mean < 3e-2, "{}", r.latency.mean);
+    }
+
+    #[test]
+    fn gpu_model_pna_costs_more_than_gcn() {
+        let stats = GraphStats::from_dataset(&datasets::HIV);
+        let gcn = pyg_gpu_model(&benchmark_config(ConvType::Gcn, &datasets::HIV, false), &stats);
+        let pna = pyg_gpu_model(&benchmark_config(ConvType::Pna, &datasets::HIV, false), &stats);
+        assert!(pna.latency.mean > gcn.latency.mean);
+    }
+
+    #[test]
+    fn fpga_labels_follow_parallelism() {
+        let stats = GraphStats::from_dataset(&datasets::QM9);
+        let base = fpga(&benchmark_config(ConvType::Gin, &datasets::QM9, false), &stats);
+        let par = fpga(&benchmark_config(ConvType::Gin, &datasets::QM9, true), &stats);
+        assert_eq!(base.implementation, "FPGA-Base");
+        assert_eq!(par.implementation, "FPGA-Parallel");
+        assert!(par.latency.mean < base.latency.mean);
+    }
+}

@@ -1,0 +1,139 @@
+//! Criterion-style micro-benchmark harness (criterion is not in the
+//! offline crate set). Warmup + timed iterations with mean/σ/percentiles,
+//! used by every target under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_secs_f64(self.summary.mean)
+    }
+
+    /// criterion-like single line: `name  time: [mean ± σ]  p95`
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} time: [{:>12} ± {:>10}]  p95: {:>12}  ({} iters)",
+            self.name,
+            fmt_duration(self.summary.mean),
+            fmt_duration(self.summary.std),
+            fmt_duration(self.summary.p95),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(1),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bench {
+    /// Fast settings for CI-style runs (`GNNB_BENCH_FAST=1`).
+    pub fn from_env() -> Bench {
+        if std::env::var("GNNB_BENCH_FAST").is_ok() {
+            Bench {
+                warmup: Duration::from_millis(50),
+                measure: Duration::from_millis(200),
+                min_iters: 3,
+                max_iters: 10_000,
+            }
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Run one benchmark: warm up, then time iterations until the measure
+    /// budget or `max_iters` is reached.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            summary: Summary::of(&samples),
+        };
+        println!("{}", r.report_line());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 10_000,
+        };
+        let mut count = 0u64;
+        let r = b.run("noop", || {
+            count += 1;
+            count
+        });
+        assert!(r.iters >= 3);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.report_line().contains("noop"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert_eq!(fmt_duration(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_duration(3.25e-6), "3.250 µs");
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+    }
+}

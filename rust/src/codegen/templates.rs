@@ -1,0 +1,328 @@
+//! Jinja-like template engine (paper §VI-A: "template-based compiler ...
+//! conditional and loop control flows for template blocks").
+//!
+//! Supported syntax (a practical subset of Jinja2):
+//! - `{{ expr }}` — substitution; `expr` is a variable path (`a.b`).
+//! - `{% if expr %} .. {% elif expr %} .. {% else %} .. {% endif %}`
+//! - `{% for x in expr %} .. {% endfor %}` with `loop.index0`/`loop.last`
+//! - truthiness: null/false/0/""/[] are false.
+//!
+//! Values are [`crate::util::json::Json`], so template contexts serialize
+//! and round-trip with the model IR for free.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Render a template against a context object.
+pub fn render(template: &str, ctx: &Json) -> Result<String> {
+    let tokens = lex(template)?;
+    let (nodes, rest) = parse_block(&tokens, 0, &[])?;
+    if rest != tokens.len() {
+        bail!("unexpected trailing template tokens");
+    }
+    let mut out = String::with_capacity(template.len());
+    let mut scope = Scope { ctx, locals: Vec::new() };
+    exec(&nodes, &mut scope, &mut out)?;
+    Ok(out)
+}
+
+// ------------------------------------------------------------------ lexer
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Text(String),
+    Var(String),
+    Tag(String), // contents of {% .. %}
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let mut toks = Vec::new();
+    let mut rest = src;
+    loop {
+        let var_at = rest.find("{{");
+        let tag_at = rest.find("{%");
+        let (at, is_var) = match (var_at, tag_at) {
+            (None, None) => {
+                if !rest.is_empty() {
+                    toks.push(Tok::Text(rest.to_string()));
+                }
+                return Ok(toks);
+            }
+            (Some(v), None) => (v, true),
+            (None, Some(t)) => (t, false),
+            (Some(v), Some(t)) => {
+                if v < t {
+                    (v, true)
+                } else {
+                    (t, false)
+                }
+            }
+        };
+        if at > 0 {
+            toks.push(Tok::Text(rest[..at].to_string()));
+        }
+        let close = if is_var { "}}" } else { "%}" };
+        let body_start = at + 2;
+        let end = rest[body_start..]
+            .find(close)
+            .ok_or_else(|| anyhow!("unterminated {} block", if is_var { "{{" } else { "{%" }))?;
+        let body = rest[body_start..body_start + end].trim().to_string();
+        toks.push(if is_var { Tok::Var(body) } else { Tok::Tag(body) });
+        rest = &rest[body_start + end + 2..];
+    }
+}
+
+// ----------------------------------------------------------------- parser
+
+#[derive(Debug, Clone)]
+enum Node {
+    Text(String),
+    Var(String),
+    If {
+        arms: Vec<(String, Vec<Node>)>, // (condition, body); last may be "else"
+        else_body: Vec<Node>,
+    },
+    For {
+        var: String,
+        expr: String,
+        body: Vec<Node>,
+    },
+}
+
+/// Parse until one of `terminators` tags (returns nodes + index of the
+/// terminator token, or len when none required).
+fn parse_block(toks: &[Tok], mut i: usize, terminators: &[&str]) -> Result<(Vec<Node>, usize)> {
+    let mut nodes = Vec::new();
+    while i < toks.len() {
+        match &toks[i] {
+            Tok::Text(t) => {
+                nodes.push(Node::Text(t.clone()));
+                i += 1;
+            }
+            Tok::Var(v) => {
+                nodes.push(Node::Var(v.clone()));
+                i += 1;
+            }
+            Tok::Tag(tag) => {
+                let word = tag.split_whitespace().next().unwrap_or("");
+                if terminators.contains(&word) {
+                    return Ok((nodes, i));
+                }
+                match word {
+                    "if" => {
+                        let mut arms = Vec::new();
+                        let mut else_body = Vec::new();
+                        let mut cond = tag["if".len()..].trim().to_string();
+                        i += 1;
+                        loop {
+                            let (body, at) =
+                                parse_block(toks, i, &["elif", "else", "endif"])?;
+                            let Tok::Tag(t) = &toks[at] else { unreachable!() };
+                            let w = t.split_whitespace().next().unwrap();
+                            arms.push((cond.clone(), body));
+                            match w {
+                                "elif" => {
+                                    cond = t["elif".len()..].trim().to_string();
+                                    i = at + 1;
+                                }
+                                "else" => {
+                                    let (body, at2) = parse_block(toks, at + 1, &["endif"])?;
+                                    else_body = body;
+                                    i = at2 + 1;
+                                    break;
+                                }
+                                "endif" => {
+                                    i = at + 1;
+                                    break;
+                                }
+                                _ => unreachable!(),
+                            }
+                        }
+                        nodes.push(Node::If { arms, else_body });
+                    }
+                    "for" => {
+                        let spec = tag["for".len()..].trim();
+                        let (var, expr) = spec
+                            .split_once(" in ")
+                            .ok_or_else(|| anyhow!("malformed for tag `{tag}`"))?;
+                        i += 1;
+                        let (body, at) = parse_block(toks, i, &["endfor"])?;
+                        nodes.push(Node::For {
+                            var: var.trim().to_string(),
+                            expr: expr.trim().to_string(),
+                            body,
+                        });
+                        i = at + 1;
+                    }
+                    other => bail!("unknown template tag `{other}`"),
+                }
+            }
+        }
+    }
+    if terminators.is_empty() {
+        Ok((nodes, i))
+    } else {
+        bail!("missing closing tag, expected one of {terminators:?}")
+    }
+}
+
+// ------------------------------------------------------------- evaluation
+
+struct Scope<'a> {
+    ctx: &'a Json,
+    locals: Vec<(String, Json)>,
+}
+
+impl<'a> Scope<'a> {
+    fn lookup(&self, path: &str) -> Result<Json> {
+        let mut parts = path.split('.');
+        let head = parts.next().unwrap();
+        // innermost local wins
+        let mut base: Option<Json> = None;
+        for (k, v) in self.locals.iter().rev() {
+            if k == head {
+                base = Some(v.clone());
+                break;
+            }
+        }
+        let mut cur = match base {
+            Some(v) => v,
+            None => {
+                let v = self.ctx.get(head);
+                if v.is_null() && !matches!(self.ctx, Json::Obj(m) if m.contains_key(head)) {
+                    bail!("undefined template variable `{head}`");
+                }
+                v.clone()
+            }
+        };
+        for p in parts {
+            cur = cur.get(p).clone();
+        }
+        Ok(cur)
+    }
+}
+
+fn truthy(v: &Json) -> bool {
+    match v {
+        Json::Null => false,
+        Json::Bool(b) => *b,
+        Json::Num(n) => *n != 0.0,
+        Json::Str(s) => !s.is_empty(),
+        Json::Arr(a) => !a.is_empty(),
+        Json::Obj(m) => !m.is_empty(),
+    }
+}
+
+fn to_text(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        Json::Null => String::new(),
+        other => other.to_string(),
+    }
+}
+
+fn exec(nodes: &[Node], scope: &mut Scope, out: &mut String) -> Result<()> {
+    for node in nodes {
+        match node {
+            Node::Text(t) => out.push_str(t),
+            Node::Var(path) => {
+                let v = scope.lookup(path)?;
+                out.push_str(&to_text(&v));
+            }
+            Node::If { arms, else_body } => {
+                let mut done = false;
+                for (cond, body) in arms {
+                    if truthy(&scope.lookup(cond)?) {
+                        exec(body, scope, out)?;
+                        done = true;
+                        break;
+                    }
+                }
+                if !done {
+                    exec(else_body, scope, out)?;
+                }
+            }
+            Node::For { var, expr, body } => {
+                let seq = scope.lookup(expr)?;
+                let items = match seq {
+                    Json::Arr(v) => v,
+                    other => bail!("for-loop over non-array `{expr}` = {other:?}"),
+                };
+                let n = items.len();
+                for (idx, item) in items.into_iter().enumerate() {
+                    scope.locals.push((var.clone(), item));
+                    scope.locals.push((
+                        "loop".to_string(),
+                        Json::obj(vec![
+                            ("index0", Json::num(idx as f64)),
+                            ("index", Json::num((idx + 1) as f64)),
+                            ("first", Json::Bool(idx == 0)),
+                            ("last", Json::Bool(idx + 1 == n)),
+                        ]),
+                    ));
+                    exec(body, scope, out)?;
+                    scope.locals.pop();
+                    scope.locals.pop();
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn substitution_and_paths() {
+        let c = ctx(r#"{"name": "gcn", "dims": {"hidden": 128}}"#);
+        let out = render("conv={{ name }} h={{ dims.hidden }}", &c).unwrap();
+        assert_eq!(out, "conv=gcn h=128");
+    }
+
+    #[test]
+    fn if_elif_else() {
+        let t = "{% if a %}A{% elif b %}B{% else %}C{% endif %}";
+        assert_eq!(render(t, &ctx(r#"{"a":true,"b":false}"#)).unwrap(), "A");
+        assert_eq!(render(t, &ctx(r#"{"a":false,"b":true}"#)).unwrap(), "B");
+        assert_eq!(render(t, &ctx(r#"{"a":false,"b":0}"#)).unwrap(), "C");
+    }
+
+    #[test]
+    fn for_loop_with_loop_vars() {
+        let t = "{% for l in layers %}{{ loop.index0 }}:{{ l.dim }}{% if loop.last %}.{% else %},{% endif %}{% endfor %}";
+        let c = ctx(r#"{"layers": [{"dim": 9}, {"dim": 128}, {"dim": 64}]}"#);
+        assert_eq!(render(t, &c).unwrap(), "0:9,1:128,2:64.");
+    }
+
+    #[test]
+    fn nested_structures() {
+        let t = "{% for g in groups %}[{% for v in g %}{{ v }}{% endfor %}]{% endfor %}";
+        let c = ctx(r#"{"groups": [[1,2],[3]]}"#);
+        assert_eq!(render(t, &c).unwrap(), "[12][3]");
+    }
+
+    #[test]
+    fn undefined_variable_is_an_error() {
+        assert!(render("{{ nope }}", &ctx("{}")).is_err());
+    }
+
+    #[test]
+    fn unclosed_blocks_are_errors() {
+        assert!(render("{% if a %}x", &ctx(r#"{"a":1}"#)).is_err());
+        assert!(render("{{ x ", &ctx(r#"{"x":1}"#)).is_err());
+        assert!(render("{% endfor %}", &ctx("{}")).is_err());
+    }
+
+    #[test]
+    fn text_outside_blocks_passes_through() {
+        let out = render("void f() { return; } // {{ v }}", &ctx(r#"{"v":"ok"}"#)).unwrap();
+        assert_eq!(out, "void f() { return; } // ok");
+    }
+}

@@ -1,0 +1,427 @@
+//! Serving coordinator — the L3 "host code" (paper §VI-C) grown into a
+//! deployable runtime: a request router + dynamic batcher + worker pool
+//! in the vllm-router mold. Python never runs here; workers execute
+//! either compiled PJRT artifacts or the native engine.
+//!
+//! Architecture (std threads + channels; tokio is not in the offline set):
+//!
+//! ```text
+//!  submit() ──► router queue ──► batcher (size/deadline policy)
+//!                                   │ per-model batches
+//!                                   ▼
+//!                          worker threads (one executable each)
+//!                                   │
+//!                                   ▼ responses via per-request channel
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::Graph;
+use crate::util::stats::Summary;
+
+/// One inference request: a graph routed to a named model variant.
+pub struct Request {
+    pub model: String,
+    pub graph: Graph,
+    pub x: Vec<f32>,
+    submitted: Instant,
+    respond: Sender<Response>,
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub output: Vec<f32>,
+    pub queue_seconds: f64,
+    pub service_seconds: f64,
+}
+
+/// A model backend a worker dispatches to (PJRT or native engine).
+/// Lives entirely on its worker thread (PJRT handles are not `Send`), so
+/// no `Send`/`Sync` bound — construction happens *inside* the thread via a
+/// [`BackendFactory`].
+pub trait Backend {
+    fn name(&self) -> &str;
+    fn infer(&self, graph: &Graph, x: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Constructs a backend on its worker thread.
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+/// A named backend replica to spawn.
+pub struct BackendSpec {
+    pub model: String,
+    pub factory: BackendFactory,
+}
+
+impl BackendSpec {
+    /// Native-engine replica (Engine is Send; moved into the worker).
+    pub fn engine(engine: crate::engine::Engine) -> BackendSpec {
+        BackendSpec {
+            model: engine.cfg.name.clone(),
+            factory: Box::new(move || Ok(Box::new(engine) as Box<dyn Backend>)),
+        }
+    }
+
+    /// PJRT replica: each worker constructs its own client + executable
+    /// (PJRT handles cannot cross threads).
+    pub fn pjrt(meta: crate::runtime::ArtifactMeta) -> BackendSpec {
+        BackendSpec {
+            model: meta.name.clone(),
+            factory: Box::new(move || {
+                let mut rt = crate::runtime::Runtime::cpu()?;
+                let exe = rt.load(&meta)?;
+                Ok(Box::new(PjrtBackend { _rt: rt, exe }) as Box<dyn Backend>)
+            }),
+        }
+    }
+}
+
+impl Backend for crate::engine::Engine {
+    fn name(&self) -> &str {
+        &self.cfg.name
+    }
+    fn infer(&self, graph: &Graph, x: &[f32]) -> Result<Vec<f32>> {
+        self.forward(graph, x)
+    }
+}
+
+/// PJRT-backed backend (worker-thread local).
+pub struct PjrtBackend {
+    _rt: crate::runtime::Runtime,
+    pub exe: Arc<crate::runtime::Executable>,
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.exe.meta.name
+    }
+    fn infer(&self, graph: &Graph, x: &[f32]) -> Result<Vec<f32>> {
+        let cfg = &self.exe.meta.config;
+        let input = graph.to_input(x, cfg.graph_input_dim, cfg.max_nodes, cfg.max_edges);
+        self.exe.run(&input)
+    }
+}
+
+/// Dynamic batching policy (paper's host loop batches dataset graphs; we
+/// expose the knobs a serving deployment needs).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// dispatch when this many requests for one model are queued
+    pub max_batch: usize,
+    /// ... or when the oldest has waited this long
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Live counters exposed by the coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub peak_queue: AtomicUsize,
+    latencies: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latencies.lock().unwrap())
+    }
+}
+
+enum Msg {
+    Work(Request),
+    Shutdown,
+}
+
+/// The coordinator: router thread + batcher + N workers per model.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    pub metrics: Arc<Metrics>,
+    router: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn with one worker thread per backend replica.
+    pub fn start(backends: Vec<BackendSpec>, policy: BatchPolicy) -> Coordinator {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let router = std::thread::spawn(move || router_loop(rx, backends, policy, m2));
+        Coordinator {
+            tx,
+            metrics,
+            router: Some(router),
+        }
+    }
+
+    /// Submit a request; returns the response receiver immediately.
+    pub fn submit(&self, model: &str, graph: Graph, x: Vec<f32>) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(Msg::Work(Request {
+            model: model.to_string(),
+            graph,
+            x,
+            submitted: Instant::now(),
+            respond: rtx,
+        }));
+        rrx
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, model: &str, graph: Graph, x: Vec<f32>) -> Result<Response> {
+        self.submit(model, graph, x)
+            .recv()
+            .map_err(|_| anyhow!("coordinator dropped the request (unknown model?)"))
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn router_loop(
+    rx: Receiver<Msg>,
+    backends: Vec<BackendSpec>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    // per-model work channels feeding worker threads
+    let mut model_tx: HashMap<String, Sender<Vec<Request>>> = HashMap::new();
+    let mut workers = Vec::new();
+    for spec in backends {
+        let (wtx, wrx) = channel::<Vec<Request>>();
+        model_tx.insert(spec.model.clone(), wtx);
+        let m = metrics.clone();
+        let factory = spec.factory;
+        workers.push(std::thread::spawn(move || worker_loop(wrx, factory, m)));
+    }
+
+    // batcher state: pending queue per model
+    let mut pending: HashMap<String, Vec<Request>> = HashMap::new();
+    let mut oldest: HashMap<String, Instant> = HashMap::new();
+    loop {
+        // wait up to the batching deadline for more work
+        let timeout = policy.max_wait;
+        let msg = rx.recv_timeout(timeout);
+        match msg {
+            Ok(Msg::Work(req)) => {
+                if !model_tx.contains_key(&req.model) {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    drop(req); // sender sees a closed channel
+                    continue;
+                }
+                let q = pending.entry(req.model.clone()).or_default();
+                oldest.entry(req.model.clone()).or_insert_with(Instant::now);
+                q.push(req);
+                let depth: usize = pending.values().map(|v| v.len()).sum();
+                metrics.peak_queue.fetch_max(depth, Ordering::Relaxed);
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        // dispatch policy: size or age triggers
+        for (model, q) in pending.iter_mut() {
+            let age_hit = oldest
+                .get(model)
+                .map(|t| t.elapsed() >= policy.max_wait)
+                .unwrap_or(false);
+            while q.len() >= policy.max_batch || (age_hit && !q.is_empty()) {
+                let take = q.len().min(policy.max_batch);
+                let batch: Vec<Request> = q.drain(..take).collect();
+                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                let _ = model_tx[model].send(batch);
+                if q.is_empty() {
+                    oldest.remove(model);
+                    break;
+                }
+            }
+        }
+    }
+    // flush remaining queued work before shutdown
+    for (model, q) in pending {
+        if let Some(tx) = model_tx.get(&model) {
+            if !q.is_empty() {
+                let _ = tx.send(q);
+            }
+        }
+    }
+    drop(model_tx); // closes worker channels
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+fn worker_loop(rx: Receiver<Vec<Request>>, factory: BackendFactory, metrics: Arc<Metrics>) {
+    let backend = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("backend construction failed: {e:#}");
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    while let Ok(batch) = rx.recv() {
+        for req in batch {
+            let queue_seconds = req.submitted.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            match backend.infer(&req.graph, &req.x) {
+                Ok(output) => {
+                    let service_seconds = t0.elapsed().as_secs_f64();
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .latencies
+                        .lock()
+                        .unwrap()
+                        .push(queue_seconds + service_seconds);
+                    let _ = req.respond.send(Response {
+                        output,
+                        queue_seconds,
+                        service_seconds,
+                    });
+                }
+                Err(_) => {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic toy backend: output = [sum(x), num_nodes].
+    struct Toy {
+        name: String,
+        delay: Duration,
+    }
+
+    impl Backend for Toy {
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn infer(&self, graph: &Graph, x: &[f32]) -> Result<Vec<f32>> {
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            Ok(vec![x.iter().sum(), graph.num_nodes as f32])
+        }
+    }
+
+    fn toy(name: &str, delay: Duration) -> BackendSpec {
+        let name = name.to_string();
+        BackendSpec {
+            model: name.clone(),
+            factory: Box::new(move || Ok(Box::new(Toy { name, delay }) as Box<dyn Backend>)),
+        }
+    }
+
+    fn toy_graph() -> Graph {
+        Graph::from_coo(3, &[(0, 1), (1, 2)])
+    }
+
+    #[test]
+    fn routes_to_the_right_model_and_answers() {
+        let c = Coordinator::start(
+            vec![toy("a", Duration::ZERO), toy("b", Duration::ZERO)],
+            BatchPolicy::default(),
+        );
+        let r = c.infer("a", toy_graph(), vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(r.output, vec![6.0, 3.0]);
+        let r = c.infer("b", toy_graph(), vec![5.0]).unwrap();
+        assert_eq!(r.output, vec![5.0, 3.0]);
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_not_a_hang() {
+        let c = Coordinator::start(vec![toy("a", Duration::ZERO)], BatchPolicy::default());
+        let err = c.infer("nope", toy_graph(), vec![1.0]);
+        assert!(err.is_err());
+        assert_eq!(c.metrics.errors.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let c = Coordinator::start(
+            vec![toy("m", Duration::from_micros(200))],
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let receivers: Vec<_> = (0..32)
+            .map(|i| c.submit("m", toy_graph(), vec![i as f32]))
+            .collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.output[0], i as f32);
+        }
+        let batches = c.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches >= 8, "expected >=8 batches of <=4, got {batches}");
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 32);
+        c.shutdown();
+    }
+
+    #[test]
+    fn latency_metrics_accumulate() {
+        let c = Coordinator::start(vec![toy("m", Duration::from_micros(100))], BatchPolicy::default());
+        for _ in 0..10 {
+            c.infer("m", toy_graph(), vec![1.0]).unwrap();
+        }
+        let s = c.metrics.latency_summary();
+        assert_eq!(s.n, 10);
+        assert!(s.mean >= 1e-4, "mean {}", s.mean);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending_work() {
+        let c = Coordinator::start(
+            vec![toy("m", Duration::ZERO)],
+            BatchPolicy {
+                max_batch: 1000, // force age-based dispatch only
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let rx = c.submit("m", toy_graph(), vec![2.0]);
+        c.shutdown();
+        // flushed on shutdown even though the batch never filled
+        let r = rx.recv().unwrap();
+        assert_eq!(r.output[0], 2.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Dataset substrate: MoleculeNet-style synthetic graph generators.
+//!
+//! Substitution (DESIGN.md): the paper evaluates on QM9 / ESOL / FreeSolv /
+//! Lipophilicity / HIV from MoleculeNet. The evaluation consumes only
+//! topology statistics (node/edge counts, degree) and feature dims, so we
+//! generate molecule-like graphs matched to the published statistics:
+//! a random spanning tree (bond skeleton) + ~12% ring closures, valence
+//! capped at 4, node counts from a clipped normal around the dataset mean.
+//! Twin of `python/compile/graphgen.py` (formats interop via GNNT files;
+//! RNG streams are independent — no cross-language bit-matching needed).
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Published statistics of one dataset (twin of `configs.DatasetStats`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    pub name: &'static str,
+    pub num_graphs: usize,
+    pub node_dim: usize,
+    pub edge_dim: usize,
+    pub output_dim: usize,
+    pub task: &'static str,
+    pub mean_nodes: f64,
+    pub mean_edges: f64,
+    pub median_nodes: usize,
+    pub median_edges: usize,
+    pub mean_degree: f64,
+}
+
+pub const QM9: DatasetStats = DatasetStats {
+    name: "qm9",
+    num_graphs: 130_831,
+    node_dim: 11,
+    edge_dim: 4,
+    output_dim: 19,
+    task: "regression",
+    mean_nodes: 18.0,
+    mean_edges: 37.3,
+    median_nodes: 18,
+    median_edges: 38,
+    mean_degree: 2.07,
+};
+
+pub const ESOL: DatasetStats = DatasetStats {
+    name: "esol",
+    num_graphs: 1128,
+    node_dim: 9,
+    edge_dim: 3,
+    output_dim: 1,
+    task: "regression",
+    mean_nodes: 13.3,
+    mean_edges: 27.4,
+    median_nodes: 13,
+    median_edges: 26,
+    mean_degree: 2.04,
+};
+
+pub const FREESOLV: DatasetStats = DatasetStats {
+    name: "freesolv",
+    num_graphs: 642,
+    node_dim: 9,
+    edge_dim: 3,
+    output_dim: 1,
+    task: "regression",
+    mean_nodes: 8.7,
+    mean_edges: 16.8,
+    median_nodes: 8,
+    median_edges: 16,
+    mean_degree: 1.92,
+};
+
+pub const LIPO: DatasetStats = DatasetStats {
+    name: "lipo",
+    num_graphs: 4200,
+    node_dim: 9,
+    edge_dim: 3,
+    output_dim: 1,
+    task: "regression",
+    mean_nodes: 27.0,
+    mean_edges: 59.0,
+    median_nodes: 26,
+    median_edges: 58,
+    mean_degree: 2.18,
+};
+
+pub const HIV: DatasetStats = DatasetStats {
+    name: "hiv",
+    num_graphs: 41_127,
+    node_dim: 9,
+    edge_dim: 3,
+    output_dim: 2,
+    task: "classification",
+    mean_nodes: 25.5,
+    mean_edges: 54.9,
+    median_nodes: 23,
+    median_edges: 50,
+    mean_degree: 2.15,
+};
+
+/// The paper's five evaluation datasets (§VIII-B).
+pub const ALL: [&DatasetStats; 5] = [&QM9, &ESOL, &FREESOLV, &LIPO, &HIV];
+
+pub fn by_name(name: &str) -> Option<&'static DatasetStats> {
+    ALL.iter().copied().find(|d| d.name == name)
+}
+
+/// A generated molecular-like graph with node features.
+#[derive(Debug, Clone)]
+pub struct MolGraph {
+    pub graph: Graph,
+    /// [num_nodes * node_dim], row major
+    pub x: Vec<f32>,
+    pub node_dim: usize,
+}
+
+/// Generate one molecule-like graph (see module docs for the construction).
+pub fn gen_graph(rng: &mut Rng, stats: &DatasetStats, max_nodes: usize, max_edges: usize) -> MolGraph {
+    let hi = ((stats.mean_nodes * 2.0 + 8.0) as usize).min(max_nodes);
+    let n_raw = rng.normal_scaled(stats.mean_nodes, stats.mean_nodes * 0.25).round();
+    let n = (n_raw as i64).clamp(2, hi as i64) as usize;
+
+    let mut deg = vec![0u32; n];
+    let mut und: Vec<(usize, usize)> = Vec::with_capacity(n);
+    // random spanning tree with valence cap
+    for v in 1..n {
+        let mut u = rng.below(v);
+        for _ in 0..8 {
+            if deg[u] < 4 {
+                break;
+            }
+            u = rng.below(v);
+        }
+        und.push((u, v));
+        deg[u] += 1;
+        deg[v] += 1;
+    }
+    // ring closures (~12% extra bonds)
+    let n_rings = (0.12 * (n as f64 - 1.0)).round() as usize;
+    for _ in 0..n_rings {
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u != v
+            && deg[u] < 4
+            && deg[v] < 4
+            && !und.contains(&(u, v))
+            && !und.contains(&(v, u))
+        {
+            und.push((u, v));
+            deg[u] += 1;
+            deg[v] += 1;
+        }
+    }
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(und.len() * 2);
+    for &(u, v) in &und {
+        if edges.len() + 2 > max_edges {
+            break;
+        }
+        edges.push((u as u32, v as u32));
+        edges.push((v as u32, u as u32));
+    }
+    let graph = Graph::from_coo(n, &edges);
+
+    // one-hot-ish atom features + a degree channel (graph-dependent)
+    let f = stats.node_dim;
+    let mut x = vec![0f32; n * f];
+    for i in 0..n {
+        let atom = rng.below(f);
+        x[i * f + atom] = 1.0;
+        x[i * f] = deg[i] as f32 / 4.0;
+    }
+    MolGraph {
+        graph,
+        x,
+        node_dim: f,
+    }
+}
+
+/// Generate a dataset sample of `count` graphs with a per-dataset seed.
+pub fn gen_dataset(stats: &DatasetStats, count: usize, seed: u64, max_nodes: usize, max_edges: usize) -> Vec<MolGraph> {
+    let mut rng = Rng::seed_from(seed ^ fxhash(stats.name));
+    (0..count)
+        .map(|i| {
+            let mut g_rng = rng.fork(i as u64);
+            gen_graph(&mut g_rng, stats, max_nodes, max_edges)
+        })
+        .collect()
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn registry_contains_all_five() {
+        assert_eq!(ALL.len(), 5);
+        for name in ["qm9", "esol", "freesolv", "lipo", "hiv"] {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("zinc").is_none());
+    }
+
+    #[test]
+    fn generated_stats_match_published_means() {
+        for ds in ALL {
+            let graphs = gen_dataset(ds, 400, 7, 600, 600);
+            let nodes: Vec<f64> = graphs.iter().map(|g| g.graph.num_nodes as f64).collect();
+            let edges: Vec<f64> = graphs.iter().map(|g| g.graph.num_edges as f64).collect();
+            let mn = mean(&nodes);
+            let me = mean(&edges);
+            assert!(
+                (mn - ds.mean_nodes).abs() / ds.mean_nodes < 0.15,
+                "{}: mean nodes {mn} vs {}",
+                ds.name,
+                ds.mean_nodes
+            );
+            assert!(
+                (me - ds.mean_edges).abs() / ds.mean_edges < 0.20,
+                "{}: mean edges {me} vs {}",
+                ds.name,
+                ds.mean_edges
+            );
+        }
+    }
+
+    #[test]
+    fn graphs_respect_structural_invariants() {
+        let graphs = gen_dataset(&HIV, 100, 3, 600, 600);
+        for g in &graphs {
+            assert!(g.graph.num_nodes >= 2);
+            assert_eq!(g.x.len(), g.graph.num_nodes * g.node_dim);
+            // valence cap (undirected degree = directed in-degree here)
+            for i in 0..g.graph.num_nodes {
+                assert!(g.graph.in_degree(i) <= 4, "valence violated");
+            }
+            // every directed edge has its reverse (PyG-style symmetric COO)
+            for &(s, d) in &g.graph.edges {
+                assert!(g.graph.edges.contains(&(d, s)));
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let a = gen_dataset(&ESOL, 10, 42, 600, 600);
+        let b = gen_dataset(&ESOL, 10, 42, 600, 600);
+        for (ga, gb) in a.iter().zip(&b) {
+            assert_eq!(ga.graph.edges, gb.graph.edges);
+            assert_eq!(ga.x, gb.x);
+        }
+        let c = gen_dataset(&ESOL, 10, 43, 600, 600);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.graph.edges != y.graph.edges));
+    }
+}

@@ -1,0 +1,273 @@
+//! Design-space exploration (paper §VII-C).
+//!
+//! With millisecond direct-fit evaluations, the paper brute-forces or
+//! randomly samples the configuration space to pick the best accelerator
+//! under resource constraints. This module implements both searches plus a
+//! Pareto frontier extraction (latency vs BRAM), all deterministic.
+
+use crate::model::space::DesignSpace;
+use crate::model::ModelConfig;
+use crate::perfmodel::PerfModel;
+use crate::util::rng::Rng;
+
+/// Constraints for a DSE query (paper: "best latency under fixed resource
+/// constraints with a trade-off in model accuracy").
+#[derive(Debug, Clone, Copy)]
+pub struct Constraints {
+    /// BRAM18K budget (None = the full U280)
+    pub max_bram: f64,
+    /// optional architecture pins (fixed by the task, not searched)
+    pub fix_conv: Option<crate::model::ConvType>,
+    pub min_hidden_dim: Option<usize>,
+}
+
+impl Default for Constraints {
+    fn default() -> Self {
+        Constraints {
+            max_bram: crate::hls::U280.bram18k as f64,
+            fix_conv: None,
+            min_hidden_dim: None,
+        }
+    }
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub config: ModelConfig,
+    pub pred_latency_ms: f64,
+    pub pred_bram: f64,
+}
+
+fn admissible(cfg: &ModelConfig, c: &Constraints) -> bool {
+    if let Some(conv) = c.fix_conv {
+        if cfg.gnn_conv != conv {
+            return false;
+        }
+    }
+    if let Some(h) = c.min_hidden_dim {
+        if cfg.gnn_hidden_dim < h {
+            return false;
+        }
+    }
+    true
+}
+
+/// Search result with evaluation accounting.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: Option<Candidate>,
+    pub evaluated: usize,
+    pub feasible: usize,
+    pub wall_seconds: f64,
+}
+
+/// Randomly sample `budget` configs and keep the feasible best-latency one.
+pub fn random_search(
+    space: &DesignSpace,
+    model: &PerfModel,
+    constraints: &Constraints,
+    budget: usize,
+    seed: u64,
+) -> SearchResult {
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::seed_from(seed);
+    let size = space.size();
+    let mut best: Option<Candidate> = None;
+    let mut feasible = 0usize;
+    let mut evaluated = 0usize;
+    while evaluated < budget {
+        let cfg = space.index(rng.next_u64() % size);
+        evaluated += 1;
+        if !admissible(&cfg, constraints) {
+            continue;
+        }
+        let (lat, bram) = model.predict(&cfg);
+        if bram > constraints.max_bram {
+            continue;
+        }
+        feasible += 1;
+        if best.as_ref().map_or(true, |b| lat < b.pred_latency_ms) {
+            best = Some(Candidate {
+                config: cfg,
+                pred_latency_ms: lat,
+                pred_bram: bram,
+            });
+        }
+    }
+    SearchResult {
+        best,
+        evaluated,
+        feasible,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Exhaustive scan of the first `limit` configs in enumeration order
+/// (the full Listing-2 space is ~2.5M points ⇒ brute force is feasible at
+/// ~µs/eval, but callers usually cap it).
+pub fn brute_force(
+    space: &DesignSpace,
+    model: &PerfModel,
+    constraints: &Constraints,
+    limit: u64,
+) -> SearchResult {
+    let t0 = std::time::Instant::now();
+    let n = space.size().min(limit);
+    let mut best: Option<Candidate> = None;
+    let mut feasible = 0usize;
+    for i in 0..n {
+        let cfg = space.index(i);
+        if !admissible(&cfg, constraints) {
+            continue;
+        }
+        let (lat, bram) = model.predict(&cfg);
+        if bram > constraints.max_bram {
+            continue;
+        }
+        feasible += 1;
+        if best.as_ref().map_or(true, |b| lat < b.pred_latency_ms) {
+            best = Some(Candidate {
+                config: cfg,
+                pred_latency_ms: lat,
+                pred_bram: bram,
+            });
+        }
+    }
+    SearchResult {
+        best,
+        evaluated: n as usize,
+        feasible,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Non-dominated (latency, BRAM) frontier of a candidate set, sorted by
+/// latency ascending.
+pub fn pareto_front(mut cands: Vec<Candidate>) -> Vec<Candidate> {
+    cands.sort_by(|a, b| {
+        a.pred_latency_ms
+            .partial_cmp(&b.pred_latency_ms)
+            .unwrap()
+            .then(a.pred_bram.partial_cmp(&b.pred_bram).unwrap())
+    });
+    let mut front: Vec<Candidate> = Vec::new();
+    let mut best_bram = f64::INFINITY;
+    for c in cands {
+        if c.pred_bram < best_bram {
+            best_bram = c.pred_bram;
+            front.push(c);
+        }
+    }
+    front
+}
+
+/// Evaluate a seeded sample of candidates (for Pareto plots).
+pub fn sample_candidates(
+    space: &DesignSpace,
+    model: &PerfModel,
+    count: usize,
+    seed: u64,
+) -> Vec<Candidate> {
+    space
+        .sample(count, seed)
+        .into_iter()
+        .map(|config| {
+            let (lat, bram) = model.predict(&config);
+            Candidate {
+                config,
+                pred_latency_ms: lat,
+                pred_bram: bram,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::hls::GraphStats;
+    use crate::perfmodel::{build_database, ForestParams, PerfModel};
+
+    fn fitted_model() -> PerfModel {
+        let db = build_database(
+            &DesignSpace::default(),
+            150,
+            11,
+            &GraphStats::from_dataset(&datasets::QM9),
+            4,
+        );
+        PerfModel::fit(&db, &ForestParams::default())
+    }
+
+    #[test]
+    fn random_search_respects_constraints() {
+        let model = fitted_model();
+        let space = DesignSpace::default();
+        let c = Constraints {
+            max_bram: 800.0,
+            fix_conv: Some(crate::model::ConvType::Gcn),
+            min_hidden_dim: None,
+        };
+        let r = random_search(&space, &model, &c, 400, 3);
+        let best = r.best.expect("should find something feasible");
+        assert_eq!(best.config.gnn_conv, crate::model::ConvType::Gcn);
+        assert!(best.pred_bram <= 800.0);
+        assert!(r.feasible <= r.evaluated);
+    }
+
+    #[test]
+    fn tighter_budget_never_improves_latency() {
+        let model = fitted_model();
+        let space = DesignSpace::default();
+        let loose = random_search(&space, &model, &Constraints::default(), 500, 9);
+        let tight = random_search(
+            &space,
+            &model,
+            &Constraints {
+                max_bram: 400.0,
+                ..Default::default()
+            },
+            500,
+            9,
+        );
+        if let (Some(l), Some(t)) = (&loose.best, &tight.best) {
+            assert!(t.pred_latency_ms >= l.pred_latency_ms - 1e-9);
+        }
+    }
+
+    #[test]
+    fn brute_force_prefix_beats_or_ties_random_on_same_prefix() {
+        let model = fitted_model();
+        let space = DesignSpace::default();
+        let bf = brute_force(&space, &model, &Constraints::default(), 3000);
+        assert!(bf.best.is_some());
+        assert_eq!(bf.evaluated, 3000);
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated_and_sorted() {
+        let model = fitted_model();
+        let space = DesignSpace::default();
+        let cands = sample_candidates(&space, &model, 300, 17);
+        let front = pareto_front(cands);
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[0].pred_latency_ms <= w[1].pred_latency_ms);
+            assert!(w[0].pred_bram > w[1].pred_bram);
+        }
+    }
+
+    #[test]
+    fn search_is_deterministic_per_seed() {
+        let model = fitted_model();
+        let space = DesignSpace::default();
+        let a = random_search(&space, &model, &Constraints::default(), 200, 5);
+        let b = random_search(&space, &model, &Constraints::default(), 200, 5);
+        assert_eq!(
+            a.best.as_ref().map(|c| c.config.name.clone()),
+            b.best.as_ref().map(|c| c.config.name.clone())
+        );
+    }
+}

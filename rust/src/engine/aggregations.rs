@@ -1,0 +1,191 @@
+//! Single-pass partial aggregations (paper §V-B "Partial Aggregations").
+//!
+//! O(1)-space streaming fold over a node's neighbor embeddings — the exact
+//! algorithm the HLS kernel uses so no intermediate neighbor buffer (BRAM)
+//! is required. mean/var/std share Welford's one-pass update [Welford 1962];
+//! the finalize step derives each requested statistic from the partials.
+//! Must match `kernels/aggregate.py` numerically (both use f32 Welford).
+
+/// A neighbor-aggregation operator (paper: sum, min, max, mean, var, std).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Aggregator {
+    Sum,
+    Min,
+    Max,
+    Mean,
+    Var,
+    Std,
+}
+
+impl Aggregator {
+    pub const ALL: [Aggregator; 6] = [
+        Aggregator::Sum,
+        Aggregator::Min,
+        Aggregator::Max,
+        Aggregator::Mean,
+        Aggregator::Var,
+        Aggregator::Std,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Aggregator::Sum => "sum",
+            Aggregator::Min => "min",
+            Aggregator::Max => "max",
+            Aggregator::Mean => "mean",
+            Aggregator::Var => "var",
+            Aggregator::Std => "std",
+        }
+    }
+}
+
+/// Streaming partial-aggregation state for one node (all F lanes).
+/// Holds count + Welford (mean, M2) + running min/max — enough to finalize
+/// any subset of the six aggregators in one pass.
+#[derive(Debug, Clone)]
+pub struct PartialAgg {
+    pub count: f32,
+    pub mean: Vec<f32>,
+    pub m2: Vec<f32>,
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
+}
+
+impl PartialAgg {
+    pub fn new(width: usize) -> PartialAgg {
+        PartialAgg {
+            count: 0.0,
+            mean: vec![0.0; width],
+            m2: vec![0.0; width],
+            min: vec![f32::INFINITY; width],
+            max: vec![f32::NEG_INFINITY; width],
+        }
+    }
+
+    /// Fold one neighbor embedding into the partials (Fig. 3 inner loop).
+    #[inline]
+    pub fn update(&mut self, v: &[f32]) {
+        debug_assert_eq!(v.len(), self.mean.len());
+        self.count += 1.0;
+        let inv = 1.0 / self.count;
+        for i in 0..v.len() {
+            let d = v[i] - self.mean[i];
+            self.mean[i] += d * inv;
+            self.m2[i] += d * (v[i] - self.mean[i]);
+            self.min[i] = self.min[i].min(v[i]);
+            self.max[i] = self.max[i].max(v[i]);
+        }
+    }
+
+    /// Finalize one aggregator into `out` (empty neighborhoods → 0,
+    /// matching the kernel's masked finalize).
+    pub fn finalize(&self, op: Aggregator, out: &mut [f32]) {
+        let w = self.mean.len();
+        debug_assert_eq!(out.len(), w);
+        if self.count == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        match op {
+            Aggregator::Sum => {
+                for i in 0..w {
+                    out[i] = self.mean[i] * self.count;
+                }
+            }
+            Aggregator::Mean => out.copy_from_slice(&self.mean),
+            Aggregator::Min => out.copy_from_slice(&self.min),
+            Aggregator::Max => out.copy_from_slice(&self.max),
+            Aggregator::Var => {
+                for i in 0..w {
+                    out[i] = (self.m2[i] / self.count).max(0.0);
+                }
+            }
+            Aggregator::Std => {
+                for i in 0..w {
+                    out[i] = (self.m2[i] / self.count).max(0.0).sqrt();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+    use crate::util::rng::Rng;
+
+    fn finalize_vec(p: &PartialAgg, op: Aggregator) -> Vec<f32> {
+        let mut out = vec![0.0; p.mean.len()];
+        p.finalize(op, &mut out);
+        out
+    }
+
+    #[test]
+    fn empty_neighborhood_all_zero() {
+        let p = PartialAgg::new(3);
+        for op in Aggregator::ALL {
+            assert_eq!(finalize_vec(&p, op), vec![0.0; 3], "{op:?}");
+        }
+    }
+
+    #[test]
+    fn single_value_stats() {
+        let mut p = PartialAgg::new(2);
+        p.update(&[3.0, -1.5]);
+        assert_eq!(finalize_vec(&p, Aggregator::Sum), vec![3.0, -1.5]);
+        assert_eq!(finalize_vec(&p, Aggregator::Mean), vec![3.0, -1.5]);
+        assert_eq!(finalize_vec(&p, Aggregator::Min), vec![3.0, -1.5]);
+        assert_eq!(finalize_vec(&p, Aggregator::Max), vec![3.0, -1.5]);
+        assert_eq!(finalize_vec(&p, Aggregator::Var), vec![0.0, 0.0]);
+        assert_eq!(finalize_vec(&p, Aggregator::Std), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn welford_matches_two_pass_on_catastrophic_inputs() {
+        // naive E[x²]−E[x]² fails at this magnitude in f32; Welford must not
+        let vals = [1.0e4f32, 1.0e4 + 1.0, 1.0e4 + 2.0];
+        let mut p = PartialAgg::new(1);
+        for v in vals {
+            p.update(&[v]);
+        }
+        let var = finalize_vec(&p, Aggregator::Var)[0];
+        assert!((var - 2.0 / 3.0).abs() < 1e-3, "var {var}");
+    }
+
+    #[test]
+    fn property_partials_match_batch_stats() {
+        check("welford-vs-batch", 150, 60, |rng: &mut Rng, size| {
+            let n = rng.range(1, size.max(2));
+            let vals: Vec<f32> = (0..n).map(|_| rng.range_f64(-50.0, 50.0) as f32).collect();
+            let mut p = PartialAgg::new(1);
+            for &v in &vals {
+                p.update(&[v]);
+            }
+            let sum: f64 = vals.iter().map(|&v| v as f64).sum();
+            let mean = sum / n as f64;
+            let var = vals.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+            let checks: [(Aggregator, f64); 4] = [
+                (Aggregator::Sum, sum),
+                (Aggregator::Mean, mean),
+                (Aggregator::Var, var),
+                (Aggregator::Std, var.sqrt()),
+            ];
+            for (op, want) in checks {
+                let got = finalize_vec(&p, op)[0] as f64;
+                if (got - want).abs() > 1e-2 * (1.0 + want.abs()) {
+                    return Err(format!("{op:?}: got {got}, want {want} (n={n})"));
+                }
+            }
+            let mn = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            if finalize_vec(&p, Aggregator::Min)[0] != mn {
+                return Err("min mismatch".into());
+            }
+            if finalize_vec(&p, Aggregator::Max)[0] != mx {
+                return Err("max mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

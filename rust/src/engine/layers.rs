@@ -1,0 +1,316 @@
+//! Layer kernels for the native engine: tiled linear, the four graph
+//! convolutions (explicit message passing per Fig. 3), and global pooling.
+//! Each mirrors its L2 JAX twin in `python/compile/model.py` exactly —
+//! the golden-testvec tests in `engine/mod.rs` enforce this.
+
+use super::aggregations::{Aggregator, PartialAgg};
+use super::{Embeds, Mat, GIN_EPS, PNA_AGGREGATORS};
+use crate::fixed::Fixed;
+use crate::graph::Graph;
+use crate::model::{FixedPointFormat, Pooling};
+
+/// Quantize a buffer in place when a fixed format is active.
+pub(crate) fn maybe_quantize(xs: &mut [f32], q: Option<FixedPointFormat>) {
+    if let Some(fmt) = q {
+        for x in xs.iter_mut() {
+            *x = Fixed::from_f32(*x, fmt).to_f32(fmt);
+        }
+    }
+}
+
+#[inline]
+fn qv(v: f32, q: Option<FixedPointFormat>) -> f32 {
+    match q {
+        Some(fmt) => Fixed::from_f32(v, fmt).to_f32(fmt),
+        None => v,
+    }
+}
+
+/// out[N, M] = h[N, K] @ w[K, M] + b — the tiled linear kernel (§V-B).
+/// Row-major inner loop ordered (row, k, col) so the hot loop is a
+/// contiguous axpy over the weight row (auto-vectorizes).
+pub(crate) fn linear(h: &Embeds, w: &Mat, b: &[f32], q: Option<FixedPointFormat>) -> Embeds {
+    assert_eq!(h.cols, w.rows);
+    assert_eq!(w.cols, b.len());
+    let mut out = Embeds::zeros(h.rows, w.cols);
+    for r in 0..h.rows {
+        let hrow = h.row(r);
+        let orow = out.row_mut(r);
+        orow.copy_from_slice(b);
+        for (k, &hv) in hrow.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[k * w.cols..(k + 1) * w.cols];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += hv * wv;
+            }
+        }
+        if q.is_some() {
+            maybe_quantize(orow, q);
+        }
+    }
+    out
+}
+
+/// 1-D linear for the MLP head: z[K] @ w[K, M] + b[M].
+pub(crate) fn vec_linear(z: &[f32], w: &Mat, b: &[f32], q: Option<FixedPointFormat>) -> Vec<f32> {
+    assert_eq!(z.len(), w.rows);
+    let mut out = b.to_vec();
+    for (k, &zv) in z.iter().enumerate() {
+        if zv == 0.0 {
+            continue;
+        }
+        let wrow = &w.data[k * w.cols..(k + 1) * w.cols];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += zv * wv;
+        }
+    }
+    maybe_quantize(&mut out, q);
+    out
+}
+
+/// GCN: out_i = Σ_{j∈N(i)} (W h_j) / √(d~_i d~_j) + (W h_i) / d~_i + b
+/// with d~ = in-degree + 1 (self-loop augmented). Matches
+/// `kernels/aggregate.gcn_aggregate` + `model._conv`.
+pub(crate) fn gcn_conv(
+    g: &Graph,
+    h: &Embeds,
+    w: &Mat,
+    b: &[f32],
+    q: Option<FixedPointFormat>,
+) -> Embeds {
+    let zero_b = vec![0.0; w.cols];
+    let xw = linear(h, w, &zero_b, q); // φ hoisted over nodes (same math)
+    let mut out = Embeds::zeros(h.rows, w.cols);
+    for i in 0..g.num_nodes {
+        let deg_i = (g.in_deg[i] as f32 + 1.0).max(1.0);
+        let inv_sqrt_i = 1.0 / deg_i.sqrt();
+        let orow = out.row_mut(i);
+        for &j in g.neighbors(i) {
+            let deg_j = (g.in_deg[j as usize] as f32 + 1.0).max(1.0);
+            let coef = inv_sqrt_i / deg_j.sqrt();
+            for (o, &v) in orow.iter_mut().zip(xw.row(j as usize)) {
+                *o += coef * v;
+            }
+        }
+        let self_coef = 1.0 / deg_i;
+        for ((o, &v), &bb) in orow.iter_mut().zip(xw.row(i)).zip(b) {
+            *o += self_coef * v + bb;
+        }
+    }
+    out
+}
+
+/// GraphSAGE: out_i = W_root h_i + W_nbr mean_{j∈N(i)} h_j + b.
+pub(crate) fn sage_conv(
+    g: &Graph,
+    h: &Embeds,
+    w_root: &Mat,
+    w_nbr: &Mat,
+    b: &[f32],
+    q: Option<FixedPointFormat>,
+) -> Embeds {
+    let mut out = linear(h, w_root, b, q);
+    let mean = aggregate(g, h, &[Aggregator::Mean]);
+    let zero_b = vec![0.0; w_nbr.cols];
+    let nbr_part = linear(&mean, w_nbr, &zero_b, q);
+    for (o, &v) in out.data.iter_mut().zip(&nbr_part.data) {
+        *o += v;
+    }
+    out
+}
+
+/// GIN: out_i = W2 · relu(W1 · ((1+ε) h_i + Σ_{j∈N(i)} h_j) + b1) + b2.
+pub(crate) fn gin_conv(
+    g: &Graph,
+    h: &Embeds,
+    w1: &Mat,
+    b1: &[f32],
+    w2: &Mat,
+    b2: &[f32],
+    q: Option<FixedPointFormat>,
+) -> Embeds {
+    let sum = aggregate(g, h, &[Aggregator::Sum]);
+    let mut z = Embeds::zeros(h.rows, h.cols);
+    for i in 0..h.rows {
+        let hrow = h.row(i);
+        let srow = sum.row(i);
+        let zrow = z.row_mut(i);
+        for k in 0..h.cols {
+            zrow[k] = qv((1.0 + GIN_EPS) * hrow[k] + srow[k], q);
+        }
+    }
+    let mut mid = linear(&z, w1, b1, q);
+    for v in mid.data.iter_mut() {
+        *v = v.max(0.0); // the GIN MLP's inner activation is fixed ReLU (L2 twin)
+    }
+    linear(&mid, w2, b2, q)
+}
+
+/// PNA: out_i = W [h_i ‖ scaled aggregators] + b, aggregators
+/// {mean,min,max,std} × scalers {identity, amplification, attenuation}.
+pub(crate) fn pna_conv(
+    g: &Graph,
+    h: &Embeds,
+    w: &Mat,
+    b: &[f32],
+    delta: f32,
+    q: Option<FixedPointFormat>,
+) -> Embeds {
+    let f = h.cols;
+    let aggs = aggregate(g, h, &PNA_AGGREGATORS); // [N, 4F]
+    let towers = f * (PNA_AGGREGATORS.len() * 3 + 1);
+    let mut feat = Embeds::zeros(h.rows, towers);
+    for i in 0..h.rows {
+        let d = g.in_deg.get(i).copied().unwrap_or(0) as f32;
+        let ld = (d + 1.0).ln();
+        let amp = ld / delta;
+        let atten = if d > 0.0 { delta / ld.max(1e-6) } else { 0.0 };
+        let arow = aggs.row(i);
+        let frow = feat.row_mut(i);
+        frow[..f].copy_from_slice(h.row(i));
+        let base = f;
+        let na = PNA_AGGREGATORS.len() * f;
+        frow[base..base + na].copy_from_slice(arow);
+        for k in 0..na {
+            frow[base + na + k] = arow[k] * amp;
+            frow[base + 2 * na + k] = arow[k] * atten;
+        }
+        maybe_quantize(frow, q);
+    }
+    linear(&feat, w, b, q)
+}
+
+/// Per-node neighbor aggregation via the single-pass partials (Fig. 3).
+pub(crate) fn aggregate(g: &Graph, h: &Embeds, ops: &[Aggregator]) -> Embeds {
+    let f = h.cols;
+    let mut out = Embeds::zeros(h.rows, ops.len() * f);
+    let mut partial = PartialAgg::new(f);
+    for i in 0..g.num_nodes {
+        partial.count = 0.0;
+        partial.mean.fill(0.0);
+        partial.m2.fill(0.0);
+        partial.min.fill(f32::INFINITY);
+        partial.max.fill(f32::NEG_INFINITY);
+        for &j in g.neighbors(i) {
+            partial.update(h.row(j as usize));
+        }
+        let orow = out.row_mut(i);
+        for (oi, &op) in ops.iter().enumerate() {
+            partial.finalize(op, &mut orow[oi * f..(oi + 1) * f]);
+        }
+    }
+    out
+}
+
+/// Global pooling over all (valid) nodes — §V-B "Global Pooling".
+pub(crate) fn global_pool(h: &Embeds, p: Pooling) -> Vec<f32> {
+    let f = h.cols;
+    let n = h.rows;
+    let mut out = vec![0.0f32; f];
+    match p {
+        Pooling::Add | Pooling::Mean => {
+            for i in 0..n {
+                for (o, &v) in out.iter_mut().zip(h.row(i)) {
+                    *o += v;
+                }
+            }
+            if p == Pooling::Mean {
+                let inv = 1.0 / (n.max(1) as f32);
+                for o in out.iter_mut() {
+                    *o *= inv;
+                }
+            }
+        }
+        Pooling::Max => {
+            out.fill(f32::NEG_INFINITY);
+            for i in 0..n {
+                for (o, &v) in out.iter_mut().zip(h.row(i)) {
+                    *o = o.max(v);
+                }
+            }
+            if n == 0 {
+                out.fill(0.0);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn embeds(rows: usize, cols: usize, vals: &[f32]) -> Embeds {
+        Embeds {
+            rows,
+            cols,
+            data: vals.to_vec(),
+        }
+    }
+
+    fn mat(rows: usize, cols: usize, vals: &[f32]) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vals.to_vec(),
+        }
+    }
+
+    #[test]
+    fn linear_matches_hand_matmul() {
+        let h = embeds(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let w = mat(3, 2, &[1., 0., 0., 1., 1., 1.]);
+        let out = linear(&h, &w, &[10., 20.], None);
+        assert_eq!(out.data, vec![14., 25., 20., 31.]);
+    }
+
+    #[test]
+    fn vec_linear_matches_linear() {
+        let w = mat(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let z = [1.0, 0.5, -1.0];
+        let a = vec_linear(&z, &w, &[0.1, 0.2], None);
+        let h = embeds(1, 3, &z);
+        let b = linear(&h, &w, &[0.1, 0.2], None);
+        assert_eq!(a, b.data);
+    }
+
+    #[test]
+    fn aggregate_mean_of_two_neighbors() {
+        let g = Graph::from_coo(3, &[(1, 0), (2, 0)]);
+        let h = embeds(3, 2, &[0., 0., 2., 4., 4., 8.]);
+        let out = aggregate(&g, &h, &[Aggregator::Mean, Aggregator::Max]);
+        assert_eq!(out.row(0), &[3., 6., 4., 8.]);
+        assert_eq!(out.row(1), &[0., 0., 0., 0.]); // no neighbors
+    }
+
+    #[test]
+    fn gcn_self_loop_only_for_isolated_node() {
+        // isolated node: out = (W h_i) / 1 + b (deg~ = 1)
+        let g = Graph::from_coo(1, &[]);
+        let h = embeds(1, 2, &[1.0, 2.0]);
+        let w = mat(2, 2, &[1., 0., 0., 1.]);
+        let out = gcn_conv(&g, &h, &w, &[0.5, 0.5], None);
+        assert_eq!(out.data, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn global_pool_add_mean_max() {
+        let h = embeds(2, 2, &[1., 5., 3., -1.]);
+        assert_eq!(global_pool(&h, Pooling::Add), vec![4., 4.]);
+        assert_eq!(global_pool(&h, Pooling::Mean), vec![2., 2.]);
+        assert_eq!(global_pool(&h, Pooling::Max), vec![3., 5.]);
+    }
+
+    #[test]
+    fn quantized_linear_snaps_to_grid() {
+        let fmt = FixedPointFormat::new(16, 10); // lsb = 1/64
+        let h = embeds(1, 1, &[0.013]); // not on grid
+        let w = mat(1, 1, &[1.0]);
+        let out = linear(&h, &w, &[0.0], Some(fmt));
+        let lsb = 1.0 / 64.0;
+        let rem = (out.data[0] / lsb).fract();
+        assert!(rem.abs() < 1e-6, "value {} not on grid", out.data[0]);
+    }
+}

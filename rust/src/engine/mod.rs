@@ -1,0 +1,333 @@
+//! Native message-passing inference engine — the paper's **CPP-CPU**
+//! baseline (§VIII-B) and the functional model of the generated
+//! accelerator. Implements the exact per-node dataflow of Fig. 3:
+//! gather neighbor indices from the neighbor/offset tables, stream
+//! neighbor embeddings through O(1)-space partial aggregations
+//! (Welford for mean/var/std, §V-B), apply φ/γ transforms via tiled
+//! linear kernels, then global pooling + MLP head.
+//!
+//! Two numerics paths share the control flow:
+//! - [`Engine::forward`] — f32, numerically equivalent to the L2 JAX
+//!   model (validated against `artifacts/*.testvecs.bin` golden outputs);
+//! - [`Engine::forward_fixed`] — true ap_fixed<W,I> quantized compute via
+//!   [`crate::fixed`], the "true quantization simulation" testbench path
+//!   (§VI-B).
+
+mod aggregations;
+mod layers;
+
+pub use aggregations::{Aggregator, PartialAgg};
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Graph;
+use crate::model::{ConvType, FixedPointFormat, ModelConfig, Numerics};
+use crate::util::binio::Weights;
+
+/// PNA aggregator set (must match `configs.PNA_AGGREGATORS`).
+pub const PNA_AGGREGATORS: [Aggregator; 4] = [
+    Aggregator::Mean,
+    Aggregator::Min,
+    Aggregator::Max,
+    Aggregator::Std,
+];
+
+/// Fixed GIN epsilon (must match `model.GIN_EPS`).
+pub const GIN_EPS: f32 = 0.1;
+
+/// A dense row-major matrix of node embeddings.
+#[derive(Debug, Clone)]
+pub struct Embeds {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Embeds {
+    pub fn zeros(rows: usize, cols: usize) -> Embeds {
+        Embeds {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+/// One conv layer's weights, resolved from the GNNW bundle.
+#[derive(Debug, Clone)]
+enum ConvWeights {
+    Gcn { w: Mat, b: Vec<f32> },
+    Sage { w_root: Mat, w_nbr: Mat, b: Vec<f32> },
+    Gin { w1: Mat, b1: Vec<f32>, w2: Mat, b2: Vec<f32> },
+    Pna { w: Mat, b: Vec<f32> },
+}
+
+/// Row-major (in_dim x out_dim) weight matrix.
+#[derive(Debug, Clone)]
+pub(crate) struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    fn from_tensor(t: &crate::util::binio::Tensor) -> Result<Mat> {
+        if t.dims.len() != 2 {
+            bail!("weight `{}` is not 2-D", t.name);
+        }
+        Ok(Mat {
+            rows: t.dims[0],
+            cols: t.dims[1],
+            data: t.data.clone(),
+        })
+    }
+}
+
+/// The inference engine for one model configuration + weight set.
+pub struct Engine {
+    pub cfg: ModelConfig,
+    /// log(mean_degree + 1): the PNA scaler normalizer δ
+    pub pna_delta: f32,
+    convs: Vec<ConvWeights>,
+    mlp: Vec<(Mat, Vec<f32>)>,
+}
+
+impl Engine {
+    /// Resolve weights against the config's layer structure.
+    pub fn new(cfg: ModelConfig, weights: &Weights, mean_degree: f64) -> Result<Engine> {
+        cfg.validate()?;
+        let mut convs = Vec::with_capacity(cfg.gnn_num_layers);
+        for l in 0..cfg.gnn_num_layers {
+            let key = |suffix: &str| format!("gnn.{l}.{suffix}");
+            let get_mat = |suffix: &str| -> Result<Mat> {
+                Mat::from_tensor(weights.get(&key(suffix))?)
+                    .with_context(|| format!("layer {l} weight {suffix}"))
+            };
+            let get_vec = |suffix: &str| -> Result<Vec<f32>> {
+                Ok(weights.get(&key(suffix))?.data.clone())
+            };
+            convs.push(match cfg.gnn_conv {
+                ConvType::Gcn => ConvWeights::Gcn {
+                    w: get_mat("w")?,
+                    b: get_vec("b")?,
+                },
+                ConvType::Sage => ConvWeights::Sage {
+                    w_root: get_mat("w_root")?,
+                    w_nbr: get_mat("w_nbr")?,
+                    b: get_vec("b")?,
+                },
+                ConvType::Gin => ConvWeights::Gin {
+                    w1: get_mat("w1")?,
+                    b1: get_vec("b1")?,
+                    w2: get_mat("w2")?,
+                    b2: get_vec("b2")?,
+                },
+                ConvType::Pna => ConvWeights::Pna {
+                    w: get_mat("w")?,
+                    b: get_vec("b")?,
+                },
+            });
+        }
+        let mut mlp = Vec::new();
+        for l in 0..cfg.mlp_dims().len() {
+            let w = Mat::from_tensor(weights.get(&format!("mlp.{l}.w"))?)?;
+            let b = weights.get(&format!("mlp.{l}.b"))?.data.clone();
+            mlp.push((w, b));
+        }
+        Ok(Engine {
+            pna_delta: ((mean_degree + 1.0).ln()) as f32,
+            cfg,
+            convs,
+            mlp,
+        })
+    }
+
+    /// f32 forward pass over one graph. `x` is [num_nodes * in_dim].
+    pub fn forward(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
+        self.run(g, x, None)
+    }
+
+    /// True fixed-point forward pass (quantizes inputs, weights, and every
+    /// intermediate to the config's ap_fixed format).
+    pub fn forward_fixed(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
+        self.run(g, x, Some(self.cfg.fpx))
+    }
+
+    /// Forward with the numerics selected by the config.
+    pub fn forward_auto(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
+        match self.cfg.numerics {
+            Numerics::Float => self.forward(g, x),
+            Numerics::Fixed => self.forward_fixed(g, x),
+        }
+    }
+
+    fn run(&self, g: &Graph, x: &[f32], q: Option<FixedPointFormat>) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let n = g.num_nodes;
+        if x.len() != n * cfg.graph_input_dim {
+            bail!(
+                "feature len {} != num_nodes {} * in_dim {}",
+                x.len(),
+                n,
+                cfg.graph_input_dim
+            );
+        }
+        if n > cfg.max_nodes || g.num_edges > cfg.max_edges {
+            bail!("graph exceeds MAX_NODES/MAX_EDGES");
+        }
+
+        let mut h = Embeds {
+            rows: n,
+            cols: cfg.graph_input_dim,
+            data: x.to_vec(),
+        };
+        layers::maybe_quantize(&mut h.data, q);
+
+        for conv in self.convs.iter() {
+            let mut out = self.conv_layer(conv, g, &h, q);
+            // activation
+            for v in out.data.iter_mut() {
+                *v = cfg.gnn_activation.apply(*v);
+            }
+            // skip connection when dims line up (mirrors L2)
+            if cfg.gnn_skip_connections && out.cols == h.cols {
+                for (o, &prev) in out.data.iter_mut().zip(&h.data) {
+                    *o += prev;
+                }
+            }
+            layers::maybe_quantize(&mut out.data, q);
+            h = out;
+        }
+
+        // global pooling
+        let mut pooled = Vec::with_capacity(cfg.pooled_dim());
+        for p in &cfg.global_pooling {
+            pooled.extend(layers::global_pool(&h, *p));
+        }
+        layers::maybe_quantize(&mut pooled, q);
+
+        // MLP head
+        let n_mlp = self.mlp.len();
+        let mut z = pooled;
+        for (l, (w, b)) in self.mlp.iter().enumerate() {
+            let mut out = layers::vec_linear(&z, w, b, q);
+            if l < n_mlp - 1 {
+                for v in out.iter_mut() {
+                    *v = cfg.mlp_activation.apply(*v);
+                }
+            }
+            layers::maybe_quantize(&mut out, q);
+            z = out;
+        }
+        Ok(z)
+    }
+
+    fn conv_layer(
+        &self,
+        conv: &ConvWeights,
+        g: &Graph,
+        h: &Embeds,
+        q: Option<FixedPointFormat>,
+    ) -> Embeds {
+        match conv {
+            ConvWeights::Gcn { w, b } => layers::gcn_conv(g, h, w, b, q),
+            ConvWeights::Sage { w_root, w_nbr, b } => layers::sage_conv(g, h, w_root, w_nbr, b, q),
+            ConvWeights::Gin { w1, b1, w2, b2 } => {
+                layers::gin_conv(g, h, w1, b1, w2, b2, q)
+            }
+            ConvWeights::Pna { w, b } => layers::pna_conv(g, h, w, b, self.pna_delta, q),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::binio::{read_testvecs, read_weights};
+
+    fn artifacts() -> Option<Manifest> {
+        let d = crate::artifacts_dir();
+        d.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(d).unwrap())
+    }
+
+    /// The core cross-language correctness check: the native engine must
+    /// reproduce the L2 JAX model's golden outputs for every conv type.
+    #[test]
+    fn engine_matches_golden_testvecs_all_convs() {
+        let Some(m) = artifacts() else { return };
+        for meta in &m.artifacts {
+            if !meta.name.ends_with("_base") && meta.name != "quickstart_gcn" {
+                continue;
+            }
+            let weights = read_weights(&meta.weights_path).unwrap();
+            let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+            let vecs = read_testvecs(&meta.testvecs_path).unwrap();
+            for (gi, gold) in vecs.graphs.iter().take(6).enumerate() {
+                let pairs: Vec<(u32, u32)> = gold
+                    .edges
+                    .chunks_exact(2)
+                    .map(|c| (c[0] as u32, c[1] as u32))
+                    .collect();
+                let g = Graph::from_coo(gold.num_nodes, &pairs);
+                let out = engine.forward(&g, &gold.x).unwrap();
+                assert_eq!(out.len(), gold.expected.len());
+                for (k, (a, b)) in out.iter().zip(&gold.expected).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 2e-3 + 2e-3 * b.abs(),
+                        "{} graph {gi} out[{k}]: engine {a} vs golden {b}",
+                        meta.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_path_tracks_float_within_format_error() {
+        let Some(m) = artifacts() else { return };
+        let meta = m.find("quickstart_gcn").unwrap();
+        let weights = read_weights(&meta.weights_path).unwrap();
+        let mut cfg = meta.config.clone();
+        cfg.fpx = FixedPointFormat::new(32, 16);
+        let engine = Engine::new(cfg, &weights, meta.mean_degree).unwrap();
+        let vecs = read_testvecs(&meta.testvecs_path).unwrap();
+        for gold in vecs.graphs.iter().take(4) {
+            let pairs: Vec<(u32, u32)> = gold
+                .edges
+                .chunks_exact(2)
+                .map(|c| (c[0] as u32, c[1] as u32))
+                .collect();
+            let g = Graph::from_coo(gold.num_nodes, &pairs);
+            let fx = engine.forward_fixed(&g, &gold.x).unwrap();
+            let fl = engine.forward(&g, &gold.x).unwrap();
+            let mae = crate::util::stats::mae(&fx, &fl);
+            assert!(mae < 0.05, "fixed-vs-float MAE {mae}");
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_graphs_and_bad_feature_len() {
+        let Some(m) = artifacts() else { return };
+        let meta = m.find("quickstart_gcn").unwrap();
+        let weights = read_weights(&meta.weights_path).unwrap();
+        let engine = Engine::new(meta.config.clone(), &weights, 2.0).unwrap();
+        let g = Graph::from_coo(2, &[(0, 1)]);
+        assert!(engine.forward(&g, &[0.0; 3]).is_err()); // wrong x len
+        let big = Graph::from_coo(meta.config.max_nodes + 1, &[]);
+        let x = vec![0.0; (meta.config.max_nodes + 1) * meta.config.graph_input_dim];
+        assert!(engine.forward(&big, &x).is_err());
+    }
+}

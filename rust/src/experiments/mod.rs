@@ -1,0 +1,562 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation (§VIII–IX). Each function prints the paper-shaped rows /
+//! series and returns a JSON report that the CLI writes under `results/`.
+//!
+//! | fn        | paper artifact | claim reproduced                            |
+//! |-----------|----------------|---------------------------------------------|
+//! | [`fig4`]  | Fig. 4         | direct-fit CV MAPE: latency ≈36%, BRAM ≈17% |
+//! | [`fig5`]  | Fig. 5         | 400 RF calls ≪ 400 synthesis runs           |
+//! | [`fig6`]  | Fig. 6         | runtime grid: 5 impls × 4 convs × 5 datasets|
+//! | [`fig7`]  | Fig. 7         | FPGA-Base vs FPGA-Parallel resource usage   |
+//! | [`table4`]| Table IV       | FPGA-Parallel speedups + geomean            |
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::datasets::{self, DatasetStats};
+use crate::engine::Engine;
+use crate::hls::{estimate_resources, GraphStats, U280};
+use crate::model::space::DesignSpace;
+use crate::model::{benchmark_config, ConvType};
+use crate::perfmodel::{
+    self, build_database, comparators, forest_cv_mape, Forest, ForestParams, N_FEATURES,
+};
+use crate::runtime::{Manifest, Runtime};
+use crate::util::binio::read_weights;
+use crate::util::json::Json;
+use crate::util::pool::default_threads;
+use crate::util::stats::{geomean, mape, mean};
+
+/// Shared experiment options.
+#[derive(Debug, Clone, Copy)]
+pub struct Options {
+    pub seed: u64,
+    /// design-database size (paper: 400)
+    pub db_size: usize,
+    /// graphs per (conv, dataset) latency measurement (paper: 1000)
+    pub graphs_per_cell: usize,
+    pub threads: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options {
+            seed: 2023,
+            db_size: 400,
+            graphs_per_cell: 100,
+            threads: default_threads(),
+        }
+    }
+}
+
+fn qm9_stats() -> GraphStats {
+    GraphStats::from_dataset(&datasets::QM9)
+}
+
+// ======================================================================
+// Fig. 4 — performance-model accuracy
+// ======================================================================
+
+pub fn fig4(opt: &Options, with_comparators: bool) -> Result<Json> {
+    println!("== Fig. 4: direct-fit performance model accuracy ==");
+    println!(
+        "building design database: {} configs sampled from the Listing-2 space",
+        opt.db_size
+    );
+    let db = build_database(
+        &DesignSpace::default(),
+        opt.db_size,
+        opt.seed,
+        &qm9_stats(),
+        opt.threads,
+    );
+    let params = ForestParams {
+        seed: opt.seed,
+        ..Default::default()
+    };
+    let lat_mape = forest_cv_mape(&db.features, N_FEATURES, &db.latency_ms, 5, &params, true);
+    let bram_mape = forest_cv_mape(&db.features, N_FEATURES, &db.bram, 5, &params, false);
+    println!("latency  5-fold CV MAPE: {lat_mape:6.2}%   (paper ≈ 36%)");
+    println!("BRAM     5-fold CV MAPE: {bram_mape:6.2}%   (paper ≈ 17%)");
+
+    // scatter pairs (truth, pred) for the plot
+    let scatter = |y: &[f64], log: bool| -> Vec<Json> {
+        perfmodel::forest_cv_pairs(&db.features, N_FEATURES, y, 5, &params, log)
+            .into_iter()
+            .map(|(t, p)| Json::from_f64s(&[t, p]))
+            .collect()
+    };
+
+    let mut out = Json::obj(vec![
+        ("experiment", Json::str("fig4")),
+        ("db_size", Json::num(opt.db_size as f64)),
+        ("latency_cv_mape_pct", Json::num(lat_mape)),
+        ("bram_cv_mape_pct", Json::num(bram_mape)),
+        ("paper_latency_mape_pct", Json::num(36.0)),
+        ("paper_bram_mape_pct", Json::num(17.0)),
+        ("latency_scatter", Json::Arr(scatter(&db.latency_ms, true))),
+        ("bram_scatter", Json::Arr(scatter(&db.bram, false))),
+    ]);
+
+    if with_comparators {
+        println!("-- comparator regressors (paper §VII-B claim: RF wins) --");
+        let comps = comparator_cv(&db.features, &db.latency_ms, opt.seed);
+        for (name, err) in &comps {
+            println!("  {name:<12} latency CV MAPE: {err:6.2}%");
+        }
+        let rf_best = comps.iter().all(|(n, e)| n == "forest" || *e >= lat_mape * 0.9);
+        println!("  RF best-or-competitive: {rf_best}");
+        out.set(
+            "comparators",
+            Json::Obj(
+                comps
+                    .into_iter()
+                    .map(|(n, e)| (n, Json::num(e)))
+                    .collect(),
+            ),
+        );
+    }
+    Ok(out)
+}
+
+/// CV-MAPE of each comparator regressor on the latency target (all fitted
+/// in log space — the same transform the RF gets, so the comparison is
+/// about the model class, not the target scaling).
+pub fn comparator_cv(features: &[f64], y: &[f64], seed: u64) -> Vec<(String, f64)> {
+    let ylog = perfmodel::log_target(y);
+    let y = &ylog[..];
+    let cv = |fit_predict: &dyn Fn(&[f64], &[f64], &[f64]) -> Vec<f64>| -> f64 {
+        let pairs = perfmodel::kfold_cv(features, N_FEATURES, y, 5, seed, |a, b, c| {
+            fit_predict(a, b, c)
+        });
+        let (t, p): (Vec<f64>, Vec<f64>) = pairs
+            .into_iter()
+            .map(|(t, p)| (t.exp(), p.exp()))
+            .unzip();
+        mape(&t, &p)
+    };
+    let mut out = Vec::new();
+    out.push((
+        "forest".to_string(),
+        cv(&|xtr, ytr, xte| {
+            let f = Forest::fit(xtr, N_FEATURES, ytr, &ForestParams { seed, ..Default::default() });
+            xte.chunks_exact(N_FEATURES).map(|r| f.predict(r)).collect()
+        }),
+    ));
+    out.push((
+        "linear".to_string(),
+        cv(&|xtr, ytr, xte| {
+            let m = comparators::Ridge::fit(xtr, N_FEATURES, ytr, 1e-3);
+            xte.chunks_exact(N_FEATURES).map(|r| m.predict(r)).collect()
+        }),
+    ));
+    out.push((
+        "poly2".to_string(),
+        cv(&|xtr, ytr, xte| {
+            let (x2, d2) = comparators::poly2_expand(xtr, N_FEATURES);
+            let m = comparators::Ridge::fit(&x2, d2, ytr, 1e-2);
+            let (xt2, _) = comparators::poly2_expand(xte, N_FEATURES);
+            xt2.chunks_exact(d2).map(|r| m.predict(r)).collect()
+        }),
+    ));
+    out.push((
+        "knn".to_string(),
+        cv(&|xtr, ytr, xte| {
+            let m = comparators::Knn::fit(xtr, N_FEATURES, ytr, 5);
+            xte.chunks_exact(N_FEATURES).map(|r| m.predict(r)).collect()
+        }),
+    ));
+    out.push((
+        "gbt".to_string(),
+        cv(&|xtr, ytr, xte| {
+            let m = comparators::Gbt::fit(xtr, N_FEATURES, ytr, 120, 0.1, 4, seed);
+            xte.chunks_exact(N_FEATURES).map(|r| m.predict(r)).collect()
+        }),
+    ));
+    out
+}
+
+// ======================================================================
+// Fig. 5 — DSE evaluation-cost timeline
+// ======================================================================
+
+pub fn fig5(opt: &Options) -> Result<Json> {
+    println!("== Fig. 5: cumulative evaluation-runtime timeline ({} designs) ==", opt.db_size);
+    let db = build_database(
+        &DesignSpace::default(),
+        opt.db_size,
+        opt.seed,
+        &qm9_stats(),
+        opt.threads,
+    );
+    // fit once, then measure per-call prediction wallclock
+    let pm = perfmodel::PerfModel::fit(&db, &ForestParams { seed: opt.seed, ..Default::default() });
+    let mut fit_call_seconds = Vec::with_capacity(db.len());
+    for cfg in &db.configs {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(pm.predict(cfg));
+        fit_call_seconds.push(t0.elapsed().as_secs_f64());
+    }
+    let rf_total: f64 = fit_call_seconds.iter().sum();
+    let sim_total: f64 = db.sim_seconds.iter().sum();
+    let vitis_total: f64 = db.synth_seconds.iter().sum();
+    let vitis_wall_2day = vitis_total / 32.0; // paper ran n_jobs=32
+    println!("direct-fit model: {} calls in {:.4} s  (avg {:.3} ms; paper avg 1.7 ms)",
+        db.len(), rf_total, 1e3 * mean(&fit_call_seconds));
+    println!("our simulator-synthesis: total {:.3} s (avg {:.3} ms)",
+        sim_total, 1e3 * mean(&db.sim_seconds));
+    println!("modeled Vitis synthesis: total {:.1} h serial, {:.1} h on 32 jobs (avg {:.1} min; paper avg 9.4 min, <2 days)",
+        vitis_total / 3600.0, vitis_wall_2day / 3600.0, mean(&db.synth_seconds) / 60.0);
+    let speedup = vitis_total / rf_total.max(1e-12);
+    println!("direct-fit vs Vitis: {:.1e}× (paper: ~6 orders of magnitude)", speedup);
+
+    // cumulative timelines for the plot
+    let cum = |xs: &[f64]| -> Vec<Json> {
+        let mut acc = 0.0;
+        xs.iter()
+            .map(|&v| {
+                acc += v;
+                Json::num(acc)
+            })
+            .collect()
+    };
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("fig5")),
+        ("designs", Json::num(db.len() as f64)),
+        ("rf_avg_ms", Json::num(1e3 * mean(&fit_call_seconds))),
+        ("sim_avg_ms", Json::num(1e3 * mean(&db.sim_seconds))),
+        ("vitis_avg_min_modeled", Json::num(mean(&db.synth_seconds) / 60.0)),
+        ("speedup_rf_vs_vitis", Json::num(speedup)),
+        ("paper_rf_avg_ms", Json::num(1.7)),
+        ("paper_vitis_avg_min", Json::num(9.4)),
+        ("rf_cumulative_s", Json::Arr(cum(&fit_call_seconds))),
+        ("sim_cumulative_s", Json::Arr(cum(&db.sim_seconds))),
+        ("vitis_cumulative_s_modeled", Json::Arr(cum(&db.synth_seconds))),
+    ]))
+}
+
+// ======================================================================
+// Fig. 6 / Table IV — accelerator performance evaluation
+// ======================================================================
+
+/// Latency of the five implementations for one (conv, dataset) cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub conv: ConvType,
+    pub dataset: &'static str,
+    pub pyg_cpu_s: f64,
+    pub pyg_gpu_s: f64,
+    pub cpp_cpu_s: f64,
+    pub fpga_base_s: f64,
+    pub fpga_parallel_s: f64,
+}
+
+/// Measure/model the full 4×5 grid (needs artifacts for the measured
+/// baselines; cells without an artifact fall back to engine-only).
+pub fn eval_grid(opt: &Options, manifest: &Manifest, rt: &mut Runtime) -> Result<Vec<Cell>> {
+    let mut cells = Vec::new();
+    for ds in datasets::ALL {
+        let stats = GraphStats::from_dataset(ds);
+        let graphs = datasets::gen_dataset(ds, opt.graphs_per_cell, opt.seed, 600, 600);
+        for conv in ConvType::ALL {
+            let base_cfg = benchmark_config(conv, ds, false);
+            let par_cfg = benchmark_config(conv, ds, true);
+
+            // CPP-CPU: native engine w/ the float benchmark weights if the
+            // artifact exists, else fresh deterministic weights via codegen
+            // of the same config (weights don't affect latency).
+            let artifact = manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == format!("bench_{}_{}_base", conv.as_str(), ds.name));
+
+            let (cpp_cpu_s, pyg_cpu_s) = match artifact {
+                Some(meta) => {
+                    let weights = read_weights(&meta.weights_path)?;
+                    let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree)?;
+                    let cpp = baselines::cpp_cpu(&engine, &graphs, 1)?.latency.mean;
+                    let exe = rt.load(meta)?;
+                    let reps = if opt.graphs_per_cell >= 50 { 1 } else { 3 };
+                    let pyg = baselines::pyg_cpu(&exe, &graphs, reps)?.latency.mean;
+                    (cpp, pyg)
+                }
+                // run `make artifacts` with the full grid for measured cells
+                None => (f64::NAN, f64::NAN),
+            };
+            let _ = &stats;
+            let pyg_gpu_s = baselines::pyg_gpu_model(&base_cfg, &stats).latency.mean;
+            let fpga_base_s = baselines::fpga(&base_cfg, &stats).latency.mean;
+            let fpga_parallel_s = baselines::fpga(&par_cfg, &stats).latency.mean;
+            cells.push(Cell {
+                conv,
+                dataset: ds.name,
+                pyg_cpu_s,
+                pyg_gpu_s,
+                cpp_cpu_s,
+                fpga_base_s,
+                fpga_parallel_s,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+pub fn fig6(opt: &Options) -> Result<Json> {
+    println!("== Fig. 6: GNN model runtime across architectures/datasets/implementations ==");
+    let manifest = Manifest::load(crate::artifacts_dir())?;
+    let mut rt = Runtime::cpu()?;
+    let cells = eval_grid(opt, &manifest, &mut rt)?;
+    println!(
+        "{:<6} {:<9} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "conv", "dataset", "PyG-CPU", "PyG-GPU", "CPP-CPU", "FPGA-Base", "FPGA-Parallel"
+    );
+    let ms = |v: f64| {
+        if v.is_nan() {
+            "      n/a".to_string()
+        } else {
+            format!("{:9.3}ms", v * 1e3)
+        }
+    };
+    for c in &cells {
+        println!(
+            "{:<6} {:<9} {:>12} {:>12} {:>12} {:>12} {:>14}",
+            c.conv.as_str(),
+            c.dataset,
+            ms(c.pyg_cpu_s),
+            ms(c.pyg_gpu_s),
+            ms(c.cpp_cpu_s),
+            ms(c.fpga_base_s),
+            ms(c.fpga_parallel_s),
+        );
+    }
+    Ok(cells_to_json("fig6", &cells))
+}
+
+pub fn table4(opt: &Options) -> Result<Json> {
+    println!("== Table IV: FPGA-Parallel speedups over PyG-CPU / PyG-GPU / CPP-CPU ==");
+    let manifest = Manifest::load(crate::artifacts_dir())?;
+    let mut rt = Runtime::cpu()?;
+    let cells = eval_grid(opt, &manifest, &mut rt)?;
+    let mut rows = Vec::new();
+    println!("{:<6} {:>9} {:>9} {:>9}   (paper: GCN 6.46/7.66/3.04 … geomean 6.33/6.87/7.08)",
+        "", "PyG-CPU", "PyG-GPU", "CPP-CPU");
+    let mut all = (Vec::new(), Vec::new(), Vec::new());
+    for conv in ConvType::ALL {
+        let mine: Vec<&Cell> = cells.iter().filter(|c| c.conv == conv).collect();
+        let sp = |f: &dyn Fn(&Cell) -> f64| -> f64 {
+            let ratios: Vec<f64> = mine
+                .iter()
+                .filter(|c| !f(c).is_nan())
+                .map(|c| f(c) / c.fpga_parallel_s)
+                .collect();
+            mean(&ratios)
+        };
+        let (a, b, c) = (
+            sp(&|c| c.pyg_cpu_s),
+            sp(&|c| c.pyg_gpu_s),
+            sp(&|c| c.cpp_cpu_s),
+        );
+        println!("{:<6} {:>8.2}x {:>8.2}x {:>8.2}x", conv.as_str(), a, b, c);
+        all.0.push(a);
+        all.1.push(b);
+        all.2.push(c);
+        rows.push(Json::obj(vec![
+            ("conv", Json::str(conv.as_str())),
+            ("vs_pyg_cpu", Json::num(a)),
+            ("vs_pyg_gpu", Json::num(b)),
+            ("vs_cpp_cpu", Json::num(c)),
+        ]));
+    }
+    let gm = (geomean(&all.0), geomean(&all.1), geomean(&all.2));
+    println!("{:<6} {:>8.2}x {:>8.2}x {:>8.2}x", "geomean", gm.0, gm.1, gm.2);
+    let mut out = cells_to_json("table4", &cells);
+    out.set("rows", Json::Arr(rows));
+    out.set(
+        "geomean",
+        Json::obj(vec![
+            ("vs_pyg_cpu", Json::num(gm.0)),
+            ("vs_pyg_gpu", Json::num(gm.1)),
+            ("vs_cpp_cpu", Json::num(gm.2)),
+        ]),
+    );
+    out.set(
+        "paper_geomean",
+        Json::obj(vec![
+            ("vs_pyg_cpu", Json::num(6.33)),
+            ("vs_pyg_gpu", Json::num(6.87)),
+            ("vs_cpp_cpu", Json::num(7.08)),
+        ]),
+    );
+    Ok(out)
+}
+
+fn cells_to_json(name: &str, cells: &[Cell]) -> Json {
+    Json::obj(vec![
+        ("experiment", Json::str(name)),
+        (
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("conv", Json::str(c.conv.as_str())),
+                            ("dataset", Json::str(c.dataset)),
+                            ("pyg_cpu_s", Json::num(c.pyg_cpu_s)),
+                            ("pyg_gpu_s", Json::num(c.pyg_gpu_s)),
+                            ("cpp_cpu_s", Json::num(c.cpp_cpu_s)),
+                            ("fpga_base_s", Json::num(c.fpga_base_s)),
+                            ("fpga_parallel_s", Json::num(c.fpga_parallel_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+// ======================================================================
+// Fig. 7 — resource usage
+// ======================================================================
+
+pub fn fig7(_opt: &Options) -> Result<Json> {
+    println!("== Fig. 7: FPGA-Base vs FPGA-Parallel resource usage (U280 %) ==");
+    let ds: &DatasetStats = &datasets::QM9;
+    println!(
+        "{:<6} {:<9} {:>8} {:>8} {:>8} {:>8}",
+        "conv", "variant", "BRAM%", "DSP%", "LUT%", "FF%"
+    );
+    let mut rows = Vec::new();
+    for conv in ConvType::ALL {
+        for parallel in [false, true] {
+            let cfg = benchmark_config(conv, ds, parallel);
+            let res = estimate_resources(&cfg);
+            let u = res.utilization(U280);
+            println!(
+                "{:<6} {:<9} {:>7.1}% {:>7.1}% {:>7.1}% {:>7.1}%",
+                conv.as_str(),
+                if parallel { "parallel" } else { "base" },
+                u[0],
+                u[1],
+                u[2],
+                u[3]
+            );
+            rows.push(Json::obj(vec![
+                ("conv", Json::str(conv.as_str())),
+                ("variant", Json::str(if parallel { "parallel" } else { "base" })),
+                ("bram_pct", Json::num(u[0])),
+                ("dsp_pct", Json::num(u[1])),
+                ("lut_pct", Json::num(u[2])),
+                ("ff_pct", Json::num(u[3])),
+                ("bram", Json::num(res.bram18k as f64)),
+                ("dsp", Json::num(res.dsp as f64)),
+            ]));
+        }
+    }
+    println!("(paper claim: head-room in BRAM/DSP across all models)");
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("fig7")),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
+// ======================================================================
+// Ablation — quantization width vs accuracy vs resources (paper §VII-C:
+// "best latency under fixed resource constraints with a trade-off in
+// model accuracy"; extension beyond the paper's fixed <16,10>/<32,16>)
+// ======================================================================
+
+pub fn ablation_quant(_opt: &Options) -> Result<Json> {
+    use crate::model::{FixedPointFormat, Numerics};
+    use crate::testbench::run_engine_fixed;
+    println!("== Ablation: fixed-point width vs MAE vs BRAM (gcn/esol) ==");
+    let manifest = Manifest::load(crate::artifacts_dir())?;
+    let meta = manifest.find("bench_gcn_esol_base")?;
+    let weights = crate::util::binio::read_weights(&meta.weights_path)?;
+    let vecs = crate::util::binio::read_testvecs(&meta.testvecs_path)?;
+    println!("{:<10} {:>12} {:>10} {:>12}", "format", "MAE", "BRAM18K", "latency ms");
+    let mut rows = Vec::new();
+    for (w, i) in [(8u32, 4u32), (10, 6), (12, 8), (16, 10), (20, 12), (24, 14), (32, 16)] {
+        let mut cfg = meta.config.clone();
+        cfg.numerics = Numerics::Fixed;
+        cfg.fpx = FixedPointFormat::new(w, i);
+        let engine = Engine::new(cfg.clone(), &weights, meta.mean_degree)?;
+        let rep = run_engine_fixed(&engine, &vecs)?;
+        let res = estimate_resources(&cfg);
+        let lat = crate::hls::estimate_latency(&cfg, &GraphStats::from_dataset(&datasets::ESOL));
+        println!(
+            "<{:>2},{:>2}>    {:>12.3e} {:>10} {:>12.3}",
+            w, i, rep.mae, res.bram18k, lat.total_seconds * 1e3
+        );
+        rows.push(Json::obj(vec![
+            ("total_bits", Json::num(w as f64)),
+            ("int_bits", Json::num(i as f64)),
+            ("mae", Json::num(rep.mae)),
+            ("bram", Json::num(res.bram18k as f64)),
+            ("latency_ms", Json::num(lat.total_seconds * 1e3)),
+        ]));
+    }
+    println!("(expected: MAE falls monotonically with width; BRAM grows)");
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("ablation_quant")),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
+/// Write a result JSON under `results/`.
+pub fn save(result: &Json, name: &str) -> Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, result.to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> Options {
+        Options {
+            seed: 7,
+            db_size: 80,
+            graphs_per_cell: 4,
+            threads: 4,
+        }
+    }
+
+    #[test]
+    fn fig4_reports_the_papers_shape() {
+        let r = fig4(&tiny_opts(), false).unwrap();
+        let lat = r.get("latency_cv_mape_pct").as_f64().unwrap();
+        let bram = r.get("bram_cv_mape_pct").as_f64().unwrap();
+        assert!(lat > 0.0 && lat < 150.0);
+        assert!(bram < lat, "BRAM should be easier: {bram} vs {lat}");
+        assert_eq!(
+            r.get("latency_scatter").as_array().unwrap().len(),
+            80
+        );
+    }
+
+    #[test]
+    fn fig5_speedup_is_many_orders_of_magnitude() {
+        let r = fig5(&tiny_opts()).unwrap();
+        let sp = r.get("speedup_rf_vs_vitis").as_f64().unwrap();
+        assert!(sp > 1e4, "speedup {sp}");
+    }
+
+    #[test]
+    fn fig7_parallel_uses_more_resources() {
+        let r = fig7(&tiny_opts()).unwrap();
+        let rows = r.get("rows").as_array().unwrap();
+        assert_eq!(rows.len(), 8);
+        for pair in rows.chunks(2) {
+            let base = pair[0].get("dsp_pct").as_f64().unwrap();
+            let par = pair[1].get("dsp_pct").as_f64().unwrap();
+            assert!(par > base);
+            // the paper's head-room claim
+            assert!(par < 100.0);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Fixed-point arithmetic substrate — the `ap_fixed<W, I>` analog
+//! (paper §V-B, §VI-B). Vitis HLS semantics: signed two's-complement,
+//! W total bits, I integer bits, round-to-nearest on quantization,
+//! saturation on overflow.
+//!
+//! The native engine runs its "true quantization" testbench path on these
+//! (paper: "plain C++ code for 'true' quantization simulation"), and the
+//! resource model uses the bit widths for BRAM/DSP packing estimates.
+
+use crate::model::FixedPointFormat;
+
+/// A runtime-parameterized fixed-point value in a Q(I, W-I) format.
+/// Stored as a sign-extended i64 of the W-bit payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Fixed {
+    raw: i64,
+}
+
+/// Shared format logic: min/max raw payloads for a W-bit signed value.
+fn raw_bounds(fmt: FixedPointFormat) -> (i64, i64) {
+    let w = fmt.total_bits;
+    debug_assert!(w >= 1 && w <= 63);
+    let max = (1i64 << (w - 1)) - 1;
+    (-max - 1, max)
+}
+
+impl Fixed {
+    pub const fn zero() -> Fixed {
+        Fixed { raw: 0 }
+    }
+
+    pub fn raw(self) -> i64 {
+        self.raw
+    }
+
+    pub fn from_raw(raw: i64) -> Fixed {
+        Fixed { raw }
+    }
+
+    /// Quantize an f64 (round to nearest, ties away from zero; saturate).
+    pub fn from_f64(x: f64, fmt: FixedPointFormat) -> Fixed {
+        let (lo, hi) = raw_bounds(fmt);
+        let scaled = x * (1u64 << fmt.frac_bits()) as f64;
+        if !scaled.is_finite() {
+            return Fixed {
+                raw: if scaled.is_sign_negative() { lo } else { hi },
+            };
+        }
+        let r = scaled.round();
+        let raw = if r <= lo as f64 {
+            lo
+        } else if r >= hi as f64 {
+            hi
+        } else {
+            r as i64
+        };
+        Fixed { raw }
+    }
+
+    pub fn from_f32(x: f32, fmt: FixedPointFormat) -> Fixed {
+        Fixed::from_f64(x as f64, fmt)
+    }
+
+    pub fn to_f64(self, fmt: FixedPointFormat) -> f64 {
+        self.raw as f64 / (1u64 << fmt.frac_bits()) as f64
+    }
+
+    pub fn to_f32(self, fmt: FixedPointFormat) -> f32 {
+        self.to_f64(fmt) as f32
+    }
+
+    /// Saturating add (same format).
+    pub fn add(self, rhs: Fixed, fmt: FixedPointFormat) -> Fixed {
+        let (lo, hi) = raw_bounds(fmt);
+        Fixed {
+            raw: (self.raw.saturating_add(rhs.raw)).clamp(lo, hi),
+        }
+    }
+
+    /// Saturating subtract.
+    pub fn sub(self, rhs: Fixed, fmt: FixedPointFormat) -> Fixed {
+        let (lo, hi) = raw_bounds(fmt);
+        Fixed {
+            raw: (self.raw.saturating_sub(rhs.raw)).clamp(lo, hi),
+        }
+    }
+
+    /// Saturating multiply: (a*b) >> frac with round-to-nearest.
+    pub fn mul(self, rhs: Fixed, fmt: FixedPointFormat) -> Fixed {
+        let (lo, hi) = raw_bounds(fmt);
+        let prod = self.raw as i128 * rhs.raw as i128;
+        let shift = fmt.frac_bits();
+        let half = 1i128 << (shift.max(1) - 1);
+        let rounded = if shift == 0 {
+            prod
+        } else if prod >= 0 {
+            (prod + half) >> shift
+        } else {
+            -((-prod + half) >> shift)
+        };
+        Fixed {
+            raw: rounded.clamp(lo as i128, hi as i128) as i64,
+        }
+    }
+
+    /// Division via f64 (the HLS library also implements div as multi-cycle;
+    /// bit-exactness to ap_fixed division is not required by the testbench).
+    pub fn div(self, rhs: Fixed, fmt: FixedPointFormat) -> Fixed {
+        if rhs.raw == 0 {
+            let (lo, hi) = raw_bounds(fmt);
+            return Fixed {
+                raw: if self.raw < 0 { lo } else { hi },
+            };
+        }
+        Fixed::from_f64(self.to_f64(fmt) / rhs.to_f64(fmt), fmt)
+    }
+}
+
+/// Quantize an f32 slice to the fixed grid and back (fake-quant round trip,
+/// numerically identical to `python/compile/quant.quantize`).
+pub fn quantize_slice(xs: &[f32], fmt: FixedPointFormat) -> Vec<f32> {
+    xs.iter()
+        .map(|&x| Fixed::from_f32(x, fmt).to_f32(fmt))
+        .collect()
+}
+
+/// Machine epsilon of the format (one LSB).
+pub fn lsb(fmt: FixedPointFormat) -> f64 {
+    1.0 / (1u64 << fmt.frac_bits()) as f64
+}
+
+/// Representable range [lo, hi] of the format.
+pub fn range(fmt: FixedPointFormat) -> (f64, f64) {
+    let (lo, hi) = raw_bounds(fmt);
+    (
+        lo as f64 * lsb(fmt),
+        hi as f64 * lsb(fmt),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    const Q16_10: FixedPointFormat = FixedPointFormat { total_bits: 16, int_bits: 10 };
+    const Q32_16: FixedPointFormat = FixedPointFormat { total_bits: 32, int_bits: 16 };
+
+    #[test]
+    fn roundtrip_exact_on_grid() {
+        for v in [-3.5, -1.0, 0.0, 0.015625, 2.75, 511.0] {
+            let f = Fixed::from_f64(v, Q32_16);
+            assert_eq!(f.to_f64(Q32_16), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn quantization_rounds_to_nearest() {
+        // Q16.10 → frac = 6 bits → lsb = 1/64
+        let f = Fixed::from_f64(0.02, Q16_10); // 0.02*64 = 1.28 → 1 → 1/64
+        assert!((f.to_f64(Q16_10) - 1.0 / 64.0).abs() < 1e-12);
+        let g = Fixed::from_f64(0.024, Q16_10); // 1.536 → 2 → 2/64
+        assert!((g.to_f64(Q16_10) - 2.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturates_at_format_range() {
+        let (lo, hi) = range(Q16_10);
+        assert_eq!(Fixed::from_f64(1e9, Q16_10).to_f64(Q16_10), hi);
+        assert_eq!(Fixed::from_f64(-1e9, Q16_10).to_f64(Q16_10), lo);
+        assert!((hi - 512.0).abs() < 0.02 && (lo + 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_mul_match_reals_within_lsb() {
+        let a = Fixed::from_f64(1.25, Q32_16);
+        let b = Fixed::from_f64(-2.5, Q32_16);
+        assert_eq!(a.add(b, Q32_16).to_f64(Q32_16), -1.25);
+        assert_eq!(a.mul(b, Q32_16).to_f64(Q32_16), -3.125);
+        assert_eq!(a.sub(b, Q32_16).to_f64(Q32_16), 3.75);
+    }
+
+    #[test]
+    fn division_including_by_zero() {
+        let a = Fixed::from_f64(3.0, Q32_16);
+        let b = Fixed::from_f64(2.0, Q32_16);
+        assert_eq!(a.div(b, Q32_16).to_f64(Q32_16), 1.5);
+        let (lo, hi) = range(Q32_16);
+        assert_eq!(a.div(Fixed::zero(), Q32_16).to_f64(Q32_16), hi);
+        assert_eq!(b.sub(a, Q32_16).div(Fixed::zero(), Q32_16).to_f64(Q32_16), lo);
+    }
+
+    #[test]
+    fn property_quantization_error_bounded_by_half_lsb() {
+        check("fixed-quant-error", 300, 1000, |rng, _| {
+            let fmt = if rng.bool(0.5) { Q16_10 } else { Q32_16 };
+            let (lo, hi) = range(fmt);
+            let x = rng.range_f64(lo, hi);
+            let q = Fixed::from_f64(x, fmt).to_f64(fmt);
+            let err = (q - x).abs();
+            if err <= lsb(fmt) / 2.0 + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("x={x} q={q} err={err} > lsb/2"))
+            }
+        });
+    }
+
+    #[test]
+    fn property_mul_error_bounded() {
+        check("fixed-mul-error", 200, 1000, |rng, _| {
+            let x = rng.range_f64(-10.0, 10.0);
+            let y = rng.range_f64(-10.0, 10.0);
+            let a = Fixed::from_f64(x, Q32_16);
+            let b = Fixed::from_f64(y, Q32_16);
+            let got = a.mul(b, Q32_16).to_f64(Q32_16);
+            let want = x * y;
+            // input quantization (±½lsb each) propagates: |err| ≲ ½lsb*(|x|+|y|+1)
+            let bound = lsb(Q32_16) * (x.abs() + y.abs() + 1.0);
+            if (got - want).abs() <= bound {
+                Ok(())
+            } else {
+                Err(format!("{x}*{y}: got {got}, want {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_slice_matches_python_fake_quant() {
+        // mirrors quant.quantize: round(x*2^f)/2^f with clamp
+        let fmt = Q16_10;
+        let xs = [0.1f32, -0.37, 511.99, -600.0, 0.0078125];
+        let got = quantize_slice(&xs, fmt);
+        let scale = 64.0f64;
+        for (&x, &q) in xs.iter().zip(&got) {
+            let want = ((x as f64 * scale).round() / scale).clamp(-512.0, 512.0 - 1.0 / scale);
+            assert!((q as f64 - want).abs() < 1e-9, "{x}: {q} vs {want}");
+        }
+    }
+}

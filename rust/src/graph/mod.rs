@@ -1,0 +1,203 @@
+//! Graph substrate (paper §V-B "Graph Data" / "Degree + Neighbor Table").
+//!
+//! COO input graphs plus the derived tables the accelerator computes on the
+//! fly: in/out-degree tables, the neighbor table (sources grouped by
+//! destination), and the neighbor-offset table. The Rust native engine and
+//! the HLS simulator both consume this exact structure; the L2 JAX model
+//! derives the same tables inside the artifact (`model.build_tables`).
+
+use crate::runtime::GraphInput;
+
+/// A directed graph in COO form with derived CSR-style neighbor tables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    /// (src, dst) pairs, in input order
+    pub edges: Vec<(u32, u32)>,
+    /// neighbor table: source node of each edge, grouped by destination
+    pub nbr: Vec<u32>,
+    /// neighbor offsets: node i's neighbors are nbr[offsets[i]..offsets[i+1]]
+    pub offsets: Vec<u32>,
+    /// in-degree per node
+    pub in_deg: Vec<u32>,
+    /// out-degree per node
+    pub out_deg: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from COO pairs — the same two-loop construction the paper's
+    /// accelerator performs at runtime (counting sort by destination).
+    pub fn from_coo(num_nodes: usize, edges: &[(u32, u32)]) -> Graph {
+        let num_edges = edges.len();
+        let mut in_deg = vec![0u32; num_nodes];
+        let mut out_deg = vec![0u32; num_nodes];
+        for &(s, d) in edges {
+            debug_assert!((s as usize) < num_nodes && (d as usize) < num_nodes);
+            out_deg[s as usize] += 1;
+            in_deg[d as usize] += 1;
+        }
+        // offsets = exclusive prefix sum of in-degree
+        let mut offsets = vec![0u32; num_nodes + 1];
+        for i in 0..num_nodes {
+            offsets[i + 1] = offsets[i] + in_deg[i];
+        }
+        // fill neighbor table grouped by destination (stable by input order)
+        let mut cursor = offsets[..num_nodes].to_vec();
+        let mut nbr = vec![0u32; num_edges];
+        for &(s, d) in edges {
+            let c = &mut cursor[d as usize];
+            nbr[*c as usize] = s;
+            *c += 1;
+        }
+        Graph {
+            num_nodes,
+            num_edges,
+            edges: edges.to_vec(),
+            nbr,
+            offsets,
+            in_deg,
+            out_deg,
+        }
+    }
+
+    pub fn in_degree(&self, node: usize) -> u32 {
+        self.in_deg[node]
+    }
+
+    /// Neighbor slice (sources) of a destination node.
+    pub fn neighbors(&self, node: usize) -> &[u32] {
+        let lo = self.offsets[node] as usize;
+        let hi = self.offsets[node + 1] as usize;
+        &self.nbr[lo..hi]
+    }
+
+    pub fn mean_degree(&self) -> f64 {
+        if self.num_nodes == 0 {
+            return 0.0;
+        }
+        self.num_edges as f64 / self.num_nodes as f64
+    }
+
+    /// Pad node features + COO into the accelerator's static wire layout.
+    pub fn to_input(&self, x: &[f32], node_dim: usize, max_nodes: usize, max_edges: usize) -> GraphInput {
+        assert_eq!(x.len(), self.num_nodes * node_dim);
+        assert!(self.num_nodes <= max_nodes && self.num_edges <= max_edges);
+        let mut xp = vec![0f32; max_nodes * node_dim];
+        xp[..x.len()].copy_from_slice(x);
+        let mut edges = vec![0i32; max_edges * 2];
+        for (i, &(s, d)) in self.edges.iter().enumerate() {
+            edges[i * 2] = s as i32;
+            edges[i * 2 + 1] = d as i32;
+        }
+        GraphInput {
+            x: xp,
+            edges,
+            num_nodes: self.num_nodes as i32,
+            num_edges: self.num_edges as i32,
+        }
+    }
+
+    /// Structural invariant check (used by tests and the quickcheck harness).
+    pub fn check(&self) -> bool {
+        if self.offsets.len() != self.num_nodes + 1 {
+            return false;
+        }
+        if *self.offsets.last().unwrap() as usize != self.num_edges {
+            return false;
+        }
+        if self.nbr.len() != self.num_edges {
+            return false;
+        }
+        // offsets monotone, slice widths = in_deg
+        for i in 0..self.num_nodes {
+            if self.offsets[i] > self.offsets[i + 1] {
+                return false;
+            }
+            if self.offsets[i + 1] - self.offsets[i] != self.in_deg[i] {
+                return false;
+            }
+        }
+        // every edge appears exactly once in its destination's slice
+        let mut counts = vec![0u32; self.num_nodes];
+        for &(_, d) in &self.edges {
+            counts[d as usize] += 1;
+        }
+        counts == self.in_deg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn diamond() -> Graph {
+        // 0→1, 0→2, 1→3, 2→3, 3→0
+        Graph::from_coo(4, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)])
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = diamond();
+        assert_eq!(g.in_deg, vec![1, 1, 1, 2]);
+        assert_eq!(g.out_deg, vec![2, 1, 1, 1]);
+        assert_eq!(g.neighbors(3), &[1, 2]);
+        assert_eq!(g.neighbors(0), &[3]);
+        assert!(g.check());
+    }
+
+    #[test]
+    fn empty_and_isolated() {
+        let g = Graph::from_coo(3, &[]);
+        assert_eq!(g.num_edges, 0);
+        assert!(g.neighbors(1).is_empty());
+        assert!(g.check());
+    }
+
+    #[test]
+    fn neighbor_table_stable_by_input_order() {
+        let g = Graph::from_coo(3, &[(2, 0), (1, 0), (0, 0)]);
+        assert_eq!(g.neighbors(0), &[2, 1, 0]);
+    }
+
+    #[test]
+    fn padding_layout_matches_wire_format() {
+        let g = diamond();
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect(); // node_dim 2
+        let input = g.to_input(&x, 2, 6, 8);
+        assert_eq!(input.x.len(), 12);
+        assert_eq!(&input.x[..8], x.as_slice());
+        assert_eq!(input.x[8..], [0.0; 4]);
+        assert_eq!(input.edges[..4], [0, 1, 0, 2]);
+        assert_eq!(input.edges[10..], [0, 0, 0, 0, 0, 0]);
+        assert_eq!(input.num_nodes, 4);
+        assert_eq!(input.num_edges, 5);
+    }
+
+    #[test]
+    fn property_random_graphs_check() {
+        let mut rng = Rng::seed_from(99);
+        for case in 0..200 {
+            let n = rng.range(1, 40);
+            let e = rng.range(0, 80);
+            let edges: Vec<(u32, u32)> = (0..e)
+                .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+                .collect();
+            let g = Graph::from_coo(n, &edges);
+            assert!(g.check(), "case {case} failed: n={n} e={e}");
+            // neighbor multiset equals edge sources per destination
+            for node in 0..n {
+                let mut want: Vec<u32> = edges
+                    .iter()
+                    .filter(|&&(_, d)| d as usize == node)
+                    .map(|&(s, _)| s)
+                    .collect();
+                let mut got = g.neighbors(node).to_vec();
+                want.sort_unstable();
+                got.sort_unstable();
+                assert_eq!(got, want);
+            }
+        }
+    }
+}

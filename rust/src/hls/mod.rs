@@ -1,0 +1,37 @@
+//! Accelerator simulator — the Vitis-HLS-synthesis substitute (DESIGN.md
+//! S3). Combines the loop-level latency model ([`schedule`]) with the
+//! resource binding model ([`resources`]) into the same report surface the
+//! paper's `run_vitis_hls_synthesis()` returns: worst-case latency at
+//! 300 MHz plus BRAM/DSP/LUT/FF usage on the U280. [`synth`] wraps it in a
+//! "synthesis run" with a modeled wallclock (for the Fig. 5 timeline).
+
+pub mod resources;
+pub mod schedule;
+pub mod synth;
+
+pub use resources::{estimate as estimate_resources, Capacity, Resources, U280};
+pub use schedule::{estimate as estimate_latency, GraphStats, LatencyReport, CLOCK_HZ};
+pub use synth::{run_synthesis, SynthReport};
+
+use crate::model::ModelConfig;
+
+/// One-call "synthesis": latency + resources for a config and trip counts.
+pub fn simulate(cfg: &ModelConfig, stats: &GraphStats) -> (LatencyReport, Resources) {
+    (schedule::estimate(cfg, stats), resources::estimate(cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::model::{benchmark_config, ConvType};
+
+    #[test]
+    fn simulate_combines_both_models() {
+        let cfg = benchmark_config(ConvType::Sage, &datasets::ESOL, true);
+        let stats = GraphStats::from_dataset(&datasets::ESOL);
+        let (lat, res) = simulate(&cfg, &stats);
+        assert!(lat.total_cycles > 0.0);
+        assert!(res.bram18k > 0 && res.dsp > 0);
+    }
+}

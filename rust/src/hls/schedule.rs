@@ -1,0 +1,274 @@
+//! Loop-level latency model of the generated accelerator (the "Vitis HLS
+//! post-synthesis latency report" substitute — DESIGN.md substitution S3).
+//!
+//! Schedules the exact loop nests the code generator emits (Fig. 3 message
+//! passing per conv layer, tiled linear layers, single-pass aggregations,
+//! pooling, MLP head) with II = 1 pipelines, explicit unroll factors from
+//! the config's parallelism parameters, and pipeline fill depths. Loop trip
+//! counts come from the `num_nodes_guess` / `num_edges_guess` /
+//! `degree_guess` the paper's `Project` takes (§III-B) — Vitis applies them
+//! as LOOP_TRIPCOUNT asserts, which is what its reported estimate uses.
+
+use crate::model::{Activation, ConvType, ModelConfig, Numerics};
+
+/// Trip-count guesses for the latency report (paper: avg/median stats).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GraphStats {
+    pub num_nodes: f64,
+    pub num_edges: f64,
+    pub degree: f64,
+}
+
+impl GraphStats {
+    pub fn from_dataset(ds: &crate::datasets::DatasetStats) -> GraphStats {
+        GraphStats {
+            num_nodes: ds.mean_nodes,
+            num_edges: ds.mean_edges,
+            degree: ds.mean_degree,
+        }
+    }
+}
+
+/// Clock of the deployed kernels (paper §VII-A: 300 MHz on the U280).
+pub const CLOCK_HZ: f64 = 300.0e6;
+
+/// Pipeline fill depth of a Vitis II=1 loop (load-compute-store stages).
+const PIPE_DEPTH: f64 = 12.0;
+/// Extra depth of a floating-point accumulate (fadd latency at 300 MHz).
+const FLOAT_ACC_DEPTH: f64 = 8.0;
+/// Fixed per-stage handshake/start overhead in a dataflow region.
+const STAGE_OVERHEAD: f64 = 24.0;
+/// Loop-carried II of the Welford partial-aggregation update: the
+/// mean/M2 recurrence serializes on the floating adder/divider (Vitis
+/// schedules ~10-14 cycles for the fadd→fmul→fadd chain at 300 MHz);
+/// fixed-point shortens the chain but cannot reach II=1 either.
+const AGG_II_FLOAT: f64 = 12.0;
+const AGG_II_FIXED: f64 = 5.0;
+
+#[inline]
+fn ceil_div(a: f64, b: f64) -> f64 {
+    (a / b).ceil()
+}
+
+/// Latency breakdown per dataflow stage (cycles).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyReport {
+    pub table_build: f64,
+    pub input_copy: f64,
+    pub conv_layers: Vec<f64>,
+    pub pooling: f64,
+    pub mlp: f64,
+    pub total_cycles: f64,
+    pub total_seconds: f64,
+}
+
+/// Cycles of one tiled linear apply for a single node embedding:
+/// (K → M) with unroll p_in × p_out; II=1 over the tile loop.
+fn linear_node_cycles(k: f64, m: f64, p_in: f64, p_out: f64, float: bool) -> f64 {
+    let tiles = ceil_div(k, p_in) * ceil_div(m, p_out);
+    let acc = if float { FLOAT_ACC_DEPTH } else { 1.0 };
+    // float accumulation serializes the K-dim reduction by the fadd latency
+    // unless the tile loop is long enough to interleave; model the ceiling.
+    tiles.max(ceil_div(k, p_in) * acc) + PIPE_DEPTH
+}
+
+/// Cycles for one conv layer over the whole graph (Fig. 3 dataflow).
+fn conv_layer_cycles(
+    cfg: &ModelConfig,
+    layer: usize,
+    k: f64,
+    m: f64,
+    s: &GraphStats,
+) -> f64 {
+    let float = matches!(cfg.numerics, Numerics::Float);
+    let p_in = if layer == 0 { cfg.gnn_p_in } else { cfg.gnn_p_hidden } as f64;
+    let p_out = if layer + 1 == cfg.gnn_num_layers {
+        cfg.gnn_p_out
+    } else {
+        cfg.gnn_p_hidden
+    } as f64;
+
+    // Per node: gather + stream each neighbor embedding through the
+    // partial-aggregation update, p_in lanes per cycle. The update's
+    // loop-carried recurrence bounds the II (see AGG_II_*).
+    let lane_cycles = ceil_div(k, p_in);
+    let agg_ii = if float { AGG_II_FLOAT } else { AGG_II_FIXED };
+    let agg_units: f64 = if cfg.gnn_conv == ConvType::Pna { 4.0 } else { 1.0 };
+    // Welford/min/max updates share lanes; PNA's four aggregators are
+    // generated as parallel units but share the embedding stream port.
+    let per_neighbor = (lane_cycles * agg_units.sqrt().max(1.0)).max(1.0) * agg_ii;
+    let gather = 2.0 + s.degree * per_neighbor;
+
+    // Apply / transform φ,γ per node.
+    let apply = match cfg.gnn_conv {
+        ConvType::Gcn => linear_node_cycles(k, m, p_in, p_out, float),
+        ConvType::Sage => 2.0 * linear_node_cycles(k, m, p_in, p_out, float),
+        ConvType::Gin => {
+            linear_node_cycles(k, m, p_in, p_out, float)
+                + linear_node_cycles(m, m, p_out.min(p_in.max(1.0)), p_out, float)
+        }
+        ConvType::Pna => {
+            // scalers over 12 aggregated lanes + one wide linear (13K → M)
+            let scale = ceil_div(12.0 * k, p_in);
+            scale + linear_node_cycles(13.0 * k, m, p_in, p_out, float)
+        }
+    };
+    let act = activation_cycles(cfg.gnn_activation);
+    let skip = if cfg.gnn_skip_connections { ceil_div(m, p_out) } else { 0.0 };
+
+    s.num_nodes * (gather + apply + act + skip) + STAGE_OVERHEAD
+}
+
+fn activation_cycles(a: Activation) -> f64 {
+    match a {
+        Activation::Relu => 1.0,
+        Activation::Sigmoid => 14.0,
+        Activation::Tanh => 16.0,
+        Activation::Gelu => 28.0,
+    }
+}
+
+/// Full latency estimate for one graph (stats = trip-count guesses).
+pub fn estimate(cfg: &ModelConfig, s: &GraphStats) -> LatencyReport {
+    let float = matches!(cfg.numerics, Numerics::Float);
+
+    // Degree + neighbor-table computation (§V-B): two passes over edges +
+    // one over nodes, II=1 each. These loops have *static* MAX bounds in
+    // the generated code (the arrays are MAX-sized), so the worst-case
+    // report Vitis emits — which Table IV/Fig. 6 quote — uses MAX trip
+    // counts, not the per-dataset guesses (those only apply where the
+    // generator inserts LOOP_TRIPCOUNT on the dynamic node loops).
+    let max_n = cfg.max_nodes as f64;
+    let max_e = cfg.max_edges as f64;
+    let table_build = 2.0 * max_e + max_n + 2.0 * PIPE_DEPTH + STAGE_OVERHEAD;
+
+    // Input copy/quantize stage: MAX_NODES x ceil(in_dim / p_in).
+    let input_copy =
+        max_n * ceil_div(cfg.graph_input_dim as f64, cfg.gnn_p_in as f64) + PIPE_DEPTH;
+
+    let mut conv_layers = Vec::with_capacity(cfg.gnn_num_layers);
+    for (l, (din, dout)) in cfg.layer_dims().iter().enumerate() {
+        conv_layers.push(conv_layer_cycles(cfg, l, *din as f64, *dout as f64, s));
+    }
+
+    // Global pooling: stream the (MAX-sized) embedding buffer once per
+    // pooling op bank; the add/max accumulators carry a dependence chain
+    // like the partial aggregations.
+    let f_out = cfg.gnn_out_dim as f64;
+    let pool_lanes = (cfg.gnn_p_out as f64).max(1.0);
+    let acc = if float { FLOAT_ACC_DEPTH } else { 2.0 };
+    let pooling = max_n * ceil_div(f_out, pool_lanes) * acc.sqrt().max(1.0)
+        + PIPE_DEPTH
+        + STAGE_OVERHEAD;
+
+    // MLP head on the pooled vector (single embedding).
+    let mut mlp = STAGE_OVERHEAD;
+    for (din, dout) in cfg.mlp_dims() {
+        mlp += linear_node_cycles(
+            din as f64,
+            dout as f64,
+            cfg.mlp_p_in as f64,
+            cfg.mlp_p_hidden as f64,
+            float,
+        ) + activation_cycles(cfg.mlp_activation);
+    }
+
+    // Dataflow region: single-invocation latency is the sum of the chained
+    // process latencies (FIFO streaming removes buffers, §V).
+    let total_cycles: f64 =
+        table_build + input_copy + conv_layers.iter().sum::<f64>() + pooling + mlp;
+    LatencyReport {
+        table_build,
+        input_copy,
+        pooling,
+        mlp,
+        total_seconds: total_cycles / CLOCK_HZ,
+        total_cycles,
+        conv_layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::model::benchmark_config;
+
+    fn stats() -> GraphStats {
+        GraphStats::from_dataset(&datasets::HIV)
+    }
+
+    #[test]
+    fn parallel_is_meaningfully_faster_than_base() {
+        for conv in ConvType::ALL {
+            let base = estimate(&benchmark_config(conv, &datasets::HIV, false), &stats());
+            let par = estimate(&benchmark_config(conv, &datasets::HIV, true), &stats());
+            let speedup = base.total_cycles / par.total_cycles;
+            assert!(
+                speedup > 2.0 && speedup < 200.0,
+                "{conv:?}: speedup {speedup}"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_scales_with_graph_size() {
+        let cfg = benchmark_config(ConvType::Gcn, &datasets::HIV, true);
+        let small = estimate(&cfg, &GraphStats { num_nodes: 10.0, num_edges: 20.0, degree: 2.0 });
+        let big = estimate(&cfg, &GraphStats { num_nodes: 100.0, num_edges: 200.0, degree: 2.0 });
+        // dynamic (node-loop) stages scale ~10x; MAX-bound stages are flat
+        let dyn_small: f64 = small.conv_layers.iter().sum();
+        let dyn_big: f64 = big.conv_layers.iter().sum();
+        assert!(dyn_big > 5.0 * dyn_small);
+        assert!(big.total_cycles > 1.3 * small.total_cycles);
+    }
+
+    #[test]
+    fn pna_slowest_gcn_fastest_at_equal_parallelism() {
+        let lat = |conv| {
+            estimate(&benchmark_config(conv, &datasets::HIV, false), &stats()).total_cycles
+        };
+        assert!(lat(ConvType::Pna) > lat(ConvType::Sage));
+        assert!(lat(ConvType::Sage) > lat(ConvType::Gcn) * 0.99);
+        assert!(lat(ConvType::Gin) > lat(ConvType::Gcn));
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let cfg = benchmark_config(ConvType::Gin, &datasets::ESOL, true);
+        let r = estimate(&cfg, &stats());
+        let sum = r.table_build + r.input_copy + r.conv_layers.iter().sum::<f64>() + r.pooling + r.mlp;
+        assert!((sum - r.total_cycles).abs() < 1e-6);
+        assert_eq!(r.conv_layers.len(), cfg.gnn_num_layers);
+        assert!(r.total_seconds > 0.0);
+    }
+
+    #[test]
+    fn deeper_models_cost_more() {
+        let mut a = benchmark_config(ConvType::Gcn, &datasets::HIV, true);
+        let mut b = a.clone();
+        a.gnn_num_layers = 1;
+        b.gnn_num_layers = 4;
+        // worst-case MAX-bound stages are depth-independent, so the total
+        // grows sublinearly with depth — but must still grow substantially
+        assert!(
+            estimate(&b, &stats()).total_cycles > 1.5 * estimate(&a, &stats()).total_cycles
+        );
+    }
+
+    #[test]
+    fn magnitudes_are_sub_10ms_like_the_paper() {
+        // Fig. 6's FPGA latencies sit in the 1e-4..1e-2 s band.
+        for conv in ConvType::ALL {
+            for parallel in [true, false] {
+                let cfg = benchmark_config(conv, &datasets::QM9, parallel);
+                let r = estimate(&cfg, &GraphStats::from_dataset(&datasets::QM9));
+                assert!(
+                    r.total_seconds > 1e-5 && r.total_seconds < 5e-2,
+                    "{conv:?} parallel={parallel}: {}s",
+                    r.total_seconds
+                );
+            }
+        }
+    }
+}

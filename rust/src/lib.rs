@@ -1,0 +1,41 @@
+//! # GNNBuilder — generic GNN accelerator generation, simulation, and
+//! # optimization (FPL 2023 reproduction)
+//!
+//! Rust + JAX + Pallas three-layer reproduction of Abi-Karam & Hao,
+//! *"GNNBuilder: An Automated Framework for Generic Graph Neural Network
+//! Accelerator Generation, Simulation, and Optimization"*, FPL 2023.
+//!
+//! Layer map (DESIGN.md has the full inventory):
+//! - **L1/L2** live in `python/compile/` (Pallas kernels + JAX model),
+//!   AOT-lowered once into `artifacts/*.hlo.txt`;
+//! - **L3** is this crate: the GNNBuilder framework itself — model IR
+//!   ([`model`]), HLS code generation ([`codegen`]), the accelerator
+//!   simulator ([`hls`]), direct-fit performance models ([`perfmodel`]),
+//!   design-space exploration ([`dse`]), the PJRT deployment runtime
+//!   ([`runtime`]), baselines ([`baselines`]), the fixed/float testbench
+//!   ([`testbench`]), and the serving coordinator ([`coordinator`]).
+
+pub mod baselines;
+pub mod bench;
+pub mod codegen;
+pub mod coordinator;
+pub mod datasets;
+pub mod dse;
+pub mod engine;
+pub mod experiments;
+pub mod fixed;
+pub mod graph;
+pub mod hls;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod testbench;
+pub mod util;
+
+/// Path to the artifacts directory (env override → `artifacts/`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("GNNB_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,242 @@
+//! `gnnbuilder` launcher: codegen, synthesis simulation, testbench, DSE,
+//! experiment regeneration, and the serving coordinator — the push-button
+//! CLI over the library (paper §III's end-to-end workflow).
+
+use anyhow::{bail, Result};
+
+use gnnbuilder::codegen::Project;
+use gnnbuilder::datasets;
+use gnnbuilder::dse;
+use gnnbuilder::experiments::{self, Options};
+use gnnbuilder::hls::{self, GraphStats};
+use gnnbuilder::model::space::DesignSpace;
+use gnnbuilder::model::{benchmark_config, ConvType};
+use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
+use gnnbuilder::util::cli::Args;
+
+const USAGE: &str = "gnnbuilder — generic GNN accelerator generation, simulation, and optimization
+
+USAGE:
+  gnnbuilder experiments [--all|--fig4|--fig5|--fig6|--fig7|--table4|--ablation] [--comparators]
+                         [--db-size N] [--graphs N] [--seed N]
+  gnnbuilder codegen --conv gcn|gin|sage|pna --dataset qm9|esol|freesolv|lipo|hiv
+                     [--parallel] [--out DIR] [--run-testbench]
+  gnnbuilder synth   --conv ... --dataset ... [--parallel]    (simulated Vitis HLS)
+  gnnbuilder dse     [--budget N] [--max-bram N] [--conv ...] [--db-size N] [--seed N]
+  gnnbuilder list                                             (artifacts in manifest)
+";
+
+fn main() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    match cmd.as_str() {
+        "experiments" => cmd_experiments(),
+        "codegen" => cmd_codegen(),
+        "synth" => cmd_synth(),
+        "dse" => cmd_dse(),
+        "list" => cmd_list(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn parse_conv(args: &Args) -> Result<ConvType> {
+    ConvType::parse(args.get_or("conv", "gcn"))
+}
+
+fn parse_dataset(args: &Args) -> Result<&'static datasets::DatasetStats> {
+    let name = args.get_or("dataset", "hiv");
+    datasets::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown dataset `{name}`"))
+}
+
+fn cmd_experiments() -> Result<()> {
+    let flags = [
+        "all", "fig4", "fig5", "fig6", "fig7", "table4", "comparators", "ablation",
+    ];
+    let args = Args::from_env(2, &flags)?;
+    let opt = Options {
+        seed: args.get_u64("seed", 2023)?,
+        db_size: args.get_usize("db-size", 400)?,
+        graphs_per_cell: args.get_usize("graphs", 100)?,
+        threads: args.get_usize("threads", gnnbuilder::util::pool::default_threads())?,
+    };
+    args.reject_unknown()?;
+    let all = args.flag("all")
+        || flags[1..6].iter().all(|f| !args.flag(f)) && !args.flag("ablation");
+    if all || args.flag("fig4") {
+        let r = experiments::fig4(&opt, args.flag("comparators") || all)?;
+        experiments::save(&r, "fig4")?;
+    }
+    if all || args.flag("fig5") {
+        let r = experiments::fig5(&opt)?;
+        experiments::save(&r, "fig5")?;
+    }
+    if all || args.flag("fig6") {
+        let r = experiments::fig6(&opt)?;
+        experiments::save(&r, "fig6")?;
+    }
+    if all || args.flag("table4") {
+        let r = experiments::table4(&opt)?;
+        experiments::save(&r, "table4")?;
+    }
+    if all || args.flag("fig7") {
+        let r = experiments::fig7(&opt)?;
+        experiments::save(&r, "fig7")?;
+    }
+    if args.flag("all") || args.flag("ablation") {
+        let r = experiments::ablation_quant(&opt)?;
+        experiments::save(&r, "ablation_quant")?;
+    }
+    Ok(())
+}
+
+fn cmd_codegen() -> Result<()> {
+    let args = Args::from_env(2, &["parallel", "run-testbench"])?;
+    let conv = parse_conv(&args)?;
+    let ds = parse_dataset(&args)?;
+    let cfg = benchmark_config(conv, ds, args.flag("parallel"));
+    let out_default = format!("build/{}", cfg.name);
+    let out = args.get_or("out", &out_default).to_string();
+    args.reject_unknown()?;
+    let proj = Project::new(cfg.clone(), &out, GraphStats::from_dataset(ds))?;
+    proj.gen_all()?;
+    println!("generated HLS project for `{}` in {out}/", cfg.name);
+    for f in [
+        "gnnb_kernels.h",
+        "model_kernel.h",
+        "model_kernel.cpp",
+        "testbench.cpp",
+        "Makefile",
+        "run_hls.tcl",
+        "host.cpp",
+    ] {
+        println!("  {out}/{f}");
+    }
+    if args.flag("run-testbench") {
+        let manifest = gnnbuilder::runtime::Manifest::load(gnnbuilder::artifacts_dir())?;
+        let name = format!("bench_{}_{}_base", conv.as_str(), ds.name);
+        let meta = manifest.find(&name)?;
+        let tb = proj.build_and_run_testbench(&meta.weights_path, &meta.testvecs_path)?;
+        println!(
+            "testbench: {} graphs, MAE {:.3e}, mean runtime {:.3} ms",
+            tb.graphs,
+            tb.mae,
+            tb.mean_runtime_seconds * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_synth() -> Result<()> {
+    let args = Args::from_env(2, &["parallel"])?;
+    let conv = parse_conv(&args)?;
+    let ds = parse_dataset(&args)?;
+    let seed = args.get_u64("seed", 1)?;
+    args.reject_unknown()?;
+    let cfg = benchmark_config(conv, ds, args.flag("parallel"));
+    let rep = hls::run_synthesis(&cfg, &GraphStats::from_dataset(ds), seed);
+    println!("== simulated Vitis HLS synthesis: {} ==", rep.name);
+    println!(
+        "latency: {:.0} cycles @300MHz = {:.3} ms (tables {:.0}, convs {:?}, pool {:.0}, mlp {:.0})",
+        rep.latency.total_cycles,
+        rep.latency.total_seconds * 1e3,
+        rep.latency.table_build,
+        rep.latency.conv_layers.iter().map(|c| *c as u64).collect::<Vec<_>>(),
+        rep.latency.pooling,
+        rep.latency.mlp
+    );
+    let u = rep.resources.utilization(hls::U280);
+    println!(
+        "resources: BRAM18K {} ({:.1}%), DSP {} ({:.1}%), LUT {} ({:.1}%), FF {} ({:.1}%)",
+        rep.resources.bram18k, u[0], rep.resources.dsp, u[1], rep.resources.lut, u[2],
+        rep.resources.ff, u[3]
+    );
+    println!(
+        "wallclock: simulator {:.3} ms; modeled Vitis run {:.1} min",
+        rep.sim_seconds * 1e3,
+        rep.modeled_synth_seconds / 60.0
+    );
+    Ok(())
+}
+
+fn cmd_dse() -> Result<()> {
+    let args = Args::from_env(2, &[])?;
+    let budget = args.get_usize("budget", 20_000)?;
+    let max_bram = args.get_f64("max-bram", hls::U280.bram18k as f64)?;
+    let db_size = args.get_usize("db-size", 400)?;
+    let seed = args.get_u64("seed", 2023)?;
+    let conv = args.get("conv").map(ConvType::parse).transpose()?;
+    args.reject_unknown()?;
+
+    let space = DesignSpace::default();
+    println!("design space: {} configurations", space.size());
+    println!("fitting direct-fit models on a {db_size}-design database…");
+    let db = build_database(
+        &space,
+        db_size,
+        seed,
+        &GraphStats::from_dataset(&datasets::QM9),
+        gnnbuilder::util::pool::default_threads(),
+    );
+    let pm = PerfModel::fit(&db, &ForestParams { seed, ..Default::default() });
+    let constraints = dse::Constraints {
+        max_bram,
+        fix_conv: conv,
+        min_hidden_dim: None,
+    };
+    let r = dse::random_search(&space, &pm, &constraints, budget, seed);
+    println!(
+        "evaluated {} configs ({} feasible) in {:.2} s",
+        r.evaluated, r.feasible, r.wall_seconds
+    );
+    match r.best {
+        Some(best) => {
+            let c = &best.config;
+            println!(
+                "best (predicted): latency {:.3} ms, BRAM {:.0}",
+                best.pred_latency_ms, best.pred_bram
+            );
+            println!(
+                "  {} hidden={} out={} layers={} skip={} | p=({},{},{}) mlp p=({},{},{})",
+                c.gnn_conv.as_str(),
+                c.gnn_hidden_dim,
+                c.gnn_out_dim,
+                c.gnn_num_layers,
+                c.gnn_skip_connections,
+                c.gnn_p_in,
+                c.gnn_p_hidden,
+                c.gnn_p_out,
+                c.mlp_p_in,
+                c.mlp_p_hidden,
+                c.mlp_p_out
+            );
+            // verify the pick against the "synthesizer"
+            let rep = hls::run_synthesis(c, &GraphStats::from_dataset(&datasets::QM9), seed);
+            println!(
+                "  verified by simulator: latency {:.3} ms, BRAM {}",
+                rep.latency.total_seconds * 1e3,
+                rep.resources.bram18k
+            );
+        }
+        None => bail!("no feasible configuration under the constraints"),
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let manifest = gnnbuilder::runtime::Manifest::load(gnnbuilder::artifacts_dir())?;
+    println!("{} artifacts:", manifest.artifacts.len());
+    for a in &manifest.artifacts {
+        println!(
+            "  {:<28} conv={:<5} dataset={:<9} in={} out={} max_nodes={}",
+            a.name,
+            a.config.gnn_conv.as_str(),
+            a.dataset,
+            a.config.graph_input_dim,
+            a.config.output_dim,
+            a.config.max_nodes
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,495 @@
+//! Model IR — the Rust twin of `python/compile/configs.py` (paper §III-B).
+//!
+//! `ModelConfig` is what the paper's "compiler front-end" extracts from the
+//! PyTorch module: layer types, dims, activation, pooling, parallelism
+//! factors, and numerics. Every downstream system consumes this IR: the HLS
+//! code generator, the accelerator simulator, the perf models, the DSE
+//! engine, and the native engine. JSON round-trips against the python side
+//! via `artifacts/manifest.json`.
+
+pub mod space;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Graph-convolution layer family (paper Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvType {
+    Gcn,
+    Gin,
+    Sage,
+    Pna,
+}
+
+impl ConvType {
+    pub const ALL: [ConvType; 4] = [ConvType::Gcn, ConvType::Gin, ConvType::Sage, ConvType::Pna];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ConvType::Gcn => "gcn",
+            ConvType::Gin => "gin",
+            ConvType::Sage => "sage",
+            ConvType::Pna => "pna",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gcn" => ConvType::Gcn,
+            "gin" => ConvType::Gin,
+            "sage" => ConvType::Sage,
+            "pna" => ConvType::Pna,
+            other => bail!("unknown conv type `{other}`"),
+        })
+    }
+}
+
+/// Activation function (paper §V-B "Activations").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Relu,
+    Sigmoid,
+    Tanh,
+    Gelu,
+}
+
+impl Activation {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+            Activation::Gelu => "gelu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "relu" => Activation::Relu,
+            "sigmoid" => Activation::Sigmoid,
+            "tanh" => Activation::Tanh,
+            "gelu" => Activation::Gelu,
+            other => bail!("unknown activation `{other}`"),
+        })
+    }
+
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Tanh => x.tanh(),
+            Activation::Gelu => {
+                // tanh approximation, same as jax.nn.gelu default
+                let c = (2.0f32 / std::f32::consts::PI).sqrt();
+                0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+            }
+        }
+    }
+}
+
+/// Global pooling operator (paper §V-B "Global Pooling").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pooling {
+    Add,
+    Mean,
+    Max,
+}
+
+impl Pooling {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Pooling::Add => "add",
+            Pooling::Mean => "mean",
+            Pooling::Max => "max",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "add" => Pooling::Add,
+            "mean" => Pooling::Mean,
+            "max" => Pooling::Max,
+            other => bail!("unknown pooling `{other}`"),
+        })
+    }
+}
+
+/// ap_fixed<W, I> analog (paper §VI-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedPointFormat {
+    pub total_bits: u32,
+    pub int_bits: u32,
+}
+
+impl FixedPointFormat {
+    pub fn new(total_bits: u32, int_bits: u32) -> Self {
+        assert!(total_bits >= int_bits && total_bits <= 64);
+        FixedPointFormat { total_bits, int_bits }
+    }
+
+    pub fn frac_bits(&self) -> u32 {
+        self.total_bits - self.int_bits
+    }
+}
+
+impl Default for FixedPointFormat {
+    fn default() -> Self {
+        FixedPointFormat::new(32, 16)
+    }
+}
+
+/// Numerics mode of a generated accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Numerics {
+    Float,
+    Fixed,
+}
+
+/// The full GNNBuilder model IR (python twin: `configs.ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub graph_input_dim: usize,
+    pub graph_input_edge_dim: usize,
+    pub gnn_conv: ConvType,
+    pub gnn_hidden_dim: usize,
+    pub gnn_out_dim: usize,
+    pub gnn_num_layers: usize,
+    pub gnn_activation: Activation,
+    pub gnn_skip_connections: bool,
+    pub global_pooling: Vec<Pooling>,
+    pub mlp_hidden_dim: usize,
+    pub mlp_num_layers: usize,
+    pub mlp_activation: Activation,
+    pub output_dim: usize,
+    pub gnn_p_in: usize,
+    pub gnn_p_hidden: usize,
+    pub gnn_p_out: usize,
+    pub mlp_p_in: usize,
+    pub mlp_p_hidden: usize,
+    pub mlp_p_out: usize,
+    pub numerics: Numerics,
+    pub fpx: FixedPointFormat,
+    pub max_nodes: usize,
+    pub max_edges: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            name: "model".into(),
+            graph_input_dim: 9,
+            graph_input_edge_dim: 0,
+            gnn_conv: ConvType::Gcn,
+            gnn_hidden_dim: 128,
+            gnn_out_dim: 64,
+            gnn_num_layers: 3,
+            gnn_activation: Activation::Relu,
+            gnn_skip_connections: true,
+            global_pooling: vec![Pooling::Add, Pooling::Mean, Pooling::Max],
+            mlp_hidden_dim: 64,
+            mlp_num_layers: 3,
+            mlp_activation: Activation::Relu,
+            output_dim: 1,
+            gnn_p_in: 1,
+            gnn_p_hidden: 1,
+            gnn_p_out: 1,
+            mlp_p_in: 1,
+            mlp_p_hidden: 1,
+            mlp_p_out: 1,
+            numerics: Numerics::Float,
+            fpx: FixedPointFormat::default(),
+            max_nodes: 600,
+            max_edges: 600,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.gnn_num_layers == 0 {
+            bail!("gnn_num_layers must be >= 1");
+        }
+        if self.global_pooling.is_empty() {
+            bail!("at least one global pooling required for graph-level tasks");
+        }
+        if self.graph_input_dim == 0 || self.output_dim == 0 {
+            bail!("zero-width input or output");
+        }
+        if self.max_nodes == 0 || self.max_edges == 0 {
+            bail!("max_nodes/max_edges must be positive");
+        }
+        for p in [
+            self.gnn_p_in,
+            self.gnn_p_hidden,
+            self.gnn_p_out,
+            self.mlp_p_in,
+            self.mlp_p_hidden,
+            self.mlp_p_out,
+        ] {
+            if p == 0 || (p & (p - 1)) != 0 {
+                bail!("parallelism factors must be powers of two, got {p}");
+            }
+        }
+        if self.fpx.total_bits < self.fpx.int_bits || self.fpx.total_bits > 64 {
+            bail!("invalid fixed-point format {:?}", self.fpx);
+        }
+        Ok(())
+    }
+
+    /// Pooled embedding width entering the MLP head.
+    pub fn pooled_dim(&self) -> usize {
+        self.gnn_out_dim * self.global_pooling.len()
+    }
+
+    /// (in, out) dims of each GNN backbone layer.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::with_capacity(self.gnn_num_layers);
+        let mut d = self.graph_input_dim;
+        for i in 0..self.gnn_num_layers {
+            let out = if i + 1 == self.gnn_num_layers {
+                self.gnn_out_dim
+            } else {
+                self.gnn_hidden_dim
+            };
+            dims.push((d, out));
+            d = out;
+        }
+        dims
+    }
+
+    /// (in, out) dims of each MLP-head linear (hidden layers + final).
+    pub fn mlp_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::with_capacity(self.mlp_num_layers + 1);
+        let mut d = self.pooled_dim();
+        for _ in 0..self.mlp_num_layers {
+            dims.push((d, self.mlp_hidden_dim));
+            d = self.mlp_hidden_dim;
+        }
+        dims.push((d, self.output_dim));
+        dims
+    }
+
+    /// Total parameter count (matches `model.init_params` tensor sizes).
+    pub fn param_count(&self) -> usize {
+        let mut total = 0usize;
+        for (din, dout) in self.layer_dims() {
+            total += match self.gnn_conv {
+                ConvType::Gcn => din * dout + dout,
+                ConvType::Sage => 2 * din * dout + dout,
+                ConvType::Gin => din * dout + dout + dout * dout + dout,
+                ConvType::Pna => (din * 13) * dout + dout,
+            };
+        }
+        for (din, dout) in self.mlp_dims() {
+            total += din * dout + dout;
+        }
+        total
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("graph_input_dim", Json::num(self.graph_input_dim as f64)),
+            ("graph_input_edge_dim", Json::num(self.graph_input_edge_dim as f64)),
+            ("gnn_conv", Json::str(self.gnn_conv.as_str())),
+            ("gnn_hidden_dim", Json::num(self.gnn_hidden_dim as f64)),
+            ("gnn_out_dim", Json::num(self.gnn_out_dim as f64)),
+            ("gnn_num_layers", Json::num(self.gnn_num_layers as f64)),
+            ("gnn_activation", Json::str(self.gnn_activation.as_str())),
+            ("gnn_skip_connections", Json::Bool(self.gnn_skip_connections)),
+            (
+                "global_pooling",
+                Json::Arr(
+                    self.global_pooling
+                        .iter()
+                        .map(|p| Json::str(p.as_str()))
+                        .collect(),
+                ),
+            ),
+            ("mlp_hidden_dim", Json::num(self.mlp_hidden_dim as f64)),
+            ("mlp_num_layers", Json::num(self.mlp_num_layers as f64)),
+            ("mlp_activation", Json::str(self.mlp_activation.as_str())),
+            ("output_dim", Json::num(self.output_dim as f64)),
+            ("gnn_p_in", Json::num(self.gnn_p_in as f64)),
+            ("gnn_p_hidden", Json::num(self.gnn_p_hidden as f64)),
+            ("gnn_p_out", Json::num(self.gnn_p_out as f64)),
+            ("mlp_p_in", Json::num(self.mlp_p_in as f64)),
+            ("mlp_p_hidden", Json::num(self.mlp_p_hidden as f64)),
+            ("mlp_p_out", Json::num(self.mlp_p_out as f64)),
+            (
+                "float_or_fixed",
+                Json::str(match self.numerics {
+                    Numerics::Float => "float",
+                    Numerics::Fixed => "fixed",
+                }),
+            ),
+            (
+                "fpx",
+                Json::obj(vec![
+                    ("total_bits", Json::num(self.fpx.total_bits as f64)),
+                    ("int_bits", Json::num(self.fpx.int_bits as f64)),
+                ]),
+            ),
+            ("max_nodes", Json::num(self.max_nodes as f64)),
+            ("max_edges", Json::num(self.max_edges as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = ModelConfig {
+            name: j.get("name").as_str()?.to_string(),
+            graph_input_dim: j.get("graph_input_dim").as_usize()?,
+            graph_input_edge_dim: j.get("graph_input_edge_dim").as_usize().unwrap_or(0),
+            gnn_conv: ConvType::parse(j.get("gnn_conv").as_str()?)?,
+            gnn_hidden_dim: j.get("gnn_hidden_dim").as_usize()?,
+            gnn_out_dim: j.get("gnn_out_dim").as_usize()?,
+            gnn_num_layers: j.get("gnn_num_layers").as_usize()?,
+            gnn_activation: Activation::parse(j.get("gnn_activation").as_str()?)?,
+            gnn_skip_connections: j.get("gnn_skip_connections").as_bool()?,
+            global_pooling: j
+                .get("global_pooling")
+                .as_array()?
+                .iter()
+                .map(|p| Pooling::parse(p.as_str()?))
+                .collect::<Result<_>>()?,
+            mlp_hidden_dim: j.get("mlp_hidden_dim").as_usize()?,
+            mlp_num_layers: j.get("mlp_num_layers").as_usize()?,
+            mlp_activation: Activation::parse(
+                j.get("mlp_activation").as_str().unwrap_or("relu"),
+            )?,
+            output_dim: j.get("output_dim").as_usize()?,
+            gnn_p_in: j.get("gnn_p_in").as_usize()?,
+            gnn_p_hidden: j.get("gnn_p_hidden").as_usize()?,
+            gnn_p_out: j.get("gnn_p_out").as_usize()?,
+            mlp_p_in: j.get("mlp_p_in").as_usize()?,
+            mlp_p_hidden: j.get("mlp_p_hidden").as_usize()?,
+            mlp_p_out: j.get("mlp_p_out").as_usize()?,
+            numerics: match j.get("float_or_fixed").as_str().unwrap_or("float") {
+                "fixed" => Numerics::Fixed,
+                _ => Numerics::Float,
+            },
+            fpx: FixedPointFormat::new(
+                j.get("fpx").get("total_bits").as_usize().unwrap_or(32) as u32,
+                j.get("fpx").get("int_bits").as_usize().unwrap_or(16) as u32,
+            ),
+            max_nodes: j.get("max_nodes").as_usize()?,
+            max_edges: j.get("max_edges").as_usize()?,
+        };
+        if cfg.global_pooling.is_empty() {
+            cfg.global_pooling = vec![Pooling::Add];
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// The Table IV / Fig 6 / Fig 7 benchmark architecture (twin of
+/// `configs.benchmark_config`).
+pub fn benchmark_config(conv: ConvType, dataset: &crate::datasets::DatasetStats, parallel: bool) -> ModelConfig {
+    let (p_hidden, p_out, fpx, numerics) = if parallel {
+        let (ph, po) = if conv == ConvType::Pna { (8, 8) } else { (16, 8) };
+        (ph, po, FixedPointFormat::new(16, 10), Numerics::Fixed)
+    } else {
+        (1, 1, FixedPointFormat::new(32, 16), Numerics::Float)
+    };
+    ModelConfig {
+        name: format!(
+            "bench_{}_{}_{}",
+            conv.as_str(),
+            dataset.name,
+            if parallel { "parallel" } else { "base" }
+        ),
+        graph_input_dim: dataset.node_dim,
+        graph_input_edge_dim: dataset.edge_dim,
+        gnn_conv: conv,
+        gnn_p_in: 1,
+        gnn_p_hidden: p_hidden,
+        gnn_p_out: p_out,
+        mlp_p_in: if parallel { 8 } else { 1 },
+        mlp_p_hidden: if parallel { 8 } else { 1 },
+        mlp_p_out: 1,
+        numerics,
+        fpx,
+        output_dim: dataset.output_dim,
+        ..ModelConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        ModelConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let mut cfg = ModelConfig::default();
+        cfg.gnn_conv = ConvType::Pna;
+        cfg.numerics = Numerics::Fixed;
+        cfg.fpx = FixedPointFormat::new(16, 10);
+        cfg.gnn_p_hidden = 8;
+        let j = cfg.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn layer_dims_chain() {
+        let cfg = ModelConfig {
+            graph_input_dim: 9,
+            gnn_hidden_dim: 128,
+            gnn_out_dim: 64,
+            gnn_num_layers: 3,
+            ..ModelConfig::default()
+        };
+        assert_eq!(cfg.layer_dims(), vec![(9, 128), (128, 128), (128, 64)]);
+        assert_eq!(cfg.pooled_dim(), 192);
+        assert_eq!(cfg.mlp_dims()[0].0, 192);
+        assert_eq!(cfg.mlp_dims().last().unwrap().1, 1);
+    }
+
+    #[test]
+    fn single_layer_goes_straight_to_out_dim() {
+        let cfg = ModelConfig {
+            gnn_num_layers: 1,
+            ..ModelConfig::default()
+        };
+        assert_eq!(cfg.layer_dims(), vec![(9, 64)]);
+    }
+
+    #[test]
+    fn rejects_non_pow2_parallelism() {
+        let cfg = ModelConfig {
+            gnn_p_hidden: 3,
+            ..ModelConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn param_count_positive_and_ordered() {
+        let mk = |conv| ModelConfig {
+            gnn_conv: conv,
+            ..ModelConfig::default()
+        };
+        let gcn = mk(ConvType::Gcn).param_count();
+        let sage = mk(ConvType::Sage).param_count();
+        let pna = mk(ConvType::Pna).param_count();
+        assert!(gcn > 0 && sage > gcn && pna > sage);
+    }
+
+    #[test]
+    fn activations_apply_sane() {
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert!((Activation::Sigmoid.apply(0.0) - 0.5).abs() < 1e-6);
+        assert!(Activation::Tanh.apply(100.0) <= 1.0);
+        assert!(Activation::Gelu.apply(3.0) > 2.9);
+    }
+}

@@ -1,0 +1,201 @@
+//! The hardware-performance-model design space (paper Listing 2, §VIII-A).
+//!
+//! 4 convs × 3 hidden × 3 out × 4 layers × 2 skip × 3 mlp-hidden × 4
+//! mlp-layers × 3⁶ parallelism choices ≈ 2.5M configurations — far too many
+//! to synthesize exhaustively, which is exactly why the paper sparsely
+//! samples 400 designs and fits direct-fit models. `DesignSpace` provides
+//! deterministic enumeration, indexing, and seeded random sampling.
+
+use crate::datasets::DatasetStats;
+use crate::model::{benchmark_config, ConvType, FixedPointFormat, ModelConfig, Numerics};
+use crate::util::rng::Rng;
+
+/// Axis values from Listing 2.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub convs: Vec<ConvType>,
+    pub gnn_hidden_dim: Vec<usize>,
+    pub gnn_out_dim: Vec<usize>,
+    pub gnn_num_layers: Vec<usize>,
+    pub gnn_skip_connections: Vec<bool>,
+    pub mlp_hidden_dim: Vec<usize>,
+    pub mlp_num_layers: Vec<usize>,
+    pub gnn_p_in: Vec<usize>,
+    pub gnn_p_hidden: Vec<usize>,
+    pub gnn_p_out: Vec<usize>,
+    pub mlp_p_in: Vec<usize>,
+    pub mlp_p_hidden: Vec<usize>,
+    pub mlp_p_out: Vec<usize>,
+    /// dataset whose dims/stats parameterize the synthesized kernels (QM9)
+    pub input_dim: usize,
+    pub output_dim: usize,
+}
+
+impl Default for DesignSpace {
+    fn default() -> Self {
+        DesignSpace {
+            convs: ConvType::ALL.to_vec(),
+            gnn_hidden_dim: vec![64, 128, 256],
+            gnn_out_dim: vec![64, 128, 256],
+            gnn_num_layers: vec![1, 2, 3, 4],
+            gnn_skip_connections: vec![true, false],
+            mlp_hidden_dim: vec![64, 128, 256],
+            mlp_num_layers: vec![1, 2, 3, 4],
+            gnn_p_in: vec![2, 4, 8],
+            gnn_p_hidden: vec![2, 4, 8],
+            gnn_p_out: vec![2, 4, 8],
+            mlp_p_in: vec![2, 4, 8],
+            mlp_p_hidden: vec![2, 4, 8],
+            mlp_p_out: vec![2, 4, 8],
+            input_dim: 11,  // QM9 node features
+            output_dim: 19, // QM9 targets
+        }
+    }
+}
+
+impl DesignSpace {
+    /// Total configuration count (product of axis cardinalities).
+    pub fn size(&self) -> u64 {
+        [
+            self.convs.len(),
+            self.gnn_hidden_dim.len(),
+            self.gnn_out_dim.len(),
+            self.gnn_num_layers.len(),
+            self.gnn_skip_connections.len(),
+            self.mlp_hidden_dim.len(),
+            self.mlp_num_layers.len(),
+            self.gnn_p_in.len(),
+            self.gnn_p_hidden.len(),
+            self.gnn_p_out.len(),
+            self.mlp_p_in.len(),
+            self.mlp_p_hidden.len(),
+            self.mlp_p_out.len(),
+        ]
+        .iter()
+        .map(|&n| n as u64)
+        .product()
+    }
+
+    /// The i-th configuration in mixed-radix order (deterministic).
+    pub fn index(&self, mut i: u64) -> ModelConfig {
+        debug_assert!(i < self.size());
+        let mut pick = |n: usize| -> usize {
+            let v = (i % n as u64) as usize;
+            i /= n as u64;
+            v
+        };
+        let conv = self.convs[pick(self.convs.len())];
+        let gnn_hidden = self.gnn_hidden_dim[pick(self.gnn_hidden_dim.len())];
+        let gnn_out = self.gnn_out_dim[pick(self.gnn_out_dim.len())];
+        let layers = self.gnn_num_layers[pick(self.gnn_num_layers.len())];
+        let skip = self.gnn_skip_connections[pick(self.gnn_skip_connections.len())];
+        let mlp_hidden = self.mlp_hidden_dim[pick(self.mlp_hidden_dim.len())];
+        let mlp_layers = self.mlp_num_layers[pick(self.mlp_num_layers.len())];
+        let gnn_p_in = self.gnn_p_in[pick(self.gnn_p_in.len())];
+        let gnn_p_hidden = self.gnn_p_hidden[pick(self.gnn_p_hidden.len())];
+        let gnn_p_out = self.gnn_p_out[pick(self.gnn_p_out.len())];
+        let mlp_p_in = self.mlp_p_in[pick(self.mlp_p_in.len())];
+        let mlp_p_hidden = self.mlp_p_hidden[pick(self.mlp_p_hidden.len())];
+        let mlp_p_out = self.mlp_p_out[pick(self.mlp_p_out.len())];
+        ModelConfig {
+            name: format!("dse_{conv:?}_{gnn_hidden}x{layers}"),
+            graph_input_dim: self.input_dim,
+            gnn_conv: conv,
+            gnn_hidden_dim: gnn_hidden,
+            gnn_out_dim: gnn_out,
+            gnn_num_layers: layers,
+            gnn_skip_connections: skip,
+            mlp_hidden_dim: mlp_hidden,
+            mlp_num_layers: mlp_layers,
+            output_dim: self.output_dim,
+            gnn_p_in,
+            gnn_p_hidden,
+            gnn_p_out,
+            mlp_p_in,
+            mlp_p_hidden,
+            mlp_p_out,
+            numerics: Numerics::Fixed,
+            fpx: FixedPointFormat::new(32, 16),
+            ..ModelConfig::default()
+        }
+    }
+
+    /// `count` distinct configurations, seeded (the paper's 400-design DB).
+    pub fn sample(&self, count: usize, seed: u64) -> Vec<ModelConfig> {
+        let mut rng = Rng::seed_from(seed);
+        let size = self.size();
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::with_capacity(count);
+        while out.len() < count {
+            let i = rng.next_u64() % size;
+            if seen.insert(i) {
+                out.push(self.index(i));
+            }
+        }
+        out
+    }
+}
+
+/// The 20 Table-IV benchmark configurations (4 convs × 5 datasets).
+pub fn benchmark_suite<'a>(
+    datasets: impl IntoIterator<Item = &'a DatasetStats>,
+    parallel: bool,
+) -> Vec<ModelConfig> {
+    let mut out = Vec::new();
+    for ds in datasets {
+        for conv in ConvType::ALL {
+            out.push(benchmark_config(conv, ds, parallel));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+
+    #[test]
+    fn size_matches_listing2_product() {
+        let s = DesignSpace::default();
+        // 4*3*3*4*2*3*4 * 3^6 = 3456 * 729
+        assert_eq!(s.size(), 3456 * 729);
+    }
+
+    #[test]
+    fn index_is_bijective_prefix() {
+        let s = DesignSpace::default();
+        let a = s.index(0);
+        let b = s.index(1);
+        assert_ne!(a.gnn_conv, b.gnn_conv); // first axis varies fastest
+        let last = s.index(s.size() - 1);
+        last.validate().unwrap();
+    }
+
+    #[test]
+    fn sampled_configs_distinct_and_valid() {
+        let s = DesignSpace::default();
+        let configs = s.sample(400, 2023);
+        assert_eq!(configs.len(), 400);
+        for c in &configs {
+            c.validate().unwrap();
+            assert!(s.gnn_hidden_dim.contains(&c.gnn_hidden_dim));
+            assert!(s.gnn_p_in.contains(&c.gnn_p_in));
+        }
+        // determinism
+        let again = s.sample(400, 2023);
+        assert_eq!(configs, again);
+        let other = s.sample(400, 2024);
+        assert_ne!(configs, other);
+    }
+
+    #[test]
+    fn benchmark_suite_is_4x5() {
+        let suite = benchmark_suite(datasets::ALL.iter().copied(), true);
+        assert_eq!(suite.len(), 20);
+        assert!(suite.iter().all(|c| c.numerics == Numerics::Fixed));
+        for c in &suite {
+            c.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! Comparator regressors for the §VIII-A model-selection claim: "random
+//! forests outperformed linear/polynomial models, support vector machines,
+//! and gradient boosting tree models in avoiding overfitting". We implement
+//! ridge-regularized linear and degree-2 polynomial regression (normal
+//! equations), k-nearest-neighbors, and a least-squares gradient-boosted
+//! tree ensemble, all exposing the same fit/predict surface so the Fig. 4
+//! harness can CV them side by side.
+
+use crate::util::rng::Rng;
+
+use super::tree::{Tree, TreeParams};
+
+/// Ridge linear regression via normal equations (XᵀX + λI)β = Xᵀy.
+#[derive(Debug, Clone)]
+pub struct Ridge {
+    beta: Vec<f64>, // [n_features + 1], last = intercept
+    n_features: usize,
+}
+
+impl Ridge {
+    pub fn fit(x: &[f64], n_features: usize, y: &[f64], lambda: f64) -> Ridge {
+        let n = y.len();
+        let d = n_features + 1; // + intercept
+        // build A = XᵀX + λI, b = Xᵀy with augmented column of ones
+        let mut a = vec![0.0f64; d * d];
+        let mut b = vec![0.0f64; d];
+        let feat = |i: usize, j: usize| -> f64 {
+            if j < n_features {
+                x[i * n_features + j]
+            } else {
+                1.0
+            }
+        };
+        for i in 0..n {
+            for j in 0..d {
+                let fj = feat(i, j);
+                b[j] += fj * y[i];
+                for k in j..d {
+                    a[j * d + k] += fj * feat(i, k);
+                }
+            }
+        }
+        for j in 0..d {
+            for k in 0..j {
+                a[j * d + k] = a[k * d + j];
+            }
+            if j < n_features {
+                a[j * d + j] += lambda;
+            }
+        }
+        let beta = solve(&mut a, &mut b, d);
+        Ridge { beta, n_features }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.n_features);
+        let mut v = self.beta[self.n_features];
+        for (b, x) in self.beta.iter().zip(row) {
+            v += b * x;
+        }
+        v
+    }
+}
+
+/// Gaussian elimination with partial pivoting; returns x for Ax = b.
+fn solve(a: &mut [f64], b: &mut [f64], d: usize) -> Vec<f64> {
+    for col in 0..d {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..d {
+            if a[r * d + col].abs() > a[piv * d + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * d + col].abs() < 1e-12 {
+            continue; // singular direction; leave as-is (ridge prevents this)
+        }
+        if piv != col {
+            for k in 0..d {
+                a.swap(col * d + k, piv * d + k);
+            }
+            b.swap(col, piv);
+        }
+        let diag = a[col * d + col];
+        for r in 0..d {
+            if r == col {
+                continue;
+            }
+            let factor = a[r * d + col] / diag;
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..d {
+                a[r * d + k] -= factor * a[col * d + k];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    (0..d)
+        .map(|i| {
+            let diag = a[i * d + i];
+            if diag.abs() < 1e-12 {
+                0.0
+            } else {
+                b[i] / diag
+            }
+        })
+        .collect()
+}
+
+/// Degree-2 polynomial expansion (features + squares + pairwise products).
+pub fn poly2_expand(x: &[f64], n_features: usize) -> (Vec<f64>, usize) {
+    let n = x.len() / n_features;
+    let d2 = n_features + n_features * (n_features + 1) / 2;
+    let mut out = Vec::with_capacity(n * d2);
+    for i in 0..n {
+        let row = &x[i * n_features..(i + 1) * n_features];
+        out.extend_from_slice(row);
+        for j in 0..n_features {
+            for k in j..n_features {
+                out.push(row[j] * row[k]);
+            }
+        }
+    }
+    (out, d2)
+}
+
+/// k-nearest-neighbors regressor (z-scored features, mean of k targets).
+#[derive(Debug, Clone)]
+pub struct Knn {
+    x: Vec<f64>,
+    y: Vec<f64>,
+    n_features: usize,
+    k: usize,
+    mean: Vec<f64>,
+    std: Vec<f64>,
+}
+
+impl Knn {
+    pub fn fit(x: &[f64], n_features: usize, y: &[f64], k: usize) -> Knn {
+        let n = y.len();
+        let mut mean = vec![0.0; n_features];
+        let mut std = vec![0.0; n_features];
+        for i in 0..n {
+            for j in 0..n_features {
+                mean[j] += x[i * n_features + j];
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        for i in 0..n {
+            for j in 0..n_features {
+                let d = x[i * n_features + j] - mean[j];
+                std[j] += d * d;
+            }
+        }
+        for s in std.iter_mut() {
+            *s = (*s / n as f64).sqrt().max(1e-9);
+        }
+        Knn {
+            x: x.to_vec(),
+            y: y.to_vec(),
+            n_features,
+            k: k.max(1).min(n),
+            mean,
+            std,
+        }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let n = self.y.len();
+        let mut dists: Vec<(f64, f64)> = (0..n)
+            .map(|i| {
+                let mut d = 0.0;
+                for j in 0..self.n_features {
+                    let a = (row[j] - self.mean[j]) / self.std[j];
+                    let b = (self.x[i * self.n_features + j] - self.mean[j]) / self.std[j];
+                    d += (a - b) * (a - b);
+                }
+                (d, self.y[i])
+            })
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        dists.iter().take(self.k).map(|v| v.1).sum::<f64>() / self.k as f64
+    }
+}
+
+/// Least-squares gradient-boosted trees (shallow learners + shrinkage).
+#[derive(Debug, Clone)]
+pub struct Gbt {
+    base: f64,
+    trees: Vec<Tree>,
+    lr: f64,
+    n_features: usize,
+}
+
+impl Gbt {
+    pub fn fit(
+        x: &[f64],
+        n_features: usize,
+        y: &[f64],
+        n_rounds: usize,
+        lr: f64,
+        max_depth: usize,
+        seed: u64,
+    ) -> Gbt {
+        let n = y.len();
+        let base = y.iter().sum::<f64>() / n as f64;
+        let mut residual: Vec<f64> = y.iter().map(|v| v - base).collect();
+        let mut trees = Vec::with_capacity(n_rounds);
+        let idx: Vec<usize> = (0..n).collect();
+        let params = TreeParams {
+            max_depth,
+            min_samples_leaf: 3,
+            min_samples_split: 6,
+            max_features: None,
+        };
+        let mut rng = Rng::seed_from(seed);
+        for _ in 0..n_rounds {
+            let t = Tree::fit(x, n_features, &residual, &idx, &params, &mut rng);
+            for i in 0..n {
+                residual[i] -= lr * t.predict(&x[i * n_features..(i + 1) * n_features]);
+            }
+            trees.push(t);
+        }
+        Gbt {
+            base,
+            trees,
+            lr,
+            n_features,
+        }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.n_features);
+        self.base + self.lr * self.trees.iter().map(|t| t.predict(row)).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_data(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::seed_from(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.range_f64(-5.0, 5.0);
+            let b = rng.range_f64(-5.0, 5.0);
+            x.extend([a, b]);
+            y.push(3.0 * a - 2.0 * b + 1.0);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn ridge_recovers_linear_coefficients() {
+        let (x, y) = linear_data(200, 1);
+        let r = Ridge::fit(&x, 2, &y, 1e-6);
+        let p = r.predict(&[2.0, -1.0]);
+        assert!((p - 9.0).abs() < 1e-6, "pred {p}");
+    }
+
+    #[test]
+    fn poly2_fits_quadratics_linear_cannot() {
+        let mut rng = Rng::seed_from(2);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..300 {
+            let a = rng.range_f64(-3.0, 3.0);
+            let b = rng.range_f64(-3.0, 3.0);
+            x.extend([a, b]);
+            y.push(a * a + a * b - 2.0);
+        }
+        let (x2, d2) = poly2_expand(&x, 2);
+        let r2 = Ridge::fit(&x2, d2, &y, 1e-6);
+        let (probe, _) = poly2_expand(&[1.5, -0.5], 2);
+        let want = 1.5 * 1.5 + 1.5 * -0.5 - 2.0;
+        assert!((r2.predict(&probe) - want).abs() < 1e-5);
+        // plain ridge misses badly
+        let r1 = Ridge::fit(&x, 2, &y, 1e-6);
+        assert!((r1.predict(&[1.5, -0.5]) - want).abs() > 0.3);
+    }
+
+    #[test]
+    fn knn_exact_on_training_point_with_k1() {
+        let (x, y) = linear_data(50, 3);
+        let k = Knn::fit(&x, 2, &y, 1);
+        assert_eq!(k.predict(&[x[10], x[11]]), y[5]);
+    }
+
+    #[test]
+    fn gbt_reduces_error_with_rounds() {
+        let (x, y) = linear_data(150, 4);
+        let err = |m: &Gbt| -> f64 {
+            // mean |err| over a probe grid
+            let mut acc = 0.0;
+            let mut n = 0.0;
+            for a in [-3.0, -1.0, 0.5, 2.0] {
+                for b in [-2.0, 0.0, 1.5] {
+                    let want = 3.0 * a - 2.0 * b + 1.0;
+                    acc += (m.predict(&[a, b]) - want).abs();
+                    n += 1.0;
+                }
+            }
+            acc / n
+        };
+        let weak = Gbt::fit(&x, 2, &y, 1, 0.1, 3, 0);
+        let strong = Gbt::fit(&x, 2, &y, 150, 0.1, 3, 0);
+        assert!(err(&strong) < err(&weak) * 0.5, "{} !< {}", err(&strong), err(&weak));
+    }
+}

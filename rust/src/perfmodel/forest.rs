@@ -1,0 +1,126 @@
+//! Random-forest regressor (paper §VII-B: "random forest regressor with 10
+//! estimators"). Bootstrap-bagged CART trees, mean-aggregated predictions,
+//! trained in parallel via the thread-pool substrate.
+
+use crate::util::pool::par_map;
+use crate::util::rng::Rng;
+
+use super::tree::{Tree, TreeParams};
+
+#[derive(Debug, Clone, Copy)]
+pub struct ForestParams {
+    pub n_estimators: usize,
+    pub tree: TreeParams,
+    /// bootstrap sample fraction (1.0 = n samples with replacement)
+    pub bootstrap_frac: f64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_estimators: 10, // the paper's setting
+            tree: TreeParams::default(),
+            bootstrap_frac: 1.0,
+            seed: 0,
+            threads: crate::util::pool::default_threads(),
+        }
+    }
+}
+
+/// A fitted random-forest regressor.
+#[derive(Debug, Clone)]
+pub struct Forest {
+    pub n_features: usize,
+    trees: Vec<Tree>,
+}
+
+impl Forest {
+    /// Fit on a row-major design matrix `x` ([n_samples * n_features]).
+    pub fn fit(x: &[f64], n_features: usize, y: &[f64], params: &ForestParams) -> Forest {
+        let n = y.len();
+        assert_eq!(x.len(), n * n_features);
+        assert!(n > 0);
+        let n_boot = ((n as f64) * params.bootstrap_frac).round().max(1.0) as usize;
+        let trees = par_map(params.n_estimators, params.threads, |t| {
+            let mut rng = Rng::seed_from(params.seed ^ (0xA076_1D64 ^ t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let idx: Vec<usize> = (0..n_boot).map(|_| rng.below(n)).collect();
+            Tree::fit(x, n_features, y, &idx, &params.tree, &mut rng)
+        });
+        Forest { n_features, trees }
+    }
+
+    /// Predict one row.
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.n_features);
+        let s: f64 = self.trees.iter().map(|t| t.predict(row)).sum();
+        s / self.trees.len() as f64
+    }
+
+    /// Predict a row-major batch.
+    pub fn predict_batch(&self, x: &[f64]) -> Vec<f64> {
+        x.chunks_exact(self.n_features)
+            .map(|row| self.predict(row))
+            .collect()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mape;
+
+    fn make_dataset(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        // y = nonlinear function of 3 features (mimicking latency-vs-config)
+        let mut rng = Rng::seed_from(seed);
+        let mut x = Vec::with_capacity(n * 3);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.range_f64(1.0, 9.0); // "layers"
+            let b = *rng.choose(&[64.0, 128.0, 256.0]); // "hidden"
+            let c = *rng.choose(&[2.0, 4.0, 8.0]); // "parallelism"
+            x.extend([a, b, c]);
+            y.push(100.0 + a * b * b / c + 30.0 * a);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn interpolates_the_design_space_well() {
+        let (x, y) = make_dataset(400, 1);
+        let f = Forest::fit(&x, 3, &y, &ForestParams::default());
+        let (xt, yt) = make_dataset(100, 2);
+        let pred = f.predict_batch(&xt);
+        let err = mape(&yt, &pred);
+        assert!(err < 25.0, "test MAPE {err}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = make_dataset(80, 3);
+        let p = ForestParams { seed: 42, threads: 4, ..Default::default() };
+        let f1 = Forest::fit(&x, 3, &y, &p);
+        let f2 = Forest::fit(&x, 3, &y, &p);
+        let probe = [4.0, 128.0, 4.0];
+        assert_eq!(f1.predict(&probe), f2.predict(&probe));
+        let f3 = Forest::fit(&x, 3, &y, &ForestParams { seed: 43, ..p });
+        assert_ne!(f1.predict(&probe), f3.predict(&probe));
+    }
+
+    #[test]
+    fn has_n_estimators_trees_and_averages_them() {
+        let (x, y) = make_dataset(50, 4);
+        let f = Forest::fit(&x, 3, &y, &ForestParams { n_estimators: 7, ..Default::default() });
+        assert_eq!(f.n_trees(), 7);
+        // prediction bounded by training target range (mean of leaf means)
+        let lo = y.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let p = f.predict(&[5.0, 128.0, 2.0]);
+        assert!(p >= lo && p <= hi);
+    }
+}

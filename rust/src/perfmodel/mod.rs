@@ -1,0 +1,284 @@
+//! Direct-fit hardware performance models (paper §VII-B, §VIII-A).
+//!
+//! Random-forest regressors fitted on a database of synthesized designs
+//! predict post-synthesis **latency** and **BRAM** from the model
+//! configuration alone, replacing minutes of synthesis with microseconds of
+//! inference (the paper's Fig. 4/Fig. 5 evaluation). The design database is
+//! built by sparsely sampling the Listing-2 space and "synthesizing" each
+//! config through the accelerator simulator ([`crate::hls`]).
+
+pub mod comparators;
+pub mod forest;
+pub mod tree;
+
+pub use forest::{Forest, ForestParams};
+pub use tree::{Tree, TreeParams};
+
+use crate::hls::{run_synthesis, GraphStats};
+use crate::model::{ConvType, ModelConfig};
+use crate::model::space::DesignSpace;
+use crate::util::pool::par_map;
+use crate::util::rng::Rng;
+use crate::util::stats::mape;
+
+/// Number of features `featurize` emits.
+pub const N_FEATURES: usize = 16;
+
+/// Config → feature row (the Listing-2 axes: conv one-hot + dims + layers +
+/// skip + the six parallelism factors). This is all the direct-fit models
+/// see — no simulator internals leak into the features.
+pub fn featurize(cfg: &ModelConfig) -> [f64; N_FEATURES] {
+    let mut f = [0.0; N_FEATURES];
+    let conv_idx = ConvType::ALL.iter().position(|c| *c == cfg.gnn_conv).unwrap();
+    f[conv_idx] = 1.0;
+    f[4] = cfg.gnn_hidden_dim as f64;
+    f[5] = cfg.gnn_out_dim as f64;
+    f[6] = cfg.gnn_num_layers as f64;
+    f[7] = cfg.gnn_skip_connections as u8 as f64;
+    f[8] = cfg.mlp_hidden_dim as f64;
+    f[9] = cfg.mlp_num_layers as f64;
+    f[10] = cfg.gnn_p_in as f64;
+    f[11] = cfg.gnn_p_hidden as f64;
+    f[12] = cfg.gnn_p_out as f64;
+    f[13] = cfg.mlp_p_in as f64;
+    f[14] = cfg.mlp_p_hidden as f64;
+    f[15] = cfg.mlp_p_out as f64;
+    f
+}
+
+/// A database of synthesized designs (the paper's 400-design DB).
+#[derive(Debug, Clone)]
+pub struct DesignDatabase {
+    pub configs: Vec<ModelConfig>,
+    /// row-major [n * N_FEATURES]
+    pub features: Vec<f64>,
+    /// post-synthesis latency in milliseconds
+    pub latency_ms: Vec<f64>,
+    /// post-synthesis BRAM18K count
+    pub bram: Vec<f64>,
+    /// modeled Vitis synthesis wallclock per design (for Fig. 5)
+    pub synth_seconds: Vec<f64>,
+    /// measured simulator wallclock per design
+    pub sim_seconds: Vec<f64>,
+}
+
+impl DesignDatabase {
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+}
+
+/// Sample `count` configs from `space` and synthesize each (parallel).
+pub fn build_database(
+    space: &DesignSpace,
+    count: usize,
+    seed: u64,
+    stats: &GraphStats,
+    threads: usize,
+) -> DesignDatabase {
+    let configs = space.sample(count, seed);
+    let reports = par_map(configs.len(), threads, |i| {
+        run_synthesis(&configs[i], stats, seed)
+    });
+    let mut db = DesignDatabase {
+        features: Vec::with_capacity(count * N_FEATURES),
+        latency_ms: Vec::with_capacity(count),
+        bram: Vec::with_capacity(count),
+        synth_seconds: Vec::with_capacity(count),
+        sim_seconds: Vec::with_capacity(count),
+        configs,
+    };
+    for (cfg, rep) in db.configs.iter().zip(&reports) {
+        db.features.extend(featurize(cfg));
+        db.latency_ms.push(rep.latency.total_seconds * 1e3);
+        db.bram.push(rep.resources.bram18k as f64);
+        db.synth_seconds.push(rep.modeled_synth_seconds);
+        db.sim_seconds.push(rep.sim_seconds);
+    }
+    db
+}
+
+/// The deliverable pair: direct-fit latency + BRAM models.
+///
+/// Latency spans ~3 orders of magnitude across the Listing-2 space, so the
+/// latency forest is fitted on log-targets (multiplicative error is what
+/// MAPE measures); BRAM is fitted raw.
+pub struct PerfModel {
+    pub latency: Forest,
+    pub bram: Forest,
+}
+
+/// ln-transform a target vector (latency is strictly positive).
+pub fn log_target(y: &[f64]) -> Vec<f64> {
+    y.iter().map(|&v| v.max(1e-12).ln()).collect()
+}
+
+impl PerfModel {
+    pub fn fit(db: &DesignDatabase, params: &ForestParams) -> PerfModel {
+        PerfModel {
+            latency: Forest::fit(&db.features, N_FEATURES, &log_target(&db.latency_ms), params),
+            bram: Forest::fit(&db.features, N_FEATURES, &db.bram, params),
+        }
+    }
+
+    /// (latency_ms, bram) prediction for a config — the millisecond-scale
+    /// DSE evaluation call (paper: 1.7 ms avg vs 9.4 min synthesis).
+    pub fn predict(&self, cfg: &ModelConfig) -> (f64, f64) {
+        let f = featurize(cfg);
+        (self.latency.predict(&f).exp(), self.bram.predict(&f))
+    }
+}
+
+/// K-fold cross-validation: returns (truth, prediction) pairs pooled over
+/// all test folds, in the paper's §VIII-A protocol (5 folds).
+pub fn kfold_cv<FitFn>(
+    features: &[f64],
+    n_features: usize,
+    y: &[f64],
+    k: usize,
+    seed: u64,
+    mut fit_predict: FitFn,
+) -> Vec<(f64, f64)>
+where
+    FitFn: FnMut(&[f64], &[f64], &[f64]) -> Vec<f64>,
+{
+    let n = y.len();
+    assert!(k >= 2 && n >= k);
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::seed_from(seed).shuffle(&mut order);
+    let folds: Vec<Vec<usize>> = (0..k)
+        .map(|f| order.iter().copied().skip(f).step_by(k).collect())
+        .collect();
+    let mut out = Vec::with_capacity(n);
+    for test in &folds {
+        let test_set: std::collections::HashSet<usize> = test.iter().copied().collect();
+        let mut xtr = Vec::new();
+        let mut ytr = Vec::new();
+        for i in 0..n {
+            if !test_set.contains(&i) {
+                xtr.extend_from_slice(&features[i * n_features..(i + 1) * n_features]);
+                ytr.push(y[i]);
+            }
+        }
+        let mut xte = Vec::new();
+        for &i in test {
+            xte.extend_from_slice(&features[i * n_features..(i + 1) * n_features]);
+        }
+        let preds = fit_predict(&xtr, &ytr, &xte);
+        assert_eq!(preds.len(), test.len());
+        for (&i, p) in test.iter().zip(preds) {
+            out.push((y[i], p));
+        }
+    }
+    out
+}
+
+/// CV (truth, pred) pairs of a random forest, optionally log-target.
+pub fn forest_cv_pairs(
+    features: &[f64],
+    n_features: usize,
+    y: &[f64],
+    k: usize,
+    params: &ForestParams,
+    log: bool,
+) -> Vec<(f64, f64)> {
+    let yt = if log { log_target(y) } else { y.to_vec() };
+    let pairs = kfold_cv(features, n_features, &yt, k, params.seed, |xtr, ytr, xte| {
+        let f = Forest::fit(xtr, n_features, ytr, params);
+        xte.chunks_exact(n_features).map(|r| f.predict(r)).collect()
+    });
+    if log {
+        pairs.into_iter().map(|(t, p)| (t.exp(), p.exp())).collect()
+    } else {
+        pairs
+    }
+}
+
+/// CV MAPE of a random forest on (features, y) — the Fig. 4 metric.
+pub fn forest_cv_mape(
+    features: &[f64],
+    n_features: usize,
+    y: &[f64],
+    k: usize,
+    params: &ForestParams,
+    log: bool,
+) -> f64 {
+    let (truth, pred): (Vec<f64>, Vec<f64>) =
+        forest_cv_pairs(features, n_features, y, k, params, log).into_iter().unzip();
+    mape(&truth, &pred)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+
+    fn small_db() -> DesignDatabase {
+        build_database(
+            &DesignSpace::default(),
+            120,
+            2023,
+            &GraphStats::from_dataset(&datasets::QM9),
+            4,
+        )
+    }
+
+    #[test]
+    fn database_has_consistent_rows() {
+        let db = small_db();
+        assert_eq!(db.len(), 120);
+        assert_eq!(db.features.len(), 120 * N_FEATURES);
+        assert!(db.latency_ms.iter().all(|&v| v > 0.0));
+        assert!(db.bram.iter().all(|&v| v > 0.0));
+        // latencies must actually vary across the space (RF has signal)
+        let min = db.latency_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = db.latency_ms.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max / min > 3.0, "latency range {min}..{max} too flat");
+    }
+
+    #[test]
+    fn featurize_distinguishes_convs_and_parallelism() {
+        let space = DesignSpace::default();
+        let a = featurize(&space.index(0));
+        let b = featurize(&space.index(1));
+        assert_ne!(a, b);
+        assert_eq!(a.iter().take(4).sum::<f64>(), 1.0); // one-hot
+    }
+
+    #[test]
+    fn perfmodel_in_sample_accuracy_is_high() {
+        let db = small_db();
+        let pm = PerfModel::fit(&db, &ForestParams::default());
+        let mut lat_pred = Vec::new();
+        for cfg in &db.configs {
+            lat_pred.push(pm.predict(cfg).0);
+        }
+        let err = mape(&db.latency_ms, &lat_pred);
+        assert!(err < 35.0, "in-sample latency MAPE {err}");
+    }
+
+    #[test]
+    fn cv_pairs_cover_every_sample_once() {
+        let db = small_db();
+        let pairs = kfold_cv(&db.features, N_FEATURES, &db.latency_ms, 5, 7, |xtr, ytr, xte| {
+            let f = Forest::fit(xtr, N_FEATURES, ytr, &ForestParams::default());
+            xte.chunks_exact(N_FEATURES).map(|r| f.predict(r)).collect()
+        });
+        assert_eq!(pairs.len(), db.len());
+    }
+
+    #[test]
+    fn bram_is_easier_to_predict_than_latency() {
+        // the paper's headline shape: BRAM CV-MAPE (≈17%) < latency (≈36%)
+        let db = small_db();
+        let p = ForestParams::default();
+        let lat = forest_cv_mape(&db.features, N_FEATURES, &db.latency_ms, 5, &p, true);
+        let bram = forest_cv_mape(&db.features, N_FEATURES, &db.bram, 5, &p, false);
+        assert!(bram < lat, "bram {bram} !< latency {lat}");
+        assert!(lat < 120.0, "latency CV MAPE {lat} at 120 samples out of band");
+    }
+}

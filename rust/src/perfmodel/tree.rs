@@ -1,0 +1,271 @@
+//! CART regression tree — the base learner of the direct-fit random-forest
+//! performance models (paper §VII-B). Variance-reduction splits over
+//! axis-aligned thresholds, grown to `min_samples_leaf` like sklearn's
+//! `DecisionTreeRegressor` defaults inside a `RandomForestRegressor`.
+
+use crate::util::rng::Rng;
+
+/// Flattened tree: nodes in a Vec, leaves carry the mean target.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+/// Tree-growing hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub min_samples_split: usize,
+    /// features examined per split: `None` = all (sklearn RF regressor
+    /// default is all features; set Some(k) for extra decorrelation)
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 24,
+            min_samples_leaf: 1,
+            min_samples_split: 2,
+            max_features: None,
+        }
+    }
+}
+
+impl Tree {
+    /// Fit on rows `idx` of `x` (row-major, `n_features` wide) against `y`.
+    pub fn fit(
+        x: &[f64],
+        n_features: usize,
+        y: &[f64],
+        idx: &[usize],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> Tree {
+        assert!(n_features > 0 && !idx.is_empty());
+        let mut nodes = Vec::new();
+        let mut scratch = idx.to_vec();
+        build(
+            x, n_features, y, &mut scratch, 0, params, rng, &mut nodes, 0,
+        );
+        Tree { nodes }
+    }
+
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut at = 0usize;
+        loop {
+            match &self.nodes[at] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    at = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], at: usize) -> usize {
+            match &nodes[at] {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => 1 + walk(nodes, *left).max(walk(nodes, *right)),
+            }
+        }
+        walk(&self.nodes, 0)
+    }
+}
+
+fn mean_of(y: &[f64], idx: &[usize]) -> f64 {
+    idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build(
+    x: &[f64],
+    nf: usize,
+    y: &[f64],
+    idx: &mut [usize],
+    depth: usize,
+    params: &TreeParams,
+    rng: &mut Rng,
+    nodes: &mut Vec<Node>,
+    slot_hint: usize,
+) -> usize {
+    let _ = slot_hint;
+    let me = nodes.len();
+    nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+
+    let value = mean_of(y, idx);
+    let stop = depth >= params.max_depth
+        || idx.len() < params.min_samples_split
+        || idx.len() < 2 * params.min_samples_leaf;
+    if stop {
+        nodes[me] = Node::Leaf { value };
+        return me;
+    }
+
+    // best variance-reduction split
+    let (mut best_feat, mut best_thr, mut best_score) = (usize::MAX, 0.0f64, f64::INFINITY);
+    let feature_order: Vec<usize> = match params.max_features {
+        None => (0..nf).collect(),
+        Some(k) => rng.sample_indices(nf, k.min(nf)),
+    };
+    let mut vals: Vec<(f64, f64)> = Vec::with_capacity(idx.len());
+    for &f in &feature_order {
+        vals.clear();
+        vals.extend(idx.iter().map(|&i| (x[i * nf + f], y[i])));
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // prefix sums for O(n) split scan
+        let n = vals.len();
+        let total: f64 = vals.iter().map(|v| v.1).sum();
+        let total_sq: f64 = vals.iter().map(|v| v.1 * v.1).sum();
+        let mut lsum = 0.0;
+        let mut lsq = 0.0;
+        for i in 0..n - 1 {
+            lsum += vals[i].1;
+            lsq += vals[i].1 * vals[i].1;
+            if vals[i].0 == vals[i + 1].0 {
+                continue; // can't split between equal feature values
+            }
+            let ln = (i + 1) as f64;
+            let rn = (n - i - 1) as f64;
+            if (ln as usize) < params.min_samples_leaf || (rn as usize) < params.min_samples_leaf {
+                continue;
+            }
+            let rsum = total - lsum;
+            let rsq = total_sq - lsq;
+            // SSE_left + SSE_right
+            let score = (lsq - lsum * lsum / ln) + (rsq - rsum * rsum / rn);
+            if score < best_score {
+                best_score = score;
+                best_feat = f;
+                best_thr = 0.5 * (vals[i].0 + vals[i + 1].0);
+            }
+        }
+    }
+
+    if best_feat == usize::MAX {
+        nodes[me] = Node::Leaf { value };
+        return me;
+    }
+
+    // partition idx in place
+    let mid = partition(idx, |i| x[i * nf + best_feat] <= best_thr);
+    if mid == 0 || mid == idx.len() {
+        nodes[me] = Node::Leaf { value };
+        return me;
+    }
+    let (l_idx, r_idx) = idx.split_at_mut(mid);
+    let left = build(x, nf, y, l_idx, depth + 1, params, rng, nodes, 0);
+    let right = build(x, nf, y, r_idx, depth + 1, params, rng, nodes, 0);
+    nodes[me] = Node::Split {
+        feature: best_feat,
+        threshold: best_thr,
+        left,
+        right,
+    };
+    me
+}
+
+fn partition(idx: &mut [usize], pred: impl Fn(usize) -> bool) -> usize {
+    let mut store = 0;
+    for i in 0..idx.len() {
+        if pred(idx[i]) {
+            idx.swap(store, i);
+            store += 1;
+        }
+    }
+    store
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fit_simple(x: &[f64], nf: usize, y: &[f64]) -> Tree {
+        let idx: Vec<usize> = (0..y.len()).collect();
+        let mut rng = Rng::seed_from(1);
+        Tree::fit(x, nf, y, &idx, &TreeParams::default(), &mut rng)
+    }
+
+    #[test]
+    fn memorizes_training_data_at_full_depth() {
+        let x: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| v * 3.0 + 1.0).collect();
+        let t = fit_simple(&x, 1, &y);
+        for i in 0..40 {
+            assert_eq!(t.predict(&[i as f64]), y[i]);
+        }
+    }
+
+    #[test]
+    fn steps_are_learned_exactly() {
+        // y = step function of feature 1, feature 0 is noise
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..60 {
+            x.push((i % 7) as f64);
+            x.push(if i < 30 { 0.0 } else { 1.0 });
+            y.push(if i < 30 { 5.0 } else { -5.0 });
+        }
+        let t = fit_simple(&x, 2, &y);
+        assert_eq!(t.predict(&[3.0, 0.0]), 5.0);
+        assert_eq!(t.predict(&[3.0, 1.0]), -5.0);
+    }
+
+    #[test]
+    fn min_samples_leaf_limits_growth() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let y = x.clone();
+        let idx: Vec<usize> = (0..100).collect();
+        let mut rng = Rng::seed_from(2);
+        let deep = Tree::fit(&x, 1, &y, &idx, &TreeParams::default(), &mut rng);
+        let shallow = Tree::fit(
+            &x,
+            1,
+            &y,
+            &idx,
+            &TreeParams {
+                min_samples_leaf: 20,
+                ..TreeParams::default()
+            },
+            &mut rng,
+        );
+        assert!(shallow.n_nodes() < deep.n_nodes());
+        assert!(shallow.depth() < deep.depth());
+    }
+
+    #[test]
+    fn constant_target_is_single_leaf() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y = vec![4.2; 10];
+        let t = fit_simple(&x, 1, &y);
+        // splits give zero variance reduction over a constant target, but
+        // whatever the structure, every prediction must be the constant
+        for i in 0..10 {
+            assert!((t.predict(&[i as f64]) - 4.2).abs() < 1e-12);
+        }
+    }
+}

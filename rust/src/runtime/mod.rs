@@ -1,0 +1,201 @@
+//! PJRT deployment runtime (paper §VI-C "Hardware Deployment" analog).
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt` + `manifest.json`), compiles them once on the PJRT
+//! CPU client, and executes them from the L3 hot path. This is the
+//! "bitstream + XRT host runtime" substitution (DESIGN.md): python never
+//! runs here.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// Static input/output interface of one compiled accelerator variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub dataset: String,
+    pub mean_degree: f64,
+    pub config: ModelConfig,
+    pub hlo_path: PathBuf,
+    pub weights_path: PathBuf,
+    pub testvecs_path: PathBuf,
+    pub output_dim: usize,
+}
+
+/// The artifact index emitted by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let root = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for e in root.get("artifacts").as_array()? {
+            let name = e.get("name").as_str()?.to_string();
+            let config = ModelConfig::from_json(e.get("config"))?;
+            let output_dim = config.output_dim;
+            artifacts.push(ArtifactMeta {
+                hlo_path: dir.join(e.get("hlo").as_str()?),
+                weights_path: dir.join(e.get("weights").as_str()?),
+                testvecs_path: dir.join(e.get("testvecs").as_str()?),
+                dataset: e.get("dataset").as_str()?.to_string(),
+                mean_degree: e.get("mean_degree").as_f64()?,
+                name,
+                config,
+                output_dim,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+/// A compiled accelerator variant, ready to execute.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_seconds: f64,
+}
+
+/// Padded COO graph in the accelerator's wire layout (see aot.py docstring).
+#[derive(Debug, Clone)]
+pub struct GraphInput {
+    pub x: Vec<f32>,          // [max_nodes * in_dim], row major
+    pub edges: Vec<i32>,      // [max_edges * 2], (src, dst) pairs
+    pub num_nodes: i32,
+    pub num_edges: i32,
+}
+
+impl Executable {
+    pub fn output_dim(&self) -> usize {
+        self.meta.output_dim
+    }
+
+    /// Execute one graph; returns the model output vector.
+    pub fn run(&self, g: &GraphInput) -> Result<Vec<f32>> {
+        let cfg = &self.meta.config;
+        let n_in = cfg.max_nodes * cfg.graph_input_dim;
+        if g.x.len() != n_in {
+            bail!("x len {} != {}", g.x.len(), n_in);
+        }
+        if g.edges.len() != cfg.max_edges * 2 {
+            bail!("edges len {} != {}", g.edges.len(), cfg.max_edges * 2);
+        }
+        let x = xla::Literal::vec1(&g.x)
+            .reshape(&[cfg.max_nodes as i64, cfg.graph_input_dim as i64])?;
+        let e = xla::Literal::vec1(&g.edges).reshape(&[cfg.max_edges as i64, 2])?;
+        let nn = xla::Literal::scalar(g.num_nodes);
+        let ne = xla::Literal::scalar(g.num_edges);
+        let result = self.exe.execute::<xla::Literal>(&[x, e, nn, ne])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// PJRT CPU client + executable cache (one compile per variant).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Arc<Executable>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by name).
+    pub fn load(&mut self, meta: &ArtifactMeta) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.get(&meta.name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let path = meta
+            .hlo_path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let built = Arc::new(Executable {
+            meta: meta.clone(),
+            exe,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        });
+        self.cache.insert(meta.name.clone(), built.clone());
+        Ok(built)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::binio::read_testvecs;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_artifacts() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.artifacts.len() >= 5);
+        assert!(m.find("quickstart_gcn").is_ok());
+        assert!(m.find("nope").is_err());
+    }
+
+    #[test]
+    fn quickstart_artifact_matches_golden_testvecs() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        let meta = m.find("quickstart_gcn").unwrap();
+        let mut rt = Runtime::cpu().unwrap();
+        let exe = rt.load(meta).unwrap();
+        let vecs = read_testvecs(&meta.testvecs_path).unwrap();
+        assert!(!vecs.graphs.is_empty());
+        for g in vecs.graphs.iter().take(8) {
+            let input = g.to_padded(meta.config.max_nodes, meta.config.max_edges);
+            let out = exe.run(&input).unwrap();
+            assert_eq!(out.len(), vecs.out_dim);
+            for (a, b) in out.iter().zip(&g.expected) {
+                assert!(
+                    (a - b).abs() <= 1e-4 + 1e-4 * b.abs().max(1.0),
+                    "pjrt {a} vs golden {b}"
+                );
+            }
+        }
+    }
+}

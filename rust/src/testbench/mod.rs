@@ -1,0 +1,147 @@
+//! Verification testbench runner (paper §VI-B).
+//!
+//! Drives any implementation of one model (PJRT artifact, native engine in
+//! float or fixed mode, or the generated C++ testbench) over the golden
+//! test vectors and reports the paper's testbench metrics: mean absolute
+//! error against the PyTorch-twin outputs and averaged kernel runtime.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::graph::Graph;
+use crate::runtime::Executable;
+use crate::util::binio::TestVecs;
+use crate::util::stats::{mae, Summary};
+
+/// Testbench verdict for one implementation over one test-vector set.
+#[derive(Debug, Clone)]
+pub struct TbReport {
+    pub implementation: String,
+    pub graphs: usize,
+    pub mae: f64,
+    pub max_abs_err: f64,
+    pub runtime: Summary,
+}
+
+impl TbReport {
+    pub fn passes(&self, budget: f64) -> bool {
+        self.mae <= budget
+    }
+}
+
+fn compare(
+    implementation: &str,
+    vecs: &TestVecs,
+    mut run: impl FnMut(&GoldenCase) -> Result<Vec<f32>>,
+) -> Result<TbReport> {
+    let mut abs_sum = 0.0f64;
+    let mut abs_max = 0.0f64;
+    let mut n = 0usize;
+    let mut times = Vec::with_capacity(vecs.graphs.len());
+    for gold in &vecs.graphs {
+        let pairs: Vec<(u32, u32)> = gold
+            .edges
+            .chunks_exact(2)
+            .map(|c| (c[0] as u32, c[1] as u32))
+            .collect();
+        let case = GoldenCase {
+            graph: Graph::from_coo(gold.num_nodes, &pairs),
+            x: &gold.x,
+        };
+        let t0 = Instant::now();
+        let out = run(&case)?;
+        times.push(t0.elapsed().as_secs_f64());
+        let m = mae(&out, &gold.expected);
+        abs_sum += m * out.len() as f64;
+        n += out.len();
+        for (a, b) in out.iter().zip(&gold.expected) {
+            abs_max = abs_max.max((a - b).abs() as f64);
+        }
+    }
+    Ok(TbReport {
+        implementation: implementation.to_string(),
+        graphs: vecs.graphs.len(),
+        mae: if n > 0 { abs_sum / n as f64 } else { 0.0 },
+        max_abs_err: abs_max,
+        runtime: Summary::of(&times),
+    })
+}
+
+/// One unpadded golden graph handed to implementations under test.
+pub struct GoldenCase<'a> {
+    pub graph: Graph,
+    pub x: &'a [f32],
+}
+
+/// Testbench over the native engine (float path).
+pub fn run_engine_float(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    compare("engine-f32", vecs, |c| engine.forward(&c.graph, c.x))
+}
+
+/// Testbench over the native engine (true fixed-point path) — the paper's
+/// "'true' quantization simulation" (§VI-B).
+pub fn run_engine_fixed(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    compare("engine-fixed", vecs, |c| engine.forward_fixed(&c.graph, c.x))
+}
+
+/// Testbench over a compiled PJRT artifact (the deployed kernel).
+pub fn run_pjrt(exe: &Executable, vecs: &TestVecs) -> Result<TbReport> {
+    let cfg = &exe.meta.config;
+    compare("pjrt", vecs, |c| {
+        let input = c.graph.to_input(c.x, cfg.graph_input_dim, cfg.max_nodes, cfg.max_edges);
+        exe.run(&input)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::FixedPointFormat;
+    use crate::runtime::Manifest;
+    use crate::util::binio::{read_testvecs, read_weights};
+
+    fn setup() -> Option<(Engine, TestVecs)> {
+        let d = crate::artifacts_dir();
+        if !d.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(d).unwrap();
+        let meta = m.find("quickstart_gcn").unwrap();
+        let weights = read_weights(&meta.weights_path).unwrap();
+        let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+        let vecs = read_testvecs(&meta.testvecs_path).unwrap();
+        Some((engine, vecs))
+    }
+
+    #[test]
+    fn float_engine_passes_tight_budget() {
+        let Some((engine, vecs)) = setup() else { return };
+        let rep = run_engine_float(&engine, &vecs).unwrap();
+        assert_eq!(rep.graphs, vecs.graphs.len());
+        assert!(rep.passes(5e-4), "MAE {}", rep.mae);
+        assert!(rep.runtime.mean > 0.0);
+    }
+
+    #[test]
+    fn fixed_engine_error_grows_as_precision_shrinks() {
+        let Some((engine, vecs)) = setup() else { return };
+        let wide = run_engine_fixed(&engine, &vecs).unwrap();
+        // rebuild with a narrow format
+        let d = crate::artifacts_dir();
+        let m = Manifest::load(d).unwrap();
+        let meta = m.find("quickstart_gcn").unwrap();
+        let weights = read_weights(&meta.weights_path).unwrap();
+        let mut cfg = meta.config.clone();
+        cfg.fpx = FixedPointFormat::new(12, 8);
+        let narrow_engine = Engine::new(cfg, &weights, meta.mean_degree).unwrap();
+        let narrow = run_engine_fixed(&narrow_engine, &vecs).unwrap();
+        assert!(
+            narrow.mae > wide.mae,
+            "narrow {} !> wide {}",
+            narrow.mae,
+            wide.mae
+        );
+    }
+}

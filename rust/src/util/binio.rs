@@ -1,0 +1,286 @@
+//! Readers for the binary interchange formats written by
+//! `python/compile/binio.py` (`GNNW` weights, `GNNT` golden test vectors).
+//! Little-endian throughout; see the python docstring for the layouts.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::GraphInput;
+
+/// One named f32 tensor from a `GNNW` file.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn rows(&self) -> usize {
+        self.dims.first().copied().unwrap_or(0)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.dims.get(1).copied().unwrap_or(1)
+    }
+}
+
+/// Weight bundle: ordered tensors + name index.
+#[derive(Debug, Clone, Default)]
+pub struct Weights {
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .with_context(|| format!("weight `{name}` missing"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Read a `GNNW` weights file.
+pub fn read_weights(path: impl AsRef<Path>) -> Result<Weights> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?
+        .read_to_end(&mut buf)?;
+    let mut r = Reader { b: &buf, i: 0 };
+    if r.take(4)? != b"GNNW" {
+        bail!("bad magic (want GNNW)");
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported GNNW version {version}");
+    }
+    let n = r.u32()? as usize;
+    let mut w = Weights::default();
+    for _ in 0..n {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+        let ndim = r.u8()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(r.u32()? as usize);
+        }
+        let total: usize = dims.iter().product(); // ndim=0 ⇒ scalar (product = 1)
+        let data = r.f32s(total)?;
+        w.index.insert(name.clone(), w.tensors.len());
+        w.tensors.push(Tensor { name, dims, data });
+    }
+    Ok(w)
+}
+
+/// One golden graph: unpadded features/edges + expected model output.
+#[derive(Debug, Clone)]
+pub struct GoldenGraph {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub x: Vec<f32>,      // [num_nodes * in_dim]
+    pub edges: Vec<i32>,  // [num_edges * 2] (src, dst)
+    pub expected: Vec<f32>,
+}
+
+impl GoldenGraph {
+    /// Pad to the accelerator's static wire shapes.
+    pub fn to_padded(&self, max_nodes: usize, max_edges: usize) -> GraphInput {
+        let in_dim = if self.num_nodes == 0 {
+            0
+        } else {
+            self.x.len() / self.num_nodes
+        };
+        let mut x = vec![0f32; max_nodes * in_dim];
+        x[..self.x.len()].copy_from_slice(&self.x);
+        let mut edges = vec![0i32; max_edges * 2];
+        edges[..self.edges.len()].copy_from_slice(&self.edges);
+        GraphInput {
+            x,
+            edges,
+            num_nodes: self.num_nodes as i32,
+            num_edges: self.num_edges as i32,
+        }
+    }
+}
+
+/// A `GNNT` golden test-vector file.
+#[derive(Debug, Clone)]
+pub struct TestVecs {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub graphs: Vec<GoldenGraph>,
+}
+
+/// Read a `GNNT` test-vector file.
+pub fn read_testvecs(path: impl AsRef<Path>) -> Result<TestVecs> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?
+        .read_to_end(&mut buf)?;
+    let mut r = Reader { b: &buf, i: 0 };
+    if r.take(4)? != b"GNNT" {
+        bail!("bad magic (want GNNT)");
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported GNNT version {version}");
+    }
+    let n_graphs = r.u32()? as usize;
+    let in_dim = r.u32()? as usize;
+    let out_dim = r.u32()? as usize;
+    let mut graphs = Vec::with_capacity(n_graphs);
+    for _ in 0..n_graphs {
+        let num_nodes = r.u32()? as usize;
+        let num_edges = r.u32()? as usize;
+        let x = r.f32s(num_nodes * in_dim)?;
+        let edges = r.i32s(num_edges * 2)?;
+        let expected = r.f32s(out_dim)?;
+        graphs.push(GoldenGraph {
+            num_nodes,
+            num_edges,
+            x,
+            edges,
+            expected,
+        });
+    }
+    if r.i != buf.len() {
+        bail!("{} trailing bytes in GNNT file", buf.len() - r.i);
+    }
+    Ok(TestVecs {
+        in_dim,
+        out_dim,
+        graphs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("gnnb_binio_{name}_{}", std::process::id()));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn weights_roundtrip_handwritten() {
+        // GNNW with one 2x3 tensor "w"
+        let mut b: Vec<u8> = b"GNNW".to_vec();
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u16.to_le_bytes());
+        b.extend(b"w");
+        b.push(2);
+        b.extend(2u32.to_le_bytes());
+        b.extend(3u32.to_le_bytes());
+        for i in 0..6 {
+            b.extend((i as f32).to_le_bytes());
+        }
+        let p = write_tmp("w", &b);
+        let w = read_weights(&p).unwrap();
+        assert_eq!(w.len(), 1);
+        let t = w.get("w").unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.data[5], 5.0);
+        assert!(w.get("nope").is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = write_tmp("bad", b"NOPE....");
+        assert!(read_weights(&p).is_err());
+        assert!(read_testvecs(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn testvecs_roundtrip_handwritten() {
+        // GNNT: 1 graph, in_dim 2, out_dim 1
+        let mut b: Vec<u8> = b"GNNT".to_vec();
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes()); // num_nodes
+        b.extend(1u32.to_le_bytes()); // num_edges
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend(v.to_le_bytes());
+        }
+        for v in [0i32, 1] {
+            b.extend(v.to_le_bytes());
+        }
+        b.extend(0.5f32.to_le_bytes());
+        let p = write_tmp("t", &b);
+        let tv = read_testvecs(&p).unwrap();
+        assert_eq!(tv.graphs.len(), 1);
+        let g = &tv.graphs[0];
+        assert_eq!(g.num_nodes, 2);
+        assert_eq!(g.edges, vec![0, 1]);
+        assert_eq!(g.expected, vec![0.5]);
+        let padded = g.to_padded(4, 3);
+        assert_eq!(padded.x.len(), 8);
+        assert_eq!(padded.edges.len(), 6);
+        assert_eq!(padded.num_nodes, 2);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,155 @@
+//! CLI argument parsing substrate (no clap in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args —
+//! enough for the `gnnbuilder` launcher and the examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// option keys that were consumed via get_* (for unknown-arg reporting)
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = first real arg).
+    pub fn parse_from(tokens: &[String], known_flags: &[&str]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    a.flags.push(rest.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    a.options.insert(rest.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    // trailing `--opt` with no value: treat as flag
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    /// Parse the process arguments after the subcommand name.
+    pub fn from_env(skip: usize, known_flags: &[&str]) -> Result<Args> {
+        let tokens: Vec<String> = std::env::args().skip(skip).collect();
+        Args::parse_from(&tokens, known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got `{s}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got `{s}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got `{s}`")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Error on options that no `get_*` call ever consumed (typo guard).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.options.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse_from(
+            &toks(&["serve", "--port", "8080", "--verbose", "--mode=fast", "extra"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("mode"), Some("fast"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse_from(&toks(&["--n", "42", "--rate", "0.5"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("rate", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("rate", 0).is_err());
+    }
+
+    #[test]
+    fn require_and_unknown() {
+        let a = Args::parse_from(&toks(&["--known", "1", "--typo", "2"]), &[]).unwrap();
+        assert!(a.require("known").is_ok());
+        assert!(a.require("absent").is_err());
+        assert!(a.reject_unknown().is_err()); // --typo never consumed
+        let _ = a.get("typo");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse_from(&toks(&["--dry-run"]), &[]).unwrap();
+        assert!(a.flag("dry-run"));
+    }
+}

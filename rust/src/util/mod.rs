@@ -1,0 +1,11 @@
+//! Infrastructure substrates (S13 in DESIGN.md). The offline crate set has
+//! only the `xla` closure, so JSON, PRNG, stats, thread pool, CLI parsing,
+//! and the property-test harness are built here from scratch.
+
+pub mod binio;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;

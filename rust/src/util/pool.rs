@@ -1,0 +1,106 @@
+//! Thread-pool substrate (no rayon in the offline crate set).
+//!
+//! Scoped fork-join parallel map over indexed work items, used by the
+//! perf-model trainer (per-tree bagging), the design-database builder
+//! (per-config synthesis), and the benchmark harness. Work stealing is a
+//! simple shared atomic cursor — items are small and uniform enough that
+//! chunk-free self-scheduling is within a few percent of optimal.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (bounded by available parallelism).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(24)
+}
+
+/// Parallel map: `f(i)` for i in 0..n, preserving index order in the result.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                // local buffer to avoid lock contention per item
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                    if local.len() >= 16 {
+                        let mut guard = results.lock().unwrap();
+                        for (j, v) in local.drain(..) {
+                            guard[j] = Some(v);
+                        }
+                    }
+                }
+                if !local.is_empty() {
+                    let mut guard = results.lock().unwrap();
+                    for (j, v) in local.drain(..) {
+                        guard[j] = Some(v);
+                    }
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|v| v.expect("worker missed an index"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let v = par_map(100, 8, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        assert_eq!(par_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+        assert!(par_map(0, 8, |i| i).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        assert_eq!(par_map(2, 16, |i| i + 1), vec![1, 2]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // all threads must be able to make progress concurrently
+        use std::sync::atomic::AtomicUsize;
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static LIVE: AtomicUsize = AtomicUsize::new(0);
+        let _ = par_map(32, 4, |i| {
+            let live = LIVE.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(live, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            LIVE.fetch_sub(1, Ordering::SeqCst);
+            i
+        });
+        assert!(PEAK.load(Ordering::SeqCst) >= 2);
+    }
+}

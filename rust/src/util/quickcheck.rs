@@ -1,0 +1,88 @@
+//! Seeded random-case property-test harness (no proptest in the offline
+//! crate set; the python side uses hypothesis). Runs `cases` random trials,
+//! reports the failing seed so a failure reproduces with
+//! `check_with_seed(<seed>, ..)`, and performs a simple halving shrink on a
+//! user-provided "size" knob.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random property trials. `prop(rng, size)` returns Err(msg) on
+/// violation; `size` ramps from 1 to `max_size` so early trials are small.
+pub fn check<F>(name: &str, cases: usize, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let base_seed = 0x9e3779b97f4a7c15u64 ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let size = 1 + (case * max_size) / cases.max(1);
+        let mut rng = Rng::seed_from(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: retry same seed with halved sizes
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::seed_from(seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed:#x}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging helper).
+pub fn check_with_seed<F>(seed: u64, size: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut rng = Rng::seed_from(seed);
+    if let Err(msg) = prop(&mut rng, size) {
+        panic!("property failed (seed {seed:#x}, size {size}): {msg}");
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("always-true", 50, 100, |rng, size| {
+            let v = rng.below(size.max(1));
+            if v <= size { Ok(()) } else { Err("impossible".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 10, 10, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0usize;
+        check("ramp", 100, 64, |_, size| {
+            max_seen = max_seen.max(size);
+            Ok(())
+        });
+        assert!(max_seen >= 32, "max size seen {max_seen}");
+    }
+}

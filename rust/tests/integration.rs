@@ -1,0 +1,197 @@
+//! Cross-layer integration tests: python-built artifacts ⇄ PJRT runtime ⇄
+//! native engine ⇄ generated C++ ⇄ simulator ⇄ DSE — the paths a unit test
+//! inside one module cannot cover. All require `make artifacts`.
+
+use gnnbuilder::codegen::Project;
+use gnnbuilder::coordinator::{BackendSpec, BatchPolicy, Coordinator};
+use gnnbuilder::datasets;
+use gnnbuilder::dse;
+use gnnbuilder::engine::Engine;
+use gnnbuilder::graph::Graph;
+use gnnbuilder::hls::{self, GraphStats};
+use gnnbuilder::model::space::DesignSpace;
+use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
+use gnnbuilder::runtime::{Manifest, Runtime};
+use gnnbuilder::testbench;
+use gnnbuilder::util::binio::{read_testvecs, read_weights};
+
+fn manifest() -> Option<Manifest> {
+    let d = gnnbuilder::artifacts_dir();
+    d.join("manifest.json")
+        .exists()
+        .then(|| Manifest::load(d).unwrap())
+}
+
+/// Three-way agreement on the same golden graphs: the compiled PJRT
+/// artifact, the native engine, and the golden outputs produced by the
+/// L2 JAX model at build time.
+#[test]
+fn pjrt_engine_and_golden_agree_for_every_conv() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    for conv in ["gcn", "gin", "sage", "pna"] {
+        let meta = m.find(&format!("bench_{conv}_esol_base")).unwrap();
+        let vecs = read_testvecs(&meta.testvecs_path).unwrap();
+        let weights = read_weights(&meta.weights_path).unwrap();
+        let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+        let exe = rt.load(meta).unwrap();
+
+        let pjrt_rep = testbench::run_pjrt(&exe, &vecs).unwrap();
+        let eng_rep = testbench::run_engine_float(&engine, &vecs).unwrap();
+        assert!(pjrt_rep.mae < 1e-4, "{conv} pjrt MAE {}", pjrt_rep.mae);
+        assert!(eng_rep.mae < 5e-3, "{conv} engine MAE {}", eng_rep.mae);
+    }
+}
+
+/// Codegen → g++ → run: the generated C++ testbench reproduces the golden
+/// outputs (the paper's build_and_run_testbench flow, fixed + float).
+#[test]
+fn generated_cpp_testbench_matches_golden_float_and_fixed() {
+    let Some(m) = manifest() else { return };
+    let meta = m.find("bench_gcn_esol_base").unwrap();
+    let stats = GraphStats::from_dataset(&datasets::ESOL);
+
+    // float
+    let dir = std::env::temp_dir().join(format!("gnnb_it_f_{}", std::process::id()));
+    let proj = Project::new(meta.config.clone(), &dir, stats).unwrap();
+    proj.gen_all().unwrap();
+    let tb = proj
+        .build_and_run_testbench(&meta.weights_path, &meta.testvecs_path)
+        .unwrap();
+    assert!(tb.mae < 1e-5, "float MAE {}", tb.mae);
+    assert_eq!(tb.graphs, 32);
+
+    // fixed <16,10>: quantization error visible but bounded
+    let mut qcfg = meta.config.clone();
+    qcfg.numerics = gnnbuilder::model::Numerics::Fixed;
+    qcfg.fpx = gnnbuilder::model::FixedPointFormat::new(16, 10);
+    let qdir = std::env::temp_dir().join(format!("gnnb_it_q_{}", std::process::id()));
+    let qproj = Project::new(qcfg, &qdir, stats).unwrap();
+    qproj.gen_all().unwrap();
+    let qtb = qproj
+        .build_and_run_testbench(&meta.weights_path, &meta.testvecs_path)
+        .unwrap();
+    assert!(qtb.mae > tb.mae, "fixed should be lossier");
+    assert!(qtb.mae < 0.5, "fixed MAE {} out of budget", qtb.mae);
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::remove_dir_all(qdir).ok();
+}
+
+/// The generated C++ and the Rust fixed engine implement the same
+/// quantization: their MAEs against the float golden agree closely.
+#[test]
+fn cpp_fixed_and_rust_fixed_agree_on_quantization_error() {
+    let Some(m) = manifest() else { return };
+    let meta = m.find("bench_sage_esol_base").unwrap();
+    let weights = read_weights(&meta.weights_path).unwrap();
+    let vecs = read_testvecs(&meta.testvecs_path).unwrap();
+    let mut qcfg = meta.config.clone();
+    qcfg.numerics = gnnbuilder::model::Numerics::Fixed;
+    qcfg.fpx = gnnbuilder::model::FixedPointFormat::new(16, 10);
+
+    let engine = Engine::new(qcfg.clone(), &weights, meta.mean_degree).unwrap();
+    let rust_rep = testbench::run_engine_fixed(&engine, &vecs).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("gnnb_it_qq_{}", std::process::id()));
+    let proj = Project::new(qcfg, &dir, GraphStats::from_dataset(&datasets::ESOL)).unwrap();
+    proj.gen_all().unwrap();
+    let cpp = proj
+        .build_and_run_testbench(&meta.weights_path, &meta.testvecs_path)
+        .unwrap();
+    std::fs::remove_dir_all(dir).ok();
+
+    let ratio = cpp.mae / rust_rep.mae.max(1e-12);
+    assert!(
+        (0.2..5.0).contains(&ratio),
+        "cpp fixed MAE {} vs rust fixed MAE {}",
+        cpp.mae,
+        rust_rep.mae
+    );
+}
+
+/// DSE end-to-end: fit on a simulated design DB, search, then verify the
+/// winner against the simulator — prediction must be in the right ballpark
+/// and the pick must actually satisfy the constraint post-verification.
+#[test]
+fn dse_winner_verifies_against_the_synthesizer() {
+    let space = DesignSpace::default();
+    let stats = GraphStats::from_dataset(&datasets::QM9);
+    let db = build_database(&space, 250, 77, &stats, 8);
+    let pm = PerfModel::fit(&db, &ForestParams { seed: 77, ..Default::default() });
+    let r = dse::random_search(
+        &space,
+        &pm,
+        &dse::Constraints {
+            max_bram: 1200.0,
+            fix_conv: None,
+            min_hidden_dim: None,
+        },
+        5_000,
+        77,
+    );
+    let best = r.best.expect("feasible design exists");
+    let rep = hls::run_synthesis(&best.config, &stats, 77);
+    let true_ms = rep.latency.total_seconds * 1e3;
+    let rel = (best.pred_latency_ms - true_ms).abs() / true_ms;
+    assert!(rel < 1.0, "prediction off by {:.0}%", rel * 100.0);
+    // allow RF under-prediction near the constraint boundary, but not 2x
+    assert!(
+        (rep.resources.bram18k as f64) < 2.0 * 1200.0,
+        "verified BRAM {} blows the budget",
+        rep.resources.bram18k
+    );
+}
+
+/// Coordinator serving PJRT + engine backends returns numerically correct
+/// outputs (cross-checked against direct engine calls).
+#[test]
+fn coordinator_outputs_match_direct_inference() {
+    let Some(m) = manifest() else { return };
+    let meta = m.find("quickstart_gcn").unwrap();
+    let weights = read_weights(&meta.weights_path).unwrap();
+    let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+    let vecs = read_testvecs(&meta.testvecs_path).unwrap();
+
+    let engine2 = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+    let c = Coordinator::start(
+        vec![BackendSpec::engine(engine2), BackendSpec::pjrt(meta.clone())],
+        BatchPolicy::default(),
+    );
+    for gold in vecs.graphs.iter().take(4) {
+        let pairs: Vec<(u32, u32)> = gold
+            .edges
+            .chunks_exact(2)
+            .map(|e| (e[0] as u32, e[1] as u32))
+            .collect();
+        let g = Graph::from_coo(gold.num_nodes, &pairs);
+        let direct = engine.forward(&g, &gold.x).unwrap();
+        let via_engine = c
+            .infer(&meta.config.name, g.clone(), gold.x.clone())
+            .unwrap();
+        for (a, b) in via_engine.output.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let via_pjrt = c.infer(&meta.name, g, gold.x.clone()).unwrap();
+        for (a, b) in via_pjrt.output.iter().zip(&gold.expected) {
+            assert!((a - b).abs() < 1e-4, "pjrt {a} vs golden {b}");
+        }
+    }
+    c.shutdown();
+}
+
+/// Fig.-7 invariant across the whole benchmark suite: everything fits the
+/// U280 and parallel > base in DSP.
+#[test]
+fn benchmark_suite_synthesizes_within_the_part() {
+    for ds in datasets::ALL {
+        let stats = GraphStats::from_dataset(ds);
+        for conv in gnnbuilder::model::ConvType::ALL {
+            for parallel in [false, true] {
+                let cfg = gnnbuilder::model::benchmark_config(conv, ds, parallel);
+                let rep = hls::run_synthesis(&cfg, &stats, 1);
+                assert!(rep.resources.fits(hls::U280), "{}", cfg.name);
+                assert!(rep.latency.total_seconds > 0.0 && rep.latency.total_seconds < 0.1);
+            }
+        }
+    }
+}

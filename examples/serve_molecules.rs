@@ -85,6 +85,14 @@ fn main() -> Result<()> {
         m.peak_queue.load(std::sync::atomic::Ordering::Relaxed),
         m.errors.load(std::sync::atomic::Ordering::Relaxed)
     );
+    let bs = m.batch_size_summary();
+    println!(
+        "batch sizes: mean {:.1} | p50 {:.0} | max {:.0} | histogram {:?}",
+        bs.mean,
+        bs.p50,
+        bs.max,
+        m.batch_histogram()
+    );
     coordinator.shutdown();
     Ok(())
 }

@@ -1,18 +1,23 @@
 //! Coordinator benchmarks: router+batcher round-trip overhead with a
-//! zero-work backend (pure L3 cost), and throughput under a batched load.
+//! zero-work backend (pure L3 cost), and the batch-native engine path
+//! against a per-request loop over the same engine — the measurement
+//! behind the "batching buys throughput" acceptance gate.
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use gnnbuilder::bench::Bench;
 use gnnbuilder::coordinator::{Backend, BackendSpec, BatchPolicy, Coordinator};
-use gnnbuilder::graph::Graph;
+use gnnbuilder::datasets;
+use gnnbuilder::engine::{synth_weights, Engine};
+use gnnbuilder::graph::{Graph, GraphView};
+use gnnbuilder::model::{benchmark_config, ConvType};
 
 struct Null;
 impl Backend for Null {
     fn name(&self) -> &str {
         "null"
     }
-    fn infer(&self, _: &Graph, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+    fn infer(&self, _: GraphView<'_>, x: &[f32]) -> anyhow::Result<Vec<f32>> {
         Ok(vec![x.iter().sum()])
     }
 }
@@ -22,6 +27,22 @@ fn spec() -> BackendSpec {
         model: "null".into(),
         factory: Box::new(|| Ok(Box::new(Null) as Box<dyn Backend>)),
     }
+}
+
+/// The same engine exposed through the trait's *default* `infer_batch`
+/// (a serial per-graph loop). Both arms pay the same dispatch + packing
+/// cost inside the coordinator, so the comparison isolates what the
+/// batch-native engine execution (parallel workers over warm workspaces)
+/// buys over per-request serial execution.
+struct LoopedEngine(Engine);
+impl Backend for LoopedEngine {
+    fn name(&self) -> &str {
+        &self.0.cfg.name
+    }
+    fn infer(&self, g: GraphView<'_>, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.0.forward_view(g, x)
+    }
+    // no infer_batch override: default loops infer() per view
 }
 
 fn main() {
@@ -47,4 +68,49 @@ fn main() {
     let batches = c.metrics.batches.load(Ordering::Relaxed);
     println!("(batches formed: {batches})");
     c.shutdown();
+
+    // ---- batched engine vs per-request loop (acceptance gate) ----------
+    let cfg = benchmark_config(ConvType::Gcn, &datasets::HIV, false);
+    let model = cfg.name.clone();
+    let weights = synth_weights(&cfg, 7);
+    let engine = Engine::new(cfg, &weights, datasets::HIV.mean_degree).unwrap();
+    let graphs = datasets::gen_dataset(&datasets::HIV, 64, 11, 600, 600);
+
+    for max_batch in [1usize, 8, 64] {
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(500),
+        };
+
+        let run_throughput = |c: &Coordinator, tag: &str| {
+            let r = b.run(tag, || {
+                let rxs: Vec<_> = graphs
+                    .iter()
+                    .map(|m| c.submit(&model, m.graph.clone(), m.x.clone()))
+                    .collect();
+                for rx in rxs {
+                    rx.recv().unwrap();
+                }
+            });
+            graphs.len() as f64 / r.summary.mean
+        };
+
+        let c = Coordinator::start(vec![BackendSpec::engine(engine.clone())], policy);
+        let batched_rps = run_throughput(&c, &format!("coordinator/batched_engine/mb{max_batch}"));
+        c.shutdown();
+
+        let looped = engine.clone();
+        let spec = BackendSpec {
+            model: model.clone(),
+            factory: Box::new(move || Ok(Box::new(LoopedEngine(looped)) as Box<dyn Backend>)),
+        };
+        let c = Coordinator::start(vec![spec], policy);
+        let looped_rps = run_throughput(&c, &format!("coordinator/looped_engine/mb{max_batch}"));
+        c.shutdown();
+
+        println!(
+            "(max_batch={max_batch}: batched {batched_rps:.0} req/s vs looped {looped_rps:.0} req/s → {:.2}x)",
+            batched_rps / looped_rps
+        );
+    }
 }

@@ -1,49 +1,135 @@
 //! Inference-path benchmarks: the native engine (CPP-CPU baseline) per
 //! conv type and the PJRT artifact execution (PyG-CPU analog) — the
-//! measured halves of Table IV / Fig. 6.
-use gnnbuilder::bench::Bench;
+//! measured halves of Table IV / Fig. 6 — plus the batched-vs-looped
+//! throughput comparison for the packed-batch path. Results are emitted
+//! to `BENCH_inference.json`.
+use gnnbuilder::bench::{Bench, BenchResult};
 use gnnbuilder::datasets;
-use gnnbuilder::engine::Engine;
+use gnnbuilder::engine::{synth_weights, Engine, Workspace};
+use gnnbuilder::graph::GraphBatch;
+use gnnbuilder::model::{benchmark_config, ConvType};
 use gnnbuilder::runtime::{Manifest, Runtime};
 use gnnbuilder::util::binio::read_weights;
+use gnnbuilder::util::json::Json;
+
+fn result_json(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.as_str())),
+        ("iters", Json::num(r.iters as f64)),
+        ("mean_s", Json::num(r.summary.mean)),
+        ("p95_s", Json::num(r.summary.p95)),
+    ])
+}
+
+/// Batched-vs-looped engine throughput at batch sizes 1/8/64. Runs on
+/// synthetic weights so it needs no artifacts; per-iteration work is one
+/// batch worth of graphs in both arms.
+fn batched_vs_looped(b: &Bench, results: &mut Vec<Json>) {
+    let cfg = benchmark_config(ConvType::Gcn, &datasets::HIV, false);
+    let weights = synth_weights(&cfg, 7);
+    let engine = Engine::new(cfg, &weights, datasets::HIV.mean_degree).unwrap();
+    let graphs = datasets::gen_dataset(&datasets::HIV, 64, 11, 600, 600);
+
+    for bs in [1usize, 8, 64] {
+        let chunks: Vec<&[datasets::MolGraph]> = graphs.chunks(bs).collect();
+        let batches: Vec<GraphBatch> = chunks
+            .iter()
+            .map(|c| GraphBatch::pack(c.iter().map(|g| (&g.graph, g.x.as_slice()))))
+            .collect();
+
+        let mut i = 0;
+        let looped = b.run(&format!("engine_loop/gcn/hiv/bs{bs}"), || {
+            i = (i + 1) % chunks.len();
+            let mut acc = 0.0f32;
+            for g in chunks[i] {
+                acc += engine.forward(&g.graph, &g.x).unwrap()[0];
+            }
+            acc
+        });
+
+        let mut ws = Workspace::with_default_threads();
+        let mut j = 0;
+        let batched = b.run(&format!("engine_batch/gcn/hiv/bs{bs}"), || {
+            j = (j + 1) % batches.len();
+            engine.forward_batch(&batches[j], &mut ws).unwrap()
+        });
+
+        // normalize to per-graph seconds: one iteration processes bs graphs
+        let loop_per_graph = looped.summary.mean / bs as f64;
+        let batch_per_graph = batched.summary.mean / bs as f64;
+        let speedup = loop_per_graph / batch_per_graph.max(1e-12);
+        println!(
+            "  bs={bs}: looped {:.1} graphs/s, batched {:.1} graphs/s, speedup {speedup:.2}x",
+            1.0 / loop_per_graph,
+            1.0 / batch_per_graph
+        );
+        results.push(Json::obj(vec![
+            ("batch_size", Json::num(bs as f64)),
+            ("looped_per_graph_s", Json::num(loop_per_graph)),
+            ("batched_per_graph_s", Json::num(batch_per_graph)),
+            ("looped_graphs_per_s", Json::num(1.0 / loop_per_graph)),
+            ("batched_graphs_per_s", Json::num(1.0 / batch_per_graph)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+}
 
 fn main() {
     let b = Bench::from_env();
-    let Ok(manifest) = Manifest::load(gnnbuilder::artifacts_dir()) else {
-        eprintln!("run `make artifacts` first");
-        return;
-    };
-    let graphs = datasets::gen_dataset(&datasets::HIV, 32, 11, 600, 600);
-    for conv in ["gcn", "gin", "sage", "pna"] {
-        let meta = manifest.find(&format!("bench_{conv}_hiv_base")).unwrap();
+    let mut engine_results: Vec<Json> = Vec::new();
+
+    if let Ok(manifest) = Manifest::load(gnnbuilder::artifacts_dir()) {
+        let graphs = datasets::gen_dataset(&datasets::HIV, 32, 11, 600, 600);
+        for conv in ["gcn", "gin", "sage", "pna"] {
+            let meta = manifest.find(&format!("bench_{conv}_hiv_base")).unwrap();
+            let weights = read_weights(&meta.weights_path).unwrap();
+            let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+            let mut i = 0;
+            let r = b.run(&format!("engine_f32/{conv}/hiv"), || {
+                i = (i + 1) % graphs.len();
+                engine.forward(&graphs[i].graph, &graphs[i].x).unwrap()
+            });
+            engine_results.push(result_json(&r));
+        }
+        // fixed-point path (true quantization simulation)
+        let meta = manifest.find("bench_gcn_hiv_base").unwrap();
         let weights = read_weights(&meta.weights_path).unwrap();
         let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
         let mut i = 0;
-        b.run(&format!("engine_f32/{conv}/hiv"), || {
+        let r = b.run("engine_fixed/gcn/hiv", || {
             i = (i + 1) % graphs.len();
-            engine.forward(&graphs[i].graph, &graphs[i].x).unwrap()
+            engine.forward_fixed(&graphs[i].graph, &graphs[i].x).unwrap()
         });
+        engine_results.push(result_json(&r));
+        // PJRT artifact execution (requires the `pjrt` feature)
+        match Runtime::cpu() {
+            Ok(mut rt) => {
+                let exe = rt.load(meta).unwrap();
+                let cfg = &meta.config;
+                let inputs: Vec<_> = graphs
+                    .iter()
+                    .map(|g| g.graph.to_input(&g.x, g.node_dim, cfg.max_nodes, cfg.max_edges))
+                    .collect();
+                let mut i = 0;
+                let r = b.run("pjrt_execute/gcn/hiv", || {
+                    i = (i + 1) % inputs.len();
+                    exe.run(&inputs[i]).unwrap()
+                });
+                engine_results.push(result_json(&r));
+            }
+            Err(e) => eprintln!("skipping PJRT bench: {e:#}"),
+        }
+    } else {
+        eprintln!("no artifacts (run `make artifacts`); skipping artifact-gated benches");
     }
-    // fixed-point path (true quantization simulation)
-    let meta = manifest.find("bench_gcn_hiv_base").unwrap();
-    let weights = read_weights(&meta.weights_path).unwrap();
-    let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
-    let mut i = 0;
-    b.run("engine_fixed/gcn/hiv", || {
-        i = (i + 1) % graphs.len();
-        engine.forward_fixed(&graphs[i].graph, &graphs[i].x).unwrap()
-    });
-    // PJRT artifact execution
-    let mut rt = Runtime::cpu().unwrap();
-    let exe = rt.load(meta).unwrap();
-    let cfg = &meta.config;
-    let inputs: Vec<_> = graphs
-        .iter()
-        .map(|g| g.graph.to_input(&g.x, g.node_dim, cfg.max_nodes, cfg.max_edges))
-        .collect();
-    let mut i = 0;
-    b.run("pjrt_execute/gcn/hiv", || {
-        i = (i + 1) % inputs.len();
-        exe.run(&inputs[i]).unwrap()
-    });
+
+    let mut batch_results: Vec<Json> = Vec::new();
+    batched_vs_looped(&b, &mut batch_results);
+
+    let report = Json::obj(vec![
+        ("engine", Json::arr(engine_results)),
+        ("batched_vs_looped", Json::arr(batch_results)),
+    ]);
+    std::fs::write("BENCH_inference.json", report.to_string_pretty()).unwrap();
+    println!("wrote BENCH_inference.json");
 }

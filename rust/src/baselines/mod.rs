@@ -16,7 +16,8 @@
 use anyhow::Result;
 
 use crate::datasets::MolGraph;
-use crate::engine::Engine;
+use crate::engine::{Engine, Workspace};
+use crate::graph::GraphBatch;
 use crate::hls::{estimate_latency, GraphStats};
 use crate::model::{ConvType, ModelConfig};
 use crate::runtime::Executable;
@@ -65,6 +66,40 @@ pub fn cpp_cpu(engine: &Engine, graphs: &[MolGraph], repeats: usize) -> Result<B
     }
     Ok(BaselineResult {
         implementation: "CPP-CPU".into(),
+        latency: Summary::of(&times),
+    })
+}
+
+/// CPP-CPU through the batch path: graphs are packed into
+/// `batch_size`-graph arenas once, then each batch runs through
+/// [`Engine::forward_batch`] on a warm workspace. Reported latency is
+/// per-graph (batch wall time / batch size), directly comparable to
+/// [`cpp_cpu`] — the gap is what dispatch amortization + intra-batch
+/// parallelism buy.
+pub fn cpp_cpu_batched(
+    engine: &Engine,
+    graphs: &[MolGraph],
+    batch_size: usize,
+    repeats: usize,
+) -> Result<BaselineResult> {
+    let batch_size = batch_size.max(1);
+    let batches: Vec<GraphBatch> = graphs
+        .chunks(batch_size)
+        .map(|c| GraphBatch::pack(c.iter().map(|g| (&g.graph, g.x.as_slice()))))
+        .collect();
+    let mut ws = Workspace::with_default_threads();
+    let mut times = Vec::with_capacity(graphs.len() * repeats);
+    for _ in 0..repeats {
+        for b in &batches {
+            let t0 = std::time::Instant::now();
+            let out = engine.forward_batch(b, &mut ws)?;
+            std::hint::black_box(&out);
+            let per_graph = t0.elapsed().as_secs_f64() / b.len() as f64;
+            times.extend(std::iter::repeat(per_graph).take(b.len()));
+        }
+    }
+    Ok(BaselineResult {
+        implementation: format!("CPP-CPU-batch{batch_size}"),
         latency: Summary::of(&times),
     })
 }
@@ -146,6 +181,28 @@ mod tests {
         let gcn = pyg_gpu_model(&benchmark_config(ConvType::Gcn, &datasets::HIV, false), &stats);
         let pna = pyg_gpu_model(&benchmark_config(ConvType::Pna, &datasets::HIV, false), &stats);
         assert!(pna.latency.mean > gcn.latency.mean);
+    }
+
+    #[test]
+    fn cpp_cpu_batched_measures_the_batch_path() {
+        let cfg = ModelConfig {
+            graph_input_dim: datasets::ESOL.node_dim,
+            gnn_hidden_dim: 8,
+            gnn_out_dim: 6,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 8,
+            mlp_num_layers: 1,
+            output_dim: 1,
+            ..ModelConfig::default()
+        };
+        let weights = crate::engine::synth_weights(&cfg, 3);
+        let engine = Engine::new(cfg, &weights, datasets::ESOL.mean_degree).unwrap();
+        let graphs = datasets::gen_dataset(&datasets::ESOL, 12, 5, 600, 600);
+        let looped = cpp_cpu(&engine, &graphs, 1).unwrap();
+        let batched = cpp_cpu_batched(&engine, &graphs, 4, 1).unwrap();
+        assert_eq!(batched.implementation, "CPP-CPU-batch4");
+        assert_eq!(batched.latency.n, looped.latency.n);
+        assert!(batched.latency.mean > 0.0);
     }
 
     #[test]

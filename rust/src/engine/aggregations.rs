@@ -62,6 +62,21 @@ impl PartialAgg {
         }
     }
 
+    /// Resize to `width` lanes and clear all partials — buffer reuse for
+    /// the zero-alloc engine workspaces (capacity is retained, so after
+    /// warmup this never allocates).
+    pub fn reset(&mut self, width: usize) {
+        self.count = 0.0;
+        self.mean.clear();
+        self.mean.resize(width, 0.0);
+        self.m2.clear();
+        self.m2.resize(width, 0.0);
+        self.min.clear();
+        self.min.resize(width, f32::INFINITY);
+        self.max.clear();
+        self.max.resize(width, f32::NEG_INFINITY);
+    }
+
     /// Fold one neighbor embedding into the partials (Fig. 3 inner loop).
     #[inline]
     pub fn update(&mut self, v: &[f32]) {

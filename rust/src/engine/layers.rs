@@ -2,11 +2,19 @@
 //! convolutions (explicit message passing per Fig. 3), and global pooling.
 //! Each mirrors its L2 JAX twin in `python/compile/model.py` exactly —
 //! the golden-testvec tests in `engine/mod.rs` enforce this.
+//!
+//! Every kernel writes into a caller-provided output buffer (`*_into`
+//! style) and reads graph topology through [`GraphView`], so the same
+//! code serves the single-graph path and the packed-batch path with zero
+//! heap allocation in the hot loop (buffers live in the engine
+//! [`Workspace`](super::Workspace) and are reused across calls). The f32
+//! operation order is identical in both paths, which keeps the batched
+//! forward bit-exact versus the per-graph forward.
 
 use super::aggregations::{Aggregator, PartialAgg};
 use super::{Embeds, Mat, GIN_EPS, PNA_AGGREGATORS};
 use crate::fixed::Fixed;
-use crate::graph::Graph;
+use crate::graph::GraphView;
 use crate::model::{FixedPointFormat, Pooling};
 
 /// Quantize a buffer in place when a fixed format is active.
@@ -28,15 +36,27 @@ fn qv(v: f32, q: Option<FixedPointFormat>) -> f32 {
 
 /// out[N, M] = h[N, K] @ w[K, M] + b — the tiled linear kernel (§V-B).
 /// Row-major inner loop ordered (row, k, col) so the hot loop is a
-/// contiguous axpy over the weight row (auto-vectorizes).
-pub(crate) fn linear(h: &Embeds, w: &Mat, b: &[f32], q: Option<FixedPointFormat>) -> Embeds {
+/// contiguous axpy over the weight row (auto-vectorizes). `b = None`
+/// initializes rows to zero (the φ-hoisted conv transforms).
+pub(crate) fn linear_into(
+    h: &Embeds,
+    w: &Mat,
+    b: Option<&[f32]>,
+    q: Option<FixedPointFormat>,
+    out: &mut Embeds,
+) {
     assert_eq!(h.cols, w.rows);
-    assert_eq!(w.cols, b.len());
-    let mut out = Embeds::zeros(h.rows, w.cols);
+    if let Some(b) = b {
+        assert_eq!(w.cols, b.len());
+    }
+    out.reshape(h.rows, w.cols); // every row is fully initialized below
     for r in 0..h.rows {
         let hrow = h.row(r);
         let orow = out.row_mut(r);
-        orow.copy_from_slice(b);
+        match b {
+            Some(b) => orow.copy_from_slice(b),
+            None => orow.fill(0.0),
+        }
         for (k, &hv) in hrow.iter().enumerate() {
             if hv == 0.0 {
                 continue;
@@ -50,13 +70,19 @@ pub(crate) fn linear(h: &Embeds, w: &Mat, b: &[f32], q: Option<FixedPointFormat>
             maybe_quantize(orow, q);
         }
     }
-    out
 }
 
 /// 1-D linear for the MLP head: z[K] @ w[K, M] + b[M].
-pub(crate) fn vec_linear(z: &[f32], w: &Mat, b: &[f32], q: Option<FixedPointFormat>) -> Vec<f32> {
+pub(crate) fn vec_linear_into(
+    z: &[f32],
+    w: &Mat,
+    b: &[f32],
+    q: Option<FixedPointFormat>,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(z.len(), w.rows);
-    let mut out = b.to_vec();
+    out.clear();
+    out.extend_from_slice(b);
     for (k, &zv) in z.iter().enumerate() {
         if zv == 0.0 {
             continue;
@@ -66,23 +92,24 @@ pub(crate) fn vec_linear(z: &[f32], w: &Mat, b: &[f32], q: Option<FixedPointForm
             *o += zv * wv;
         }
     }
-    maybe_quantize(&mut out, q);
-    out
+    maybe_quantize(out, q);
 }
 
 /// GCN: out_i = Σ_{j∈N(i)} (W h_j) / √(d~_i d~_j) + (W h_i) / d~_i + b
 /// with d~ = in-degree + 1 (self-loop augmented). Matches
-/// `kernels/aggregate.gcn_aggregate` + `model._conv`.
-pub(crate) fn gcn_conv(
-    g: &Graph,
+/// `kernels/aggregate.gcn_aggregate` + `model._conv`. `xw` is scratch for
+/// the φ-hoisted transform.
+pub(crate) fn gcn_conv_into(
+    g: GraphView<'_>,
     h: &Embeds,
     w: &Mat,
     b: &[f32],
     q: Option<FixedPointFormat>,
-) -> Embeds {
-    let zero_b = vec![0.0; w.cols];
-    let xw = linear(h, w, &zero_b, q); // φ hoisted over nodes (same math)
-    let mut out = Embeds::zeros(h.rows, w.cols);
+    xw: &mut Embeds,
+    out: &mut Embeds,
+) {
+    linear_into(h, w, None, q, xw); // φ hoisted over nodes (same math)
+    out.reset(h.rows, w.cols);
     for i in 0..g.num_nodes {
         let deg_i = (g.in_deg[i] as f32 + 1.0).max(1.0);
         let inv_sqrt_i = 1.0 / deg_i.sqrt();
@@ -99,76 +126,89 @@ pub(crate) fn gcn_conv(
             *o += self_coef * v + bb;
         }
     }
-    out
 }
 
 /// GraphSAGE: out_i = W_root h_i + W_nbr mean_{j∈N(i)} h_j + b.
-pub(crate) fn sage_conv(
-    g: &Graph,
+/// `t0`/`t1` are scratch for the neighbor mean and its transform.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sage_conv_into(
+    g: GraphView<'_>,
     h: &Embeds,
     w_root: &Mat,
     w_nbr: &Mat,
     b: &[f32],
     q: Option<FixedPointFormat>,
-) -> Embeds {
-    let mut out = linear(h, w_root, b, q);
-    let mean = aggregate(g, h, &[Aggregator::Mean]);
-    let zero_b = vec![0.0; w_nbr.cols];
-    let nbr_part = linear(&mean, w_nbr, &zero_b, q);
-    for (o, &v) in out.data.iter_mut().zip(&nbr_part.data) {
+    t0: &mut Embeds,
+    t1: &mut Embeds,
+    agg: &mut PartialAgg,
+    out: &mut Embeds,
+) {
+    linear_into(h, w_root, Some(b), q, out);
+    aggregate_into(g, h, &[Aggregator::Mean], agg, t0);
+    linear_into(t0, w_nbr, None, q, t1);
+    for (o, &v) in out.data.iter_mut().zip(&t1.data) {
         *o += v;
     }
-    out
 }
 
 /// GIN: out_i = W2 · relu(W1 · ((1+ε) h_i + Σ_{j∈N(i)} h_j) + b1) + b2.
-pub(crate) fn gin_conv(
-    g: &Graph,
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gin_conv_into(
+    g: GraphView<'_>,
     h: &Embeds,
     w1: &Mat,
     b1: &[f32],
     w2: &Mat,
     b2: &[f32],
     q: Option<FixedPointFormat>,
-) -> Embeds {
-    let sum = aggregate(g, h, &[Aggregator::Sum]);
-    let mut z = Embeds::zeros(h.rows, h.cols);
+    t0: &mut Embeds,
+    t1: &mut Embeds,
+    agg: &mut PartialAgg,
+    out: &mut Embeds,
+) {
+    aggregate_into(g, h, &[Aggregator::Sum], agg, t0); // neighbor sums
+    t1.reshape(h.rows, h.cols); // fully written below
     for i in 0..h.rows {
         let hrow = h.row(i);
-        let srow = sum.row(i);
-        let zrow = z.row_mut(i);
+        let srow = t0.row(i);
+        let zrow = t1.row_mut(i);
         for k in 0..h.cols {
             zrow[k] = qv((1.0 + GIN_EPS) * hrow[k] + srow[k], q);
         }
     }
-    let mut mid = linear(&z, w1, b1, q);
-    for v in mid.data.iter_mut() {
+    linear_into(t1, w1, Some(b1), q, t0); // t0: sums are dead, reuse as mid
+    for v in t0.data.iter_mut() {
         *v = v.max(0.0); // the GIN MLP's inner activation is fixed ReLU (L2 twin)
     }
-    linear(&mid, w2, b2, q)
+    linear_into(t0, w2, Some(b2), q, out);
 }
 
 /// PNA: out_i = W [h_i ‖ scaled aggregators] + b, aggregators
 /// {mean,min,max,std} × scalers {identity, amplification, attenuation}.
-pub(crate) fn pna_conv(
-    g: &Graph,
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pna_conv_into(
+    g: GraphView<'_>,
     h: &Embeds,
     w: &Mat,
     b: &[f32],
     delta: f32,
     q: Option<FixedPointFormat>,
-) -> Embeds {
+    t0: &mut Embeds,
+    t1: &mut Embeds,
+    agg: &mut PartialAgg,
+    out: &mut Embeds,
+) {
     let f = h.cols;
-    let aggs = aggregate(g, h, &PNA_AGGREGATORS); // [N, 4F]
+    aggregate_into(g, h, &PNA_AGGREGATORS, agg, t0); // [N, 4F]
     let towers = f * (PNA_AGGREGATORS.len() * 3 + 1);
-    let mut feat = Embeds::zeros(h.rows, towers);
+    t1.reshape(h.rows, towers); // every lane of every row is written below
     for i in 0..h.rows {
         let d = g.in_deg.get(i).copied().unwrap_or(0) as f32;
         let ld = (d + 1.0).ln();
         let amp = ld / delta;
         let atten = if d > 0.0 { delta / ld.max(1e-6) } else { 0.0 };
-        let arow = aggs.row(i);
-        let frow = feat.row_mut(i);
+        let arow = t0.row(i);
+        let frow = t1.row_mut(i);
         frow[..f].copy_from_slice(h.row(i));
         let base = f;
         let na = PNA_AGGREGATORS.len() * f;
@@ -179,14 +219,21 @@ pub(crate) fn pna_conv(
         }
         maybe_quantize(frow, q);
     }
-    linear(&feat, w, b, q)
+    linear_into(t1, w, Some(b), q, out);
 }
 
 /// Per-node neighbor aggregation via the single-pass partials (Fig. 3).
-pub(crate) fn aggregate(g: &Graph, h: &Embeds, ops: &[Aggregator]) -> Embeds {
+pub(crate) fn aggregate_into(
+    g: GraphView<'_>,
+    h: &Embeds,
+    ops: &[Aggregator],
+    partial: &mut PartialAgg,
+    out: &mut Embeds,
+) {
     let f = h.cols;
-    let mut out = Embeds::zeros(h.rows, ops.len() * f);
-    let mut partial = PartialAgg::new(f);
+    debug_assert_eq!(h.rows, g.num_nodes); // finalize covers every row below
+    out.reshape(h.rows, ops.len() * f);
+    partial.reset(f);
     for i in 0..g.num_nodes {
         partial.count = 0.0;
         partial.mean.fill(0.0);
@@ -201,16 +248,17 @@ pub(crate) fn aggregate(g: &Graph, h: &Embeds, ops: &[Aggregator]) -> Embeds {
             partial.finalize(op, &mut orow[oi * f..(oi + 1) * f]);
         }
     }
-    out
 }
 
 /// Global pooling over all (valid) nodes — §V-B "Global Pooling".
-pub(crate) fn global_pool(h: &Embeds, p: Pooling) -> Vec<f32> {
+/// `out` is one pooling operator's segment of the pooled vector.
+pub(crate) fn global_pool_into(h: &Embeds, p: Pooling, out: &mut [f32]) {
     let f = h.cols;
     let n = h.rows;
-    let mut out = vec![0.0f32; f];
+    assert_eq!(out.len(), f);
     match p {
         Pooling::Add | Pooling::Mean => {
+            out.fill(0.0);
             for i in 0..n {
                 for (o, &v) in out.iter_mut().zip(h.row(i)) {
                     *o += v;
@@ -235,12 +283,12 @@ pub(crate) fn global_pool(h: &Embeds, p: Pooling) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Graph;
 
     fn embeds(rows: usize, cols: usize, vals: &[f32]) -> Embeds {
         Embeds {
@@ -254,8 +302,27 @@ mod tests {
         Mat {
             rows,
             cols,
-            data: vals.to_vec(),
+            data: vals.to_vec().into(),
         }
+    }
+
+    fn linear(h: &Embeds, w: &Mat, b: &[f32], q: Option<FixedPointFormat>) -> Embeds {
+        let mut out = Embeds::zeros(0, 0);
+        linear_into(h, w, Some(b), q, &mut out);
+        out
+    }
+
+    fn aggregate(g: GraphView<'_>, h: &Embeds, ops: &[Aggregator]) -> Embeds {
+        let mut out = Embeds::zeros(0, 0);
+        let mut agg = PartialAgg::new(0);
+        aggregate_into(g, h, ops, &mut agg, &mut out);
+        out
+    }
+
+    fn global_pool(h: &Embeds, p: Pooling) -> Vec<f32> {
+        let mut out = vec![0.0; h.cols];
+        global_pool_into(h, p, &mut out);
+        out
     }
 
     #[test]
@@ -267,10 +334,26 @@ mod tests {
     }
 
     #[test]
+    fn linear_reuses_buffer_without_stale_state() {
+        let w = mat(3, 2, &[1., 0., 0., 1., 1., 1.]);
+        let mut out = Embeds::zeros(0, 0);
+        linear_into(&embeds(2, 3, &[1.; 6]), &w, Some(&[0., 0.]), None, &mut out);
+        let first = out.data.clone();
+        // second call with the same inputs into the warm buffer is identical
+        linear_into(&embeds(2, 3, &[1.; 6]), &w, Some(&[0., 0.]), None, &mut out);
+        assert_eq!(out.data, first);
+        // and shrinking reuse produces the right shape
+        linear_into(&embeds(1, 3, &[1., 2., 3.]), &w, Some(&[0., 0.]), None, &mut out);
+        assert_eq!((out.rows, out.cols), (1, 2));
+        assert_eq!(out.data, vec![4., 5.]);
+    }
+
+    #[test]
     fn vec_linear_matches_linear() {
         let w = mat(3, 2, &[1., 2., 3., 4., 5., 6.]);
         let z = [1.0, 0.5, -1.0];
-        let a = vec_linear(&z, &w, &[0.1, 0.2], None);
+        let mut a = Vec::new();
+        vec_linear_into(&z, &w, &[0.1, 0.2], None, &mut a);
         let h = embeds(1, 3, &z);
         let b = linear(&h, &w, &[0.1, 0.2], None);
         assert_eq!(a, b.data);
@@ -280,7 +363,7 @@ mod tests {
     fn aggregate_mean_of_two_neighbors() {
         let g = Graph::from_coo(3, &[(1, 0), (2, 0)]);
         let h = embeds(3, 2, &[0., 0., 2., 4., 4., 8.]);
-        let out = aggregate(&g, &h, &[Aggregator::Mean, Aggregator::Max]);
+        let out = aggregate(g.view(), &h, &[Aggregator::Mean, Aggregator::Max]);
         assert_eq!(out.row(0), &[3., 6., 4., 8.]);
         assert_eq!(out.row(1), &[0., 0., 0., 0.]); // no neighbors
     }
@@ -291,7 +374,9 @@ mod tests {
         let g = Graph::from_coo(1, &[]);
         let h = embeds(1, 2, &[1.0, 2.0]);
         let w = mat(2, 2, &[1., 0., 0., 1.]);
-        let out = gcn_conv(&g, &h, &w, &[0.5, 0.5], None);
+        let mut xw = Embeds::zeros(0, 0);
+        let mut out = Embeds::zeros(0, 0);
+        gcn_conv_into(g.view(), &h, &w, &[0.5, 0.5], None, &mut xw, &mut out);
         assert_eq!(out.data, vec![1.5, 2.5]);
     }
 

@@ -12,17 +12,28 @@
 //! - [`Engine::forward_fixed`] — true ap_fixed<W,I> quantized compute via
 //!   [`crate::fixed`], the "true quantization simulation" testbench path
 //!   (§VI-B).
+//!
+//! Batching is first-class: [`Engine::forward_batch`] runs a packed
+//! [`GraphBatch`] through per-worker [`Workspace`] scratch buffers
+//! (zero heap allocation in the hot loop after warmup) and parallelizes
+//! over the graphs via [`crate::util::pool::par_map`]. Because every
+//! kernel reads topology through [`GraphView`] with unchanged f32
+//! operation order, batched outputs are bit-identical to the
+//! single-graph path.
 
 mod aggregations;
 mod layers;
 
 pub use aggregations::{Aggregator, PartialAgg};
 
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
+
 use anyhow::{bail, Context, Result};
 
-use crate::graph::Graph;
+use crate::graph::{Graph, GraphBatch, GraphView};
 use crate::model::{ConvType, FixedPointFormat, ModelConfig, Numerics};
-use crate::util::binio::Weights;
+use crate::util::binio::{Tensor, Weights};
+use crate::util::pool::par_map;
 
 /// PNA aggregator set (must match `configs.PNA_AGGREGATORS`).
 pub const PNA_AGGREGATORS: [Aggregator; 4] = [
@@ -36,7 +47,7 @@ pub const PNA_AGGREGATORS: [Aggregator; 4] = [
 pub const GIN_EPS: f32 = 0.1;
 
 /// A dense row-major matrix of node embeddings.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Embeds {
     pub rows: usize,
     pub cols: usize,
@@ -52,6 +63,27 @@ impl Embeds {
         }
     }
 
+    /// Reshape to `rows × cols` and zero-fill. Capacity is retained, so a
+    /// warm buffer never reallocates for same-or-smaller shapes — the
+    /// basis of the zero-alloc workspace hot loop.
+    #[inline]
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape without zero-filling — for kernels that overwrite every
+    /// element anyway (avoids a second full pass over the buffer in the
+    /// hot loop). Stale values may remain until the kernel writes them.
+    #[inline]
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
@@ -63,47 +95,129 @@ impl Embeds {
     }
 }
 
-/// One conv layer's weights, resolved from the GNNW bundle.
+/// One conv layer's weights, resolved from the GNNW bundle. Tensor data is
+/// `Arc`-shared with the [`Weights`] bundle — resolving an engine (or
+/// cloning one per backend replica) copies no weight data.
 #[derive(Debug, Clone)]
 enum ConvWeights {
-    Gcn { w: Mat, b: Vec<f32> },
-    Sage { w_root: Mat, w_nbr: Mat, b: Vec<f32> },
-    Gin { w1: Mat, b1: Vec<f32>, w2: Mat, b2: Vec<f32> },
-    Pna { w: Mat, b: Vec<f32> },
+    Gcn { w: Mat, b: Arc<[f32]> },
+    Sage { w_root: Mat, w_nbr: Mat, b: Arc<[f32]> },
+    Gin { w1: Mat, b1: Arc<[f32]>, w2: Mat, b2: Arc<[f32]> },
+    Pna { w: Mat, b: Arc<[f32]> },
 }
 
-/// Row-major (in_dim x out_dim) weight matrix.
+/// Row-major (in_dim x out_dim) weight matrix (shared storage).
 #[derive(Debug, Clone)]
 pub(crate) struct Mat {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f32>,
+    pub data: Arc<[f32]>,
 }
 
 impl Mat {
-    fn from_tensor(t: &crate::util::binio::Tensor) -> Result<Mat> {
+    fn from_tensor(t: &Tensor) -> Result<Mat> {
         if t.dims.len() != 2 {
             bail!("weight `{}` is not 2-D", t.name);
         }
         Ok(Mat {
             rows: t.dims[0],
             cols: t.dims[1],
-            data: t.data.clone(),
+            data: t.data.clone(), // Arc bump, not a copy
         })
     }
 }
 
+/// Reusable per-worker scratch buffers: current/next embeddings, two
+/// kernel temporaries, the pooled vector, the MLP ping-pong pair, and the
+/// streaming-aggregation partials. After the first call at a given model
+/// shape, a forward pass performs no heap allocation besides its output.
+struct Scratch {
+    h: Embeds,
+    out: Embeds,
+    t0: Embeds,
+    t1: Embeds,
+    pooled: Vec<f32>,
+    z: Vec<f32>,
+    z2: Vec<f32>,
+    agg: PartialAgg,
+}
+
+impl Default for Scratch {
+    fn default() -> Scratch {
+        Scratch {
+            h: Embeds::default(),
+            out: Embeds::default(),
+            t0: Embeds::default(),
+            t1: Embeds::default(),
+            pooled: Vec::new(),
+            z: Vec::new(),
+            z2: Vec::new(),
+            agg: PartialAgg::new(0),
+        }
+    }
+}
+
+/// A pool of per-worker [`Scratch`] slots backing the batched forward.
+/// One workspace is meant to live as long as its worker (coordinator
+/// backend, bench loop, ...) so buffers stay warm across batches.
+pub struct Workspace {
+    slots: Vec<Mutex<Scratch>>,
+}
+
+impl Workspace {
+    /// A workspace with `threads` scratch slots (≥ 1). Batched forwards
+    /// run on at most this many threads.
+    pub fn new(threads: usize) -> Workspace {
+        Workspace {
+            slots: (0..threads.max(1)).map(|_| Mutex::new(Scratch::default())).collect(),
+        }
+    }
+
+    /// Single-threaded workspace (serial batch execution).
+    pub fn single() -> Workspace {
+        Workspace::new(1)
+    }
+
+    /// One slot per available hardware thread.
+    pub fn with_default_threads() -> Workspace {
+        Workspace::new(crate::util::pool::default_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Grab any free scratch slot. Callers (the batch runner) never run
+    /// more workers than slots, so a free slot always exists.
+    fn acquire(&self) -> MutexGuard<'_, Scratch> {
+        loop {
+            for slot in &self.slots {
+                match slot.try_lock() {
+                    Ok(g) => return g,
+                    Err(TryLockError::Poisoned(p)) => return p.into_inner(),
+                    Err(TryLockError::WouldBlock) => {}
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
 /// The inference engine for one model configuration + weight set.
+/// Cloning an engine is cheap (config and all tensors are `Arc`-shared),
+/// which is how backend replicas share one weight copy.
+#[derive(Clone)]
 pub struct Engine {
-    pub cfg: ModelConfig,
+    pub cfg: Arc<ModelConfig>,
     /// log(mean_degree + 1): the PNA scaler normalizer δ
     pub pna_delta: f32,
     convs: Vec<ConvWeights>,
-    mlp: Vec<(Mat, Vec<f32>)>,
+    mlp: Vec<(Mat, Arc<[f32]>)>,
 }
 
 impl Engine {
-    /// Resolve weights against the config's layer structure.
+    /// Resolve weights against the config's layer structure (no tensor
+    /// data is copied — matrices borrow the bundle's `Arc` storage).
     pub fn new(cfg: ModelConfig, weights: &Weights, mean_degree: f64) -> Result<Engine> {
         cfg.validate()?;
         let mut convs = Vec::with_capacity(cfg.gnn_num_layers);
@@ -113,7 +227,7 @@ impl Engine {
                 Mat::from_tensor(weights.get(&key(suffix))?)
                     .with_context(|| format!("layer {l} weight {suffix}"))
             };
-            let get_vec = |suffix: &str| -> Result<Vec<f32>> {
+            let get_vec = |suffix: &str| -> Result<Arc<[f32]>> {
                 Ok(weights.get(&key(suffix))?.data.clone())
             };
             convs.push(match cfg.gnn_conv {
@@ -146,7 +260,7 @@ impl Engine {
         }
         Ok(Engine {
             pna_delta: ((mean_degree + 1.0).ln()) as f32,
-            cfg,
+            cfg: Arc::new(cfg),
             convs,
             mlp,
         })
@@ -154,13 +268,13 @@ impl Engine {
 
     /// f32 forward pass over one graph. `x` is [num_nodes * in_dim].
     pub fn forward(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
-        self.run(g, x, None)
+        self.run_view(g.view(), x, None, &mut Scratch::default())
     }
 
     /// True fixed-point forward pass (quantizes inputs, weights, and every
     /// intermediate to the config's ap_fixed format).
     pub fn forward_fixed(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
-        self.run(g, x, Some(self.cfg.fpx))
+        self.run_view(g.view(), x, Some(self.cfg.fpx), &mut Scratch::default())
     }
 
     /// Forward with the numerics selected by the config.
@@ -171,8 +285,77 @@ impl Engine {
         }
     }
 
-    fn run(&self, g: &Graph, x: &[f32], q: Option<FixedPointFormat>) -> Result<Vec<f32>> {
-        let cfg = &self.cfg;
+    /// f32 forward over a borrowed graph view (single graph or one slot of
+    /// a packed batch).
+    pub fn forward_view(&self, g: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
+        self.run_view(g, x, None, &mut Scratch::default())
+    }
+
+    /// f32 forward over a packed batch, parallelized over graphs across
+    /// the workspace's scratch slots. Outputs are bit-identical to calling
+    /// [`Engine::forward`] per graph.
+    pub fn forward_batch(&self, batch: &GraphBatch, ws: &mut Workspace) -> Result<Vec<Vec<f32>>> {
+        self.batch_run(batch, None, ws).into_iter().collect()
+    }
+
+    /// Fixed-point twin of [`Engine::forward_batch`].
+    pub fn forward_batch_fixed(
+        &self,
+        batch: &GraphBatch,
+        ws: &mut Workspace,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.batch_run(batch, Some(self.cfg.fpx), ws).into_iter().collect()
+    }
+
+    /// Batched forward with the numerics selected by the config.
+    pub fn forward_batch_auto(
+        &self,
+        batch: &GraphBatch,
+        ws: &mut Workspace,
+    ) -> Result<Vec<Vec<f32>>> {
+        match self.cfg.numerics {
+            Numerics::Float => self.forward_batch(batch, ws),
+            Numerics::Fixed => self.forward_batch_fixed(batch, ws),
+        }
+    }
+
+    /// Per-graph results of an f32 batched forward — one bad graph (e.g.
+    /// over MAX_NODES) fails alone instead of poisoning the whole batch.
+    /// This is the serving coordinator's entry point.
+    pub fn forward_batch_results(
+        &self,
+        batch: &GraphBatch,
+        ws: &mut Workspace,
+    ) -> Vec<Result<Vec<f32>>> {
+        self.batch_run(batch, None, ws)
+    }
+
+    fn batch_run(
+        &self,
+        batch: &GraphBatch,
+        q: Option<FixedPointFormat>,
+        ws: &mut Workspace,
+    ) -> Vec<Result<Vec<f32>>> {
+        let n = batch.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let ws: &Workspace = ws;
+        let threads = ws.threads().min(n);
+        par_map(n, threads, |i| {
+            let mut s = ws.acquire();
+            self.run_view(batch.view(i), batch.x_view(i), q, &mut s)
+        })
+    }
+
+    fn run_view(
+        &self,
+        g: GraphView<'_>,
+        x: &[f32],
+        q: Option<FixedPointFormat>,
+        s: &mut Scratch,
+    ) -> Result<Vec<f32>> {
+        let cfg = &*self.cfg;
         let n = g.num_nodes;
         if x.len() != n * cfg.graph_input_dim {
             bail!(
@@ -186,73 +369,129 @@ impl Engine {
             bail!("graph exceeds MAX_NODES/MAX_EDGES");
         }
 
-        let mut h = Embeds {
-            rows: n,
-            cols: cfg.graph_input_dim,
-            data: x.to_vec(),
-        };
-        layers::maybe_quantize(&mut h.data, q);
+        s.h.reset(n, cfg.graph_input_dim);
+        s.h.data.copy_from_slice(x);
+        layers::maybe_quantize(&mut s.h.data, q);
 
         for conv in self.convs.iter() {
-            let mut out = self.conv_layer(conv, g, &h, q);
+            match conv {
+                ConvWeights::Gcn { w, b } => {
+                    layers::gcn_conv_into(g, &s.h, w, b, q, &mut s.t0, &mut s.out)
+                }
+                ConvWeights::Sage { w_root, w_nbr, b } => layers::sage_conv_into(
+                    g, &s.h, w_root, w_nbr, b, q, &mut s.t0, &mut s.t1, &mut s.agg, &mut s.out,
+                ),
+                ConvWeights::Gin { w1, b1, w2, b2 } => layers::gin_conv_into(
+                    g, &s.h, w1, b1, w2, b2, q, &mut s.t0, &mut s.t1, &mut s.agg, &mut s.out,
+                ),
+                ConvWeights::Pna { w, b } => layers::pna_conv_into(
+                    g,
+                    &s.h,
+                    w,
+                    b,
+                    self.pna_delta,
+                    q,
+                    &mut s.t0,
+                    &mut s.t1,
+                    &mut s.agg,
+                    &mut s.out,
+                ),
+            }
             // activation
-            for v in out.data.iter_mut() {
+            for v in s.out.data.iter_mut() {
                 *v = cfg.gnn_activation.apply(*v);
             }
             // skip connection when dims line up (mirrors L2)
-            if cfg.gnn_skip_connections && out.cols == h.cols {
-                for (o, &prev) in out.data.iter_mut().zip(&h.data) {
+            if cfg.gnn_skip_connections && s.out.cols == s.h.cols {
+                for (o, &prev) in s.out.data.iter_mut().zip(&s.h.data) {
                     *o += prev;
                 }
             }
-            layers::maybe_quantize(&mut out.data, q);
-            h = out;
+            layers::maybe_quantize(&mut s.out.data, q);
+            std::mem::swap(&mut s.h, &mut s.out);
         }
 
         // global pooling
-        let mut pooled = Vec::with_capacity(cfg.pooled_dim());
-        for p in &cfg.global_pooling {
-            pooled.extend(layers::global_pool(&h, *p));
+        let f = s.h.cols;
+        s.pooled.clear();
+        s.pooled.resize(cfg.pooled_dim(), 0.0);
+        for (pi, p) in cfg.global_pooling.iter().enumerate() {
+            layers::global_pool_into(&s.h, *p, &mut s.pooled[pi * f..(pi + 1) * f]);
         }
-        layers::maybe_quantize(&mut pooled, q);
+        layers::maybe_quantize(&mut s.pooled, q);
 
         // MLP head
         let n_mlp = self.mlp.len();
-        let mut z = pooled;
+        s.z.clear();
+        s.z.extend_from_slice(&s.pooled);
         for (l, (w, b)) in self.mlp.iter().enumerate() {
-            let mut out = layers::vec_linear(&z, w, b, q);
+            layers::vec_linear_into(&s.z, w, b, q, &mut s.z2);
             if l < n_mlp - 1 {
-                for v in out.iter_mut() {
+                for v in s.z2.iter_mut() {
                     *v = cfg.mlp_activation.apply(*v);
                 }
             }
-            layers::maybe_quantize(&mut out, q);
-            z = out;
+            layers::maybe_quantize(&mut s.z2, q);
+            std::mem::swap(&mut s.z, &mut s.z2);
         }
-        Ok(z)
+        Ok(s.z.clone())
+    }
+}
+
+/// Deterministic synthetic weight bundle matching `cfg`'s layer structure
+/// — lets tests and benches exercise the engine without `make artifacts`.
+pub fn synth_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    use crate::util::rng::Rng;
+
+    fn push(w: &mut Weights, rng: &mut Rng, name: String, dims: Vec<usize>) {
+        let total: usize = dims.iter().product();
+        let scale = 1.0 / (dims[0].max(1) as f32).sqrt();
+        let data: Vec<f32> = (0..total)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32 * scale)
+            .collect();
+        w.push(Tensor {
+            name,
+            dims,
+            data: data.into(),
+        });
     }
 
-    fn conv_layer(
-        &self,
-        conv: &ConvWeights,
-        g: &Graph,
-        h: &Embeds,
-        q: Option<FixedPointFormat>,
-    ) -> Embeds {
-        match conv {
-            ConvWeights::Gcn { w, b } => layers::gcn_conv(g, h, w, b, q),
-            ConvWeights::Sage { w_root, w_nbr, b } => layers::sage_conv(g, h, w_root, w_nbr, b, q),
-            ConvWeights::Gin { w1, b1, w2, b2 } => {
-                layers::gin_conv(g, h, w1, b1, w2, b2, q)
+    let mut rng = Rng::seed_from(seed);
+    let mut w = Weights::default();
+    for (l, (din, dout)) in cfg.layer_dims().into_iter().enumerate() {
+        match cfg.gnn_conv {
+            ConvType::Gcn => {
+                push(&mut w, &mut rng, format!("gnn.{l}.w"), vec![din, dout]);
+                push(&mut w, &mut rng, format!("gnn.{l}.b"), vec![dout]);
             }
-            ConvWeights::Pna { w, b } => layers::pna_conv(g, h, w, b, self.pna_delta, q),
+            ConvType::Sage => {
+                push(&mut w, &mut rng, format!("gnn.{l}.w_root"), vec![din, dout]);
+                push(&mut w, &mut rng, format!("gnn.{l}.w_nbr"), vec![din, dout]);
+                push(&mut w, &mut rng, format!("gnn.{l}.b"), vec![dout]);
+            }
+            ConvType::Gin => {
+                push(&mut w, &mut rng, format!("gnn.{l}.w1"), vec![din, dout]);
+                push(&mut w, &mut rng, format!("gnn.{l}.b1"), vec![dout]);
+                push(&mut w, &mut rng, format!("gnn.{l}.w2"), vec![dout, dout]);
+                push(&mut w, &mut rng, format!("gnn.{l}.b2"), vec![dout]);
+            }
+            ConvType::Pna => {
+                push(&mut w, &mut rng, format!("gnn.{l}.w"), vec![din * 13, dout]);
+                push(&mut w, &mut rng, format!("gnn.{l}.b"), vec![dout]);
+            }
         }
     }
+    for (l, (din, dout)) in cfg.mlp_dims().into_iter().enumerate() {
+        push(&mut w, &mut rng, format!("mlp.{l}.w"), vec![din, dout]);
+        push(&mut w, &mut rng, format!("mlp.{l}.b"), vec![dout]);
+    }
+    w
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::datasets;
     use crate::runtime::Manifest;
     use crate::util::binio::{read_testvecs, read_weights};
 
@@ -329,5 +568,140 @@ mod tests {
         let big = Graph::from_coo(meta.config.max_nodes + 1, &[]);
         let x = vec![0.0; (meta.config.max_nodes + 1) * meta.config.graph_input_dim];
         assert!(engine.forward(&big, &x).is_err());
+    }
+
+    // ------------------------------------------------ batched execution
+
+    fn tiny_cfg(conv: ConvType) -> ModelConfig {
+        ModelConfig {
+            name: format!("tiny_{}", conv.as_str()),
+            graph_input_dim: datasets::ESOL.node_dim,
+            gnn_conv: conv,
+            gnn_hidden_dim: 8,
+            gnn_out_dim: 6,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 7,
+            mlp_num_layers: 1,
+            output_dim: 3,
+            ..ModelConfig::default()
+        }
+    }
+
+    fn tiny_engine(conv: ConvType) -> Engine {
+        let cfg = tiny_cfg(conv);
+        let weights = synth_weights(&cfg, 42);
+        Engine::new(cfg, &weights, datasets::ESOL.mean_degree).unwrap()
+    }
+
+    fn esol_batch(count: usize) -> (Vec<datasets::MolGraph>, GraphBatch) {
+        let graphs = datasets::gen_dataset(&datasets::ESOL, count, 5, 600, 600);
+        let batch = GraphBatch::pack(graphs.iter().map(|g| (&g.graph, g.x.as_slice())));
+        (graphs, batch)
+    }
+
+    /// The batch-path acceptance gate: packed forward_batch must be
+    /// *bit-identical* to per-graph forward for every conv type.
+    #[test]
+    fn forward_batch_bit_identical_to_forward_all_convs() {
+        let (graphs, batch) = esol_batch(9);
+        for conv in ConvType::ALL {
+            let engine = tiny_engine(conv);
+            let singles: Vec<Vec<f32>> = graphs
+                .iter()
+                .map(|g| engine.forward(&g.graph, &g.x).unwrap())
+                .collect();
+            let mut ws = Workspace::new(4);
+            let batched = engine.forward_batch(&batch, &mut ws).unwrap();
+            assert_eq!(batched.len(), singles.len());
+            for (i, (a, b)) in batched.iter().zip(&singles).enumerate() {
+                assert_eq!(a, b, "{conv:?} graph {i} diverged from single-graph path");
+            }
+        }
+    }
+
+    /// Same gate for the true-quantization path: both numerics modes share
+    /// the batched control flow.
+    #[test]
+    fn forward_batch_fixed_bit_identical_to_forward_fixed() {
+        let (graphs, batch) = esol_batch(6);
+        let engine = tiny_engine(ConvType::Gcn);
+        let singles: Vec<Vec<f32>> = graphs
+            .iter()
+            .map(|g| engine.forward_fixed(&g.graph, &g.x).unwrap())
+            .collect();
+        let mut ws = Workspace::new(3);
+        let batched = engine.forward_batch_fixed(&batch, &mut ws).unwrap();
+        for (a, b) in batched.iter().zip(&singles) {
+            assert_eq!(a, b);
+        }
+    }
+
+    /// Warm workspaces must not leak state between batches: re-running the
+    /// same batch (and then a differently-shaped one) stays bit-exact.
+    #[test]
+    fn workspace_reuse_is_stateless_across_batches() {
+        let engine = tiny_engine(ConvType::Gin);
+        let (graphs, batch) = esol_batch(5);
+        let mut ws = Workspace::new(2);
+        let first = engine.forward_batch(&batch, &mut ws).unwrap();
+        let again = engine.forward_batch(&batch, &mut ws).unwrap();
+        assert_eq!(first, again);
+        // a smaller batch through the same (now warm, larger) buffers
+        let sub = GraphBatch::pack(graphs.iter().take(2).map(|g| (&g.graph, g.x.as_slice())));
+        let small = engine.forward_batch(&sub, &mut ws).unwrap();
+        assert_eq!(small.as_slice(), &first[..2]);
+    }
+
+    /// One bad graph fails alone in the per-result API; the whole-batch
+    /// API propagates the error.
+    #[test]
+    fn batch_isolates_per_graph_errors() {
+        let engine = tiny_engine(ConvType::Gcn);
+        let mut cfg = tiny_cfg(ConvType::Gcn);
+        cfg.max_nodes = 4; // force a rejection below
+        let strict = Engine::new(cfg, &synth_weights(&tiny_cfg(ConvType::Gcn), 42), 2.0).unwrap();
+
+        let ok = Graph::from_coo(3, &[(0, 1), (1, 2)]);
+        let big = Graph::from_coo(9, &[]);
+        let dim = datasets::ESOL.node_dim;
+        let x_ok = vec![0.25; 3 * dim];
+        let x_big = vec![0.25; 9 * dim];
+        let batch = GraphBatch::pack([
+            (&ok, x_ok.as_slice()),
+            (&big, x_big.as_slice()),
+            (&ok, x_ok.as_slice()),
+        ]);
+
+        let mut ws = Workspace::single();
+        let results = strict.forward_batch_results(&batch, &mut ws);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok());
+        assert!(strict.forward_batch(&batch, &mut ws).is_err());
+        // the permissive engine takes all three
+        assert!(engine.forward_batch(&batch, &mut ws).is_ok());
+    }
+
+    #[test]
+    fn empty_batch_is_empty_result() {
+        let engine = tiny_engine(ConvType::Sage);
+        let batch = GraphBatch::pack(std::iter::empty::<(&Graph, &[f32])>());
+        let mut ws = Workspace::single();
+        assert!(engine.forward_batch(&batch, &mut ws).unwrap().is_empty());
+    }
+
+    /// Engine clones share weight storage (Arc) — no tensor copies.
+    #[test]
+    fn engine_clone_shares_weight_storage() {
+        let engine = tiny_engine(ConvType::Gcn);
+        let replica = engine.clone();
+        let (a, b) = match (&engine.convs[0], &replica.convs[0]) {
+            (ConvWeights::Gcn { w: wa, .. }, ConvWeights::Gcn { w: wb, .. }) => {
+                (wa.data.clone(), wb.data.clone())
+            }
+            _ => unreachable!(),
+        };
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(Arc::ptr_eq(&engine.cfg, &replica.cfg));
     }
 }

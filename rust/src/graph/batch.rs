@@ -1,0 +1,332 @@
+//! Packed multi-graph batches — the batch-native unit of work for the
+//! serving path (paper §VI-C host loop; GenGNN-style multi-graph
+//! streaming). N graphs are packed into one contiguous node/edge arena
+//! with per-graph offset tables, mirroring how the generated accelerator
+//! streams neighbor tables: one allocation per batch instead of per
+//! request, and zero-copy per-graph views for the engine's workers.
+//!
+//! Node ids stay *local* to each graph (the accelerator's neighbor table
+//! is per-graph too), so a packed view is bit-identical input to the
+//! single-graph path — the engine's batched forward must and does produce
+//! exactly the same f32 outputs.
+
+use super::Graph;
+use crate::runtime::GraphInput;
+
+/// A borrowed, zero-copy view of one graph's topology — either a whole
+/// [`Graph`] (via [`Graph::view`]) or one slot of a [`GraphBatch`].
+#[derive(Debug, Clone, Copy)]
+pub struct GraphView<'a> {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    /// (src, dst) pairs in input order, local node ids
+    pub edges: &'a [(u32, u32)],
+    /// neighbor table: source node of each edge, grouped by destination
+    pub nbr: &'a [u32],
+    /// neighbor offsets: node i's neighbors are nbr[offsets[i]..offsets[i+1]]
+    pub offsets: &'a [u32],
+    /// in-degree per node
+    pub in_deg: &'a [u32],
+}
+
+impl<'a> GraphView<'a> {
+    /// Neighbor slice (sources) of a destination node.
+    #[inline]
+    pub fn neighbors(&self, node: usize) -> &'a [u32] {
+        let lo = self.offsets[node] as usize;
+        let hi = self.offsets[node + 1] as usize;
+        &self.nbr[lo..hi]
+    }
+
+    #[inline]
+    pub fn in_degree(&self, node: usize) -> u32 {
+        self.in_deg[node]
+    }
+
+    /// Pad node features + COO into the accelerator's static wire layout
+    /// (same layout as [`Graph::to_input`]).
+    pub fn to_input(&self, x: &[f32], node_dim: usize, max_nodes: usize, max_edges: usize) -> GraphInput {
+        assert_eq!(x.len(), self.num_nodes * node_dim);
+        assert!(self.num_nodes <= max_nodes && self.num_edges <= max_edges);
+        let mut xp = vec![0f32; max_nodes * node_dim];
+        xp[..x.len()].copy_from_slice(x);
+        let mut edges = vec![0i32; max_edges * 2];
+        for (i, &(s, d)) in self.edges.iter().enumerate() {
+            edges[i * 2] = s as i32;
+            edges[i * 2 + 1] = d as i32;
+        }
+        GraphInput {
+            x: xp,
+            edges,
+            num_nodes: self.num_nodes as i32,
+            num_edges: self.num_edges as i32,
+        }
+    }
+
+    /// Materialize an owned [`Graph`] (tests / fallback paths).
+    pub fn to_graph(&self) -> Graph {
+        Graph::from_coo(self.num_nodes, self.edges)
+    }
+}
+
+/// N graphs packed into one node/edge arena with per-graph offsets.
+///
+/// Layout: all per-node tables (`in_deg`, features) and per-edge tables
+/// (`nbr`, COO `edges`) are concatenated in graph order; `node_offsets` /
+/// `edge_offsets` / `x_offsets` are exclusive prefix sums delimiting each
+/// graph's slice. Each graph's CSR `offsets` array (length nodes+1,
+/// 0-based) is stored verbatim, so `view(i)` returns slices byte-identical
+/// to the original graph's tables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphBatch {
+    /// per-graph node prefix, len num_graphs+1
+    node_offsets: Vec<u32>,
+    /// per-graph edge prefix, len num_graphs+1
+    edge_offsets: Vec<u32>,
+    /// per-graph feature prefix (in f32 elements), len num_graphs+1
+    x_offsets: Vec<usize>,
+    /// packed neighbor tables (local node ids)
+    nbr: Vec<u32>,
+    /// packed per-graph CSR offset arrays, each 0-based, len nodes_i+1
+    offsets: Vec<u32>,
+    /// packed in-degree tables
+    in_deg: Vec<u32>,
+    /// packed COO edge lists (local node ids)
+    edges: Vec<(u32, u32)>,
+    /// packed node features, row-major per graph
+    x: Vec<f32>,
+}
+
+impl GraphBatch {
+    /// Pack graphs + their node features into one arena. Accepts any
+    /// iterator of `(graph, features)` pairs; features may have different
+    /// widths per graph (the per-graph slice boundaries are recorded).
+    pub fn pack<'a, I>(items: I) -> GraphBatch
+    where
+        I: IntoIterator<Item = (&'a Graph, &'a [f32])>,
+    {
+        let mut b = GraphBatch {
+            node_offsets: vec![0],
+            edge_offsets: vec![0],
+            x_offsets: vec![0],
+            nbr: Vec::new(),
+            offsets: Vec::new(),
+            in_deg: Vec::new(),
+            edges: Vec::new(),
+            x: Vec::new(),
+        };
+        for (g, x) in items {
+            b.push(g, x);
+        }
+        b
+    }
+
+    /// Append one graph to the arena.
+    pub fn push(&mut self, g: &Graph, x: &[f32]) {
+        let last_nodes = *self.node_offsets.last().unwrap();
+        let last_edges = *self.edge_offsets.last().unwrap();
+        self.node_offsets.push(last_nodes + g.num_nodes as u32);
+        self.edge_offsets.push(last_edges + g.num_edges as u32);
+        self.x_offsets.push(self.x_offsets.last().unwrap() + x.len());
+        self.nbr.extend_from_slice(&g.nbr);
+        self.offsets.extend_from_slice(&g.offsets);
+        self.in_deg.extend_from_slice(&g.in_deg);
+        self.edges.extend_from_slice(&g.edges);
+        self.x.extend_from_slice(x);
+    }
+
+    /// Number of graphs in the batch.
+    pub fn len(&self) -> usize {
+        self.node_offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        *self.node_offsets.last().unwrap() as usize
+    }
+
+    pub fn total_edges(&self) -> usize {
+        *self.edge_offsets.last().unwrap() as usize
+    }
+
+    /// Zero-copy view of graph `i`.
+    pub fn view(&self, i: usize) -> GraphView<'_> {
+        assert!(i < self.len(), "graph index {i} out of range");
+        let n_lo = self.node_offsets[i] as usize;
+        let n_hi = self.node_offsets[i + 1] as usize;
+        let e_lo = self.edge_offsets[i] as usize;
+        let e_hi = self.edge_offsets[i + 1] as usize;
+        // graph i's CSR offsets slice starts after i earlier (n_j+1)-length
+        // arrays: total earlier nodes + i sentinel entries.
+        let off_lo = n_lo + i;
+        let off_hi = n_hi + i + 1;
+        GraphView {
+            num_nodes: n_hi - n_lo,
+            num_edges: e_hi - e_lo,
+            edges: &self.edges[e_lo..e_hi],
+            nbr: &self.nbr[e_lo..e_hi],
+            offsets: &self.offsets[off_lo..off_hi],
+            in_deg: &self.in_deg[n_lo..n_hi],
+        }
+    }
+
+    /// Node-feature slice of graph `i`.
+    pub fn x_view(&self, i: usize) -> &[f32] {
+        &self.x[self.x_offsets[i]..self.x_offsets[i + 1]]
+    }
+
+    /// Structural invariant check (tests / quickcheck harness).
+    pub fn check(&self) -> bool {
+        let n = self.len();
+        if self.node_offsets.len() != n + 1
+            || self.edge_offsets.len() != n + 1
+            || self.x_offsets.len() != n + 1
+        {
+            return false;
+        }
+        if self.nbr.len() != self.total_edges()
+            || self.edges.len() != self.total_edges()
+            || self.in_deg.len() != self.total_nodes()
+            || self.offsets.len() != self.total_nodes() + n
+        {
+            return false;
+        }
+        for i in 0..n {
+            let v = self.view(i);
+            if v.offsets.len() != v.num_nodes + 1 {
+                return false;
+            }
+            if v.offsets.first().copied().unwrap_or(0) != 0 {
+                return false;
+            }
+            if *v.offsets.last().unwrap_or(&0) as usize != v.num_edges {
+                return false;
+            }
+            if !v.to_graph().check() {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn diamond() -> Graph {
+        Graph::from_coo(4, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)])
+    }
+
+    fn chain3() -> Graph {
+        Graph::from_coo(3, &[(0, 1), (1, 2)])
+    }
+
+    #[test]
+    fn single_graph_view_equals_graph() {
+        let g = diamond();
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let b = GraphBatch::pack([(&g, x.as_slice())]);
+        assert_eq!(b.len(), 1);
+        let v = b.view(0);
+        assert_eq!(v.num_nodes, g.num_nodes);
+        assert_eq!(v.num_edges, g.num_edges);
+        assert_eq!(v.nbr, g.nbr.as_slice());
+        assert_eq!(v.offsets, g.offsets.as_slice());
+        assert_eq!(v.in_deg, g.in_deg.as_slice());
+        assert_eq!(v.edges, g.edges.as_slice());
+        assert_eq!(b.x_view(0), x.as_slice());
+        assert!(b.check());
+    }
+
+    #[test]
+    fn pack_roundtrip_views_equal_originals() {
+        let graphs = [diamond(), chain3(), Graph::from_coo(2, &[(1, 0)])];
+        let feats: Vec<Vec<f32>> = graphs
+            .iter()
+            .map(|g| (0..g.num_nodes * 2).map(|v| v as f32 * 0.5).collect())
+            .collect();
+        let b = GraphBatch::pack(graphs.iter().zip(feats.iter().map(|f| f.as_slice())));
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.total_nodes(), 9);
+        assert_eq!(b.total_edges(), 8);
+        for (i, g) in graphs.iter().enumerate() {
+            let v = b.view(i);
+            assert_eq!(v.num_nodes, g.num_nodes, "graph {i}");
+            assert_eq!(v.nbr, g.nbr.as_slice(), "graph {i}");
+            assert_eq!(v.offsets, g.offsets.as_slice(), "graph {i}");
+            assert_eq!(v.in_deg, g.in_deg.as_slice(), "graph {i}");
+            assert_eq!(v.edges, g.edges.as_slice(), "graph {i}");
+            assert_eq!(b.x_view(i), feats[i].as_slice(), "graph {i}");
+            // neighbor queries agree node by node
+            for node in 0..g.num_nodes {
+                assert_eq!(v.neighbors(node), g.neighbors(node));
+                assert_eq!(v.in_degree(node), g.in_degree(node));
+            }
+            assert_eq!(&v.to_graph(), g);
+        }
+        assert!(b.check());
+    }
+
+    #[test]
+    fn empty_batch_and_empty_graphs() {
+        let b = GraphBatch::pack(std::iter::empty::<(&Graph, &[f32])>());
+        assert!(b.is_empty());
+        assert_eq!(b.total_nodes(), 0);
+        assert!(b.check());
+
+        // graphs with zero edges pack fine
+        let g = Graph::from_coo(3, &[]);
+        let x = [0.0f32; 3];
+        let b = GraphBatch::pack([(&g, x.as_slice()), (&g, x.as_slice())]);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.total_edges(), 0);
+        assert!(b.view(1).neighbors(0).is_empty());
+        assert!(b.check());
+    }
+
+    #[test]
+    fn view_to_input_matches_graph_to_input() {
+        let g = diamond();
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let b = GraphBatch::pack([(&g, x.as_slice())]);
+        let a = g.to_input(&x, 2, 6, 8);
+        let v = b.view(0).to_input(b.x_view(0), 2, 6, 8);
+        assert_eq!(a.x, v.x);
+        assert_eq!(a.edges, v.edges);
+        assert_eq!(a.num_nodes, v.num_nodes);
+        assert_eq!(a.num_edges, v.num_edges);
+    }
+
+    #[test]
+    fn property_random_batches_roundtrip() {
+        let mut rng = Rng::seed_from(1234);
+        for case in 0..60 {
+            let count = rng.range(1, 12);
+            let graphs: Vec<Graph> = (0..count)
+                .map(|_| {
+                    let n = rng.range(1, 30);
+                    let e = rng.range(0, 60);
+                    let edges: Vec<(u32, u32)> = (0..e)
+                        .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+                        .collect();
+                    Graph::from_coo(n, &edges)
+                })
+                .collect();
+            let feats: Vec<Vec<f32>> = graphs
+                .iter()
+                .map(|g| (0..g.num_nodes * 3).map(|v| v as f32).collect())
+                .collect();
+            let b = GraphBatch::pack(graphs.iter().zip(feats.iter().map(|f| f.as_slice())));
+            assert!(b.check(), "case {case}");
+            for (i, g) in graphs.iter().enumerate() {
+                assert_eq!(&b.view(i).to_graph(), g, "case {case} graph {i}");
+                assert_eq!(b.x_view(i), feats[i].as_slice());
+            }
+        }
+    }
+}

@@ -6,6 +6,10 @@
 //! the HLS simulator both consume this exact structure; the L2 JAX model
 //! derives the same tables inside the artifact (`model.build_tables`).
 
+pub mod batch;
+
+pub use batch::{GraphBatch, GraphView};
+
 use crate::runtime::GraphInput;
 
 /// A directed graph in COO form with derived CSR-style neighbor tables.
@@ -65,6 +69,19 @@ impl Graph {
         self.in_deg[node]
     }
 
+    /// Borrow this graph as the zero-copy view type shared with
+    /// [`GraphBatch`] — the engine and backends consume only views.
+    pub fn view(&self) -> GraphView<'_> {
+        GraphView {
+            num_nodes: self.num_nodes,
+            num_edges: self.num_edges,
+            edges: &self.edges,
+            nbr: &self.nbr,
+            offsets: &self.offsets,
+            in_deg: &self.in_deg,
+        }
+    }
+
     /// Neighbor slice (sources) of a destination node.
     pub fn neighbors(&self, node: usize) -> &[u32] {
         let lo = self.offsets[node] as usize;
@@ -81,21 +98,7 @@ impl Graph {
 
     /// Pad node features + COO into the accelerator's static wire layout.
     pub fn to_input(&self, x: &[f32], node_dim: usize, max_nodes: usize, max_edges: usize) -> GraphInput {
-        assert_eq!(x.len(), self.num_nodes * node_dim);
-        assert!(self.num_nodes <= max_nodes && self.num_edges <= max_edges);
-        let mut xp = vec![0f32; max_nodes * node_dim];
-        xp[..x.len()].copy_from_slice(x);
-        let mut edges = vec![0i32; max_edges * 2];
-        for (i, &(s, d)) in self.edges.iter().enumerate() {
-            edges[i * 2] = s as i32;
-            edges[i * 2 + 1] = d as i32;
-        }
-        GraphInput {
-            x: xp,
-            edges,
-            num_nodes: self.num_nodes as i32,
-            num_edges: self.num_edges as i32,
-        }
+        self.view().to_input(x, node_dim, max_nodes, max_edges)
     }
 
     /// Structural invariant check (used by tests and the quickcheck harness).

@@ -14,6 +14,14 @@
 //!   design-space exploration ([`dse`]), the PJRT deployment runtime
 //!   ([`runtime`]), baselines ([`baselines`]), the fixed/float testbench
 //!   ([`testbench`]), and the serving coordinator ([`coordinator`]).
+//!
+//! The serving/batch path runs end-to-end on packed batches:
+//! request → [`coordinator`] batcher → [`graph::GraphBatch`] arena →
+//! [`engine::Engine::forward_batch`] over per-worker zero-alloc
+//! [`engine::Workspace`]s (parallelized via [`util::pool::par_map`]),
+//! with per-graph [`graph::GraphView`]s keeping batched outputs
+//! bit-identical to the single-graph path. `examples/serve_molecules.rs`
+//! drives the whole pipeline.
 
 pub mod baselines;
 pub mod bench;

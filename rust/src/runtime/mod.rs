@@ -13,6 +13,15 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+// With the `pjrt` feature the build environment must provide the real `xla`
+// bindings; without it, an offline stub with the same surface is compiled in
+// and `Runtime::cpu()` returns an error (artifact-gated callers skip).
+#[cfg(feature = "pjrt")]
+extern crate xla;
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+mod xla;
+
 use crate::model::ModelConfig;
 use crate::util::json::Json;
 

@@ -9,8 +9,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::Engine;
-use crate::graph::Graph;
+use crate::engine::{Engine, Workspace};
+use crate::graph::{Graph, GraphBatch};
 use crate::runtime::Executable;
 use crate::util::binio::TestVecs;
 use crate::util::stats::{mae, Summary};
@@ -31,15 +31,42 @@ impl TbReport {
     }
 }
 
+/// Shared error accounting: fold per-graph outputs against the golden
+/// expectations into a [`TbReport`] (both the per-graph and batched
+/// runners must use this so their error statistics can never diverge).
+fn report_from_outputs<'a>(
+    implementation: &str,
+    outputs: impl Iterator<Item = &'a Vec<f32>>,
+    vecs: &TestVecs,
+    times: &[f64],
+) -> TbReport {
+    let mut abs_sum = 0.0f64;
+    let mut abs_max = 0.0f64;
+    let mut n = 0usize;
+    for (out, gold) in outputs.zip(&vecs.graphs) {
+        let m = mae(out, &gold.expected);
+        abs_sum += m * out.len() as f64;
+        n += out.len();
+        for (a, b) in out.iter().zip(&gold.expected) {
+            abs_max = abs_max.max((a - b).abs() as f64);
+        }
+    }
+    TbReport {
+        implementation: implementation.to_string(),
+        graphs: vecs.graphs.len(),
+        mae: if n > 0 { abs_sum / n as f64 } else { 0.0 },
+        max_abs_err: abs_max,
+        runtime: Summary::of(times),
+    }
+}
+
 fn compare(
     implementation: &str,
     vecs: &TestVecs,
     mut run: impl FnMut(&GoldenCase) -> Result<Vec<f32>>,
 ) -> Result<TbReport> {
-    let mut abs_sum = 0.0f64;
-    let mut abs_max = 0.0f64;
-    let mut n = 0usize;
     let mut times = Vec::with_capacity(vecs.graphs.len());
+    let mut outputs = Vec::with_capacity(vecs.graphs.len());
     for gold in &vecs.graphs {
         let pairs: Vec<(u32, u32)> = gold
             .edges
@@ -51,22 +78,10 @@ fn compare(
             x: &gold.x,
         };
         let t0 = Instant::now();
-        let out = run(&case)?;
+        outputs.push(run(&case)?);
         times.push(t0.elapsed().as_secs_f64());
-        let m = mae(&out, &gold.expected);
-        abs_sum += m * out.len() as f64;
-        n += out.len();
-        for (a, b) in out.iter().zip(&gold.expected) {
-            abs_max = abs_max.max((a - b).abs() as f64);
-        }
     }
-    Ok(TbReport {
-        implementation: implementation.to_string(),
-        graphs: vecs.graphs.len(),
-        mae: if n > 0 { abs_sum / n as f64 } else { 0.0 },
-        max_abs_err: abs_max,
-        runtime: Summary::of(&times),
-    })
+    Ok(report_from_outputs(implementation, outputs.iter(), vecs, &times))
 }
 
 /// One unpadded golden graph handed to implementations under test.
@@ -93,6 +108,57 @@ pub fn run_pjrt(exe: &Executable, vecs: &TestVecs) -> Result<TbReport> {
         let input = c.graph.to_input(c.x, cfg.graph_input_dim, cfg.max_nodes, cfg.max_edges);
         exe.run(&input)
     })
+}
+
+/// Batched testbench core: pack all golden graphs into one [`GraphBatch`]
+/// and run the engine's batched forward. Per-graph runtime is the batch
+/// wall time amortized over the graphs, matching how the serving path
+/// accounts service time.
+fn compare_batched(
+    implementation: &str,
+    vecs: &TestVecs,
+    engine: &Engine,
+    fixed: bool,
+) -> Result<TbReport> {
+    let graphs: Vec<Graph> = vecs
+        .graphs
+        .iter()
+        .map(|gold| {
+            let pairs: Vec<(u32, u32)> = gold
+                .edges
+                .chunks_exact(2)
+                .map(|c| (c[0] as u32, c[1] as u32))
+                .collect();
+            Graph::from_coo(gold.num_nodes, &pairs)
+        })
+        .collect();
+    let batch = GraphBatch::pack(
+        graphs
+            .iter()
+            .zip(&vecs.graphs)
+            .map(|(g, gold)| (g, gold.x.as_slice())),
+    );
+    let mut ws = Workspace::with_default_threads();
+    let t0 = Instant::now();
+    let outputs = if fixed {
+        engine.forward_batch_fixed(&batch, &mut ws)?
+    } else {
+        engine.forward_batch(&batch, &mut ws)?
+    };
+    let per_graph = t0.elapsed().as_secs_f64() / batch.len().max(1) as f64;
+    let times = vec![per_graph; vecs.graphs.len()];
+    Ok(report_from_outputs(implementation, outputs.iter(), vecs, &times))
+}
+
+/// Batched testbench over the native engine (float path) — must agree
+/// exactly with [`run_engine_float`] on MAE (the batch path is bit-exact).
+pub fn run_engine_float_batched(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    compare_batched("engine-f32-batched", vecs, engine, false)
+}
+
+/// Batched testbench over the true fixed-point path.
+pub fn run_engine_fixed_batched(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    compare_batched("engine-fixed-batched", vecs, engine, true)
 }
 
 #[cfg(test)]
@@ -122,6 +188,21 @@ mod tests {
         assert_eq!(rep.graphs, vecs.graphs.len());
         assert!(rep.passes(5e-4), "MAE {}", rep.mae);
         assert!(rep.runtime.mean > 0.0);
+    }
+
+    #[test]
+    fn batched_testbench_is_bit_exact_vs_single_graph() {
+        let Some((engine, vecs)) = setup() else { return };
+        let single = run_engine_float(&engine, &vecs).unwrap();
+        let batched = run_engine_float_batched(&engine, &vecs).unwrap();
+        assert_eq!(batched.graphs, single.graphs);
+        // bit-exact forward ⇒ identical error statistics
+        assert_eq!(batched.mae, single.mae);
+        assert_eq!(batched.max_abs_err, single.max_abs_err);
+
+        let single_q = run_engine_fixed(&engine, &vecs).unwrap();
+        let batched_q = run_engine_fixed_batched(&engine, &vecs).unwrap();
+        assert_eq!(batched_q.mae, single_q.mae);
     }
 
     #[test]

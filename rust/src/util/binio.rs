@@ -5,17 +5,20 @@
 use std::collections::HashMap;
 use std::io::Read;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::GraphInput;
 
-/// One named f32 tensor from a `GNNW` file.
+/// One named f32 tensor from a `GNNW` file. The payload is `Arc`-shared so
+/// engines and backend replicas resolve weights without copying tensor
+/// data (an `Engine::new` used to deep-clone every tensor).
 #[derive(Debug, Clone)]
 pub struct Tensor {
     pub name: String,
     pub dims: Vec<usize>,
-    pub data: Vec<f32>,
+    pub data: Arc<[f32]>,
 }
 
 impl Tensor {
@@ -49,6 +52,13 @@ impl Weights {
 
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
+    }
+
+    /// Append a tensor (used by synthetic-weight builders in tests and
+    /// benches; `read_weights` is the production path).
+    pub fn push(&mut self, t: Tensor) {
+        self.index.insert(t.name.clone(), self.tensors.len());
+        self.tensors.push(t);
     }
 }
 
@@ -121,9 +131,8 @@ pub fn read_weights(path: impl AsRef<Path>) -> Result<Weights> {
             dims.push(r.u32()? as usize);
         }
         let total: usize = dims.iter().product(); // ndim=0 ⇒ scalar (product = 1)
-        let data = r.f32s(total)?;
-        w.index.insert(name.clone(), w.tensors.len());
-        w.tensors.push(Tensor { name, dims, data });
+        let data: Arc<[f32]> = r.f32s(total)?.into();
+        w.push(Tensor { name, dims, data });
     }
     Ok(w)
 }

@@ -89,6 +89,39 @@ mod tests {
     }
 
     #[test]
+    fn order_preserved_under_skewed_work() {
+        // jittered per-item work forces out-of-order completion across
+        // threads; results must still land at their original indices
+        let v = par_map(200, 6, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            i * 3
+        });
+        assert_eq!(v, (0..200).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn n_equals_threads_and_n_one() {
+        assert_eq!(par_map(4, 4, |i| i), vec![0, 1, 2, 3]);
+        assert_eq!(par_map(1, 8, |i| i + 41), vec![42]);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(par_map(3, 0, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn non_copy_results_move_correctly() {
+        let v = par_map(50, 4, |i| vec![i; i % 5]);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(x.len(), i % 5);
+            assert!(x.iter().all(|&e| e == i));
+        }
+    }
+
+    #[test]
     fn actually_parallel() {
         // all threads must be able to make progress concurrently
         use std::sync::atomic::AtomicUsize;

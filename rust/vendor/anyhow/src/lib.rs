@@ -1,0 +1,239 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The offline build environment has no registry access, so this shim
+//! provides exactly the surface the workspace uses: [`Result`], [`Error`],
+//! the [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension trait
+//! for `Result` and `Option`. Error chains print like upstream anyhow:
+//! `{}` shows the outermost message, `{:#}` the full `a: b: c` chain, and
+//! `{:?}` a multi-line report with a "Caused by" section.
+
+use std::fmt;
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error chain (outermost message first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (used by the macros).
+    pub fn from_display(msg: impl fmt::Display) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn wrap(self, context: impl fmt::Display) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The error chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        items.into_iter()
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(msg)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            f.write_str("\n\nCaused by:")?;
+            for msg in self.chain().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The `?` bridge from std error types. `Error` itself deliberately does NOT
+// implement `std::error::Error`, so this blanket impl cannot overlap with
+// the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(e.to_string());
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(Error {
+                msg,
+                source: err.map(Box::new),
+            });
+        }
+        err.expect("chain is never empty")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::from_display(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::from_display(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::from_display(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::from_display(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_display($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Early-return with an [`Error`] when `cond` is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        let name = "x";
+        let e = anyhow!("inline capture `{name}`");
+        assert_eq!(format!("{e}"), "inline capture `x`");
+    }
+
+    #[test]
+    fn ensure_checks_conditions() {
+        fn f(v: u32) -> Result<u32> {
+            ensure!(v < 10, "v {} too big", v);
+            ensure!(v != 5);
+            Ok(v)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "v 12 too big");
+        assert!(format!("{}", f(5).unwrap_err()).contains("v != 5"));
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(trip: bool) -> Result<u32> {
+            if trip {
+                bail!("tripped {}", 1);
+            }
+            Ok(5)
+        }
+        assert_eq!(f(false).unwrap(), 5);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "tripped 1");
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "missing file");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing here");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+}

@@ -1,0 +1,118 @@
+//! Sharded vs whole-graph forward on large citation-style graphs — the
+//! intra-graph-parallelism half of the scaling story (the batch path in
+//! `bench_inference` covers inter-graph parallelism). Partitions a
+//! PUBMED-profile graph (≥10⁴ nodes) at K ∈ {1, 4, 16}, times the
+//! sharded forward against the whole-graph baseline, verifies
+//! bit-identity, and emits `BENCH_shard.json` with latency plus the
+//! partition quality metrics (cut-edge fraction, halo-node fraction).
+
+use gnnbuilder::bench::Bench;
+use gnnbuilder::datasets::{self, LargeGraphStats};
+use gnnbuilder::engine::{synth_weights, Engine, Workspace};
+use gnnbuilder::model::{ConvType, ModelConfig};
+use gnnbuilder::partition::ShardedGraph;
+use gnnbuilder::util::json::Json;
+
+fn engine_for(stats: &LargeGraphStats, nodes: usize, edges: usize) -> Engine {
+    let cfg = ModelConfig {
+        name: format!("bench_shard_{}", stats.name),
+        graph_input_dim: stats.node_dim,
+        gnn_conv: ConvType::Gcn,
+        gnn_hidden_dim: 64,
+        gnn_out_dim: 64,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 32,
+        mlp_num_layers: 1,
+        output_dim: stats.num_classes,
+        max_nodes: nodes,
+        max_edges: edges.max(1),
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, 7);
+    Engine::new(cfg, &weights, stats.mean_degree).unwrap()
+}
+
+fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
+    println!("== {} profile @ {nodes} nodes ==", stats.name);
+    let ng = datasets::gen_citation_graph(stats, nodes, 2023);
+    let g = &ng.graph;
+    let engine = engine_for(stats, g.num_nodes, g.num_edges);
+
+    let whole = b.run(&format!("engine_whole/{}/n{nodes}", stats.name), || {
+        engine.forward(g, &ng.x).unwrap()
+    });
+    let baseline = engine.forward(g, &ng.x).unwrap();
+
+    let mut sharded_results: Vec<Json> = Vec::new();
+    let mut per_k: Vec<(usize, f64)> = Vec::new();
+    for k in [1usize, 4, 16] {
+        let t0 = std::time::Instant::now();
+        let sg = ShardedGraph::build(g.view(), k, 2023);
+        let partition_s = t0.elapsed().as_secs_f64();
+        let mut ws = Workspace::with_default_threads();
+        let out = engine.forward_sharded(&sg, &ng.x, &mut ws).unwrap();
+        assert_eq!(out, baseline, "sharded K={k} diverged from whole-graph");
+        let r = b.run(&format!("engine_sharded/{}/n{nodes}/k{k}", stats.name), || {
+            engine.forward_sharded(&sg, &ng.x, &mut ws).unwrap()
+        });
+        let speedup = whole.summary.mean / r.summary.mean.max(1e-12);
+        println!(
+            "  K={k}: cut {:.3}, halo {:.3}, partition {:.1} ms, speedup vs whole {speedup:.2}x",
+            sg.cut_fraction(),
+            sg.halo_fraction(),
+            partition_s * 1e3
+        );
+        per_k.push((k, r.summary.mean));
+        sharded_results.push(Json::obj(vec![
+            ("k", Json::num(k as f64)),
+            ("mean_s", Json::num(r.summary.mean)),
+            ("p95_s", Json::num(r.summary.p95)),
+            ("iters", Json::num(r.iters as f64)),
+            ("partition_s", Json::num(partition_s)),
+            ("cut_edge_fraction", Json::num(sg.cut_fraction())),
+            ("halo_fraction", Json::num(sg.halo_fraction())),
+            ("speedup_vs_whole", Json::num(speedup)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
+    let k1 = per_k.iter().find(|&&(k, _)| k == 1).unwrap().1;
+    let k4 = per_k.iter().find(|&&(k, _)| k == 4).unwrap().1;
+    println!(
+        "  K=4 vs K=1: {:.2}x ({})",
+        k1 / k4.max(1e-12),
+        if k4 < k1 { "faster" } else { "NOT faster" }
+    );
+    Json::obj(vec![
+        (
+            "graph",
+            Json::obj(vec![
+                ("profile", Json::str(stats.name)),
+                ("nodes", Json::num(g.num_nodes as f64)),
+                ("edges", Json::num(g.num_edges as f64)),
+                ("mean_degree", Json::num(g.mean_degree())),
+                ("node_dim", Json::num(stats.node_dim as f64)),
+            ]),
+        ),
+        (
+            "whole_graph",
+            Json::obj(vec![
+                ("mean_s", Json::num(whole.summary.mean)),
+                ("p95_s", Json::num(whole.summary.p95)),
+                ("iters", Json::num(whole.iters as f64)),
+            ]),
+        ),
+        ("sharded", Json::arr(sharded_results)),
+        ("k4_beats_k1", Json::Bool(k4 < k1)),
+    ])
+}
+
+fn main() {
+    let b = Bench::from_env();
+    // the acceptance graph: >= 10^4 nodes, PUBMED degree/feature profile
+    let pubmed = bench_one(&b, &datasets::PUBMED, 12_000);
+    // a small CORA-profile graph shows where sharding does NOT pay off
+    let cora = bench_one(&b, &datasets::CORA, datasets::CORA.num_nodes);
+    let report = Json::obj(vec![("pubmed", pubmed), ("cora", cora)]);
+    std::fs::write("BENCH_shard.json", report.to_string_pretty()).unwrap();
+    println!("wrote BENCH_shard.json");
+}

@@ -32,6 +32,7 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::{Engine, Workspace};
 use crate::graph::{Graph, GraphBatch, GraphView};
+use crate::partition::ShardedGraph;
 use crate::util::stats::Summary;
 
 /// One inference request: a graph routed to a named model variant.
@@ -92,6 +93,23 @@ impl BackendSpec {
         }
     }
 
+    /// Native-engine replica with large-graph shard routing: requests at
+    /// or above `policy.min_nodes` nodes dispatch through the partitioned
+    /// forward. Returns the spec plus the live [`ShardStats`] handle
+    /// (shard counts, cut-edge and halo fractions per dispatch).
+    pub fn engine_sharded(engine: Engine, policy: ShardPolicy) -> (BackendSpec, Arc<ShardStats>) {
+        let stats = Arc::new(ShardStats::default());
+        let handle = stats.clone();
+        let spec = BackendSpec {
+            model: engine.cfg.name.clone(),
+            factory: Box::new(move || {
+                Ok(Box::new(EngineBackend::with_sharding(engine, policy, stats))
+                    as Box<dyn Backend>)
+            }),
+        };
+        (spec, handle)
+    }
+
     /// PJRT replica: each worker constructs its own client + executable
     /// (PJRT handles cannot cross threads).
     pub fn pjrt(meta: crate::runtime::ArtifactMeta) -> BackendSpec {
@@ -106,12 +124,75 @@ impl BackendSpec {
     }
 }
 
+/// When and how the engine backend shards a single large graph
+/// (requests at or above `min_nodes` dispatch through the partitioned
+/// path in [`crate::partition`] instead of the whole-graph forward).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPolicy {
+    /// node count at which a request takes the sharded path
+    pub min_nodes: usize,
+    /// shard count K for the partitioner
+    pub shards: usize,
+    /// partitioner seed (deterministic plans per deployment)
+    pub seed: u64,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> Self {
+        ShardPolicy {
+            min_nodes: 4096,
+            shards: 4,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Counters for the sharded dispatch path, exposed per backend (the
+/// backend lives on its worker thread; callers keep the `Arc` handle
+/// returned by [`BackendSpec::engine_sharded`]).
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// requests routed through the sharded path
+    pub dispatches: AtomicU64,
+    shard_counts: Mutex<Vec<f64>>,
+    cut_fractions: Mutex<Vec<f64>>,
+    halo_fractions: Mutex<Vec<f64>>,
+}
+
+impl ShardStats {
+    fn record(&self, sg: &ShardedGraph) {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.shard_counts.lock().unwrap().push(sg.k() as f64);
+        self.cut_fractions.lock().unwrap().push(sg.cut_fraction());
+        self.halo_fractions.lock().unwrap().push(sg.halo_fraction());
+    }
+
+    /// Distribution of shard counts across sharded dispatches.
+    pub fn shard_count_summary(&self) -> Summary {
+        Summary::of(&self.shard_counts.lock().unwrap())
+    }
+
+    /// Distribution of cut-edge fractions across sharded dispatches.
+    pub fn cut_fraction_summary(&self) -> Summary {
+        Summary::of(&self.cut_fractions.lock().unwrap())
+    }
+
+    /// Distribution of halo-node fractions across sharded dispatches.
+    pub fn halo_fraction_summary(&self) -> Summary {
+        Summary::of(&self.halo_fractions.lock().unwrap())
+    }
+}
+
 /// The native engine as a batch-native backend: one long-lived
 /// [`Workspace`] per worker, so the batched hot loop re-uses warm scratch
 /// buffers across dispatches (zero heap allocation after warmup).
+/// With a [`ShardPolicy`], large graphs are partitioned and served
+/// through the sharded forward (bit-identical outputs, intra-graph
+/// parallelism) while molecule-sized requests keep the batch path.
 pub struct EngineBackend {
     engine: Engine,
     ws: Mutex<Workspace>,
+    shard: Option<(ShardPolicy, Arc<ShardStats>)>,
 }
 
 impl EngineBackend {
@@ -119,7 +200,37 @@ impl EngineBackend {
         EngineBackend {
             engine,
             ws: Mutex::new(Workspace::with_default_threads()),
+            shard: None,
         }
+    }
+
+    /// Engine backend that routes graphs at or above the policy's node
+    /// threshold through the sharded path, recording into `stats`.
+    pub fn with_sharding(
+        engine: Engine,
+        policy: ShardPolicy,
+        stats: Arc<ShardStats>,
+    ) -> EngineBackend {
+        EngineBackend {
+            engine,
+            ws: Mutex::new(Workspace::with_default_threads()),
+            shard: Some((policy, stats)),
+        }
+    }
+
+    fn wants_shard(&self, graph: &GraphView<'_>) -> bool {
+        matches!(&self.shard, Some((p, _)) if graph.num_nodes >= p.min_nodes && p.shards > 1)
+    }
+
+    fn infer_sharded(&self, graph: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
+        let (policy, stats) = self.shard.as_ref().expect("checked by wants_shard");
+        let sg = ShardedGraph::build(graph, policy.shards, policy.seed);
+        stats.record(&sg);
+        let mut ws = self.ws.lock().unwrap();
+        // f32 like every other EngineBackend path (forward_view /
+        // forward_batch_results), so outputs never change numerics —
+        // they stay bit-identical — across the size threshold
+        self.engine.forward_sharded(&sg, x, &mut ws)
     }
 }
 
@@ -129,12 +240,47 @@ impl Backend for EngineBackend {
     }
 
     fn infer(&self, graph: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
+        if self.wants_shard(&graph) {
+            return self.infer_sharded(graph, x);
+        }
         self.engine.forward_view(graph, x)
     }
 
     fn infer_batch(&self, batch: &GraphBatch) -> Vec<Result<Vec<f32>>> {
-        let mut ws = self.ws.lock().unwrap();
-        self.engine.forward_batch_results(batch, &mut ws)
+        // fast path: nothing over the shard threshold → whole dispatch
+        // through the packed batch runner
+        let any_big = (0..batch.len()).any(|i| self.wants_shard(&batch.view(i)));
+        if !any_big {
+            let mut ws = self.ws.lock().unwrap();
+            return self.engine.forward_batch_results(batch, &mut ws);
+        }
+        // mixed dispatch: over-threshold graphs go through the sharded
+        // path; the rest are repacked so they keep the warm parallel
+        // batch runner instead of degrading to serial per-graph calls
+        let mut results: Vec<Option<Result<Vec<f32>>>> =
+            (0..batch.len()).map(|_| None).collect();
+        let mut small = GraphBatch::new();
+        let mut small_idx: Vec<usize> = Vec::new();
+        for i in 0..batch.len() {
+            let view = batch.view(i);
+            if self.wants_shard(&view) {
+                results[i] = Some(self.infer_sharded(view, batch.x_view(i)));
+            } else {
+                small_idx.push(i);
+                small.push_view(view, batch.x_view(i));
+            }
+        }
+        if !small.is_empty() {
+            let mut ws = self.ws.lock().unwrap();
+            let small_results = self.engine.forward_batch_results(&small, &mut ws);
+            for (j, r) in small_results.into_iter().enumerate() {
+                results[small_idx[j]] = Some(r);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every batch slot routed"))
+            .collect()
     }
 }
 
@@ -635,6 +781,58 @@ mod tests {
             assert_eq!(via.output, direct, "batched path diverged");
         }
         assert!(c.metrics.batch_size_summary().max >= 1.0);
+        c.shutdown();
+    }
+
+    /// Requests at or above the shard threshold route through the
+    /// partitioned forward (recorded with shard-count / cut-edge / halo
+    /// metrics) and still answer bit-identically to the whole-graph
+    /// engine; molecule-sized requests keep the packed-batch path.
+    #[test]
+    fn large_graphs_route_through_the_sharded_path() {
+        let stats = &datasets::CORA;
+        let cfg = ModelConfig {
+            name: "shard_router".into(),
+            graph_input_dim: stats.node_dim,
+            gnn_conv: ConvType::Gcn,
+            gnn_hidden_dim: 8,
+            gnn_out_dim: 6,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 6,
+            mlp_num_layers: 1,
+            output_dim: stats.num_classes,
+            max_nodes: 2000,
+            max_edges: 20_000,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 21);
+        let engine = Engine::new(cfg, &weights, stats.mean_degree).unwrap();
+
+        let big = datasets::gen_citation_graph(stats, 1200, 7);
+        let small = datasets::gen_citation_graph(stats, 40, 8);
+
+        let policy = ShardPolicy {
+            min_nodes: 1000,
+            shards: 4,
+            seed: 1,
+        };
+        let (spec, shard_stats) = BackendSpec::engine_sharded(engine.clone(), policy);
+        let c = Coordinator::start(vec![spec], BatchPolicy::default());
+
+        let rx_small = c.submit("shard_router", small.graph.clone(), small.x.clone());
+        let rx_big = c.submit("shard_router", big.graph.clone(), big.x.clone());
+        let via_small = rx_small.recv().unwrap();
+        let via_big = rx_big.recv().unwrap();
+        assert_eq!(via_small.output, engine.forward(&small.graph, &small.x).unwrap());
+        assert_eq!(via_big.output, engine.forward(&big.graph, &big.x).unwrap());
+
+        // exactly the one large request took the sharded path
+        assert_eq!(shard_stats.dispatches.load(Ordering::Relaxed), 1);
+        let counts = shard_stats.shard_count_summary();
+        assert_eq!(counts.n, 1);
+        assert_eq!(counts.mean, 4.0);
+        assert_eq!(shard_stats.cut_fraction_summary().n, 1);
+        assert!(shard_stats.halo_fraction_summary().mean > 0.0);
         c.shutdown();
     }
 }

@@ -23,6 +23,7 @@
 
 mod aggregations;
 mod layers;
+mod sharded;
 
 pub use aggregations::{Aggregator, PartialAgg};
 
@@ -374,42 +375,60 @@ impl Engine {
         layers::maybe_quantize(&mut s.h.data, q);
 
         for conv in self.convs.iter() {
-            match conv {
-                ConvWeights::Gcn { w, b } => {
-                    layers::gcn_conv_into(g, &s.h, w, b, q, &mut s.t0, &mut s.out)
-                }
-                ConvWeights::Sage { w_root, w_nbr, b } => layers::sage_conv_into(
-                    g, &s.h, w_root, w_nbr, b, q, &mut s.t0, &mut s.t1, &mut s.agg, &mut s.out,
-                ),
-                ConvWeights::Gin { w1, b1, w2, b2 } => layers::gin_conv_into(
-                    g, &s.h, w1, b1, w2, b2, q, &mut s.t0, &mut s.t1, &mut s.agg, &mut s.out,
-                ),
-                ConvWeights::Pna { w, b } => layers::pna_conv_into(
-                    g,
-                    &s.h,
-                    w,
-                    b,
-                    self.pna_delta,
-                    q,
-                    &mut s.t0,
-                    &mut s.t1,
-                    &mut s.agg,
-                    &mut s.out,
-                ),
-            }
-            // activation
-            for v in s.out.data.iter_mut() {
-                *v = cfg.gnn_activation.apply(*v);
-            }
-            // skip connection when dims line up (mirrors L2)
-            if cfg.gnn_skip_connections && s.out.cols == s.h.cols {
-                for (o, &prev) in s.out.data.iter_mut().zip(&s.h.data) {
-                    *o += prev;
-                }
-            }
-            layers::maybe_quantize(&mut s.out.data, q);
+            self.conv_step(conv, g, &s.h, q, &mut s.t0, &mut s.t1, &mut s.agg, &mut s.out);
             std::mem::swap(&mut s.h, &mut s.out);
         }
+
+        Ok(self.head(q, s))
+    }
+
+    /// One GNN layer: conv dispatch + activation + skip + quantize, from
+    /// `h` into `out`. Shared verbatim by the single-graph, batched, and
+    /// sharded paths — identical f32 op order is what keeps all three
+    /// bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_step(
+        &self,
+        conv: &ConvWeights,
+        g: GraphView<'_>,
+        h: &Embeds,
+        q: Option<FixedPointFormat>,
+        t0: &mut Embeds,
+        t1: &mut Embeds,
+        agg: &mut PartialAgg,
+        out: &mut Embeds,
+    ) {
+        let cfg = &*self.cfg;
+        match conv {
+            ConvWeights::Gcn { w, b } => layers::gcn_conv_into(g, h, w, b, q, t0, out),
+            ConvWeights::Sage { w_root, w_nbr, b } => {
+                layers::sage_conv_into(g, h, w_root, w_nbr, b, q, t0, t1, agg, out)
+            }
+            ConvWeights::Gin { w1, b1, w2, b2 } => {
+                layers::gin_conv_into(g, h, w1, b1, w2, b2, q, t0, t1, agg, out)
+            }
+            ConvWeights::Pna { w, b } => {
+                layers::pna_conv_into(g, h, w, b, self.pna_delta, q, t0, t1, agg, out)
+            }
+        }
+        // activation
+        for v in out.data.iter_mut() {
+            *v = cfg.gnn_activation.apply(*v);
+        }
+        // skip connection when dims line up (mirrors L2)
+        if cfg.gnn_skip_connections && out.cols == h.cols {
+            for (o, &prev) in out.data.iter_mut().zip(&h.data) {
+                *o += prev;
+            }
+        }
+        layers::maybe_quantize(&mut out.data, q);
+    }
+
+    /// Global pooling + MLP head over final node embeddings in `s.h`.
+    /// Factored out of `run_view` so the sharded path reuses the exact
+    /// same op order after gathering shard embeddings back together.
+    fn head(&self, q: Option<FixedPointFormat>, s: &mut Scratch) -> Vec<f32> {
+        let cfg = &*self.cfg;
 
         // global pooling
         let f = s.h.cols;
@@ -434,7 +453,7 @@ impl Engine {
             layers::maybe_quantize(&mut s.z2, q);
             std::mem::swap(&mut s.z, &mut s.z2);
         }
-        Ok(s.z.clone())
+        s.z.clone()
     }
 }
 

@@ -1,0 +1,344 @@
+//! Sharded large-graph forward — intra-graph parallelism for the
+//! node-level workload class ([`crate::partition`]).
+//!
+//! Execution model (bulk-synchronous, one superstep per GNN layer):
+//!
+//! ```text
+//!  per layer:  par_map over shards ──► conv_step on each shard's arena
+//!                                       (owned + ghost rows, local ids)
+//!              halo exchange        ──► copy each ghost row from its
+//!                                       owner shard's fresh arena
+//!  after L layers: gather owned rows by global id ──► pooling + MLP head
+//! ```
+//!
+//! Bit-identity with [`Engine::forward`] is exact, not tolerance-based,
+//! for both f32 and ap_fixed: every owned node sees its full in-neighbor
+//! list in the original neighbor-table order (guaranteed by
+//! [`Subgraph`](crate::partition::Subgraph) extraction), neighbor
+//! embeddings equal the whole-graph values (guaranteed by the
+//! halo exchange), degree coefficients use the global in-degree table,
+//! and the gather restores global node order before pooling. Ghost rows
+//! are computed with incomplete neighborhoods, but every one of them is
+//! overwritten by the exchange before anything reads it.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::model::{FixedPointFormat, Numerics};
+use crate::partition::ShardedGraph;
+use crate::util::pool::par_map;
+
+use super::{layers, Embeds, Engine, Workspace};
+
+impl Engine {
+    /// f32 forward over a partitioned graph — bit-identical to
+    /// [`Engine::forward`] on the unpartitioned graph.
+    pub fn forward_sharded(
+        &self,
+        sg: &ShardedGraph,
+        x: &[f32],
+        ws: &mut Workspace,
+    ) -> Result<Vec<f32>> {
+        self.sharded_run(sg, x, None, ws)
+    }
+
+    /// True fixed-point twin — bit-identical to [`Engine::forward_fixed`].
+    pub fn forward_sharded_fixed(
+        &self,
+        sg: &ShardedGraph,
+        x: &[f32],
+        ws: &mut Workspace,
+    ) -> Result<Vec<f32>> {
+        self.sharded_run(sg, x, Some(self.cfg.fpx), ws)
+    }
+
+    /// Sharded forward with the numerics selected by the config.
+    pub fn forward_sharded_auto(
+        &self,
+        sg: &ShardedGraph,
+        x: &[f32],
+        ws: &mut Workspace,
+    ) -> Result<Vec<f32>> {
+        match self.cfg.numerics {
+            Numerics::Float => self.forward_sharded(sg, x, ws),
+            Numerics::Fixed => self.forward_sharded_fixed(sg, x, ws),
+        }
+    }
+
+    fn sharded_run(
+        &self,
+        sg: &ShardedGraph,
+        x: &[f32],
+        q: Option<FixedPointFormat>,
+        ws: &mut Workspace,
+    ) -> Result<Vec<f32>> {
+        let cfg = &*self.cfg;
+        let n = sg.num_nodes;
+        let d = cfg.graph_input_dim;
+        if x.len() != n * d {
+            bail!("feature len {} != num_nodes {n} * in_dim {d}", x.len());
+        }
+        if n > cfg.max_nodes || sg.num_edges > cfg.max_edges {
+            bail!("graph exceeds MAX_NODES/MAX_EDGES");
+        }
+        let k = sg.k();
+        if k == 0 {
+            bail!("shard plan has no shards");
+        }
+
+        // Per-shard ping-pong embedding arenas. These live across layers
+        // (the exchange reads them between supersteps), so they sit
+        // outside the per-worker Scratch slots; Mutex gives each par_map
+        // worker exclusive access to its own shard's pair (uncontended).
+        let mut cur: Vec<Mutex<Embeds>> = sg
+            .shards
+            .iter()
+            .map(|sub| {
+                let mut e = Embeds::zeros(sub.graph.num_nodes, d);
+                for (li, &gid) in sub.global_ids.iter().enumerate() {
+                    let gid = gid as usize;
+                    e.row_mut(li).copy_from_slice(&x[gid * d..(gid + 1) * d]);
+                }
+                layers::maybe_quantize(&mut e.data, q);
+                Mutex::new(e)
+            })
+            .collect();
+        let mut nxt: Vec<Mutex<Embeds>> = (0..k).map(|_| Mutex::new(Embeds::default())).collect();
+
+        let ws_ref: &Workspace = ws;
+        let threads = ws_ref.threads().min(k);
+        let last_layer = self.convs.len() - 1;
+        for (li, conv) in self.convs.iter().enumerate() {
+            // superstep: node-parallel conv across shards
+            par_map(k, threads, |s| {
+                let mut scratch = ws_ref.acquire();
+                let sc = &mut *scratch;
+                let h = cur[s].lock().unwrap();
+                let mut out = nxt[s].lock().unwrap();
+                self.conv_step(
+                    conv,
+                    sg.shards[s].view(),
+                    &h,
+                    q,
+                    &mut sc.t0,
+                    &mut sc.t1,
+                    &mut sc.agg,
+                    &mut out,
+                );
+            });
+            std::mem::swap(&mut cur, &mut nxt);
+            if li == last_layer {
+                break; // ghost rows are never read again — skip the exchange
+            }
+            // halo exchange: pull each ghost row from its owner's arena.
+            // Routes are grouped by owner shard, so each source arena is
+            // locked once per destination shard.
+            for (s, routes) in sg.exchange.iter().enumerate() {
+                if routes.is_empty() {
+                    continue;
+                }
+                let mut dst = cur[s].lock().unwrap();
+                let mut src_shard = usize::MAX;
+                let mut src_guard = None;
+                for r in routes {
+                    let os = r.owner_shard as usize;
+                    // a ghost is never locally owned (extract guarantees
+                    // it), so dst and src are always different mutexes
+                    debug_assert_ne!(os, s);
+                    if os != src_shard {
+                        src_guard = Some(cur[os].lock().unwrap());
+                        src_shard = os;
+                    }
+                    let src = src_guard.as_ref().unwrap();
+                    dst.row_mut(r.dst_local as usize)
+                        .copy_from_slice(src.row(r.src_local as usize));
+                }
+            }
+        }
+
+        // gather owned rows back into global node order, then run the
+        // shared pooling + MLP head — same op order as the whole-graph
+        // path, hence bit-identical outputs
+        let mut scratch = ws.acquire();
+        let sc = &mut *scratch;
+        let f = cfg.gnn_out_dim;
+        sc.h.reshape(n, f); // every row is written below: ownership partitions 0..n
+        for (s, sub) in sg.shards.iter().enumerate() {
+            let buf = cur[s].lock().unwrap();
+            debug_assert_eq!(buf.cols, f);
+            for li in 0..sub.owned {
+                let gid = sub.global_ids[li] as usize;
+                sc.h.row_mut(gid).copy_from_slice(buf.row(li));
+            }
+        }
+        Ok(self.head(q, sc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+    use crate::engine::synth_weights;
+    use crate::graph::Graph;
+    use crate::model::{ConvType, ModelConfig};
+    use crate::util::rng::Rng;
+
+    fn tiny_engine(conv: ConvType, max_nodes: usize) -> Engine {
+        let cfg = ModelConfig {
+            name: format!("shard_{}", conv.as_str()),
+            graph_input_dim: 6,
+            gnn_conv: conv,
+            gnn_hidden_dim: 8,
+            gnn_out_dim: 6, // == input dim so skip connections engage
+            gnn_num_layers: 3,
+            mlp_hidden_dim: 7,
+            mlp_num_layers: 1,
+            output_dim: 3,
+            max_nodes,
+            max_edges: max_nodes * 8,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 42);
+        Engine::new(cfg, &weights, 2.1).unwrap()
+    }
+
+    fn random_graph_and_x(rng: &mut Rng, max_n: usize, dim: usize) -> (Graph, Vec<f32>) {
+        let n = rng.range(1, max_n);
+        let e = rng.range(0, n * 3);
+        let edges: Vec<(u32, u32)> = (0..e)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+            .collect();
+        let x: Vec<f32> = (0..n * dim)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        (Graph::from_coo(n, &edges), x)
+    }
+
+    /// The tentpole acceptance gate: across 100 seeded random graphs and
+    /// every conv type, the sharded forward is bit-identical to the
+    /// whole-graph forward (f32 path).
+    #[test]
+    fn sharded_forward_bit_identical_to_forward_100_graphs() {
+        let engines: Vec<Engine> = ConvType::ALL
+            .iter()
+            .map(|&c| tiny_engine(c, 600))
+            .collect();
+        let mut ws = Workspace::new(4);
+        let mut rng = Rng::seed_from(2024);
+        for case in 0..100u64 {
+            let (g, x) = random_graph_and_x(&mut rng, 50, 6);
+            let k = rng.range(1, 6);
+            let sg = ShardedGraph::build(g.view(), k, case);
+            let engine = &engines[case as usize % engines.len()];
+            let whole = engine.forward(&g, &x).unwrap();
+            let sharded = engine.forward_sharded(&sg, &x, &mut ws).unwrap();
+            assert_eq!(
+                sharded, whole,
+                "case {case} (k={k}, n={}): sharded diverged",
+                g.num_nodes
+            );
+        }
+    }
+
+    /// Same gate for the true-quantization path: both numerics share the
+    /// sharded control flow.
+    #[test]
+    fn sharded_fixed_bit_identical_to_forward_fixed() {
+        let mut ws = Workspace::new(3);
+        let mut rng = Rng::seed_from(77);
+        for conv in ConvType::ALL {
+            let engine = tiny_engine(conv, 600);
+            for case in 0..25u64 {
+                let (g, x) = random_graph_and_x(&mut rng, 40, 6);
+                let sg = ShardedGraph::build(g.view(), 4, case);
+                let whole = engine.forward_fixed(&g, &x).unwrap();
+                let sharded = engine.forward_sharded_fixed(&sg, &x, &mut ws).unwrap();
+                assert_eq!(sharded, whole, "{conv:?} case {case}");
+            }
+        }
+    }
+
+    /// K = 1 runs the whole graph through the sharded machinery (identity
+    /// mapping, no halo) and must also match exactly.
+    #[test]
+    fn single_shard_matches_forward() {
+        let engine = tiny_engine(ConvType::Pna, 600);
+        let mut ws = Workspace::single();
+        let mut rng = Rng::seed_from(3);
+        let (g, x) = random_graph_and_x(&mut rng, 60, 6);
+        let sg = ShardedGraph::build(g.view(), 1, 0);
+        assert_eq!(
+            engine.forward_sharded(&sg, &x, &mut ws).unwrap(),
+            engine.forward(&g, &x).unwrap()
+        );
+    }
+
+    /// A power-law citation graph (the workload this path exists for):
+    /// sharded K=4 matches the whole-graph forward bit-for-bit, and the
+    /// auto entry point follows the config's numerics.
+    #[test]
+    fn citation_graph_sharded_matches_whole() {
+        let stats = &datasets::PUBMED;
+        let ng = datasets::gen_citation_graph(stats, 1500, 11);
+        let cfg = ModelConfig {
+            name: "cite_gcn".into(),
+            graph_input_dim: stats.node_dim,
+            gnn_conv: ConvType::Gcn,
+            gnn_hidden_dim: 16,
+            gnn_out_dim: 8,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 8,
+            mlp_num_layers: 1,
+            output_dim: stats.num_classes,
+            max_nodes: 2000,
+            max_edges: 20_000,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 5);
+        let engine = Engine::new(cfg, &weights, stats.mean_degree).unwrap();
+        let sg = ShardedGraph::build(ng.graph.view(), 4, 9);
+        assert!(sg.plan.check(ng.graph.view()));
+        assert!(sg.halo_nodes() > 0, "a 4-way cut of a connected graph has ghosts");
+        let mut ws = Workspace::with_default_threads();
+        let whole = engine.forward(&ng.graph, &ng.x).unwrap();
+        let sharded = engine.forward_sharded(&sg, &ng.x, &mut ws).unwrap();
+        assert_eq!(sharded, whole);
+        let auto = engine.forward_sharded_auto(&sg, &ng.x, &mut ws).unwrap();
+        assert_eq!(auto, whole);
+    }
+
+    /// Workspace reuse across sharded calls (and interleaved with batched
+    /// calls) must stay stateless: warm buffers never leak between runs.
+    #[test]
+    fn workspace_reuse_stays_bit_exact() {
+        let engine = tiny_engine(ConvType::Gin, 600);
+        let mut ws = Workspace::new(2);
+        let mut rng = Rng::seed_from(8);
+        let (g1, x1) = random_graph_and_x(&mut rng, 50, 6);
+        let (g2, x2) = random_graph_and_x(&mut rng, 20, 6);
+        let sg1 = ShardedGraph::build(g1.view(), 3, 0);
+        let sg2 = ShardedGraph::build(g2.view(), 2, 0);
+        let a1 = engine.forward_sharded(&sg1, &x1, &mut ws).unwrap();
+        let a2 = engine.forward_sharded(&sg2, &x2, &mut ws).unwrap();
+        // re-run in the opposite order through the same warm workspace
+        assert_eq!(engine.forward_sharded(&sg2, &x2, &mut ws).unwrap(), a2);
+        assert_eq!(engine.forward_sharded(&sg1, &x1, &mut ws).unwrap(), a1);
+        assert_eq!(a1, engine.forward(&g1, &x1).unwrap());
+        assert_eq!(a2, engine.forward(&g2, &x2).unwrap());
+    }
+
+    #[test]
+    fn rejects_bad_feature_len_and_oversized_graphs() {
+        let engine = tiny_engine(ConvType::Gcn, 10);
+        let mut ws = Workspace::single();
+        let g = Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3)]);
+        let sg = ShardedGraph::build(g.view(), 2, 0);
+        assert!(engine.forward_sharded(&sg, &[0.0; 5], &mut ws).is_err());
+        let big = Graph::from_coo(30, &[]);
+        let sgb = ShardedGraph::build(big.view(), 2, 0);
+        let xb = vec![0.0; 30 * 6];
+        assert!(engine.forward_sharded(&sgb, &xb, &mut ws).is_err());
+    }
+}

@@ -105,7 +105,16 @@ impl GraphBatch {
     where
         I: IntoIterator<Item = (&'a Graph, &'a [f32])>,
     {
-        let mut b = GraphBatch {
+        let mut b = GraphBatch::new();
+        for (g, x) in items {
+            b.push(g, x);
+        }
+        b
+    }
+
+    /// An empty batch to append into.
+    pub fn new() -> GraphBatch {
+        GraphBatch {
             node_offsets: vec![0],
             edge_offsets: vec![0],
             x_offsets: vec![0],
@@ -114,24 +123,27 @@ impl GraphBatch {
             in_deg: Vec::new(),
             edges: Vec::new(),
             x: Vec::new(),
-        };
-        for (g, x) in items {
-            b.push(g, x);
         }
-        b
     }
 
     /// Append one graph to the arena.
     pub fn push(&mut self, g: &Graph, x: &[f32]) {
+        self.push_view(g.view(), x);
+    }
+
+    /// Append one graph *view* (a standalone graph or a slot of another
+    /// batch) to the arena — lets routers repack a subset of a dispatch
+    /// without materializing owned graphs.
+    pub fn push_view(&mut self, g: GraphView<'_>, x: &[f32]) {
         let last_nodes = *self.node_offsets.last().unwrap();
         let last_edges = *self.edge_offsets.last().unwrap();
         self.node_offsets.push(last_nodes + g.num_nodes as u32);
         self.edge_offsets.push(last_edges + g.num_edges as u32);
         self.x_offsets.push(self.x_offsets.last().unwrap() + x.len());
-        self.nbr.extend_from_slice(&g.nbr);
-        self.offsets.extend_from_slice(&g.offsets);
-        self.in_deg.extend_from_slice(&g.in_deg);
-        self.edges.extend_from_slice(&g.edges);
+        self.nbr.extend_from_slice(g.nbr);
+        self.offsets.extend_from_slice(g.offsets);
+        self.in_deg.extend_from_slice(g.in_deg);
+        self.edges.extend_from_slice(g.edges);
         self.x.extend_from_slice(x);
     }
 
@@ -213,6 +225,12 @@ impl GraphBatch {
     }
 }
 
+impl Default for GraphBatch {
+    fn default() -> Self {
+        GraphBatch::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,6 +305,26 @@ mod tests {
         assert_eq!(b.total_edges(), 0);
         assert!(b.view(1).neighbors(0).is_empty());
         assert!(b.check());
+    }
+
+    #[test]
+    fn push_view_repacks_batch_slots_identically() {
+        let graphs = [diamond(), chain3()];
+        let feats: Vec<Vec<f32>> = graphs
+            .iter()
+            .map(|g| (0..g.num_nodes * 2).map(|v| v as f32).collect())
+            .collect();
+        let full = GraphBatch::pack(graphs.iter().zip(feats.iter().map(|f| f.as_slice())));
+        // repack slot 1 from its view into a fresh batch
+        let mut sub = GraphBatch::new();
+        sub.push_view(full.view(1), full.x_view(1));
+        assert!(sub.check());
+        assert_eq!(sub.len(), 1);
+        let v = sub.view(0);
+        assert_eq!(v.nbr, graphs[1].nbr.as_slice());
+        assert_eq!(v.offsets, graphs[1].offsets.as_slice());
+        assert_eq!(v.edges, graphs[1].edges.as_slice());
+        assert_eq!(sub.x_view(0), feats[1].as_slice());
     }
 
     #[test]

@@ -18,10 +18,20 @@
 //! The serving/batch path runs end-to-end on packed batches:
 //! request → [`coordinator`] batcher → [`graph::GraphBatch`] arena →
 //! [`engine::Engine::forward_batch`] over per-worker zero-alloc
-//! [`engine::Workspace`]s (parallelized via [`util::pool::par_map`]),
-//! with per-graph [`graph::GraphView`]s keeping batched outputs
-//! bit-identical to the single-graph path. `examples/serve_molecules.rs`
-//! drives the whole pipeline.
+//! [`engine::Workspace`]s (parallelized via [`util::pool::par_map`] on a
+//! persistent parked worker pool), with per-graph [`graph::GraphView`]s
+//! keeping batched outputs bit-identical to the single-graph path.
+//! `examples/serve_molecules.rs` drives the whole pipeline.
+//!
+//! The sharded large-graph path serves the node-level workload class
+//! (citation/social graphs): [`partition`] grows a seeded K-way
+//! [`partition::ShardPlan`], extracts [`partition::Subgraph`]s with
+//! 1-hop halo (ghost) nodes, and
+//! [`engine::Engine::forward_sharded`] runs each layer shard-parallel
+//! with a halo exchange between supersteps — bit-identical to the
+//! whole-graph forward for both numerics. The [`coordinator`] routes
+//! requests over a node-count threshold through it
+//! ([`coordinator::ShardPolicy`]).
 
 pub mod baselines;
 pub mod bench;
@@ -35,6 +45,7 @@ pub mod fixed;
 pub mod graph;
 pub mod hls;
 pub mod model;
+pub mod partition;
 pub mod perfmodel;
 pub mod runtime;
 pub mod testbench;

@@ -1,0 +1,686 @@
+//! Graph partitioning + sharded large-graph execution substrate.
+//!
+//! The paper's accelerator (and the whole pipeline since the seed) is
+//! molecule-sized: graph-level tasks over ~8–27-node graphs. This module
+//! opens the node-level large-graph workload class (citation/social
+//! graphs, 10⁴–10⁶ nodes) by making partitioning a first-class stage, the
+//! way partition-aware accelerator work does (Lu et al., arXiv 2308.08174;
+//! Guirado et al., arXiv 2103.10515, which shows inter-partition
+//! communication is the dominant cost to model):
+//!
+//! - [`partition`] — a deterministic, seeded partitioner: K regions grown
+//!   by balanced multi-source BFS over the undirected topology, then a
+//!   greedy degree-aware refinement pass that moves boundary nodes to the
+//!   shard holding most of their neighbors (edge-cut reduction under a
+//!   balance cap). Output is a [`ShardPlan`].
+//! - [`Subgraph`] — one shard extracted with its 1-hop **halo** (ghost)
+//!   nodes: every owned node keeps its full in-neighbor list *in the
+//!   original neighbor-table order*, with non-owned sources appended as
+//!   halo nodes. Order preservation is what makes the sharded forward
+//!   bit-identical to the whole-graph forward (aggregation is a
+//!   sequential fold over the neighbor list).
+//! - [`ShardedGraph`] — the plan + extracted shards + precomputed
+//!   halo-exchange routes, the unit the engine's sharded forward
+//!   (`Engine::forward_sharded`) consumes.
+//!
+//! Local node ids within a shard are: owned nodes first (ascending global
+//! id), then halo nodes (ascending global id). A shard's local [`Graph`]
+//! contains exactly the in-edges of its owned nodes, so it satisfies
+//! [`Graph::check`]; the *global* in-degree table is carried separately
+//! (GCN normalization and PNA scalers need the true degree of halo
+//! neighbors, not their local degree of zero).
+
+use std::collections::VecDeque;
+
+use crate::graph::{Graph, GraphView};
+use crate::util::pool::par_map;
+use crate::util::rng::Rng;
+
+/// Sentinel for "not assigned yet" in owner/local-id maps.
+const UNASSIGNED: u32 = u32::MAX;
+/// Sentinel for "collected as halo, local id pending".
+const HALO_PENDING: u32 = u32::MAX - 1;
+
+/// A K-way node-ownership assignment with its cut statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    /// number of shards
+    pub k: usize,
+    /// node → owning shard
+    pub owner: Vec<u32>,
+    /// shard → owned nodes, ascending global id
+    pub shards: Vec<Vec<u32>>,
+    /// directed edges whose src and dst live in different shards
+    pub cut_edges: usize,
+    pub num_nodes: usize,
+    pub num_edges: usize,
+}
+
+impl ShardPlan {
+    /// Fraction of directed edges crossing a shard boundary.
+    pub fn cut_fraction(&self) -> f64 {
+        if self.num_edges == 0 {
+            return 0.0;
+        }
+        self.cut_edges as f64 / self.num_edges as f64
+    }
+
+    /// Largest / smallest owned-set sizes (balance diagnostics).
+    pub fn shard_sizes(&self) -> (usize, usize) {
+        let max = self.shards.iter().map(Vec::len).max().unwrap_or(0);
+        let min = self.shards.iter().map(Vec::len).min().unwrap_or(0);
+        (max, min)
+    }
+
+    /// Structural invariant check: every node owned by exactly one shard,
+    /// shard lists sorted ascending and consistent with `owner`, cut-edge
+    /// count matching a recount against the graph.
+    pub fn check(&self, g: GraphView<'_>) -> bool {
+        if self.num_nodes != g.num_nodes
+            || self.num_edges != g.num_edges
+            || self.owner.len() != g.num_nodes
+            || self.shards.len() != self.k
+            || self.k == 0
+        {
+            return false;
+        }
+        if self.owner.iter().any(|&o| o as usize >= self.k) {
+            return false;
+        }
+        let total: usize = self.shards.iter().map(Vec::len).sum();
+        if total != g.num_nodes {
+            return false;
+        }
+        for (s, nodes) in self.shards.iter().enumerate() {
+            if !nodes.windows(2).all(|w| w[0] < w[1]) {
+                return false;
+            }
+            if nodes.iter().any(|&v| {
+                v as usize >= g.num_nodes || self.owner[v as usize] as usize != s
+            }) {
+                return false;
+            }
+        }
+        let cut = g
+            .edges
+            .iter()
+            .filter(|&&(s, d)| self.owner[s as usize] != self.owner[d as usize])
+            .count();
+        cut == self.cut_edges
+    }
+}
+
+/// Undirected adjacency in CSR form (in-neighbors ∪ out-neighbors, with
+/// duplicates kept — they only bias BFS/refinement toward heavier links,
+/// which is what an edge-cut heuristic wants).
+struct UndirectedCsr {
+    offsets: Vec<u32>,
+    nbrs: Vec<u32>,
+}
+
+impl UndirectedCsr {
+    fn build(g: GraphView<'_>) -> UndirectedCsr {
+        let n = g.num_nodes;
+        let mut deg = vec![0u32; n];
+        for &(s, d) in g.edges {
+            deg[s as usize] += 1;
+            deg[d as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        let mut nbrs = vec![0u32; g.num_edges * 2];
+        for &(s, d) in g.edges {
+            let cs = &mut cursor[s as usize];
+            nbrs[*cs as usize] = d;
+            *cs += 1;
+            let cd = &mut cursor[d as usize];
+            nbrs[*cd as usize] = s;
+            *cd += 1;
+        }
+        UndirectedCsr { offsets, nbrs }
+    }
+
+    #[inline]
+    fn neighbors(&self, v: usize) -> &[u32] {
+        &self.nbrs[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    #[inline]
+    fn degree(&self, v: usize) -> u32 {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+}
+
+/// Deterministic, seeded K-way partition: balanced multi-source BFS
+/// growth followed by greedy degree-aware edge-cut refinement.
+///
+/// `k` is clamped to `[1, max(num_nodes, 1)]`. Shard sizes never exceed
+/// `ceil(n / k)` after growth; refinement respects a small slack above
+/// that cap so it can trade balance for cut quality.
+pub fn partition(g: GraphView<'_>, k: usize, seed: u64) -> ShardPlan {
+    let n = g.num_nodes;
+    assert!(
+        n < HALO_PENDING as usize,
+        "graph too large for u32 node ids"
+    );
+    let k = k.clamp(1, n.max(1));
+    let mut owner = vec![UNASSIGNED; n];
+    let mut sizes = vec![0usize; k];
+
+    if n > 0 {
+        let und = UndirectedCsr::build(g);
+        let cap = n.div_ceil(k);
+        let mut rng = Rng::seed_from(seed ^ 0x9a27_11f3_5b06_c4d1);
+
+        // --- phase 1: balanced multi-source BFS growth -------------------
+        let mut queues: Vec<VecDeque<u32>> = Vec::with_capacity(k);
+        for &s in rng.sample_indices(n, k).iter() {
+            queues.push(VecDeque::from([s as u32]));
+        }
+        let mut next_unassigned = 0usize;
+        let mut assigned = 0usize;
+        while assigned < n {
+            let before = assigned;
+            for (s, queue) in queues.iter_mut().enumerate() {
+                if sizes[s] >= cap {
+                    continue;
+                }
+                // next BFS candidate for shard s, or a fresh seed from the
+                // global pool (new component / region swallowed by others)
+                let node = loop {
+                    match queue.pop_front() {
+                        Some(c) if owner[c as usize] == UNASSIGNED => break Some(c),
+                        Some(_) => continue,
+                        None => break None,
+                    }
+                };
+                let node = match node {
+                    Some(c) => c,
+                    None => {
+                        while next_unassigned < n && owner[next_unassigned] != UNASSIGNED {
+                            next_unassigned += 1;
+                        }
+                        if next_unassigned >= n {
+                            continue;
+                        }
+                        next_unassigned as u32
+                    }
+                };
+                owner[node as usize] = s as u32;
+                sizes[s] += 1;
+                assigned += 1;
+                for &nb in und.neighbors(node as usize) {
+                    if owner[nb as usize] == UNASSIGNED {
+                        queue.push_back(nb);
+                    }
+                }
+            }
+            // cap * k >= n, so some shard below cap always makes progress
+            debug_assert!(assigned > before, "partition growth stalled");
+        }
+
+        // --- phase 2: greedy degree-aware refinement ---------------------
+        if k > 1 {
+            // high-degree nodes first: moving them changes the cut most
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            order.sort_unstable_by_key(|&v| (std::cmp::Reverse(und.degree(v as usize)), v));
+            let cap_hi = cap + (cap / 16).max(1);
+            let mut counts = vec![0u32; k];
+            let mut touched: Vec<u32> = Vec::with_capacity(k);
+            for _pass in 0..4 {
+                let mut moves = 0usize;
+                for &v in &order {
+                    let vi = v as usize;
+                    let cur = owner[vi] as usize;
+                    if sizes[cur] <= 1 {
+                        continue; // never empty a shard
+                    }
+                    for &nb in und.neighbors(vi) {
+                        let s = owner[nb as usize];
+                        if counts[s as usize] == 0 {
+                            touched.push(s);
+                        }
+                        counts[s as usize] += 1;
+                    }
+                    // best-connected shard with room (strict >, so the
+                    // current shard keeps ties and the first-touched
+                    // shard wins among equals — deterministic either way)
+                    let mut best = cur;
+                    let mut best_cnt = counts[cur];
+                    for &s in &touched {
+                        let si = s as usize;
+                        if si != cur && counts[si] > best_cnt && sizes[si] < cap_hi {
+                            best = si;
+                            best_cnt = counts[si];
+                        }
+                    }
+                    if best != cur {
+                        owner[vi] = best as u32;
+                        sizes[cur] -= 1;
+                        sizes[best] += 1;
+                        moves += 1;
+                    }
+                    for &s in &touched {
+                        counts[s as usize] = 0;
+                    }
+                    touched.clear();
+                }
+                if moves == 0 {
+                    break;
+                }
+            }
+        }
+    }
+
+    let mut shards: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &o) in owner.iter().enumerate() {
+        shards[o as usize].push(v as u32); // ascending by construction
+    }
+    let cut_edges = g
+        .edges
+        .iter()
+        .filter(|&&(s, d)| owner[s as usize] != owner[d as usize])
+        .count();
+    ShardPlan {
+        k,
+        owner,
+        shards,
+        cut_edges,
+        num_nodes: n,
+        num_edges: g.num_edges,
+    }
+}
+
+/// One shard of a [`ShardPlan`]: the owned nodes plus their 1-hop halo
+/// (ghost) in-neighbors, with global↔local id maps.
+///
+/// Local ids: `0..owned` are the owned nodes (ascending global id),
+/// `owned..` are halo nodes (ascending global id). The local [`Graph`]
+/// holds exactly the in-edges of owned nodes, in the original input-edge
+/// order, so every owned node's local neighbor list mirrors its global
+/// neighbor list element-for-element (as local ids).
+#[derive(Debug, Clone)]
+pub struct Subgraph {
+    /// which shard of the plan this is
+    pub shard: usize,
+    /// local topology (passes `Graph::check`)
+    pub graph: Graph,
+    /// number of owned nodes; the first `owned` local ids
+    pub owned: usize,
+    /// local id → global id (owned ascending, then halo ascending)
+    pub global_ids: Vec<u32>,
+    /// global in-degree of every local node (halo nodes have local
+    /// in-degree 0 but keep their true global degree here)
+    pub global_in_deg: Vec<u32>,
+}
+
+impl Subgraph {
+    /// Extract shard `shard` of `plan` from the full graph.
+    pub fn extract(g: GraphView<'_>, plan: &ShardPlan, shard: usize) -> Subgraph {
+        assert!(shard < plan.k);
+        assert_eq!(plan.num_nodes, g.num_nodes);
+        let owned_ids = &plan.shards[shard];
+        let mut local_of = vec![UNASSIGNED; g.num_nodes];
+        for (li, &gid) in owned_ids.iter().enumerate() {
+            local_of[gid as usize] = li as u32;
+        }
+        // halo = non-owned sources of owned nodes' in-edges, ascending
+        let mut halo: Vec<u32> = Vec::new();
+        for &gid in owned_ids {
+            for &src in g.neighbors(gid as usize) {
+                if local_of[src as usize] == UNASSIGNED {
+                    local_of[src as usize] = HALO_PENDING;
+                    halo.push(src);
+                }
+            }
+        }
+        halo.sort_unstable();
+        for (hi, &gid) in halo.iter().enumerate() {
+            local_of[gid as usize] = (owned_ids.len() + hi) as u32;
+        }
+        // local edges in original input order → local neighbor tables
+        // keep the global per-node neighbor order exactly
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for &(s, d) in g.edges {
+            if plan.owner[d as usize] == shard as u32 {
+                edges.push((local_of[s as usize], local_of[d as usize]));
+            }
+        }
+        let num_local = owned_ids.len() + halo.len();
+        let graph = Graph::from_coo(num_local, &edges);
+        let mut global_ids = Vec::with_capacity(num_local);
+        global_ids.extend_from_slice(owned_ids);
+        global_ids.extend_from_slice(&halo);
+        let global_in_deg: Vec<u32> = global_ids
+            .iter()
+            .map(|&gid| g.in_deg[gid as usize])
+            .collect();
+        Subgraph {
+            shard,
+            graph,
+            owned: owned_ids.len(),
+            global_ids,
+            global_in_deg,
+        }
+    }
+
+    /// Global ids of the halo (ghost) nodes, ascending.
+    pub fn halo(&self) -> &[u32] {
+        &self.global_ids[self.owned..]
+    }
+
+    pub fn halo_len(&self) -> usize {
+        self.global_ids.len() - self.owned
+    }
+
+    /// The view the engine computes on: local topology with the **global**
+    /// in-degree table spliced in (GCN/PNA need true degrees of halo
+    /// neighbors; neighbor slicing only uses `offsets`/`nbr`).
+    pub fn view(&self) -> GraphView<'_> {
+        GraphView {
+            num_nodes: self.graph.num_nodes,
+            num_edges: self.graph.num_edges,
+            edges: &self.graph.edges,
+            nbr: &self.graph.nbr,
+            offsets: &self.graph.offsets,
+            in_deg: &self.global_in_deg,
+        }
+    }
+}
+
+/// One halo-exchange route: after each layer, copy the owner shard's row
+/// `src_local` into this shard's ghost row `dst_local`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HaloRoute {
+    pub owner_shard: u32,
+    pub src_local: u32,
+    pub dst_local: u32,
+}
+
+/// A partitioned graph ready for sharded inference: the plan, the
+/// extracted shards, and per-shard halo-exchange routes (grouped by owner
+/// shard so the exchange locks each source arena once per destination).
+#[derive(Debug, Clone)]
+pub struct ShardedGraph {
+    pub plan: ShardPlan,
+    pub shards: Vec<Subgraph>,
+    /// per destination shard, sorted by (owner_shard, dst_local)
+    pub exchange: Vec<Vec<HaloRoute>>,
+    pub num_nodes: usize,
+    pub num_edges: usize,
+}
+
+impl ShardedGraph {
+    /// Partition + extract in one step.
+    pub fn build(g: GraphView<'_>, k: usize, seed: u64) -> ShardedGraph {
+        let plan = partition(g, k, seed);
+        ShardedGraph::from_plan(g, plan)
+    }
+
+    /// Extract shards + exchange routes for an existing plan.
+    pub fn from_plan(g: GraphView<'_>, plan: ShardPlan) -> ShardedGraph {
+        // shard-local index of every global node, for route building
+        let mut local_of = vec![0u32; g.num_nodes];
+        for nodes in &plan.shards {
+            for (li, &gid) in nodes.iter().enumerate() {
+                local_of[gid as usize] = li as u32;
+            }
+        }
+        let shards: Vec<Subgraph> =
+            par_map(plan.k, crate::util::pool::default_threads().min(plan.k), |s| {
+                Subgraph::extract(g, &plan, s)
+            });
+        let exchange: Vec<Vec<HaloRoute>> = shards
+            .iter()
+            .map(|sub| {
+                let mut routes: Vec<HaloRoute> = sub
+                    .halo()
+                    .iter()
+                    .enumerate()
+                    .map(|(hi, &gid)| HaloRoute {
+                        owner_shard: plan.owner[gid as usize],
+                        src_local: local_of[gid as usize],
+                        dst_local: (sub.owned + hi) as u32,
+                    })
+                    .collect();
+                routes.sort_unstable_by_key(|r| (r.owner_shard, r.dst_local));
+                routes
+            })
+            .collect();
+        ShardedGraph {
+            num_nodes: g.num_nodes,
+            num_edges: g.num_edges,
+            plan,
+            shards,
+            exchange,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total ghost nodes across shards (a node neighboring M foreign
+    /// shards is counted M times — it occupies a ghost slot in each).
+    pub fn halo_nodes(&self) -> usize {
+        self.shards.iter().map(Subgraph::halo_len).sum()
+    }
+
+    /// Ghost slots per original node — the memory/communication overhead
+    /// of the partition (0 when K = 1).
+    pub fn halo_fraction(&self) -> f64 {
+        if self.num_nodes == 0 {
+            return 0.0;
+        }
+        self.halo_nodes() as f64 / self.num_nodes as f64
+    }
+
+    pub fn cut_fraction(&self) -> f64 {
+        self.plan.cut_fraction()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_graph(rng: &mut Rng, max_n: usize, max_e: usize) -> Graph {
+        let n = rng.range(1, max_n);
+        let e = rng.range(0, max_e);
+        let edges: Vec<(u32, u32)> = (0..e)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+            .collect();
+        Graph::from_coo(n, &edges)
+    }
+
+    #[test]
+    fn every_node_owned_by_exactly_one_shard() {
+        let mut rng = Rng::seed_from(71);
+        for case in 0..100 {
+            let g = random_graph(&mut rng, 60, 160);
+            let k = rng.range(1, 7);
+            let plan = partition(g.view(), k, case);
+            assert!(plan.check(g.view()), "case {case}: plan check failed");
+            let mut seen = vec![0u32; g.num_nodes];
+            for nodes in &plan.shards {
+                for &v in nodes {
+                    seen[v as usize] += 1;
+                }
+            }
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "case {case}: a node is owned 0 or 2+ times"
+            );
+        }
+    }
+
+    #[test]
+    fn growth_is_balanced_within_cap_slack() {
+        let mut rng = Rng::seed_from(5);
+        for case in 0..40 {
+            let g = random_graph(&mut rng, 80, 240);
+            let k = rng.range(2, 6).min(g.num_nodes);
+            let plan = partition(g.view(), k, 99 + case);
+            let cap = g.num_nodes.div_ceil(k);
+            let cap_hi = cap + (cap / 16).max(1);
+            let (max, min) = plan.shard_sizes();
+            assert!(max <= cap_hi, "case {case}: size {max} > cap_hi {cap_hi}");
+            assert!(min >= 1, "case {case}: empty shard");
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic_per_seed() {
+        let mut rng = Rng::seed_from(13);
+        let g = random_graph(&mut rng, 50, 150);
+        let a = partition(g.view(), 4, 7);
+        let b = partition(g.view(), 4, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn k_clamps_to_node_count_and_one() {
+        let g = Graph::from_coo(3, &[(0, 1), (1, 2)]);
+        let plan = partition(g.view(), 10, 1);
+        assert_eq!(plan.k, 3);
+        assert!(plan.check(g.view()));
+        let plan1 = partition(g.view(), 0, 1);
+        assert_eq!(plan1.k, 1);
+        assert_eq!(plan1.cut_edges, 0);
+        // empty graph → one empty shard
+        let empty = Graph::from_coo(0, &[]);
+        let pe = partition(empty.view(), 4, 1);
+        assert_eq!(pe.k, 1);
+        assert!(pe.shards[0].is_empty());
+    }
+
+    #[test]
+    fn refinement_does_not_hurt_an_obvious_two_cluster_graph() {
+        // two dense 10-cliques joined by a single bridge edge: a 2-way
+        // partition should cut (almost) nothing
+        let mut edges = Vec::new();
+        for base in [0u32, 10] {
+            for a in 0..10u32 {
+                for b in 0..10u32 {
+                    if a != b {
+                        edges.push((base + a, base + b));
+                    }
+                }
+            }
+        }
+        edges.push((0, 10));
+        let g = Graph::from_coo(20, &edges);
+        let plan = partition(g.view(), 2, 3);
+        assert!(plan.check(g.view()));
+        assert!(
+            plan.cut_fraction() < 0.05,
+            "cut fraction {} on a two-cluster graph",
+            plan.cut_fraction()
+        );
+    }
+
+    #[test]
+    fn halos_are_the_exact_one_hop_in_neighbor_closure() {
+        let mut rng = Rng::seed_from(23);
+        for case in 0..100 {
+            let g = random_graph(&mut rng, 50, 140);
+            let k = rng.range(1, 6);
+            let plan = partition(g.view(), k, case * 3 + 1);
+            for s in 0..plan.k {
+                let sub = Subgraph::extract(g.view(), &plan, s);
+                assert!(sub.graph.check(), "case {case} shard {s}: local graph invalid");
+                // expected halo: non-owned in-neighbors of owned nodes
+                let mut want: Vec<u32> = plan.shards[s]
+                    .iter()
+                    .flat_map(|&gid| g.neighbors(gid as usize).iter().copied())
+                    .filter(|&src| plan.owner[src as usize] != s as u32)
+                    .collect();
+                want.sort_unstable();
+                want.dedup();
+                assert_eq!(sub.halo(), want.as_slice(), "case {case} shard {s}");
+                // owned prefix is the plan's shard list
+                assert_eq!(&sub.global_ids[..sub.owned], plan.shards[s].as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn local_neighbor_order_mirrors_global_neighbor_order() {
+        let mut rng = Rng::seed_from(31);
+        for case in 0..60 {
+            let g = random_graph(&mut rng, 40, 120);
+            let plan = partition(g.view(), 3, case);
+            for s in 0..plan.k {
+                let sub = Subgraph::extract(g.view(), &plan, s);
+                for li in 0..sub.owned {
+                    let gid = sub.global_ids[li] as usize;
+                    let local_as_global: Vec<u32> = sub
+                        .graph
+                        .neighbors(li)
+                        .iter()
+                        .map(|&lj| sub.global_ids[lj as usize])
+                        .collect();
+                    assert_eq!(
+                        local_as_global,
+                        g.neighbors(gid),
+                        "case {case} shard {s} node {gid}: neighbor order changed"
+                    );
+                }
+                // halo nodes own no in-edges locally but keep global degree
+                for hi in sub.owned..sub.graph.num_nodes {
+                    assert!(sub.graph.neighbors(hi).is_empty());
+                    assert_eq!(
+                        sub.global_in_deg[hi],
+                        g.in_deg[sub.global_ids[hi] as usize]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_routes_point_at_the_owner_copy() {
+        let mut rng = Rng::seed_from(41);
+        for case in 0..40 {
+            let g = random_graph(&mut rng, 50, 150);
+            let sg = ShardedGraph::build(g.view(), 4, case);
+            assert!(sg.plan.check(g.view()));
+            for (s, routes) in sg.exchange.iter().enumerate() {
+                assert_eq!(routes.len(), sg.shards[s].halo_len());
+                for r in routes {
+                    let gid = sg.shards[s].global_ids[r.dst_local as usize];
+                    assert_ne!(r.owner_shard as usize, s, "halo node owned locally");
+                    assert_eq!(sg.plan.owner[gid as usize], r.owner_shard);
+                    let owner_sub = &sg.shards[r.owner_shard as usize];
+                    assert!((r.src_local as usize) < owner_sub.owned);
+                    assert_eq!(owner_sub.global_ids[r.src_local as usize], gid);
+                }
+                // grouped by owner so the exchange locks once per source
+                assert!(routes.windows(2).all(|w| w[0].owner_shard <= w[1].owner_shard));
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_has_no_halo_and_identity_ids() {
+        let mut rng = Rng::seed_from(53);
+        let g = random_graph(&mut rng, 30, 90);
+        let sg = ShardedGraph::build(g.view(), 1, 0);
+        assert_eq!(sg.k(), 1);
+        assert_eq!(sg.halo_nodes(), 0);
+        assert_eq!(sg.cut_fraction(), 0.0);
+        let sub = &sg.shards[0];
+        assert_eq!(sub.owned, g.num_nodes);
+        assert_eq!(
+            sub.global_ids,
+            (0..g.num_nodes as u32).collect::<Vec<_>>()
+        );
+        // identity mapping → identical tables
+        assert_eq!(sub.graph.nbr, g.nbr);
+        assert_eq!(sub.graph.offsets, g.offsets);
+        assert_eq!(sub.global_in_deg, g.in_deg);
+    }
+}

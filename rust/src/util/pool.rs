@@ -1,13 +1,28 @@
 //! Thread-pool substrate (no rayon in the offline crate set).
 //!
-//! Scoped fork-join parallel map over indexed work items, used by the
-//! perf-model trainer (per-tree bagging), the design-database builder
-//! (per-config synthesis), and the benchmark harness. Work stealing is a
+//! [`par_map`] is a fork-join parallel map over indexed work items, used by
+//! the perf-model trainer (per-tree bagging), the design-database builder
+//! (per-config synthesis), the engine's batched forward, the sharded
+//! large-graph forward, and the benchmark harness. Work stealing is a
 //! simple shared atomic cursor — items are small and uniform enough that
 //! chunk-free self-scheduling is within a few percent of optimal.
+//!
+//! Execution runs on a **persistent worker pool**: a fixed set of threads,
+//! lazily spawned on first use, parked on a condvar-guarded task queue.
+//! A `par_map` dispatch enqueues lightweight helper tasks and the caller
+//! participates in the item loop itself, so high-rate small dispatches
+//! (the serving hot path) pay a queue push + wakeup instead of an OS
+//! `clone` per worker per call. The dispatch protocol guarantees the
+//! caller never blocks on a helper that has not started — a helper that
+//! wakes up late finds the cursor exhausted and exits without touching
+//! the (by then dead) closure — so nested `par_map` calls from inside a
+//! pool worker cannot deadlock.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 /// Number of worker threads to use (bounded by available parallelism).
 pub fn default_threads() -> usize {
@@ -17,7 +32,159 @@ pub fn default_threads() -> usize {
         .min(24)
 }
 
+/// Size of the persistent pool (fixed at first use). At least 2 so
+/// callers on single-core machines still get helper concurrency.
+pub fn pool_threads() -> usize {
+    default_threads().max(2)
+}
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// The shared pool state workers park on: a FIFO task queue + condvar.
+struct Pool {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+}
+
+impl Pool {
+    fn submit(&self, tasks: impl IntoIterator<Item = Task>) {
+        let mut q = self.queue.lock().unwrap();
+        q.extend(tasks);
+        drop(q);
+        self.available.notify_all();
+    }
+}
+
+/// The process-wide pool, spawned lazily on first dispatch. Workers are
+/// detached daemon threads blocked on the queue condvar; they live for
+/// the rest of the process.
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        }));
+        for i in 0..pool_threads() {
+            std::thread::Builder::new()
+                .name(format!("gnnb-pool-{i}"))
+                .spawn(move || worker_loop(p))
+                .expect("failed to spawn pool worker");
+        }
+        p
+    })
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let task = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = pool.available.wait(q).unwrap();
+            }
+        };
+        task();
+    }
+}
+
+/// Type-erased shared state of one `par_map` dispatch.
+///
+/// `f`/`results` are raw pointers into the caller's frame; they are only
+/// dereferenced for item indices obtained from `cursor`, and the caller
+/// does not return until every helper that could still obtain an index
+/// `< n` has finished (see the safety argument in `par_map`).
+struct JobState {
+    cursor: AtomicUsize,
+    started: AtomicUsize,
+    finished: AtomicUsize,
+    aborted: AtomicBool,
+    /// first worker panic's payload, rethrown by the caller
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    n: usize,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    f: *const (),
+    results: *mut (),
+    run_item: unsafe fn(*const (), *mut (), usize),
+}
+
+// SAFETY: the raw pointers are only dereferenced under the dispatch
+// protocol, which keeps the pointees alive for every dereference.
+unsafe impl Send for JobState {}
+unsafe impl Sync for JobState {}
+
+/// Monomorphized item runner: results[i] = f(i).
+unsafe fn run_item<T, F>(f: *const (), results: *mut (), i: usize)
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let f = &*(f as *const F);
+    let slot = (results as *mut MaybeUninit<T>).add(i);
+    (*slot).write(f(i));
+}
+
+/// Helper task body run on a pool worker: self-schedule items off the
+/// job's cursor until it is exhausted (or the caller aborted the job).
+fn helper(job: Arc<JobState>) {
+    job.started.fetch_add(1, Ordering::SeqCst);
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+        // The abort check must come BEFORE claiming an index: a claimed
+        // index is always computed (the caller waits on started/finished
+        // while we hold it, so the pointers stay valid), whereas a
+        // claimed-but-abandoned index would leave its result slot
+        // uninitialized. `aborted` is set by a caller that has already
+        // returned (or is unwinding) — set *before* it observes
+        // started == finished — so a helper that wakes up after the
+        // caller left always breaks here without touching f/results.
+        if job.aborted.load(Ordering::SeqCst) {
+            break;
+        }
+        let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        // SAFETY: i < n was handed out exactly once, and the caller is
+        // still inside par_map (it waits for us via started/finished).
+        unsafe { (job.run_item)(job.f, job.results, i) };
+    }));
+    if let Err(payload) = outcome {
+        job.panic_payload.lock().unwrap().get_or_insert(payload);
+    }
+    job.finished.fetch_add(1, Ordering::SeqCst);
+    let _g = job.done_mx.lock().unwrap();
+    job.done_cv.notify_all();
+}
+
+/// Blocks until every helper that started has finished. Runs in a drop
+/// guard so the wait also happens if the caller's own `f(i)` panics —
+/// helpers must never outlive the borrows captured in the job.
+struct WaitGuard<'a>(&'a JobState);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let job = self.0;
+        // Stop helpers from grabbing further items (relevant only on the
+        // caller-panic path, where the cursor may not be exhausted).
+        job.aborted.store(true, Ordering::SeqCst);
+        let mut g = job.done_mx.lock().unwrap();
+        while job.started.load(Ordering::SeqCst) != job.finished.load(Ordering::SeqCst) {
+            let (g2, _) = job
+                .done_cv
+                .wait_timeout(g, Duration::from_micros(200))
+                .unwrap();
+            g = g2;
+        }
+    }
+}
+
 /// Parallel map: `f(i)` for i in 0..n, preserving index order in the result.
+///
+/// At most `threads` items execute concurrently: the caller plus up to
+/// `threads - 1` persistent pool workers. Results are written directly
+/// into their slots — no locks on the result path.
 pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -30,41 +197,67 @@ where
     if threads == 1 {
         return (0..n).map(f).collect();
     }
-    let cursor = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                // local buffer to avoid lock contention per item
-                let mut local: Vec<(usize, T)> = Vec::new();
-                loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    local.push((i, f(i)));
-                    if local.len() >= 16 {
-                        let mut guard = results.lock().unwrap();
-                        for (j, v) in local.drain(..) {
-                            guard[j] = Some(v);
-                        }
-                    }
-                }
-                if !local.is_empty() {
-                    let mut guard = results.lock().unwrap();
-                    for (j, v) in local.drain(..) {
-                        guard[j] = Some(v);
-                    }
-                }
-            });
-        }
+
+    let mut results: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+    // SAFETY: MaybeUninit slots need no initialization.
+    unsafe { results.set_len(n) };
+    let res_ptr = results.as_mut_ptr();
+
+    let job = Arc::new(JobState {
+        cursor: AtomicUsize::new(0),
+        started: AtomicUsize::new(0),
+        finished: AtomicUsize::new(0),
+        aborted: AtomicBool::new(false),
+        panic_payload: Mutex::new(None),
+        n,
+        done_mx: Mutex::new(()),
+        done_cv: Condvar::new(),
+        f: &f as *const F as *const (),
+        results: res_ptr as *mut (),
+        run_item: run_item::<T, F>,
     });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|v| v.expect("worker missed an index"))
-        .collect()
+
+    pool().submit((0..threads - 1).map(|_| {
+        let j = job.clone();
+        Box::new(move || helper(j)) as Task
+    }));
+
+    {
+        // The guard must outlive the caller's item loop: if f(i) panics
+        // here, its Drop still waits out all started helpers before the
+        // unwind leaves this frame and invalidates `f`/`results`.
+        let _wait = WaitGuard(&job);
+        loop {
+            let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let v = f(i);
+            // SAFETY: index i was handed out exactly once.
+            unsafe { (*res_ptr.add(i)).write(v) };
+        }
+        // WaitGuard drops here: after it returns, cursor >= n, so any
+        // helper still queued will observe an exhausted cursor (or the
+        // aborted flag) on wakeup and exit without touching f/results.
+    }
+
+    if let Some(payload) = job.panic_payload.lock().unwrap().take() {
+        // Mirror thread::scope semantics: rethrow the worker's own panic
+        // payload. Dropping `results` frees the buffer without running T
+        // destructors (MaybeUninit suppresses drop); only the written
+        // values' interiors leak — the usual cost of unwinding through
+        // partially initialized buffers.
+        drop(results);
+        std::panic::resume_unwind(payload);
+    }
+
+    // SAFETY: every index in 0..n was claimed exactly once and its slot
+    // written before the claiming thread reported finished (or was the
+    // caller itself); the Acquire-ordered started/finished handshake in
+    // WaitGuard makes those writes visible here.
+    let cap = results.capacity();
+    std::mem::forget(results);
+    unsafe { Vec::from_raw_parts(res_ptr as *mut T, n, cap) }
 }
 
 #[cfg(test)]
@@ -135,5 +328,63 @@ mod tests {
             i
         });
         assert!(PEAK.load(Ordering::SeqCst) >= 2);
+    }
+
+    /// Items run on the persistent, named pool workers — not on freshly
+    /// spawned threads — and the worker set is bounded by the pool size.
+    #[test]
+    fn runs_on_persistent_pool_workers() {
+        let names = || -> Vec<String> {
+            let v = par_map(64, 4, |_i| {
+                std::thread::sleep(std::time::Duration::from_micros(500));
+                std::thread::current().name().unwrap_or("").to_string()
+            });
+            v.into_iter()
+                .filter(|n| n.starts_with("gnnb-pool-"))
+                .collect()
+        };
+        let mut pool_names: std::collections::HashSet<String> = std::collections::HashSet::new();
+        for run in 0..4 {
+            let helpers = names();
+            assert!(
+                !helpers.is_empty(),
+                "run {run}: no items executed on pool workers"
+            );
+            pool_names.extend(helpers);
+        }
+        // persistent pool: the same fixed worker set serves every
+        // dispatch, so across runs we can never see more distinct worker
+        // threads than the pool holds
+        assert!(
+            pool_names.len() <= pool_threads(),
+            "saw {} distinct workers, pool has {}",
+            pool_names.len(),
+            pool_threads()
+        );
+    }
+
+    /// Nested par_map from inside a pool worker must not deadlock (the
+    /// caller participates, so progress never depends on free workers).
+    #[test]
+    fn nested_par_map_completes() {
+        let v = par_map(8, 4, |i| par_map(8, 4, move |j| i * 8 + j));
+        for (i, inner) in v.iter().enumerate() {
+            assert_eq!(inner, &(0..8).map(|j| i * 8 + j).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn item_panic_propagates_to_caller_with_payload() {
+        // whichever thread draws the panicking item, the caller panics
+        // with the ORIGINAL payload: directly if it drew it itself, or
+        // via resume_unwind after the WaitGuard drains started helpers
+        let _ = par_map(64, 4, |i| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            if i == 63 {
+                panic!("boom");
+            }
+            i
+        });
     }
 }

@@ -6,7 +6,7 @@ use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use gnnbuilder::bench::Bench;
-use gnnbuilder::coordinator::{Backend, BackendSpec, BatchPolicy, Coordinator};
+use gnnbuilder::coordinator::{Backend, BackendSpec, BatchPolicy, Coordinator, Metrics};
 use gnnbuilder::datasets;
 use gnnbuilder::engine::{synth_weights, Engine};
 use gnnbuilder::graph::{Graph, GraphView};
@@ -25,7 +25,7 @@ impl Backend for Null {
 fn spec() -> BackendSpec {
     BackendSpec {
         model: "null".into(),
-        factory: Box::new(|| Ok(Box::new(Null) as Box<dyn Backend>)),
+        factory: Box::new(|_: &Metrics| Ok(Box::new(Null) as Box<dyn Backend>)),
     }
 }
 
@@ -102,7 +102,9 @@ fn main() {
         let looped = engine.clone();
         let spec = BackendSpec {
             model: model.clone(),
-            factory: Box::new(move || Ok(Box::new(LoopedEngine(looped)) as Box<dyn Backend>)),
+            factory: Box::new(move |_: &Metrics| {
+                Ok(Box::new(LoopedEngine(looped)) as Box<dyn Backend>)
+            }),
         };
         let c = Coordinator::start(vec![spec], policy);
         let looped_rps = run_throughput(&c, &format!("coordinator/looped_engine/mb{max_batch}"));

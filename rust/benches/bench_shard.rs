@@ -1,17 +1,23 @@
 //! Sharded vs whole-graph forward on large citation-style graphs — the
 //! intra-graph-parallelism half of the scaling story (the batch path in
 //! `bench_inference` covers inter-graph parallelism). Partitions a
-//! PUBMED-profile graph (≥10⁴ nodes) at K ∈ {1, 4, 16}, times the
-//! sharded forward against the whole-graph baseline, verifies
-//! bit-identity, and emits `BENCH_shard.json` with latency plus the
-//! partition quality metrics (cut-edge fraction, halo-node fraction).
+//! PUBMED-profile graph (≥10⁴ nodes) at K ∈ {1, 4, 16} plus the adaptive
+//! K, times the sharded forward against the whole-graph baseline,
+//! verifies bit-identity, measures the shard-plan cache cold (partition +
+//! extraction) vs warm (hash + map hit) latency, and emits
+//! `BENCH_shard.json` with latency plus the partition quality metrics
+//! (cut-edge fraction, halo-node fraction).
+
+use std::sync::Arc;
 
 use gnnbuilder::bench::Bench;
+use gnnbuilder::coordinator::PlanCache;
 use gnnbuilder::datasets::{self, LargeGraphStats};
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
 use gnnbuilder::model::{ConvType, ModelConfig};
-use gnnbuilder::partition::ShardedGraph;
+use gnnbuilder::partition::{adaptive_k, ShardedGraph};
 use gnnbuilder::util::json::Json;
+use gnnbuilder::util::pool;
 
 fn engine_for(stats: &LargeGraphStats, nodes: usize, edges: usize) -> Engine {
     let cfg = ModelConfig {
@@ -82,6 +88,38 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
         k1 / k4.max(1e-12),
         if k4 < k1 { "faster" } else { "NOT faster" }
     );
+
+    // ---- adaptive K + plan-cache cold vs warm --------------------------
+    let auto_k = adaptive_k(g.num_nodes, g.num_edges, pool::default_threads());
+    let cache = PlanCache::with_capacity(8);
+    let t0 = std::time::Instant::now();
+    let sg_auto = cache.get_or_build(g.view(), auto_k, 2023);
+    let cache_cold_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let sg_warm = cache.get_or_build(g.view(), auto_k, 2023);
+    let cache_warm_s = t0.elapsed().as_secs_f64();
+    assert!(Arc::ptr_eq(&sg_auto, &sg_warm), "warm lookup rebuilt the plan");
+    assert_eq!(
+        cache.stats().snapshot(),
+        (1, 1, 1, 0),
+        "expected one build then one hit"
+    );
+    let mut ws = Workspace::with_default_threads();
+    let auto_out = engine.forward_sharded(&sg_auto, &ng.x, &mut ws).unwrap();
+    assert_eq!(auto_out, baseline, "adaptive K={auto_k} diverged from whole-graph");
+    let auto_run = b.run(
+        &format!("engine_sharded/{}/n{nodes}/k_auto{auto_k}", stats.name),
+        || engine.forward_sharded(&sg_auto, &ng.x, &mut ws).unwrap(),
+    );
+    println!(
+        "  adaptive K={auto_k}: plan cold {:.1} ms, warm {:.3} ms ({:.0}x), \
+         forward speedup vs whole {:.2}x",
+        cache_cold_s * 1e3,
+        cache_warm_s * 1e3,
+        cache_cold_s / cache_warm_s.max(1e-9),
+        whole.summary.mean / auto_run.summary.mean.max(1e-12)
+    );
+
     Json::obj(vec![
         (
             "graph",
@@ -102,6 +140,32 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
             ]),
         ),
         ("sharded", Json::arr(sharded_results)),
+        (
+            "adaptive",
+            Json::obj(vec![
+                ("k", Json::num(auto_k as f64)),
+                ("mean_s", Json::num(auto_run.summary.mean)),
+                ("p95_s", Json::num(auto_run.summary.p95)),
+                ("cut_edge_fraction", Json::num(sg_auto.cut_fraction())),
+                ("halo_fraction", Json::num(sg_auto.halo_fraction())),
+                (
+                    "speedup_vs_whole",
+                    Json::num(whole.summary.mean / auto_run.summary.mean.max(1e-12)),
+                ),
+                ("bit_identical", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "plan_cache",
+            Json::obj(vec![
+                ("cold_s", Json::num(cache_cold_s)),
+                ("warm_s", Json::num(cache_warm_s)),
+                (
+                    "warm_speedup",
+                    Json::num(cache_cold_s / cache_warm_s.max(1e-9)),
+                ),
+            ]),
+        ),
         ("k4_beats_k1", Json::Bool(k4 < k1)),
     ])
 }

@@ -22,6 +22,10 @@
 //!                                   ▼ responses via per-request channel
 //! ```
 
+pub mod plan_cache;
+
+pub use plan_cache::{PlanCache, PlanCacheStats};
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -32,7 +36,7 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::{Engine, Workspace};
 use crate::graph::{Graph, GraphBatch, GraphView};
-use crate::partition::ShardedGraph;
+use crate::partition::{adaptive_k, ShardedGraph};
 use crate::util::stats::Summary;
 
 /// One inference request: a graph routed to a named model variant.
@@ -74,8 +78,11 @@ pub trait Backend {
     }
 }
 
-/// Constructs a backend on its worker thread.
-pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+/// Constructs a backend on its worker thread. The factory receives the
+/// coordinator's live [`Metrics`] so backends can wire shared counters
+/// (e.g. the shard-plan cache) into the coordinator's observability
+/// surface; backends that don't report anything ignore it.
+pub type BackendFactory = Box<dyn FnOnce(&Metrics) -> Result<Box<dyn Backend>> + Send>;
 
 /// A named backend replica to spawn.
 pub struct BackendSpec {
@@ -89,22 +96,31 @@ impl BackendSpec {
     pub fn engine(engine: Engine) -> BackendSpec {
         BackendSpec {
             model: engine.cfg.name.clone(),
-            factory: Box::new(move || Ok(Box::new(EngineBackend::new(engine)) as Box<dyn Backend>)),
+            factory: Box::new(move |_: &Metrics| {
+                Ok(Box::new(EngineBackend::new(engine)) as Box<dyn Backend>)
+            }),
         }
     }
 
     /// Native-engine replica with large-graph shard routing: requests at
     /// or above `policy.min_nodes` nodes dispatch through the partitioned
-    /// forward. Returns the spec plus the live [`ShardStats`] handle
-    /// (shard counts, cut-edge and halo fractions per dispatch).
+    /// forward, with shard plans served from the coordinator's shared
+    /// plan cache (`Metrics::plan_cache` — one topology partitions once
+    /// across all sharded backends). Returns the spec plus the live
+    /// [`ShardStats`] handle (shard counts, cut-edge and halo fractions
+    /// per dispatch).
     pub fn engine_sharded(engine: Engine, policy: ShardPolicy) -> (BackendSpec, Arc<ShardStats>) {
         let stats = Arc::new(ShardStats::default());
         let handle = stats.clone();
         let spec = BackendSpec {
             model: engine.cfg.name.clone(),
-            factory: Box::new(move || {
-                Ok(Box::new(EngineBackend::with_sharding(engine, policy, stats))
-                    as Box<dyn Backend>)
+            factory: Box::new(move |m: &Metrics| {
+                Ok(Box::new(EngineBackend::with_sharding(
+                    engine,
+                    policy,
+                    stats,
+                    m.plan_cache.clone(),
+                )) as Box<dyn Backend>)
             }),
         };
         (spec, handle)
@@ -115,13 +131,24 @@ impl BackendSpec {
     pub fn pjrt(meta: crate::runtime::ArtifactMeta) -> BackendSpec {
         BackendSpec {
             model: meta.name.clone(),
-            factory: Box::new(move || {
+            factory: Box::new(move |_: &Metrics| {
                 let mut rt = crate::runtime::Runtime::cpu()?;
                 let exe = rt.load(&meta)?;
                 Ok(Box::new(PjrtBackend { _rt: rt, exe }) as Box<dyn Backend>)
             }),
         }
     }
+}
+
+/// Shard-count selection for [`ShardPolicy`]: adaptive by default,
+/// pinnable for deployments that tuned a specific K.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardK {
+    /// derive K per graph from node count, average degree, and the
+    /// worker-pool core count ([`adaptive_k`])
+    Auto,
+    /// always partition into exactly this many shards
+    Fixed(usize),
 }
 
 /// When and how the engine backend shards a single large graph
@@ -131,8 +158,8 @@ impl BackendSpec {
 pub struct ShardPolicy {
     /// node count at which a request takes the sharded path
     pub min_nodes: usize,
-    /// shard count K for the partitioner
-    pub shards: usize,
+    /// shard count for the partitioner (adaptive unless pinned)
+    pub k: ShardK,
     /// partitioner seed (deterministic plans per deployment)
     pub seed: u64,
 }
@@ -141,8 +168,20 @@ impl Default for ShardPolicy {
     fn default() -> Self {
         ShardPolicy {
             min_nodes: 4096,
-            shards: 4,
+            k: ShardK::Auto,
             seed: 0x5eed,
+        }
+    }
+}
+
+impl ShardPolicy {
+    /// Resolve the shard count for one graph under this policy.
+    pub fn resolve_k(&self, g: &GraphView<'_>) -> usize {
+        match self.k {
+            ShardK::Fixed(k) => k,
+            ShardK::Auto => {
+                adaptive_k(g.num_nodes, g.num_edges, crate::util::pool::default_threads())
+            }
         }
     }
 }
@@ -192,7 +231,16 @@ impl ShardStats {
 pub struct EngineBackend {
     engine: Engine,
     ws: Mutex<Workspace>,
-    shard: Option<(ShardPolicy, Arc<ShardStats>)>,
+    shard: Option<ShardState>,
+}
+
+/// Sharded-dispatch state of an [`EngineBackend`]: the routing policy,
+/// the per-dispatch stats handle, and the (shared) plan cache that makes
+/// repeated inference over one topology partition exactly once.
+struct ShardState {
+    policy: ShardPolicy,
+    stats: Arc<ShardStats>,
+    plans: Arc<PlanCache>,
 }
 
 impl EngineBackend {
@@ -205,27 +253,44 @@ impl EngineBackend {
     }
 
     /// Engine backend that routes graphs at or above the policy's node
-    /// threshold through the sharded path, recording into `stats`.
+    /// threshold through the sharded path, recording dispatches into
+    /// `stats` and serving shard plans from `plans` (pass the
+    /// coordinator's `Metrics::plan_cache` to share plans across
+    /// backends, or a private cache for standalone use).
     pub fn with_sharding(
         engine: Engine,
         policy: ShardPolicy,
         stats: Arc<ShardStats>,
+        plans: Arc<PlanCache>,
     ) -> EngineBackend {
         EngineBackend {
             engine,
             ws: Mutex::new(Workspace::with_default_threads()),
-            shard: Some((policy, stats)),
+            shard: Some(ShardState {
+                policy,
+                stats,
+                plans,
+            }),
         }
     }
 
-    fn wants_shard(&self, graph: &GraphView<'_>) -> bool {
-        matches!(&self.shard, Some((p, _)) if graph.num_nodes >= p.min_nodes && p.shards > 1)
+    /// Resolved shard count when this graph should take the sharded path.
+    fn wants_shard(&self, graph: &GraphView<'_>) -> Option<usize> {
+        let st = self.shard.as_ref()?;
+        if graph.num_nodes < st.policy.min_nodes {
+            return None;
+        }
+        let k = st.policy.resolve_k(graph);
+        (k > 1).then_some(k)
     }
 
-    fn infer_sharded(&self, graph: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
-        let (policy, stats) = self.shard.as_ref().expect("checked by wants_shard");
-        let sg = ShardedGraph::build(graph, policy.shards, policy.seed);
-        stats.record(&sg);
+    fn infer_sharded(&self, graph: GraphView<'_>, x: &[f32], k: usize) -> Result<Vec<f32>> {
+        let st = self.shard.as_ref().expect("checked by wants_shard");
+        // plan served from the cache: repeated inference over one
+        // topology partitions exactly once (hits after that), and
+        // concurrent first requests collapse into a single build
+        let sg = st.plans.get_or_build(graph, k, st.policy.seed);
+        st.stats.record(&sg);
         let mut ws = self.ws.lock().unwrap();
         // f32 like every other EngineBackend path (forward_view /
         // forward_batch_results), so outputs never change numerics —
@@ -240,8 +305,8 @@ impl Backend for EngineBackend {
     }
 
     fn infer(&self, graph: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
-        if self.wants_shard(&graph) {
-            return self.infer_sharded(graph, x);
+        if let Some(k) = self.wants_shard(&graph) {
+            return self.infer_sharded(graph, x, k);
         }
         self.engine.forward_view(graph, x)
     }
@@ -249,7 +314,7 @@ impl Backend for EngineBackend {
     fn infer_batch(&self, batch: &GraphBatch) -> Vec<Result<Vec<f32>>> {
         // fast path: nothing over the shard threshold → whole dispatch
         // through the packed batch runner
-        let any_big = (0..batch.len()).any(|i| self.wants_shard(&batch.view(i)));
+        let any_big = (0..batch.len()).any(|i| self.wants_shard(&batch.view(i)).is_some());
         if !any_big {
             let mut ws = self.ws.lock().unwrap();
             return self.engine.forward_batch_results(batch, &mut ws);
@@ -263,8 +328,8 @@ impl Backend for EngineBackend {
         let mut small_idx: Vec<usize> = Vec::new();
         for i in 0..batch.len() {
             let view = batch.view(i);
-            if self.wants_shard(&view) {
-                results[i] = Some(self.infer_sharded(view, batch.x_view(i)));
+            if let Some(k) = self.wants_shard(&view) {
+                results[i] = Some(self.infer_sharded(view, batch.x_view(i), k));
             } else {
                 small_idx.push(i);
                 small.push_view(view, batch.x_view(i));
@@ -339,6 +404,12 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub peak_queue: AtomicUsize,
+    /// the coordinator's shard-plan cache, shared by every sharded
+    /// engine backend it spawns (plans depend only on topology + policy,
+    /// so one deployed graph served by several models partitions once).
+    /// Counters are at `plan_cache.stats()` — `builds` staying at 1
+    /// across repeated requests is the "zero re-partitions" guarantee
+    pub plan_cache: Arc<PlanCache>,
     latencies: Mutex<Vec<f64>>,
     batch_sizes: Mutex<Vec<f64>>,
     queue_depths: Mutex<HashMap<String, usize>>,
@@ -546,7 +617,7 @@ fn router_loop(
 }
 
 fn worker_loop(rx: Receiver<Vec<Request>>, factory: BackendFactory, metrics: Arc<Metrics>) {
-    let backend = match factory() {
+    let backend = match factory(&metrics) {
         Ok(b) => b,
         Err(e) => {
             eprintln!("backend construction failed: {e:#}");
@@ -634,7 +705,9 @@ mod tests {
         let name = name.to_string();
         BackendSpec {
             model: name.clone(),
-            factory: Box::new(move || Ok(Box::new(Toy { name, delay }) as Box<dyn Backend>)),
+            factory: Box::new(move |_: &Metrics| {
+                Ok(Box::new(Toy { name, delay }) as Box<dyn Backend>)
+            }),
         }
     }
 
@@ -813,7 +886,7 @@ mod tests {
 
         let policy = ShardPolicy {
             min_nodes: 1000,
-            shards: 4,
+            k: ShardK::Fixed(4),
             seed: 1,
         };
         let (spec, shard_stats) = BackendSpec::engine_sharded(engine.clone(), policy);
@@ -833,6 +906,189 @@ mod tests {
         assert_eq!(counts.mean, 4.0);
         assert_eq!(shard_stats.cut_fraction_summary().n, 1);
         assert!(shard_stats.halo_fraction_summary().mean > 0.0);
+        // the plan landed in the coordinator's shared cache
+        assert_eq!(c.metrics.plan_cache.stats().builds.load(Ordering::Relaxed), 1);
         c.shutdown();
+    }
+
+    /// The serving acceptance gate for the plan cache: repeated inference
+    /// on an identical topology performs ZERO re-partitions after the
+    /// first request — asserted via the hit/build counters surfaced in
+    /// `Metrics` — while outputs stay bit-identical for every feature set.
+    #[test]
+    fn repeated_topology_partitions_exactly_once() {
+        let stats = &datasets::PUBMED;
+        let cfg = ModelConfig {
+            name: "plan_cache_router".into(),
+            graph_input_dim: stats.node_dim,
+            gnn_conv: ConvType::Sage,
+            gnn_hidden_dim: 8,
+            gnn_out_dim: 6,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 6,
+            mlp_num_layers: 1,
+            output_dim: stats.num_classes,
+            max_nodes: 2000,
+            max_edges: 20_000,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 33);
+        let engine = Engine::new(cfg, &weights, stats.mean_degree).unwrap();
+        let big = datasets::gen_citation_graph(stats, 1400, 6);
+
+        let policy = ShardPolicy {
+            min_nodes: 1000,
+            k: ShardK::Fixed(4),
+            seed: 2,
+        };
+        let (spec, shard_stats) = BackendSpec::engine_sharded(engine.clone(), policy);
+        let c = Coordinator::start(vec![spec], BatchPolicy::default());
+
+        let rounds = 6usize;
+        for round in 0..rounds {
+            // same topology, fresh features each round (the serving
+            // pattern the cache exists for)
+            let x: Vec<f32> = big.x.iter().map(|v| v + round as f32 * 0.125).collect();
+            let via = c
+                .infer("plan_cache_router", big.graph.clone(), x.clone())
+                .unwrap();
+            assert_eq!(via.output, engine.forward(&big.graph, &x).unwrap());
+        }
+        assert_eq!(shard_stats.dispatches.load(Ordering::Relaxed), rounds as u64);
+        let (hits, misses, builds, evictions) = c.metrics.plan_cache.stats().snapshot();
+        assert_eq!(builds, 1, "an identical topology was re-partitioned");
+        assert_eq!(misses, 1);
+        assert_eq!(hits, rounds as u64 - 1);
+        assert_eq!(evictions, 0);
+        c.shutdown();
+    }
+
+    /// The plan cache is coordinator-wide: two sharded backends (two
+    /// models) serving the same topology under the same policy share one
+    /// plan — a single partition for the whole deployment.
+    #[test]
+    fn plan_cache_is_shared_across_sharded_backends() {
+        let stats = &datasets::PUBMED;
+        let mk_engine = |name: &str, seed: u64| {
+            let cfg = ModelConfig {
+                name: name.into(),
+                graph_input_dim: stats.node_dim,
+                gnn_conv: ConvType::Gcn,
+                gnn_hidden_dim: 6,
+                gnn_out_dim: 6,
+                gnn_num_layers: 2,
+                mlp_hidden_dim: 4,
+                mlp_num_layers: 1,
+                output_dim: stats.num_classes,
+                max_nodes: 2000,
+                max_edges: 20_000,
+                ..ModelConfig::default()
+            };
+            let weights = synth_weights(&cfg, seed);
+            Engine::new(cfg, &weights, stats.mean_degree).unwrap()
+        };
+        let engine_a = mk_engine("shard_a", 1);
+        let engine_b = mk_engine("shard_b", 2);
+        let big = datasets::gen_citation_graph(stats, 1300, 4);
+
+        let policy = ShardPolicy {
+            min_nodes: 1000,
+            k: ShardK::Fixed(4),
+            seed: 3,
+        };
+        let (spec_a, _) = BackendSpec::engine_sharded(engine_a.clone(), policy);
+        let (spec_b, _) = BackendSpec::engine_sharded(engine_b.clone(), policy);
+        let c = Coordinator::start(vec![spec_a, spec_b], BatchPolicy::default());
+
+        let via_a = c.infer("shard_a", big.graph.clone(), big.x.clone()).unwrap();
+        let via_b = c.infer("shard_b", big.graph.clone(), big.x.clone()).unwrap();
+        assert_eq!(via_a.output, engine_a.forward(&big.graph, &big.x).unwrap());
+        assert_eq!(via_b.output, engine_b.forward(&big.graph, &big.x).unwrap());
+
+        // one topology + one policy → one partition, even across models
+        let (hits, misses, builds, _) = c.metrics.plan_cache.stats().snapshot();
+        assert_eq!(builds, 1, "the second backend re-partitioned a cached topology");
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 1);
+        c.shutdown();
+    }
+
+    /// The default (adaptive) policy derives K from the graph: big sparse
+    /// graphs shard across cores, molecule-sized graphs resolve to 1 and
+    /// keep the whole-graph path even above a tiny threshold.
+    #[test]
+    fn adaptive_policy_resolves_k_per_graph() {
+        let policy = ShardPolicy::default();
+        assert_eq!(policy.k, ShardK::Auto);
+        let big = datasets::gen_citation_graph(&datasets::PUBMED, 1500, 3);
+        let k = policy.resolve_k(&big.graph.view());
+        assert_eq!(
+            k,
+            crate::partition::adaptive_k(
+                big.graph.num_nodes,
+                big.graph.num_edges,
+                crate::util::pool::default_threads()
+            )
+        );
+        assert!(k >= 1 && k <= crate::util::pool::default_threads());
+
+        // a backend with Fixed(1) never routes through the sharded path
+        let cfg = ModelConfig {
+            name: "fixed1".into(),
+            graph_input_dim: datasets::PUBMED.node_dim,
+            gnn_conv: ConvType::Gcn,
+            gnn_hidden_dim: 4,
+            gnn_out_dim: 4,
+            gnn_num_layers: 1,
+            mlp_hidden_dim: 4,
+            mlp_num_layers: 1,
+            output_dim: 2,
+            max_nodes: 2000,
+            max_edges: 20_000,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 1);
+        let engine = Engine::new(cfg, &weights, 4.5).unwrap();
+        let backend = EngineBackend::with_sharding(
+            engine,
+            ShardPolicy {
+                min_nodes: 1,
+                k: ShardK::Fixed(1),
+                ..ShardPolicy::default()
+            },
+            Arc::new(ShardStats::default()),
+            Arc::new(PlanCache::with_capacity(4)),
+        );
+        assert_eq!(backend.wants_shard(&big.graph.view()), None);
+        // adaptive + molecule-sized graph also stays whole (K resolves 1)
+        let tiny = datasets::gen_citation_graph(&datasets::PUBMED, 60, 1);
+        let backend_auto = EngineBackend::with_sharding(
+            Engine::new(
+                ModelConfig {
+                    name: "auto_tiny".into(),
+                    graph_input_dim: datasets::PUBMED.node_dim,
+                    gnn_conv: ConvType::Gcn,
+                    gnn_hidden_dim: 4,
+                    gnn_out_dim: 4,
+                    gnn_num_layers: 1,
+                    mlp_hidden_dim: 4,
+                    mlp_num_layers: 1,
+                    output_dim: 2,
+                    max_nodes: 2000,
+                    max_edges: 20_000,
+                    ..ModelConfig::default()
+                },
+                &weights,
+                4.5,
+            )
+            .unwrap(),
+            ShardPolicy {
+                min_nodes: 1,
+                ..ShardPolicy::default()
+            },
+            Arc::new(ShardStats::default()),
+            Arc::new(PlanCache::with_capacity(4)),
+        );
+        assert_eq!(backend_auto.wants_shard(&tiny.graph.view()), None);
     }
 }

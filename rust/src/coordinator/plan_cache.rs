@@ -1,0 +1,349 @@
+//! Shard-plan cache — [`ShardedGraph`] plans keyed by graph identity
+//! (topology content hash + shard policy), built once per key and evicted
+//! in bounded LRU order.
+//!
+//! The dominant node-level serving pattern is repeated inference over the
+//! *same* topology (a deployed citation/social graph) with fresh features.
+//! Partitioning is O(V+E) work per request; with the cache, every request
+//! after the first pays a hash + map lookup instead of a full partition +
+//! shard extraction.
+//!
+//! Concurrency discipline:
+//! - the map stores `Arc<OnceLock<Arc<ShardedGraph>>>` cells, so the map
+//!   lock is held only to find or insert a cell — never while
+//!   partitioning. Concurrent requests for the same key converge on one
+//!   cell and exactly one of them runs the build (the `builds` counter
+//!   proves it); requests for distinct keys build in parallel.
+//! - the build itself dispatches nested [`par_map`](crate::util::pool)
+//!   work (parallel shard extraction); because no cache lock is held
+//!   around it and pool dispatches never depend on free workers, cache
+//!   misses from inside pool workers cannot deadlock.
+//! - eviction drops the map entry only; in-flight readers of an evicted
+//!   plan keep their `Arc` and complete normally.
+//!
+//! Counters (hits / misses / builds / evictions) live in a shared
+//! [`PlanCacheStats`] handle; the coordinator owns one cache per
+//! deployment ([`Metrics::plan_cache`](super::Metrics)) shared by every
+//! sharded backend it spawns, so one topology served by several models
+//! still partitions exactly once (plans depend only on topology + policy,
+//! never on the model).
+//!
+//! Known costs, by design:
+//! - a warm hit still hashes the full neighbor table (O(V+E) — strictly
+//!   cheaper than the O(E·d) forward that follows, but not free);
+//!   memoizing the hash on a deployed graph handle is a noted follow-up.
+//! - capacity is counted in *plans*, and one plan holds extracted
+//!   subgraph arenas of roughly the whole neighbor table plus halo
+//!   duplication — budget capacity accordingly for very large graphs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::graph::GraphView;
+use crate::partition::{mix64, topology_hash, ShardedGraph};
+
+/// Live counters of one plan cache (shared via `Arc`; the coordinator
+/// exposes its copy as `Metrics::plan_cache`).
+#[derive(Debug, Default)]
+pub struct PlanCacheStats {
+    /// lookups answered by an existing (possibly still-building) entry
+    pub hits: AtomicU64,
+    /// lookups that inserted a fresh cache entry
+    pub misses: AtomicU64,
+    /// plans actually partitioned + extracted — repeated inference over
+    /// one topology holds this at exactly 1
+    pub builds: AtomicU64,
+    /// entries dropped by LRU eviction
+    pub evictions: AtomicU64,
+}
+
+impl PlanCacheStats {
+    /// `(hits, misses, builds, evictions)` snapshot.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.builds.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    cell: Arc<OnceLock<Arc<ShardedGraph>>>,
+    /// logical timestamp of the last lookup that touched this entry
+    last_used: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    tick: u64,
+}
+
+/// Bounded LRU cache of [`ShardedGraph`] plans keyed by
+/// ([`topology_hash`], K, partitioner seed).
+#[derive(Debug)]
+pub struct PlanCache {
+    capacity: usize,
+    stats: Arc<PlanCacheStats>,
+    inner: Mutex<Inner>,
+}
+
+impl Default for PlanCache {
+    /// A cache at [`PlanCache::DEFAULT_CAPACITY`] with its own stats —
+    /// what a coordinator's [`Metrics`](super::Metrics) starts with.
+    fn default() -> PlanCache {
+        PlanCache::with_capacity(PlanCache::DEFAULT_CAPACITY)
+    }
+}
+
+impl PlanCache {
+    /// Default LRU capacity, in plans. Capacity counts *plans*, not
+    /// bytes: a plan retains subgraph arenas of roughly the whole
+    /// neighbor table (plus halo duplication), so deployments serving
+    /// very large graphs should size this down.
+    pub const DEFAULT_CAPACITY: usize = 32;
+
+    /// Cache holding at most `capacity` plans (clamped to ≥ 1), recording
+    /// into the shared `stats` handle.
+    pub fn new(capacity: usize, stats: Arc<PlanCacheStats>) -> PlanCache {
+        PlanCache {
+            capacity: capacity.max(1),
+            stats,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                tick: 0,
+            }),
+        }
+    }
+
+    /// Cache with its own private stats handle (benches / standalone use).
+    pub fn with_capacity(capacity: usize) -> PlanCache {
+        PlanCache::new(capacity, Arc::new(PlanCacheStats::default()))
+    }
+
+    pub fn stats(&self) -> &Arc<PlanCacheStats> {
+        &self.stats
+    }
+
+    /// Number of cached plans (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Full plan identity: graph topology mixed with the shard policy.
+    fn key(g: GraphView<'_>, k: usize, seed: u64) -> u64 {
+        let mut h = topology_hash(g);
+        h = mix64(h ^ k as u64);
+        mix64(h ^ seed)
+    }
+
+    /// Return the cached plan for `(g, k, seed)`, partitioning at most
+    /// once per key no matter how many threads race on it.
+    pub fn get_or_build(&self, g: GraphView<'_>, k: usize, seed: u64) -> Arc<ShardedGraph> {
+        let key = Self::key(g, k, seed);
+        let cell = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.entries.get_mut(&key) {
+                e.last_used = tick;
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                e.cell.clone()
+            } else {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                // O(capacity) scan — serving caches hold tens of plans,
+                // and eviction only runs on a miss that found a full map
+                while inner.entries.len() >= self.capacity {
+                    let lru = inner
+                        .entries
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(&k, _)| k)
+                        .expect("full cache has at least one entry");
+                    inner.entries.remove(&lru);
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                let cell = Arc::new(OnceLock::new());
+                inner.entries.insert(
+                    key,
+                    Entry {
+                        cell: cell.clone(),
+                        last_used: tick,
+                    },
+                );
+                cell
+            }
+        };
+        // Build outside the map lock: same-key racers block on this cell
+        // (exactly one runs the closure), distinct keys proceed freely.
+        cell.get_or_init(|| {
+            self.stats.builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(ShardedGraph::build(g, k, seed))
+        })
+        .clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{synth_weights, Engine, Workspace};
+    use crate::graph::Graph;
+    use crate::model::{ConvType, ModelConfig};
+    use crate::util::pool::par_map;
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, e: usize) -> Graph {
+        let mut rng = Rng::seed_from(seed);
+        let edges: Vec<(u32, u32)> = (0..e)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+            .collect();
+        Graph::from_coo(n, &edges)
+    }
+
+    #[test]
+    fn first_lookup_builds_then_every_repeat_hits() {
+        let cache = PlanCache::with_capacity(4);
+        let g = random_graph(1, 30, 80);
+        let first = cache.get_or_build(g.view(), 3, 7);
+        assert_eq!(cache.stats().snapshot(), (0, 1, 1, 0));
+        for _ in 0..5 {
+            let again = cache.get_or_build(g.view(), 3, 7);
+            assert!(Arc::ptr_eq(&first, &again), "hit returned a different plan");
+        }
+        assert_eq!(cache.stats().snapshot(), (5, 1, 1, 0));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(first.k(), 3);
+    }
+
+    #[test]
+    fn distinct_policies_and_topologies_are_distinct_keys() {
+        let cache = PlanCache::with_capacity(16);
+        let g1 = random_graph(2, 30, 80);
+        let g2 = random_graph(3, 30, 80);
+        cache.get_or_build(g1.view(), 2, 0);
+        cache.get_or_build(g1.view(), 3, 0); // different K
+        cache.get_or_build(g1.view(), 2, 1); // different seed
+        cache.get_or_build(g2.view(), 2, 0); // different topology
+        let (hits, misses, builds, _) = cache.stats().snapshot();
+        assert_eq!((hits, misses, builds), (0, 4, 4));
+        assert_eq!(cache.len(), 4);
+    }
+
+    /// The tentpole concurrency gate: hammered from pool workers over a
+    /// mix of repeated and distinct topologies, each key is built exactly
+    /// once and every caller of one key gets the same shared plan.
+    #[test]
+    fn hammered_from_pool_workers_builds_each_key_once() {
+        let cache = PlanCache::with_capacity(8);
+        let graphs: Vec<Graph> = (0..4).map(|i| random_graph(10 + i, 40, 120)).collect();
+        let plans = par_map(64, 8, |i| cache.get_or_build(graphs[i % 4].view(), 3, 9));
+        let (hits, misses, builds, evictions) = cache.stats().snapshot();
+        assert_eq!(builds, 4, "a key was partitioned more than once");
+        assert_eq!(misses, 4);
+        assert_eq!(hits, 60);
+        assert_eq!(evictions, 0);
+        for (i, p) in plans.iter().enumerate() {
+            assert!(
+                Arc::ptr_eq(p, &plans[i % 4]),
+                "caller {i} got a private copy of its key's plan"
+            );
+        }
+    }
+
+    /// Cache misses from inside nested pool dispatches must complete: the
+    /// build itself par_maps (shard extraction), making this three levels
+    /// of pool work deep.
+    #[test]
+    fn nested_pool_dispatch_does_not_deadlock() {
+        let cache = PlanCache::with_capacity(4);
+        let graphs: Vec<Graph> = (0..2).map(|i| random_graph(20 + i, 30, 90)).collect();
+        let ks = par_map(4, 4, |i| {
+            par_map(3, 3, |j| cache.get_or_build(graphs[(i + j) % 2].view(), 2, 1).k())
+        });
+        for inner in ks {
+            assert!(inner.iter().all(|&k| k == 2));
+        }
+        let (_, _, builds, _) = cache.stats().snapshot();
+        assert_eq!(builds, 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recently_used_key() {
+        let cache = PlanCache::with_capacity(2);
+        let ga = random_graph(30, 25, 60);
+        let gb = random_graph(31, 25, 60);
+        let gc = random_graph(32, 25, 60);
+        cache.get_or_build(ga.view(), 2, 0);
+        cache.get_or_build(gb.view(), 2, 0);
+        cache.get_or_build(ga.view(), 2, 0); // A is now more recent than B
+        cache.get_or_build(gc.view(), 2, 0); // full → evicts B, not A
+        assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 1);
+        let builds = cache.stats().builds.load(Ordering::Relaxed);
+        cache.get_or_build(ga.view(), 2, 0); // still cached
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), builds);
+        cache.get_or_build(gb.view(), 2, 0); // was evicted → rebuilt
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), builds + 1);
+    }
+
+    #[test]
+    fn capacity_is_a_hard_bound() {
+        let cache = PlanCache::with_capacity(3);
+        for i in 0..10 {
+            let g = random_graph(100 + i, 20, 50);
+            cache.get_or_build(g.view(), 2, 0);
+        }
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 7);
+        // zero capacity clamps to one instead of thrashing on empty
+        let tiny = PlanCache::with_capacity(0);
+        let g = random_graph(200, 20, 50);
+        tiny.get_or_build(g.view(), 2, 0);
+        tiny.get_or_build(g.view(), 2, 0);
+        assert_eq!(tiny.stats().hits.load(Ordering::Relaxed), 1);
+    }
+
+    /// A cached plan serves forwards bit-identically to a freshly built
+    /// one (the cache stores, never transforms).
+    #[test]
+    fn cached_plan_serves_bit_identical_forwards() {
+        let cfg = ModelConfig {
+            name: "cache_fwd".into(),
+            graph_input_dim: 5,
+            gnn_conv: ConvType::Sage,
+            gnn_hidden_dim: 6,
+            gnn_out_dim: 5,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 4,
+            mlp_num_layers: 1,
+            output_dim: 2,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 4);
+        let engine = Engine::new(cfg, &weights, 2.5).unwrap();
+        let g = random_graph(40, 35, 100);
+        let mut rng = Rng::seed_from(41);
+        let x: Vec<f32> = (0..g.num_nodes * 5)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let cache = PlanCache::with_capacity(2);
+        let mut ws = Workspace::new(2);
+        let fresh = ShardedGraph::build(g.view(), 3, 5);
+        let want = engine.forward_sharded(&fresh, &x, &mut ws).unwrap();
+        for _ in 0..3 {
+            let sg = cache.get_or_build(g.view(), 3, 5);
+            let got = engine.forward_sharded(&sg, &x, &mut ws).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(got, engine.forward(&g, &x).unwrap());
+        }
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+    }
+}

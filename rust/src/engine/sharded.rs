@@ -6,8 +6,12 @@
 //! ```text
 //!  per layer:  par_map over shards ──► conv_step on each shard's arena
 //!                                       (owned + ghost rows, local ids)
-//!              halo exchange        ──► copy each ghost row from its
+//!              halo exchange        ──► par_map over destination shards:
+//!                                       copy each ghost row from its
 //!                                       owner shard's fresh arena
+//!                                       (two-lock groups acquired in
+//!                                       ascending shard order — no
+//!                                       deadlock between destinations)
 //!  after L layers: gather owned rows by global id ──► pooling + MLP head
 //! ```
 //!
@@ -131,29 +135,40 @@ impl Engine {
             if li == last_layer {
                 break; // ghost rows are never read again — skip the exchange
             }
-            // halo exchange: pull each ghost row from its owner's arena.
-            // Routes are grouped by owner shard, so each source arena is
-            // locked once per destination shard.
-            for (s, routes) in sg.exchange.iter().enumerate() {
-                if routes.is_empty() {
-                    continue;
-                }
-                let mut dst = cur[s].lock().unwrap();
-                let mut src_shard = usize::MAX;
-                let mut src_guard = None;
-                for r in routes {
-                    let os = r.owner_shard as usize;
-                    // a ghost is never locally owned (extract guarantees
-                    // it), so dst and src are always different mutexes
-                    debug_assert_ne!(os, s);
-                    if os != src_shard {
-                        src_guard = Some(cur[os].lock().unwrap());
-                        src_shard = os;
+            // halo exchange: pull each ghost row from its owner's fresh
+            // arena, one par_map task per destination shard. Routes are
+            // grouped by owner shard; each (destination, owner) group
+            // locks its two arenas in ascending shard-index order, so a
+            // task never waits on a lower-indexed lock while holding a
+            // higher one — concurrent destinations cannot deadlock.
+            if sg.exchange.iter().any(|r| !r.is_empty()) {
+                let cur_ref = &cur;
+                par_map(k, threads, |s| {
+                    let routes = &sg.exchange[s];
+                    let mut lo = 0;
+                    while lo < routes.len() {
+                        let os = routes[lo].owner_shard as usize;
+                        let mut hi = lo + 1;
+                        while hi < routes.len() && routes[hi].owner_shard as usize == os {
+                            hi += 1;
+                        }
+                        // a ghost is never locally owned (extract
+                        // guarantees it), so dst and src always differ
+                        debug_assert_ne!(os, s);
+                        let (mut dst, src) = if os < s {
+                            let src = cur_ref[os].lock().unwrap();
+                            (cur_ref[s].lock().unwrap(), src)
+                        } else {
+                            let dst = cur_ref[s].lock().unwrap();
+                            (dst, cur_ref[os].lock().unwrap())
+                        };
+                        for r in &routes[lo..hi] {
+                            dst.row_mut(r.dst_local as usize)
+                                .copy_from_slice(src.row(r.src_local as usize));
+                        }
+                        lo = hi;
                     }
-                    let src = src_guard.as_ref().unwrap();
-                    dst.row_mut(r.dst_local as usize)
-                        .copy_from_slice(src.row(r.src_local as usize));
-                }
+                });
             }
         }
 
@@ -327,6 +342,49 @@ mod tests {
         assert_eq!(engine.forward_sharded(&sg1, &x1, &mut ws).unwrap(), a1);
         assert_eq!(a1, engine.forward(&g1, &x1).unwrap());
         assert_eq!(a2, engine.forward(&g2, &x2).unwrap());
+    }
+
+    /// The parallel halo exchange must stay bit-identical at shard counts
+    /// well above the workspace thread count (task multiplexing over the
+    /// two-lock groups) and with a serial workspace (threads = 1 clamps
+    /// the exchange par_map to the caller).
+    #[test]
+    fn parallel_exchange_bit_identical_at_high_k_and_serial_ws() {
+        let engine = tiny_engine(ConvType::Gcn, 600);
+        let mut rng = Rng::seed_from(19);
+        let (g, x) = random_graph_and_x(&mut rng, 80, 6);
+        let whole = engine.forward(&g, &x).unwrap();
+        for threads in [1usize, 2, 8] {
+            let mut ws = Workspace::new(threads);
+            for k in [6usize, 8, 12] {
+                let sg = ShardedGraph::build(g.view(), k, (threads * 31 + k) as u64);
+                let sharded = engine.forward_sharded(&sg, &x, &mut ws).unwrap();
+                assert_eq!(sharded, whole, "threads={threads} k={k}");
+            }
+        }
+    }
+
+    /// Exchange under every conv type at K=8 (dense route tables, owner
+    /// groups spanning many shards) for both numerics paths.
+    #[test]
+    fn dense_exchange_all_convs_both_numerics() {
+        let mut ws = Workspace::new(4);
+        let mut rng = Rng::seed_from(29);
+        for conv in ConvType::ALL {
+            let engine = tiny_engine(conv, 600);
+            let (g, x) = random_graph_and_x(&mut rng, 60, 6);
+            let sg = ShardedGraph::build(g.view(), 8, 4);
+            assert_eq!(
+                engine.forward_sharded(&sg, &x, &mut ws).unwrap(),
+                engine.forward(&g, &x).unwrap(),
+                "{conv:?} f32"
+            );
+            assert_eq!(
+                engine.forward_sharded_fixed(&sg, &x, &mut ws).unwrap(),
+                engine.forward_fixed(&g, &x).unwrap(),
+                "{conv:?} fixed"
+            );
+        }
     }
 
     #[test]

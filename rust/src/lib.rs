@@ -25,13 +25,17 @@
 //!
 //! The sharded large-graph path serves the node-level workload class
 //! (citation/social graphs): [`partition`] grows a seeded K-way
-//! [`partition::ShardPlan`], extracts [`partition::Subgraph`]s with
-//! 1-hop halo (ghost) nodes, and
-//! [`engine::Engine::forward_sharded`] runs each layer shard-parallel
-//! with a halo exchange between supersteps — bit-identical to the
-//! whole-graph forward for both numerics. The [`coordinator`] routes
-//! requests over a node-count threshold through it
-//! ([`coordinator::ShardPolicy`]).
+//! [`partition::ShardPlan`] (K adaptive via [`partition::adaptive_k`]
+//! unless pinned), extracts [`partition::Subgraph`]s with 1-hop halo
+//! (ghost) nodes, and [`engine::Engine::forward_sharded`] runs each
+//! layer shard-parallel with a parallel halo exchange between
+//! supersteps — bit-identical to the whole-graph forward for both
+//! numerics (swept by the cross-path conformance matrix in
+//! `tests/conformance.rs`). The [`coordinator`] routes requests over a
+//! node-count threshold through it ([`coordinator::ShardPolicy`]),
+//! serving shard plans from a topology-hash-keyed LRU
+//! [`coordinator::PlanCache`] so repeated inference over one deployed
+//! topology partitions exactly once.
 
 pub mod baselines;
 pub mod bench;

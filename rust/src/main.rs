@@ -10,9 +10,10 @@ use gnnbuilder::dse;
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
 use gnnbuilder::experiments::{self, Options};
 use gnnbuilder::hls::{self, GraphStats};
+use gnnbuilder::coordinator::PlanCache;
 use gnnbuilder::model::space::DesignSpace;
 use gnnbuilder::model::{benchmark_config, ConvType, ModelConfig};
-use gnnbuilder::partition::ShardedGraph;
+use gnnbuilder::partition;
 use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
 use gnnbuilder::util::cli::Args;
 
@@ -25,8 +26,9 @@ USAGE:
                      [--parallel] [--out DIR] [--run-testbench]
   gnnbuilder synth   --conv ... --dataset ... [--parallel]    (simulated Vitis HLS)
   gnnbuilder dse     [--budget N] [--max-bram N] [--conv ...] [--db-size N] [--seed N]
-  gnnbuilder shard   [--dataset cora|pubmed|reddit] [--nodes N] [--k N] [--conv ...]
-                     [--hidden N] [--layers N] [--seed N]     (partition + sharded inference)
+  gnnbuilder shard   [--dataset cora|pubmed|reddit] [--nodes N] [--k N (0 = adaptive)]
+                     [--conv ...] [--hidden N] [--layers N] [--seed N]
+                                                              (partition + sharded inference)
   gnnbuilder list                                             (artifacts in manifest)
 ";
 
@@ -235,7 +237,7 @@ fn cmd_shard() -> Result<()> {
     let stats = datasets::large_by_name(name)
         .ok_or_else(|| anyhow::anyhow!("unknown large-graph dataset `{name}`"))?;
     let nodes = args.get_usize("nodes", 10_000)?;
-    let k = args.get_usize("k", 4)?;
+    let k_arg = args.get_usize("k", 0)?;
     let seed = args.get_u64("seed", 2023)?;
     let conv = parse_conv(&args)?;
     let hidden = args.get_usize("hidden", 64)?;
@@ -253,14 +255,34 @@ fn cmd_shard() -> Result<()> {
         ng.num_classes
     );
 
+    let k = if k_arg == 0 {
+        let ak = partition::adaptive_k(
+            g.num_nodes,
+            g.num_edges,
+            gnnbuilder::util::pool::default_threads(),
+        );
+        println!("adaptive K = {ak} (node count / degree / core count derived)");
+        ak
+    } else {
+        k_arg
+    };
+
+    // plans come from the serving plan cache: the first request pays the
+    // partition, repeats pay a topology hash + map hit
+    let cache = PlanCache::with_capacity(8);
     let t0 = std::time::Instant::now();
-    let sg = ShardedGraph::build(g.view(), k, seed);
+    let sg = cache.get_or_build(g.view(), k, seed);
     let part_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let _warm = cache.get_or_build(g.view(), k, seed);
+    let warm_s = t0.elapsed().as_secs_f64();
     let (max_s, min_s) = sg.plan.shard_sizes();
     println!(
-        "partitioned into K={} in {:.1} ms: shard sizes [{min_s}..{max_s}], cut fraction {:.3}, halo fraction {:.3}",
+        "partitioned into K={} in {:.1} ms (cached re-request {:.3} ms): \
+         shard sizes [{min_s}..{max_s}], cut fraction {:.3}, halo fraction {:.3}",
         sg.k(),
         part_s * 1e3,
+        warm_s * 1e3,
         sg.cut_fraction(),
         sg.halo_fraction()
     );

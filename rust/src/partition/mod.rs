@@ -41,6 +41,57 @@ const UNASSIGNED: u32 = u32::MAX;
 /// Sentinel for "collected as halo, local id pending".
 const HALO_PENDING: u32 = u32::MAX - 1;
 
+/// SplitMix64 finalizer — the avalanche step shared by [`topology_hash`]
+/// and the coordinator's plan-cache key mixer.
+pub(crate) fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Content hash of a graph's topology: node/edge counts plus the neighbor
+/// table and its offsets. Those tables fully determine every neighbor
+/// list — and hence every aggregation fold — the engine performs, so two
+/// graphs hash equal exactly when their forwards are bit-identical for
+/// the same features (COO reorderings that preserve each destination's
+/// neighbor order hash equal; reorderings that change it do not). This is
+/// the graph-identity half of the coordinator's shard-plan cache key;
+/// 64 well-mixed bits make accidental collisions negligible at serving
+/// cache sizes.
+pub fn topology_hash(g: GraphView<'_>) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = (h ^ mix64(g.num_nodes as u64)).wrapping_mul(FNV_PRIME);
+    h = (h ^ mix64(g.num_edges as u64)).wrapping_mul(FNV_PRIME);
+    for &o in g.offsets {
+        h = (h ^ mix64(o as u64)).wrapping_mul(FNV_PRIME);
+    }
+    for &s in g.nbr {
+        h = (h ^ mix64(s as u64)).wrapping_mul(FNV_PRIME);
+    }
+    mix64(h)
+}
+
+/// Nodes per shard that [`adaptive_k`] targets on a degree-4 graph.
+pub const ADAPTIVE_SHARD_NODES: usize = 1024;
+
+/// Derive a shard count from graph size, density, and core count: aim for
+/// [`ADAPTIVE_SHARD_NODES`]-node shards, inflated proportionally to the
+/// average degree (halo and cut overhead grow with density, so denser
+/// graphs get fewer, larger shards), capped by the worker-pool width
+/// (more shards than cores only adds exchange traffic). Molecule-sized
+/// graphs resolve to 1 — the sharded machinery degenerates to the
+/// whole-graph forward.
+pub fn adaptive_k(num_nodes: usize, num_edges: usize, cores: usize) -> usize {
+    if num_nodes == 0 {
+        return 1;
+    }
+    let avg_deg = num_edges as f64 / num_nodes as f64;
+    let target = ADAPTIVE_SHARD_NODES as f64 * (1.0 + avg_deg / 4.0);
+    let k = (num_nodes as f64 / target).ceil() as usize;
+    k.clamp(1, cores.max(1))
+}
+
 /// A K-way node-ownership assignment with its cut statistics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardPlan {
@@ -420,6 +471,13 @@ impl ShardedGraph {
         ShardedGraph::from_plan(g, plan)
     }
 
+    /// Partition + extract with K derived by [`adaptive_k`] from the
+    /// graph's size and density and the worker-pool width.
+    pub fn build_auto(g: GraphView<'_>, seed: u64) -> ShardedGraph {
+        let k = adaptive_k(g.num_nodes, g.num_edges, crate::util::pool::default_threads());
+        ShardedGraph::build(g, k, seed)
+    }
+
     /// Extract shards + exchange routes for an existing plan.
     pub fn from_plan(g: GraphView<'_>, plan: ShardPlan) -> ShardedGraph {
         // shard-local index of every global node, for route building
@@ -662,6 +720,80 @@ mod tests {
                 assert!(routes.windows(2).all(|w| w[0].owner_shard <= w[1].owner_shard));
             }
         }
+    }
+
+    #[test]
+    fn adaptive_k_scales_with_size_and_shrinks_with_density() {
+        // degenerate shapes resolve to a single shard
+        assert_eq!(adaptive_k(0, 0, 8), 1);
+        assert_eq!(adaptive_k(1, 0, 8), 1);
+        assert_eq!(adaptive_k(500, 1500, 8), 1); // molecule-scale stays whole
+        assert_eq!(adaptive_k(10, 10, 0), 1); // zero cores clamps to 1
+        // more nodes (same degree) never means fewer shards
+        let small = adaptive_k(10_000, 40_000, 64);
+        let big = adaptive_k(50_000, 200_000, 64);
+        assert!(big >= small, "k({big}) < k({small})");
+        assert!(small > 1, "a 10k-node graph should shard");
+        // higher density (same nodes) never means more shards
+        let sparse = adaptive_k(20_000, 20_000 * 2, 64);
+        let dense = adaptive_k(20_000, 20_000 * 16, 64);
+        assert!(dense <= sparse, "denser graph got more shards");
+        // the core cap binds
+        for cores in [1usize, 2, 4] {
+            assert!(adaptive_k(1_000_000, 4_000_000, cores) <= cores);
+        }
+    }
+
+    #[test]
+    fn build_auto_matches_manual_build_at_the_derived_k() {
+        let mut rng = Rng::seed_from(61);
+        let g = random_graph(&mut rng, 50, 150);
+        let k = adaptive_k(
+            g.num_nodes,
+            g.num_edges,
+            crate::util::pool::default_threads(),
+        );
+        let auto = ShardedGraph::build_auto(g.view(), 5);
+        let manual = ShardedGraph::build(g.view(), k, 5);
+        assert_eq!(auto.plan, manual.plan);
+        assert_eq!(auto.k(), manual.k());
+    }
+
+    #[test]
+    fn topology_hash_is_deterministic_and_discriminates() {
+        let mut rng = Rng::seed_from(67);
+        for case in 0..40 {
+            let g = random_graph(&mut rng, 40, 100);
+            assert_eq!(
+                topology_hash(g.view()),
+                topology_hash(g.view()),
+                "case {case}: hash not deterministic"
+            );
+            // adding an edge changes the hash
+            let mut edges = g.edges.clone();
+            edges.push((0, (g.num_nodes - 1) as u32));
+            let g2 = Graph::from_coo(g.num_nodes, &edges);
+            assert_ne!(topology_hash(g.view()), topology_hash(g2.view()), "case {case}");
+            // an extra isolated node changes the hash
+            let g3 = Graph::from_coo(g.num_nodes + 1, &g.edges);
+            assert_ne!(topology_hash(g.view()), topology_hash(g3.view()), "case {case}");
+        }
+    }
+
+    #[test]
+    fn topology_hash_tracks_the_neighbor_table_not_the_coo_order() {
+        // cross-destination reorder: per-destination neighbor order (and
+        // hence the forward) is unchanged → same hash
+        let a = Graph::from_coo(4, &[(0, 1), (2, 3), (1, 1)]);
+        let b = Graph::from_coo(4, &[(2, 3), (0, 1), (1, 1)]);
+        assert_eq!(a.nbr, b.nbr);
+        assert_eq!(topology_hash(a.view()), topology_hash(b.view()));
+        // within-destination reorder: the aggregation fold order changes
+        // → different hash (those forwards are NOT bit-identical)
+        let c = Graph::from_coo(4, &[(0, 1), (2, 1)]);
+        let d = Graph::from_coo(4, &[(2, 1), (0, 1)]);
+        assert_ne!(c.nbr, d.nbr);
+        assert_ne!(topology_hash(c.view()), topology_hash(d.view()));
     }
 
     #[test]

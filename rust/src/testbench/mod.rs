@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use crate::engine::{Engine, Workspace};
 use crate::graph::{Graph, GraphBatch};
+use crate::partition::ShardedGraph;
 use crate::runtime::Executable;
 use crate::util::binio::TestVecs;
 use crate::util::stats::{mae, Summary};
@@ -161,6 +162,39 @@ pub fn run_engine_fixed_batched(engine: &Engine, vecs: &TestVecs) -> Result<TbRe
     compare_batched("engine-fixed-batched", vecs, engine, true)
 }
 
+/// Sharded testbench core: run every golden graph through the partitioned
+/// forward. Golden graphs are molecule-sized, so the adaptive K would
+/// resolve to 1; the shard count is pinned to 2 so the sharded control
+/// flow (partition, halo exchange, gather) is actually exercised.
+fn compare_sharded(
+    implementation: &str,
+    vecs: &TestVecs,
+    engine: &Engine,
+    fixed: bool,
+) -> Result<TbReport> {
+    let mut ws = Workspace::with_default_threads();
+    compare(implementation, vecs, |c| {
+        let sg = ShardedGraph::build(c.graph.view(), 2, 0x7b);
+        if fixed {
+            engine.forward_sharded_fixed(&sg, c.x, &mut ws)
+        } else {
+            engine.forward_sharded(&sg, c.x, &mut ws)
+        }
+    })
+}
+
+/// Sharded testbench over the native engine (float path) — the sharded
+/// forward is bit-exact, so this must agree with [`run_engine_float`]
+/// on every error statistic.
+pub fn run_engine_float_sharded(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    compare_sharded("engine-f32-sharded", vecs, engine, false)
+}
+
+/// Sharded testbench over the true fixed-point path.
+pub fn run_engine_fixed_sharded(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    compare_sharded("engine-fixed-sharded", vecs, engine, true)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +237,84 @@ mod tests {
         let single_q = run_engine_fixed(&engine, &vecs).unwrap();
         let batched_q = run_engine_fixed_batched(&engine, &vecs).unwrap();
         assert_eq!(batched_q.mae, single_q.mae);
+    }
+
+    #[test]
+    fn sharded_testbench_is_bit_exact_vs_single_graph() {
+        let Some((engine, vecs)) = setup() else { return };
+        let single = run_engine_float(&engine, &vecs).unwrap();
+        let sharded = run_engine_float_sharded(&engine, &vecs).unwrap();
+        assert_eq!(sharded.graphs, single.graphs);
+        // bit-exact forward ⇒ identical error statistics
+        assert_eq!(sharded.mae, single.mae);
+        assert_eq!(sharded.max_abs_err, single.max_abs_err);
+
+        let single_q = run_engine_fixed(&engine, &vecs).unwrap();
+        let sharded_q = run_engine_fixed_sharded(&engine, &vecs).unwrap();
+        assert_eq!(sharded_q.mae, single_q.mae);
+        assert_eq!(sharded_q.max_abs_err, single_q.max_abs_err);
+    }
+
+    /// Artifact-free parity: with golden expectations produced by the
+    /// engine itself, every runner (single, batched, sharded) must report
+    /// exactly zero float error, and the fixed-point runners must agree
+    /// with each other on the quantization error.
+    #[test]
+    fn all_runners_agree_on_synthetic_golden_vecs() {
+        use crate::datasets;
+        use crate::engine::synth_weights;
+        use crate::model::{ConvType, ModelConfig};
+        use crate::util::binio::GoldenGraph;
+
+        let cfg = ModelConfig {
+            name: "tb_synth".into(),
+            graph_input_dim: datasets::ESOL.node_dim,
+            gnn_conv: ConvType::Gin,
+            gnn_hidden_dim: 8,
+            gnn_out_dim: 6,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 6,
+            mlp_num_layers: 1,
+            output_dim: 2,
+            ..ModelConfig::default()
+        };
+        let in_dim = cfg.graph_input_dim;
+        let out_dim = cfg.output_dim;
+        let weights = synth_weights(&cfg, 17);
+        let engine = Engine::new(cfg, &weights, datasets::ESOL.mean_degree).unwrap();
+        let mols = datasets::gen_dataset(&datasets::ESOL, 8, 3, 600, 600);
+        let vecs = TestVecs {
+            in_dim,
+            out_dim,
+            graphs: mols
+                .iter()
+                .map(|m| GoldenGraph {
+                    num_nodes: m.graph.num_nodes,
+                    num_edges: m.graph.num_edges,
+                    x: m.x.clone(),
+                    edges: m
+                        .graph
+                        .edges
+                        .iter()
+                        .flat_map(|&(s, d)| [s as i32, d as i32])
+                        .collect(),
+                    expected: engine.forward(&m.graph, &m.x).unwrap(),
+                })
+                .collect(),
+        };
+        let single = run_engine_float(&engine, &vecs).unwrap();
+        let batched = run_engine_float_batched(&engine, &vecs).unwrap();
+        let sharded = run_engine_float_sharded(&engine, &vecs).unwrap();
+        assert_eq!(single.mae, 0.0);
+        assert_eq!(batched.mae, 0.0);
+        assert_eq!(sharded.mae, 0.0);
+        assert_eq!(sharded.max_abs_err, 0.0);
+        assert_eq!(sharded.graphs, vecs.graphs.len());
+
+        let single_q = run_engine_fixed(&engine, &vecs).unwrap();
+        let sharded_q = run_engine_fixed_sharded(&engine, &vecs).unwrap();
+        assert_eq!(sharded_q.mae, single_q.mae);
+        assert!(single_q.mae > 0.0, "quantization should cost something");
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Degenerate-graph edge cases through all three forward paths (single,
+//! batched, sharded): empty graph, single node, zero edges, disconnected
+//! components, self-loops, parallel edges, and K > node_count. Every case
+//! must produce a correct (finite, three-way bit-identical) result or a
+//! clean error — never a panic. A serving system meets these shapes in
+//! the wild (empty retrieval results, singleton subgraphs, oversized K
+//! from a mistuned policy) and the router may send them down any path.
+
+use gnnbuilder::engine::{synth_weights, Engine, Workspace};
+use gnnbuilder::graph::{Graph, GraphBatch};
+use gnnbuilder::model::{ConvType, ModelConfig};
+use gnnbuilder::partition::{adaptive_k, ShardedGraph};
+
+fn tiny_engine(conv: ConvType) -> Engine {
+    let cfg = ModelConfig {
+        name: format!("degen_{}", conv.as_str()),
+        graph_input_dim: 4,
+        gnn_conv: conv,
+        gnn_hidden_dim: 4,
+        gnn_out_dim: 4,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 4,
+        mlp_num_layers: 1,
+        output_dim: 2,
+        max_nodes: 64,
+        max_edges: 256,
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, 11);
+    Engine::new(cfg, &weights, 2.0).unwrap()
+}
+
+/// Run one graph through all three paths for one numerics mode, assert
+/// they agree bit-for-bit and the output is finite, return the output.
+fn all_paths(engine: &Engine, g: &Graph, x: &[f32], k: usize, fixed: bool) -> Vec<f32> {
+    let single = if fixed {
+        engine.forward_fixed(g, x)
+    } else {
+        engine.forward(g, x)
+    }
+    .unwrap();
+    assert!(
+        single.iter().all(|v| v.is_finite()),
+        "non-finite output: {single:?}"
+    );
+
+    let mut ws = Workspace::new(2);
+    let batch = GraphBatch::pack([(g, x)]);
+    let batched = if fixed {
+        engine.forward_batch_fixed(&batch, &mut ws)
+    } else {
+        engine.forward_batch(&batch, &mut ws)
+    }
+    .unwrap();
+    assert_eq!(batched[0], single, "batch path diverged");
+
+    let sg = ShardedGraph::build(g.view(), k, 1);
+    let sharded = if fixed {
+        engine.forward_sharded_fixed(&sg, x, &mut ws)
+    } else {
+        engine.forward_sharded(&sg, x, &mut ws)
+    }
+    .unwrap();
+    assert_eq!(sharded, single, "sharded path (K={k}) diverged");
+    single
+}
+
+fn every_conv_both_numerics(g: &Graph, x: &[f32], k: usize) {
+    for conv in ConvType::ALL {
+        let engine = tiny_engine(conv);
+        for fixed in [false, true] {
+            let out = all_paths(&engine, g, x, k, fixed);
+            assert_eq!(out.len(), 2, "{conv:?} fixed={fixed}");
+        }
+    }
+}
+
+#[test]
+fn empty_graph_zero_nodes() {
+    // zero nodes, zero edges, zero-length features: pooling over nothing
+    // (add → 0, mean → 0, max → 0 by convention) feeds the MLP head
+    let g = Graph::from_coo(0, &[]);
+    every_conv_both_numerics(&g, &[], 4);
+}
+
+#[test]
+fn empty_graph_output_is_the_head_of_zeros() {
+    // the empty-graph answer is deterministic: whatever the MLP head
+    // makes of an all-zero pooled vector — identical across paths and
+    // across calls
+    let engine = tiny_engine(ConvType::Gcn);
+    let g = Graph::from_coo(0, &[]);
+    let a = all_paths(&engine, &g, &[], 1, false);
+    let b = all_paths(&engine, &g, &[], 7, false);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn single_node_no_edges() {
+    let g = Graph::from_coo(1, &[]);
+    let x = [0.5f32, -0.25, 0.125, 1.0];
+    every_conv_both_numerics(&g, &x, 3);
+}
+
+#[test]
+fn single_node_with_self_loop() {
+    // a self-loop's source is always locally owned, so the shard has no
+    // halo — the exchange table must be empty and still correct
+    let g = Graph::from_coo(1, &[(0, 0)]);
+    let x = [1.0f32, 2.0, -1.0, 0.0];
+    let sg = ShardedGraph::build(g.view(), 2, 0);
+    assert_eq!(sg.halo_nodes(), 0);
+    every_conv_both_numerics(&g, &x, 2);
+}
+
+#[test]
+fn zero_edges_many_nodes() {
+    // isolated nodes only: no cut, no halo, pure per-node transforms
+    let g = Graph::from_coo(10, &[]);
+    let x: Vec<f32> = (0..40).map(|v| v as f32 * 0.1 - 2.0).collect();
+    let sg = ShardedGraph::build(g.view(), 3, 0);
+    assert_eq!(sg.plan.cut_edges, 0);
+    assert_eq!(sg.halo_nodes(), 0);
+    every_conv_both_numerics(&g, &x, 3);
+}
+
+#[test]
+fn disconnected_components() {
+    // two triangles and two isolated nodes; partitions may split a
+    // component or glue components together — both must stay exact
+    let edges = [
+        (0u32, 1u32),
+        (1, 2),
+        (2, 0),
+        (3, 4),
+        (4, 5),
+        (5, 3),
+    ];
+    let g = Graph::from_coo(8, &edges);
+    let x: Vec<f32> = (0..32).map(|v| (v as f32 * 0.37).sin()).collect();
+    for k in [2usize, 5] {
+        every_conv_both_numerics(&g, &x, k);
+    }
+}
+
+#[test]
+fn self_loops_on_every_node_plus_ring() {
+    let mut edges: Vec<(u32, u32)> = (0..6u32).map(|v| (v, v)).collect();
+    edges.extend((0..6u32).map(|v| (v, (v + 1) % 6)));
+    let g = Graph::from_coo(6, &edges);
+    let x: Vec<f32> = (0..24).map(|v| v as f32 * 0.2 - 1.0).collect();
+    every_conv_both_numerics(&g, &x, 3);
+}
+
+#[test]
+fn parallel_duplicate_edges_preserve_fold_order() {
+    // repeated identical edges: the aggregation folds the same neighbor
+    // twice, in input order — sharding must not reorder or dedup them
+    let g = Graph::from_coo(3, &[(0, 1), (0, 1), (2, 1), (0, 1)]);
+    let x = [0.3f32, -0.6, 0.9, 0.1, 0.2, -0.2, 1.5, -1.5, 0.4, 0.5, 0.6, 0.7];
+    every_conv_both_numerics(&g, &x, 2);
+}
+
+#[test]
+fn k_exceeding_node_count_clamps_cleanly() {
+    let g = Graph::from_coo(3, &[(0, 1), (1, 2)]);
+    let x = [0.1f32; 12];
+    let sg = ShardedGraph::build(g.view(), 10, 0);
+    assert_eq!(sg.k(), 3, "K must clamp to node count");
+    let sg0 = ShardedGraph::build(g.view(), 0, 0);
+    assert_eq!(sg0.k(), 1, "K=0 must clamp to one shard");
+    every_conv_both_numerics(&g, &x, 10);
+}
+
+#[test]
+fn degenerate_graphs_inside_one_packed_batch() {
+    // a dispatch mixing empty, singleton, and normal graphs: per-slot
+    // results must match per-graph forwards slot for slot
+    let engine = tiny_engine(ConvType::Sage);
+    let empty = Graph::from_coo(0, &[]);
+    let lone = Graph::from_coo(1, &[(0, 0)]);
+    let ring = Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+    let x_lone = [0.5f32, 0.5, -0.5, -0.5];
+    let x_ring: Vec<f32> = (0..16).map(|v| v as f32 * 0.125).collect();
+    let batch = GraphBatch::pack([
+        (&empty, &[] as &[f32]),
+        (&lone, x_lone.as_slice()),
+        (&ring, x_ring.as_slice()),
+    ]);
+    let mut ws = Workspace::new(2);
+    let results = engine.forward_batch(&batch, &mut ws).unwrap();
+    assert_eq!(results[0], engine.forward(&empty, &[]).unwrap());
+    assert_eq!(results[1], engine.forward(&lone, &x_lone).unwrap());
+    assert_eq!(results[2], engine.forward(&ring, &x_ring).unwrap());
+}
+
+#[test]
+fn adaptive_k_and_build_auto_handle_degenerate_shapes() {
+    assert_eq!(adaptive_k(0, 0, 8), 1);
+    assert_eq!(adaptive_k(1, 1, 8), 1);
+    // build_auto on an empty graph is a single empty shard, and the
+    // forward over it still works end to end
+    let g = Graph::from_coo(0, &[]);
+    let sg = ShardedGraph::build_auto(g.view(), 9);
+    assert_eq!(sg.k(), 1);
+    let engine = tiny_engine(ConvType::Pna);
+    let mut ws = Workspace::single();
+    let out = engine.forward_sharded(&sg, &[], &mut ws).unwrap();
+    assert_eq!(out, engine.forward(&g, &[]).unwrap());
+}
+
+#[test]
+fn sharded_errors_are_clean_not_panics() {
+    // wrong feature length and over-limit graphs error out of the
+    // sharded path exactly like the whole-graph path
+    let engine = tiny_engine(ConvType::Gcn);
+    let mut ws = Workspace::single();
+    let g = Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3)]);
+    let sg = ShardedGraph::build(g.view(), 2, 0);
+    assert!(engine.forward_sharded(&sg, &[0.0; 3], &mut ws).is_err());
+    let big = Graph::from_coo(65, &[]); // max_nodes is 64
+    let sgb = ShardedGraph::build(big.view(), 4, 0);
+    let xb = vec![0.0; 65 * 4];
+    assert!(engine.forward_sharded(&sgb, &xb, &mut ws).is_err());
+}

@@ -15,6 +15,7 @@ use gnnbuilder::coordinator::{BackendSpec, BatchPolicy, Coordinator};
 use gnnbuilder::datasets;
 use gnnbuilder::engine::Engine;
 use gnnbuilder::runtime::Manifest;
+use gnnbuilder::session::{ExecutionPlan, Precision, Session};
 use gnnbuilder::util::binio::read_weights;
 use gnnbuilder::util::rng::Rng;
 
@@ -34,8 +35,15 @@ fn main() -> Result<()> {
     let weights = read_weights(&engine_meta.weights_path)?;
     let engine = Engine::new(engine_meta.config.clone(), &weights, engine_meta.mean_degree)?;
 
+    // the engine replica is declared session-style: precision + plan,
+    // the framework owns the execution path
+    let (engine_spec, _) = BackendSpec::session(
+        Session::builder(engine)
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Batched { workspace: 0 }),
+    );
     let coordinator = Coordinator::start(
-        vec![BackendSpec::pjrt(pjrt_meta.clone()), BackendSpec::engine(engine)],
+        vec![BackendSpec::pjrt(pjrt_meta.clone()), engine_spec],
         BatchPolicy {
             max_batch: 16,
             max_wait: Duration::from_millis(1),

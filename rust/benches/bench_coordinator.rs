@@ -11,6 +11,7 @@ use gnnbuilder::datasets;
 use gnnbuilder::engine::{synth_weights, Engine};
 use gnnbuilder::graph::{Graph, GraphView};
 use gnnbuilder::model::{benchmark_config, ConvType};
+use gnnbuilder::session::{ExecutionPlan, Precision, Session};
 
 struct Null;
 impl Backend for Null {
@@ -27,22 +28,6 @@ fn spec() -> BackendSpec {
         model: "null".into(),
         factory: Box::new(|_: &Metrics| Ok(Box::new(Null) as Box<dyn Backend>)),
     }
-}
-
-/// The same engine exposed through the trait's *default* `infer_batch`
-/// (a serial per-graph loop). Both arms pay the same dispatch + packing
-/// cost inside the coordinator, so the comparison isolates what the
-/// batch-native engine execution (parallel workers over warm workspaces)
-/// buys over per-request serial execution.
-struct LoopedEngine(Engine);
-impl Backend for LoopedEngine {
-    fn name(&self) -> &str {
-        &self.0.cfg.name
-    }
-    fn infer(&self, g: GraphView<'_>, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-        self.0.forward_view(g, x)
-    }
-    // no infer_batch override: default loops infer() per view
 }
 
 fn main() {
@@ -95,16 +80,23 @@ fn main() {
             graphs.len() as f64 / r.summary.mean
         };
 
-        let c = Coordinator::start(vec![BackendSpec::engine(engine.clone())], policy);
+        let (batched_spec, _) = BackendSpec::session(
+            Session::builder(engine.clone())
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 }),
+        );
+        let c = Coordinator::start(vec![batched_spec], policy);
         let batched_rps = run_throughput(&c, &format!("coordinator/batched_engine/mb{max_batch}"));
         c.shutdown();
 
+        // the same engine through the trait's *default* `infer_batch` (a
+        // serial per-graph loop via the `Backend for Engine` impl): both
+        // arms pay the same dispatch + packing cost, so the comparison
+        // isolates what batch-native execution buys
         let looped = engine.clone();
         let spec = BackendSpec {
             model: model.clone(),
-            factory: Box::new(move |_: &Metrics| {
-                Ok(Box::new(LoopedEngine(looped)) as Box<dyn Backend>)
-            }),
+            factory: Box::new(move |_: &Metrics| Ok(Box::new(looped) as Box<dyn Backend>)),
         };
         let c = Coordinator::start(vec![spec], policy);
         let looped_rps = run_throughput(&c, &format!("coordinator/looped_engine/mb{max_batch}"));

@@ -1,14 +1,17 @@
-//! Inference-path benchmarks: the native engine (CPP-CPU baseline) per
-//! conv type and the PJRT artifact execution (PyG-CPU analog) — the
-//! measured halves of Table IV / Fig. 6 — plus the batched-vs-looped
-//! throughput comparison for the packed-batch path. Results are emitted
-//! to `BENCH_inference.json`.
+//! Inference-path benchmarks through the unified `Session` API: the
+//! native engine (CPP-CPU baseline) per conv type and the PJRT artifact
+//! execution (PyG-CPU analog) — the measured halves of Table IV /
+//! Fig. 6 — plus the `run_batch`-vs-looped-`run` throughput comparison
+//! on one deployed topology (the node-level serving pattern: one graph,
+//! many feature sets). Results are emitted to `BENCH_inference.json`.
+use std::sync::Arc;
+
 use gnnbuilder::bench::{Bench, BenchResult};
 use gnnbuilder::datasets;
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
-use gnnbuilder::graph::GraphBatch;
 use gnnbuilder::model::{benchmark_config, ConvType};
 use gnnbuilder::runtime::{Manifest, Runtime};
+use gnnbuilder::session::{ExecutionPlan, Precision, Session};
 use gnnbuilder::util::binio::read_weights;
 use gnnbuilder::util::json::Json;
 
@@ -21,45 +24,47 @@ fn result_json(r: &BenchResult) -> Json {
     ])
 }
 
-/// Batched-vs-looped engine throughput at batch sizes 1/8/64. Runs on
-/// synthetic weights so it needs no artifacts; per-iteration work is one
-/// batch worth of graphs in both arms.
+/// `run_batch` vs looped `run` at feature-batch sizes 1/8/64 over one
+/// deployed HIV-profile molecule topology. Runs on synthetic weights so
+/// it needs no artifacts; per-iteration work is one batch worth of
+/// feature sets in both arms, through the same warm session.
 fn batched_vs_looped(b: &Bench, results: &mut Vec<Json>) {
     let cfg = benchmark_config(ConvType::Gcn, &datasets::HIV, false);
     let weights = synth_weights(&cfg, 7);
     let engine = Engine::new(cfg, &weights, datasets::HIV.mean_degree).unwrap();
-    let graphs = datasets::gen_dataset(&datasets::HIV, 64, 11, 600, 600);
+    let mols = datasets::gen_dataset(&datasets::HIV, 1, 11, 600, 600);
+    let mol = &mols[0];
 
     for bs in [1usize, 8, 64] {
-        let chunks: Vec<&[datasets::MolGraph]> = graphs.chunks(bs).collect();
-        let batches: Vec<GraphBatch> = chunks
-            .iter()
-            .map(|c| GraphBatch::pack(c.iter().map(|g| (&g.graph, g.x.as_slice()))))
+        // fresh feature sets over the deployed topology
+        let xs: Vec<Vec<f32>> = (0..bs)
+            .map(|i| mol.x.iter().map(|v| v + i as f32 * 0.03125).collect())
             .collect();
+        let session = Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Batched { workspace: 0 })
+            .graph(mol.graph.clone())
+            .build()
+            .unwrap();
 
-        let mut i = 0;
         let looped = b.run(&format!("engine_loop/gcn/hiv/bs{bs}"), || {
-            i = (i + 1) % chunks.len();
             let mut acc = 0.0f32;
-            for g in chunks[i] {
-                acc += engine.forward(&g.graph, &g.x).unwrap()[0];
+            for x in &xs {
+                acc += session.run(x).unwrap()[0];
             }
             acc
         });
 
-        let mut ws = Workspace::with_default_threads();
-        let mut j = 0;
         let batched = b.run(&format!("engine_batch/gcn/hiv/bs{bs}"), || {
-            j = (j + 1) % batches.len();
-            engine.forward_batch(&batches[j], &mut ws).unwrap()
+            session.run_batch(&xs).unwrap()
         });
 
-        // normalize to per-graph seconds: one iteration processes bs graphs
+        // normalize to per-set seconds: one iteration processes bs sets
         let loop_per_graph = looped.summary.mean / bs as f64;
         let batch_per_graph = batched.summary.mean / bs as f64;
         let speedup = loop_per_graph / batch_per_graph.max(1e-12);
         println!(
-            "  bs={bs}: looped {:.1} graphs/s, batched {:.1} graphs/s, speedup {speedup:.2}x",
+            "  bs={bs}: looped {:.1} runs/s, run_batch {:.1} runs/s, speedup {speedup:.2}x",
             1.0 / loop_per_graph,
             1.0 / batch_per_graph
         );
@@ -80,14 +85,31 @@ fn main() {
 
     if let Ok(manifest) = Manifest::load(gnnbuilder::artifacts_dir()) {
         let graphs = datasets::gen_dataset(&datasets::HIV, 32, 11, 600, 600);
+        let ws = Arc::new(Workspace::with_default_threads());
+        // one deployed session per molecule, sharing warm scratch buffers
+        let sessions_for = |engine: &Engine, precision: Precision| -> Vec<Session> {
+            graphs
+                .iter()
+                .map(|g| {
+                    Session::builder(engine.clone())
+                        .precision(precision)
+                        .plan(ExecutionPlan::Single)
+                        .workspace(ws.clone())
+                        .graph(g.graph.clone())
+                        .build()
+                        .unwrap()
+                })
+                .collect()
+        };
         for conv in ["gcn", "gin", "sage", "pna"] {
             let meta = manifest.find(&format!("bench_{conv}_hiv_base")).unwrap();
             let weights = read_weights(&meta.weights_path).unwrap();
             let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+            let sessions = sessions_for(&engine, Precision::F32);
             let mut i = 0;
             let r = b.run(&format!("engine_f32/{conv}/hiv"), || {
-                i = (i + 1) % graphs.len();
-                engine.forward(&graphs[i].graph, &graphs[i].x).unwrap()
+                i = (i + 1) % sessions.len();
+                sessions[i].run(&graphs[i].x).unwrap()
             });
             engine_results.push(result_json(&r));
         }
@@ -95,10 +117,11 @@ fn main() {
         let meta = manifest.find("bench_gcn_hiv_base").unwrap();
         let weights = read_weights(&meta.weights_path).unwrap();
         let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+        let sessions = sessions_for(&engine, Precision::ApFixed);
         let mut i = 0;
         let r = b.run("engine_fixed/gcn/hiv", || {
-            i = (i + 1) % graphs.len();
-            engine.forward_fixed(&graphs[i].graph, &graphs[i].x).unwrap()
+            i = (i + 1) % sessions.len();
+            sessions[i].run(&graphs[i].x).unwrap()
         });
         engine_results.push(result_json(&r));
         // PJRT artifact execution (requires the `pjrt` feature)

@@ -1,13 +1,15 @@
-//! Sharded vs whole-graph forward on large citation-style graphs — the
-//! intra-graph-parallelism half of the scaling story (the batch path in
-//! `bench_inference` covers inter-graph parallelism). Partitions a
-//! PUBMED-profile graph (≥10⁴ nodes) at K ∈ {1, 4, 16} plus the adaptive
-//! K, times the sharded forward against the whole-graph baseline,
-//! verifies bit-identity, measures the shard-plan cache cold (partition +
-//! extraction) vs warm (hash + map hit) latency, and emits
-//! `BENCH_shard.json` with latency plus the partition quality metrics
-//! (cut-edge fraction, halo-node fraction).
+//! Sharded vs whole-graph forward on large citation-style graphs through
+//! the unified `Session` API — the intra-graph-parallelism half of the
+//! scaling story (the batch path in `bench_inference` covers feature-set
+//! parallelism). Deploys a PUBMED-profile graph (≥10⁴ nodes) behind
+//! sessions at K ∈ {1, 4, 16} plus the adaptive K, times the sharded
+//! forward against the whole-graph baseline, verifies bit-identity,
+//! measures the shard-plan cache cold (partition + extraction) vs warm
+//! (memoized-hash map hit) latency, and emits `BENCH_shard.json` with
+//! latency plus the partition quality metrics (cut-edge fraction,
+//! halo-node fraction).
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use gnnbuilder::bench::Bench;
@@ -16,6 +18,7 @@ use gnnbuilder::datasets::{self, LargeGraphStats};
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
 use gnnbuilder::model::{ConvType, ModelConfig};
 use gnnbuilder::partition::{adaptive_k, ShardedGraph};
+use gnnbuilder::session::{ExecutionPlan, Precision, Session, ShardK, ShardPolicy};
 use gnnbuilder::util::json::Json;
 use gnnbuilder::util::pool;
 
@@ -43,23 +46,45 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
     let ng = datasets::gen_citation_graph(stats, nodes, 2023);
     let g = &ng.graph;
     let engine = engine_for(stats, g.num_nodes, g.num_edges);
+    let ws = Arc::new(Workspace::with_default_threads());
+    let policy = ShardPolicy {
+        seed: 2023,
+        ..ShardPolicy::default()
+    };
 
+    let whole_session = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Single)
+        .workspace(ws.clone())
+        .graph(ng.graph.clone())
+        .build()
+        .unwrap();
     let whole = b.run(&format!("engine_whole/{}/n{nodes}", stats.name), || {
-        engine.forward(g, &ng.x).unwrap()
+        whole_session.run(&ng.x).unwrap()
     });
-    let baseline = engine.forward(g, &ng.x).unwrap();
+    let baseline = whole_session.run(&ng.x).unwrap();
 
     let mut sharded_results: Vec<Json> = Vec::new();
     let mut per_k: Vec<(usize, f64)> = Vec::new();
     for k in [1usize, 4, 16] {
         let t0 = std::time::Instant::now();
-        let sg = ShardedGraph::build(g.view(), k, 2023);
+        let sg = Arc::new(ShardedGraph::build(g.view(), k, 2023));
         let partition_s = t0.elapsed().as_secs_f64();
-        let mut ws = Workspace::with_default_threads();
-        let out = engine.forward_sharded(&sg, &ng.x, &mut ws).unwrap();
+        let session = Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Sharded {
+                k: ShardK::Fixed(k),
+                plan: Some(sg.clone()),
+            })
+            .shard_policy(policy)
+            .workspace(ws.clone())
+            .graph(ng.graph.clone())
+            .build()
+            .unwrap();
+        let out = session.run(&ng.x).unwrap();
         assert_eq!(out, baseline, "sharded K={k} diverged from whole-graph");
         let r = b.run(&format!("engine_sharded/{}/n{nodes}/k{k}", stats.name), || {
-            engine.forward_sharded(&sg, &ng.x, &mut ws).unwrap()
+            session.run(&ng.x).unwrap()
         });
         let speedup = whole.summary.mean / r.summary.mean.max(1e-12);
         println!(
@@ -91,7 +116,7 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
 
     // ---- adaptive K + plan-cache cold vs warm --------------------------
     let auto_k = adaptive_k(g.num_nodes, g.num_edges, pool::default_threads());
-    let cache = PlanCache::with_capacity(8);
+    let cache = Arc::new(PlanCache::with_capacity(8));
     let t0 = std::time::Instant::now();
     let sg_auto = cache.get_or_build(g.view(), auto_k, 2023);
     let cache_cold_s = t0.elapsed().as_secs_f64();
@@ -104,12 +129,40 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
         (1, 1, 1, 0),
         "expected one build then one hit"
     );
-    let mut ws = Workspace::with_default_threads();
-    let auto_out = engine.forward_sharded(&sg_auto, &ng.x, &mut ws).unwrap();
+    let hashes_before = cache.stats().hash_computes.load(Ordering::Relaxed);
+    assert_eq!(hashes_before, 2, "each get_or_build pays one cache-side hash");
+
+    // a deployed session with ShardK::Auto resolves the same K and hits
+    // the same cache entry — through the memoized hash, so the cache
+    // itself never re-hashes (the O(1) warm path)
+    let auto_session = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Sharded {
+            k: ShardK::Auto,
+            plan: None,
+        })
+        .shard_policy(policy)
+        .plan_cache(cache.clone())
+        .workspace(ws)
+        .graph(ng.graph.clone())
+        .build()
+        .unwrap();
+    let auto_out = auto_session.run(&ng.x).unwrap();
     assert_eq!(auto_out, baseline, "adaptive K={auto_k} diverged from whole-graph");
+    assert!(
+        Arc::ptr_eq(&auto_session.shard_plan().unwrap(), &sg_auto),
+        "session resolved a different plan than the cache"
+    );
+    assert_eq!(
+        cache.stats().hash_computes.load(Ordering::Relaxed),
+        hashes_before,
+        "deployed session re-hashed on the cache side"
+    );
+    assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1, "re-partitioned");
+    assert_eq!(auto_session.deployed().hash_computes(), 1, "hash not memoized");
     let auto_run = b.run(
         &format!("engine_sharded/{}/n{nodes}/k_auto{auto_k}", stats.name),
-        || engine.forward_sharded(&sg_auto, &ng.x, &mut ws).unwrap(),
+        || auto_session.run(&ng.x).unwrap(),
     );
     println!(
         "  adaptive K={auto_k}: plan cold {:.1} ms, warm {:.3} ms ({:.0}x), \
@@ -163,6 +216,14 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
                 (
                     "warm_speedup",
                     Json::num(cache_cold_s / cache_warm_s.max(1e-9)),
+                ),
+                (
+                    "plan_bytes_estimate",
+                    Json::num(PlanCache::estimate_plan_bytes(
+                        g.num_nodes,
+                        g.num_edges,
+                        auto_k,
+                    ) as f64),
                 ),
             ]),
         ),

@@ -72,7 +72,7 @@ pub fn cpp_cpu(engine: &Engine, graphs: &[MolGraph], repeats: usize) -> Result<B
 
 /// CPP-CPU through the batch path: graphs are packed into
 /// `batch_size`-graph arenas once, then each batch runs through
-/// [`Engine::forward_batch`] on a warm workspace. Reported latency is
+/// `Engine`’s packed-batch runner on a warm workspace. Reported latency is
 /// per-graph (batch wall time / batch size), directly comparable to
 /// [`cpp_cpu`] — the gap is what dispatch amortization + intra-batch
 /// parallelism buy.
@@ -87,12 +87,12 @@ pub fn cpp_cpu_batched(
         .chunks(batch_size)
         .map(|c| GraphBatch::pack(c.iter().map(|g| (&g.graph, g.x.as_slice()))))
         .collect();
-    let mut ws = Workspace::with_default_threads();
+    let ws = Workspace::with_default_threads();
     let mut times = Vec::with_capacity(graphs.len() * repeats);
     for _ in 0..repeats {
         for b in &batches {
             let t0 = std::time::Instant::now();
-            let out = engine.forward_batch(b, &mut ws)?;
+            let out = engine.forward_batch(b, &ws)?;
             std::hint::black_box(&out);
             let per_graph = t0.elapsed().as_secs_f64() / b.len() as f64;
             times.extend(std::iter::repeat(per_graph).take(b.len()));

@@ -7,9 +7,12 @@
 //! requests per model, a worker packs each dispatch into one
 //! [`GraphBatch`] arena, and backends consume the whole batch through
 //! [`Backend::infer_batch`] (the native engine parallelizes over the
-//! packed graphs with a reusable zero-alloc [`Workspace`]). Backends that
-//! cannot go batch-native (PJRT executes one padded graph per call) fall
-//! back to per-view inference via the trait's default method.
+//! packed graphs with a reusable zero-alloc [`crate::engine::Workspace`]).
+//! Backends that cannot go batch-native (PJRT executes one padded graph
+//! per call) fall back to per-view inference via the trait's default
+//! method. Engine backends are configured through the unified session
+//! API ([`BackendSpec::session`] takes a [`SessionBuilder`]) and execute
+//! through the session layer's per-request `Dispatcher`.
 //!
 //! Architecture (std threads + channels; tokio is not in the offline set):
 //!
@@ -25,6 +28,10 @@
 pub mod plan_cache;
 
 pub use plan_cache::{PlanCache, PlanCacheStats};
+// shard routing types live in the session module now (they parameterize
+// both deployed sessions and serving backends); re-exported here so
+// existing `coordinator::ShardPolicy` call sites keep working
+pub use crate::session::{ShardK, ShardPolicy};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -34,9 +41,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{Engine, Workspace};
+use crate::engine::Engine;
 use crate::graph::{Graph, GraphBatch, GraphView};
-use crate::partition::{adaptive_k, ShardedGraph};
+use crate::partition::ShardedGraph;
+use crate::session::{Dispatcher, ExecutionPlan, Precision, Session, SessionBuilder};
 use crate::util::stats::Summary;
 
 /// One inference request: a graph routed to a named model variant.
@@ -91,39 +99,55 @@ pub struct BackendSpec {
 }
 
 impl BackendSpec {
-    /// Native-engine replica (Engine is Send; moved into the worker and
-    /// wrapped with a persistent batch workspace).
-    pub fn engine(engine: Engine) -> BackendSpec {
-        BackendSpec {
-            model: engine.cfg.name.clone(),
-            factory: Box::new(move |_: &Metrics| {
-                Ok(Box::new(EngineBackend::new(engine)) as Box<dyn Backend>)
-            }),
-        }
-    }
-
-    /// Native-engine replica with large-graph shard routing: requests at
-    /// or above `policy.min_nodes` nodes dispatch through the partitioned
-    /// forward, with shard plans served from the coordinator's shared
-    /// plan cache (`Metrics::plan_cache` — one topology partitions once
-    /// across all sharded backends). Returns the spec plus the live
-    /// [`ShardStats`] handle (shard counts, cut-edge and halo fractions
-    /// per dispatch).
-    pub fn engine_sharded(engine: Engine, policy: ShardPolicy) -> (BackendSpec, Arc<ShardStats>) {
+    /// Native-engine replica configured through the unified session API:
+    /// the builder's precision / plan / policy drive a per-request
+    /// `Dispatcher` (the floating twin of [`Session`]) on the worker
+    /// thread. The builder needs no deployed graph — requests carry
+    /// their own. Shard plans are served from the coordinator's shared
+    /// cache (`Metrics::plan_cache` — one topology partitions once
+    /// across all sharded backends) unless the builder pinned a cache.
+    /// A builder carrying a pinned `Sharded { plan: Some(_) }` fails at
+    /// backend construction — pre-built plans belong to deployed
+    /// [`Session`]s, not per-request backends.
+    /// Returns the spec plus the live [`ShardStats`] handle (shard
+    /// counts, cut-edge and halo fractions per sharded dispatch).
+    pub fn session(builder: SessionBuilder) -> (BackendSpec, Arc<ShardStats>) {
         let stats = Arc::new(ShardStats::default());
         let handle = stats.clone();
         let spec = BackendSpec {
-            model: engine.cfg.name.clone(),
+            model: builder.engine.cfg.name.clone(),
             factory: Box::new(move |m: &Metrics| {
-                Ok(Box::new(EngineBackend::with_sharding(
-                    engine,
-                    policy,
-                    stats,
-                    m.plan_cache.clone(),
-                )) as Box<dyn Backend>)
+                let d = builder.into_dispatcher(Some(stats), m.plan_cache.clone())?;
+                Ok(Box::new(EngineBackend { d }) as Box<dyn Backend>)
             }),
         };
         (spec, handle)
+    }
+
+    /// Native-engine replica on the batched f32 path.
+    #[deprecated(note = "use BackendSpec::session(Session::builder(engine)...)")]
+    pub fn engine(engine: Engine) -> BackendSpec {
+        BackendSpec::session(
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 }),
+        )
+        .0
+    }
+
+    /// Native-engine replica with large-graph shard routing.
+    #[deprecated(note = "use BackendSpec::session(Session::builder(engine)\
+        .plan(ExecutionPlan::Sharded{..}).shard_policy(policy))")]
+    pub fn engine_sharded(engine: Engine, policy: ShardPolicy) -> (BackendSpec, Arc<ShardStats>) {
+        BackendSpec::session(
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Sharded {
+                    k: policy.k,
+                    plan: None,
+                })
+                .shard_policy(policy),
+        )
     }
 
     /// PJRT replica: each worker constructs its own client + executable
@@ -140,55 +164,9 @@ impl BackendSpec {
     }
 }
 
-/// Shard-count selection for [`ShardPolicy`]: adaptive by default,
-/// pinnable for deployments that tuned a specific K.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ShardK {
-    /// derive K per graph from node count, average degree, and the
-    /// worker-pool core count ([`adaptive_k`])
-    Auto,
-    /// always partition into exactly this many shards
-    Fixed(usize),
-}
-
-/// When and how the engine backend shards a single large graph
-/// (requests at or above `min_nodes` dispatch through the partitioned
-/// path in [`crate::partition`] instead of the whole-graph forward).
-#[derive(Debug, Clone, Copy)]
-pub struct ShardPolicy {
-    /// node count at which a request takes the sharded path
-    pub min_nodes: usize,
-    /// shard count for the partitioner (adaptive unless pinned)
-    pub k: ShardK,
-    /// partitioner seed (deterministic plans per deployment)
-    pub seed: u64,
-}
-
-impl Default for ShardPolicy {
-    fn default() -> Self {
-        ShardPolicy {
-            min_nodes: 4096,
-            k: ShardK::Auto,
-            seed: 0x5eed,
-        }
-    }
-}
-
-impl ShardPolicy {
-    /// Resolve the shard count for one graph under this policy.
-    pub fn resolve_k(&self, g: &GraphView<'_>) -> usize {
-        match self.k {
-            ShardK::Fixed(k) => k,
-            ShardK::Auto => {
-                adaptive_k(g.num_nodes, g.num_edges, crate::util::pool::default_threads())
-            }
-        }
-    }
-}
-
 /// Counters for the sharded dispatch path, exposed per backend (the
 /// backend lives on its worker thread; callers keep the `Arc` handle
-/// returned by [`BackendSpec::engine_sharded`]).
+/// returned by [`BackendSpec::session`]).
 #[derive(Debug, Default)]
 pub struct ShardStats {
     /// requests routed through the sharded path
@@ -199,7 +177,7 @@ pub struct ShardStats {
 }
 
 impl ShardStats {
-    fn record(&self, sg: &ShardedGraph) {
+    pub(crate) fn record(&self, sg: &ShardedGraph) {
         self.dispatches.fetch_add(1, Ordering::Relaxed);
         self.shard_counts.lock().unwrap().push(sg.k() as f64);
         self.cut_fractions.lock().unwrap().push(sg.cut_fraction());
@@ -222,130 +200,28 @@ impl ShardStats {
     }
 }
 
-/// The native engine as a batch-native backend: one long-lived
-/// [`Workspace`] per worker, so the batched hot loop re-uses warm scratch
-/// buffers across dispatches (zero heap allocation after warmup).
-/// With a [`ShardPolicy`], large graphs are partitioned and served
-/// through the sharded forward (bit-identical outputs, intra-graph
-/// parallelism) while molecule-sized requests keep the batch path.
+/// The native engine as a batch-native backend: a thin wrapper over the
+/// session layer's per-request `Dispatcher`, which owns the long-lived
+/// warm [`crate::engine::Workspace`] and resolves the execution path
+/// (whole-graph batch runner vs partitioned forward) per request from
+/// the configured [`ExecutionPlan`] + [`ShardPolicy`]. Outputs are
+/// bit-identical across paths for the configured precision, so routing
+/// can never change an answer.
 pub struct EngineBackend {
-    engine: Engine,
-    ws: Mutex<Workspace>,
-    shard: Option<ShardState>,
-}
-
-/// Sharded-dispatch state of an [`EngineBackend`]: the routing policy,
-/// the per-dispatch stats handle, and the (shared) plan cache that makes
-/// repeated inference over one topology partition exactly once.
-struct ShardState {
-    policy: ShardPolicy,
-    stats: Arc<ShardStats>,
-    plans: Arc<PlanCache>,
-}
-
-impl EngineBackend {
-    pub fn new(engine: Engine) -> EngineBackend {
-        EngineBackend {
-            engine,
-            ws: Mutex::new(Workspace::with_default_threads()),
-            shard: None,
-        }
-    }
-
-    /// Engine backend that routes graphs at or above the policy's node
-    /// threshold through the sharded path, recording dispatches into
-    /// `stats` and serving shard plans from `plans` (pass the
-    /// coordinator's `Metrics::plan_cache` to share plans across
-    /// backends, or a private cache for standalone use).
-    pub fn with_sharding(
-        engine: Engine,
-        policy: ShardPolicy,
-        stats: Arc<ShardStats>,
-        plans: Arc<PlanCache>,
-    ) -> EngineBackend {
-        EngineBackend {
-            engine,
-            ws: Mutex::new(Workspace::with_default_threads()),
-            shard: Some(ShardState {
-                policy,
-                stats,
-                plans,
-            }),
-        }
-    }
-
-    /// Resolved shard count when this graph should take the sharded path.
-    fn wants_shard(&self, graph: &GraphView<'_>) -> Option<usize> {
-        let st = self.shard.as_ref()?;
-        if graph.num_nodes < st.policy.min_nodes {
-            return None;
-        }
-        let k = st.policy.resolve_k(graph);
-        (k > 1).then_some(k)
-    }
-
-    fn infer_sharded(&self, graph: GraphView<'_>, x: &[f32], k: usize) -> Result<Vec<f32>> {
-        let st = self.shard.as_ref().expect("checked by wants_shard");
-        // plan served from the cache: repeated inference over one
-        // topology partitions exactly once (hits after that), and
-        // concurrent first requests collapse into a single build
-        let sg = st.plans.get_or_build(graph, k, st.policy.seed);
-        st.stats.record(&sg);
-        let mut ws = self.ws.lock().unwrap();
-        // f32 like every other EngineBackend path (forward_view /
-        // forward_batch_results), so outputs never change numerics —
-        // they stay bit-identical — across the size threshold
-        self.engine.forward_sharded(&sg, x, &mut ws)
-    }
+    pub(crate) d: Dispatcher,
 }
 
 impl Backend for EngineBackend {
     fn name(&self) -> &str {
-        &self.engine.cfg.name
+        &self.d.engine.cfg.name
     }
 
     fn infer(&self, graph: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
-        if let Some(k) = self.wants_shard(&graph) {
-            return self.infer_sharded(graph, x, k);
-        }
-        self.engine.forward_view(graph, x)
+        self.d.infer_view(graph, x)
     }
 
     fn infer_batch(&self, batch: &GraphBatch) -> Vec<Result<Vec<f32>>> {
-        // fast path: nothing over the shard threshold → whole dispatch
-        // through the packed batch runner
-        let any_big = (0..batch.len()).any(|i| self.wants_shard(&batch.view(i)).is_some());
-        if !any_big {
-            let mut ws = self.ws.lock().unwrap();
-            return self.engine.forward_batch_results(batch, &mut ws);
-        }
-        // mixed dispatch: over-threshold graphs go through the sharded
-        // path; the rest are repacked so they keep the warm parallel
-        // batch runner instead of degrading to serial per-graph calls
-        let mut results: Vec<Option<Result<Vec<f32>>>> =
-            (0..batch.len()).map(|_| None).collect();
-        let mut small = GraphBatch::new();
-        let mut small_idx: Vec<usize> = Vec::new();
-        for i in 0..batch.len() {
-            let view = batch.view(i);
-            if let Some(k) = self.wants_shard(&view) {
-                results[i] = Some(self.infer_sharded(view, batch.x_view(i), k));
-            } else {
-                small_idx.push(i);
-                small.push_view(view, batch.x_view(i));
-            }
-        }
-        if !small.is_empty() {
-            let mut ws = self.ws.lock().unwrap();
-            let small_results = self.engine.forward_batch_results(&small, &mut ws);
-            for (j, r) in small_results.into_iter().enumerate() {
-                results[small_idx[j]] = Some(r);
-            }
-        }
-        results
-            .into_iter()
-            .map(|r| r.expect("every batch slot routed"))
-            .collect()
+        self.d.infer_batch(batch)
     }
 }
 
@@ -837,8 +713,13 @@ mod tests {
         let engine = Engine::new(cfg, &weights, datasets::ESOL.mean_degree).unwrap();
         let graphs = datasets::gen_dataset(&datasets::ESOL, 16, 3, 600, 600);
 
+        let (spec, _) = BackendSpec::session(
+            Session::builder(engine.clone())
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 }),
+        );
         let c = Coordinator::start(
-            vec![BackendSpec::engine(engine.clone())],
+            vec![spec],
             BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
@@ -854,6 +735,36 @@ mod tests {
             assert_eq!(via.output, direct, "batched path diverged");
         }
         assert!(c.metrics.batch_size_summary().max >= 1.0);
+        c.shutdown();
+    }
+
+    /// The deprecated `BackendSpec::engine` wrapper still serves (it
+    /// lowers onto the session spec), answering identically to direct
+    /// engine calls.
+    #[test]
+    fn deprecated_engine_spec_still_serves() {
+        let cfg = ModelConfig {
+            name: "compat_engine".into(),
+            graph_input_dim: datasets::ESOL.node_dim,
+            gnn_conv: ConvType::Gcn,
+            gnn_hidden_dim: 6,
+            gnn_out_dim: 6,
+            gnn_num_layers: 1,
+            mlp_hidden_dim: 4,
+            mlp_num_layers: 1,
+            output_dim: 2,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 3);
+        let engine = Engine::new(cfg, &weights, datasets::ESOL.mean_degree).unwrap();
+        #[allow(deprecated)]
+        let spec = BackendSpec::engine(engine.clone());
+        let c = Coordinator::start(vec![spec], BatchPolicy::default());
+        let graphs = datasets::gen_dataset(&datasets::ESOL, 3, 5, 600, 600);
+        for g in &graphs {
+            let via = c.infer("compat_engine", g.graph.clone(), g.x.clone()).unwrap();
+            assert_eq!(via.output, engine.forward(&g.graph, &g.x).unwrap());
+        }
         c.shutdown();
     }
 
@@ -889,7 +800,15 @@ mod tests {
             k: ShardK::Fixed(4),
             seed: 1,
         };
-        let (spec, shard_stats) = BackendSpec::engine_sharded(engine.clone(), policy);
+        let (spec, shard_stats) = BackendSpec::session(
+            Session::builder(engine.clone())
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Sharded {
+                    k: policy.k,
+                    plan: None,
+                })
+                .shard_policy(policy),
+        );
         let c = Coordinator::start(vec![spec], BatchPolicy::default());
 
         let rx_small = c.submit("shard_router", small.graph.clone(), small.x.clone());
@@ -941,7 +860,15 @@ mod tests {
             k: ShardK::Fixed(4),
             seed: 2,
         };
-        let (spec, shard_stats) = BackendSpec::engine_sharded(engine.clone(), policy);
+        let (spec, shard_stats) = BackendSpec::session(
+            Session::builder(engine.clone())
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Sharded {
+                    k: policy.k,
+                    plan: None,
+                })
+                .shard_policy(policy),
+        );
         let c = Coordinator::start(vec![spec], BatchPolicy::default());
 
         let rounds = 6usize;
@@ -996,8 +923,19 @@ mod tests {
             k: ShardK::Fixed(4),
             seed: 3,
         };
+        // one model through the deprecated wrapper (still supported), one
+        // through the session spec — both share the coordinator's cache
+        #[allow(deprecated)]
         let (spec_a, _) = BackendSpec::engine_sharded(engine_a.clone(), policy);
-        let (spec_b, _) = BackendSpec::engine_sharded(engine_b.clone(), policy);
+        let (spec_b, _) = BackendSpec::session(
+            Session::builder(engine_b.clone())
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Sharded {
+                    k: policy.k,
+                    plan: None,
+                })
+                .shard_policy(policy),
+        );
         let c = Coordinator::start(vec![spec_a, spec_b], BatchPolicy::default());
 
         let via_a = c.infer("shard_a", big.graph.clone(), big.x.clone()).unwrap();
@@ -1049,46 +987,67 @@ mod tests {
         };
         let weights = synth_weights(&cfg, 1);
         let engine = Engine::new(cfg, &weights, 4.5).unwrap();
-        let backend = EngineBackend::with_sharding(
-            engine,
-            ShardPolicy {
-                min_nodes: 1,
-                k: ShardK::Fixed(1),
-                ..ShardPolicy::default()
-            },
-            Arc::new(ShardStats::default()),
-            Arc::new(PlanCache::with_capacity(4)),
-        );
-        assert_eq!(backend.wants_shard(&big.graph.view()), None);
+        let fixed1_policy = ShardPolicy {
+            min_nodes: 1,
+            k: ShardK::Fixed(1),
+            ..ShardPolicy::default()
+        };
+        let backend = EngineBackend {
+            d: Session::builder(engine.clone())
+                .plan(ExecutionPlan::Sharded {
+                    k: fixed1_policy.k,
+                    plan: None,
+                })
+                .shard_policy(fixed1_policy)
+                .into_dispatcher(None, Arc::new(PlanCache::with_capacity(4)))
+                .unwrap(),
+        };
+        assert_eq!(backend.d.route(&big.graph.view()), None);
         // adaptive + molecule-sized graph also stays whole (K resolves 1)
         let tiny = datasets::gen_citation_graph(&datasets::PUBMED, 60, 1);
-        let backend_auto = EngineBackend::with_sharding(
-            Engine::new(
-                ModelConfig {
-                    name: "auto_tiny".into(),
-                    graph_input_dim: datasets::PUBMED.node_dim,
-                    gnn_conv: ConvType::Gcn,
-                    gnn_hidden_dim: 4,
-                    gnn_out_dim: 4,
-                    gnn_num_layers: 1,
-                    mlp_hidden_dim: 4,
-                    mlp_num_layers: 1,
-                    output_dim: 2,
-                    max_nodes: 2000,
-                    max_edges: 20_000,
-                    ..ModelConfig::default()
-                },
-                &weights,
-                4.5,
+        let backend_auto = EngineBackend {
+            d: Session::builder(engine)
+                .plan(ExecutionPlan::Auto)
+                .shard_policy(ShardPolicy {
+                    min_nodes: 1,
+                    ..ShardPolicy::default()
+                })
+                .into_dispatcher(None, Arc::new(PlanCache::with_capacity(4)))
+                .unwrap(),
+        };
+        assert_eq!(backend_auto.d.route(&tiny.graph.view()), None);
+        // plan Single never shards, whatever the policy says
+        let backend_single = EngineBackend {
+            d: Session::builder(
+                Engine::new(
+                    ModelConfig {
+                        name: "single_plan".into(),
+                        graph_input_dim: datasets::PUBMED.node_dim,
+                        gnn_conv: ConvType::Gcn,
+                        gnn_hidden_dim: 4,
+                        gnn_out_dim: 4,
+                        gnn_num_layers: 1,
+                        mlp_hidden_dim: 4,
+                        mlp_num_layers: 1,
+                        output_dim: 2,
+                        max_nodes: 2000,
+                        max_edges: 20_000,
+                        ..ModelConfig::default()
+                    },
+                    &weights,
+                    4.5,
+                )
+                .unwrap(),
             )
-            .unwrap(),
-            ShardPolicy {
+            .plan(ExecutionPlan::Single)
+            .shard_policy(ShardPolicy {
                 min_nodes: 1,
+                k: ShardK::Fixed(8),
                 ..ShardPolicy::default()
-            },
-            Arc::new(ShardStats::default()),
-            Arc::new(PlanCache::with_capacity(4)),
-        );
-        assert_eq!(backend_auto.wants_shard(&tiny.graph.view()), None);
+            })
+            .into_dispatcher(None, Arc::new(PlanCache::with_capacity(4)))
+                .unwrap(),
+        };
+        assert_eq!(backend_single.d.route(&big.graph.view()), None);
     }
 }

@@ -28,13 +28,21 @@
 //! still partitions exactly once (plans depend only on topology + policy,
 //! never on the model).
 //!
-//! Known costs, by design:
-//! - a warm hit still hashes the full neighbor table (O(V+E) — strictly
-//!   cheaper than the O(E·d) forward that follows, but not free);
-//!   memoizing the hash on a deployed graph handle is a noted follow-up.
-//! - capacity is counted in *plans*, and one plan holds extracted
-//!   subgraph arenas of roughly the whole neighbor table plus halo
-//!   duplication — budget capacity accordingly for very large graphs.
+//! Hash costs: [`PlanCache::get_or_build`] hashes the neighbor table on
+//! every lookup (O(V+E) — strictly cheaper than the O(E·d) forward that
+//! follows, but not free). Deployed-graph callers avoid even that:
+//! [`crate::session::DeployedGraph`] memoizes the hash once and feeds it
+//! to [`PlanCache::get_or_build_hashed`], so a warm session lookup is
+//! O(1). The `hash_computes` counter records every hash the cache itself
+//! performs — tests assert it stays at zero on the memoized path.
+//!
+//! Eviction is bounded two ways: by plan count (LRU, default 32) and —
+//! optionally — by an approximate byte budget
+//! ([`PlanCache::with_byte_budget`]): each entry is charged a
+//! node-weighted size estimate at insert time, and the LRU sweep also
+//! runs while the charged total would exceed the budget, preventing
+//! silent memory blowup when many distinct very-large topologies rotate
+//! through one backend.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -56,6 +64,10 @@ pub struct PlanCacheStats {
     pub builds: AtomicU64,
     /// entries dropped by LRU eviction
     pub evictions: AtomicU64,
+    /// topology hashes computed *by the cache* (`get_or_build`); the
+    /// memoized-hash path (`get_or_build_hashed`) never increments it —
+    /// zero re-hashes on warm hits is asserted against this counter
+    pub hash_computes: AtomicU64,
 }
 
 impl PlanCacheStats {
@@ -75,19 +87,25 @@ struct Entry {
     cell: Arc<OnceLock<Arc<ShardedGraph>>>,
     /// logical timestamp of the last lookup that touched this entry
     last_used: u64,
+    /// node-weighted size estimate charged against the byte budget
+    bytes: usize,
 }
 
 #[derive(Debug)]
 struct Inner {
     entries: HashMap<u64, Entry>,
     tick: u64,
+    /// sum of the `bytes` estimates of all resident entries
+    total_bytes: usize,
 }
 
 /// Bounded LRU cache of [`ShardedGraph`] plans keyed by
-/// ([`topology_hash`], K, partitioner seed).
+/// ([`topology_hash`], K, partitioner seed), with an optional
+/// approximate byte budget on top of the plan-count bound.
 #[derive(Debug)]
 pub struct PlanCache {
     capacity: usize,
+    byte_budget: Option<usize>,
     stats: Arc<PlanCacheStats>,
     inner: Mutex<Inner>,
 }
@@ -103,19 +121,32 @@ impl Default for PlanCache {
 impl PlanCache {
     /// Default LRU capacity, in plans. Capacity counts *plans*, not
     /// bytes: a plan retains subgraph arenas of roughly the whole
-    /// neighbor table (plus halo duplication), so deployments serving
-    /// very large graphs should size this down.
+    /// neighbor table (plus halo duplication). Deployments serving very
+    /// large graphs should size this down — or bound memory directly
+    /// with [`PlanCache::with_byte_budget`].
     pub const DEFAULT_CAPACITY: usize = 32;
 
     /// Cache holding at most `capacity` plans (clamped to ≥ 1), recording
     /// into the shared `stats` handle.
     pub fn new(capacity: usize, stats: Arc<PlanCacheStats>) -> PlanCache {
+        PlanCache::bounded(capacity, None, stats)
+    }
+
+    /// Cache bounded by plan count and (optionally) by an approximate
+    /// byte budget; eviction runs whichever bound trips first.
+    pub fn bounded(
+        capacity: usize,
+        byte_budget: Option<usize>,
+        stats: Arc<PlanCacheStats>,
+    ) -> PlanCache {
         PlanCache {
             capacity: capacity.max(1),
+            byte_budget,
             stats,
             inner: Mutex::new(Inner {
                 entries: HashMap::new(),
                 tick: 0,
+                total_bytes: 0,
             }),
         }
     }
@@ -123,6 +154,31 @@ impl PlanCache {
     /// Cache with its own private stats handle (benches / standalone use).
     pub fn with_capacity(capacity: usize) -> PlanCache {
         PlanCache::new(capacity, Arc::new(PlanCacheStats::default()))
+    }
+
+    /// Cache bounded by an approximate byte budget instead of a plan
+    /// count: entries are charged [`PlanCache::estimate_plan_bytes`] at
+    /// insert time, and LRU eviction runs while the charged total would
+    /// exceed `max_bytes`. The newest entry is always admitted (a single
+    /// plan larger than the whole budget sits alone until the next miss
+    /// evicts it), so the cache degrades to "cache of one" rather than
+    /// thrashing on empty.
+    pub fn with_byte_budget(max_bytes: usize) -> PlanCache {
+        PlanCache::bounded(usize::MAX, Some(max_bytes), Arc::new(PlanCacheStats::default()))
+    }
+
+    /// Node-weighted size estimate of one plan, charged against the byte
+    /// budget at insert time (before the build runs, so admission never
+    /// waits on partitioning). Accounts for the owner map + shard lists
+    /// (per node), the extracted local edge/neighbor/offset tables (per
+    /// edge + per node), and halo duplication growing with K.
+    pub fn estimate_plan_bytes(num_nodes: usize, num_edges: usize, k: usize) -> usize {
+        // measured shape of a ShardedGraph: ~56 B per (node + halo slot)
+        // across owner/shards/global_ids/degree tables, ~16 B per edge
+        // across local COO + neighbor tables; halo slots approximated at
+        // a quarter of the nodes per additional shard boundary (capped)
+        let halo = (num_nodes / 4) * k.saturating_sub(1).min(4);
+        56 * (num_nodes + halo) + 16 * num_edges + 512
     }
 
     pub fn stats(&self) -> &Arc<PlanCacheStats> {
@@ -138,17 +194,40 @@ impl PlanCache {
         self.len() == 0
     }
 
-    /// Full plan identity: graph topology mixed with the shard policy.
-    fn key(g: GraphView<'_>, k: usize, seed: u64) -> u64 {
-        let mut h = topology_hash(g);
-        h = mix64(h ^ k as u64);
-        mix64(h ^ seed)
+    /// Sum of the byte estimates charged for resident plans.
+    pub fn approx_bytes(&self) -> usize {
+        self.inner.lock().unwrap().total_bytes
+    }
+
+    /// Mix a precomputed topology hash with the shard policy into the
+    /// full plan identity.
+    fn key_from_hash(topo: u64, k: usize, seed: u64) -> u64 {
+        mix64(mix64(topo ^ k as u64) ^ seed)
     }
 
     /// Return the cached plan for `(g, k, seed)`, partitioning at most
-    /// once per key no matter how many threads race on it.
+    /// once per key no matter how many threads race on it. Hashes the
+    /// topology on every call (counted in `stats().hash_computes`);
+    /// deployed-graph callers with a memoized hash should use
+    /// [`PlanCache::get_or_build_hashed`] instead.
     pub fn get_or_build(&self, g: GraphView<'_>, k: usize, seed: u64) -> Arc<ShardedGraph> {
-        let key = Self::key(g, k, seed);
+        self.stats.hash_computes.fetch_add(1, Ordering::Relaxed);
+        self.get_or_build_hashed(topology_hash(g), g, k, seed)
+    }
+
+    /// [`PlanCache::get_or_build`] with the topology hash supplied by the
+    /// caller (a [`crate::session::DeployedGraph`] memoizes it), making a
+    /// warm lookup O(1): no re-hash, no re-partition. `topo_hash` must be
+    /// `topology_hash(g)` — handing a foreign hash aliases cache keys.
+    pub fn get_or_build_hashed(
+        &self,
+        topo_hash: u64,
+        g: GraphView<'_>,
+        k: usize,
+        seed: u64,
+    ) -> Arc<ShardedGraph> {
+        let key = Self::key_from_hash(topo_hash, k, seed);
+        let bytes = Self::estimate_plan_bytes(g.num_nodes, g.num_edges, k);
         let cell = {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
@@ -159,16 +238,23 @@ impl PlanCache {
                 e.cell.clone()
             } else {
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                // O(capacity) scan — serving caches hold tens of plans,
-                // and eviction only runs on a miss that found a full map
-                while inner.entries.len() >= self.capacity {
+                // O(len) scan per eviction — serving caches hold tens of
+                // plans, and eviction only runs on a miss that tripped a
+                // bound (count, or charged bytes incl. the incoming plan)
+                while !inner.entries.is_empty()
+                    && (inner.entries.len() >= self.capacity
+                        || self
+                            .byte_budget
+                            .is_some_and(|b| inner.total_bytes + bytes > b))
+                {
                     let lru = inner
                         .entries
                         .iter()
                         .min_by_key(|(_, e)| e.last_used)
                         .map(|(&k, _)| k)
-                        .expect("full cache has at least one entry");
-                    inner.entries.remove(&lru);
+                        .expect("non-empty cache has an LRU entry");
+                    let evicted = inner.entries.remove(&lru).expect("lru key resident");
+                    inner.total_bytes -= evicted.bytes;
                     self.stats.evictions.fetch_add(1, Ordering::Relaxed);
                 }
                 let cell = Arc::new(OnceLock::new());
@@ -177,8 +263,10 @@ impl PlanCache {
                     Entry {
                         cell: cell.clone(),
                         last_used: tick,
+                        bytes,
                     },
                 );
+                inner.total_bytes += bytes;
                 cell
             }
         };
@@ -311,6 +399,74 @@ mod tests {
         assert_eq!(tiny.stats().hits.load(Ordering::Relaxed), 1);
     }
 
+    /// The memoized-hash entry point: identical keys (and plans) to the
+    /// hashing path, but the cache itself never re-hashes.
+    #[test]
+    fn hashed_lookup_skips_the_cache_side_hash() {
+        let cache = PlanCache::with_capacity(4);
+        let g = random_graph(60, 30, 80);
+        let first = cache.get_or_build(g.view(), 3, 7);
+        assert_eq!(cache.stats().hash_computes.load(Ordering::Relaxed), 1);
+        let h = crate::partition::topology_hash(g.view());
+        let again = cache.get_or_build_hashed(h, g.view(), 3, 7);
+        assert!(Arc::ptr_eq(&first, &again), "hashed lookup missed the cached plan");
+        // a hit, and no additional cache-side hash
+        assert_eq!(cache.stats().hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats().hash_computes.load(Ordering::Relaxed), 1);
+        // cold hashed lookups build exactly like the hashing path
+        let g2 = random_graph(61, 30, 80);
+        let h2 = crate::partition::topology_hash(g2.view());
+        let p2 = cache.get_or_build_hashed(h2, g2.view(), 3, 7);
+        assert_eq!(p2.k(), 3);
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 2);
+        assert_eq!(cache.stats().hash_computes.load(Ordering::Relaxed), 1);
+    }
+
+    /// Byte-budget eviction: the LRU sweep runs when the charged
+    /// node-weighted estimates would exceed the budget, independent of
+    /// the plan count.
+    #[test]
+    fn byte_budget_evicts_by_charged_estimate() {
+        let (n, e, k) = (24usize, 60usize, 2usize);
+        let per_plan = PlanCache::estimate_plan_bytes(n, e, k);
+        // room for two plans, not three
+        let cache = PlanCache::with_byte_budget(per_plan * 2 + per_plan / 2);
+        let ga = random_graph(70, n, e);
+        let gb = random_graph(71, n, e);
+        let gc = random_graph(72, n, e);
+        cache.get_or_build(ga.view(), k, 0);
+        cache.get_or_build(gb.view(), k, 0);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 0);
+        cache.get_or_build(ga.view(), k, 0); // A more recent than B
+        cache.get_or_build(gc.view(), k, 0); // over budget → evicts B
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 1);
+        assert!(cache.approx_bytes() <= per_plan * 2 + per_plan / 2);
+        let builds = cache.stats().builds.load(Ordering::Relaxed);
+        cache.get_or_build(ga.view(), k, 0); // A survived
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), builds);
+        cache.get_or_build(gb.view(), k, 0); // B was evicted → rebuilt
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), builds + 1);
+    }
+
+    /// A single plan larger than the whole budget is admitted alone
+    /// (cache-of-one) instead of thrashing on empty.
+    #[test]
+    fn oversized_plan_is_admitted_alone() {
+        let cache = PlanCache::with_byte_budget(64); // smaller than any plan
+        let g = random_graph(80, 30, 90);
+        cache.get_or_build(g.view(), 2, 0);
+        assert_eq!(cache.len(), 1);
+        cache.get_or_build(g.view(), 2, 0);
+        assert_eq!(cache.stats().hits.load(Ordering::Relaxed), 1);
+        // a different topology displaces it (budget admits one at a time)
+        let g2 = random_graph(81, 30, 90);
+        cache.get_or_build(g2.view(), 2, 0);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 1);
+    }
+
     /// A cached plan serves forwards bit-identically to a freshly built
     /// one (the cache stores, never transforms).
     #[test]
@@ -335,12 +491,12 @@ mod tests {
             .map(|_| rng.range_f64(-1.0, 1.0) as f32)
             .collect();
         let cache = PlanCache::with_capacity(2);
-        let mut ws = Workspace::new(2);
+        let ws = Workspace::new(2);
         let fresh = ShardedGraph::build(g.view(), 3, 5);
-        let want = engine.forward_sharded(&fresh, &x, &mut ws).unwrap();
+        let want = engine.forward_sharded(&fresh, &x, &ws).unwrap();
         for _ in 0..3 {
             let sg = cache.get_or_build(g.view(), 3, 5);
-            let got = engine.forward_sharded(&sg, &x, &mut ws).unwrap();
+            let got = engine.forward_sharded(&sg, &x, &ws).unwrap();
             assert_eq!(got, want);
             assert_eq!(got, engine.forward(&g, &x).unwrap());
         }

@@ -6,20 +6,25 @@
 //! (Welford for mean/var/std, §V-B), apply φ/γ transforms via tiled
 //! linear kernels, then global pooling + MLP head.
 //!
-//! Two numerics paths share the control flow:
-//! - [`Engine::forward`] — f32, numerically equivalent to the L2 JAX
-//!   model (validated against `artifacts/*.testvecs.bin` golden outputs);
-//! - [`Engine::forward_fixed`] — true ap_fixed<W,I> quantized compute via
-//!   [`crate::fixed`], the "true quantization simulation" testbench path
-//!   (§VI-B).
+//! Two numerics paths share the control flow: f32 (numerically
+//! equivalent to the L2 JAX model, validated against
+//! `artifacts/*.testvecs.bin` golden outputs) and true ap_fixed<W,I>
+//! quantized compute via [`crate::fixed`], the "true quantization
+//! simulation" testbench path (§VI-B).
 //!
-//! Batching is first-class: [`Engine::forward_batch`] runs a packed
+//! Batching is first-class: the packed-batch runner streams a
 //! [`GraphBatch`] through per-worker [`Workspace`] scratch buffers
 //! (zero heap allocation in the hot loop after warmup) and parallelizes
 //! over the graphs via [`crate::util::pool::par_map`]. Because every
 //! kernel reads topology through [`GraphView`] with unchanged f32
 //! operation order, batched outputs are bit-identical to the
 //! single-graph path.
+//!
+//! The execution entry points (`run_one`, `run_many`, `batch_run`,
+//! `sharded_run` in [`sharded`](self)) are crate-internal: callers go
+//! through [`crate::session::Session`] (deployed graphs) or the serving
+//! coordinator's backend dispatcher, which resolve precision and
+//! execution path once and dispatch here.
 
 mod aggregations;
 mod layers;
@@ -32,7 +37,7 @@ use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 use anyhow::{bail, Context, Result};
 
 use crate::graph::{Graph, GraphBatch, GraphView};
-use crate::model::{ConvType, FixedPointFormat, ModelConfig, Numerics};
+use crate::model::{ConvType, FixedPointFormat, ModelConfig};
 use crate::util::binio::{Tensor, Weights};
 use crate::util::pool::par_map;
 
@@ -158,7 +163,7 @@ impl Default for Scratch {
     }
 }
 
-/// A pool of per-worker [`Scratch`] slots backing the batched forward.
+/// A pool of per-worker scratch slots backing the batched forward.
 /// One workspace is meant to live as long as its worker (coordinator
 /// backend, bench loop, ...) so buffers stay warm across batches.
 pub struct Workspace {
@@ -268,80 +273,73 @@ impl Engine {
     }
 
     /// f32 forward pass over one graph. `x` is [num_nodes * in_dim].
-    pub fn forward(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
+    /// Crate-internal baseline (the public entry is `session::Session`).
+    pub(crate) fn forward(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
         self.run_view(g.view(), x, None, &mut Scratch::default())
-    }
-
-    /// True fixed-point forward pass (quantizes inputs, weights, and every
-    /// intermediate to the config's ap_fixed format).
-    pub fn forward_fixed(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
-        self.run_view(g.view(), x, Some(self.cfg.fpx), &mut Scratch::default())
-    }
-
-    /// Forward with the numerics selected by the config.
-    pub fn forward_auto(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
-        match self.cfg.numerics {
-            Numerics::Float => self.forward(g, x),
-            Numerics::Fixed => self.forward_fixed(g, x),
-        }
     }
 
     /// f32 forward over a borrowed graph view (single graph or one slot of
     /// a packed batch).
-    pub fn forward_view(&self, g: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
+    pub(crate) fn forward_view(&self, g: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
         self.run_view(g, x, None, &mut Scratch::default())
     }
 
     /// f32 forward over a packed batch, parallelized over graphs across
     /// the workspace's scratch slots. Outputs are bit-identical to calling
-    /// [`Engine::forward`] per graph.
-    pub fn forward_batch(&self, batch: &GraphBatch, ws: &mut Workspace) -> Result<Vec<Vec<f32>>> {
+    /// `forward` per graph.
+    pub(crate) fn forward_batch(
+        &self,
+        batch: &GraphBatch,
+        ws: &Workspace,
+    ) -> Result<Vec<Vec<f32>>> {
         self.batch_run(batch, None, ws).into_iter().collect()
     }
 
-    /// Fixed-point twin of [`Engine::forward_batch`].
-    pub fn forward_batch_fixed(
+    /// One forward pass at an explicit quantization through a leased
+    /// workspace scratch slot — the session/dispatcher whole-graph entry.
+    pub(crate) fn run_one(
         &self,
-        batch: &GraphBatch,
-        ws: &mut Workspace,
-    ) -> Result<Vec<Vec<f32>>> {
-        self.batch_run(batch, Some(self.cfg.fpx), ws).into_iter().collect()
+        g: GraphView<'_>,
+        x: &[f32],
+        q: Option<FixedPointFormat>,
+        ws: &Workspace,
+    ) -> Result<Vec<f32>> {
+        let mut s = ws.acquire();
+        self.run_view(g, x, q, &mut s)
     }
 
-    /// Batched forward with the numerics selected by the config.
-    pub fn forward_batch_auto(
+    /// Many feature sets over ONE graph view, parallelized across the
+    /// workspace's scratch slots — the session `run_batch` entry for the
+    /// node-level serving pattern (one deployed topology, fresh features
+    /// per request). Bit-identical to `run_one` per feature set.
+    pub(crate) fn run_many<S: AsRef<[f32]> + Sync>(
         &self,
-        batch: &GraphBatch,
-        ws: &mut Workspace,
-    ) -> Result<Vec<Vec<f32>>> {
-        match self.cfg.numerics {
-            Numerics::Float => self.forward_batch(batch, ws),
-            Numerics::Fixed => self.forward_batch_fixed(batch, ws),
-        }
-    }
-
-    /// Per-graph results of an f32 batched forward — one bad graph (e.g.
-    /// over MAX_NODES) fails alone instead of poisoning the whole batch.
-    /// This is the serving coordinator's entry point.
-    pub fn forward_batch_results(
-        &self,
-        batch: &GraphBatch,
-        ws: &mut Workspace,
+        g: GraphView<'_>,
+        xs: &[S],
+        q: Option<FixedPointFormat>,
+        ws: &Workspace,
     ) -> Vec<Result<Vec<f32>>> {
-        self.batch_run(batch, None, ws)
+        let n = xs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = ws.threads().min(n);
+        par_map(n, threads, |i| self.run_one(g, xs[i].as_ref(), q, ws))
     }
 
-    fn batch_run(
+    /// Per-graph results of a batched forward at an explicit quantization
+    /// — one bad graph (e.g. over MAX_NODES) fails alone instead of
+    /// poisoning the whole batch. The serving dispatcher's batch entry.
+    pub(crate) fn batch_run(
         &self,
         batch: &GraphBatch,
         q: Option<FixedPointFormat>,
-        ws: &mut Workspace,
+        ws: &Workspace,
     ) -> Vec<Result<Vec<f32>>> {
         let n = batch.len();
         if n == 0 {
             return Vec::new();
         }
-        let ws: &Workspace = ws;
         let threads = ws.threads().min(n);
         par_map(n, threads, |i| {
             let mut s = ws.acquire();
@@ -454,6 +452,37 @@ impl Engine {
             std::mem::swap(&mut s.z, &mut s.z2);
         }
         s.z.clone()
+    }
+}
+
+/// Test-only conveniences: the old `forward_*` spellings, kept for the
+/// in-crate unit suites that pin path-vs-path bit-identity. Everything
+/// else (sessions, the dispatcher, baselines) goes through the explicit
+/// `run_one` / `run_many` / `batch_run` / `sharded_run` entries.
+#[cfg(test)]
+impl Engine {
+    /// True fixed-point forward pass (quantizes inputs, weights, and every
+    /// intermediate to the config's ap_fixed format).
+    pub(crate) fn forward_fixed(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
+        self.run_view(g.view(), x, Some(self.cfg.fpx), &mut Scratch::default())
+    }
+
+    /// Fixed-point twin of the batched forward.
+    pub(crate) fn forward_batch_fixed(
+        &self,
+        batch: &GraphBatch,
+        ws: &Workspace,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.batch_run(batch, Some(self.cfg.fpx), ws).into_iter().collect()
+    }
+
+    /// Per-graph results of an f32 batched forward.
+    pub(crate) fn forward_batch_results(
+        &self,
+        batch: &GraphBatch,
+        ws: &Workspace,
+    ) -> Vec<Result<Vec<f32>>> {
+        self.batch_run(batch, None, ws)
     }
 }
 
@@ -629,8 +658,8 @@ mod tests {
                 .iter()
                 .map(|g| engine.forward(&g.graph, &g.x).unwrap())
                 .collect();
-            let mut ws = Workspace::new(4);
-            let batched = engine.forward_batch(&batch, &mut ws).unwrap();
+            let ws = Workspace::new(4);
+            let batched = engine.forward_batch(&batch, &ws).unwrap();
             assert_eq!(batched.len(), singles.len());
             for (i, (a, b)) in batched.iter().zip(&singles).enumerate() {
                 assert_eq!(a, b, "{conv:?} graph {i} diverged from single-graph path");
@@ -648,8 +677,8 @@ mod tests {
             .iter()
             .map(|g| engine.forward_fixed(&g.graph, &g.x).unwrap())
             .collect();
-        let mut ws = Workspace::new(3);
-        let batched = engine.forward_batch_fixed(&batch, &mut ws).unwrap();
+        let ws = Workspace::new(3);
+        let batched = engine.forward_batch_fixed(&batch, &ws).unwrap();
         for (a, b) in batched.iter().zip(&singles) {
             assert_eq!(a, b);
         }
@@ -661,13 +690,13 @@ mod tests {
     fn workspace_reuse_is_stateless_across_batches() {
         let engine = tiny_engine(ConvType::Gin);
         let (graphs, batch) = esol_batch(5);
-        let mut ws = Workspace::new(2);
-        let first = engine.forward_batch(&batch, &mut ws).unwrap();
-        let again = engine.forward_batch(&batch, &mut ws).unwrap();
+        let ws = Workspace::new(2);
+        let first = engine.forward_batch(&batch, &ws).unwrap();
+        let again = engine.forward_batch(&batch, &ws).unwrap();
         assert_eq!(first, again);
         // a smaller batch through the same (now warm, larger) buffers
         let sub = GraphBatch::pack(graphs.iter().take(2).map(|g| (&g.graph, g.x.as_slice())));
-        let small = engine.forward_batch(&sub, &mut ws).unwrap();
+        let small = engine.forward_batch(&sub, &ws).unwrap();
         assert_eq!(small.as_slice(), &first[..2]);
     }
 
@@ -691,22 +720,46 @@ mod tests {
             (&ok, x_ok.as_slice()),
         ]);
 
-        let mut ws = Workspace::single();
-        let results = strict.forward_batch_results(&batch, &mut ws);
+        let ws = Workspace::single();
+        let results = strict.forward_batch_results(&batch, &ws);
         assert!(results[0].is_ok());
         assert!(results[1].is_err());
         assert!(results[2].is_ok());
-        assert!(strict.forward_batch(&batch, &mut ws).is_err());
+        assert!(strict.forward_batch(&batch, &ws).is_err());
         // the permissive engine takes all three
-        assert!(engine.forward_batch(&batch, &mut ws).is_ok());
+        assert!(engine.forward_batch(&batch, &ws).is_ok());
     }
 
     #[test]
     fn empty_batch_is_empty_result() {
         let engine = tiny_engine(ConvType::Sage);
         let batch = GraphBatch::pack(std::iter::empty::<(&Graph, &[f32])>());
-        let mut ws = Workspace::single();
-        assert!(engine.forward_batch(&batch, &mut ws).unwrap().is_empty());
+        let ws = Workspace::single();
+        assert!(engine.forward_batch(&batch, &ws).unwrap().is_empty());
+    }
+
+    /// A dispatch mixing empty, singleton, and normal graphs in one
+    /// packed arena: per-slot results must match per-graph forwards slot
+    /// for slot (the coordinator packs arbitrary request mixes).
+    #[test]
+    fn degenerate_graphs_inside_one_packed_batch() {
+        let engine = tiny_engine(ConvType::Sage);
+        let dim = engine.cfg.graph_input_dim;
+        let empty = Graph::from_coo(0, &[]);
+        let lone = Graph::from_coo(1, &[(0, 0)]);
+        let ring = Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let x_lone: Vec<f32> = (0..dim).map(|v| v as f32 * 0.5 - 0.5).collect();
+        let x_ring: Vec<f32> = (0..4 * dim).map(|v| v as f32 * 0.125).collect();
+        let batch = GraphBatch::pack([
+            (&empty, &[] as &[f32]),
+            (&lone, x_lone.as_slice()),
+            (&ring, x_ring.as_slice()),
+        ]);
+        let ws = Workspace::new(2);
+        let results = engine.forward_batch(&batch, &ws).unwrap();
+        assert_eq!(results[0], engine.forward(&empty, &[]).unwrap());
+        assert_eq!(results[1], engine.forward(&lone, &x_lone).unwrap());
+        assert_eq!(results[2], engine.forward(&ring, &x_ring).unwrap());
     }
 
     /// Engine clones share weight storage (Arc) — no tensor copies.

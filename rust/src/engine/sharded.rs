@@ -15,7 +15,7 @@
 //!  after L layers: gather owned rows by global id ──► pooling + MLP head
 //! ```
 //!
-//! Bit-identity with [`Engine::forward`] is exact, not tolerance-based,
+//! Bit-identity with the whole-graph forward is exact, not tolerance-based,
 //! for both f32 and ap_fixed: every owned node sees its full in-neighbor
 //! list in the original neighbor-table order (guaranteed by
 //! [`Subgraph`](crate::partition::Subgraph) extraction), neighbor
@@ -29,53 +29,48 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
-use crate::model::{FixedPointFormat, Numerics};
+use crate::model::FixedPointFormat;
 use crate::partition::ShardedGraph;
 use crate::util::pool::par_map;
 
 use super::{layers, Embeds, Engine, Workspace};
 
+/// Test-only conveniences mirroring the old `forward_sharded*` entries;
+/// real callers dispatch through `session::Session` / the coordinator.
+#[cfg(test)]
 impl Engine {
-    /// f32 forward over a partitioned graph — bit-identical to
-    /// [`Engine::forward`] on the unpartitioned graph.
-    pub fn forward_sharded(
+    /// f32 forward over a partitioned graph — bit-identical to the
+    /// whole-graph forward.
+    pub(crate) fn forward_sharded(
         &self,
         sg: &ShardedGraph,
         x: &[f32],
-        ws: &mut Workspace,
+        ws: &Workspace,
     ) -> Result<Vec<f32>> {
         self.sharded_run(sg, x, None, ws)
     }
 
-    /// True fixed-point twin — bit-identical to [`Engine::forward_fixed`].
-    pub fn forward_sharded_fixed(
+    /// True fixed-point twin — bit-identical to the whole-graph
+    /// fixed-point forward.
+    pub(crate) fn forward_sharded_fixed(
         &self,
         sg: &ShardedGraph,
         x: &[f32],
-        ws: &mut Workspace,
+        ws: &Workspace,
     ) -> Result<Vec<f32>> {
         self.sharded_run(sg, x, Some(self.cfg.fpx), ws)
     }
+}
 
-    /// Sharded forward with the numerics selected by the config.
-    pub fn forward_sharded_auto(
-        &self,
-        sg: &ShardedGraph,
-        x: &[f32],
-        ws: &mut Workspace,
-    ) -> Result<Vec<f32>> {
-        match self.cfg.numerics {
-            Numerics::Float => self.forward_sharded(sg, x, ws),
-            Numerics::Fixed => self.forward_sharded_fixed(sg, x, ws),
-        }
-    }
-
-    fn sharded_run(
+impl Engine {
+    /// Partitioned forward at an explicit quantization — the
+    /// session/dispatcher sharded entry.
+    pub(crate) fn sharded_run(
         &self,
         sg: &ShardedGraph,
         x: &[f32],
         q: Option<FixedPointFormat>,
-        ws: &mut Workspace,
+        ws: &Workspace,
     ) -> Result<Vec<f32>> {
         let cfg = &*self.cfg;
         let n = sg.num_nodes;
@@ -240,7 +235,7 @@ mod tests {
             .iter()
             .map(|&c| tiny_engine(c, 600))
             .collect();
-        let mut ws = Workspace::new(4);
+        let ws = Workspace::new(4);
         let mut rng = Rng::seed_from(2024);
         for case in 0..100u64 {
             let (g, x) = random_graph_and_x(&mut rng, 50, 6);
@@ -248,7 +243,7 @@ mod tests {
             let sg = ShardedGraph::build(g.view(), k, case);
             let engine = &engines[case as usize % engines.len()];
             let whole = engine.forward(&g, &x).unwrap();
-            let sharded = engine.forward_sharded(&sg, &x, &mut ws).unwrap();
+            let sharded = engine.forward_sharded(&sg, &x, &ws).unwrap();
             assert_eq!(
                 sharded, whole,
                 "case {case} (k={k}, n={}): sharded diverged",
@@ -261,7 +256,7 @@ mod tests {
     /// sharded control flow.
     #[test]
     fn sharded_fixed_bit_identical_to_forward_fixed() {
-        let mut ws = Workspace::new(3);
+        let ws = Workspace::new(3);
         let mut rng = Rng::seed_from(77);
         for conv in ConvType::ALL {
             let engine = tiny_engine(conv, 600);
@@ -269,7 +264,7 @@ mod tests {
                 let (g, x) = random_graph_and_x(&mut rng, 40, 6);
                 let sg = ShardedGraph::build(g.view(), 4, case);
                 let whole = engine.forward_fixed(&g, &x).unwrap();
-                let sharded = engine.forward_sharded_fixed(&sg, &x, &mut ws).unwrap();
+                let sharded = engine.forward_sharded_fixed(&sg, &x, &ws).unwrap();
                 assert_eq!(sharded, whole, "{conv:?} case {case}");
             }
         }
@@ -280,19 +275,18 @@ mod tests {
     #[test]
     fn single_shard_matches_forward() {
         let engine = tiny_engine(ConvType::Pna, 600);
-        let mut ws = Workspace::single();
+        let ws = Workspace::single();
         let mut rng = Rng::seed_from(3);
         let (g, x) = random_graph_and_x(&mut rng, 60, 6);
         let sg = ShardedGraph::build(g.view(), 1, 0);
         assert_eq!(
-            engine.forward_sharded(&sg, &x, &mut ws).unwrap(),
+            engine.forward_sharded(&sg, &x, &ws).unwrap(),
             engine.forward(&g, &x).unwrap()
         );
     }
 
     /// A power-law citation graph (the workload this path exists for):
-    /// sharded K=4 matches the whole-graph forward bit-for-bit, and the
-    /// auto entry point follows the config's numerics.
+    /// sharded K=4 matches the whole-graph forward bit-for-bit.
     #[test]
     fn citation_graph_sharded_matches_whole() {
         let stats = &datasets::PUBMED;
@@ -316,12 +310,13 @@ mod tests {
         let sg = ShardedGraph::build(ng.graph.view(), 4, 9);
         assert!(sg.plan.check(ng.graph.view()));
         assert!(sg.halo_nodes() > 0, "a 4-way cut of a connected graph has ghosts");
-        let mut ws = Workspace::with_default_threads();
+        let ws = Workspace::with_default_threads();
         let whole = engine.forward(&ng.graph, &ng.x).unwrap();
-        let sharded = engine.forward_sharded(&sg, &ng.x, &mut ws).unwrap();
+        let sharded = engine.forward_sharded(&sg, &ng.x, &ws).unwrap();
         assert_eq!(sharded, whole);
-        let auto = engine.forward_sharded_auto(&sg, &ng.x, &mut ws).unwrap();
-        assert_eq!(auto, whole);
+        // and the explicit-quantization entry with q = None is the same path
+        let via_q = engine.sharded_run(&sg, &ng.x, None, &ws).unwrap();
+        assert_eq!(via_q, whole);
     }
 
     /// Workspace reuse across sharded calls (and interleaved with batched
@@ -329,17 +324,17 @@ mod tests {
     #[test]
     fn workspace_reuse_stays_bit_exact() {
         let engine = tiny_engine(ConvType::Gin, 600);
-        let mut ws = Workspace::new(2);
+        let ws = Workspace::new(2);
         let mut rng = Rng::seed_from(8);
         let (g1, x1) = random_graph_and_x(&mut rng, 50, 6);
         let (g2, x2) = random_graph_and_x(&mut rng, 20, 6);
         let sg1 = ShardedGraph::build(g1.view(), 3, 0);
         let sg2 = ShardedGraph::build(g2.view(), 2, 0);
-        let a1 = engine.forward_sharded(&sg1, &x1, &mut ws).unwrap();
-        let a2 = engine.forward_sharded(&sg2, &x2, &mut ws).unwrap();
+        let a1 = engine.forward_sharded(&sg1, &x1, &ws).unwrap();
+        let a2 = engine.forward_sharded(&sg2, &x2, &ws).unwrap();
         // re-run in the opposite order through the same warm workspace
-        assert_eq!(engine.forward_sharded(&sg2, &x2, &mut ws).unwrap(), a2);
-        assert_eq!(engine.forward_sharded(&sg1, &x1, &mut ws).unwrap(), a1);
+        assert_eq!(engine.forward_sharded(&sg2, &x2, &ws).unwrap(), a2);
+        assert_eq!(engine.forward_sharded(&sg1, &x1, &ws).unwrap(), a1);
         assert_eq!(a1, engine.forward(&g1, &x1).unwrap());
         assert_eq!(a2, engine.forward(&g2, &x2).unwrap());
     }
@@ -355,10 +350,10 @@ mod tests {
         let (g, x) = random_graph_and_x(&mut rng, 80, 6);
         let whole = engine.forward(&g, &x).unwrap();
         for threads in [1usize, 2, 8] {
-            let mut ws = Workspace::new(threads);
+            let ws = Workspace::new(threads);
             for k in [6usize, 8, 12] {
                 let sg = ShardedGraph::build(g.view(), k, (threads * 31 + k) as u64);
-                let sharded = engine.forward_sharded(&sg, &x, &mut ws).unwrap();
+                let sharded = engine.forward_sharded(&sg, &x, &ws).unwrap();
                 assert_eq!(sharded, whole, "threads={threads} k={k}");
             }
         }
@@ -368,19 +363,19 @@ mod tests {
     /// groups spanning many shards) for both numerics paths.
     #[test]
     fn dense_exchange_all_convs_both_numerics() {
-        let mut ws = Workspace::new(4);
+        let ws = Workspace::new(4);
         let mut rng = Rng::seed_from(29);
         for conv in ConvType::ALL {
             let engine = tiny_engine(conv, 600);
             let (g, x) = random_graph_and_x(&mut rng, 60, 6);
             let sg = ShardedGraph::build(g.view(), 8, 4);
             assert_eq!(
-                engine.forward_sharded(&sg, &x, &mut ws).unwrap(),
+                engine.forward_sharded(&sg, &x, &ws).unwrap(),
                 engine.forward(&g, &x).unwrap(),
                 "{conv:?} f32"
             );
             assert_eq!(
-                engine.forward_sharded_fixed(&sg, &x, &mut ws).unwrap(),
+                engine.forward_sharded_fixed(&sg, &x, &ws).unwrap(),
                 engine.forward_fixed(&g, &x).unwrap(),
                 "{conv:?} fixed"
             );
@@ -390,13 +385,13 @@ mod tests {
     #[test]
     fn rejects_bad_feature_len_and_oversized_graphs() {
         let engine = tiny_engine(ConvType::Gcn, 10);
-        let mut ws = Workspace::single();
+        let ws = Workspace::single();
         let g = Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3)]);
         let sg = ShardedGraph::build(g.view(), 2, 0);
-        assert!(engine.forward_sharded(&sg, &[0.0; 5], &mut ws).is_err());
+        assert!(engine.forward_sharded(&sg, &[0.0; 5], &ws).is_err());
         let big = Graph::from_coo(30, &[]);
         let sgb = ShardedGraph::build(big.view(), 2, 0);
         let xb = vec![0.0; 30 * 6];
-        assert!(engine.forward_sharded(&sgb, &xb, &mut ws).is_err());
+        assert!(engine.forward_sharded(&sgb, &xb, &ws).is_err());
     }
 }

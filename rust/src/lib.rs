@@ -15,9 +15,20 @@
 //!   ([`runtime`]), baselines ([`baselines`]), the fixed/float testbench
 //!   ([`testbench`]), and the serving coordinator ([`coordinator`]).
 //!
-//! The serving/batch path runs end-to-end on packed batches:
-//! request → [`coordinator`] batcher → [`graph::GraphBatch`] arena →
-//! [`engine::Engine::forward_batch`] over per-worker zero-alloc
+//! Inference has ONE public entry point: the typed [`session`] API.
+//! [`session::Session::builder`] takes an [`engine::Engine`], a
+//! [`session::Precision`] (f32 / ap_fixed / auto), an
+//! [`session::ExecutionPlan`] (single / batched / sharded / auto), and a
+//! deployed graph, and resolves the execution path once; `run` /
+//! `run_batch` are the only inference calls. Every path is
+//! **bit-identical** for a given precision (swept by the cross-path
+//! conformance matrix in `tests/conformance.rs` and the session
+//! property suite in `tests/session.rs`), so the framework — not the
+//! caller — owns path selection, GenGNN-style.
+//!
+//! Under the hood, the serving/batch path runs end-to-end on packed
+//! batches: request → [`coordinator`] batcher → [`graph::GraphBatch`]
+//! arena → the engine's packed-batch runner over per-worker zero-alloc
 //! [`engine::Workspace`]s (parallelized via [`util::pool::par_map`] on a
 //! persistent parked worker pool), with per-graph [`graph::GraphView`]s
 //! keeping batched outputs bit-identical to the single-graph path.
@@ -27,15 +38,14 @@
 //! (citation/social graphs): [`partition`] grows a seeded K-way
 //! [`partition::ShardPlan`] (K adaptive via [`partition::adaptive_k`]
 //! unless pinned), extracts [`partition::Subgraph`]s with 1-hop halo
-//! (ghost) nodes, and [`engine::Engine::forward_sharded`] runs each
-//! layer shard-parallel with a parallel halo exchange between
-//! supersteps — bit-identical to the whole-graph forward for both
-//! numerics (swept by the cross-path conformance matrix in
-//! `tests/conformance.rs`). The [`coordinator`] routes requests over a
-//! node-count threshold through it ([`coordinator::ShardPolicy`]),
-//! serving shard plans from a topology-hash-keyed LRU
-//! [`coordinator::PlanCache`] so repeated inference over one deployed
-//! topology partitions exactly once.
+//! (ghost) nodes, and the engine's sharded runner executes each layer
+//! shard-parallel with a parallel halo exchange between supersteps.
+//! A sharded [`session::Session`] owns a [`session::DeployedGraph`]
+//! (graph + memoized topology hash) and resolves its plan once through
+//! the LRU [`coordinator::PlanCache`] (count- or byte-budget-bounded),
+//! so warm runs re-hash and re-partition nothing; the [`coordinator`]
+//! routes per-request graphs over a node-count threshold
+//! ([`session::ShardPolicy`]) through the same dispatcher.
 
 pub mod baselines;
 pub mod bench;
@@ -52,6 +62,7 @@ pub mod model;
 pub mod partition;
 pub mod perfmodel;
 pub mod runtime;
+pub mod session;
 pub mod testbench;
 pub mod util;
 

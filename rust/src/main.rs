@@ -2,19 +2,23 @@
 //! experiment regeneration, and the serving coordinator — the push-button
 //! CLI over the library (paper §III's end-to-end workflow).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use gnnbuilder::codegen::Project;
+use gnnbuilder::coordinator::PlanCache;
 use gnnbuilder::datasets;
 use gnnbuilder::dse;
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
 use gnnbuilder::experiments::{self, Options};
 use gnnbuilder::hls::{self, GraphStats};
-use gnnbuilder::coordinator::PlanCache;
 use gnnbuilder::model::space::DesignSpace;
 use gnnbuilder::model::{benchmark_config, ConvType, ModelConfig};
-use gnnbuilder::partition;
 use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
+use gnnbuilder::session::{
+    ExecutionPlan, Precision, ResolvedPath, Session, ShardK, ShardPolicy,
+};
 use gnnbuilder::util::cli::Args;
 
 const USAGE: &str = "gnnbuilder — generic GNN accelerator generation, simulation, and optimization
@@ -28,7 +32,8 @@ USAGE:
   gnnbuilder dse     [--budget N] [--max-bram N] [--conv ...] [--db-size N] [--seed N]
   gnnbuilder shard   [--dataset cora|pubmed|reddit] [--nodes N] [--k N (0 = adaptive)]
                      [--conv ...] [--hidden N] [--layers N] [--seed N]
-                                                              (partition + sharded inference)
+                     [--plan-cache-bytes N (0 = count-bounded cache)]
+                                            (Session-driven partition + sharded inference)
   gnnbuilder list                                             (artifacts in manifest)
 ";
 
@@ -242,6 +247,7 @@ fn cmd_shard() -> Result<()> {
     let conv = parse_conv(&args)?;
     let hidden = args.get_usize("hidden", 64)?;
     let layers = args.get_usize("layers", 2)?;
+    let cache_bytes = args.get_usize("plan-cache-bytes", 0)?;
     args.reject_unknown()?;
 
     println!("generating a {name}-profile citation graph at {nodes} nodes…");
@@ -253,38 +259,6 @@ fn cmd_shard() -> Result<()> {
         g.num_edges,
         g.mean_degree(),
         ng.num_classes
-    );
-
-    let k = if k_arg == 0 {
-        let ak = partition::adaptive_k(
-            g.num_nodes,
-            g.num_edges,
-            gnnbuilder::util::pool::default_threads(),
-        );
-        println!("adaptive K = {ak} (node count / degree / core count derived)");
-        ak
-    } else {
-        k_arg
-    };
-
-    // plans come from the serving plan cache: the first request pays the
-    // partition, repeats pay a topology hash + map hit
-    let cache = PlanCache::with_capacity(8);
-    let t0 = std::time::Instant::now();
-    let sg = cache.get_or_build(g.view(), k, seed);
-    let part_s = t0.elapsed().as_secs_f64();
-    let t0 = std::time::Instant::now();
-    let _warm = cache.get_or_build(g.view(), k, seed);
-    let warm_s = t0.elapsed().as_secs_f64();
-    let (max_s, min_s) = sg.plan.shard_sizes();
-    println!(
-        "partitioned into K={} in {:.1} ms (cached re-request {:.3} ms): \
-         shard sizes [{min_s}..{max_s}], cut fraction {:.3}, halo fraction {:.3}",
-        sg.k(),
-        part_s * 1e3,
-        warm_s * 1e3,
-        sg.cut_fraction(),
-        sg.halo_fraction()
     );
 
     let cfg = ModelConfig {
@@ -303,22 +277,80 @@ fn cmd_shard() -> Result<()> {
     };
     let weights = synth_weights(&cfg, seed);
     let engine = Engine::new(cfg, &weights, stats.mean_degree)?;
-    let mut ws = Workspace::with_default_threads();
+
+    // shard plans come from a serving plan cache — count-bounded by
+    // default, byte-budgeted with --plan-cache-bytes
+    let cache = Arc::new(if cache_bytes > 0 {
+        println!("plan cache: byte budget {cache_bytes} B (node-weighted estimates)");
+        PlanCache::with_byte_budget(cache_bytes)
+    } else {
+        PlanCache::with_capacity(8)
+    });
+    let ws = Arc::new(Workspace::with_default_threads());
+    let shard_k = if k_arg == 0 { ShardK::Auto } else { ShardK::Fixed(k_arg) };
+
+    // the push-button entry: one builder per execution plan, the
+    // framework resolves K / plan / workspace
+    let single = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Single)
+        .workspace(ws.clone())
+        .graph(ng.graph.clone())
+        .build()?;
+    let session = Session::builder(engine)
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Sharded { k: shard_k, plan: None })
+        .shard_policy(ShardPolicy { seed, ..ShardPolicy::default() })
+        .plan_cache(cache.clone())
+        .workspace(ws)
+        .graph(ng.graph.clone())
+        .build()?;
+    let ResolvedPath::Sharded { k } = session.resolved_path() else {
+        bail!("sharded session resolved to the whole-graph path");
+    };
+    if k_arg == 0 {
+        println!("adaptive K = {k} (node count / degree / core count derived)");
+    }
 
     let t0 = std::time::Instant::now();
-    let whole = engine.forward(g, &ng.x)?;
+    let whole = single.run(&ng.x)?;
     let whole_s = t0.elapsed().as_secs_f64();
+
+    // cold run pays hash + partition + forward; warm runs pay forward only
     let t0 = std::time::Instant::now();
-    let sharded = engine.forward_sharded(&sg, &ng.x, &mut ws)?;
-    let shard_s = t0.elapsed().as_secs_f64();
+    let sharded = session.run(&ng.x)?;
+    let cold_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let warm = session.run(&ng.x)?;
+    let warm_s = t0.elapsed().as_secs_f64();
+
+    let sg = session.shard_plan().expect("sharded session has a plan after running");
+    let (max_s, min_s) = sg.plan.shard_sizes();
     println!(
-        "whole-graph forward: {:.1} ms | sharded (K={}): {:.1} ms | speedup {:.2}x",
+        "partitioned into K={}: shard sizes [{min_s}..{max_s}], cut fraction {:.3}, \
+         halo fraction {:.3}, ~{} KiB cached",
+        sg.k(),
+        sg.cut_fraction(),
+        sg.halo_fraction(),
+        PlanCache::estimate_plan_bytes(g.num_nodes, g.num_edges, sg.k()) / 1024
+    );
+    println!(
+        "whole-graph forward: {:.1} ms | sharded (K={}) cold: {:.1} ms, warm: {:.1} ms \
+         | warm speedup vs whole {:.2}x",
         whole_s * 1e3,
         sg.k(),
-        shard_s * 1e3,
-        whole_s / shard_s.max(1e-12)
+        cold_s * 1e3,
+        warm_s * 1e3,
+        whole_s / warm_s.max(1e-12)
     );
-    if sharded == whole {
+    println!(
+        "deployed-graph warm path: topology hashed {}x (memoized), cache-side hashes {}, \
+         partitions {} (zero re-hash / re-partition after the first run)",
+        session.deployed().hash_computes(),
+        cache.stats().hash_computes.load(std::sync::atomic::Ordering::Relaxed),
+        cache.stats().builds.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    if sharded == whole && warm == whole {
         println!("outputs bit-identical: yes");
         Ok(())
     } else {

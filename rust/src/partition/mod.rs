@@ -20,8 +20,8 @@
 //!   bit-identical to the whole-graph forward (aggregation is a
 //!   sequential fold over the neighbor list).
 //! - [`ShardedGraph`] — the plan + extracted shards + precomputed
-//!   halo-exchange routes, the unit the engine's sharded forward
-//!   (`Engine::forward_sharded`) consumes.
+//!   halo-exchange routes, the unit the engine's sharded runner (reached
+//!   through a sharded [`crate::session::Session`]) consumes.
 //!
 //! Local node ids within a shard are: owned nodes first (ascending global
 //! id), then halo nodes (ascending global id). A shard's local [`Graph`]

@@ -1,0 +1,909 @@
+//! Unified inference API — the single typed entry point over every
+//! execution path (single / batched / sharded) × precision (f32 /
+//! ap_fixed), replacing the old `forward_*` zoo of public engine
+//! methods.
+//!
+//! The shape follows the framework's push-button promise (and GenGNN's
+//! argument that path selection belongs in the framework, not the user):
+//! callers declare *what* to run — a model ([`Engine`]), a [`Precision`],
+//! an [`ExecutionPlan`] — and the session resolves *how* to run it:
+//!
+//! ```text
+//! let session = Session::builder(engine)
+//!     .precision(Precision::Auto)      // F32 | ApFixed | Auto (config)
+//!     .plan(ExecutionPlan::Auto)       // Single | Batched | Sharded | Auto
+//!     .graph(graph)                    // the deployed topology
+//!     .build()?;
+//! let y  = session.run(&x)?;           // one feature set
+//! let ys = session.run_batch(&xs)?;    // many feature sets, one topology
+//! ```
+//!
+//! A [`Session`] owns a [`DeployedGraph`] — the graph plus a **memoized**
+//! [`topology_hash`] — so a warm `run` on a sharded session performs
+//! zero re-hashes and zero re-partitions: the hash is computed once per
+//! deployed graph, the shard plan is resolved once (through the shared
+//! [`PlanCache`] via [`PlanCache::get_or_build_hashed`], which skips the
+//! cache-side hash entirely) and pinned for the session's lifetime.
+//! All paths produce **bit-identical** outputs for a given precision
+//! (the cross-path conformance matrix in `tests/conformance.rs` and the
+//! session property suite in `tests/session.rs` enforce it), so plan
+//! resolution can never change an answer.
+//!
+//! The serving coordinator routes through the same machinery: its
+//! `EngineBackend` wraps a `Dispatcher` — the floating (per-request)
+//! twin of a deployed session that re-resolves the path per graph —
+//! so the framework has exactly one path-selection implementation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{PlanCache, ShardStats};
+use crate::engine::{Engine, Workspace};
+use crate::graph::{Graph, GraphBatch, GraphView};
+use crate::model::{FixedPointFormat, Numerics};
+use crate::partition::{adaptive_k, topology_hash, ShardedGraph};
+
+/// Numerics selection for a session: explicit, or deferred to the model
+/// config's [`Numerics`] (`Auto`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// IEEE f32 compute (the CPP-CPU baseline numerics).
+    F32,
+    /// True ap_fixed<W,I> quantized compute per the config's `fpx`.
+    ApFixed,
+    /// Follow `ModelConfig::numerics`.
+    #[default]
+    Auto,
+}
+
+impl Precision {
+    /// Resolve against a model config.
+    pub fn resolve(self, numerics: Numerics) -> Numerics {
+        match self {
+            Precision::F32 => Numerics::Float,
+            Precision::ApFixed => Numerics::Fixed,
+            Precision::Auto => numerics,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::ApFixed => "fixed",
+            Precision::Auto => "auto",
+        }
+    }
+}
+
+/// Shard-count selection: adaptive by default, pinnable for deployments
+/// that tuned a specific K.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardK {
+    /// derive K per graph from node count, average degree, and the
+    /// worker-pool core count ([`adaptive_k`])
+    Auto,
+    /// always partition into exactly this many shards
+    Fixed(usize),
+}
+
+/// When and how large graphs take the sharded path (requests at or above
+/// `min_nodes` dispatch through [`crate::partition`] instead of the
+/// whole-graph forward), plus the partitioner seed.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPolicy {
+    /// node count at which a request takes the sharded path
+    pub min_nodes: usize,
+    /// shard count for the partitioner (adaptive unless pinned)
+    pub k: ShardK,
+    /// partitioner seed (deterministic plans per deployment)
+    pub seed: u64,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> Self {
+        ShardPolicy {
+            min_nodes: 4096,
+            k: ShardK::Auto,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl ShardPolicy {
+    /// Resolve the shard count for one graph under this policy.
+    pub fn resolve_k(&self, g: &GraphView<'_>) -> usize {
+        match self.k {
+            ShardK::Fixed(k) => k,
+            ShardK::Auto => {
+                adaptive_k(g.num_nodes, g.num_edges, crate::util::pool::default_threads())
+            }
+        }
+    }
+}
+
+/// Execution-path selection. Every path is bit-identical for a given
+/// precision; the variants trade setup cost, memory, and parallelism
+/// shape — which is exactly why the choice belongs to the framework
+/// (`Auto`) unless a deployment pins it.
+#[derive(Debug, Clone, Default)]
+pub enum ExecutionPlan {
+    /// One feature set at a time through the whole-graph forward;
+    /// `run_batch` degrades to a serial loop.
+    Single,
+    /// `run_batch` parallelizes feature sets across `workspace` scratch
+    /// slots (0 = one per hardware thread). Ignored when the builder
+    /// shares an explicit workspace via
+    /// [`SessionBuilder::workspace`] — the shared workspace's slot
+    /// count wins.
+    Batched { workspace: usize },
+    /// Intra-graph parallelism: partition the deployed graph into `k`
+    /// shards. `plan` optionally pins a pre-built [`ShardedGraph`];
+    /// otherwise the plan is resolved once through the session's
+    /// [`PlanCache`] using the deployed graph's memoized hash.
+    Sharded {
+        k: ShardK,
+        plan: Option<Arc<ShardedGraph>>,
+    },
+    /// Let the framework choose from graph stats + [`ShardPolicy`]:
+    /// graphs at or above `min_nodes` whose resolved K exceeds 1 go
+    /// sharded, everything else takes the whole-graph path with
+    /// parallel `run_batch`.
+    #[default]
+    Auto,
+}
+
+impl ExecutionPlan {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecutionPlan::Single => "single",
+            ExecutionPlan::Batched { .. } => "batched",
+            ExecutionPlan::Sharded { .. } => "sharded",
+            ExecutionPlan::Auto => "auto",
+        }
+    }
+}
+
+/// A deployed topology: the graph plus its **memoized** content hash.
+/// The hash is computed at most once per handle no matter how many runs,
+/// sessions, or cache lookups consume it — the O(1)-warm-lookup half of
+/// the plan-cache story ([`PlanCache::get_or_build_hashed`] is the other
+/// half). [`DeployedGraph::hash_computes`] counts actual hash
+/// computations so tests can assert "zero re-hashes on warm hits".
+#[derive(Debug)]
+pub struct DeployedGraph {
+    graph: Arc<Graph>,
+    hash: OnceLock<u64>,
+    computes: AtomicU64,
+}
+
+impl DeployedGraph {
+    pub fn new(graph: impl Into<Arc<Graph>>) -> DeployedGraph {
+        DeployedGraph {
+            graph: graph.into(),
+            hash: OnceLock::new(),
+            computes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn view(&self) -> GraphView<'_> {
+        self.graph.view()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.graph.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.graph.num_edges
+    }
+
+    /// The memoized [`topology_hash`] — computed on first use, then free.
+    pub fn topology_hash(&self) -> u64 {
+        *self.hash.get_or_init(|| {
+            self.computes.fetch_add(1, Ordering::Relaxed);
+            topology_hash(self.graph.view())
+        })
+    }
+
+    /// How many times the hash was actually computed (0 or 1 — asserted
+    /// by the warm-path tests).
+    pub fn hash_computes(&self) -> u64 {
+        self.computes.load(Ordering::Relaxed)
+    }
+}
+
+/// The execution path a session resolved to at build time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolvedPath {
+    /// whole-graph forward (single or batched `run_batch` parallelism)
+    Whole,
+    /// partitioned forward at this shard count
+    Sharded { k: usize },
+}
+
+enum Path {
+    Whole { parallel_batch: bool },
+    Sharded {
+        k: usize,
+        plan: OnceLock<Arc<ShardedGraph>>,
+    },
+}
+
+/// Builder for [`Session`] (and, via the coordinator's
+/// `BackendSpec::session`, for per-request backend dispatchers).
+pub struct SessionBuilder {
+    pub(crate) engine: Engine,
+    pub(crate) precision: Precision,
+    pub(crate) plan: ExecutionPlan,
+    pub(crate) policy: ShardPolicy,
+    pub(crate) plan_cache: Option<Arc<PlanCache>>,
+    pub(crate) workspace: Option<Arc<Workspace>>,
+    pub(crate) graph: Option<DeployedGraph>,
+}
+
+impl SessionBuilder {
+    /// Numerics selection (default: [`Precision::Auto`]).
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    /// Execution-path selection (default: [`ExecutionPlan::Auto`]).
+    pub fn plan(mut self, p: ExecutionPlan) -> Self {
+        self.plan = p;
+        self
+    }
+
+    /// Sharding policy consulted by `Auto` plans and by `Sharded` plans
+    /// with [`ShardK::Auto`]; also supplies the partitioner seed.
+    pub fn shard_policy(mut self, p: ShardPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Share a shard-plan cache across sessions (one topology served by
+    /// many sessions partitions once). Default: a session-private cache.
+    pub fn plan_cache(mut self, c: Arc<PlanCache>) -> Self {
+        self.plan_cache = Some(c);
+        self
+    }
+
+    /// Share a scratch workspace across sessions (warm zero-alloc
+    /// buffers). Default: a session-private workspace.
+    pub fn workspace(mut self, ws: Arc<Workspace>) -> Self {
+        self.workspace = Some(ws);
+        self
+    }
+
+    /// The topology this session serves (required by [`Self::build`]).
+    pub fn graph(mut self, g: impl Into<Arc<Graph>>) -> Self {
+        self.graph = Some(DeployedGraph::new(g));
+        self
+    }
+
+    /// Resolved numerics + quantization format of this builder.
+    fn resolve_numerics(&self) -> (Numerics, Option<FixedPointFormat>) {
+        let numerics = self.precision.resolve(self.engine.cfg.numerics);
+        let q = match numerics {
+            Numerics::Float => None,
+            Numerics::Fixed => Some(self.engine.cfg.fpx),
+        };
+        (numerics, q)
+    }
+
+    /// Resolved scratch workspace: an explicitly shared one wins,
+    /// otherwise a `Batched { workspace > 0 }` plan sizes a private one,
+    /// otherwise one slot per hardware thread.
+    fn resolve_workspace(explicit: Option<Arc<Workspace>>, plan: &ExecutionPlan) -> Arc<Workspace> {
+        match (explicit, plan) {
+            (Some(ws), _) => ws,
+            (None, ExecutionPlan::Batched { workspace }) if *workspace > 0 => {
+                Arc::new(Workspace::new(*workspace))
+            }
+            (None, _) => Arc::new(Workspace::with_default_threads()),
+        }
+    }
+
+    /// Resolve precision and execution path against the deployed graph
+    /// and produce the session handle.
+    pub fn build(self) -> Result<Session> {
+        let (numerics, q) = self.resolve_numerics();
+        let graph = match self.graph {
+            Some(g) => g,
+            None => {
+                return Err(anyhow!(
+                    "Session::builder requires a deployed graph — call .graph(g) before .build()"
+                ))
+            }
+        };
+        let ws = Self::resolve_workspace(self.workspace, &self.plan);
+        let plans = self
+            .plan_cache
+            .unwrap_or_else(|| Arc::new(PlanCache::default()));
+        // clamp like the partitioner does, so resolved_path(), the plan
+        // cache key, and the built plan always agree on K
+        let clamp = |k: usize| k.clamp(1, graph.num_nodes().max(1));
+        let path = match &self.plan {
+            ExecutionPlan::Single => Path::Whole {
+                parallel_batch: false,
+            },
+            ExecutionPlan::Batched { .. } => Path::Whole {
+                parallel_batch: true,
+            },
+            ExecutionPlan::Sharded { k, plan } => {
+                let k = match k {
+                    ShardK::Fixed(v) => clamp(*v),
+                    ShardK::Auto => clamp(self.policy.resolve_k(&graph.view())),
+                };
+                let cell = OnceLock::new();
+                if let Some(p) = plan {
+                    let _ = cell.set(p.clone());
+                }
+                Path::Sharded { k, plan: cell }
+            }
+            ExecutionPlan::Auto => {
+                let v = graph.view();
+                let k = if v.num_nodes >= self.policy.min_nodes {
+                    clamp(self.policy.resolve_k(&v))
+                } else {
+                    1
+                };
+                if k > 1 {
+                    Path::Sharded {
+                        k,
+                        plan: OnceLock::new(),
+                    }
+                } else {
+                    Path::Whole {
+                        parallel_batch: true,
+                    }
+                }
+            }
+        };
+        Ok(Session {
+            engine: self.engine,
+            numerics,
+            q,
+            seed: self.policy.seed,
+            plans,
+            ws,
+            graph,
+            path,
+        })
+    }
+
+    /// Lower the builder into a floating per-request `Dispatcher` for
+    /// the serving coordinator: no deployed graph; the path is
+    /// re-resolved per request. `fallback_cache` (the coordinator's
+    /// shared `Metrics::plan_cache`) is used unless the builder pinned
+    /// its own cache; `stats` receives per-dispatch shard records.
+    ///
+    /// Errors on a pinned `Sharded { plan: Some(_) }` — a pre-built plan
+    /// is tied to one deployed topology, which a per-request backend
+    /// does not have; resolving plans from the cache is the only
+    /// meaningful floating behavior (silently dropping the pinned plan
+    /// would re-partition the very topology the caller pre-built for).
+    pub(crate) fn into_dispatcher(
+        self,
+        stats: Option<Arc<ShardStats>>,
+        fallback_cache: Arc<PlanCache>,
+    ) -> Result<Dispatcher> {
+        if let ExecutionPlan::Sharded { plan: Some(_), .. } = &self.plan {
+            return Err(anyhow!(
+                "a pinned shard plan requires a deployed Session (builder .graph(..).build()); \
+                 per-request backends resolve plans from the shared cache — \
+                 use ExecutionPlan::Sharded {{ plan: None, .. }}"
+            ));
+        }
+        let (_, q) = self.resolve_numerics();
+        let mut policy = self.policy;
+        // an explicit Sharded plan pins the policy's K so per-request
+        // resolution and the plan agree on the shard count
+        if let ExecutionPlan::Sharded { k, .. } = &self.plan {
+            policy.k = *k;
+        }
+        let ws = Self::resolve_workspace(self.workspace, &self.plan);
+        Ok(Dispatcher {
+            engine: self.engine,
+            q,
+            plan: self.plan,
+            policy,
+            plans: self.plan_cache.unwrap_or(fallback_cache),
+            ws,
+            stats,
+        })
+    }
+}
+
+/// A deployed inference handle: one engine, one precision, one resolved
+/// execution path, one [`DeployedGraph`]. The only public entry points
+/// to inference are [`Session::run`] and [`Session::run_batch`].
+///
+/// Sessions are `Sync`: `run` takes `&self`, so one session can serve
+/// concurrent callers (scratch slots are leased per worker internally).
+pub struct Session {
+    engine: Engine,
+    numerics: Numerics,
+    q: Option<FixedPointFormat>,
+    seed: u64,
+    plans: Arc<PlanCache>,
+    ws: Arc<Workspace>,
+    graph: DeployedGraph,
+    path: Path,
+}
+
+impl Session {
+    /// Start building a session for `engine`.
+    pub fn builder(engine: Engine) -> SessionBuilder {
+        SessionBuilder {
+            engine,
+            precision: Precision::default(),
+            plan: ExecutionPlan::default(),
+            policy: ShardPolicy::default(),
+            plan_cache: None,
+            workspace: None,
+            graph: None,
+        }
+    }
+
+    /// One inference over the deployed graph. `x` is
+    /// `num_nodes * graph_input_dim` node features.
+    pub fn run(&self, x: &[f32]) -> Result<Vec<f32>> {
+        match &self.path {
+            Path::Whole { .. } => self.engine.run_one(self.graph.view(), x, self.q, &self.ws),
+            Path::Sharded { .. } => {
+                let sg = self.shard_plan_or_build();
+                self.engine.sharded_run(&sg, x, self.q, &self.ws)
+            }
+        }
+    }
+
+    /// Many feature sets over the deployed graph — the node-level serving
+    /// pattern (one topology, fresh features per request). Outputs are
+    /// bit-identical to calling [`Session::run`] per feature set; the
+    /// `Batched`/`Auto` whole-graph path parallelizes across scratch
+    /// slots, `Single` runs serially, `Sharded` runs each set through the
+    /// (internally parallel) partitioned forward.
+    pub fn run_batch<S: AsRef<[f32]> + Sync>(&self, xs: &[S]) -> Result<Vec<Vec<f32>>> {
+        match &self.path {
+            Path::Whole { parallel_batch: true } => self
+                .engine
+                .run_many(self.graph.view(), xs, self.q, &self.ws)
+                .into_iter()
+                .collect(),
+            Path::Whole { parallel_batch: false } => {
+                xs.iter().map(|x| self.run(x.as_ref())).collect()
+            }
+            Path::Sharded { .. } => xs.iter().map(|x| self.run(x.as_ref())).collect(),
+        }
+    }
+
+    /// Resolve the execution plan eagerly: a sharded session hashes and
+    /// partitions now instead of on its first [`Session::run`] — the
+    /// deployment warmup hook. Idempotent; a no-op on whole-graph paths.
+    pub fn prepare(&self) {
+        if matches!(self.path, Path::Sharded { .. }) {
+            let _ = self.shard_plan_or_build();
+        }
+    }
+
+    /// The deployed-graph handle (memoized hash + hash-compute counter).
+    pub fn deployed(&self) -> &DeployedGraph {
+        &self.graph
+    }
+
+    /// The numerics this session resolved to.
+    pub fn numerics(&self) -> Numerics {
+        self.numerics
+    }
+
+    /// The execution path this session resolved to at build time.
+    pub fn resolved_path(&self) -> ResolvedPath {
+        match &self.path {
+            Path::Whole { .. } => ResolvedPath::Whole,
+            Path::Sharded { k, .. } => ResolvedPath::Sharded { k: *k },
+        }
+    }
+
+    /// The resolved shard plan, if the session is sharded and has run
+    /// (or was built with a pinned plan).
+    pub fn shard_plan(&self) -> Option<Arc<ShardedGraph>> {
+        match &self.path {
+            Path::Sharded { plan, .. } => plan.get().cloned(),
+            Path::Whole { .. } => None,
+        }
+    }
+
+    /// The session's plan cache (shared or private).
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plans
+    }
+
+    /// Resolve (once) and return the shard plan: the deployed graph's
+    /// memoized hash feeds [`PlanCache::get_or_build_hashed`], so a warm
+    /// call re-hashes nothing and re-partitions nothing.
+    fn shard_plan_or_build(&self) -> Arc<ShardedGraph> {
+        match &self.path {
+            Path::Sharded { k, plan } => plan
+                .get_or_init(|| {
+                    let h = self.graph.topology_hash();
+                    self.plans
+                        .get_or_build_hashed(h, self.graph.view(), *k, self.seed)
+                })
+                .clone(),
+            Path::Whole { .. } => unreachable!("shard_plan_or_build on a whole-graph session"),
+        }
+    }
+}
+
+/// The floating (per-request) twin of a [`Session`]: same engine /
+/// precision / plan / policy, but no deployed graph — the execution path
+/// is re-resolved per request. This is the serving coordinator's
+/// `EngineBackend` core, so the framework has exactly one
+/// path-selection implementation.
+pub(crate) struct Dispatcher {
+    pub(crate) engine: Engine,
+    q: Option<FixedPointFormat>,
+    plan: ExecutionPlan,
+    pub(crate) policy: ShardPolicy,
+    pub(crate) plans: Arc<PlanCache>,
+    ws: Arc<Workspace>,
+    stats: Option<Arc<ShardStats>>,
+}
+
+impl Dispatcher {
+    /// Resolved shard count when this graph should take the sharded path
+    /// under the dispatcher's plan + policy.
+    pub(crate) fn route(&self, g: &GraphView<'_>) -> Option<usize> {
+        match &self.plan {
+            ExecutionPlan::Single | ExecutionPlan::Batched { .. } => None,
+            ExecutionPlan::Sharded { .. } | ExecutionPlan::Auto => {
+                if g.num_nodes < self.policy.min_nodes {
+                    return None;
+                }
+                let k = self.policy.resolve_k(g);
+                (k > 1).then_some(k)
+            }
+        }
+    }
+
+    /// Infer one graph (a standalone view or one batch slot).
+    pub(crate) fn infer_view(&self, g: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
+        match self.route(&g) {
+            Some(k) => {
+                // plan served from the cache: repeated inference over one
+                // topology partitions exactly once, and concurrent first
+                // requests collapse into a single build
+                let sg = self.plans.get_or_build(g, k, self.policy.seed);
+                if let Some(stats) = &self.stats {
+                    stats.record(&sg);
+                }
+                self.engine.sharded_run(&sg, x, self.q, &self.ws)
+            }
+            None => self.engine.run_one(g, x, self.q, &self.ws),
+        }
+    }
+
+    /// Infer a whole packed batch: over-threshold graphs go through the
+    /// sharded path, the rest keep the warm parallel batch runner.
+    pub(crate) fn infer_batch(&self, batch: &GraphBatch) -> Vec<Result<Vec<f32>>> {
+        // fast path: nothing routes sharded → whole dispatch through the
+        // packed batch runner
+        let any_big = (0..batch.len()).any(|i| self.route(&batch.view(i)).is_some());
+        if !any_big {
+            return self.engine.batch_run(batch, self.q, &self.ws);
+        }
+        // mixed dispatch: sharded graphs run individually; the rest are
+        // repacked so they keep the parallel batch runner instead of
+        // degrading to serial per-graph calls
+        let mut results: Vec<Option<Result<Vec<f32>>>> = (0..batch.len()).map(|_| None).collect();
+        let mut small = GraphBatch::new();
+        let mut small_idx: Vec<usize> = Vec::new();
+        for i in 0..batch.len() {
+            let view = batch.view(i);
+            if self.route(&view).is_some() {
+                results[i] = Some(self.infer_view(view, batch.x_view(i)));
+            } else {
+                small_idx.push(i);
+                small.push_view(view, batch.x_view(i));
+            }
+        }
+        if !small.is_empty() {
+            let small_results = self.engine.batch_run(&small, self.q, &self.ws);
+            for (j, r) in small_results.into_iter().enumerate() {
+                results[small_idx[j]] = Some(r);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every batch slot routed"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::synth_weights;
+    use crate::model::{ConvType, ModelConfig};
+    use crate::util::rng::Rng;
+
+    fn tiny_engine(numerics: Numerics) -> Engine {
+        let cfg = ModelConfig {
+            name: "session_tiny".into(),
+            graph_input_dim: 5,
+            gnn_conv: ConvType::Sage,
+            gnn_hidden_dim: 6,
+            gnn_out_dim: 5,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 4,
+            mlp_num_layers: 1,
+            output_dim: 2,
+            numerics,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 3);
+        Engine::new(cfg, &weights, 2.2).unwrap()
+    }
+
+    fn random_graph_and_x(seed: u64, n: usize, dim: usize) -> (Graph, Vec<f32>) {
+        let mut rng = Rng::seed_from(seed);
+        let e = rng.range(0, n * 3);
+        let edges: Vec<(u32, u32)> = (0..e)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+            .collect();
+        let x: Vec<f32> = (0..n * dim)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        (Graph::from_coo(n, &edges), x)
+    }
+
+    #[test]
+    fn builder_without_a_graph_is_an_error() {
+        let engine = tiny_engine(Numerics::Float);
+        assert!(Session::builder(engine).build().is_err());
+    }
+
+    #[test]
+    fn precision_auto_follows_the_config() {
+        let (g, _) = random_graph_and_x(1, 10, 5);
+        let f = Session::builder(tiny_engine(Numerics::Float))
+            .graph(g.clone())
+            .build()
+            .unwrap();
+        assert_eq!(f.numerics(), Numerics::Float);
+        let q = Session::builder(tiny_engine(Numerics::Fixed))
+            .graph(g)
+            .build()
+            .unwrap();
+        assert_eq!(q.numerics(), Numerics::Fixed);
+    }
+
+    #[test]
+    fn auto_plan_keeps_small_graphs_whole_and_shards_large_ones() {
+        let engine = tiny_engine(Numerics::Float);
+        let (small, _) = random_graph_and_x(2, 12, 5);
+        let s = Session::builder(engine.clone())
+            .plan(ExecutionPlan::Auto)
+            .graph(small)
+            .build()
+            .unwrap();
+        assert_eq!(s.resolved_path(), ResolvedPath::Whole);
+
+        let (big, _) = random_graph_and_x(3, 64, 5);
+        let s = Session::builder(engine)
+            .plan(ExecutionPlan::Auto)
+            .shard_policy(ShardPolicy {
+                min_nodes: 32,
+                k: ShardK::Fixed(4),
+                seed: 7,
+            })
+            .graph(big)
+            .build()
+            .unwrap();
+        assert_eq!(s.resolved_path(), ResolvedPath::Sharded { k: 4 });
+    }
+
+    /// The resolved K, the plan-cache key, and the built plan must agree
+    /// even when the requested K exceeds the node count.
+    #[test]
+    fn sharded_k_is_clamped_to_node_count_at_build() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, x) = random_graph_and_x(9, 3, 5);
+        let cache = Arc::new(PlanCache::with_capacity(4));
+        let s = Session::builder(engine.clone())
+            .plan(ExecutionPlan::Sharded {
+                k: ShardK::Fixed(10),
+                plan: None,
+            })
+            .plan_cache(cache.clone())
+            .graph(g.clone())
+            .build()
+            .unwrap();
+        assert_eq!(s.resolved_path(), ResolvedPath::Sharded { k: 3 });
+        s.run(&x).unwrap();
+        assert_eq!(s.shard_plan().unwrap().k(), 3);
+        // an explicit Fixed(3) session on the same cache shares the entry
+        let s3 = Session::builder(engine)
+            .plan(ExecutionPlan::Sharded {
+                k: ShardK::Fixed(3),
+                plan: None,
+            })
+            .plan_cache(cache.clone())
+            .graph(g)
+            .build()
+            .unwrap();
+        s3.run(&x).unwrap();
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+    }
+
+    /// `prepare` resolves a sharded session's plan eagerly (warmup); the
+    /// first `run` then performs no plan work at all.
+    #[test]
+    fn prepare_resolves_the_plan_before_the_first_run() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, x) = random_graph_and_x(10, 20, 5);
+        let cache = Arc::new(PlanCache::with_capacity(4));
+        let s = Session::builder(engine)
+            .plan(ExecutionPlan::Sharded {
+                k: ShardK::Fixed(2),
+                plan: None,
+            })
+            .plan_cache(cache.clone())
+            .graph(g)
+            .build()
+            .unwrap();
+        assert!(s.shard_plan().is_none());
+        s.prepare();
+        assert!(s.shard_plan().is_some());
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+        s.run(&x).unwrap();
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+        s.prepare(); // idempotent
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+    }
+
+    /// A pinned plan is a deployed-session concept: lowering a builder
+    /// that carries one into a per-request dispatcher is an error, not a
+    /// silent re-partition.
+    #[test]
+    fn pinned_plan_is_rejected_for_per_request_backends() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, _) = random_graph_and_x(11, 20, 5);
+        let sg = Arc::new(ShardedGraph::build(g.view(), 2, 1));
+        let err = Session::builder(engine)
+            .plan(ExecutionPlan::Sharded {
+                k: ShardK::Fixed(2),
+                plan: Some(sg),
+            })
+            .into_dispatcher(None, Arc::new(PlanCache::with_capacity(2)));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn deployed_graph_hashes_exactly_once() {
+        let (g, _) = random_graph_and_x(4, 30, 5);
+        let d = DeployedGraph::new(g.clone());
+        assert_eq!(d.hash_computes(), 0);
+        let h = d.topology_hash();
+        assert_eq!(h, topology_hash(g.view()));
+        for _ in 0..5 {
+            assert_eq!(d.topology_hash(), h);
+        }
+        assert_eq!(d.hash_computes(), 1);
+    }
+
+    #[test]
+    fn warm_sharded_runs_do_zero_rehashes_and_zero_repartitions() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, x) = random_graph_and_x(5, 40, 5);
+        let cache = Arc::new(PlanCache::with_capacity(4));
+        let session = Session::builder(engine)
+            .plan(ExecutionPlan::Sharded {
+                k: ShardK::Fixed(3),
+                plan: None,
+            })
+            .plan_cache(cache.clone())
+            .graph(g)
+            .build()
+            .unwrap();
+        let first = session.run(&x).unwrap();
+        for _ in 0..4 {
+            assert_eq!(session.run(&x).unwrap(), first);
+        }
+        // one hash (memoized on the deployed graph), one partition, and
+        // the cache itself never hashed at all (the session hands it the
+        // precomputed hash)
+        assert_eq!(session.deployed().hash_computes(), 1);
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats().hash_computes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pinned_plan_is_used_without_touching_the_cache() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, x) = random_graph_and_x(6, 30, 5);
+        let sg = Arc::new(ShardedGraph::build(g.view(), 2, 9));
+        let cache = Arc::new(PlanCache::with_capacity(4));
+        let session = Session::builder(engine)
+            .plan(ExecutionPlan::Sharded {
+                k: ShardK::Fixed(2),
+                plan: Some(sg.clone()),
+            })
+            .plan_cache(cache.clone())
+            .graph(g)
+            .build()
+            .unwrap();
+        session.run(&x).unwrap();
+        assert!(Arc::ptr_eq(&session.shard_plan().unwrap(), &sg));
+        assert_eq!(cache.stats().snapshot(), (0, 0, 0, 0));
+        assert_eq!(session.deployed().hash_computes(), 0);
+    }
+
+    #[test]
+    fn sessions_share_one_plan_through_a_shared_cache() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, x) = random_graph_and_x(7, 36, 5);
+        let cache = Arc::new(PlanCache::with_capacity(4));
+        let mk = || {
+            Session::builder(engine.clone())
+                .plan(ExecutionPlan::Sharded {
+                    k: ShardK::Fixed(3),
+                    plan: None,
+                })
+                .plan_cache(cache.clone())
+                .graph(g.clone())
+                .build()
+                .unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        let ya = a.run(&x).unwrap();
+        let yb = b.run(&x).unwrap();
+        assert_eq!(ya, yb);
+        assert!(Arc::ptr_eq(
+            &a.shard_plan().unwrap(),
+            &b.shard_plan().unwrap()
+        ));
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn run_batch_matches_run_per_feature_set_on_every_plan() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, x) = random_graph_and_x(8, 24, 5);
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|i| x.iter().map(|v| v + i as f32 * 0.25).collect())
+            .collect();
+        for plan in [
+            ExecutionPlan::Single,
+            ExecutionPlan::Batched { workspace: 3 },
+            ExecutionPlan::Sharded {
+                k: ShardK::Fixed(2),
+                plan: None,
+            },
+            ExecutionPlan::Auto,
+        ] {
+            let session = Session::builder(engine.clone())
+                .plan(plan.clone())
+                .graph(g.clone())
+                .build()
+                .unwrap();
+            let batched = session.run_batch(&xs).unwrap();
+            for (i, x) in xs.iter().enumerate() {
+                assert_eq!(
+                    batched[i],
+                    session.run(x).unwrap(),
+                    "plan {} slot {i} diverged",
+                    plan.as_str()
+                );
+            }
+        }
+    }
+}

@@ -1,18 +1,27 @@
 //! Verification testbench runner (paper §VI-B).
 //!
-//! Drives any implementation of one model (PJRT artifact, native engine in
-//! float or fixed mode, or the generated C++ testbench) over the golden
-//! test vectors and reports the paper's testbench metrics: mean absolute
+//! Drives any implementation of one model (PJRT artifact, or the native
+//! engine through the unified [`Session`] API at any precision ×
+//! execution plan, or the generated C++ testbench) over the golden test
+//! vectors and reports the paper's testbench metrics: mean absolute
 //! error against the PyTorch-twin outputs and averaged kernel runtime.
+//!
+//! The engine runners are one parameterized entry —
+//! [`run_engine`] — taking a [`Precision`] and an [`ExecutionPlan`];
+//! the named `run_engine_*` functions are the standard testbench cells
+//! (f32/fixed × single/batched/sharded) spelled as wrappers. Because
+//! every execution path is bit-identical for a given precision, all
+//! cells of one precision must report identical error statistics — the
+//! suites below assert exactly that.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::{Engine, Workspace};
-use crate::graph::{Graph, GraphBatch};
-use crate::partition::ShardedGraph;
+use crate::engine::Engine;
+use crate::graph::Graph;
 use crate::runtime::Executable;
+use crate::session::{ExecutionPlan, Precision, Session, ShardK, ShardPolicy};
 use crate::util::binio::TestVecs;
 use crate::util::stats::{mae, Summary};
 
@@ -33,8 +42,8 @@ impl TbReport {
 }
 
 /// Shared error accounting: fold per-graph outputs against the golden
-/// expectations into a [`TbReport`] (both the per-graph and batched
-/// runners must use this so their error statistics can never diverge).
+/// expectations into a [`TbReport`] (every runner must use this so
+/// error statistics can never diverge between paths).
 fn report_from_outputs<'a>(
     implementation: &str,
     outputs: impl Iterator<Item = &'a Vec<f32>>,
@@ -91,15 +100,127 @@ pub struct GoldenCase<'a> {
     pub x: &'a [f32],
 }
 
+/// The testbench label for one precision × plan cell (matches the names
+/// the pre-session testbench reported).
+fn engine_label(precision: Precision, plan: &ExecutionPlan) -> String {
+    let suffix = match plan {
+        ExecutionPlan::Single => "",
+        ExecutionPlan::Batched { .. } => "-batched",
+        ExecutionPlan::Sharded { .. } => "-sharded",
+        ExecutionPlan::Auto => "-auto",
+    };
+    format!("engine-{}{}", precision.as_str(), suffix)
+}
+
+/// Testbench over the native engine through the unified session API: one
+/// deployed [`Session`] per golden graph at the given precision and
+/// execution plan. Session construction (including shard-plan
+/// resolution) happens outside the timed region — runtime measures the
+/// forward, matching how a warm serving deployment pays it.
+pub fn run_engine(
+    engine: &Engine,
+    vecs: &TestVecs,
+    precision: Precision,
+    plan: ExecutionPlan,
+) -> Result<TbReport> {
+    run_engine_with_policy(engine, vecs, precision, plan, ShardPolicy::default())
+}
+
+/// [`run_engine`] with an explicit [`ShardPolicy`] (partitioner seed and
+/// the knobs `Auto`/`ShardK::Auto` plans resolve against).
+pub fn run_engine_with_policy(
+    engine: &Engine,
+    vecs: &TestVecs,
+    precision: Precision,
+    plan: ExecutionPlan,
+    policy: ShardPolicy,
+) -> Result<TbReport> {
+    let label = engine_label(precision, &plan);
+    let batched = matches!(plan, ExecutionPlan::Batched { .. });
+    let mut times = Vec::with_capacity(vecs.graphs.len());
+    let mut outputs = Vec::with_capacity(vecs.graphs.len());
+    for gold in &vecs.graphs {
+        let pairs: Vec<(u32, u32)> = gold
+            .edges
+            .chunks_exact(2)
+            .map(|c| (c[0] as u32, c[1] as u32))
+            .collect();
+        let graph = Graph::from_coo(gold.num_nodes, &pairs);
+        let session = Session::builder(engine.clone())
+            .precision(precision)
+            .plan(plan.clone())
+            .shard_policy(policy)
+            .graph(graph)
+            .build()?;
+        session.prepare(); // sharded cells partition outside the timed region
+        let t0 = Instant::now();
+        let out = if batched {
+            // drive the parallel feature-batch runner even for one set
+            let mut ys = session.run_batch(std::slice::from_ref(&gold.x))?;
+            ys.pop().expect("one feature set in, one output out")
+        } else {
+            session.run(&gold.x)?
+        };
+        times.push(t0.elapsed().as_secs_f64());
+        outputs.push(out);
+    }
+    Ok(report_from_outputs(&label, outputs.iter(), vecs, &times))
+}
+
 /// Testbench over the native engine (float path).
 pub fn run_engine_float(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
-    compare("engine-f32", vecs, |c| engine.forward(&c.graph, c.x))
+    run_engine(engine, vecs, Precision::F32, ExecutionPlan::Single)
 }
 
 /// Testbench over the native engine (true fixed-point path) — the paper's
 /// "'true' quantization simulation" (§VI-B).
 pub fn run_engine_fixed(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
-    compare("engine-fixed", vecs, |c| engine.forward_fixed(&c.graph, c.x))
+    run_engine(engine, vecs, Precision::ApFixed, ExecutionPlan::Single)
+}
+
+/// Batched testbench over the native engine (float path) — must agree
+/// exactly with [`run_engine_float`] on MAE (the batch path is bit-exact).
+pub fn run_engine_float_batched(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    run_engine(engine, vecs, Precision::F32, ExecutionPlan::Batched { workspace: 0 })
+}
+
+/// Batched testbench over the true fixed-point path.
+pub fn run_engine_fixed_batched(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    run_engine(engine, vecs, Precision::ApFixed, ExecutionPlan::Batched { workspace: 0 })
+}
+
+/// The pinned shard policy of the sharded testbench cells: golden graphs
+/// are molecule-sized (adaptive K would resolve to 1), so K is pinned to
+/// 2 to actually exercise the partition + halo exchange + gather flow.
+fn sharded_tb_policy() -> ShardPolicy {
+    ShardPolicy {
+        seed: 0x7b,
+        ..ShardPolicy::default()
+    }
+}
+
+/// Sharded testbench over the native engine (float path) — the sharded
+/// forward is bit-exact, so this must agree with [`run_engine_float`]
+/// on every error statistic.
+pub fn run_engine_float_sharded(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    run_engine_with_policy(
+        engine,
+        vecs,
+        Precision::F32,
+        ExecutionPlan::Sharded { k: ShardK::Fixed(2), plan: None },
+        sharded_tb_policy(),
+    )
+}
+
+/// Sharded testbench over the true fixed-point path.
+pub fn run_engine_fixed_sharded(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
+    run_engine_with_policy(
+        engine,
+        vecs,
+        Precision::ApFixed,
+        ExecutionPlan::Sharded { k: ShardK::Fixed(2), plan: None },
+        sharded_tb_policy(),
+    )
 }
 
 /// Testbench over a compiled PJRT artifact (the deployed kernel).
@@ -109,90 +230,6 @@ pub fn run_pjrt(exe: &Executable, vecs: &TestVecs) -> Result<TbReport> {
         let input = c.graph.to_input(c.x, cfg.graph_input_dim, cfg.max_nodes, cfg.max_edges);
         exe.run(&input)
     })
-}
-
-/// Batched testbench core: pack all golden graphs into one [`GraphBatch`]
-/// and run the engine's batched forward. Per-graph runtime is the batch
-/// wall time amortized over the graphs, matching how the serving path
-/// accounts service time.
-fn compare_batched(
-    implementation: &str,
-    vecs: &TestVecs,
-    engine: &Engine,
-    fixed: bool,
-) -> Result<TbReport> {
-    let graphs: Vec<Graph> = vecs
-        .graphs
-        .iter()
-        .map(|gold| {
-            let pairs: Vec<(u32, u32)> = gold
-                .edges
-                .chunks_exact(2)
-                .map(|c| (c[0] as u32, c[1] as u32))
-                .collect();
-            Graph::from_coo(gold.num_nodes, &pairs)
-        })
-        .collect();
-    let batch = GraphBatch::pack(
-        graphs
-            .iter()
-            .zip(&vecs.graphs)
-            .map(|(g, gold)| (g, gold.x.as_slice())),
-    );
-    let mut ws = Workspace::with_default_threads();
-    let t0 = Instant::now();
-    let outputs = if fixed {
-        engine.forward_batch_fixed(&batch, &mut ws)?
-    } else {
-        engine.forward_batch(&batch, &mut ws)?
-    };
-    let per_graph = t0.elapsed().as_secs_f64() / batch.len().max(1) as f64;
-    let times = vec![per_graph; vecs.graphs.len()];
-    Ok(report_from_outputs(implementation, outputs.iter(), vecs, &times))
-}
-
-/// Batched testbench over the native engine (float path) — must agree
-/// exactly with [`run_engine_float`] on MAE (the batch path is bit-exact).
-pub fn run_engine_float_batched(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
-    compare_batched("engine-f32-batched", vecs, engine, false)
-}
-
-/// Batched testbench over the true fixed-point path.
-pub fn run_engine_fixed_batched(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
-    compare_batched("engine-fixed-batched", vecs, engine, true)
-}
-
-/// Sharded testbench core: run every golden graph through the partitioned
-/// forward. Golden graphs are molecule-sized, so the adaptive K would
-/// resolve to 1; the shard count is pinned to 2 so the sharded control
-/// flow (partition, halo exchange, gather) is actually exercised.
-fn compare_sharded(
-    implementation: &str,
-    vecs: &TestVecs,
-    engine: &Engine,
-    fixed: bool,
-) -> Result<TbReport> {
-    let mut ws = Workspace::with_default_threads();
-    compare(implementation, vecs, |c| {
-        let sg = ShardedGraph::build(c.graph.view(), 2, 0x7b);
-        if fixed {
-            engine.forward_sharded_fixed(&sg, c.x, &mut ws)
-        } else {
-            engine.forward_sharded(&sg, c.x, &mut ws)
-        }
-    })
-}
-
-/// Sharded testbench over the native engine (float path) — the sharded
-/// forward is bit-exact, so this must agree with [`run_engine_float`]
-/// on every error statistic.
-pub fn run_engine_float_sharded(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
-    compare_sharded("engine-f32-sharded", vecs, engine, false)
-}
-
-/// Sharded testbench over the true fixed-point path.
-pub fn run_engine_fixed_sharded(engine: &Engine, vecs: &TestVecs) -> Result<TbReport> {
-    compare_sharded("engine-fixed-sharded", vecs, engine, true)
 }
 
 #[cfg(test)]
@@ -256,9 +293,10 @@ mod tests {
     }
 
     /// Artifact-free parity: with golden expectations produced by the
-    /// engine itself, every runner (single, batched, sharded) must report
-    /// exactly zero float error, and the fixed-point runners must agree
-    /// with each other on the quantization error.
+    /// engine itself, every runner (single, batched, sharded, and the
+    /// session-auto cell) must report exactly zero float error, and the
+    /// fixed-point runners must agree with each other on the
+    /// quantization error.
     #[test]
     fn all_runners_agree_on_synthetic_golden_vecs() {
         use crate::datasets;
@@ -298,16 +336,26 @@ mod tests {
                         .iter()
                         .flat_map(|&(s, d)| [s as i32, d as i32])
                         .collect(),
-                    expected: engine.forward(&m.graph, &m.x).unwrap(),
+                    expected: {
+                        let session = Session::builder(engine.clone())
+                            .precision(Precision::F32)
+                            .plan(ExecutionPlan::Single)
+                            .graph(m.graph.clone())
+                            .build()
+                            .unwrap();
+                        session.run(&m.x).unwrap()
+                    },
                 })
                 .collect(),
         };
         let single = run_engine_float(&engine, &vecs).unwrap();
         let batched = run_engine_float_batched(&engine, &vecs).unwrap();
         let sharded = run_engine_float_sharded(&engine, &vecs).unwrap();
+        let auto = run_engine(&engine, &vecs, Precision::Auto, ExecutionPlan::Auto).unwrap();
         assert_eq!(single.mae, 0.0);
         assert_eq!(batched.mae, 0.0);
         assert_eq!(sharded.mae, 0.0);
+        assert_eq!(auto.mae, 0.0, "session-auto cell diverged");
         assert_eq!(sharded.max_abs_err, 0.0);
         assert_eq!(sharded.graphs, vecs.graphs.len());
 

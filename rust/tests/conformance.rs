@@ -1,20 +1,25 @@
-//! Cross-path conformance matrix: `forward` == `forward_batch` ==
-//! `forward_sharded`, **bit-identically**, for both numerics (f32 and
-//! true ap_fixed), across the full `ConvType::ALL` × `Pooling` ×
-//! `Activation` model space on seeded random graphs.
+//! Cross-path conformance matrix through the unified `Session` API:
+//! `Single` == `Batched` == `Sharded` (K ∈ {1, 3, 5}), **bit-identically**,
+//! for both precisions (f32 and true ap_fixed), across the full
+//! `ConvType::ALL` × `Pooling` × `Activation` model space on seeded
+//! random graphs.
 //!
-//! This is the contract the whole serving stack rests on: the batcher
-//! and the shard router may move a request between the three execution
-//! paths at any time (batch composition, node-count threshold, plan
-//! cache state), and the response must not change by a single bit. The
-//! engine's unit tests pin sampled configurations; this suite sweeps the
-//! generic model space the paper's framework promises to cover.
+//! This is the contract the whole serving stack rests on: plan
+//! resolution (`ExecutionPlan::Auto`, the coordinator's shard router,
+//! batch composition, plan-cache state) may move a request between the
+//! three execution paths at any time, and the response must not change
+//! by a single bit. Because `Session::run`/`run_batch` are the only
+//! public inference entry points, the matrix drives every cell through
+//! them — which also pins that all paths and precisions are reachable
+//! from the session API alone.
+
+use std::sync::Arc;
 
 use gnnbuilder::datasets;
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
-use gnnbuilder::graph::{Graph, GraphBatch};
+use gnnbuilder::graph::Graph;
 use gnnbuilder::model::{Activation, ConvType, ModelConfig, Pooling};
-use gnnbuilder::partition::ShardedGraph;
+use gnnbuilder::session::{ExecutionPlan, Precision, Session, ShardK, ShardPolicy};
 use gnnbuilder::util::rng::Rng;
 
 /// Every pooling configuration in the model space: each single operator
@@ -77,40 +82,76 @@ fn seeded_graphs(rng: &mut Rng, count: usize, max_n: usize, dim: usize) -> Vec<(
         .collect()
 }
 
+/// Build a session over one graph at one precision + plan, sharing the
+/// suite's warm workspace.
+fn session_for(
+    engine: &Engine,
+    g: &Graph,
+    precision: Precision,
+    plan: ExecutionPlan,
+    seed: u64,
+    ws: &Arc<Workspace>,
+) -> Session {
+    Session::builder(engine.clone())
+        .precision(precision)
+        .plan(plan)
+        .shard_policy(ShardPolicy {
+            seed,
+            ..ShardPolicy::default()
+        })
+        .workspace(ws.clone())
+        .graph(g.clone())
+        .build()
+        .unwrap()
+}
+
 /// One matrix cell: all three paths agree bit-for-bit on every graph,
-/// with the sharded path swept over several shard counts.
+/// with the sharded path swept over several shard counts, driven
+/// entirely through `Session::run` / `Session::run_batch`.
 fn assert_cell(
     engine: &Engine,
     graphs: &[(Graph, Vec<f32>)],
-    fixed: bool,
-    ws: &mut Workspace,
+    precision: Precision,
+    ws: &Arc<Workspace>,
     label: &str,
 ) {
-    let batch = GraphBatch::pack(graphs.iter().map(|(g, x)| (g, x.as_slice())));
-    let batched = if fixed {
-        engine.forward_batch_fixed(&batch, ws)
-    } else {
-        engine.forward_batch(&batch, ws)
-    }
-    .unwrap();
     for (i, (g, x)) in graphs.iter().enumerate() {
-        let single = if fixed {
-            engine.forward_fixed(g, x)
-        } else {
-            engine.forward(g, x)
-        }
+        let single = session_for(engine, g, precision, ExecutionPlan::Single, 0, ws)
+            .run(x)
+            .unwrap();
+
+        // batched path: the parallel feature-set runner over two copies
+        // (workspace: 0 — the suite's shared workspace supplies the slots)
+        let batched = session_for(
+            engine,
+            g,
+            precision,
+            ExecutionPlan::Batched { workspace: 0 },
+            0,
+            ws,
+        )
+        .run_batch(&[x.clone(), x.clone()])
         .unwrap();
-        assert_eq!(
-            batched[i], single,
-            "{label}: batch path diverged on graph {i}"
-        );
+        for (bi, b) in batched.iter().enumerate() {
+            assert_eq!(
+                b, &single,
+                "{label}: batch path diverged on graph {i} (set {bi})"
+            );
+        }
+
         for k in [1usize, 3, 5] {
-            let sg = ShardedGraph::build(g.view(), k, i as u64);
-            let sharded = if fixed {
-                engine.forward_sharded_fixed(&sg, x, ws)
-            } else {
-                engine.forward_sharded(&sg, x, ws)
-            }
+            let sharded = session_for(
+                engine,
+                g,
+                precision,
+                ExecutionPlan::Sharded {
+                    k: ShardK::Fixed(k),
+                    plan: None,
+                },
+                i as u64,
+                ws,
+            )
+            .run(x)
             .unwrap();
             assert_eq!(
                 sharded, single,
@@ -120,10 +161,10 @@ fn assert_cell(
     }
 }
 
-fn run_matrix(conv: ConvType, fixed: bool) {
+fn run_matrix(conv: ConvType, precision: Precision) {
     let mut rng = Rng::seed_from(2026);
     let graphs = seeded_graphs(&mut rng, 5, 40, 6);
-    let mut ws = Workspace::new(4);
+    let ws = Arc::new(Workspace::new(4));
     for (pi, pooling) in POOLINGS.iter().enumerate() {
         for (ai, act) in ACTIVATIONS.iter().enumerate() {
             let engine = matrix_engine(conv, pooling, *act, (pi * 7 + ai) as u64 + 1);
@@ -131,10 +172,10 @@ fn run_matrix(conv: ConvType, fixed: bool) {
                 "{}/{}[{}]/{}",
                 conv.as_str(),
                 pooling.iter().map(|p| p.as_str()).collect::<Vec<_>>().join("+"),
-                if fixed { "fixed" } else { "f32" },
+                precision.as_str(),
                 act.as_str()
             );
-            assert_cell(&engine, &graphs, fixed, &mut ws, &label);
+            assert_cell(&engine, &graphs, precision, &ws, &label);
         }
     }
 }
@@ -143,11 +184,11 @@ macro_rules! conformance_tests {
     ($($f32_name:ident, $fixed_name:ident, $conv:expr;)*) => {$(
         #[test]
         fn $f32_name() {
-            run_matrix($conv, false);
+            run_matrix($conv, Precision::F32);
         }
         #[test]
         fn $fixed_name() {
-            run_matrix($conv, true);
+            run_matrix($conv, Precision::ApFixed);
         }
     )*}
 }
@@ -160,14 +201,16 @@ conformance_tests! {
 }
 
 /// The same three-way agreement on the citation workload the sharded
-/// path serves — every conv type, both numerics, K = 4 with real halo
+/// path serves — every conv type, both precisions, K = 4 with real halo
 /// traffic — closing the gap between the random-graph matrix and the
-/// serving-shaped topology.
+/// serving-shaped topology. A pinned pre-built plan must also match.
 #[test]
-fn conformance_citation_graph_all_convs_both_numerics() {
+fn conformance_citation_graph_all_convs_both_precisions() {
+    use gnnbuilder::partition::ShardedGraph;
+
     let stats = &datasets::PUBMED;
     let ng = datasets::gen_citation_graph(stats, 400, 13);
-    let mut ws = Workspace::new(4);
+    let ws = Arc::new(Workspace::new(4));
     for conv in ConvType::ALL {
         let cfg = ModelConfig {
             name: format!("conf_cite_{}", conv.as_str()),
@@ -185,32 +228,45 @@ fn conformance_citation_graph_all_convs_both_numerics() {
         };
         let weights = synth_weights(&cfg, 3);
         let engine = Engine::new(cfg, &weights, stats.mean_degree).unwrap();
-        let sg = ShardedGraph::build(ng.graph.view(), 4, 21);
-        assert!(sg.halo_nodes() > 0, "{conv:?}: expected real halo traffic");
-        let batch = GraphBatch::pack([(&ng.graph, ng.x.as_slice())]);
+        let pinned = Arc::new(ShardedGraph::build(ng.graph.view(), 4, 21));
+        assert!(pinned.halo_nodes() > 0, "{conv:?}: expected real halo traffic");
 
-        let single = engine.forward(&ng.graph, &ng.x).unwrap();
-        assert_eq!(
-            engine.forward_batch(&batch, &mut ws).unwrap()[0],
-            single,
-            "{conv:?} f32 batch"
-        );
-        assert_eq!(
-            engine.forward_sharded(&sg, &ng.x, &mut ws).unwrap(),
-            single,
-            "{conv:?} f32 sharded"
-        );
-
-        let single_q = engine.forward_fixed(&ng.graph, &ng.x).unwrap();
-        assert_eq!(
-            engine.forward_batch_fixed(&batch, &mut ws).unwrap()[0],
-            single_q,
-            "{conv:?} fixed batch"
-        );
-        assert_eq!(
-            engine.forward_sharded_fixed(&sg, &ng.x, &mut ws).unwrap(),
-            single_q,
-            "{conv:?} fixed sharded"
-        );
+        for precision in [Precision::F32, Precision::ApFixed] {
+            let single = session_for(
+                &engine,
+                &ng.graph,
+                precision,
+                ExecutionPlan::Single,
+                21,
+                &ws,
+            )
+            .run(&ng.x)
+            .unwrap();
+            let batched = session_for(
+                &engine,
+                &ng.graph,
+                precision,
+                ExecutionPlan::Batched { workspace: 0 },
+                21,
+                &ws,
+            )
+            .run_batch(std::slice::from_ref(&ng.x))
+            .unwrap();
+            assert_eq!(batched[0], single, "{conv:?} {} batch", precision.as_str());
+            let sharded = session_for(
+                &engine,
+                &ng.graph,
+                precision,
+                ExecutionPlan::Sharded {
+                    k: ShardK::Fixed(4),
+                    plan: Some(pinned.clone()),
+                },
+                21,
+                &ws,
+            )
+            .run(&ng.x)
+            .unwrap();
+            assert_eq!(sharded, single, "{conv:?} {} sharded", precision.as_str());
+        }
     }
 }

@@ -1,15 +1,17 @@
-//! Degenerate-graph edge cases through all three forward paths (single,
-//! batched, sharded): empty graph, single node, zero edges, disconnected
-//! components, self-loops, parallel edges, and K > node_count. Every case
-//! must produce a correct (finite, three-way bit-identical) result or a
-//! clean error — never a panic. A serving system meets these shapes in
-//! the wild (empty retrieval results, singleton subgraphs, oversized K
-//! from a mistuned policy) and the router may send them down any path.
+//! Degenerate-graph edge cases through all three `Session` execution
+//! plans (single, batched, sharded): empty graph, single node, zero
+//! edges, disconnected components, self-loops, parallel edges, and
+//! K > node_count. Every case must produce a correct (finite, three-way
+//! bit-identical) result or a clean error — never a panic. A serving
+//! system meets these shapes in the wild (empty retrieval results,
+//! singleton subgraphs, oversized K from a mistuned policy) and plan
+//! resolution may send them down any path.
 
-use gnnbuilder::engine::{synth_weights, Engine, Workspace};
-use gnnbuilder::graph::{Graph, GraphBatch};
+use gnnbuilder::engine::{synth_weights, Engine};
+use gnnbuilder::graph::Graph;
 use gnnbuilder::model::{ConvType, ModelConfig};
 use gnnbuilder::partition::{adaptive_k, ShardedGraph};
+use gnnbuilder::session::{ExecutionPlan, Precision, ResolvedPath, Session, ShardK, ShardPolicy};
 
 fn tiny_engine(conv: ConvType) -> Engine {
     let cfg = ModelConfig {
@@ -30,47 +32,56 @@ fn tiny_engine(conv: ConvType) -> Engine {
     Engine::new(cfg, &weights, 2.0).unwrap()
 }
 
-/// Run one graph through all three paths for one numerics mode, assert
-/// they agree bit-for-bit and the output is finite, return the output.
-fn all_paths(engine: &Engine, g: &Graph, x: &[f32], k: usize, fixed: bool) -> Vec<f32> {
-    let single = if fixed {
-        engine.forward_fixed(g, x)
-    } else {
-        engine.forward(g, x)
-    }
-    .unwrap();
+fn session(engine: &Engine, g: &Graph, precision: Precision, plan: ExecutionPlan) -> Session {
+    Session::builder(engine.clone())
+        .precision(precision)
+        .plan(plan)
+        .shard_policy(ShardPolicy {
+            seed: 1,
+            ..ShardPolicy::default()
+        })
+        .graph(g.clone())
+        .build()
+        .unwrap()
+}
+
+/// Run one graph through all three plans for one precision, assert they
+/// agree bit-for-bit and the output is finite, return the output.
+fn all_paths(engine: &Engine, g: &Graph, x: &[f32], k: usize, precision: Precision) -> Vec<f32> {
+    let single = session(engine, g, precision, ExecutionPlan::Single)
+        .run(x)
+        .unwrap();
     assert!(
         single.iter().all(|v| v.is_finite()),
         "non-finite output: {single:?}"
     );
 
-    let mut ws = Workspace::new(2);
-    let batch = GraphBatch::pack([(g, x)]);
-    let batched = if fixed {
-        engine.forward_batch_fixed(&batch, &mut ws)
-    } else {
-        engine.forward_batch(&batch, &mut ws)
-    }
-    .unwrap();
+    let batched = session(engine, g, precision, ExecutionPlan::Batched { workspace: 2 })
+        .run_batch(&[x.to_vec()])
+        .unwrap();
     assert_eq!(batched[0], single, "batch path diverged");
 
-    let sg = ShardedGraph::build(g.view(), k, 1);
-    let sharded = if fixed {
-        engine.forward_sharded_fixed(&sg, x, &mut ws)
-    } else {
-        engine.forward_sharded(&sg, x, &mut ws)
-    }
+    let sharded = session(
+        engine,
+        g,
+        precision,
+        ExecutionPlan::Sharded {
+            k: ShardK::Fixed(k),
+            plan: None,
+        },
+    )
+    .run(x)
     .unwrap();
     assert_eq!(sharded, single, "sharded path (K={k}) diverged");
     single
 }
 
-fn every_conv_both_numerics(g: &Graph, x: &[f32], k: usize) {
+fn every_conv_both_precisions(g: &Graph, x: &[f32], k: usize) {
     for conv in ConvType::ALL {
         let engine = tiny_engine(conv);
-        for fixed in [false, true] {
-            let out = all_paths(&engine, g, x, k, fixed);
-            assert_eq!(out.len(), 2, "{conv:?} fixed={fixed}");
+        for precision in [Precision::F32, Precision::ApFixed] {
+            let out = all_paths(&engine, g, x, k, precision);
+            assert_eq!(out.len(), 2, "{conv:?} {}", precision.as_str());
         }
     }
 }
@@ -80,7 +91,7 @@ fn empty_graph_zero_nodes() {
     // zero nodes, zero edges, zero-length features: pooling over nothing
     // (add → 0, mean → 0, max → 0 by convention) feeds the MLP head
     let g = Graph::from_coo(0, &[]);
-    every_conv_both_numerics(&g, &[], 4);
+    every_conv_both_precisions(&g, &[], 4);
 }
 
 #[test]
@@ -90,8 +101,8 @@ fn empty_graph_output_is_the_head_of_zeros() {
     // across calls
     let engine = tiny_engine(ConvType::Gcn);
     let g = Graph::from_coo(0, &[]);
-    let a = all_paths(&engine, &g, &[], 1, false);
-    let b = all_paths(&engine, &g, &[], 7, false);
+    let a = all_paths(&engine, &g, &[], 1, Precision::F32);
+    let b = all_paths(&engine, &g, &[], 7, Precision::F32);
     assert_eq!(a, b);
 }
 
@@ -99,7 +110,7 @@ fn empty_graph_output_is_the_head_of_zeros() {
 fn single_node_no_edges() {
     let g = Graph::from_coo(1, &[]);
     let x = [0.5f32, -0.25, 0.125, 1.0];
-    every_conv_both_numerics(&g, &x, 3);
+    every_conv_both_precisions(&g, &x, 3);
 }
 
 #[test]
@@ -110,7 +121,7 @@ fn single_node_with_self_loop() {
     let x = [1.0f32, 2.0, -1.0, 0.0];
     let sg = ShardedGraph::build(g.view(), 2, 0);
     assert_eq!(sg.halo_nodes(), 0);
-    every_conv_both_numerics(&g, &x, 2);
+    every_conv_both_precisions(&g, &x, 2);
 }
 
 #[test]
@@ -121,7 +132,7 @@ fn zero_edges_many_nodes() {
     let sg = ShardedGraph::build(g.view(), 3, 0);
     assert_eq!(sg.plan.cut_edges, 0);
     assert_eq!(sg.halo_nodes(), 0);
-    every_conv_both_numerics(&g, &x, 3);
+    every_conv_both_precisions(&g, &x, 3);
 }
 
 #[test]
@@ -139,7 +150,7 @@ fn disconnected_components() {
     let g = Graph::from_coo(8, &edges);
     let x: Vec<f32> = (0..32).map(|v| (v as f32 * 0.37).sin()).collect();
     for k in [2usize, 5] {
-        every_conv_both_numerics(&g, &x, k);
+        every_conv_both_precisions(&g, &x, k);
     }
 }
 
@@ -149,7 +160,7 @@ fn self_loops_on_every_node_plus_ring() {
     edges.extend((0..6u32).map(|v| (v, (v + 1) % 6)));
     let g = Graph::from_coo(6, &edges);
     let x: Vec<f32> = (0..24).map(|v| v as f32 * 0.2 - 1.0).collect();
-    every_conv_both_numerics(&g, &x, 3);
+    every_conv_both_precisions(&g, &x, 3);
 }
 
 #[test]
@@ -158,7 +169,7 @@ fn parallel_duplicate_edges_preserve_fold_order() {
     // twice, in input order — sharding must not reorder or dedup them
     let g = Graph::from_coo(3, &[(0, 1), (0, 1), (2, 1), (0, 1)]);
     let x = [0.3f32, -0.6, 0.9, 0.1, 0.2, -0.2, 1.5, -1.5, 0.4, 0.5, 0.6, 0.7];
-    every_conv_both_numerics(&g, &x, 2);
+    every_conv_both_precisions(&g, &x, 2);
 }
 
 #[test]
@@ -169,57 +180,112 @@ fn k_exceeding_node_count_clamps_cleanly() {
     assert_eq!(sg.k(), 3, "K must clamp to node count");
     let sg0 = ShardedGraph::build(g.view(), 0, 0);
     assert_eq!(sg0.k(), 1, "K=0 must clamp to one shard");
-    every_conv_both_numerics(&g, &x, 10);
+    every_conv_both_precisions(&g, &x, 10);
+    // ShardK::Fixed(0) through the session also clamps instead of panicking
+    let engine = tiny_engine(ConvType::Gcn);
+    let s = session(
+        &engine,
+        &g,
+        Precision::F32,
+        ExecutionPlan::Sharded {
+            k: ShardK::Fixed(0),
+            plan: None,
+        },
+    );
+    assert_eq!(s.resolved_path(), ResolvedPath::Sharded { k: 1 });
+    assert_eq!(
+        s.run(&x).unwrap(),
+        session(&engine, &g, Precision::F32, ExecutionPlan::Single)
+            .run(&x)
+            .unwrap()
+    );
 }
 
 #[test]
-fn degenerate_graphs_inside_one_packed_batch() {
-    // a dispatch mixing empty, singleton, and normal graphs: per-slot
-    // results must match per-graph forwards slot for slot
+fn degenerate_graphs_through_session_run_batch() {
+    // empty, singleton, and ring topologies served as deployed graphs:
+    // run_batch over several feature sets must match run per set
     let engine = tiny_engine(ConvType::Sage);
-    let empty = Graph::from_coo(0, &[]);
-    let lone = Graph::from_coo(1, &[(0, 0)]);
-    let ring = Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
-    let x_lone = [0.5f32, 0.5, -0.5, -0.5];
-    let x_ring: Vec<f32> = (0..16).map(|v| v as f32 * 0.125).collect();
-    let batch = GraphBatch::pack([
-        (&empty, &[] as &[f32]),
-        (&lone, x_lone.as_slice()),
-        (&ring, x_ring.as_slice()),
-    ]);
-    let mut ws = Workspace::new(2);
-    let results = engine.forward_batch(&batch, &mut ws).unwrap();
-    assert_eq!(results[0], engine.forward(&empty, &[]).unwrap());
-    assert_eq!(results[1], engine.forward(&lone, &x_lone).unwrap());
-    assert_eq!(results[2], engine.forward(&ring, &x_ring).unwrap());
+    let cases: Vec<(Graph, usize)> = vec![
+        (Graph::from_coo(0, &[]), 0),
+        (Graph::from_coo(1, &[(0, 0)]), 1),
+        (Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]), 4),
+    ];
+    for (g, n) in cases {
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..n * 4).map(|v| (v as f32 + i as f32) * 0.125).collect())
+            .collect();
+        let s = session(&engine, &g, Precision::F32, ExecutionPlan::Batched { workspace: 2 });
+        let batched = s.run_batch(&xs).unwrap();
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(batched[i], s.run(x).unwrap(), "n={n} set {i}");
+        }
+    }
 }
 
 #[test]
-fn adaptive_k_and_build_auto_handle_degenerate_shapes() {
+fn adaptive_k_and_auto_plan_handle_degenerate_shapes() {
     assert_eq!(adaptive_k(0, 0, 8), 1);
     assert_eq!(adaptive_k(1, 1, 8), 1);
-    // build_auto on an empty graph is a single empty shard, and the
-    // forward over it still works end to end
+    // an Auto-plan session over an empty graph resolves to the
+    // whole-graph path (K would be 1) and still runs end to end
     let g = Graph::from_coo(0, &[]);
-    let sg = ShardedGraph::build_auto(g.view(), 9);
-    assert_eq!(sg.k(), 1);
     let engine = tiny_engine(ConvType::Pna);
-    let mut ws = Workspace::single();
-    let out = engine.forward_sharded(&sg, &[], &mut ws).unwrap();
-    assert_eq!(out, engine.forward(&g, &[]).unwrap());
+    let auto = Session::builder(engine.clone())
+        .plan(ExecutionPlan::Auto)
+        .shard_policy(ShardPolicy {
+            min_nodes: 0,
+            ..ShardPolicy::default()
+        })
+        .graph(g.clone())
+        .build()
+        .unwrap();
+    assert_eq!(auto.resolved_path(), ResolvedPath::Whole);
+    // ... and ShardK::Auto through an explicit Sharded plan degenerates
+    // to one shard, still matching the whole-graph forward
+    let sharded = session(
+        &engine,
+        &g,
+        Precision::F32,
+        ExecutionPlan::Sharded {
+            k: ShardK::Auto,
+            plan: None,
+        },
+    );
+    assert_eq!(sharded.resolved_path(), ResolvedPath::Sharded { k: 1 });
+    let out = sharded.run(&[]).unwrap();
+    assert_eq!(out, auto.run(&[]).unwrap());
 }
 
 #[test]
 fn sharded_errors_are_clean_not_panics() {
     // wrong feature length and over-limit graphs error out of the
-    // sharded path exactly like the whole-graph path
+    // sharded session exactly like the whole-graph path
     let engine = tiny_engine(ConvType::Gcn);
-    let mut ws = Workspace::single();
     let g = Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3)]);
-    let sg = ShardedGraph::build(g.view(), 2, 0);
-    assert!(engine.forward_sharded(&sg, &[0.0; 3], &mut ws).is_err());
+    let s = session(
+        &engine,
+        &g,
+        Precision::F32,
+        ExecutionPlan::Sharded {
+            k: ShardK::Fixed(2),
+            plan: None,
+        },
+    );
+    assert!(s.run(&[0.0; 3]).is_err());
     let big = Graph::from_coo(65, &[]); // max_nodes is 64
-    let sgb = ShardedGraph::build(big.view(), 4, 0);
+    let sb = session(
+        &engine,
+        &big,
+        Precision::F32,
+        ExecutionPlan::Sharded {
+            k: ShardK::Fixed(4),
+            plan: None,
+        },
+    );
     let xb = vec![0.0; 65 * 4];
-    assert!(engine.forward_sharded(&sgb, &xb, &mut ws).is_err());
+    assert!(sb.run(&xb).is_err());
+    // the whole-graph plan rejects them identically
+    let sw = session(&engine, &big, Precision::F32, ExecutionPlan::Single);
+    assert!(sw.run(&xb).is_err());
 }

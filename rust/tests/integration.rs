@@ -12,6 +12,7 @@ use gnnbuilder::hls::{self, GraphStats};
 use gnnbuilder::model::space::DesignSpace;
 use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
 use gnnbuilder::runtime::{Manifest, Runtime};
+use gnnbuilder::session::{ExecutionPlan, Precision, Session};
 use gnnbuilder::testbench;
 use gnnbuilder::util::binio::{read_testvecs, read_weights};
 
@@ -153,8 +154,13 @@ fn coordinator_outputs_match_direct_inference() {
     let vecs = read_testvecs(&meta.testvecs_path).unwrap();
 
     let engine2 = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+    let (engine_spec, _) = BackendSpec::session(
+        Session::builder(engine2)
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Batched { workspace: 0 }),
+    );
     let c = Coordinator::start(
-        vec![BackendSpec::engine(engine2), BackendSpec::pjrt(meta.clone())],
+        vec![engine_spec, BackendSpec::pjrt(meta.clone())],
         BatchPolicy::default(),
     );
     for gold in vecs.graphs.iter().take(4) {
@@ -164,7 +170,14 @@ fn coordinator_outputs_match_direct_inference() {
             .map(|e| (e[0] as u32, e[1] as u32))
             .collect();
         let g = Graph::from_coo(gold.num_nodes, &pairs);
-        let direct = engine.forward(&g, &gold.x).unwrap();
+        let direct = Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Single)
+            .graph(g.clone())
+            .build()
+            .unwrap()
+            .run(&gold.x)
+            .unwrap();
         let via_engine = c
             .infer(&meta.config.name, g.clone(), gold.x.clone())
             .unwrap();

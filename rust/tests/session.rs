@@ -1,0 +1,359 @@
+//! Property suite for the unified `Session` API: `Precision::Auto` and
+//! `ExecutionPlan::Auto` must be *choices among bit-identical options* —
+//! whatever the resolver picks, the output equals every explicitly
+//! chosen path, across the conv-type matrix, seeded random graphs, the
+//! citation-serving shape, and degenerate graphs. Plus the warm-path
+//! counter gates: a warm `Session::run` on a cached topology performs
+//! zero re-hashes and zero re-partitions.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use gnnbuilder::coordinator::PlanCache;
+use gnnbuilder::datasets;
+use gnnbuilder::engine::{synth_weights, Engine, Workspace};
+use gnnbuilder::graph::Graph;
+use gnnbuilder::model::{ConvType, ModelConfig, Numerics};
+use gnnbuilder::session::{
+    ExecutionPlan, Precision, ResolvedPath, Session, ShardK, ShardPolicy,
+};
+use gnnbuilder::util::rng::Rng;
+
+fn engine_with(conv: ConvType, numerics: Numerics, seed: u64) -> Engine {
+    let cfg = ModelConfig {
+        name: format!("sess_{}_{}", conv.as_str(), seed),
+        graph_input_dim: 6,
+        gnn_conv: conv,
+        gnn_hidden_dim: 6,
+        gnn_out_dim: 6,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 5,
+        mlp_num_layers: 1,
+        output_dim: 3,
+        numerics,
+        max_nodes: 4000,
+        max_edges: 40_000,
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, seed);
+    Engine::new(cfg, &weights, 2.4).unwrap()
+}
+
+fn random_graph_and_x(rng: &mut Rng, max_n: usize, dim: usize) -> (Graph, Vec<f32>) {
+    let n = rng.range(1, max_n);
+    let e = rng.range(0, n * 3);
+    let edges: Vec<(u32, u32)> = (0..e)
+        .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+        .collect();
+    let x: Vec<f32> = (0..n * dim)
+        .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+        .collect();
+    (Graph::from_coo(n, &edges), x)
+}
+
+fn build(
+    engine: &Engine,
+    g: &Graph,
+    precision: Precision,
+    plan: ExecutionPlan,
+    policy: ShardPolicy,
+) -> Session {
+    Session::builder(engine.clone())
+        .precision(precision)
+        .plan(plan)
+        .shard_policy(policy)
+        .graph(g.clone())
+        .build()
+        .unwrap()
+}
+
+/// `Precision::Auto` output is bit-identical to the explicitly spelled
+/// precision the config resolves to — for every conv type, on both
+/// Float- and Fixed-configured engines, across seeded random graphs.
+#[test]
+fn precision_auto_is_bit_identical_to_the_explicit_choice() {
+    let mut rng = Rng::seed_from(501);
+    for conv in ConvType::ALL {
+        for (numerics, explicit) in [
+            (Numerics::Float, Precision::F32),
+            (Numerics::Fixed, Precision::ApFixed),
+        ] {
+            let engine = engine_with(conv, numerics, 9);
+            for _case in 0..10 {
+                let (g, x) = random_graph_and_x(&mut rng, 40, 6);
+                let auto = build(
+                    &engine,
+                    &g,
+                    Precision::Auto,
+                    ExecutionPlan::Single,
+                    ShardPolicy::default(),
+                );
+                assert_eq!(auto.numerics(), numerics);
+                let explicit = build(
+                    &engine,
+                    &g,
+                    explicit,
+                    ExecutionPlan::Single,
+                    ShardPolicy::default(),
+                );
+                assert_eq!(
+                    auto.run(&x).unwrap(),
+                    explicit.run(&x).unwrap(),
+                    "{conv:?} {numerics:?}: auto precision diverged"
+                );
+            }
+        }
+    }
+}
+
+/// `ExecutionPlan::Auto` resolution is (a) the documented function of
+/// graph stats + `ShardPolicy`, and (b) bit-identical to *every*
+/// explicitly chosen path, not just the one it picked.
+#[test]
+fn plan_auto_is_bit_identical_to_every_explicit_path() {
+    let mut rng = Rng::seed_from(502);
+    let policy = ShardPolicy {
+        min_nodes: 24,
+        k: ShardK::Fixed(3),
+        seed: 11,
+    };
+    for conv in ConvType::ALL {
+        let engine = engine_with(conv, Numerics::Float, 13);
+        for _case in 0..12 {
+            let (g, x) = random_graph_and_x(&mut rng, 60, 6);
+            let auto = build(&engine, &g, Precision::F32, ExecutionPlan::Auto, policy);
+            // (a) resolution is the documented function of the policy
+            let expect = if g.num_nodes >= policy.min_nodes {
+                ResolvedPath::Sharded { k: 3 }
+            } else {
+                ResolvedPath::Whole
+            };
+            assert_eq!(auto.resolved_path(), expect, "{conv:?} n={}", g.num_nodes);
+            // (b) whatever it picked, the answer is the same everywhere
+            let got = auto.run(&x).unwrap();
+            for plan in [
+                ExecutionPlan::Single,
+                ExecutionPlan::Batched { workspace: 2 },
+                ExecutionPlan::Sharded {
+                    k: ShardK::Fixed(3),
+                    plan: None,
+                },
+            ] {
+                let explicit = build(&engine, &g, Precision::F32, plan.clone(), policy);
+                assert_eq!(
+                    explicit.run(&x).unwrap(),
+                    got,
+                    "{conv:?} n={}: plan {} diverged from auto",
+                    g.num_nodes,
+                    plan.as_str()
+                );
+            }
+        }
+    }
+}
+
+/// The citation-serving shape: `Auto` shards a PUBMED-profile graph over
+/// the policy threshold, stays whole below it, and both choices match
+/// the explicit paths bit-for-bit (f32 and ap_fixed).
+#[test]
+fn plan_auto_on_the_citation_workload_matches_explicit_paths() {
+    let stats = &datasets::PUBMED;
+    let big = datasets::gen_citation_graph(stats, 1500, 7);
+    let small = datasets::gen_citation_graph(stats, 60, 8);
+    let policy = ShardPolicy {
+        min_nodes: 1000,
+        k: ShardK::Fixed(4),
+        seed: 21,
+    };
+    let cfg = ModelConfig {
+        name: "sess_cite".into(),
+        graph_input_dim: stats.node_dim,
+        gnn_conv: ConvType::Gcn,
+        gnn_hidden_dim: 8,
+        gnn_out_dim: 8,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 6,
+        mlp_num_layers: 1,
+        output_dim: stats.num_classes,
+        max_nodes: 2000,
+        max_edges: 20_000,
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, 31);
+    let engine = Engine::new(cfg, &weights, stats.mean_degree).unwrap();
+
+    for precision in [Precision::F32, Precision::ApFixed] {
+        let auto_big = build(&engine, &big.graph, precision, ExecutionPlan::Auto, policy);
+        assert_eq!(auto_big.resolved_path(), ResolvedPath::Sharded { k: 4 });
+        let auto_small = build(&engine, &small.graph, precision, ExecutionPlan::Auto, policy);
+        assert_eq!(auto_small.resolved_path(), ResolvedPath::Whole);
+
+        let whole_big = build(&engine, &big.graph, precision, ExecutionPlan::Single, policy)
+            .run(&big.x)
+            .unwrap();
+        assert_eq!(auto_big.run(&big.x).unwrap(), whole_big);
+        let whole_small = build(&engine, &small.graph, precision, ExecutionPlan::Single, policy)
+            .run(&small.x)
+            .unwrap();
+        assert_eq!(auto_small.run(&small.x).unwrap(), whole_small);
+    }
+}
+
+/// The warm-path acceptance gate: on a shared plan cache, the first
+/// sharded run hashes once (memoized on the deployed graph) and
+/// partitions once; every later run — same session or a fresh session
+/// over the same topology — performs ZERO additional hashes and ZERO
+/// re-partitions, while outputs stay bit-identical for fresh features.
+#[test]
+fn warm_runs_on_a_cached_topology_never_rehash_or_repartition() {
+    let stats = &datasets::PUBMED;
+    let big = datasets::gen_citation_graph(stats, 1200, 3);
+    let policy = ShardPolicy {
+        min_nodes: 1000,
+        k: ShardK::Fixed(4),
+        seed: 5,
+    };
+    let engine = {
+        let cfg = ModelConfig {
+            name: "sess_warm".into(),
+            graph_input_dim: stats.node_dim,
+            gnn_conv: ConvType::Sage,
+            gnn_hidden_dim: 8,
+            gnn_out_dim: 6,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 6,
+            mlp_num_layers: 1,
+            output_dim: stats.num_classes,
+            max_nodes: 2000,
+            max_edges: 20_000,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 41);
+        Engine::new(cfg, &weights, stats.mean_degree).unwrap()
+    };
+    let cache = Arc::new(PlanCache::with_capacity(4));
+    let session = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Auto)
+        .shard_policy(policy)
+        .plan_cache(cache.clone())
+        .graph(big.graph.clone())
+        .build()
+        .unwrap();
+    assert_eq!(session.resolved_path(), ResolvedPath::Sharded { k: 4 });
+
+    let baseline = build(&engine, &big.graph, Precision::F32, ExecutionPlan::Single, policy);
+    for round in 0..5 {
+        // same topology, fresh features — the serving pattern the
+        // deployed-graph handle exists for
+        let x: Vec<f32> = big.x.iter().map(|v| v + round as f32 * 0.125).collect();
+        assert_eq!(session.run(&x).unwrap(), baseline.run(&x).unwrap());
+    }
+    assert_eq!(session.deployed().hash_computes(), 1, "hash not memoized");
+    assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1, "re-partitioned");
+    assert_eq!(
+        cache.stats().hash_computes.load(Ordering::Relaxed),
+        0,
+        "cache-side re-hash on the memoized path"
+    );
+
+    // a second session over the same deployed topology: one more hash
+    // (its own handle), still zero extra partitions
+    let session2 = Session::builder(engine)
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Auto)
+        .shard_policy(policy)
+        .plan_cache(cache.clone())
+        .graph(big.graph.clone())
+        .build()
+        .unwrap();
+    assert_eq!(session2.run(&big.x).unwrap(), baseline.run(&big.x).unwrap());
+    assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+    assert_eq!(cache.stats().hash_computes.load(Ordering::Relaxed), 0);
+    assert!(Arc::ptr_eq(
+        &session.shard_plan().unwrap(),
+        &session2.shard_plan().unwrap()
+    ));
+}
+
+/// Degenerate graphs through `Session::run` with `Auto` everything: the
+/// resolver must route them somewhere sane and the answer must match
+/// the explicit single path.
+#[test]
+fn degenerate_graphs_through_auto_sessions() {
+    let engine = engine_with(ConvType::Gin, Numerics::Float, 17);
+    let dim = engine.cfg.graph_input_dim;
+    let cases: Vec<Graph> = vec![
+        Graph::from_coo(0, &[]),
+        Graph::from_coo(1, &[]),
+        Graph::from_coo(1, &[(0, 0)]),
+        Graph::from_coo(5, &[]),
+        Graph::from_coo(3, &[(0, 1), (0, 1), (2, 1)]),
+    ];
+    for g in cases {
+        let x: Vec<f32> = (0..g.num_nodes * dim).map(|v| v as f32 * 0.1 - 0.4).collect();
+        let auto = build(
+            &engine,
+            &g,
+            Precision::Auto,
+            ExecutionPlan::Auto,
+            // min_nodes 0: even tiny graphs consult the resolver
+            ShardPolicy {
+                min_nodes: 0,
+                ..ShardPolicy::default()
+            },
+        );
+        let single = build(
+            &engine,
+            &g,
+            Precision::F32,
+            ExecutionPlan::Single,
+            ShardPolicy::default(),
+        );
+        let got = auto.run(&x).unwrap();
+        assert!(got.iter().all(|v| v.is_finite()));
+        assert_eq!(got, single.run(&x).unwrap(), "n={}", g.num_nodes);
+    }
+}
+
+/// `run_batch` is bit-identical to per-set `run` on every plan, with a
+/// shared warm workspace across sessions.
+#[test]
+fn run_batch_property_across_plans_and_convs() {
+    let mut rng = Rng::seed_from(503);
+    let ws = Arc::new(Workspace::new(3));
+    for conv in [ConvType::Gcn, ConvType::Pna] {
+        let engine = engine_with(conv, Numerics::Float, 23);
+        for _case in 0..6 {
+            let (g, x) = random_graph_and_x(&mut rng, 30, 6);
+            let xs: Vec<Vec<f32>> = (0..4)
+                .map(|i| x.iter().map(|v| v * (1.0 + i as f32 * 0.5)).collect())
+                .collect();
+            for plan in [
+                ExecutionPlan::Single,
+                ExecutionPlan::Batched { workspace: 3 },
+                ExecutionPlan::Sharded {
+                    k: ShardK::Fixed(2),
+                    plan: None,
+                },
+            ] {
+                let s = Session::builder(engine.clone())
+                    .precision(Precision::F32)
+                    .plan(plan.clone())
+                    .workspace(ws.clone())
+                    .graph(g.clone())
+                    .build()
+                    .unwrap();
+                let batched = s.run_batch(&xs).unwrap();
+                for (i, xi) in xs.iter().enumerate() {
+                    assert_eq!(
+                        batched[i],
+                        s.run(xi).unwrap(),
+                        "{conv:?} plan {} set {i}",
+                        plan.as_str()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,8 +1,14 @@
 //! End-to-end serving driver (EXPERIMENTS.md §E2E): load real compiled
-//! model artifacts, start the L3 coordinator (router + dynamic batcher +
-//! per-model workers), stream an HIV-like molecular workload through it,
-//! and report latency/throughput — the deployment scenario the paper's
-//! §VI-C host code serves on the Alveo.
+//! model artifacts, start the serving layer through the coordinator
+//! facade (each model becomes a floating endpoint with its own
+//! micro-batch dispatcher on `serve::Server`), stream an HIV-like
+//! molecular workload through it, and report latency/throughput — the
+//! deployment scenario the paper's §VI-C host code serves on the Alveo.
+//! Molecule requests carry their own graph, so they take the floating
+//! (GraphBatch-packing) path; node-classification traffic over a
+//! deployed topology would instead use `server.deploy(tenant, builder)`
+//! + `endpoint.submit(x)` and coalesce into `Session::run_batch` (see
+//! the `gnnbuilder serve` subcommand).
 //!
 //! Run: `cargo run --release --example serve_molecules [n_requests]`
 //! (requires `make artifacts`).
@@ -59,18 +65,18 @@ fn main() -> Result<()> {
     let mut rng = Rng::seed_from(42);
     let graphs = datasets::gen_dataset(ds, n_requests, 7, 600, 600);
     let t0 = Instant::now();
-    let mut receivers = Vec::with_capacity(n_requests);
-    for (i, mol) in graphs.into_iter().enumerate() {
+    let mut tickets = Vec::with_capacity(n_requests);
+    for mol in graphs {
         let model = if rng.bool(0.7) {
             &pjrt_meta.name
         } else {
             &engine_meta.name
         };
-        receivers.push((i, coordinator.submit(model, mol.graph, mol.x)));
+        tickets.push(coordinator.submit(model, mol.graph, mol.x));
     }
     let mut outputs = 0usize;
-    for (_, rx) in receivers {
-        let resp = rx.recv()?;
+    for t in tickets {
+        let resp = t.wait()?;
         assert!(!resp.output.is_empty());
         outputs += 1;
     }

@@ -1,7 +1,9 @@
-//! Coordinator benchmarks: router+batcher round-trip overhead with a
-//! zero-work backend (pure L3 cost), and the batch-native engine path
-//! against a per-request loop over the same engine — the measurement
-//! behind the "batching buys throughput" acceptance gate.
+//! Coordinator-facade benchmarks: serve-layer round-trip overhead with a
+//! zero-work backend (pure admission + dispatch cost, no router hop),
+//! and the batch-native engine path against a per-request loop over the
+//! same engine — the measurement behind the "batching buys throughput"
+//! acceptance gate. The coalesced-vs-per-request comparison over one
+//! deployed topology lives in `bench_serve`.
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
@@ -45,9 +47,9 @@ fn main() {
 
     let c = Coordinator::start(vec![spec()], BatchPolicy::default());
     b.run("throughput/64_inflight", || {
-        let rxs: Vec<_> = (0..64).map(|_| c.submit("null", g(), vec![1.0; 8])).collect();
-        for rx in rxs {
-            rx.recv().unwrap();
+        let tickets: Vec<_> = (0..64).map(|_| c.submit("null", g(), vec![1.0; 8])).collect();
+        for t in tickets {
+            t.wait().unwrap();
         }
     });
     let batches = c.metrics.batches.load(Ordering::Relaxed);
@@ -69,12 +71,12 @@ fn main() {
 
         let run_throughput = |c: &Coordinator, tag: &str| {
             let r = b.run(tag, || {
-                let rxs: Vec<_> = graphs
+                let tickets: Vec<_> = graphs
                     .iter()
                     .map(|m| c.submit(&model, m.graph.clone(), m.x.clone()))
                     .collect();
-                for rx in rxs {
-                    rx.recv().unwrap();
+                for t in tickets {
+                    t.wait().unwrap();
                 }
             });
             graphs.len() as f64 / r.summary.mean

@@ -1,0 +1,142 @@
+//! Serving-layer benchmark: coalesced micro-batching vs per-request
+//! dispatch over ONE deployed topology — the measurement behind the
+//! multi-tenant scheduler's acceptance gate. For 1 / 8 / 64 concurrent
+//! clients bursting against a pinned session, the coalescing server
+//! (max_batch = 64) should collapse each burst into ~1 `run_batch`
+//! dispatch while the per-request server (max_batch = 1) pays one
+//! dispatch per request. Emits `BENCH_serve.json` with latency,
+//! throughput, and dispatches-per-burst for both arms.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use gnnbuilder::bench::Bench;
+use gnnbuilder::datasets;
+use gnnbuilder::engine::{synth_weights, Engine};
+use gnnbuilder::model::{ConvType, ModelConfig};
+use gnnbuilder::serve::{BatchPolicy, Endpoint, Server, ServerConfig};
+use gnnbuilder::session::{ExecutionPlan, Precision, Session};
+use gnnbuilder::util::json::Json;
+
+fn server_with(max_batch: usize) -> Server {
+    Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(300),
+        },
+        queue_capacity: 8192,
+        ..ServerConfig::default()
+    })
+}
+
+fn burst(ep: &Endpoint, x: &[f32], clients: usize) {
+    let tickets: Vec<_> = (0..clients)
+        .map(|_| ep.submit(x.to_vec()).expect("admission"))
+        .collect();
+    for t in tickets {
+        t.wait().expect("response");
+    }
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let stats = &datasets::PUBMED;
+    let nodes = 2000usize;
+    let ng = datasets::gen_citation_graph(stats, nodes, 2023);
+    let cfg = ModelConfig {
+        name: "bench_serve".into(),
+        graph_input_dim: stats.node_dim,
+        gnn_conv: ConvType::Gcn,
+        gnn_hidden_dim: 32,
+        gnn_out_dim: 32,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 16,
+        mlp_num_layers: 1,
+        output_dim: stats.num_classes,
+        max_nodes: ng.graph.num_nodes,
+        max_edges: ng.graph.num_edges.max(1),
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, 7);
+    let engine = Engine::new(cfg, &weights, stats.mean_degree).unwrap();
+    let builder = || {
+        Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Batched { workspace: 0 })
+            .graph(ng.graph.clone())
+    };
+
+    println!(
+        "== serving {} nodes, {} edges: coalesced (max_batch 64) vs per-request (max_batch 1) ==",
+        ng.graph.num_nodes, ng.graph.num_edges
+    );
+    let mut cells = Vec::new();
+    for clients in [1usize, 8, 64] {
+        // coalesced arm: one flush absorbs the whole burst
+        let server = server_with(64);
+        let ep = server.deploy("bench", builder()).unwrap();
+        let co = b.run(&format!("serve/coalesced/c{clients}"), || {
+            burst(&ep, &ng.x, clients)
+        });
+        let d0 = server.metrics().pinned_dispatches.load(Ordering::Relaxed);
+        burst(&ep, &ng.x, clients);
+        let co_dispatches =
+            server.metrics().pinned_dispatches.load(Ordering::Relaxed) - d0;
+        server.shutdown();
+
+        // per-request arm: every request is its own dispatch
+        let server = server_with(1);
+        let ep = server.deploy("bench", builder()).unwrap();
+        let pr = b.run(&format!("serve/per_request/c{clients}"), || {
+            burst(&ep, &ng.x, clients)
+        });
+        let d0 = server.metrics().pinned_dispatches.load(Ordering::Relaxed);
+        burst(&ep, &ng.x, clients);
+        let pr_dispatches =
+            server.metrics().pinned_dispatches.load(Ordering::Relaxed) - d0;
+        server.shutdown();
+
+        let co_rps = clients as f64 / co.summary.mean;
+        let pr_rps = clients as f64 / pr.summary.mean;
+        println!(
+            "(c={clients}: coalesced {co_rps:.0} req/s [{co_dispatches} dispatch/burst] vs \
+             per-request {pr_rps:.0} req/s [{pr_dispatches} dispatch/burst] → {:.2}x)",
+            co_rps / pr_rps
+        );
+        cells.push(Json::obj(vec![
+            ("clients", Json::num(clients as f64)),
+            (
+                "coalesced",
+                Json::obj(vec![
+                    ("mean_s", Json::num(co.summary.mean)),
+                    ("p95_s", Json::num(co.summary.p95)),
+                    ("req_per_s", Json::num(co_rps)),
+                    ("dispatches_per_burst", Json::num(co_dispatches as f64)),
+                ]),
+            ),
+            (
+                "per_request",
+                Json::obj(vec![
+                    ("mean_s", Json::num(pr.summary.mean)),
+                    ("p95_s", Json::num(pr.summary.p95)),
+                    ("req_per_s", Json::num(pr_rps)),
+                    ("dispatches_per_burst", Json::num(pr_dispatches as f64)),
+                ]),
+            ),
+            ("coalesced_speedup", Json::num(co_rps / pr_rps)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        (
+            "graph",
+            Json::obj(vec![
+                ("profile", Json::str(stats.name)),
+                ("nodes", Json::num(ng.graph.num_nodes as f64)),
+                ("edges", Json::num(ng.graph.num_edges as f64)),
+            ]),
+        ),
+        ("cells", Json::arr(cells)),
+    ]);
+    std::fs::write("BENCH_serve.json", report.to_string_pretty()).unwrap();
+    println!("wrote BENCH_serve.json");
+}

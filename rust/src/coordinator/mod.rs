@@ -1,76 +1,59 @@
-//! Serving coordinator — the L3 "host code" (paper §VI-C) grown into a
-//! deployable runtime: a request router + dynamic batcher + worker pool
-//! in the vllm-router mold. Python never runs here; workers execute
-//! either compiled PJRT artifacts or the native engine.
+//! Legacy serving coordinator — now a thin compatibility facade over the
+//! multi-tenant serving layer ([`crate::serve`]).
 //!
-//! Batches are the unit of work end-to-end: the batcher accumulates
-//! requests per model, a worker packs each dispatch into one
-//! [`GraphBatch`] arena, and backends consume the whole batch through
-//! [`Backend::infer_batch`] (the native engine parallelizes over the
-//! packed graphs with a reusable zero-alloc [`crate::engine::Workspace`]).
-//! Backends that cannot go batch-native (PJRT executes one padded graph
-//! per call) fall back to per-view inference via the trait's default
-//! method. Engine backends are configured through the unified session
-//! API ([`BackendSpec::session`] takes a [`SessionBuilder`]) and execute
-//! through the session layer's per-request `Dispatcher`.
+//! The original router/worker loops are gone: [`Coordinator::start`]
+//! deploys each [`BackendSpec`] as a *floating* endpoint on a
+//! [`serve::Server`](crate::serve::Server) under the `default` tenant,
+//! and [`Coordinator::submit`] forwards into that endpoint's bounded
+//! admission queue. Micro-batching (deadline-or-size flush), metrics,
+//! backpressure, and panic containment are all the serving layer's —
+//! this module only keeps the model-name routing table and the
+//! backend-construction machinery ([`Backend`], [`BackendSpec`],
+//! [`EngineBackend`], [`PjrtBackend`]) that workers build on their
+//! dispatcher threads.
 //!
-//! Architecture (std threads + channels; tokio is not in the offline set):
-//!
-//! ```text
-//!  submit() ──► router queue ──► batcher (size/deadline policy)
-//!                                   │ per-model GraphBatches
-//!                                   ▼
-//!                          worker threads (one executable each)
-//!                                   │
-//!                                   ▼ responses via per-request channel
-//! ```
+//! New code should target [`crate::serve`] directly: deploy pinned
+//! sessions per `(tenant, model, topology)` and let concurrent requests
+//! coalesce into [`crate::session::Session::run_batch`] calls. The
+//! facade exists for the
+//! per-request-graph (molecule/PJRT) workload and for source
+//! compatibility: `submit` now returns a typed
+//! [`Ticket`](crate::serve::Ticket) (`.wait()` where `.recv()` used to
+//! be); `infer` is unchanged.
 
 pub mod plan_cache;
 
 pub use plan_cache::{PlanCache, PlanCacheStats};
-// shard routing types live in the session module now (they parameterize
-// both deployed sessions and serving backends); re-exported here so
-// existing `coordinator::ShardPolicy` call sites keep working
+// shard routing types live in the session module (they parameterize both
+// deployed sessions and serving backends); serving types live in the
+// serve module — both re-exported here so existing
+// `coordinator::ShardPolicy` / `coordinator::Metrics` call sites keep
+// working
+pub use crate::serve::{BatchPolicy, Metrics, Response, ServeError, Ticket};
 pub use crate::session::{ShardK, ShardPolicy};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::engine::Engine;
 use crate::graph::{Graph, GraphBatch, GraphView};
 use crate::partition::ShardedGraph;
-use crate::session::{Dispatcher, ExecutionPlan, Precision, Session, SessionBuilder};
+use crate::serve::{Endpoint, Server, ServerConfig};
+use crate::session::{Dispatcher, SessionBuilder};
 use crate::util::stats::Summary;
 
-/// One inference request: a graph routed to a named model variant.
-pub struct Request {
-    pub model: String,
-    pub graph: Graph,
-    pub x: Vec<f32>,
-    submitted: Instant,
-    respond: Sender<Response>,
-}
+/// The tenant the facade deploys every backend under.
+pub const DEFAULT_TENANT: &str = "default";
 
-/// Completed inference.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub output: Vec<f32>,
-    pub queue_seconds: f64,
-    pub service_seconds: f64,
-    /// size of the dispatch batch this request rode in
-    pub batch_size: usize,
-}
-
-/// A model backend a worker dispatches to (PJRT or native engine).
-/// Lives entirely on its worker thread (PJRT handles are not `Send`), so
-/// no `Send`/`Sync` bound — construction happens *inside* the thread via a
-/// [`BackendFactory`]. Inference consumes [`GraphView`]s so packed batch
-/// slots and standalone graphs take the same path.
+/// A model backend a dispatcher executes (PJRT or native engine).
+/// Lives entirely on its dispatcher thread (PJRT handles are not
+/// `Send`), so no `Send`/`Sync` bound — construction happens *inside*
+/// the thread via a [`BackendFactory`]. Inference consumes
+/// [`GraphView`]s so packed batch slots and standalone graphs take the
+/// same path.
 pub trait Backend {
     fn name(&self) -> &str;
 
@@ -86,13 +69,13 @@ pub trait Backend {
     }
 }
 
-/// Constructs a backend on its worker thread. The factory receives the
-/// coordinator's live [`Metrics`] so backends can wire shared counters
-/// (e.g. the shard-plan cache) into the coordinator's observability
-/// surface; backends that don't report anything ignore it.
+/// Constructs a backend on its dispatcher thread. The factory receives
+/// the serving layer's live [`Metrics`] so backends can wire shared
+/// counters (e.g. the shard-plan cache) into the observability surface;
+/// backends that don't report anything ignore it.
 pub type BackendFactory = Box<dyn FnOnce(&Metrics) -> Result<Box<dyn Backend>> + Send>;
 
-/// A named backend replica to spawn.
+/// A named backend replica to deploy.
 pub struct BackendSpec {
     pub model: String,
     pub factory: BackendFactory,
@@ -101,14 +84,15 @@ pub struct BackendSpec {
 impl BackendSpec {
     /// Native-engine replica configured through the unified session API:
     /// the builder's precision / plan / policy drive a per-request
-    /// `Dispatcher` (the floating twin of [`Session`]) on the worker
-    /// thread. The builder needs no deployed graph — requests carry
-    /// their own. Shard plans are served from the coordinator's shared
-    /// cache (`Metrics::plan_cache` — one topology partitions once
-    /// across all sharded backends) unless the builder pinned a cache.
-    /// A builder carrying a pinned `Sharded { plan: Some(_) }` fails at
-    /// backend construction — pre-built plans belong to deployed
-    /// [`Session`]s, not per-request backends.
+    /// `Dispatcher` (the floating twin of [`crate::session::Session`])
+    /// on the dispatcher thread. The builder needs no deployed graph —
+    /// requests carry their own. Shard plans are served from the
+    /// server's shared cache (`Metrics::plan_cache` — one topology
+    /// partitions once across all sharded backends) unless the builder
+    /// pinned a cache. A builder carrying a pinned
+    /// `Sharded { plan: Some(_) }` fails at backend construction —
+    /// pre-built plans belong to deployed sessions, not per-request
+    /// backends.
     /// Returns the spec plus the live [`ShardStats`] handle (shard
     /// counts, cut-edge and halo fractions per sharded dispatch).
     pub fn session(builder: SessionBuilder) -> (BackendSpec, Arc<ShardStats>) {
@@ -124,34 +108,8 @@ impl BackendSpec {
         (spec, handle)
     }
 
-    /// Native-engine replica on the batched f32 path.
-    #[deprecated(note = "use BackendSpec::session(Session::builder(engine)...)")]
-    pub fn engine(engine: Engine) -> BackendSpec {
-        BackendSpec::session(
-            Session::builder(engine)
-                .precision(Precision::F32)
-                .plan(ExecutionPlan::Batched { workspace: 0 }),
-        )
-        .0
-    }
-
-    /// Native-engine replica with large-graph shard routing.
-    #[deprecated(note = "use BackendSpec::session(Session::builder(engine)\
-        .plan(ExecutionPlan::Sharded{..}).shard_policy(policy))")]
-    pub fn engine_sharded(engine: Engine, policy: ShardPolicy) -> (BackendSpec, Arc<ShardStats>) {
-        BackendSpec::session(
-            Session::builder(engine)
-                .precision(Precision::F32)
-                .plan(ExecutionPlan::Sharded {
-                    k: policy.k,
-                    plan: None,
-                })
-                .shard_policy(policy),
-        )
-    }
-
-    /// PJRT replica: each worker constructs its own client + executable
-    /// (PJRT handles cannot cross threads).
+    /// PJRT replica: each dispatcher constructs its own client +
+    /// executable (PJRT handles cannot cross threads).
     pub fn pjrt(meta: crate::runtime::ArtifactMeta) -> BackendSpec {
         BackendSpec {
             model: meta.name.clone(),
@@ -165,8 +123,8 @@ impl BackendSpec {
 }
 
 /// Counters for the sharded dispatch path, exposed per backend (the
-/// backend lives on its worker thread; callers keep the `Arc` handle
-/// returned by [`BackendSpec::session`]).
+/// backend lives on its dispatcher thread; callers keep the `Arc`
+/// handle returned by [`BackendSpec::session`]).
 #[derive(Debug, Default)]
 pub struct ShardStats {
     /// requests routed through the sharded path
@@ -204,9 +162,9 @@ impl ShardStats {
 /// session layer's per-request `Dispatcher`, which owns the long-lived
 /// warm [`crate::engine::Workspace`] and resolves the execution path
 /// (whole-graph batch runner vs partitioned forward) per request from
-/// the configured [`ExecutionPlan`] + [`ShardPolicy`]. Outputs are
-/// bit-identical across paths for the configured precision, so routing
-/// can never change an answer.
+/// the configured [`crate::session::ExecutionPlan`] + [`ShardPolicy`].
+/// Outputs are bit-identical across paths for the configured precision,
+/// so routing can never change an answer.
 pub struct EngineBackend {
     pub(crate) d: Dispatcher,
 }
@@ -235,7 +193,7 @@ impl Backend for Engine {
     }
 }
 
-/// PJRT-backed backend (worker-thread local).
+/// PJRT-backed backend (dispatcher-thread local).
 pub struct PjrtBackend {
     _rt: crate::runtime::Runtime,
     pub exe: Arc<crate::runtime::Executable>,
@@ -253,302 +211,91 @@ impl Backend for PjrtBackend {
     }
 }
 
-/// Dynamic batching policy (paper's host loop batches dataset graphs; we
-/// expose the knobs a serving deployment needs).
-#[derive(Debug, Clone, Copy)]
-pub struct BatchPolicy {
-    /// dispatch when this many requests for one model are queued
-    pub max_batch: usize,
-    /// ... or when the oldest has waited this long
-    pub max_wait: Duration,
-}
-
-impl Default for BatchPolicy {
-    fn default() -> Self {
-        BatchPolicy {
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
-        }
-    }
-}
-
-/// Live counters exposed by the coordinator.
-#[derive(Debug, Default)]
-pub struct Metrics {
-    pub submitted: AtomicU64,
-    pub completed: AtomicU64,
-    pub errors: AtomicU64,
-    pub batches: AtomicU64,
-    pub peak_queue: AtomicUsize,
-    /// the coordinator's shard-plan cache, shared by every sharded
-    /// engine backend it spawns (plans depend only on topology + policy,
-    /// so one deployed graph served by several models partitions once).
-    /// Counters are at `plan_cache.stats()` — `builds` staying at 1
-    /// across repeated requests is the "zero re-partitions" guarantee
-    pub plan_cache: Arc<PlanCache>,
-    latencies: Mutex<Vec<f64>>,
-    batch_sizes: Mutex<Vec<f64>>,
-    queue_depths: Mutex<HashMap<String, usize>>,
-}
-
-impl Metrics {
-    pub fn latency_summary(&self) -> Summary {
-        Summary::of(&self.latencies.lock().unwrap())
-    }
-
-    /// Distribution of dispatched batch sizes.
-    pub fn batch_size_summary(&self) -> Summary {
-        Summary::of(&self.batch_sizes.lock().unwrap())
-    }
-
-    /// Power-of-two histogram of dispatched batch sizes:
-    /// `[(bucket_upper_bound, count), ...]` for non-empty buckets.
-    pub fn batch_histogram(&self) -> Vec<(usize, u64)> {
-        let sizes = self.batch_sizes.lock().unwrap();
-        let mut buckets: Vec<(usize, u64)> = Vec::new();
-        for &s in sizes.iter() {
-            let mut hi = 1usize;
-            while (hi as f64) < s {
-                hi *= 2;
-            }
-            match buckets.iter_mut().find(|(b, _)| *b == hi) {
-                Some((_, c)) => *c += 1,
-                None => buckets.push((hi, 1)),
-            }
-        }
-        buckets.sort_unstable_by_key(|&(b, _)| b);
-        buckets
-    }
-
-    /// Current queued depth of one model's pending requests.
-    pub fn queue_depth(&self, model: &str) -> usize {
-        self.queue_depths
-            .lock()
-            .unwrap()
-            .get(model)
-            .copied()
-            .unwrap_or(0)
-    }
-
-    /// Snapshot of all per-model queue depths.
-    pub fn queue_depths(&self) -> HashMap<String, usize> {
-        self.queue_depths.lock().unwrap().clone()
-    }
-
-    fn record_batch(&self, size: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(size as f64);
-    }
-
-    fn set_queue_depth(&self, model: &str, depth: usize) {
-        let mut g = self.queue_depths.lock().unwrap();
-        if depth == 0 {
-            g.remove(model);
-        } else if let Some(d) = g.get_mut(model) {
-            *d = depth; // no per-call String allocation on the hot path
-        } else {
-            g.insert(model.to_string(), depth);
-        }
-    }
-}
-
-enum Msg {
-    Work(Request),
-    Shutdown,
-}
-
-/// The coordinator: router thread + batcher + N workers per model.
+/// The compatibility facade: model-name routing over a
+/// [`serve::Server`](crate::serve::Server) holding one floating endpoint
+/// per backend.
 pub struct Coordinator {
-    tx: Sender<Msg>,
+    server: Server,
+    endpoints: HashMap<String, Endpoint>,
     pub metrics: Arc<Metrics>,
-    router: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Spawn with one worker thread per backend replica.
+    /// Deploy one floating endpoint (with its own dispatcher thread) per
+    /// backend replica. The legacy API never applied backpressure or
+    /// quotas, so the facade configures unbounded admission.
     pub fn start(backends: Vec<BackendSpec>, policy: BatchPolicy) -> Coordinator {
-        let (tx, rx) = channel::<Msg>();
-        let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let router = std::thread::spawn(move || router_loop(rx, backends, policy, m2));
+        let server = Server::start(ServerConfig {
+            policy,
+            queue_capacity: usize::MAX,
+            tenant_quota: usize::MAX,
+            idle_ttl: None,
+            plan_cache: None,
+        });
+        let mut endpoints = HashMap::new();
+        for spec in backends {
+            let model = spec.model.clone();
+            match server.deploy_backend(DEFAULT_TENANT, spec) {
+                Ok(ep) => {
+                    endpoints.insert(model, ep);
+                }
+                // duplicate model names: first replica wins (the legacy
+                // router silently leaked the first — this is stricter)
+                Err(e) => eprintln!("coordinator: failed to deploy `{model}`: {e}"),
+            }
+        }
+        let metrics = server.metrics().clone();
         Coordinator {
-            tx,
+            server,
+            endpoints,
             metrics,
-            router: Some(router),
         }
     }
 
-    /// Submit a request; returns the response receiver immediately.
-    pub fn submit(&self, model: &str, graph: Graph, x: Vec<f32>) -> Receiver<Response> {
-        let (rtx, rrx) = channel();
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        let _ = self.tx.send(Msg::Work(Request {
-            model: model.to_string(),
-            graph,
-            x,
-            submitted: Instant::now(),
-            respond: rtx,
-        }));
-        rrx
+    /// The serving layer underneath — the migration path off the facade
+    /// (deploy pinned sessions, per-tenant endpoints, quotas).
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// The floating endpoint serving one model.
+    pub fn endpoint(&self, model: &str) -> Option<&Endpoint> {
+        self.endpoints.get(model)
+    }
+
+    /// Submit a request; returns its [`Ticket`] immediately. Routing
+    /// failures come back as already-failed tickets, so `wait()` always
+    /// yields a typed answer — never a hang.
+    pub fn submit(&self, model: &str, graph: Graph, x: Vec<f32>) -> Ticket {
+        match self.endpoints.get(model) {
+            Some(ep) => match ep.submit_graph(graph, x) {
+                Ok(t) => t,
+                Err(e) => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    Ticket::failed(e)
+                }
+            },
+            None => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                Ticket::failed(ServeError::UnknownEndpoint {
+                    model: model.to_string(),
+                })
+            }
+        }
     }
 
     /// Submit and block for the response.
     pub fn infer(&self, model: &str, graph: Graph, x: Vec<f32>) -> Result<Response> {
-        self.submit(model, graph, x)
-            .recv()
-            .map_err(|_| anyhow!("coordinator dropped the request (unknown model?)"))
+        Ok(self.submit(model, graph, x).wait()?)
     }
 
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.router.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.router.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn router_loop(
-    rx: Receiver<Msg>,
-    backends: Vec<BackendSpec>,
-    policy: BatchPolicy,
-    metrics: Arc<Metrics>,
-) {
-    // per-model work channels feeding worker threads
-    let mut model_tx: HashMap<String, Sender<Vec<Request>>> = HashMap::new();
-    let mut workers = Vec::new();
-    for spec in backends {
-        let (wtx, wrx) = channel::<Vec<Request>>();
-        model_tx.insert(spec.model.clone(), wtx);
-        let m = metrics.clone();
-        let factory = spec.factory;
-        workers.push(std::thread::spawn(move || worker_loop(wrx, factory, m)));
-    }
-
-    // batcher state: pending queue per model
-    let mut pending: HashMap<String, Vec<Request>> = HashMap::new();
-    let mut oldest: HashMap<String, Instant> = HashMap::new();
-    loop {
-        // wait up to the batching deadline for more work
-        let timeout = policy.max_wait;
-        let msg = rx.recv_timeout(timeout);
-        match msg {
-            Ok(Msg::Work(req)) => {
-                if !model_tx.contains_key(&req.model) {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    drop(req); // sender sees a closed channel
-                    continue;
-                }
-                let q = pending.entry(req.model.clone()).or_default();
-                oldest.entry(req.model.clone()).or_insert_with(Instant::now);
-                q.push(req);
-                let depth: usize = pending.values().map(|v| v.len()).sum();
-                metrics.peak_queue.fetch_max(depth, Ordering::Relaxed);
-            }
-            Ok(Msg::Shutdown) => break,
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
-        }
-        // dispatch policy: size or age triggers
-        for (model, q) in pending.iter_mut() {
-            let age_hit = oldest
-                .get(model)
-                .map(|t| t.elapsed() >= policy.max_wait)
-                .unwrap_or(false);
-            while q.len() >= policy.max_batch || (age_hit && !q.is_empty()) {
-                let take = q.len().min(policy.max_batch);
-                let batch: Vec<Request> = q.drain(..take).collect();
-                metrics.record_batch(batch.len());
-                let _ = model_tx[model].send(batch);
-                if q.is_empty() {
-                    oldest.remove(model);
-                    break;
-                }
-            }
-            metrics.set_queue_depth(model, q.len());
-        }
-    }
-    // flush remaining queued work before shutdown
-    for (model, q) in pending {
-        if let Some(tx) = model_tx.get(&model) {
-            if !q.is_empty() {
-                metrics.record_batch(q.len());
-                metrics.set_queue_depth(&model, 0);
-                let _ = tx.send(q);
-            }
-        }
-    }
-    drop(model_tx); // closes worker channels
-    for w in workers {
-        let _ = w.join();
-    }
-}
-
-fn worker_loop(rx: Receiver<Vec<Request>>, factory: BackendFactory, metrics: Arc<Metrics>) {
-    let backend = match factory(&metrics) {
-        Ok(b) => b,
-        Err(e) => {
-            eprintln!("backend construction failed: {e:#}");
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
-            return;
-        }
-    };
-    while let Ok(reqs) = rx.recv() {
-        if reqs.is_empty() {
-            continue;
-        }
-        // queue time ends when the batch hits the backend
-        let queue_seconds: Vec<f64> = reqs
-            .iter()
-            .map(|r| r.submitted.elapsed().as_secs_f64())
-            .collect();
-        // pack the dispatch into one arena; backends consume views
-        let batch = GraphBatch::pack(reqs.iter().map(|r| (&r.graph, r.x.as_slice())));
-        let batch_size = batch.len();
-        let t0 = Instant::now();
-        let mut results = backend.infer_batch(&batch);
-        drop(batch);
-        // enforce the trait's length contract so a misbehaving backend
-        // cannot silently strand trailing requests (their senders would
-        // drop without a Response or an error count)
-        results.truncate(batch_size);
-        let got = results.len();
-        while results.len() < batch_size {
-            results.push(Err(anyhow!(
-                "backend returned {got} results for a {batch_size}-graph batch"
-            )));
-        }
-        // each request's service share of the batch execution
-        let service_seconds = t0.elapsed().as_secs_f64() / batch_size as f64;
-        for ((req, qs), result) in reqs.into_iter().zip(queue_seconds).zip(results) {
-            match result {
-                Ok(output) => {
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .latencies
-                        .lock()
-                        .unwrap()
-                        .push(qs + service_seconds);
-                    let _ = req.respond.send(Response {
-                        output,
-                        queue_seconds: qs,
-                        service_seconds,
-                        batch_size,
-                    });
-                }
-                Err(_) => {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-        }
+    /// Flush queued work and stop every dispatcher. Idempotent:
+    /// `shutdown()` followed by `Drop` (or another `shutdown()`) joins
+    /// nothing twice; submissions afterwards fail with
+    /// [`ServeError::ShuttingDown`].
+    pub fn shutdown(&self) {
+        self.server.shutdown();
     }
 }
 
@@ -558,6 +305,8 @@ mod tests {
     use crate::datasets;
     use crate::engine::synth_weights;
     use crate::model::{ConvType, ModelConfig};
+    use crate::session::{ExecutionPlan, Precision, Session};
+    use std::time::Duration;
 
     /// Deterministic toy backend: output = [sum(x), num_nodes].
     struct Toy {
@@ -611,7 +360,25 @@ mod tests {
         let c = Coordinator::start(vec![toy("a", Duration::ZERO)], BatchPolicy::default());
         let err = c.infer("nope", toy_graph(), vec![1.0]);
         assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("unknown model"));
         assert_eq!(c.metrics.errors.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    /// The facade is a view over the serving layer: every backend is a
+    /// floating endpoint under the `default` tenant.
+    #[test]
+    fn facade_deploys_floating_endpoints_under_the_default_tenant() {
+        let c = Coordinator::start(
+            vec![toy("a", Duration::ZERO), toy("b", Duration::ZERO)],
+            BatchPolicy::default(),
+        );
+        assert_eq!(c.server().tenant_endpoints(DEFAULT_TENANT), 2);
+        let ep = c.endpoint("a").unwrap();
+        assert_eq!(ep.tenant(), DEFAULT_TENANT);
+        assert_eq!(ep.model(), "a");
+        assert_eq!(ep.topology(), None, "facade endpoints are floating");
+        assert!(ep.session().is_none());
         c.shutdown();
     }
 
@@ -624,11 +391,11 @@ mod tests {
                 max_wait: Duration::from_millis(1),
             },
         );
-        let receivers: Vec<_> = (0..32)
+        let tickets: Vec<_> = (0..32)
             .map(|i| c.submit("m", toy_graph(), vec![i as f32]))
             .collect();
-        for (i, rx) in receivers.into_iter().enumerate() {
-            let r = rx.recv().unwrap();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = t.wait().unwrap();
             assert_eq!(r.output[0], i as f32);
             assert!(r.batch_size <= 4);
         }
@@ -640,7 +407,10 @@ mod tests {
 
     #[test]
     fn latency_metrics_accumulate() {
-        let c = Coordinator::start(vec![toy("m", Duration::from_micros(100))], BatchPolicy::default());
+        let c = Coordinator::start(
+            vec![toy("m", Duration::from_micros(100))],
+            BatchPolicy::default(),
+        );
         for _ in 0..10 {
             c.infer("m", toy_graph(), vec![1.0]).unwrap();
         }
@@ -659,11 +429,61 @@ mod tests {
                 max_wait: Duration::from_millis(50),
             },
         );
-        let rx = c.submit("m", toy_graph(), vec![2.0]);
+        let t = c.submit("m", toy_graph(), vec![2.0]);
         c.shutdown();
         // flushed on shutdown even though the batch never filled
-        let r = rx.recv().unwrap();
+        let r = t.wait().unwrap();
         assert_eq!(r.output[0], 2.0);
+    }
+
+    /// Satellite regression: `shutdown()` is idempotent and `Drop`-safe —
+    /// no double-join of dispatcher threads — and submissions after
+    /// shutdown fail with a typed error instead of vanishing.
+    #[test]
+    fn shutdown_is_idempotent_and_drop_safe() {
+        let c = Coordinator::start(vec![toy("m", Duration::ZERO)], BatchPolicy::default());
+        c.infer("m", toy_graph(), vec![1.0]).unwrap();
+        c.shutdown();
+        c.shutdown(); // second explicit call: no-op
+        let late = c.submit("m", toy_graph(), vec![1.0]).wait();
+        assert_eq!(late.unwrap_err(), ServeError::ShuttingDown);
+        drop(c); // Drop after shutdown: joins nothing twice
+    }
+
+    /// Satellite regression: a panicking backend surfaces as a typed
+    /// error on every in-flight ticket — never a hung (or dropped)
+    /// receiver — and the dispatcher survives to answer later requests.
+    #[test]
+    fn worker_panic_surfaces_as_typed_errors_on_tickets() {
+        struct Panicky;
+        impl Backend for Panicky {
+            fn name(&self) -> &str {
+                "panicky"
+            }
+            fn infer(&self, _: GraphView<'_>, _: &[f32]) -> Result<Vec<f32>> {
+                panic!("backend exploded");
+            }
+        }
+        let spec = BackendSpec {
+            model: "panicky".into(),
+            factory: Box::new(|_: &Metrics| Ok(Box::new(Panicky) as Box<dyn Backend>)),
+        };
+        let c = Coordinator::start(vec![spec], BatchPolicy::default());
+        let tickets: Vec<_> = (0..3)
+            .map(|_| c.submit("panicky", toy_graph(), vec![1.0]))
+            .collect();
+        for t in tickets {
+            let e = t.wait().unwrap_err();
+            assert!(
+                matches!(&e, ServeError::Backend(m) if m.contains("panicked")),
+                "got {e:?}"
+            );
+        }
+        assert_eq!(c.metrics.errors.load(Ordering::Relaxed), 3);
+        // the dispatcher is still alive and keeps answering
+        let e = c.submit("panicky", toy_graph(), vec![1.0]).wait();
+        assert!(e.is_err());
+        c.shutdown();
     }
 
     #[test]
@@ -675,21 +495,25 @@ mod tests {
                 max_wait: Duration::from_millis(1),
             },
         );
-        let receivers: Vec<_> = (0..24)
+        let tickets: Vec<_> = (0..24)
             .map(|i| c.submit("m", toy_graph(), vec![i as f32]))
             .collect();
-        for rx in receivers {
-            rx.recv().unwrap();
+        for t in tickets {
+            t.wait().unwrap();
         }
         let sizes = c.metrics.batch_size_summary();
         assert_eq!(sizes.n as u64, c.metrics.batches.load(Ordering::Relaxed));
         let hist = c.metrics.batch_histogram();
         let total: u64 = hist.iter().map(|&(_, n)| n).sum();
         assert_eq!(total as usize, sizes.n);
-        assert!(hist.iter().all(|&(b, _)| b <= 4), "bucket over max_batch: {hist:?}");
+        assert!(
+            hist.iter().all(|&(b, _)| b <= 4),
+            "bucket over max_batch: {hist:?}"
+        );
         // queues fully drained
         assert_eq!(c.metrics.queue_depth("m"), 0);
         assert!(c.metrics.queue_depths().is_empty());
+        assert_eq!(c.metrics.tenant_queue_depth(DEFAULT_TENANT), 0);
         c.shutdown();
     }
 
@@ -725,46 +549,16 @@ mod tests {
                 max_wait: Duration::from_millis(1),
             },
         );
-        let receivers: Vec<_> = graphs
+        let tickets: Vec<_> = graphs
             .iter()
             .map(|g| c.submit("toy_engine", g.graph.clone(), g.x.clone()))
             .collect();
-        for (g, rx) in graphs.iter().zip(receivers) {
+        for (g, t) in graphs.iter().zip(tickets) {
             let direct = engine.forward(&g.graph, &g.x).unwrap();
-            let via = rx.recv().unwrap();
+            let via = t.wait().unwrap();
             assert_eq!(via.output, direct, "batched path diverged");
         }
         assert!(c.metrics.batch_size_summary().max >= 1.0);
-        c.shutdown();
-    }
-
-    /// The deprecated `BackendSpec::engine` wrapper still serves (it
-    /// lowers onto the session spec), answering identically to direct
-    /// engine calls.
-    #[test]
-    fn deprecated_engine_spec_still_serves() {
-        let cfg = ModelConfig {
-            name: "compat_engine".into(),
-            graph_input_dim: datasets::ESOL.node_dim,
-            gnn_conv: ConvType::Gcn,
-            gnn_hidden_dim: 6,
-            gnn_out_dim: 6,
-            gnn_num_layers: 1,
-            mlp_hidden_dim: 4,
-            mlp_num_layers: 1,
-            output_dim: 2,
-            ..ModelConfig::default()
-        };
-        let weights = synth_weights(&cfg, 3);
-        let engine = Engine::new(cfg, &weights, datasets::ESOL.mean_degree).unwrap();
-        #[allow(deprecated)]
-        let spec = BackendSpec::engine(engine.clone());
-        let c = Coordinator::start(vec![spec], BatchPolicy::default());
-        let graphs = datasets::gen_dataset(&datasets::ESOL, 3, 5, 600, 600);
-        for g in &graphs {
-            let via = c.infer("compat_engine", g.graph.clone(), g.x.clone()).unwrap();
-            assert_eq!(via.output, engine.forward(&g.graph, &g.x).unwrap());
-        }
         c.shutdown();
     }
 
@@ -811,11 +605,14 @@ mod tests {
         );
         let c = Coordinator::start(vec![spec], BatchPolicy::default());
 
-        let rx_small = c.submit("shard_router", small.graph.clone(), small.x.clone());
-        let rx_big = c.submit("shard_router", big.graph.clone(), big.x.clone());
-        let via_small = rx_small.recv().unwrap();
-        let via_big = rx_big.recv().unwrap();
-        assert_eq!(via_small.output, engine.forward(&small.graph, &small.x).unwrap());
+        let t_small = c.submit("shard_router", small.graph.clone(), small.x.clone());
+        let t_big = c.submit("shard_router", big.graph.clone(), big.x.clone());
+        let via_small = t_small.wait().unwrap();
+        let via_big = t_big.wait().unwrap();
+        assert_eq!(
+            via_small.output,
+            engine.forward(&small.graph, &small.x).unwrap()
+        );
         assert_eq!(via_big.output, engine.forward(&big.graph, &big.x).unwrap());
 
         // exactly the one large request took the sharded path
@@ -825,8 +622,11 @@ mod tests {
         assert_eq!(counts.mean, 4.0);
         assert_eq!(shard_stats.cut_fraction_summary().n, 1);
         assert!(shard_stats.halo_fraction_summary().mean > 0.0);
-        // the plan landed in the coordinator's shared cache
-        assert_eq!(c.metrics.plan_cache.stats().builds.load(Ordering::Relaxed), 1);
+        // the plan landed in the server's shared cache
+        assert_eq!(
+            c.metrics.plan_cache.stats().builds.load(Ordering::Relaxed),
+            1
+        );
         c.shutdown();
     }
 
@@ -881,7 +681,10 @@ mod tests {
                 .unwrap();
             assert_eq!(via.output, engine.forward(&big.graph, &x).unwrap());
         }
-        assert_eq!(shard_stats.dispatches.load(Ordering::Relaxed), rounds as u64);
+        assert_eq!(
+            shard_stats.dispatches.load(Ordering::Relaxed),
+            rounds as u64
+        );
         let (hits, misses, builds, evictions) = c.metrics.plan_cache.stats().snapshot();
         assert_eq!(builds, 1, "an identical topology was re-partitioned");
         assert_eq!(misses, 1);
@@ -890,9 +693,9 @@ mod tests {
         c.shutdown();
     }
 
-    /// The plan cache is coordinator-wide: two sharded backends (two
-    /// models) serving the same topology under the same policy share one
-    /// plan — a single partition for the whole deployment.
+    /// The plan cache is server-wide: two sharded backends (two models)
+    /// serving the same topology under the same policy share one plan —
+    /// a single partition for the whole deployment.
     #[test]
     fn plan_cache_is_shared_across_sharded_backends() {
         let stats = &datasets::PUBMED;
@@ -923,20 +726,22 @@ mod tests {
             k: ShardK::Fixed(4),
             seed: 3,
         };
-        // one model through the deprecated wrapper (still supported), one
-        // through the session spec — both share the coordinator's cache
-        #[allow(deprecated)]
-        let (spec_a, _) = BackendSpec::engine_sharded(engine_a.clone(), policy);
-        let (spec_b, _) = BackendSpec::session(
-            Session::builder(engine_b.clone())
-                .precision(Precision::F32)
-                .plan(ExecutionPlan::Sharded {
-                    k: policy.k,
-                    plan: None,
-                })
-                .shard_policy(policy),
+        let mk_spec = |engine: &Engine| {
+            BackendSpec::session(
+                Session::builder(engine.clone())
+                    .precision(Precision::F32)
+                    .plan(ExecutionPlan::Sharded {
+                        k: policy.k,
+                        plan: None,
+                    })
+                    .shard_policy(policy),
+            )
+            .0
+        };
+        let c = Coordinator::start(
+            vec![mk_spec(&engine_a), mk_spec(&engine_b)],
+            BatchPolicy::default(),
         );
-        let c = Coordinator::start(vec![spec_a, spec_b], BatchPolicy::default());
 
         let via_a = c.infer("shard_a", big.graph.clone(), big.x.clone()).unwrap();
         let via_b = c.infer("shard_b", big.graph.clone(), big.x.clone()).unwrap();
@@ -945,7 +750,10 @@ mod tests {
 
         // one topology + one policy → one partition, even across models
         let (hits, misses, builds, _) = c.metrics.plan_cache.stats().snapshot();
-        assert_eq!(builds, 1, "the second backend re-partitioned a cached topology");
+        assert_eq!(
+            builds, 1,
+            "the second backend re-partitioned a cached topology"
+        );
         assert_eq!(misses, 1);
         assert_eq!(hits, 1);
         c.shutdown();
@@ -1046,7 +854,7 @@ mod tests {
                 ..ShardPolicy::default()
             })
             .into_dispatcher(None, Arc::new(PlanCache::with_capacity(4)))
-                .unwrap(),
+            .unwrap(),
         };
         assert_eq!(backend_single.d.route(&big.graph.view()), None);
     }

@@ -13,7 +13,8 @@
 //!   simulator ([`hls`]), direct-fit performance models ([`perfmodel`]),
 //!   design-space exploration ([`dse`]), the PJRT deployment runtime
 //!   ([`runtime`]), baselines ([`baselines`]), the fixed/float testbench
-//!   ([`testbench`]), and the serving coordinator ([`coordinator`]).
+//!   ([`testbench`]), and the multi-tenant serving layer ([`serve`],
+//!   with [`coordinator`] as its legacy facade).
 //!
 //! Inference has ONE public entry point: the typed [`session`] API.
 //! [`session::Session::builder`] takes an [`engine::Engine`], a
@@ -26,13 +27,25 @@
 //! property suite in `tests/session.rs`), so the framework — not the
 //! caller — owns path selection, GenGNN-style.
 //!
-//! Under the hood, the serving/batch path runs end-to-end on packed
-//! batches: request → [`coordinator`] batcher → [`graph::GraphBatch`]
-//! arena → the engine's packed-batch runner over per-worker zero-alloc
+//! Serving is multi-tenant and topology-aware: the [`serve`] layer pins
+//! pre-warmed sessions per `(tenant, model, topology)` in a
+//! [`serve::SessionKey`]-indexed registry (explicit deploy/retire,
+//! per-tenant quotas, idle eviction) and its micro-batching scheduler
+//! coalesces concurrent requests against one deployed graph into single
+//! [`session::Session::run_batch`] calls — bit-identical to per-request
+//! dispatch, counter-asserted via [`serve::Metrics`]. Submission is
+//! streaming: [`serve::Endpoint::submit`] returns a typed
+//! [`serve::Ticket`] with explicit backpressure
+//! ([`serve::ServeError::Overloaded`]). Requests that carry their own
+//! graph (molecule workloads, PJRT replicas) flow through *floating*
+//! endpoints instead: flushes pack a [`graph::GraphBatch`] arena for the
+//! engine's packed-batch runner over per-worker zero-alloc
 //! [`engine::Workspace`]s (parallelized via [`util::pool::par_map`] on a
 //! persistent parked worker pool), with per-graph [`graph::GraphView`]s
-//! keeping batched outputs bit-identical to the single-graph path.
-//! `examples/serve_molecules.rs` drives the whole pipeline.
+//! keeping batched outputs bit-identical to the single-graph path. The
+//! legacy [`coordinator::Coordinator`] is a thin facade over floating
+//! endpoints. `examples/serve_molecules.rs` drives the whole pipeline;
+//! `gnnbuilder serve` runs a mixed-tenant synthetic workload.
 //!
 //! The sharded large-graph path serves the node-level workload class
 //! (citation/social graphs): [`partition`] grows a seeded K-way
@@ -62,6 +75,7 @@ pub mod model;
 pub mod partition;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod testbench;
 pub mod util;

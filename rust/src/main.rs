@@ -16,6 +16,7 @@ use gnnbuilder::hls::{self, GraphStats};
 use gnnbuilder::model::space::DesignSpace;
 use gnnbuilder::model::{benchmark_config, ConvType, ModelConfig};
 use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
+use gnnbuilder::serve::{BatchPolicy, Server, ServerConfig};
 use gnnbuilder::session::{
     ExecutionPlan, Precision, ResolvedPath, Session, ShardK, ShardPolicy,
 };
@@ -34,6 +35,9 @@ USAGE:
                      [--conv ...] [--hidden N] [--layers N] [--seed N]
                      [--plan-cache-bytes N (0 = count-bounded cache)]
                                             (Session-driven partition + sharded inference)
+  gnnbuilder serve   [--tenants N] [--requests N] [--nodes N] [--conv ...] [--hidden N]
+                     [--max-batch N] [--wait-us N] [--queue-cap N] [--tenant-quota N]
+                     [--seed N]              (multi-tenant micro-batched serving demo)
   gnnbuilder list                                             (artifacts in manifest)
 ";
 
@@ -45,6 +49,7 @@ fn main() -> Result<()> {
         "synth" => cmd_synth(),
         "dse" => cmd_dse(),
         "shard" => cmd_shard(),
+        "serve" => cmd_serve(),
         "list" => cmd_list(),
         _ => {
             print!("{USAGE}");
@@ -356,6 +361,158 @@ fn cmd_shard() -> Result<()> {
     } else {
         anyhow::bail!("sharded output diverged from whole-graph forward");
     }
+}
+
+fn cmd_serve() -> Result<()> {
+    let args = Args::from_env(2, &[])?;
+    let tenants = args.get_usize("tenants", 3)?;
+    let requests = args.get_usize("requests", 256)?;
+    let nodes = args.get_usize("nodes", 2000)?;
+    let conv = parse_conv(&args)?;
+    let hidden = args.get_usize("hidden", 32)?;
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let wait_us = args.get_u64("wait-us", 500)?;
+    let queue_cap = args.get_usize("queue-cap", 4096)?;
+    let quota = args.get_usize("tenant-quota", 8)?;
+    let seed = args.get_u64("seed", 2023)?;
+    args.reject_unknown()?;
+
+    let stats = &datasets::PUBMED;
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(wait_us),
+        },
+        queue_capacity: queue_cap,
+        tenant_quota: quota,
+        idle_ttl: None,
+        plan_cache: None,
+    });
+    println!(
+        "server up: max_batch {max_batch}, max_wait {wait_us} µs, \
+         queue capacity {queue_cap}, tenant quota {quota}"
+    );
+
+    // one deployed topology per tenant — same model, distinct citation
+    // graphs — exercising the (tenant, model, topology) registry keying
+    let mut deployed: Vec<(String, gnnbuilder::serve::Endpoint, Vec<f32>)> = Vec::new();
+    for t in 0..tenants {
+        let ng = datasets::gen_citation_graph(stats, nodes, seed + t as u64);
+        let cfg = ModelConfig {
+            name: format!("serve_{}_{}", conv.as_str(), stats.name),
+            graph_input_dim: stats.node_dim,
+            gnn_conv: conv,
+            gnn_hidden_dim: hidden,
+            gnn_out_dim: hidden,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: hidden,
+            mlp_num_layers: 1,
+            output_dim: ng.num_classes,
+            max_nodes: ng.graph.num_nodes,
+            max_edges: ng.graph.num_edges.max(1),
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, seed + t as u64);
+        let engine = Engine::new(cfg, &weights, stats.mean_degree)?;
+        let tenant = format!("tenant{t}");
+        let ep = server.deploy(
+            &tenant,
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone()),
+        )?;
+        println!(
+            "  deployed {tenant}/{} over topology {:016x} ({} nodes)",
+            ep.model(),
+            ep.topology().unwrap_or(0),
+            ng.graph.num_nodes
+        );
+        deployed.push((tenant, ep, ng.x));
+    }
+
+    // mixed-tenant synthetic workload: one client thread per tenant
+    // bursting `requests` feature sets against its deployed topology
+    println!("streaming {requests} requests per tenant ({tenants} tenants)…");
+    let t0 = std::time::Instant::now();
+    let (served, rejected): (usize, usize) = std::thread::scope(|s| {
+        let handles: Vec<_> = deployed
+            .iter()
+            .map(|(tenant, ep, x)| {
+                s.spawn(move || {
+                    let mut tickets = Vec::with_capacity(requests);
+                    let mut rejects = 0usize;
+                    for i in 0..requests {
+                        let jitter = i as f32 * 1e-3;
+                        let xs: Vec<f32> = x.iter().map(|v| v + jitter).collect();
+                        match ep.submit(xs) {
+                            Ok(t) => tickets.push(t),
+                            Err(e) => {
+                                rejects += 1;
+                                if rejects == 1 {
+                                    eprintln!("  {tenant}: first reject: {e}");
+                                }
+                            }
+                        }
+                    }
+                    let mut ok = 0usize;
+                    for t in tickets {
+                        if t.wait().is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    (ok, rejects)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .fold((0, 0), |(a, b), (ok, rej)| (a + ok, b + rej))
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = server.metrics();
+    let lat = m.latency_summary();
+    let co = m.coalesced_summary();
+    let dispatches = m
+        .pinned_dispatches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "served {served} requests in {wall:.2}s → {:.0} req/s ({rejected} rejected)",
+        served as f64 / wall.max(1e-9)
+    );
+    println!(
+        "latency: mean {:.2} ms | p50 {:.2} | p95 {:.2} | p99 {:.2}",
+        lat.mean * 1e3,
+        lat.p50 * 1e3,
+        lat.p95 * 1e3,
+        lat.p99 * 1e3
+    );
+    println!(
+        "coalescing: {dispatches} run_batch dispatches for {served} requests \
+         ({:.1} requests/dispatch) | batch sizes mean {:.1} max {:.0} | histogram {:?}",
+        served as f64 / dispatches.max(1) as f64,
+        co.mean,
+        co.max,
+        m.coalesced_histogram()
+    );
+    for (tenant, ep, _) in &deployed {
+        println!(
+            "  {tenant}: {} dispatches, queue depth {}, rejects {}",
+            ep.dispatches(),
+            ep.queue_depth(),
+            m.rejects(tenant)
+        );
+    }
+    println!(
+        "peak queue depth {} | errors {} | plan cache (hits, misses, builds, evictions) {:?}",
+        m.peak_queue.load(std::sync::atomic::Ordering::Relaxed),
+        m.errors.load(std::sync::atomic::Ordering::Relaxed),
+        m.plan_cache.stats().snapshot()
+    );
+    server.shutdown();
+    Ok(())
 }
 
 fn cmd_list() -> Result<()> {

@@ -1,0 +1,330 @@
+//! Serving observability — the live counters for the multi-tenant
+//! serving layer, shared by [`Server`](super::Server), every endpoint's
+//! micro-batch dispatcher, and the legacy
+//! [`Coordinator`](crate::coordinator::Coordinator) facade (which
+//! re-exports this type, so existing `coordinator::Metrics` call sites
+//! keep working).
+//!
+//! Three families of signals:
+//!
+//! - **flow counters** — submitted / completed / errors / batches plus
+//!   the admission-control counters the scheduler adds: `rejected`
+//!   (queue-full backpressure, also tracked per tenant), `retired`, and
+//!   `idle_evictions` (registry lifecycle).
+//! - **coalescing evidence** — `pinned_dispatches` counts actual
+//!   [`Session::run_batch`](crate::session::Session::run_batch) calls on
+//!   pinned endpoints; together with the coalesced-batch histogram it
+//!   carries the serving acceptance gate: N concurrent requests against
+//!   one deployed topology must collapse into ≲ N/max_batch dispatches.
+//! - **depth gauges** — live queue depth per model *and* per tenant, plus
+//!   the global peak, so multi-tenant overload is attributable.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::PlanCache;
+use crate::util::stats::Summary;
+
+/// Most-recent samples kept per distribution. A serving daemon runs
+/// indefinitely; unbounded sample vectors would be a slow leak (and
+/// summaries would scan an ever-growing history under a mutex), so
+/// each distribution keeps a sliding window of the latest samples.
+const SAMPLE_WINDOW: usize = 65_536;
+
+/// Fixed-capacity sliding window of f64 samples (ring overwrite once
+/// full; sample order is irrelevant to summaries and histograms).
+#[derive(Debug, Default)]
+struct SampleWindow {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl SampleWindow {
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < SAMPLE_WINDOW {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % SAMPLE_WINDOW;
+        }
+    }
+}
+
+/// Live counters exposed by the serving layer.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// requests accepted into an admission queue (plus unknown-model
+    /// attempts through the coordinator facade)
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    /// dispatched flushes across all endpoints (pinned and floating)
+    pub batches: AtomicU64,
+    /// coalesced `Session::run_batch` calls on pinned endpoints — the
+    /// counter behind the "N requests, ≤ N/max_batch dispatches" gate
+    pub pinned_dispatches: AtomicU64,
+    /// admission rejections (queue full), all tenants
+    pub rejected: AtomicU64,
+    /// endpoints retired explicitly via `Server::retire`
+    pub retired: AtomicU64,
+    /// endpoints evicted by the idle janitor
+    pub idle_evictions: AtomicU64,
+    /// highest global queued depth observed across all endpoints
+    pub peak_queue: AtomicUsize,
+    /// the deployment's shard-plan cache, shared by every pinned session
+    /// and sharded backend the server spawns (plans depend only on
+    /// topology + policy, so one topology served by several models — or
+    /// several tenants — partitions once). Counters at
+    /// `plan_cache.stats()`: `builds` staying flat across a steady
+    /// workload is the "zero re-partitions" guarantee
+    pub plan_cache: Arc<PlanCache>,
+    depth: AtomicUsize,
+    latencies: Mutex<SampleWindow>,
+    batch_sizes: Mutex<SampleWindow>,
+    coalesced_sizes: Mutex<SampleWindow>,
+    queue_depths: Mutex<HashMap<String, usize>>,
+    tenant_depths: Mutex<HashMap<String, usize>>,
+    tenant_rejects: Mutex<HashMap<String, u64>>,
+}
+
+/// Power-of-two histogram of a sample set:
+/// `[(bucket_upper_bound, count), ...]` for non-empty buckets.
+fn pow2_histogram(sizes: &[f64]) -> Vec<(usize, u64)> {
+    let mut buckets: Vec<(usize, u64)> = Vec::new();
+    for &s in sizes {
+        let mut hi = 1usize;
+        while (hi as f64) < s {
+            hi *= 2;
+        }
+        match buckets.iter_mut().find(|(b, _)| *b == hi) {
+            Some((_, c)) => *c += 1,
+            None => buckets.push((hi, 1)),
+        }
+    }
+    buckets.sort_unstable_by_key(|&(b, _)| b);
+    buckets
+}
+
+impl Metrics {
+    /// Metrics wired to an existing shard-plan cache (so a server can
+    /// share plans with sessions deployed outside it).
+    pub fn with_plan_cache(cache: Arc<PlanCache>) -> Metrics {
+        Metrics {
+            plan_cache: cache,
+            ..Metrics::default()
+        }
+    }
+
+    /// End-to-end latency distribution (queue + service share) over the
+    /// most recent [`SAMPLE_WINDOW`] completions.
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latencies.lock().unwrap().buf)
+    }
+
+    /// Distribution of dispatched batch sizes (all endpoints) over the
+    /// most recent [`SAMPLE_WINDOW`] flushes.
+    pub fn batch_size_summary(&self) -> Summary {
+        Summary::of(&self.batch_sizes.lock().unwrap().buf)
+    }
+
+    /// Power-of-two histogram of dispatched batch sizes.
+    pub fn batch_histogram(&self) -> Vec<(usize, u64)> {
+        pow2_histogram(&self.batch_sizes.lock().unwrap().buf)
+    }
+
+    /// Distribution of coalesced `run_batch` sizes on pinned endpoints.
+    pub fn coalesced_summary(&self) -> Summary {
+        Summary::of(&self.coalesced_sizes.lock().unwrap().buf)
+    }
+
+    /// Power-of-two histogram of coalesced `run_batch` sizes.
+    pub fn coalesced_histogram(&self) -> Vec<(usize, u64)> {
+        pow2_histogram(&self.coalesced_sizes.lock().unwrap().buf)
+    }
+
+    /// Current queued depth of one model's pending requests (summed over
+    /// tenants serving that model).
+    pub fn queue_depth(&self, model: &str) -> usize {
+        self.queue_depths
+            .lock()
+            .unwrap()
+            .get(model)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Snapshot of all per-model queue depths.
+    pub fn queue_depths(&self) -> HashMap<String, usize> {
+        self.queue_depths.lock().unwrap().clone()
+    }
+
+    /// Current queued depth of one tenant's pending requests (summed over
+    /// that tenant's endpoints).
+    pub fn tenant_queue_depth(&self, tenant: &str) -> usize {
+        self.tenant_depths
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Snapshot of all per-tenant queue depths.
+    pub fn tenant_queue_depths(&self) -> HashMap<String, usize> {
+        self.tenant_depths.lock().unwrap().clone()
+    }
+
+    /// Admission rejections charged to one tenant.
+    pub fn rejects(&self, tenant: &str) -> u64 {
+        self.tenant_rejects
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Snapshot of per-tenant admission-reject counts.
+    pub fn rejects_by_tenant(&self) -> HashMap<String, u64> {
+        self.tenant_rejects.lock().unwrap().clone()
+    }
+
+    pub(crate) fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(size as f64);
+    }
+
+    pub(crate) fn record_coalesced(&self, size: usize) {
+        self.pinned_dispatches.fetch_add(1, Ordering::Relaxed);
+        self.coalesced_sizes.lock().unwrap().push(size as f64);
+    }
+
+    pub(crate) fn record_latency(&self, seconds: f64) {
+        self.latencies.lock().unwrap().push(seconds);
+    }
+
+    #[cfg(test)]
+    fn latency_count(&self) -> usize {
+        self.latencies.lock().unwrap().buf.len()
+    }
+
+    /// One request entered an admission queue.
+    pub(crate) fn record_admit(&self, model: &str, tenant: &str) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let depth = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_queue.fetch_max(depth, Ordering::Relaxed);
+        bump(&mut self.queue_depths.lock().unwrap(), model, 1);
+        bump(&mut self.tenant_depths.lock().unwrap(), tenant, 1);
+    }
+
+    /// `n` requests left an admission queue (flushed or error-drained).
+    pub(crate) fn record_drain(&self, model: &str, tenant: &str, n: usize) {
+        let _ = self
+            .depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                Some(d.saturating_sub(n))
+            });
+        drain(&mut self.queue_depths.lock().unwrap(), model, n);
+        drain(&mut self.tenant_depths.lock().unwrap(), tenant, n);
+    }
+
+    /// One request bounced off a full admission queue.
+    pub(crate) fn record_reject(&self, tenant: &str) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        *self
+            .tenant_rejects
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_insert(0) += 1;
+    }
+}
+
+fn bump(m: &mut HashMap<String, usize>, key: &str, n: usize) {
+    // no per-call String allocation once the key is resident
+    if let Some(d) = m.get_mut(key) {
+        *d += n;
+    } else {
+        m.insert(key.to_string(), n);
+    }
+}
+
+fn drain(m: &mut HashMap<String, usize>, key: &str, n: usize) {
+    let gone = match m.get_mut(key) {
+        Some(d) => {
+            *d = d.saturating_sub(n);
+            *d == 0
+        }
+        None => false,
+    };
+    if gone {
+        m.remove(key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_gauges_track_admit_and_drain() {
+        let m = Metrics::default();
+        m.record_admit("gcn", "acme");
+        m.record_admit("gcn", "acme");
+        m.record_admit("gin", "umbrella");
+        assert_eq!(m.queue_depth("gcn"), 2);
+        assert_eq!(m.queue_depth("gin"), 1);
+        assert_eq!(m.tenant_queue_depth("acme"), 2);
+        assert_eq!(m.tenant_queue_depth("umbrella"), 1);
+        assert_eq!(m.peak_queue.load(Ordering::Relaxed), 3);
+
+        m.record_drain("gcn", "acme", 2);
+        assert_eq!(m.queue_depth("gcn"), 0);
+        assert!(!m.queue_depths().contains_key("gcn"), "empty gauges drop");
+        assert_eq!(m.tenant_queue_depth("acme"), 0);
+        assert_eq!(m.tenant_queue_depth("umbrella"), 1);
+        // over-drain saturates instead of wrapping
+        m.record_drain("gin", "umbrella", 5);
+        assert_eq!(m.tenant_queue_depth("umbrella"), 0);
+    }
+
+    #[test]
+    fn rejects_are_counted_per_tenant() {
+        let m = Metrics::default();
+        m.record_reject("acme");
+        m.record_reject("acme");
+        m.record_reject("umbrella");
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 3);
+        assert_eq!(m.rejects("acme"), 2);
+        assert_eq!(m.rejects("umbrella"), 1);
+        assert_eq!(m.rejects("nobody"), 0);
+    }
+
+    #[test]
+    fn sample_windows_are_bounded() {
+        let m = Metrics::default();
+        for i in 0..(SAMPLE_WINDOW + 100) {
+            m.record_latency(i as f64);
+        }
+        assert_eq!(m.latency_count(), SAMPLE_WINDOW, "window must not grow");
+        let s = m.latency_summary();
+        assert_eq!(s.n, SAMPLE_WINDOW);
+        // the oldest 100 samples were overwritten by the newest 100
+        assert_eq!(s.max, (SAMPLE_WINDOW + 99) as f64);
+        assert!(s.min >= 100.0, "oldest samples evicted, min {}", s.min);
+    }
+
+    #[test]
+    fn coalesced_histogram_is_separate_from_batches() {
+        let m = Metrics::default();
+        m.record_batch(3);
+        m.record_batch(8);
+        m.record_coalesced(8);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.pinned_dispatches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.batch_histogram(), vec![(4, 1), (8, 1)]);
+        assert_eq!(m.coalesced_histogram(), vec![(8, 1)]);
+        assert_eq!(m.coalesced_summary().n, 1);
+    }
+}

@@ -1,0 +1,547 @@
+//! Multi-tenant serving layer — the front door that makes the
+//! `Session`/`ExecutionPlan` machinery of PRs 1–4 reachable from a
+//! serving deployment.
+//!
+//! The survey line of work (Zhang et al., *A Survey on Graph Neural
+//! Network Acceleration*) stresses that real GNN serving systems win by
+//! batching and scheduling **around** the accelerator, not inside it.
+//! This module is that scheduler: most node-classification traffic hits
+//! the *same deployed topology* with fresh features, so the server pins
+//! one pre-warmed [`Session`] per `(tenant, model, topology)` and
+//! coalesces concurrent requests into single [`Session::run_batch`]
+//! calls — the zero-rehash / zero-repartition warm path — instead of
+//! treating every request as an independent `(model, graph, x)` triple
+//! the way the old per-request coordinator loop did.
+//!
+//! ```text
+//!  deploy(tenant, Session::builder(..).graph(g))      retire / idle-evict
+//!        │                                                    ▲
+//!        ▼                                                    │
+//!  SessionRegistry ── (tenant, model, topology) → Endpoint ───┘
+//!                                                  │  bounded admission
+//!  submit(x) ─► Ticket      queue-full ► Overloaded│  queue (per endpoint)
+//!                 ▲                                ▼
+//!                 │            micro-batch dispatcher (deadline-or-size)
+//!                 │                                │  coalesced flush
+//!                 └──── responses / typed errors ◄─┤
+//!                                                  ▼
+//!                               Session::run_batch (pinned topology)
+//!                               Backend::infer_batch (floating graphs)
+//! ```
+//!
+//! Three pieces:
+//!
+//! - the **session registry** (`registry.rs`): pinned, pre-warmed
+//!   sessions keyed by `(tenant, model, topology)` with explicit
+//!   [`Server::deploy`] / [`Server::retire`] lifecycle, per-tenant
+//!   endpoint quotas, and idle eviction; every pinned session shares the
+//!   server's shard-plan cache, so one topology partitions once across
+//!   models *and* tenants.
+//! - the **micro-batching scheduler** (`scheduler.rs`): per-endpoint
+//!   bounded admission queues with deadline-or-size flush (generalizing
+//!   [`BatchPolicy`]); N concurrent requests against one deployed graph
+//!   coalesce into ⌈N/max_batch⌉ `run_batch` calls, bit-identical to N
+//!   `run` calls and counter-asserted via
+//!   [`Metrics::pinned_dispatches`].
+//! - **streaming submission**: [`Endpoint::submit`] returns a typed
+//!   [`Ticket`] immediately; backpressure is explicit
+//!   ([`ServeError::Overloaded`] when the queue is full, never silent
+//!   blocking), worker panics surface as [`ServeError::Backend`] on the
+//!   ticket rather than a hung receiver, and [`Metrics`] reports
+//!   per-tenant queue depth, coalesced-batch histograms, and
+//!   admission-reject counters.
+//!
+//! The legacy [`Coordinator`](crate::coordinator::Coordinator) is now a
+//! thin facade over this module: each of its model backends becomes a
+//! *floating* endpoint (requests carry their own graph, flushes pack a
+//! [`GraphBatch`](crate::graph::GraphBatch) arena — the molecule-serving
+//! pattern), scheduled by the same admission/flush machinery.
+
+mod metrics;
+mod registry;
+mod scheduler;
+
+pub use metrics::Metrics;
+pub use registry::SessionKey;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{BackendSpec, PlanCache};
+use crate::graph::Graph;
+use crate::session::{Session, SessionBuilder};
+use crate::util::pool::ServiceHandle;
+
+use registry::SessionRegistry;
+use scheduler::{CloseReason, EndpointInner, Payload};
+
+/// Dynamic micro-batching policy: a queue flushes when it holds
+/// `max_batch` requests or the oldest has waited `max_wait`.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// flush when this many requests are queued on one endpoint
+    pub max_batch: usize,
+    /// ... or when the oldest has waited this long
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub output: Vec<f32>,
+    pub queue_seconds: f64,
+    pub service_seconds: f64,
+    /// size of the coalesced flush this request rode in
+    pub batch_size: usize,
+}
+
+/// Typed serving errors — every failure mode a caller can hit is
+/// explicit; a ticket can never hang on a silently dropped request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// admission queue full — back off and retry (never silent blocking)
+    Overloaded { tenant: String, depth: usize },
+    /// the tenant is at its live-endpoint quota
+    QuotaExceeded { tenant: String, limit: usize },
+    /// an endpoint with this (tenant, model, topology) key is already live
+    AlreadyDeployed { tenant: String, model: String },
+    /// no endpoint under this model name (coordinator facade routing)
+    UnknownEndpoint { model: String },
+    /// the endpoint was retired (explicitly or by idle eviction)
+    Retired,
+    /// the server is shutting down
+    ShuttingDown,
+    /// request rejected at admission (shape/kind mismatch)
+    BadRequest(String),
+    /// execution failed (backend error, or a contained worker panic)
+    Backend(String),
+    /// `wait_timeout` elapsed before a response arrived
+    Timeout,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { tenant, depth } => {
+                write!(f, "tenant `{tenant}` overloaded: admission queue at depth {depth}")
+            }
+            ServeError::QuotaExceeded { tenant, limit } => {
+                write!(f, "tenant `{tenant}` at its endpoint quota ({limit})")
+            }
+            ServeError::AlreadyDeployed { tenant, model } => {
+                write!(f, "tenant `{tenant}` already deployed `{model}` over this topology")
+            }
+            ServeError::UnknownEndpoint { model } => write!(f, "unknown model `{model}`"),
+            ServeError::Retired => write!(f, "endpoint retired"),
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+            ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServeError::Backend(m) => write!(f, "backend error: {m}"),
+            ServeError::Timeout => write!(f, "timed out waiting for a response"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A streaming response handle: submission returns immediately, the
+/// result (or a typed error) arrives on the ticket. Dropping a ticket
+/// abandons the response, never the request — the flush still runs.
+#[derive(Debug)]
+pub struct Ticket {
+    rx: Receiver<Result<Response, ServeError>>,
+}
+
+impl Ticket {
+    fn new(rx: Receiver<Result<Response, ServeError>>) -> Ticket {
+        Ticket { rx }
+    }
+
+    /// A ticket that already failed (facade routing errors).
+    pub(crate) fn failed(e: ServeError) -> Ticket {
+        let (tx, rx) = channel();
+        let _ = tx.send(Err(e));
+        Ticket { rx }
+    }
+
+    /// Block until the response (or its typed error) arrives. A worker
+    /// that dies without answering yields a [`ServeError::Backend`] —
+    /// never a hang.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Backend(
+                "the serving worker dropped the request".into(),
+            )),
+        }
+    }
+
+    /// Like [`Ticket::wait`] with a deadline; [`ServeError::Timeout`] if
+    /// it elapses (the request stays in flight — wait again to retry).
+    pub fn wait_timeout(&self, d: Duration) -> Result<Response, ServeError> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::Backend(
+                "the serving worker dropped the request".into(),
+            )),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Response, ServeError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(ServeError::Backend(
+                "the serving worker dropped the request".into(),
+            ))),
+        }
+    }
+}
+
+/// Handle to one live endpoint. Cheap to clone; stays valid after
+/// retirement (submissions then fail with [`ServeError::Retired`]).
+#[derive(Clone)]
+pub struct Endpoint {
+    inner: Arc<EndpointInner>,
+}
+
+impl Endpoint {
+    pub fn key(&self) -> &SessionKey {
+        &self.inner.key
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.inner.key.tenant
+    }
+
+    pub fn model(&self) -> &str {
+        &self.inner.key.model
+    }
+
+    /// The deployed topology hash (`None` for floating endpoints).
+    pub fn topology(&self) -> Option<u64> {
+        self.inner.key.topology
+    }
+
+    /// The pinned session, if this endpoint serves a deployed topology.
+    pub fn session(&self) -> Option<&Arc<Session>> {
+        self.inner.session.as_ref()
+    }
+
+    /// Submit one feature set over the deployed topology. Fails fast
+    /// with typed errors: wrong input length, queue full, retired.
+    pub fn submit(&self, x: Vec<f32>) -> Result<Ticket, ServeError> {
+        let Some(session) = &self.inner.session else {
+            return Err(ServeError::BadRequest(
+                "floating endpoint: requests carry their own graph — use submit_graph".into(),
+            ));
+        };
+        let want = session.expected_input_len();
+        if x.len() != want {
+            return Err(ServeError::BadRequest(format!(
+                "expected {want} features for the deployed topology, got {}",
+                x.len()
+            )));
+        }
+        self.inner.offer(Payload::Features(x)).map(Ticket::new)
+    }
+
+    /// Submit a per-request graph + features (floating endpoints only).
+    pub fn submit_graph(&self, graph: Graph, x: Vec<f32>) -> Result<Ticket, ServeError> {
+        if self.inner.session.is_some() {
+            return Err(ServeError::BadRequest(
+                "pinned endpoint: the topology is deployed — submit features only".into(),
+            ));
+        }
+        self.inner
+            .offer(Payload::GraphFeatures(graph, x))
+            .map(Ticket::new)
+    }
+
+    /// Current admission-queue depth of this endpoint.
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue_depth()
+    }
+
+    /// Flushes dispatched by this endpoint (pinned endpoints: the number
+    /// of coalesced `Session::run_batch` calls).
+    pub fn dispatches(&self) -> u64 {
+        self.inner.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Whether the endpoint stopped admitting work (retired / evicted /
+    /// shut down / failed).
+    pub fn is_closed(&self) -> bool {
+        self.inner.is_closed()
+    }
+
+    pub(crate) fn is_idle(&self, ttl: Duration) -> bool {
+        self.inner.is_idle(ttl)
+    }
+
+    fn close_and_join(&self, reason: CloseReason) {
+        self.inner.close(reason, None);
+        self.inner.worker.join();
+    }
+}
+
+/// Server construction knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// micro-batch flush policy applied to every endpoint
+    pub policy: BatchPolicy,
+    /// per-endpoint admission-queue bound (beyond it: [`ServeError::Overloaded`])
+    pub queue_capacity: usize,
+    /// max live endpoints per tenant
+    pub tenant_quota: usize,
+    /// evict endpoints idle for this long (`None` = never)
+    pub idle_ttl: Option<Duration>,
+    /// share an existing shard-plan cache (default: a fresh server-wide one)
+    pub plan_cache: Option<Arc<PlanCache>>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            policy: BatchPolicy::default(),
+            queue_capacity: 1024,
+            tenant_quota: 64,
+            idle_ttl: None,
+            plan_cache: None,
+        }
+    }
+}
+
+struct Janitor {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: ServiceHandle,
+}
+
+/// The multi-tenant serving front door: registry + scheduler + metrics.
+pub struct Server {
+    policy: BatchPolicy,
+    queue_capacity: usize,
+    registry: Arc<SessionRegistry>,
+    metrics: Arc<Metrics>,
+    janitor: Option<Janitor>,
+    down: AtomicBool,
+}
+
+impl Server {
+    pub fn start(cfg: ServerConfig) -> Server {
+        let metrics = Arc::new(match cfg.plan_cache {
+            Some(c) => Metrics::with_plan_cache(c),
+            None => Metrics::default(),
+        });
+        let registry = Arc::new(SessionRegistry::new(cfg.tenant_quota));
+        let janitor = cfg.idle_ttl.map(|ttl| {
+            let stop = Arc::new((Mutex::new(false), Condvar::new()));
+            let (s, r, m) = (stop.clone(), registry.clone(), metrics.clone());
+            let handle =
+                ServiceHandle::spawn("gnnb-serve-janitor", move || janitor_loop(s, r, m, ttl));
+            Janitor { stop, handle }
+        });
+        Server {
+            policy: cfg.policy,
+            queue_capacity: cfg.queue_capacity,
+            registry,
+            metrics,
+            janitor,
+            down: AtomicBool::new(false),
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Deploy a pinned, pre-warmed session for `tenant`. The builder must
+    /// carry a deployed graph (`.graph(g)`); the server injects its
+    /// shared plan cache unless the builder pinned one, builds the
+    /// session, and warms it eagerly ([`Session::prepare`] — sharded
+    /// plans partition at deploy time, not on the first request). The
+    /// endpoint key is `(tenant, model, topology_hash)`; duplicates and
+    /// tenants at quota are rejected with typed errors.
+    pub fn deploy(&self, tenant: &str, mut builder: SessionBuilder) -> Result<Endpoint, ServeError> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        // cheap rejections first: a tenant at quota shouldn't even pay
+        // the session build, and a duplicate key shouldn't pay the
+        // pre-warm partition (insert below stays authoritative)
+        self.registry.quota_check(tenant)?;
+        if builder.plan_cache.is_none() {
+            builder.plan_cache = Some(self.metrics.plan_cache.clone());
+        }
+        let session = Arc::new(
+            builder
+                .build()
+                .map_err(|e| ServeError::BadRequest(e.to_string()))?,
+        );
+        let key = SessionKey::pinned(
+            tenant,
+            session.model_name(),
+            session.deployed().topology_hash(),
+        );
+        self.registry.precheck(&key)?;
+        session.prepare();
+        let inner = EndpointInner::new(
+            key,
+            Some(session),
+            self.policy,
+            self.queue_capacity,
+            self.metrics.clone(),
+        );
+        let ep = Endpoint { inner };
+        self.registry.insert(ep.clone())?;
+        // spawn the dispatcher only once registration succeeded
+        let body = ep.inner.clone();
+        ep.inner.worker.attach(
+            std::thread::Builder::new()
+                .name(format!("gnnb-serve/{tenant}/{}", ep.model()))
+                .spawn(move || scheduler::pinned_loop(body))
+                .expect("failed to spawn endpoint dispatcher"),
+        );
+        self.undo_if_raced_shutdown(&ep)?;
+        Ok(ep)
+    }
+
+    /// Deploy a floating endpoint: requests carry their own graph, and
+    /// flushes pack a `GraphBatch` arena for [`crate::coordinator::Backend::infer_batch`]
+    /// — the molecule-serving / PJRT pattern, and the path the
+    /// [`Coordinator`](crate::coordinator::Coordinator) facade uses. The
+    /// backend is constructed on the dispatcher thread via the spec's
+    /// factory (PJRT handles are not `Send`).
+    pub fn deploy_backend(&self, tenant: &str, spec: BackendSpec) -> Result<Endpoint, ServeError> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let key = SessionKey::floating(tenant, &spec.model);
+        let inner = EndpointInner::new(
+            key,
+            None,
+            self.policy,
+            self.queue_capacity,
+            self.metrics.clone(),
+        );
+        let ep = Endpoint { inner };
+        self.registry.insert(ep.clone())?;
+        let body = ep.inner.clone();
+        let factory = spec.factory;
+        ep.inner.worker.attach(
+            std::thread::Builder::new()
+                .name(format!("gnnb-serve/{tenant}/{}", ep.model()))
+                .spawn(move || scheduler::floating_loop(body, factory))
+                .expect("failed to spawn endpoint dispatcher"),
+        );
+        self.undo_if_raced_shutdown(&ep)?;
+        Ok(ep)
+    }
+
+    /// Close the race between `deploy*` and [`Server::shutdown`]: a
+    /// deploy that read `down == false` but registered after shutdown's
+    /// `take_all` would leak a never-joined dispatcher. Re-checking after
+    /// the spawn and undoing (remove + close + join — all idempotent
+    /// against a concurrent shutdown that did see the endpoint) makes the
+    /// endpoint either reaped by shutdown or reaped here.
+    fn undo_if_raced_shutdown(&self, ep: &Endpoint) -> Result<(), ServeError> {
+        if self.down.load(Ordering::SeqCst) {
+            self.registry.remove(ep.key());
+            ep.close_and_join(CloseReason::Shutdown);
+            return Err(ServeError::ShuttingDown);
+        }
+        Ok(())
+    }
+
+    /// Look up a live endpoint by key.
+    pub fn endpoint(&self, key: &SessionKey) -> Option<Endpoint> {
+        self.registry.get(key)
+    }
+
+    /// Snapshot of every live endpoint.
+    pub fn endpoints(&self) -> Vec<Endpoint> {
+        self.registry.snapshot()
+    }
+
+    /// Live endpoints held by one tenant (quota accounting view).
+    pub fn tenant_endpoints(&self, tenant: &str) -> usize {
+        self.registry.tenant_count(tenant)
+    }
+
+    /// Retire an endpoint: remove it from the registry, flush its queued
+    /// work, and join its dispatcher. Idempotent; requests submitted
+    /// after retirement fail with [`ServeError::Retired`].
+    pub fn retire(&self, ep: &Endpoint) {
+        let removed = self.registry.remove(ep.key());
+        ep.close_and_join(CloseReason::Retired);
+        if removed.is_some() {
+            self.metrics.retired.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Stop the server: queued work on every endpoint is flushed, then
+    /// all dispatchers (and the janitor) are joined. Idempotent —
+    /// `shutdown()` followed by `Drop` (or a second `shutdown()`) joins
+    /// nothing twice.
+    pub fn shutdown(&self) {
+        if self.down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(j) = &self.janitor {
+            let (lock, cv) = &*j.stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+            j.handle.join();
+        }
+        for ep in self.registry.take_all() {
+            ep.close_and_join(CloseReason::Shutdown);
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn janitor_loop(
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    registry: Arc<SessionRegistry>,
+    metrics: Arc<Metrics>,
+    ttl: Duration,
+) {
+    let interval = (ttl / 4).clamp(Duration::from_millis(5), Duration::from_secs(1));
+    let (lock, cv) = &*stop;
+    loop {
+        {
+            let mut stopped = lock.lock().unwrap();
+            while !*stopped {
+                let (g, timeout) = cv.wait_timeout(stopped, interval).unwrap();
+                stopped = g;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if *stopped {
+                return;
+            }
+        }
+        for ep in registry.take_idle(ttl) {
+            ep.close_and_join(CloseReason::Retired);
+            metrics.idle_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}

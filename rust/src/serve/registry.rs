@@ -1,0 +1,165 @@
+//! Multi-tenant session registry — the map from
+//! `(tenant, model, topology)` to live, pre-warmed endpoints, with the
+//! capacity controls a shared deployment needs:
+//!
+//! - **keys**: a pinned endpoint is identified by its tenant, the model
+//!   name, and the deployed graph's memoized
+//!   [`topology_hash`](crate::session::DeployedGraph::topology_hash);
+//!   floating endpoints (per-request graphs) carry `topology: None`.
+//!   Two tenants deploying the same model over the same topology get
+//!   *separate* endpoints (isolation) but share one shard plan through
+//!   the server's [`PlanCache`](crate::coordinator::PlanCache).
+//! - **quotas**: each tenant may hold at most `quota` live endpoints;
+//!   `insert` enforces it atomically under the registry lock, so racing
+//!   deploys cannot overshoot.
+//! - **idle eviction**: [`SessionRegistry::take_idle`] removes endpoints
+//!   whose queue is empty and which have not been touched for the TTL —
+//!   the janitor closes and joins them outside the lock.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::{Endpoint, ServeError};
+
+/// Identity of one deployed endpoint.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SessionKey {
+    /// owning tenant (isolation + quota + reject accounting domain)
+    pub tenant: String,
+    /// model name (the engine config's name / backend spec's model)
+    pub model: String,
+    /// memoized topology hash of the deployed graph; `None` marks a
+    /// floating endpoint whose requests carry their own graphs
+    pub topology: Option<u64>,
+}
+
+impl SessionKey {
+    /// Key of a pinned (deployed-topology) endpoint.
+    pub fn pinned(tenant: &str, model: &str, topology: u64) -> SessionKey {
+        SessionKey {
+            tenant: tenant.to_string(),
+            model: model.to_string(),
+            topology: Some(topology),
+        }
+    }
+
+    /// Key of a floating (per-request-graph) endpoint.
+    pub fn floating(tenant: &str, model: &str) -> SessionKey {
+        SessionKey {
+            tenant: tenant.to_string(),
+            model: model.to_string(),
+            topology: None,
+        }
+    }
+}
+
+/// The server's endpoint table. Lock discipline: the map lock is held
+/// only for map operations — closing and joining dispatcher threads
+/// always happens on the caller's side, outside the lock.
+pub(crate) struct SessionRegistry {
+    quota: usize,
+    inner: Mutex<HashMap<SessionKey, Endpoint>>,
+}
+
+impl SessionRegistry {
+    pub(crate) fn new(quota: usize) -> SessionRegistry {
+        SessionRegistry {
+            quota,
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Register a live endpoint: rejects duplicates of its key and
+    /// tenants at their endpoint quota.
+    pub(crate) fn insert(&self, ep: Endpoint) -> Result<(), ServeError> {
+        let key = ep.key().clone();
+        let mut m = self.inner.lock().unwrap();
+        Self::check(&m, &key, self.quota)?;
+        m.insert(key, ep);
+        Ok(())
+    }
+
+    /// Advisory duplicate + quota check without inserting — lets
+    /// `Server::deploy` reject cheaply *before* paying the session
+    /// pre-warm. `insert` stays authoritative (racing deploys are
+    /// re-checked under the same lock there).
+    pub(crate) fn precheck(&self, key: &SessionKey) -> Result<(), ServeError> {
+        Self::check(&self.inner.lock().unwrap(), key, self.quota)
+    }
+
+    /// Advisory quota-only check for a tenant (no key needed — used
+    /// before even building a session).
+    pub(crate) fn quota_check(&self, tenant: &str) -> Result<(), ServeError> {
+        let m = self.inner.lock().unwrap();
+        let live = m.keys().filter(|k| k.tenant == tenant).count();
+        if live >= self.quota {
+            return Err(ServeError::QuotaExceeded {
+                tenant: tenant.to_string(),
+                limit: self.quota,
+            });
+        }
+        Ok(())
+    }
+
+    fn check(
+        m: &HashMap<SessionKey, Endpoint>,
+        key: &SessionKey,
+        quota: usize,
+    ) -> Result<(), ServeError> {
+        if m.contains_key(key) {
+            return Err(ServeError::AlreadyDeployed {
+                tenant: key.tenant.clone(),
+                model: key.model.clone(),
+            });
+        }
+        let live = m.keys().filter(|k| k.tenant == key.tenant).count();
+        if live >= quota {
+            return Err(ServeError::QuotaExceeded {
+                tenant: key.tenant.clone(),
+                limit: quota,
+            });
+        }
+        Ok(())
+    }
+
+    pub(crate) fn remove(&self, key: &SessionKey) -> Option<Endpoint> {
+        self.inner.lock().unwrap().remove(key)
+    }
+
+    pub(crate) fn get(&self, key: &SessionKey) -> Option<Endpoint> {
+        self.inner.lock().unwrap().get(key).cloned()
+    }
+
+    /// Snapshot of every live endpoint.
+    pub(crate) fn snapshot(&self) -> Vec<Endpoint> {
+        self.inner.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Drain the whole table (server shutdown).
+    pub(crate) fn take_all(&self) -> Vec<Endpoint> {
+        self.inner.lock().unwrap().drain().map(|(_, ep)| ep).collect()
+    }
+
+    /// Remove and return endpoints idle for at least `ttl` (empty queue,
+    /// no submit/flush activity). The caller closes + joins them.
+    pub(crate) fn take_idle(&self, ttl: Duration) -> Vec<Endpoint> {
+        let mut m = self.inner.lock().unwrap();
+        let victims: Vec<SessionKey> = m
+            .iter()
+            .filter(|(_, ep)| ep.is_idle(ttl))
+            .map(|(k, _)| k.clone())
+            .collect();
+        victims.into_iter().filter_map(|k| m.remove(&k)).collect()
+    }
+
+    /// Live endpoints held by one tenant.
+    pub(crate) fn tenant_count(&self, tenant: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.tenant == tenant)
+            .count()
+    }
+}

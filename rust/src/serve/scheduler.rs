@@ -1,0 +1,462 @@
+//! Topology-aware micro-batching scheduler — per-endpoint bounded
+//! admission queues drained by dedicated dispatcher threads.
+//!
+//! Each deployed endpoint owns one [`EndpointInner`]: a bounded FIFO of
+//! pending jobs guarded by a condvar, plus the dispatcher service thread
+//! that drains it. Admission happens directly on the caller's thread
+//! (`offer` is a queue push — there is no router hop), so the only
+//! threads in the serving layer are the dispatchers themselves:
+//!
+//! - **flush policy** (deadline-or-size, generalizing
+//!   [`BatchPolicy`](super::BatchPolicy)): a dispatcher sleeps until its
+//!   queue holds `max_batch` jobs *or* the oldest job has waited
+//!   `max_wait`, then drains up to `max_batch` jobs as one flush. N
+//!   concurrent requests against one deployed topology therefore
+//!   coalesce into ⌈N/max_batch⌉ [`Session::run_batch`] calls instead of
+//!   N `run` calls — counter-asserted via
+//!   [`Metrics::pinned_dispatches`](super::Metrics), and bit-identical
+//!   to per-request dispatch because `run_batch` is bit-identical to
+//!   looped `run` (`tests/session.rs` pins that contract).
+//! - **backpressure**: `offer` on a full queue fails immediately with a
+//!   typed [`ServeError::Overloaded`](super::ServeError) — never silent
+//!   blocking — and the reject is charged to the tenant.
+//! - **panic containment**: every flush runs under `catch_unwind`; a
+//!   panicking backend (or session) surfaces as
+//!   [`ServeError::Backend`](super::ServeError) on each in-flight ticket
+//!   and the dispatcher keeps serving — a worker panic can never strand
+//!   a receiver.
+//! - **parallelism shape**: endpoints dispatch concurrently (one thread
+//!   each); within a flush the engine parallelizes across the worker
+//!   pool (`run_batch` scratch slots, sharded supersteps), so a single
+//!   hot endpoint still saturates the machine.
+//!
+//! Floating endpoints (requests carry their own graph — the legacy
+//! coordinator path and PJRT replicas) share the same admission + flush
+//! machinery; only the executor differs: jobs are packed into one
+//! [`GraphBatch`] arena and handed to
+//! [`Backend::infer_batch`](crate::coordinator::Backend). The backend is
+//! constructed *on* the dispatcher thread via its factory (PJRT handles
+//! are not `Send`), exactly like the old per-model worker.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use crate::coordinator::{Backend, BackendFactory};
+use crate::graph::{Graph, GraphBatch};
+use crate::session::Session;
+use crate::util::pool::ServiceHandle;
+
+use super::metrics::Metrics;
+use super::registry::SessionKey;
+use super::{BatchPolicy, Response, ServeError};
+
+/// Sending half of one request's response channel.
+pub(crate) type RespondTx = Sender<Result<Response, ServeError>>;
+/// Receiving half — what a [`super::Ticket`] wraps.
+pub(crate) type RespondRx = Receiver<Result<Response, ServeError>>;
+
+/// What one queued request carries.
+pub(crate) enum Payload {
+    /// features over the endpoint's deployed topology (pinned endpoints)
+    Features(Vec<f32>),
+    /// a per-request graph + features (floating endpoints)
+    GraphFeatures(Graph, Vec<f32>),
+}
+
+/// One admitted request: payload + arrival time + response channel.
+pub(crate) struct Job {
+    payload: Payload,
+    submitted: Instant,
+    tx: RespondTx,
+}
+
+/// Why an endpoint stopped admitting work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CloseReason {
+    /// graceful: queued jobs are flushed, then the dispatcher exits
+    Retired,
+    /// graceful: server-wide stop, queued jobs are flushed
+    Shutdown,
+    /// fatal: backend construction failed; queued jobs are error-drained
+    Failed,
+}
+
+struct QueueState {
+    q: VecDeque<Job>,
+    closed: Option<CloseReason>,
+    fail_msg: Option<String>,
+}
+
+/// Shared state of one endpoint: the admission queue, its policy, the
+/// pinned session (if any), and the dispatcher's service handle.
+pub(crate) struct EndpointInner {
+    pub(crate) key: SessionKey,
+    /// pinned endpoints coalesce onto this session; floating endpoints
+    /// build their backend on the dispatcher thread instead
+    pub(crate) session: Option<Arc<Session>>,
+    pub(crate) policy: BatchPolicy,
+    pub(crate) capacity: usize,
+    pub(crate) metrics: Arc<Metrics>,
+    /// flushes dispatched by this endpoint (pinned: `run_batch` calls)
+    pub(crate) dispatches: AtomicU64,
+    last_used: Mutex<Instant>,
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    pub(crate) worker: ServiceHandle,
+}
+
+impl EndpointInner {
+    pub(crate) fn new(
+        key: SessionKey,
+        session: Option<Arc<Session>>,
+        mut policy: BatchPolicy,
+        capacity: usize,
+        metrics: Arc<Metrics>,
+    ) -> Arc<EndpointInner> {
+        // max_batch == 0 would make the size trigger (len >= 0) fire
+        // before the closed/empty exit in next_batch is ever reached —
+        // an empty-flush busy spin that also deadlocks shutdown. Clamp.
+        policy.max_batch = policy.max_batch.max(1);
+        let name = format!("gnnb-serve/{}/{}", key.tenant, key.model);
+        Arc::new(EndpointInner {
+            key,
+            session,
+            policy,
+            capacity,
+            metrics,
+            dispatches: AtomicU64::new(0),
+            last_used: Mutex::new(Instant::now()),
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                closed: None,
+                fail_msg: None,
+            }),
+            ready: Condvar::new(),
+            worker: ServiceHandle::unattached(name),
+        })
+    }
+
+    /// Admit one request, or reject with a typed error. Never blocks.
+    pub(crate) fn offer(&self, payload: Payload) -> Result<RespondRx, ServeError> {
+        let mut s = self.state.lock().unwrap();
+        match s.closed {
+            Some(CloseReason::Retired) => return Err(ServeError::Retired),
+            Some(CloseReason::Shutdown) => return Err(ServeError::ShuttingDown),
+            Some(CloseReason::Failed) => {
+                return Err(ServeError::Backend(
+                    s.fail_msg.clone().unwrap_or_else(|| "backend failed".into()),
+                ))
+            }
+            None => {}
+        }
+        if s.q.len() >= self.capacity {
+            let depth = s.q.len();
+            drop(s);
+            self.metrics.record_reject(&self.key.tenant);
+            return Err(ServeError::Overloaded {
+                tenant: self.key.tenant.clone(),
+                depth,
+            });
+        }
+        let (tx, rx) = channel();
+        s.q.push_back(Job {
+            payload,
+            submitted: Instant::now(),
+            tx,
+        });
+        // gauge updates happen under the queue lock so admit/drain
+        // ordering matches queue ordering (metrics locks are leaf locks —
+        // nothing acquires the queue lock while holding them)
+        self.metrics.record_admit(&self.key.model, &self.key.tenant);
+        drop(s);
+        *self.last_used.lock().unwrap() = Instant::now();
+        self.ready.notify_all();
+        Ok(rx)
+    }
+
+    /// Block until a flush is due (size or deadline), then drain up to
+    /// `max_batch` jobs. `None` = closed and fully drained: dispatcher
+    /// exits.
+    fn next_batch(&self) -> Option<Vec<Job>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.q.len() >= self.policy.max_batch {
+                break;
+            }
+            if s.closed.is_some() {
+                if s.q.is_empty() {
+                    return None;
+                }
+                break; // drain the remainder before exiting
+            }
+            match s.q.front() {
+                Some(oldest) => {
+                    let age = oldest.submitted.elapsed();
+                    if age >= self.policy.max_wait {
+                        break;
+                    }
+                    let (s2, _) = self
+                        .ready
+                        .wait_timeout(s, self.policy.max_wait - age)
+                        .unwrap();
+                    s = s2;
+                }
+                None => s = self.ready.wait(s).unwrap(),
+            }
+        }
+        let take = s.q.len().min(self.policy.max_batch);
+        let batch: Vec<Job> = s.q.drain(..take).collect();
+        self.metrics.record_drain(&self.key.model, &self.key.tenant, take);
+        Some(batch)
+    }
+
+    /// Stop admission. Graceful reasons leave queued jobs for the
+    /// dispatcher to flush; `Failed` error-drains them here (there is no
+    /// dispatcher left to serve them). Idempotent — the first reason wins.
+    pub(crate) fn close(&self, reason: CloseReason, msg: Option<String>) {
+        let mut s = self.state.lock().unwrap();
+        if s.closed.is_none() {
+            s.closed = Some(reason);
+            s.fail_msg = msg;
+        }
+        if s.closed == Some(CloseReason::Failed) && !s.q.is_empty() {
+            let n = s.q.len();
+            let emsg = s.fail_msg.clone().unwrap_or_else(|| "backend failed".into());
+            for job in s.q.drain(..) {
+                let _ = job.tx.send(Err(ServeError::Backend(emsg.clone())));
+            }
+            self.metrics.record_drain(&self.key.model, &self.key.tenant, n);
+            self.metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
+        }
+        drop(s);
+        self.ready.notify_all();
+    }
+
+    pub(crate) fn queue_depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub(crate) fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed.is_some()
+    }
+
+    /// Idle = open, empty queue, and no submit/flush for at least `ttl`.
+    pub(crate) fn is_idle(&self, ttl: std::time::Duration) -> bool {
+        let s = self.state.lock().unwrap();
+        if s.closed.is_some() || !s.q.is_empty() {
+            return false;
+        }
+        drop(s);
+        self.last_used.lock().unwrap().elapsed() >= ttl
+    }
+
+    fn touch(&self) {
+        *self.last_used.lock().unwrap() = Instant::now();
+    }
+}
+
+/// Dispatcher body for a pinned endpoint: coalesce flushes into
+/// [`Session::run_batch`] over the deployed topology.
+pub(crate) fn pinned_loop(inner: Arc<EndpointInner>) {
+    let session = inner
+        .session
+        .clone()
+        .expect("pinned dispatcher requires a session");
+    while let Some(batch) = inner.next_batch() {
+        flush_pinned(&inner, &session, batch);
+    }
+}
+
+fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
+    let m = &inner.metrics;
+    let mut xs: Vec<Vec<f32>> = Vec::with_capacity(batch.len());
+    let mut meta: Vec<(f64, RespondTx)> = Vec::with_capacity(batch.len());
+    for job in batch {
+        match job.payload {
+            Payload::Features(x) => {
+                meta.push((job.submitted.elapsed().as_secs_f64(), job.tx));
+                xs.push(x);
+            }
+            // offer() guards this; defensive so a routing bug degrades to
+            // a typed per-request error instead of a dead dispatcher
+            Payload::GraphFeatures(..) => {
+                m.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = job.tx.send(Err(ServeError::BadRequest(
+                    "pinned endpoints serve feature-only requests".into(),
+                )));
+            }
+        }
+    }
+    if xs.is_empty() {
+        return;
+    }
+    let n = xs.len();
+    m.record_batch(n);
+    m.record_coalesced(n);
+    inner.dispatches.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let out = catch_unwind(AssertUnwindSafe(|| session.run_batch(&xs)));
+    let service = t0.elapsed().as_secs_f64() / n as f64;
+    match out {
+        Ok(Ok(ys)) if ys.len() == n => {
+            for ((qs, tx), y) in meta.into_iter().zip(ys) {
+                m.completed.fetch_add(1, Ordering::Relaxed);
+                m.record_latency(qs + service);
+                let _ = tx.send(Ok(Response {
+                    output: y,
+                    queue_seconds: qs,
+                    service_seconds: service,
+                    batch_size: n,
+                }));
+            }
+        }
+        Ok(Ok(ys)) => fail_all(
+            m,
+            meta,
+            ServeError::Backend(format!(
+                "session returned {} results for a {n}-request flush",
+                ys.len()
+            )),
+        ),
+        Ok(Err(e)) => fail_all(m, meta, ServeError::Backend(e.to_string())),
+        Err(p) => fail_all(
+            m,
+            meta,
+            ServeError::Backend(format!("serving worker panicked: {}", panic_msg(&p))),
+        ),
+    }
+    inner.touch();
+}
+
+/// Dispatcher body for a floating endpoint: build the backend in-thread
+/// (PJRT handles are not `Send`), then pack each flush into one
+/// [`GraphBatch`] arena.
+pub(crate) fn floating_loop(inner: Arc<EndpointInner>, factory: BackendFactory) {
+    let backend = match catch_unwind(AssertUnwindSafe(|| factory(&inner.metrics))) {
+        Ok(Ok(b)) => b,
+        Ok(Err(e)) => {
+            eprintln!("backend construction failed: {e:#}");
+            inner.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            inner.close(
+                CloseReason::Failed,
+                Some(format!("backend construction failed: {e}")),
+            );
+            return;
+        }
+        Err(p) => {
+            let msg = format!("backend construction panicked: {}", panic_msg(&p));
+            eprintln!("{msg}");
+            inner.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            inner.close(CloseReason::Failed, Some(msg));
+            return;
+        }
+    };
+    while let Some(batch) = inner.next_batch() {
+        flush_floating(&inner, backend.as_ref(), batch);
+    }
+}
+
+/// A floating-flush request with its graph moved out of the queue.
+struct FloatJob {
+    graph: Graph,
+    x: Vec<f32>,
+    queued: f64,
+    tx: RespondTx,
+}
+
+fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>) {
+    let m = &inner.metrics;
+    let mut jobs: Vec<FloatJob> = Vec::with_capacity(batch.len());
+    for job in batch {
+        match job.payload {
+            Payload::GraphFeatures(graph, x) => {
+                jobs.push(FloatJob {
+                    graph,
+                    x,
+                    queued: job.submitted.elapsed().as_secs_f64(),
+                    tx: job.tx,
+                });
+            }
+            Payload::Features(_) => {
+                m.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = job.tx.send(Err(ServeError::BadRequest(
+                    "floating endpoints require a graph per request".into(),
+                )));
+            }
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+    let n = jobs.len();
+    m.record_batch(n);
+    inner.dispatches.fetch_add(1, Ordering::Relaxed);
+    // pack the flush into one arena; backends consume views
+    let packed = GraphBatch::pack(jobs.iter().map(|j| (&j.graph, j.x.as_slice())));
+    let t0 = Instant::now();
+    let out = catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&packed)));
+    drop(packed);
+    let service = t0.elapsed().as_secs_f64() / n as f64;
+    match out {
+        Ok(mut results) => {
+            // enforce the trait's length contract so a misbehaving backend
+            // cannot silently strand trailing requests
+            results.truncate(n);
+            let got = results.len();
+            while results.len() < n {
+                results.push(Err(anyhow!(
+                    "backend returned {got} results for a {n}-graph batch"
+                )));
+            }
+            for (job, result) in jobs.into_iter().zip(results) {
+                match result {
+                    Ok(output) => {
+                        m.completed.fetch_add(1, Ordering::Relaxed);
+                        m.record_latency(job.queued + service);
+                        let _ = job.tx.send(Ok(Response {
+                            output,
+                            queue_seconds: job.queued,
+                            service_seconds: service,
+                            batch_size: n,
+                        }));
+                    }
+                    Err(e) => {
+                        m.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = job.tx.send(Err(ServeError::Backend(e.to_string())));
+                    }
+                }
+            }
+        }
+        Err(p) => {
+            let e = ServeError::Backend(format!(
+                "serving worker panicked: {}",
+                panic_msg(&p)
+            ));
+            for job in jobs {
+                m.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = job.tx.send(Err(e.clone()));
+            }
+        }
+    }
+    inner.touch();
+}
+
+fn fail_all(m: &Metrics, meta: Vec<(f64, RespondTx)>, e: ServeError) {
+    for (_, tx) in meta {
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(Err(e.clone()));
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into())
+}

@@ -29,10 +29,14 @@
 //! session property suite in `tests/session.rs` enforce it), so plan
 //! resolution can never change an answer.
 //!
-//! The serving coordinator routes through the same machinery: its
-//! `EngineBackend` wraps a `Dispatcher` — the floating (per-request)
-//! twin of a deployed session that re-resolves the path per graph —
-//! so the framework has exactly one path-selection implementation.
+//! The serving layer routes through the same machinery: the multi-tenant
+//! [`crate::serve`] registry pins pre-warmed `Session`s per
+//! `(tenant, model, topology)` and its micro-batching scheduler
+//! coalesces concurrent requests into `run_batch` calls, while the
+//! legacy coordinator facade's `EngineBackend` wraps a `Dispatcher` —
+//! the floating (per-request) twin of a deployed session that
+//! re-resolves the path per graph — so the framework has exactly one
+//! path-selection implementation.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -498,6 +502,21 @@ impl Session {
         &self.graph
     }
 
+    /// The model name this session serves (the engine config's name) —
+    /// one third of the serving registry's `(tenant, model, topology)`
+    /// key ([`crate::serve::SessionKey`]).
+    pub fn model_name(&self) -> &str {
+        &self.engine.cfg.name
+    }
+
+    /// Expected [`Session::run`] input length for the deployed topology:
+    /// `num_nodes × graph_input_dim`. The serving layer validates
+    /// admission against this, so shape errors fail fast at `submit`
+    /// instead of poisoning a coalesced flush.
+    pub fn expected_input_len(&self) -> usize {
+        self.graph.num_nodes() * self.engine.cfg.graph_input_dim
+    }
+
     /// The numerics this session resolved to.
     pub fn numerics(&self) -> Numerics {
         self.numerics
@@ -784,6 +803,17 @@ mod tests {
             })
             .into_dispatcher(None, Arc::new(PlanCache::with_capacity(2)));
         assert!(err.is_err());
+    }
+
+    /// The registry hooks the serving layer keys and validates against.
+    #[test]
+    fn model_name_and_expected_input_len_describe_the_deployment() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, x) = random_graph_and_x(12, 14, 5);
+        let s = Session::builder(engine).graph(g).build().unwrap();
+        assert_eq!(s.model_name(), "session_tiny");
+        assert_eq!(s.expected_input_len(), 14 * 5);
+        assert_eq!(s.expected_input_len(), x.len());
     }
 
     #[test]

@@ -260,6 +260,74 @@ where
     unsafe { Vec::from_raw_parts(res_ptr as *mut T, n, cap) }
 }
 
+/// A named, joinable service thread — the lifecycle substrate for the
+/// serving layer's long-running workers (per-endpoint micro-batch
+/// dispatchers, the registry's idle janitor). Unlike [`par_map`]'s pool
+/// workers (anonymous, detached, process-lifetime), a service thread has
+/// an owner that must be able to stop and join it from *several* paths —
+/// explicit `shutdown()`, endpoint retirement, idle eviction, and `Drop`
+/// — without double-join panics:
+///
+/// - [`ServiceHandle::join`] is **idempotent**: the underlying
+///   `JoinHandle` is taken out of an interior `Mutex<Option<_>>`, so the
+///   first caller joins and every later caller (including `Drop` after an
+///   explicit shutdown) is a no-op.
+/// - a panic on the service thread is **contained**: `join` reports it on
+///   stderr instead of propagating, so one crashed dispatcher can never
+///   take down the shutdown path that is reaping its siblings.
+#[derive(Debug)]
+pub struct ServiceHandle {
+    name: String,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ServiceHandle {
+    /// A handle with no thread yet — for owners that must publish the
+    /// shared state (inside an `Arc`) *before* the thread that borrows it
+    /// can be spawned. Pair with [`ServiceHandle::attach`].
+    pub fn unattached(name: impl Into<String>) -> ServiceHandle {
+        ServiceHandle {
+            name: name.into(),
+            handle: Mutex::new(None),
+        }
+    }
+
+    /// Spawn `f` on a named thread and return its handle.
+    pub fn spawn(name: impl Into<String>, f: impl FnOnce() + Send + 'static) -> ServiceHandle {
+        let h = ServiceHandle::unattached(name);
+        let t = std::thread::Builder::new()
+            .name(h.name.clone())
+            .spawn(f)
+            .expect("failed to spawn service thread");
+        h.attach(t);
+        h
+    }
+
+    /// Attach the spawned thread to an [`ServiceHandle::unattached`]
+    /// handle. Panics if a thread is already attached (a lifecycle bug).
+    pub fn attach(&self, t: std::thread::JoinHandle<()>) {
+        let mut g = self.handle.lock().unwrap();
+        assert!(g.is_none(), "service `{}` spawned twice", self.name);
+        *g = Some(t);
+    }
+
+    /// Join the service thread. Idempotent: returns `true` iff this call
+    /// performed the join. A panic on the service thread is reported, not
+    /// propagated.
+    pub fn join(&self) -> bool {
+        let taken = self.handle.lock().unwrap().take();
+        match taken {
+            Some(t) => {
+                if t.join().is_err() {
+                    eprintln!("service thread `{}` panicked", self.name);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -371,6 +439,43 @@ mod tests {
         for (i, inner) in v.iter().enumerate() {
             assert_eq!(inner, &(0..8).map(|j| i * 8 + j).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn service_handle_join_is_idempotent() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = flag.clone();
+        let h = ServiceHandle::spawn("svc-test", move || {
+            f2.store(true, Ordering::SeqCst);
+        });
+        assert!(h.join(), "first join performs the join");
+        assert!(flag.load(Ordering::SeqCst));
+        assert!(!h.join(), "second join is a no-op");
+        assert!(!h.join());
+    }
+
+    #[test]
+    fn service_handle_contains_worker_panics() {
+        let h = ServiceHandle::spawn("svc-panics", || panic!("service boom"));
+        // the panic is reported, not propagated into the joiner
+        assert!(h.join());
+        assert!(!h.join());
+    }
+
+    #[test]
+    fn service_handle_two_phase_attach() {
+        let h = Arc::new(ServiceHandle::unattached("svc-attach"));
+        let n = Arc::new(AtomicUsize::new(0));
+        let n2 = n.clone();
+        let t = std::thread::Builder::new()
+            .name("svc-attach".into())
+            .spawn(move || {
+                n2.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        h.attach(t);
+        assert!(h.join());
+        assert_eq!(n.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -153,7 +153,14 @@ fn coordinator_outputs_match_direct_inference() {
     let engine = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
     let vecs = read_testvecs(&meta.testvecs_path).unwrap();
 
-    let engine2 = Engine::new(meta.config.clone(), &weights, meta.mean_degree).unwrap();
+    // distinct model name for the native replica: the artifact and its
+    // config share one name, and endpoints are keyed by model — the old
+    // router silently overwrote same-name backends, the registry rejects
+    // them
+    let mut native_cfg = meta.config.clone();
+    native_cfg.name = format!("{}_native", meta.config.name);
+    let native_name = native_cfg.name.clone();
+    let engine2 = Engine::new(native_cfg, &weights, meta.mean_degree).unwrap();
     let (engine_spec, _) = BackendSpec::session(
         Session::builder(engine2)
             .precision(Precision::F32)
@@ -178,9 +185,7 @@ fn coordinator_outputs_match_direct_inference() {
             .unwrap()
             .run(&gold.x)
             .unwrap();
-        let via_engine = c
-            .infer(&meta.config.name, g.clone(), gold.x.clone())
-            .unwrap();
+        let via_engine = c.infer(&native_name, g.clone(), gold.x.clone()).unwrap();
         for (a, b) in via_engine.output.iter().zip(&direct) {
             assert!((a - b).abs() < 1e-6);
         }

@@ -1,0 +1,592 @@
+//! Serving-layer acceptance suite: the multi-tenant session registry +
+//! topology-aware micro-batching scheduler.
+//!
+//! Covers the scheduler contracts end-to-end:
+//! - the headline gate: 64 concurrent requests against one deployed
+//!   topology coalesce into ≤ 8 `Session::run_batch` dispatches
+//!   (counter-asserted), bit-identical to 64 sequential `Session::run`
+//!   calls, with zero warm-path re-hashes / re-partitions;
+//! - coalesced results bit-identical to looped per-request dispatch for
+//!   both numerics (f32 and true ap_fixed);
+//! - fairness under two tenants with asymmetric load (a flooded tenant
+//!   cannot starve a light one);
+//! - backpressure: queue-full rejections are typed and counted per
+//!   tenant, never silent blocking;
+//! - deadline flush fires with a single queued request;
+//! - lifecycle: deploy/retire, duplicate-deploy rejection, per-tenant
+//!   quotas, idle eviction, idempotent shutdown.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use gnnbuilder::coordinator::{Backend, BackendSpec, Metrics};
+use gnnbuilder::datasets::{self, LargeGraphStats};
+use gnnbuilder::engine::{synth_weights, Engine};
+use gnnbuilder::graph::GraphView;
+use gnnbuilder::model::{ConvType, ModelConfig};
+use gnnbuilder::serve::{BatchPolicy, ServeError, Server, ServerConfig, SessionKey};
+use gnnbuilder::session::{ExecutionPlan, Precision, Session, SessionBuilder, ShardK, ShardPolicy};
+
+/// A citation-graph profile small enough for 64-request bursts in tests
+/// (real profiles carry 500–1433-dim features).
+const TEST_STATS: LargeGraphStats = LargeGraphStats {
+    name: "serve_test",
+    num_nodes: 1200,
+    num_edges: 5400,
+    node_dim: 16,
+    num_classes: 4,
+    task: "node_classification",
+    mean_degree: 4.5,
+};
+
+fn test_engine(name: &str, seed: u64) -> Engine {
+    let cfg = ModelConfig {
+        name: name.into(),
+        graph_input_dim: TEST_STATS.node_dim,
+        gnn_conv: ConvType::Gcn,
+        gnn_hidden_dim: 8,
+        gnn_out_dim: 6,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 6,
+        mlp_num_layers: 1,
+        output_dim: TEST_STATS.num_classes,
+        max_nodes: 2000,
+        max_edges: 20_000,
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, seed);
+    Engine::new(cfg, &weights, TEST_STATS.mean_degree).unwrap()
+}
+
+fn server_with(policy: BatchPolicy, capacity: usize) -> Server {
+    Server::start(ServerConfig {
+        policy,
+        queue_capacity: capacity,
+        ..ServerConfig::default()
+    })
+}
+
+/// The headline acceptance gate: with 64 concurrent requests against one
+/// deployed topology, the scheduler dispatches at most 8 coalesced
+/// `run_batch` calls (max_batch = 8), the results are bit-identical to
+/// 64 sequential `Session::run` calls, and the warm path performs zero
+/// re-hashes and zero re-partitions after deploy.
+#[test]
+fn sixty_four_concurrent_requests_coalesce_into_at_most_eight_dispatches() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 1200, 7);
+    let engine = test_engine("coalesce_gate", 3);
+    let policy = ShardPolicy {
+        min_nodes: 1,
+        k: ShardK::Fixed(3),
+        seed: 11,
+    };
+    let builder = |e: Engine| -> SessionBuilder {
+        Session::builder(e)
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Sharded {
+                k: policy.k,
+                plan: None,
+            })
+            .shard_policy(policy)
+            .graph(ng.graph.clone())
+    };
+
+    let server = server_with(
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(500),
+        },
+        4096,
+    );
+    let ep = server.deploy("acme", builder(engine.clone())).unwrap();
+    // deploy pre-warmed the session: one topology hash (the registry
+    // key), one partition — both before the first request
+    let session = ep.session().unwrap().clone();
+    let stats = server.metrics().plan_cache.stats();
+    assert_eq!(session.deployed().hash_computes(), 1);
+    assert_eq!(stats.builds.load(Ordering::Relaxed), 1);
+
+    let xs: Vec<Vec<f32>> = (0..64)
+        .map(|i| ng.x.iter().map(|v| v + i as f32 * 0.01).collect())
+        .collect();
+    let tickets: Vec<_> = xs.iter().map(|x| ep.submit(x.clone()).unwrap()).collect();
+    let outs: Vec<Vec<f32>> = tickets
+        .into_iter()
+        .map(|t| t.wait().unwrap().output)
+        .collect();
+
+    // bit-identical to 64 sequential Session::run calls on a twin
+    let twin = builder(engine).build().unwrap();
+    for (i, (x, out)) in xs.iter().zip(&outs).enumerate() {
+        assert_eq!(out, &twin.run(x).unwrap(), "request {i} diverged");
+    }
+
+    let dispatches = server.metrics().pinned_dispatches.load(Ordering::Relaxed);
+    assert!(
+        (1..=8).contains(&dispatches),
+        "64 requests took {dispatches} run_batch dispatches (want ≤ 8)"
+    );
+    assert_eq!(ep.dispatches(), dispatches);
+    assert_eq!(server.metrics().completed.load(Ordering::Relaxed), 64);
+    // warm path stayed warm: no re-hash, no re-partition under load
+    assert_eq!(session.deployed().hash_computes(), 1);
+    assert_eq!(stats.builds.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.hash_computes.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// Conformance satellite: coalesced `run_batch` results are bit-identical
+/// to looped per-request `run` across both numerics paths.
+#[test]
+fn coalesced_results_bit_identical_for_f32_and_ap_fixed() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 400, 9);
+    for (tag, precision) in [("f32", Precision::F32), ("fixed", Precision::ApFixed)] {
+        let engine = test_engine(&format!("conform_{tag}"), 5);
+        let builder = |e: Engine| {
+            Session::builder(e)
+                .precision(precision)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone())
+        };
+        let server = server_with(
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(200),
+            },
+            1024,
+        );
+        let ep = server.deploy("acme", builder(engine.clone())).unwrap();
+        let xs: Vec<Vec<f32>> = (0..24)
+            .map(|i| ng.x.iter().map(|v| v + i as f32 * 0.05).collect())
+            .collect();
+        let tickets: Vec<_> = xs.iter().map(|x| ep.submit(x.clone()).unwrap()).collect();
+        let twin = builder(engine).build().unwrap();
+        for (i, (x, t)) in xs.iter().zip(tickets).enumerate() {
+            let out = t.wait().unwrap().output;
+            assert_eq!(out, twin.run(x).unwrap(), "{tag} request {i} diverged");
+        }
+        assert!(
+            server.metrics().pinned_dispatches.load(Ordering::Relaxed) < 24,
+            "{tag}: no coalescing happened"
+        );
+        server.shutdown();
+    }
+}
+
+/// Deterministic toy backend for scheduler-shape tests.
+struct Toy {
+    name: String,
+    delay: Duration,
+}
+
+impl Backend for Toy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn infer(&self, graph: GraphView<'_>, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(vec![x.iter().sum(), graph.num_nodes as f32])
+    }
+}
+
+fn toy_spec(name: &str, delay: Duration) -> BackendSpec {
+    let name = name.to_string();
+    BackendSpec {
+        model: name.clone(),
+        factory: Box::new(move |_: &Metrics| Ok(Box::new(Toy { name, delay }) as Box<dyn Backend>)),
+    }
+}
+
+fn toy_graph() -> gnnbuilder::graph::Graph {
+    gnnbuilder::graph::Graph::from_coo(3, &[(0, 1), (1, 2)])
+}
+
+/// Fairness satellite: each endpoint has its own dispatcher, so a tenant
+/// flooding its queue cannot starve a light tenant — the light tenant's
+/// worst-case latency stays far below the flooded tenant's.
+#[test]
+fn two_tenants_with_asymmetric_load_do_not_starve_each_other() {
+    let server = server_with(
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        },
+        4096,
+    );
+    // tenant A floods a slow backend; tenant B trickles a fast one
+    let slow = server
+        .deploy_backend("flooder", toy_spec("slow", Duration::from_millis(3)))
+        .unwrap();
+    let fast = server
+        .deploy_backend("light", toy_spec("fast", Duration::ZERO))
+        .unwrap();
+
+    let a_tickets: Vec<_> = (0..48)
+        .map(|i| slow.submit_graph(toy_graph(), vec![i as f32]).unwrap())
+        .collect();
+    let b_tickets: Vec<_> = (0..8)
+        .map(|i| fast.submit_graph(toy_graph(), vec![i as f32]).unwrap())
+        .collect();
+
+    let b_max = b_tickets
+        .into_iter()
+        .map(|t| {
+            let r = t.wait().unwrap();
+            r.queue_seconds + r.service_seconds
+        })
+        .fold(0.0f64, f64::max);
+    let a_max = a_tickets
+        .into_iter()
+        .map(|t| {
+            let r = t.wait().unwrap();
+            r.queue_seconds + r.service_seconds
+        })
+        .fold(0.0f64, f64::max);
+
+    // A's tail waits behind ~48 × 3 ms of its own work; B's behind ≤ 8
+    // fast ones. A starved B would push b_max toward a_max.
+    assert!(
+        b_max * 5.0 < a_max,
+        "light tenant latency {b_max:.4}s vs flooded {a_max:.4}s — starved?"
+    );
+    assert_eq!(server.metrics().completed.load(Ordering::Relaxed), 56);
+    assert_eq!(server.metrics().tenant_queue_depth("flooder"), 0);
+    assert_eq!(server.metrics().tenant_queue_depth("light"), 0);
+    server.shutdown();
+}
+
+/// Backpressure satellite: a full admission queue rejects with a typed
+/// `Overloaded` error, counted per tenant; queued work still completes.
+#[test]
+fn queue_full_rejects_are_typed_and_counted() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 200, 4);
+    let engine = test_engine("backpressure", 2);
+    // deadline far away + batch bigger than capacity → submissions queue
+    // deterministically without flushing
+    let server = server_with(
+        BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_secs(30),
+        },
+        4,
+    );
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+
+    let tickets: Vec<_> = (0..4).map(|_| ep.submit(ng.x.clone()).unwrap()).collect();
+    assert_eq!(ep.queue_depth(), 4);
+    let err = ep.submit(ng.x.clone()).unwrap_err();
+    assert_eq!(
+        err,
+        ServeError::Overloaded {
+            tenant: "acme".into(),
+            depth: 4
+        }
+    );
+    // a second overload is counted too
+    assert!(ep.submit(ng.x.clone()).is_err());
+    assert_eq!(server.metrics().rejected.load(Ordering::Relaxed), 2);
+    assert_eq!(server.metrics().rejects("acme"), 2);
+    assert_eq!(server.metrics().rejects("other"), 0);
+
+    // shutdown flushes the queued four as one coalesced batch
+    server.shutdown();
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert_eq!(r.batch_size, 4);
+    }
+    assert_eq!(server.metrics().completed.load(Ordering::Relaxed), 4);
+}
+
+/// Deadline satellite: the flush deadline fires for a lone request — a
+/// single submission never waits for a full batch.
+#[test]
+fn deadline_flush_fires_with_a_single_queued_request() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 200, 5);
+    let engine = test_engine("deadline", 6);
+    let server = server_with(
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(25),
+        },
+        1024,
+    );
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    let t0 = Instant::now();
+    let r = ep.submit(ng.x.clone()).unwrap().wait().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "deadline flush never fired"
+    );
+    assert_eq!(r.batch_size, 1);
+    assert_eq!(ep.dispatches(), 1);
+    assert_eq!(server.metrics().coalesced_histogram(), vec![(1, 1)]);
+    server.shutdown();
+}
+
+/// Lifecycle: retire drains queued work, then rejects with `Retired`.
+#[test]
+fn retire_drains_queued_work_then_rejects() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 200, 6);
+    let engine = test_engine("retire", 8);
+    let server = server_with(
+        BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_secs(30),
+        },
+        1024,
+    );
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    assert_eq!(server.endpoints().len(), 1);
+    let tickets: Vec<_> = (0..3).map(|_| ep.submit(ng.x.clone()).unwrap()).collect();
+    server.retire(&ep);
+    for t in tickets {
+        assert!(t.wait().is_ok(), "retire dropped queued work");
+    }
+    assert!(ep.is_closed());
+    assert_eq!(ep.submit(ng.x.clone()).unwrap_err(), ServeError::Retired);
+    assert!(server.endpoints().is_empty());
+    assert_eq!(server.metrics().retired.load(Ordering::Relaxed), 1);
+    // retire is idempotent
+    server.retire(&ep);
+    assert_eq!(server.metrics().retired.load(Ordering::Relaxed), 1);
+    server.shutdown();
+}
+
+/// Lifecycle: a `(tenant, model, topology)` key deploys once; the
+/// registry is queryable by key; other tenants are isolated.
+#[test]
+fn duplicate_deploys_are_rejected_and_keys_are_queryable() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 300, 8);
+    let engine = test_engine("dup", 4);
+    let server = server_with(BatchPolicy::default(), 1024);
+    let mk = || {
+        Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Batched { workspace: 0 })
+            .graph(ng.graph.clone())
+    };
+    let ep = server.deploy("acme", mk()).unwrap();
+    let err = server.deploy("acme", mk()).unwrap_err();
+    assert_eq!(
+        err,
+        ServeError::AlreadyDeployed {
+            tenant: "acme".into(),
+            model: "dup".into()
+        }
+    );
+    // same model + topology under another tenant is a separate endpoint
+    let other = server.deploy("umbrella", mk()).unwrap();
+    assert_ne!(ep.tenant(), other.tenant());
+    assert_eq!(ep.topology(), other.topology());
+
+    let key = SessionKey::pinned("acme", "dup", ep.topology().unwrap());
+    let found = server.endpoint(&key).unwrap();
+    assert_eq!(found.key(), ep.key());
+    assert!(server
+        .endpoint(&SessionKey::pinned("acme", "dup", 0xdead))
+        .is_none());
+    server.shutdown();
+}
+
+/// Quota satellite: per-tenant endpoint capacity is enforced atomically
+/// and released on retire.
+#[test]
+fn tenant_quotas_cap_live_endpoints() {
+    let engine = test_engine("quota", 1);
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy::default(),
+        queue_capacity: 64,
+        tenant_quota: 2,
+        ..ServerConfig::default()
+    });
+    let mk = |seed: u64| {
+        let ng = datasets::gen_citation_graph(&TEST_STATS, 150 + seed as usize * 17, seed);
+        Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Batched { workspace: 0 })
+            .graph(ng.graph)
+    };
+    let _a = server.deploy("acme", mk(1)).unwrap();
+    let b = server.deploy("acme", mk(2)).unwrap();
+    let err = server.deploy("acme", mk(3)).unwrap_err();
+    assert_eq!(
+        err,
+        ServeError::QuotaExceeded {
+            tenant: "acme".into(),
+            limit: 2
+        }
+    );
+    assert_eq!(server.tenant_endpoints("acme"), 2);
+    // quota is per tenant — another tenant still deploys
+    assert!(server.deploy("umbrella", mk(3)).is_ok());
+    // retiring frees quota
+    server.retire(&b);
+    assert!(server.deploy("acme", mk(3)).is_ok());
+    server.shutdown();
+}
+
+/// Idle-eviction satellite: the janitor retires endpoints that go quiet,
+/// and evicted endpoints reject like retired ones.
+#[test]
+fn idle_endpoints_are_evicted_by_the_janitor() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 150, 3);
+    let engine = test_engine("idle", 7);
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy::default(),
+        queue_capacity: 64,
+        tenant_quota: 8,
+        idle_ttl: Some(Duration::from_millis(30)),
+        ..ServerConfig::default()
+    });
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    // serve one request so eviction provably happens on a *used* endpoint
+    ep.submit(ng.x.clone()).unwrap().wait().unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !server.endpoints().is_empty() {
+        assert!(Instant::now() < deadline, "idle endpoint never evicted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(server.metrics().idle_evictions.load(Ordering::Relaxed), 1);
+    assert_eq!(ep.submit(ng.x).unwrap_err(), ServeError::Retired);
+    server.shutdown();
+}
+
+/// The plan cache is server-wide: two tenants deploying sharded sessions
+/// over one topology partition it exactly once.
+#[test]
+fn tenants_share_one_shard_plan_through_the_server_cache() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 600, 12);
+    let server = server_with(BatchPolicy::default(), 256);
+    let mk = |name: &str| {
+        Session::builder(test_engine(name, 13))
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Sharded {
+                k: ShardK::Fixed(2),
+                plan: None,
+            })
+            .shard_policy(ShardPolicy {
+                min_nodes: 1,
+                k: ShardK::Fixed(2),
+                seed: 21,
+            })
+            .graph(ng.graph.clone())
+    };
+    let a = server.deploy("acme", mk("shared_a")).unwrap();
+    let b = server.deploy("umbrella", mk("shared_b")).unwrap();
+    // both deploys pre-warmed against the shared cache: one build total
+    assert_eq!(
+        server
+            .metrics()
+            .plan_cache
+            .stats()
+            .builds
+            .load(Ordering::Relaxed),
+        1
+    );
+    let ya = a.submit(ng.x.clone()).unwrap().wait().unwrap();
+    let yb = b.submit(ng.x.clone()).unwrap().wait().unwrap();
+    assert_eq!(ya.output.len(), yb.output.len());
+    server.shutdown();
+}
+
+/// Shape errors fail at admission with typed errors — they can never
+/// poison a coalesced flush.
+#[test]
+fn bad_requests_are_rejected_at_admission() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 100, 2);
+    let engine = test_engine("bad_req", 9);
+    let server = server_with(BatchPolicy::default(), 64);
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    // wrong feature length
+    assert!(matches!(
+        ep.submit(vec![1.0; 3]).unwrap_err(),
+        ServeError::BadRequest(_)
+    ));
+    // a pinned endpoint refuses per-request graphs
+    assert!(matches!(
+        ep.submit_graph(toy_graph(), vec![1.0; 3]).unwrap_err(),
+        ServeError::BadRequest(_)
+    ));
+    // a floating endpoint refuses feature-only submissions
+    let floating = server
+        .deploy_backend("acme", toy_spec("float", Duration::ZERO))
+        .unwrap();
+    assert!(matches!(
+        floating.submit(vec![1.0; 3]).unwrap_err(),
+        ServeError::BadRequest(_)
+    ));
+    // nothing was admitted or dispatched for any of them
+    assert_eq!(server.metrics().submitted.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// Idempotent server shutdown: repeat calls and `Drop` after an explicit
+/// shutdown join nothing twice, and late submissions get a typed error.
+#[test]
+fn server_shutdown_is_idempotent_and_drop_safe() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 100, 1);
+    let engine = test_engine("shutdown", 10);
+    let server = server_with(BatchPolicy::default(), 64);
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    ep.submit(ng.x.clone()).unwrap().wait().unwrap();
+    server.shutdown();
+    server.shutdown();
+    assert_eq!(ep.submit(ng.x.clone()).unwrap_err(), ServeError::ShuttingDown);
+    let late = server.deploy(
+        "acme",
+        Session::builder(test_engine("late", 1)).graph(ng.graph.clone()),
+    );
+    assert!(matches!(late, Err(ServeError::ShuttingDown)));
+    drop(server);
+}

@@ -11,7 +11,7 @@ use gnnbuilder::datasets;
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
 use gnnbuilder::model::{benchmark_config, ConvType};
 use gnnbuilder::runtime::{Manifest, Runtime};
-use gnnbuilder::session::{ExecutionPlan, Precision, Session};
+use gnnbuilder::session::{ExecutionPlan, MathMode, Precision, Session};
 use gnnbuilder::util::binio::read_weights;
 use gnnbuilder::util::json::Json;
 
@@ -22,6 +22,53 @@ fn result_json(r: &BenchResult) -> Json {
         ("mean_s", Json::num(r.summary.mean)),
         ("p95_s", Json::num(r.summary.p95)),
     ])
+}
+
+/// Tiled exact kernels vs the retained scalar reference
+/// (`MathMode::Reference`), per conv type, on a synthetic HIV-profile
+/// molecule — the kernel-level half of the speedup story
+/// (`bench_shard` covers the PUBMED-scale acceptance graph). Needs no
+/// artifacts; asserts the two modes are bit-identical before timing.
+fn tiled_vs_scalar(b: &Bench, results: &mut Vec<Json>) {
+    let mols = datasets::gen_dataset(&datasets::HIV, 1, 13, 600, 600);
+    let mol = &mols[0];
+    for conv in ConvType::ALL {
+        let cfg = benchmark_config(conv, &datasets::HIV, false);
+        let weights = synth_weights(&cfg, 7);
+        let engine = Engine::new(cfg, &weights, datasets::HIV.mean_degree).unwrap();
+        let session_in = |math: MathMode| {
+            Session::builder(engine.clone())
+                .precision(Precision::F32)
+                .math_mode(math)
+                .plan(ExecutionPlan::Single)
+                .graph(mol.graph.clone())
+                .build()
+                .unwrap()
+        };
+        let tiled = session_in(MathMode::Exact);
+        let scalar = session_in(MathMode::Reference);
+        assert_eq!(
+            tiled.run(&mol.x).unwrap(),
+            scalar.run(&mol.x).unwrap(),
+            "{} tiled kernels diverged from scalar reference",
+            conv.as_str()
+        );
+        let rt = b.run(&format!("kernel_tiled/{}/hiv", conv.as_str()), || {
+            tiled.run(&mol.x).unwrap()
+        });
+        let rs = b.run(&format!("kernel_scalar/{}/hiv", conv.as_str()), || {
+            scalar.run(&mol.x).unwrap()
+        });
+        let speedup = rs.summary.mean / rt.summary.mean.max(1e-12);
+        println!("  {}: tiled vs scalar {speedup:.2}x", conv.as_str());
+        results.push(Json::obj(vec![
+            ("conv", Json::str(conv.as_str())),
+            ("tiled_mean_s", Json::num(rt.summary.mean)),
+            ("scalar_mean_s", Json::num(rs.summary.mean)),
+            ("speedup_vs_scalar", Json::num(speedup)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
 }
 
 /// `run_batch` vs looped `run` at feature-batch sizes 1/8/64 over one
@@ -146,11 +193,15 @@ fn main() {
         eprintln!("no artifacts (run `make artifacts`); skipping artifact-gated benches");
     }
 
+    let mut kernel_results: Vec<Json> = Vec::new();
+    tiled_vs_scalar(&b, &mut kernel_results);
+
     let mut batch_results: Vec<Json> = Vec::new();
     batched_vs_looped(&b, &mut batch_results);
 
     let report = Json::obj(vec![
         ("engine", Json::arr(engine_results)),
+        ("kernels", Json::arr(kernel_results)),
         ("batched_vs_looped", Json::arr(batch_results)),
     ]);
     std::fs::write("BENCH_inference.json", report.to_string_pretty()).unwrap();

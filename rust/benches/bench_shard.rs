@@ -18,7 +18,7 @@ use gnnbuilder::datasets::{self, LargeGraphStats};
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
 use gnnbuilder::model::{ConvType, ModelConfig};
 use gnnbuilder::partition::{adaptive_k, ShardedGraph};
-use gnnbuilder::session::{ExecutionPlan, Precision, Session, ShardK, ShardPolicy};
+use gnnbuilder::session::{ExecutionPlan, MathMode, Precision, Session, ShardK, ShardPolicy};
 use gnnbuilder::util::json::Json;
 use gnnbuilder::util::pool;
 
@@ -63,6 +63,54 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
         whole_session.run(&ng.x).unwrap()
     });
     let baseline = whole_session.run(&ng.x).unwrap();
+
+    // ---- retained scalar kernels: the speedup denominator --------------
+    // `MathMode::Reference` runs the plain scalar folds in
+    // `engine::reference`; the tiled exact path must match it bitwise,
+    // and `speedup_vs_scalar` below is the kernel-level win this bench
+    // exists to track (acceptance: >= 2x on this PUBMED-profile graph).
+    let reference_session = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .math_mode(MathMode::Reference)
+        .plan(ExecutionPlan::Single)
+        .workspace(ws.clone())
+        .graph(ng.graph.clone())
+        .build()
+        .unwrap();
+    assert_eq!(
+        reference_session.run(&ng.x).unwrap(),
+        baseline,
+        "tiled exact kernels diverged from the scalar reference"
+    );
+    let scalar = b.run(&format!("engine_scalar_ref/{}/n{nodes}", stats.name), || {
+        reference_session.run(&ng.x).unwrap()
+    });
+    let tiled_speedup = scalar.summary.mean / whole.summary.mean.max(1e-12);
+    println!("  tiled exact vs scalar reference: {tiled_speedup:.2}x");
+
+    // ---- opt-in relaxed accumulation -----------------------------------
+    let relaxed_session = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .math_mode(MathMode::Relaxed)
+        .plan(ExecutionPlan::Single)
+        .workspace(ws.clone())
+        .graph(ng.graph.clone())
+        .build()
+        .unwrap();
+    let relaxed_out = relaxed_session.run(&ng.x).unwrap();
+    let mut relaxed_err = 0.0f64;
+    for (a, e) in relaxed_out.iter().zip(&baseline) {
+        let rel = ((a - e).abs() / (1.0 + e.abs())) as f64;
+        relaxed_err = relaxed_err.max(rel);
+        assert!(rel < 1e-3, "relaxed mode drifted past tolerance: {a} vs {e}");
+    }
+    let relaxed = b.run(&format!("engine_relaxed/{}/n{nodes}", stats.name), || {
+        relaxed_session.run(&ng.x).unwrap()
+    });
+    println!(
+        "  relaxed vs scalar reference: {:.2}x (max rel err {relaxed_err:.2e})",
+        scalar.summary.mean / relaxed.summary.mean.max(1e-12)
+    );
 
     let mut sharded_results: Vec<Json> = Vec::new();
     let mut per_k: Vec<(usize, f64)> = Vec::new();
@@ -190,6 +238,28 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
                 ("mean_s", Json::num(whole.summary.mean)),
                 ("p95_s", Json::num(whole.summary.p95)),
                 ("iters", Json::num(whole.iters as f64)),
+            ]),
+        ),
+        (
+            "scalar_reference",
+            Json::obj(vec![
+                ("mean_s", Json::num(scalar.summary.mean)),
+                ("p95_s", Json::num(scalar.summary.p95)),
+                ("iters", Json::num(scalar.iters as f64)),
+                ("bit_identical_to_exact", Json::Bool(true)),
+            ]),
+        ),
+        ("tiled_speedup_vs_scalar", Json::num(tiled_speedup)),
+        (
+            "relaxed",
+            Json::obj(vec![
+                ("mean_s", Json::num(relaxed.summary.mean)),
+                ("p95_s", Json::num(relaxed.summary.p95)),
+                (
+                    "speedup_vs_scalar",
+                    Json::num(scalar.summary.mean / relaxed.summary.mean.max(1e-12)),
+                ),
+                ("max_rel_err_vs_exact", Json::num(relaxed_err)),
             ]),
         ),
         ("sharded", Json::arr(sharded_results)),

@@ -1,0 +1,280 @@
+//! Benchmark regression diffing for the committed `BENCH_*.json`
+//! baselines.
+//!
+//! A baseline file is the same JSON a bench target emits, optionally
+//! with two extra top-level fields:
+//!
+//! - `"provisional": true` — the baseline was committed from an
+//!   environment whose timings are not comparable (or not measured at
+//!   all). Regressions against a provisional baseline are *reported but
+//!   not fatal*; re-running the bench on representative hardware and
+//!   committing the result drops the flag and arms the gate.
+//! - `"host": "..."` — free-form provenance note.
+//!
+//! The diff walks both files, collects every `*mean_s` timing leaf
+//! (nested objects and arrays included — array elements are labeled by
+//! their discriminator field, e.g. `k`, `batch_size`, `conv`, when one
+//! exists), and fails when a leaf regressed by more than `threshold`
+//! (fractional; the CI gate uses 0.25 = +25% latency). Structural drift
+//! (leaves present on only one side) is reported but never fatal: bench
+//! sections legitimately come and go with artifact availability.
+
+use crate::util::json::Json;
+
+/// One timing leaf present in both files.
+#[derive(Debug, Clone)]
+pub struct LeafDiff {
+    /// Slash-joined path into the report, e.g. `pubmed/sharded/k=4/mean_s`.
+    pub path: String,
+    pub baseline_s: f64,
+    pub current_s: f64,
+}
+
+impl LeafDiff {
+    /// `current / baseline` (1.0 = unchanged, 2.0 = twice as slow).
+    pub fn ratio(&self) -> f64 {
+        self.current_s / self.baseline_s.max(1e-12)
+    }
+}
+
+/// Full comparison of one baseline/current pair.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    /// Every timing leaf present in both files.
+    pub leaves: Vec<LeafDiff>,
+    /// The subset of `leaves` slower than `threshold` allows.
+    pub regressions: Vec<LeafDiff>,
+    /// Leaves in the baseline only (section disappeared).
+    pub missing: Vec<String>,
+    /// Leaves in the current report only (new section).
+    pub added: Vec<String>,
+    /// Baseline carried `"provisional": true` → regressions warn, not fail.
+    pub provisional: bool,
+    /// Fractional slowdown allowed before a leaf counts as regressed.
+    pub threshold: f64,
+}
+
+impl DiffReport {
+    /// Gate verdict: fails only on a regression against a
+    /// non-provisional baseline.
+    pub fn passed(&self) -> bool {
+        self.provisional || self.regressions.is_empty()
+    }
+
+    /// Human-readable multi-line report (stable ordering).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for l in &self.leaves {
+            let marker = if self.regressions.iter().any(|r| r.path == l.path) {
+                " <-- REGRESSED"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "{:<52} {:>12.6}s -> {:>12.6}s  ({:.2}x){marker}\n",
+                l.path,
+                l.baseline_s,
+                l.current_s,
+                l.ratio()
+            ));
+        }
+        for p in &self.missing {
+            out.push_str(&format!("{p:<52} missing from current report\n"));
+        }
+        for p in &self.added {
+            out.push_str(&format!("{p:<52} new (no baseline)\n"));
+        }
+        let verdict = if self.passed() {
+            if self.provisional && !self.regressions.is_empty() {
+                "PASS (provisional baseline; regressions are warnings)"
+            } else {
+                "PASS"
+            }
+        } else {
+            "FAIL"
+        };
+        out.push_str(&format!(
+            "{} leaves, {} regressed (threshold +{:.0}%): {verdict}\n",
+            self.leaves.len(),
+            self.regressions.len(),
+            self.threshold * 100.0
+        ));
+        out
+    }
+}
+
+/// Compare two bench reports at the given fractional threshold.
+pub fn diff(baseline: &Json, current: &Json, threshold: f64) -> DiffReport {
+    let provisional = matches!(baseline.get("provisional"), Json::Bool(true));
+    let base = flatten_latencies(baseline);
+    let cur = flatten_latencies(current);
+    let mut leaves = Vec::new();
+    let mut regressions = Vec::new();
+    let mut missing = Vec::new();
+    for (path, baseline_s) in &base {
+        match cur.iter().find(|(p, _)| p == path) {
+            Some((_, current_s)) => {
+                let l = LeafDiff {
+                    path: path.clone(),
+                    baseline_s: *baseline_s,
+                    current_s: *current_s,
+                };
+                if l.current_s > l.baseline_s * (1.0 + threshold) {
+                    regressions.push(l.clone());
+                }
+                leaves.push(l);
+            }
+            None => missing.push(path.clone()),
+        }
+    }
+    let added = cur
+        .iter()
+        .filter(|(p, _)| !base.iter().any(|(bp, _)| bp == p))
+        .map(|(p, _)| p.clone())
+        .collect();
+    DiffReport {
+        leaves,
+        regressions,
+        missing,
+        added,
+        provisional,
+        threshold,
+    }
+}
+
+/// Keys that identify an array element better than its index does.
+const DISCRIMINATORS: [&str; 5] = ["name", "conv", "k", "batch_size", "profile"];
+
+/// Collect every `*mean_s` timing leaf as `(slash-joined path, seconds)`,
+/// in a stable order (object keys are already sorted; arrays keep file
+/// order).
+pub fn flatten_latencies(v: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    walk(v, String::new(), &mut out);
+    out
+}
+
+fn walk(v: &Json, path: String, out: &mut Vec<(String, f64)>) {
+    match v {
+        Json::Obj(m) => {
+            for (k, child) in m {
+                let p = if path.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{path}/{k}")
+                };
+                if k.ends_with("mean_s") {
+                    if let Json::Num(n) = child {
+                        out.push((p, *n));
+                        continue;
+                    }
+                }
+                walk(child, p, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let label = DISCRIMINATORS
+                    .iter()
+                    .find_map(|d| match item.get(d) {
+                        Json::Num(n) => Some(format!("{d}={n}")),
+                        Json::Str(s) => Some(format!("{d}={s}")),
+                        _ => None,
+                    })
+                    .unwrap_or_else(|| i.to_string());
+                walk(item, format!("{path}/{label}"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(scale: f64) -> Json {
+        Json::obj(vec![
+            (
+                "whole_graph",
+                Json::obj(vec![
+                    ("mean_s", Json::num(0.010 * scale)),
+                    ("p95_s", Json::num(0.012 * scale)),
+                ]),
+            ),
+            (
+                "sharded",
+                Json::arr(vec![
+                    Json::obj(vec![
+                        ("k", Json::num(4.0)),
+                        ("mean_s", Json::num(0.004 * scale)),
+                    ]),
+                    Json::obj(vec![
+                        ("k", Json::num(16.0)),
+                        ("mean_s", Json::num(0.006 * scale)),
+                    ]),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn flattens_nested_timing_leaves_with_discriminators() {
+        let paths: Vec<String> = flatten_latencies(&report(1.0))
+            .into_iter()
+            .map(|(p, _)| p)
+            .collect();
+        assert_eq!(
+            paths,
+            vec![
+                "sharded/k=4/mean_s",
+                "sharded/k=16/mean_s",
+                "whole_graph/mean_s"
+            ]
+        );
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let d = diff(&report(1.0), &report(1.0), 0.25);
+        assert!(d.passed());
+        assert_eq!(d.leaves.len(), 3);
+        assert!(d.regressions.is_empty() && d.missing.is_empty() && d.added.is_empty());
+    }
+
+    #[test]
+    fn regression_past_threshold_fails() {
+        let d = diff(&report(1.0), &report(1.5), 0.25);
+        assert!(!d.passed());
+        assert_eq!(d.regressions.len(), 3);
+        assert!(d.render().contains("REGRESSED"));
+        // a 10% slowdown stays under the 25% gate
+        assert!(diff(&report(1.0), &report(1.1), 0.25).passed());
+        // ...and a speedup is obviously fine
+        assert!(diff(&report(1.0), &report(0.5), 0.25).passed());
+    }
+
+    #[test]
+    fn provisional_baseline_downgrades_regressions_to_warnings() {
+        let mut base = report(1.0);
+        base.set("provisional", Json::Bool(true));
+        let d = diff(&base, &report(2.0), 0.25);
+        assert!(d.provisional);
+        assert!(!d.regressions.is_empty());
+        assert!(d.passed(), "provisional baselines must not gate");
+        assert!(d.render().contains("provisional"));
+    }
+
+    #[test]
+    fn structural_drift_is_reported_but_not_fatal() {
+        let mut cur = report(1.0);
+        cur.set("new_section", Json::obj(vec![("mean_s", Json::num(1.0))]));
+        let base = report(1.0);
+        let d = diff(&base, &cur, 0.25);
+        assert!(d.passed());
+        assert_eq!(d.added, vec!["new_section/mean_s"]);
+        let d2 = diff(&cur, &base, 0.25);
+        assert!(d2.passed());
+        assert_eq!(d2.missing, vec!["new_section/mean_s"]);
+    }
+}

@@ -1,6 +1,9 @@
 //! Criterion-style micro-benchmark harness (criterion is not in the
 //! offline crate set). Warmup + timed iterations with mean/σ/percentiles,
-//! used by every target under `rust/benches/`.
+//! used by every target under `rust/benches/`. The [`diff`] submodule
+//! gates committed `BENCH_*.json` baselines against fresh runs.
+
+pub mod diff;
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,55 @@
+//! Bench-baseline regression gate.
+//!
+//! ```text
+//! bench_diff --baseline BENCH_shard.json --current target/BENCH_shard.json \
+//!            [--threshold 0.25]
+//! ```
+//!
+//! Compares every `*mean_s` timing leaf of a committed baseline against
+//! a fresh bench report and exits non-zero when any leaf is more than
+//! `--threshold` (default +25%) slower — unless the baseline is marked
+//! `"provisional": true`, in which case regressions are printed as
+//! warnings and the gate passes (provisional baselines record report
+//! *structure* from an environment whose timings are not comparable;
+//! see `src/bench/diff.rs`).
+
+use anyhow::{bail, Context, Result};
+use gnnbuilder::bench::diff::diff;
+use gnnbuilder::util::cli::Args;
+use gnnbuilder::util::json::Json;
+
+fn main() -> Result<()> {
+    match run() {
+        Ok(true) => Ok(()),
+        Ok(false) => std::process::exit(1),
+        Err(e) => Err(e),
+    }
+}
+
+fn run() -> Result<bool> {
+    let args = Args::from_env(1, &[])?;
+    let baseline_path = args
+        .get("baseline")
+        .context("usage: bench_diff --baseline <file> --current <file> [--threshold 0.25]")?
+        .to_string();
+    let current_path = args
+        .get("current")
+        .context("usage: bench_diff --baseline <file> --current <file> [--threshold 0.25]")?
+        .to_string();
+    let threshold: f64 = match args.get("threshold") {
+        None => 0.25,
+        Some(s) => s
+            .parse()
+            .with_context(|| format!("--threshold expects a number, got `{s}`"))?,
+    };
+    if !(0.0..10.0).contains(&threshold) {
+        bail!("--threshold {threshold} out of range (fractional slowdown, e.g. 0.25)");
+    }
+    let load = |p: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        Json::parse(&text).with_context(|| format!("parsing {p}"))
+    };
+    let report = diff(&load(&baseline_path)?, &load(&current_path)?, threshold);
+    print!("{}", report.render());
+    Ok(report.passed())
+}

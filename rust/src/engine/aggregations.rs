@@ -40,11 +40,15 @@ impl Aggregator {
 }
 
 /// Streaming partial-aggregation state for one node (all F lanes).
-/// Holds count + Welford (mean, M2) + running min/max — enough to finalize
-/// any subset of the six aggregators in one pass.
+/// Holds count + a running sum + Welford (mean, M2) + running min/max —
+/// enough to finalize any subset of the six aggregators in one pass.
+/// `sum` is a dedicated lane: reconstructing it as `mean * count` from
+/// the Welford partials drifts from the plain fold on large
+/// neighborhoods, and the engine's fold kernels are plain accumulators.
 #[derive(Debug, Clone)]
 pub struct PartialAgg {
     pub count: f32,
+    pub sum: Vec<f32>,
     pub mean: Vec<f32>,
     pub m2: Vec<f32>,
     pub min: Vec<f32>,
@@ -55,6 +59,7 @@ impl PartialAgg {
     pub fn new(width: usize) -> PartialAgg {
         PartialAgg {
             count: 0.0,
+            sum: vec![0.0; width],
             mean: vec![0.0; width],
             m2: vec![0.0; width],
             min: vec![f32::INFINITY; width],
@@ -67,6 +72,8 @@ impl PartialAgg {
     /// warmup this never allocates).
     pub fn reset(&mut self, width: usize) {
         self.count = 0.0;
+        self.sum.clear();
+        self.sum.resize(width, 0.0);
         self.mean.clear();
         self.mean.resize(width, 0.0);
         self.m2.clear();
@@ -89,11 +96,14 @@ impl PartialAgg {
             self.m2[i] += d * (v[i] - self.mean[i]);
             self.min[i] = self.min[i].min(v[i]);
             self.max[i] = self.max[i].max(v[i]);
+            self.sum[i] += v[i];
         }
     }
 
     /// Finalize one aggregator into `out` (empty neighborhoods → 0,
-    /// matching the kernel's masked finalize).
+    /// matching the kernel's masked finalize). `Sum` is the dedicated
+    /// running-sum lane (exactly the plain fold); `Mean` is
+    /// `sum × 1/count`, matching the engine's fold kernels.
     pub fn finalize(&self, op: Aggregator, out: &mut [f32]) {
         let w = self.mean.len();
         debug_assert_eq!(out.len(), w);
@@ -102,12 +112,13 @@ impl PartialAgg {
             return;
         }
         match op {
-            Aggregator::Sum => {
+            Aggregator::Sum => out.copy_from_slice(&self.sum),
+            Aggregator::Mean => {
+                let inv = 1.0 / self.count;
                 for i in 0..w {
-                    out[i] = self.mean[i] * self.count;
+                    out[i] = self.sum[i] * inv;
                 }
             }
-            Aggregator::Mean => out.copy_from_slice(&self.mean),
             Aggregator::Min => out.copy_from_slice(&self.min),
             Aggregator::Max => out.copy_from_slice(&self.max),
             Aggregator::Var => {
@@ -166,6 +177,29 @@ mod tests {
         }
         let var = finalize_vec(&p, Aggregator::Var)[0];
         assert!((var - 2.0 / 3.0).abs() < 1e-3, "var {var}");
+    }
+
+    #[test]
+    fn sum_is_bitwise_equal_to_straight_fold() {
+        // regression: finalize(Sum) used to reconstruct the sum as
+        // mean * count from the Welford partials, which drifts from the
+        // plain accumulator on large neighborhoods. The dedicated sum
+        // lane must match a straight fold bit-for-bit.
+        let mut rng = Rng::seed_from(0xa66);
+        let vals: Vec<f32> = (0..5000).map(|_| rng.range_f64(-1.0, 1.0) as f32 + 0.1).collect();
+        let mut p = PartialAgg::new(1);
+        let mut fold = 0.0f32;
+        for &v in &vals {
+            p.update(&[v]);
+            fold += v;
+        }
+        assert_eq!(finalize_vec(&p, Aggregator::Sum), vec![fold]);
+        // and mean is defined as sum × 1/count, matching the engine's
+        // fold kernels
+        assert_eq!(
+            finalize_vec(&p, Aggregator::Mean),
+            vec![fold * (1.0 / vals.len() as f32)]
+        );
     }
 
     #[test]

@@ -1,23 +1,62 @@
-//! Layer kernels for the native engine: tiled linear, the four graph
+//! Layer kernels for the native engine: SIMD-tiled linear, the four graph
 //! convolutions (explicit message passing per Fig. 3), and global pooling.
-//! Each mirrors its L2 JAX twin in `python/compile/model.py` exactly —
-//! the golden-testvec tests in `engine/mod.rs` enforce this.
+//! Each mirrors its L2 JAX twin in `python/compile/model.py` — the
+//! golden-testvec tests in `engine/mod.rs` enforce this.
 //!
 //! Every kernel writes into a caller-provided output buffer (`*_into`
 //! style) and reads graph topology through [`GraphView`], so the same
-//! code serves the single-graph path and the packed-batch path with zero
-//! heap allocation in the hot loop (buffers live in the engine
-//! [`Workspace`](super::Workspace) and are reused across calls). The f32
-//! operation order is identical in both paths, which keeps the batched
-//! forward bit-exact versus the per-graph forward.
+//! code serves the single-graph, packed-batch, and sharded paths with
+//! zero heap allocation in the hot loop (buffers live in the engine
+//! [`Workspace`](super::Workspace) and are reused across calls).
+//!
+//! ## Kernel architecture (perf)
+//!
+//! The hot loops are data-parallel over *feature lanes*, not rows:
+//!
+//! * **Linear** tiles the output columns into `LANES`-wide register
+//!   accumulators (one 64-byte cache line of f32) and unrolls the shared
+//!   k-dimension 4×. Each lane is an independent dependency chain, so the
+//!   compiler vectorizes across lanes without reassociating any single
+//!   lane's fold — per-element operation order is exactly the scalar
+//!   ascending-k fold (no `hv == 0` branch in the hot loop).
+//! * **Aggregation** is degree-bucketed: the graph substrate presorts
+//!   nodes into a low-degree bucket (in-degree ≤
+//!   [`AGG_LOW_DEG`](crate::graph::AGG_LOW_DEG)) that runs branch-free
+//!   unrolled folds over a fixed neighbor count, and a high-degree bucket
+//!   that streams neighbor rows through lane-tiled accumulators
+//!   (struct-of-lanes registers, no per-node state). Statistics
+//!   aggregators (var/std) stream Welford partials through lane tiles.
+//! * **GCN** precomputes the per-node `1/√d~` scale table once per layer,
+//!   then gathers neighbor rows through lane-tiled accumulators.
+//!
+//! Numerics contract: under `MathMode::Exact` (the default) every output
+//! element is produced by the same f32 operation sequence as the scalar
+//! kernels in `super::reference` — bit-identical across execution paths
+//! *and* tile shapes. `MathMode::Relaxed` (opt-in) additionally splits
+//! long folds across a fixed number of accumulator banks — deterministic
+//! and identical across paths, but reassociated. `MathMode::Reference`
+//! dispatches to the scalar kernels themselves. Quantization is hoisted
+//! out of the inner loops: convs compute plain rows and snap whole
+//! buffers to the ap_fixed grid once per stage.
 
-use super::aggregations::{Aggregator, PartialAgg};
-use super::{Embeds, Mat, GIN_EPS, PNA_AGGREGATORS};
+use super::aggregations::Aggregator;
+use super::{reference, Embeds, Mat, MathMode, Mode, GIN_EPS, PNA_AGGREGATORS};
 use crate::fixed::Fixed;
 use crate::graph::GraphView;
 use crate::model::{FixedPointFormat, Pooling};
 
-/// Quantize a buffer in place when a fixed format is active.
+/// Feature-lane tile width: 16 f32 = one 64-byte cache line. Tiles are
+/// fixed-size register accumulator arrays, so the inner loops are
+/// branch-free with independent per-lane dependency chains.
+const LANES: usize = 16;
+
+/// Lane tile width for the Welford statistics path (more live registers
+/// per lane: mean, m2, min, max, sum).
+const WEL_LANES: usize = 8;
+
+/// Quantize a buffer in place when a fixed format is active. The format
+/// match is hoisted out of the element loop — callers quantize whole
+/// rows/buffers, never single elements.
 pub(crate) fn maybe_quantize(xs: &mut [f32], q: Option<FixedPointFormat>) {
     if let Some(fmt) = q {
         for x in xs.iter_mut() {
@@ -26,104 +65,214 @@ pub(crate) fn maybe_quantize(xs: &mut [f32], q: Option<FixedPointFormat>) {
     }
 }
 
+/// One exact-mode column tile of the linear kernel: strict ascending-k
+/// accumulation per lane, k unrolled 4× (four *sequential* adds per
+/// iteration — the per-lane fold order is identical to the scalar
+/// reference, lanes are the parallel dimension).
 #[inline]
-fn qv(v: f32, q: Option<FixedPointFormat>) -> f32 {
-    match q {
-        Some(fmt) => Fixed::from_f32(v, fmt).to_f32(fmt),
-        None => v,
+fn linear_tile_exact(hrow: &[f32], w: &Mat, c0: usize, acc: &mut [f32; LANES]) {
+    let m = w.cols;
+    let kk = hrow.len();
+    let mut k = 0;
+    while k + 4 <= kk {
+        let base = k * m + c0;
+        let h0 = hrow[k];
+        let h1 = hrow[k + 1];
+        let h2 = hrow[k + 2];
+        let h3 = hrow[k + 3];
+        let w0 = &w.data[base..base + LANES];
+        let w1 = &w.data[base + m..base + m + LANES];
+        let w2 = &w.data[base + 2 * m..base + 2 * m + LANES];
+        let w3 = &w.data[base + 3 * m..base + 3 * m + LANES];
+        for j in 0..LANES {
+            acc[j] += h0 * w0[j];
+            acc[j] += h1 * w1[j];
+            acc[j] += h2 * w2[j];
+            acc[j] += h3 * w3[j];
+        }
+        k += 4;
+    }
+    while k < kk {
+        let hv = hrow[k];
+        let wrow = &w.data[k * m + c0..k * m + c0 + LANES];
+        for j in 0..LANES {
+            acc[j] += hv * wrow[j];
+        }
+        k += 1;
+    }
+}
+
+/// Relaxed-mode column tile: the k-fold is split across four independent
+/// accumulator banks (deterministic reassociation), merged pairwise at
+/// the end. Shared by every execution path, so relaxed outputs are still
+/// path-identical — just not bit-equal to exact.
+#[inline]
+fn linear_tile_relaxed(hrow: &[f32], w: &Mat, c0: usize, acc: &mut [f32; LANES]) {
+    let m = w.cols;
+    let kk = hrow.len();
+    let mut bank = [[0.0f32; LANES]; 4];
+    let mut k = 0;
+    while k + 4 <= kk {
+        let base = k * m + c0;
+        for (u, bk) in bank.iter_mut().enumerate() {
+            let hv = hrow[k + u];
+            let wrow = &w.data[base + u * m..base + u * m + LANES];
+            for j in 0..LANES {
+                bk[j] += hv * wrow[j];
+            }
+        }
+        k += 4;
+    }
+    while k < kk {
+        let hv = hrow[k];
+        let wrow = &w.data[k * m + c0..k * m + c0 + LANES];
+        for j in 0..LANES {
+            bank[0][j] += hv * wrow[j];
+        }
+        k += 1;
+    }
+    for j in 0..LANES {
+        acc[j] += (bank[0][j] + bank[1][j]) + (bank[2][j] + bank[3][j]);
     }
 }
 
 /// out[N, M] = h[N, K] @ w[K, M] + b — the tiled linear kernel (§V-B).
-/// Row-major inner loop ordered (row, k, col) so the hot loop is a
-/// contiguous axpy over the weight row (auto-vectorizes). `b = None`
-/// initializes rows to zero (the φ-hoisted conv transforms).
-pub(crate) fn linear_into(
-    h: &Embeds,
-    w: &Mat,
-    b: Option<&[f32]>,
-    q: Option<FixedPointFormat>,
-    out: &mut Embeds,
-) {
+/// Output columns are tiled into `LANES`-wide register accumulators;
+/// remainder columns (M % LANES) run the plain scalar fold in the same
+/// ascending-k order. `b = None` initializes lanes to zero (the φ-hoisted
+/// conv transforms).
+pub(crate) fn linear_into(h: &Embeds, w: &Mat, b: Option<&[f32]>, mode: Mode, out: &mut Embeds) {
     assert_eq!(h.cols, w.rows);
     if let Some(b) = b {
         assert_eq!(w.cols, b.len());
     }
-    out.reshape(h.rows, w.cols); // every row is fully initialized below
+    if mode.kind == MathMode::Reference {
+        return reference::linear_into(h, w, b, mode.q, out);
+    }
+    let relaxed = mode.kind == MathMode::Relaxed;
+    let m = w.cols;
+    let kk = w.rows;
+    out.reshape(h.rows, m); // every element is written below
     for r in 0..h.rows {
         let hrow = h.row(r);
         let orow = out.row_mut(r);
-        match b {
-            Some(b) => orow.copy_from_slice(b),
-            None => orow.fill(0.0),
-        }
-        for (k, &hv) in hrow.iter().enumerate() {
-            if hv == 0.0 {
-                continue;
+        let mut c0 = 0;
+        while c0 + LANES <= m {
+            let mut acc = [0.0f32; LANES];
+            if let Some(b) = b {
+                acc.copy_from_slice(&b[c0..c0 + LANES]);
             }
-            let wrow = &w.data[k * w.cols..(k + 1) * w.cols];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += hv * wv;
+            if relaxed {
+                linear_tile_relaxed(hrow, w, c0, &mut acc);
+            } else {
+                linear_tile_exact(hrow, w, c0, &mut acc);
             }
+            orow[c0..c0 + LANES].copy_from_slice(&acc);
+            c0 += LANES;
         }
-        if q.is_some() {
-            maybe_quantize(orow, q);
+        for c in c0..m {
+            let mut acc = b.map_or(0.0, |b| b[c]);
+            for k in 0..kk {
+                acc += hrow[k] * w.data[k * m + c];
+            }
+            orow[c] = acc;
+        }
+        if mode.q.is_some() {
+            maybe_quantize(orow, mode.q);
         }
     }
 }
 
-/// 1-D linear for the MLP head: z[K] @ w[K, M] + b[M].
-pub(crate) fn vec_linear_into(
-    z: &[f32],
-    w: &Mat,
-    b: &[f32],
-    q: Option<FixedPointFormat>,
-    out: &mut Vec<f32>,
-) {
+/// 1-D linear for the MLP head: z[K] @ w[K, M] + b[M], column-tiled like
+/// [`linear_into`]. The head is one row per forward, so relaxed mode
+/// keeps the exact fold order here (nothing to win, and the pooled
+/// vector feeds classification logits).
+pub(crate) fn vec_linear_into(z: &[f32], w: &Mat, b: &[f32], mode: Mode, out: &mut Vec<f32>) {
     assert_eq!(z.len(), w.rows);
-    out.clear();
-    out.extend_from_slice(b);
-    for (k, &zv) in z.iter().enumerate() {
-        if zv == 0.0 {
-            continue;
-        }
-        let wrow = &w.data[k * w.cols..(k + 1) * w.cols];
-        for (o, &wv) in out.iter_mut().zip(wrow) {
-            *o += zv * wv;
-        }
+    if mode.kind == MathMode::Reference {
+        return reference::vec_linear_into(z, w, b, mode.q, out);
     }
-    maybe_quantize(out, q);
+    let m = w.cols;
+    let kk = w.rows;
+    out.clear();
+    out.resize(m, 0.0);
+    let mut c0 = 0;
+    while c0 + LANES <= m {
+        let mut acc = [0.0f32; LANES];
+        acc.copy_from_slice(&b[c0..c0 + LANES]);
+        for k in 0..kk {
+            let zv = z[k];
+            let wrow = &w.data[k * m + c0..k * m + c0 + LANES];
+            for j in 0..LANES {
+                acc[j] += zv * wrow[j];
+            }
+        }
+        out[c0..c0 + LANES].copy_from_slice(&acc);
+        c0 += LANES;
+    }
+    for c in c0..m {
+        let mut acc = b[c];
+        for k in 0..kk {
+            acc += z[k] * w.data[k * m + c];
+        }
+        out[c] = acc;
+    }
+    maybe_quantize(out, mode.q);
 }
 
 /// GCN: out_i = Σ_{j∈N(i)} (W h_j) / √(d~_i d~_j) + (W h_i) / d~_i + b
 /// with d~ = in-degree + 1 (self-loop augmented). Matches
 /// `kernels/aggregate.gcn_aggregate` + `model._conv`. `xw` is scratch for
-/// the φ-hoisted transform.
+/// the φ-hoisted transform; `scal` is scratch for the per-node `1/√d~`
+/// scale table (computed once per layer instead of per edge). The gather
+/// itself streams neighbor rows through lane-tiled accumulators in
+/// neighbor-table order (same fold order in every mode — the gather has
+/// no bank split, so relaxed == exact here).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn gcn_conv_into(
     g: GraphView<'_>,
     h: &Embeds,
     w: &Mat,
     b: &[f32],
-    q: Option<FixedPointFormat>,
+    mode: Mode,
     xw: &mut Embeds,
+    scal: &mut Embeds,
     out: &mut Embeds,
 ) {
-    linear_into(h, w, None, q, xw); // φ hoisted over nodes (same math)
-    out.reset(h.rows, w.cols);
-    for i in 0..g.num_nodes {
+    linear_into(h, w, None, mode, xw); // φ hoisted over nodes (same math)
+    if mode.kind == MathMode::Reference {
+        return reference::gcn_gather(g, xw, b, out);
+    }
+    let n = g.num_nodes;
+    let m = xw.cols;
+    scal.reshape(n, 1); // flat per-node scale table, fully written below
+    for i in 0..n {
+        let deg = (g.in_deg[i] as f32 + 1.0).max(1.0);
+        scal.data[i] = 1.0 / deg.sqrt();
+    }
+    out.reshape(n, m); // every element is written below
+    for i in 0..n {
+        let nbrs = g.neighbors(i);
+        let si = scal.data[i];
         let deg_i = (g.in_deg[i] as f32 + 1.0).max(1.0);
-        let inv_sqrt_i = 1.0 / deg_i.sqrt();
-        let orow = out.row_mut(i);
-        for &j in g.neighbors(i) {
-            let deg_j = (g.in_deg[j as usize] as f32 + 1.0).max(1.0);
-            let coef = inv_sqrt_i / deg_j.sqrt();
-            for (o, &v) in orow.iter_mut().zip(xw.row(j as usize)) {
-                *o += coef * v;
-            }
-        }
         let self_coef = 1.0 / deg_i;
-        for ((o, &v), &bb) in orow.iter_mut().zip(xw.row(i)).zip(b) {
-            *o += self_coef * v + bb;
+        let mut f0 = 0;
+        while f0 < m {
+            let fw = LANES.min(m - f0);
+            let mut acc = [0.0f32; LANES];
+            for &nb in nbrs {
+                let coef = si * scal.data[nb as usize];
+                let row = &xw.row(nb as usize)[f0..f0 + fw];
+                for j in 0..fw {
+                    acc[j] += coef * row[j];
+                }
+            }
+            let selfrow = &xw.row(i)[f0..f0 + fw];
+            let orow = &mut out.row_mut(i)[f0..f0 + fw];
+            for j in 0..fw {
+                orow[j] = acc[j] + (self_coef * selfrow[j] + b[f0 + j]);
+            }
+            f0 += fw;
         }
     }
 }
@@ -137,15 +286,14 @@ pub(crate) fn sage_conv_into(
     w_root: &Mat,
     w_nbr: &Mat,
     b: &[f32],
-    q: Option<FixedPointFormat>,
+    mode: Mode,
     t0: &mut Embeds,
     t1: &mut Embeds,
-    agg: &mut PartialAgg,
     out: &mut Embeds,
 ) {
-    linear_into(h, w_root, Some(b), q, out);
-    aggregate_into(g, h, &[Aggregator::Mean], agg, t0);
-    linear_into(t0, w_nbr, None, q, t1);
+    linear_into(h, w_root, Some(b), mode, out);
+    aggregate_into(g, h, &[Aggregator::Mean], mode, t0);
+    linear_into(t0, w_nbr, None, mode, t1);
     for (o, &v) in out.data.iter_mut().zip(&t1.data) {
         *o += v;
     }
@@ -160,27 +308,29 @@ pub(crate) fn gin_conv_into(
     b1: &[f32],
     w2: &Mat,
     b2: &[f32],
-    q: Option<FixedPointFormat>,
+    mode: Mode,
     t0: &mut Embeds,
     t1: &mut Embeds,
-    agg: &mut PartialAgg,
     out: &mut Embeds,
 ) {
-    aggregate_into(g, h, &[Aggregator::Sum], agg, t0); // neighbor sums
+    aggregate_into(g, h, &[Aggregator::Sum], mode, t0); // neighbor sums
     t1.reshape(h.rows, h.cols); // fully written below
     for i in 0..h.rows {
         let hrow = h.row(i);
         let srow = t0.row(i);
         let zrow = t1.row_mut(i);
         for k in 0..h.cols {
-            zrow[k] = qv((1.0 + GIN_EPS) * hrow[k] + srow[k], q);
+            zrow[k] = (1.0 + GIN_EPS) * hrow[k] + srow[k];
         }
     }
-    linear_into(t1, w1, Some(b1), q, t0); // t0: sums are dead, reuse as mid
+    // one whole-buffer snap instead of a per-element format match —
+    // elementwise, so identical to quantizing inside the loop
+    maybe_quantize(&mut t1.data, mode.q);
+    linear_into(t1, w1, Some(b1), mode, t0); // t0: sums are dead, reuse as mid
     for v in t0.data.iter_mut() {
         *v = v.max(0.0); // the GIN MLP's inner activation is fixed ReLU (L2 twin)
     }
-    linear_into(t0, w2, Some(b2), q, out);
+    linear_into(t0, w2, Some(b2), mode, out);
 }
 
 /// PNA: out_i = W [h_i ‖ scaled aggregators] + b, aggregators
@@ -192,14 +342,13 @@ pub(crate) fn pna_conv_into(
     w: &Mat,
     b: &[f32],
     delta: f32,
-    q: Option<FixedPointFormat>,
+    mode: Mode,
     t0: &mut Embeds,
     t1: &mut Embeds,
-    agg: &mut PartialAgg,
     out: &mut Embeds,
 ) {
     let f = h.cols;
-    aggregate_into(g, h, &PNA_AGGREGATORS, agg, t0); // [N, 4F]
+    aggregate_into(g, h, &PNA_AGGREGATORS, mode, t0); // [N, 4F]
     let towers = f * (PNA_AGGREGATORS.len() * 3 + 1);
     t1.reshape(h.rows, towers); // every lane of every row is written below
     for i in 0..h.rows {
@@ -217,35 +366,285 @@ pub(crate) fn pna_conv_into(
             frow[base + na + k] = arow[k] * amp;
             frow[base + 2 * na + k] = arow[k] * atten;
         }
-        maybe_quantize(frow, q);
     }
-    linear_into(t1, w, Some(b), q, out);
+    // quantize the assembled towers in one pass (format match hoisted
+    // out of the row loop; elementwise identical to per-row snapping)
+    maybe_quantize(&mut t1.data, mode.q);
+    linear_into(t1, w, Some(b), mode, out);
 }
 
-/// Per-node neighbor aggregation via the single-pass partials (Fig. 3).
+/// Per-node neighbor aggregation (Fig. 3). Dispatches on the requested
+/// statistics: pure folds (sum/mean/min/max) take the degree-bucketed
+/// fold kernels; var/std take the lane-tiled Welford streamer. Node
+/// iteration follows the precomputed [`GraphView::low_nodes`] /
+/// [`GraphView::high_nodes`] schedule — counts always come from the
+/// local neighbor lists (`offsets`), never from `in_deg`, which the
+/// sharded path splices with global degrees.
 pub(crate) fn aggregate_into(
     g: GraphView<'_>,
     h: &Embeds,
     ops: &[Aggregator],
-    partial: &mut PartialAgg,
+    mode: Mode,
     out: &mut Embeds,
 ) {
-    let f = h.cols;
-    debug_assert_eq!(h.rows, g.num_nodes); // finalize covers every row below
-    out.reshape(h.rows, ops.len() * f);
-    partial.reset(f);
-    for i in 0..g.num_nodes {
-        partial.count = 0.0;
-        partial.mean.fill(0.0);
-        partial.m2.fill(0.0);
-        partial.min.fill(f32::INFINITY);
-        partial.max.fill(f32::NEG_INFINITY);
-        for &j in g.neighbors(i) {
-            partial.update(h.row(j as usize));
+    debug_assert_eq!(h.rows, g.num_nodes); // every row is covered below
+    if mode.kind == MathMode::Reference {
+        return reference::aggregate_into(g, h, ops, out);
+    }
+    out.reshape(h.rows, ops.len() * h.cols);
+    let welford = ops.iter().any(|o| matches!(o, Aggregator::Var | Aggregator::Std));
+    if welford {
+        welford_aggregate(g, h, ops, out);
+    } else {
+        fold_aggregate(g, h, ops, mode.kind == MathMode::Relaxed, out);
+    }
+}
+
+/// Branch-free fold over a compile-time neighbor count `D` — the
+/// low-degree bucket body. The row array is fixed-size, so the inner
+/// neighbor loop fully unrolls and each lane is an independent chain.
+#[inline]
+fn fold_small<const D: usize>(
+    rows: [&[f32]; D],
+    inv: f32,
+    ops: &[Aggregator],
+    f: usize,
+    orow: &mut [f32],
+) {
+    for (oi, &op) in ops.iter().enumerate() {
+        let seg = &mut orow[oi * f..(oi + 1) * f];
+        match op {
+            Aggregator::Sum => {
+                for j in 0..f {
+                    let mut s = 0.0f32;
+                    for r in rows.iter() {
+                        s += r[j];
+                    }
+                    seg[j] = s;
+                }
+            }
+            Aggregator::Mean => {
+                for j in 0..f {
+                    let mut s = 0.0f32;
+                    for r in rows.iter() {
+                        s += r[j];
+                    }
+                    seg[j] = s * inv;
+                }
+            }
+            Aggregator::Min => {
+                for j in 0..f {
+                    let mut s = f32::INFINITY;
+                    for r in rows.iter() {
+                        s = s.min(r[j]);
+                    }
+                    seg[j] = s;
+                }
+            }
+            Aggregator::Max => {
+                for j in 0..f {
+                    let mut s = f32::NEG_INFINITY;
+                    for r in rows.iter() {
+                        s = s.max(r[j]);
+                    }
+                    seg[j] = s;
+                }
+            }
+            Aggregator::Var | Aggregator::Std => {
+                unreachable!("var/std take the Welford path")
+            }
         }
-        let orow = out.row_mut(i);
+    }
+}
+
+/// Streaming fold for one high-degree node: feature tiles outer,
+/// neighbor stream inner, lane-tiled register accumulators. In relaxed
+/// mode a pure-sum stream (no min/max requested) splits across two
+/// accumulator banks; min/max streams keep the exact order (min/max are
+/// order-insensitive anyway, and the shared sum must stay deterministic).
+fn fold_stream(
+    h: &Embeds,
+    nbrs: &[u32],
+    inv: f32,
+    ops: &[Aggregator],
+    relaxed: bool,
+    orow: &mut [f32],
+) {
+    let f = h.cols;
+    let minmax = ops.iter().any(|o| matches!(o, Aggregator::Min | Aggregator::Max));
+    let mut f0 = 0;
+    while f0 < f {
+        let fw = LANES.min(f - f0);
+        let mut sum = [0.0f32; LANES];
+        let mut mn = [f32::INFINITY; LANES];
+        let mut mx = [f32::NEG_INFINITY; LANES];
+        if minmax {
+            for &nb in nbrs {
+                let row = &h.row(nb as usize)[f0..f0 + fw];
+                for j in 0..fw {
+                    let v = row[j];
+                    sum[j] += v;
+                    mn[j] = mn[j].min(v);
+                    mx[j] = mx[j].max(v);
+                }
+            }
+        } else if relaxed {
+            let mut alt = [0.0f32; LANES];
+            let mut pairs = nbrs.chunks_exact(2);
+            for pair in pairs.by_ref() {
+                let r0 = &h.row(pair[0] as usize)[f0..f0 + fw];
+                let r1 = &h.row(pair[1] as usize)[f0..f0 + fw];
+                for j in 0..fw {
+                    sum[j] += r0[j];
+                    alt[j] += r1[j];
+                }
+            }
+            for &nb in pairs.remainder() {
+                let row = &h.row(nb as usize)[f0..f0 + fw];
+                for j in 0..fw {
+                    sum[j] += row[j];
+                }
+            }
+            for j in 0..fw {
+                sum[j] += alt[j];
+            }
+        } else {
+            for &nb in nbrs {
+                let row = &h.row(nb as usize)[f0..f0 + fw];
+                for j in 0..fw {
+                    sum[j] += row[j];
+                }
+            }
+        }
         for (oi, &op) in ops.iter().enumerate() {
-            partial.finalize(op, &mut orow[oi * f..(oi + 1) * f]);
+            let seg = &mut orow[oi * f + f0..oi * f + f0 + fw];
+            match op {
+                Aggregator::Sum => seg.copy_from_slice(&sum[..fw]),
+                Aggregator::Mean => {
+                    for j in 0..fw {
+                        seg[j] = sum[j] * inv;
+                    }
+                }
+                Aggregator::Min => seg.copy_from_slice(&mn[..fw]),
+                Aggregator::Max => seg.copy_from_slice(&mx[..fw]),
+                Aggregator::Var | Aggregator::Std => {
+                    unreachable!("var/std take the Welford path")
+                }
+            }
+        }
+        f0 += fw;
+    }
+}
+
+/// Degree-bucketed fold aggregation (no statistics requested): the
+/// low-degree bucket dispatches to a fully unrolled fold per neighbor
+/// count, the high-degree bucket streams through [`fold_stream`].
+fn fold_aggregate(g: GraphView<'_>, h: &Embeds, ops: &[Aggregator], relaxed: bool, out: &mut Embeds) {
+    let f = h.cols;
+    for &i in g.low_nodes() {
+        let i = i as usize;
+        let nbrs = g.neighbors(i);
+        let inv = 1.0 / (nbrs.len() as f32);
+        let orow = out.row_mut(i);
+        match *nbrs {
+            [] => orow[..ops.len() * f].fill(0.0),
+            [a] => fold_small([h.row(a as usize)], inv, ops, f, orow),
+            [a, b] => fold_small([h.row(a as usize), h.row(b as usize)], inv, ops, f, orow),
+            [a, b, c] => fold_small(
+                [h.row(a as usize), h.row(b as usize), h.row(c as usize)],
+                inv,
+                ops,
+                f,
+                orow,
+            ),
+            [a, b, c, d] => fold_small(
+                [
+                    h.row(a as usize),
+                    h.row(b as usize),
+                    h.row(c as usize),
+                    h.row(d as usize),
+                ],
+                inv,
+                ops,
+                f,
+                orow,
+            ),
+            // only reachable if AGG_LOW_DEG grows past the unrolled arms;
+            // the streaming kernel is always correct
+            _ => fold_stream(h, nbrs, inv, ops, relaxed, orow),
+        }
+    }
+    for &i in g.high_nodes() {
+        let i = i as usize;
+        let nbrs = g.neighbors(i);
+        let inv = 1.0 / (nbrs.len() as f32);
+        fold_stream(h, nbrs, inv, ops, relaxed, out.row_mut(i));
+    }
+}
+
+/// Lane-tiled Welford streamer for statistics aggregations (var/std,
+/// i.e. the PNA set): per feature tile, stream all neighbors once
+/// maintaining mean/m2/min/max/sum registers per lane. Identical update
+/// order in every mode (the Welford recurrence is a strict dependency
+/// chain — relaxing it would change semantics, not just rounding).
+fn welford_aggregate(g: GraphView<'_>, h: &Embeds, ops: &[Aggregator], out: &mut Embeds) {
+    let f = h.cols;
+    for i in 0..g.num_nodes {
+        let nbrs = g.neighbors(i);
+        let orow = out.row_mut(i);
+        if nbrs.is_empty() {
+            orow[..ops.len() * f].fill(0.0);
+            continue;
+        }
+        let countf = nbrs.len() as f32;
+        let invc = 1.0 / countf;
+        let mut f0 = 0;
+        while f0 < f {
+            let fw = WEL_LANES.min(f - f0);
+            let mut mean = [0.0f32; WEL_LANES];
+            let mut m2 = [0.0f32; WEL_LANES];
+            let mut mn = [f32::INFINITY; WEL_LANES];
+            let mut mx = [f32::NEG_INFINITY; WEL_LANES];
+            let mut sum = [0.0f32; WEL_LANES];
+            let mut seen = 0.0f32;
+            for &nb in nbrs {
+                seen += 1.0;
+                let inv = 1.0 / seen;
+                let row = &h.row(nb as usize)[f0..f0 + fw];
+                for j in 0..fw {
+                    let v = row[j];
+                    let d = v - mean[j];
+                    mean[j] += d * inv;
+                    m2[j] += d * (v - mean[j]);
+                    mn[j] = mn[j].min(v);
+                    mx[j] = mx[j].max(v);
+                    sum[j] += v;
+                }
+            }
+            for (oi, &op) in ops.iter().enumerate() {
+                let seg = &mut orow[oi * f + f0..oi * f + f0 + fw];
+                match op {
+                    Aggregator::Sum => seg.copy_from_slice(&sum[..fw]),
+                    Aggregator::Mean => {
+                        for j in 0..fw {
+                            seg[j] = sum[j] * invc;
+                        }
+                    }
+                    Aggregator::Min => seg.copy_from_slice(&mn[..fw]),
+                    Aggregator::Max => seg.copy_from_slice(&mx[..fw]),
+                    Aggregator::Var => {
+                        for j in 0..fw {
+                            seg[j] = (m2[j] / countf).max(0.0);
+                        }
+                    }
+                    Aggregator::Std => {
+                        for j in 0..fw {
+                            seg[j] = (m2[j] / countf).max(0.0).sqrt();
+                        }
+                    }
+                }
+            }
+            f0 += fw;
         }
     }
 }
@@ -289,6 +688,7 @@ pub(crate) fn global_pool_into(h: &Embeds, p: Pooling, out: &mut [f32]) {
 mod tests {
     use super::*;
     use crate::graph::Graph;
+    use crate::util::rng::Rng;
 
     fn embeds(rows: usize, cols: usize, vals: &[f32]) -> Embeds {
         Embeds {
@@ -306,16 +706,29 @@ mod tests {
         }
     }
 
+    fn rand_embeds(rng: &mut Rng, rows: usize, cols: usize) -> Embeds {
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| rng.range_f64(-2.0, 2.0) as f32)
+            .collect();
+        embeds(rows, cols, &data)
+    }
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        mat(rows, cols, &data)
+    }
+
     fn linear(h: &Embeds, w: &Mat, b: &[f32], q: Option<FixedPointFormat>) -> Embeds {
         let mut out = Embeds::zeros(0, 0);
-        linear_into(h, w, Some(b), q, &mut out);
+        linear_into(h, w, Some(b), Mode::exact(q), &mut out);
         out
     }
 
     fn aggregate(g: GraphView<'_>, h: &Embeds, ops: &[Aggregator]) -> Embeds {
         let mut out = Embeds::zeros(0, 0);
-        let mut agg = PartialAgg::new(0);
-        aggregate_into(g, h, ops, &mut agg, &mut out);
+        aggregate_into(g, h, ops, Mode::exact(None), &mut out);
         out
     }
 
@@ -337,13 +750,14 @@ mod tests {
     fn linear_reuses_buffer_without_stale_state() {
         let w = mat(3, 2, &[1., 0., 0., 1., 1., 1.]);
         let mut out = Embeds::zeros(0, 0);
-        linear_into(&embeds(2, 3, &[1.; 6]), &w, Some(&[0., 0.]), None, &mut out);
+        let md = Mode::exact(None);
+        linear_into(&embeds(2, 3, &[1.; 6]), &w, Some(&[0., 0.]), md, &mut out);
         let first = out.data.clone();
         // second call with the same inputs into the warm buffer is identical
-        linear_into(&embeds(2, 3, &[1.; 6]), &w, Some(&[0., 0.]), None, &mut out);
+        linear_into(&embeds(2, 3, &[1.; 6]), &w, Some(&[0., 0.]), md, &mut out);
         assert_eq!(out.data, first);
         // and shrinking reuse produces the right shape
-        linear_into(&embeds(1, 3, &[1., 2., 3.]), &w, Some(&[0., 0.]), None, &mut out);
+        linear_into(&embeds(1, 3, &[1., 2., 3.]), &w, Some(&[0., 0.]), md, &mut out);
         assert_eq!((out.rows, out.cols), (1, 2));
         assert_eq!(out.data, vec![4., 5.]);
     }
@@ -353,10 +767,56 @@ mod tests {
         let w = mat(3, 2, &[1., 2., 3., 4., 5., 6.]);
         let z = [1.0, 0.5, -1.0];
         let mut a = Vec::new();
-        vec_linear_into(&z, &w, &[0.1, 0.2], None, &mut a);
+        vec_linear_into(&z, &w, &[0.1, 0.2], Mode::exact(None), &mut a);
         let h = embeds(1, 3, &z);
         let b = linear(&h, &w, &[0.1, 0.2], None);
         assert_eq!(a, b.data);
+    }
+
+    /// The exact-mode contract at the kernel level: tiled output is
+    /// bit-identical to the scalar reference on shapes that exercise
+    /// full tiles, column remainders, and k-unroll remainders.
+    #[test]
+    fn tiled_linear_bit_identical_to_reference_on_odd_shapes() {
+        let mut rng = Rng::seed_from(0x71e5);
+        for &(n, k, m) in &[(5usize, 7usize, 37usize), (3, 16, 16), (4, 9, 5), (1, 1, 33)] {
+            let h = rand_embeds(&mut rng, n, k);
+            let w = rand_mat(&mut rng, k, m);
+            let b: Vec<f32> = (0..m).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect();
+            let mut tiled = Embeds::zeros(0, 0);
+            let mut scalar = Embeds::zeros(0, 0);
+            linear_into(&h, &w, Some(&b), Mode::exact(None), &mut tiled);
+            reference::linear_into(&h, &w, Some(&b), None, &mut scalar);
+            assert_eq!(tiled.data, scalar.data, "shape ({n},{k},{m})");
+            // relaxed mode reassociates: close, deterministic, repeatable
+            let relaxed_mode = Mode {
+                q: None,
+                kind: MathMode::Relaxed,
+            };
+            let mut relaxed = Embeds::zeros(0, 0);
+            linear_into(&h, &w, Some(&b), relaxed_mode, &mut relaxed);
+            for (a, e) in relaxed.data.iter().zip(&scalar.data) {
+                assert!((a - e).abs() <= 1e-4 * (1.0 + e.abs()), "relaxed {a} vs {e}");
+            }
+            let mut again = Embeds::zeros(0, 0);
+            linear_into(&h, &w, Some(&b), relaxed_mode, &mut again);
+            assert_eq!(relaxed.data, again.data);
+        }
+    }
+
+    #[test]
+    fn tiled_vec_linear_bit_identical_to_reference() {
+        let mut rng = Rng::seed_from(0x7ec);
+        for &(k, m) in &[(19usize, 40usize), (4, 16), (8, 3)] {
+            let z: Vec<f32> = (0..k).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+            let w = rand_mat(&mut rng, k, m);
+            let b: Vec<f32> = (0..m).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect();
+            let mut tiled = Vec::new();
+            let mut scalar = Vec::new();
+            vec_linear_into(&z, &w, &b, Mode::exact(None), &mut tiled);
+            reference::vec_linear_into(&z, &w, &b, None, &mut scalar);
+            assert_eq!(tiled, scalar, "shape ({k},{m})");
+        }
     }
 
     #[test]
@@ -368,6 +828,36 @@ mod tests {
         assert_eq!(out.row(1), &[0., 0., 0., 0.]); // no neighbors
     }
 
+    /// Both degree buckets and both aggregation kernels (fold + Welford)
+    /// against the scalar reference, on a hub graph whose feature width
+    /// exercises tile remainders.
+    #[test]
+    fn bucketed_aggregate_bit_identical_to_reference() {
+        let mut rng = Rng::seed_from(0xa99);
+        // hub: node 0 receives 12 edges (high bucket); a chain covers
+        // degrees 1-2; isolated node 15 covers the empty fold
+        let mut edges: Vec<(u32, u32)> = (1..13u32).map(|s| (s, 0)).collect();
+        edges.extend((1..12u32).map(|s| (s, s + 1)));
+        edges.push((0, 1));
+        let g = Graph::from_coo(16, &edges);
+        assert!(g.num_low < g.num_nodes && g.num_low > 0);
+        for f in [1usize, 8, 19] {
+            let h = rand_embeds(&mut rng, 16, f);
+            let op_sets: [&[Aggregator]; 4] = [
+                &[Aggregator::Sum],
+                &[Aggregator::Mean, Aggregator::Max],
+                &[Aggregator::Min, Aggregator::Sum, Aggregator::Mean],
+                &PNA_AGGREGATORS,
+            ];
+            for ops in op_sets {
+                let tiled = aggregate(g.view(), &h, ops);
+                let mut scalar = Embeds::zeros(0, 0);
+                reference::aggregate_into(g.view(), &h, ops, &mut scalar);
+                assert_eq!(tiled.data, scalar.data, "f={f} ops={ops:?}");
+            }
+        }
+    }
+
     #[test]
     fn gcn_self_loop_only_for_isolated_node() {
         // isolated node: out = (W h_i) / 1 + b (deg~ = 1)
@@ -375,9 +865,42 @@ mod tests {
         let h = embeds(1, 2, &[1.0, 2.0]);
         let w = mat(2, 2, &[1., 0., 0., 1.]);
         let mut xw = Embeds::zeros(0, 0);
+        let mut scal = Embeds::zeros(0, 0);
         let mut out = Embeds::zeros(0, 0);
-        gcn_conv_into(g.view(), &h, &w, &[0.5, 0.5], None, &mut xw, &mut out);
+        gcn_conv_into(
+            g.view(),
+            &h,
+            &w,
+            &[0.5, 0.5],
+            Mode::exact(None),
+            &mut xw,
+            &mut scal,
+            &mut out,
+        );
         assert_eq!(out.data, vec![1.5, 2.5]);
+    }
+
+    /// Tiled GCN gather (precomputed scale table) against the scalar
+    /// reference on a skewed graph.
+    #[test]
+    fn gcn_gather_bit_identical_to_reference() {
+        let mut rng = Rng::seed_from(0x6c9);
+        let mut edges: Vec<(u32, u32)> = (1..9u32).map(|s| (s, 0)).collect();
+        edges.extend([(0, 1), (2, 1), (3, 4)]);
+        let g = Graph::from_coo(10, &edges);
+        let h = rand_embeds(&mut rng, 10, 6);
+        let w = rand_mat(&mut rng, 6, 21);
+        let b: Vec<f32> = (0..21).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect();
+        let mut xw = Embeds::zeros(0, 0);
+        let mut scal = Embeds::zeros(0, 0);
+        let mut tiled = Embeds::zeros(0, 0);
+        gcn_conv_into(g.view(), &h, &w, &b, Mode::exact(None), &mut xw, &mut scal, &mut tiled);
+        let mut xw_ref = Embeds::zeros(0, 0);
+        reference::linear_into(&h, &w, None, None, &mut xw_ref);
+        assert_eq!(xw.data, xw_ref.data);
+        let mut scalar = Embeds::zeros(0, 0);
+        reference::gcn_gather(g.view(), &xw_ref, &b, &mut scalar);
+        assert_eq!(tiled.data, scalar.data);
     }
 
     #[test]

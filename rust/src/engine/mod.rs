@@ -28,6 +28,7 @@
 
 mod aggregations;
 mod layers;
+mod reference;
 mod sharded;
 
 pub use aggregations::{Aggregator, PartialAgg};
@@ -51,6 +52,56 @@ pub const PNA_AGGREGATORS: [Aggregator; 4] = [
 
 /// Fixed GIN epsilon (must match `model.GIN_EPS`).
 pub const GIN_EPS: f32 = 0.1;
+
+/// f32 accumulation-order contract for the compute kernels.
+///
+/// * [`Exact`](MathMode::Exact) — the default. The tiled kernels commit
+///   to one scalar operation order per output element, so
+///   single/batched/sharded × f32/ap_fixed outputs are bit-identical,
+///   and bit-identical to [`Reference`](MathMode::Reference).
+/// * [`Relaxed`](MathMode::Relaxed) — opt-in. Long folds may split
+///   across a fixed number of accumulator banks (SIMD reassociation).
+///   Still deterministic and bit-identical across execution paths, but
+///   not bit-equal to `Exact`; expect ~1e-5 relative drift on f32.
+/// * [`Reference`](MathMode::Reference) — the retained scalar kernels
+///   that define `Exact`'s semantics. The property suites pin
+///   `Exact == Reference` bitwise, and the benches run this as the
+///   scalar baseline for kernel speedups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MathMode {
+    #[default]
+    Exact,
+    Relaxed,
+    Reference,
+}
+
+impl MathMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MathMode::Exact => "exact",
+            MathMode::Relaxed => "relaxed",
+            MathMode::Reference => "reference",
+        }
+    }
+}
+
+/// Resolved numerics for one forward pass: quantization format + math
+/// mode. Constructed by the session layer (or `Mode::exact` for the
+/// crate-internal f32 conveniences) and threaded through every kernel.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct Mode {
+    pub q: Option<FixedPointFormat>,
+    pub kind: MathMode,
+}
+
+impl Mode {
+    pub(crate) fn exact(q: Option<FixedPointFormat>) -> Mode {
+        Mode {
+            q,
+            kind: MathMode::Exact,
+        }
+    }
+}
 
 /// A dense row-major matrix of node embeddings.
 #[derive(Debug, Clone, Default)]
@@ -134,9 +185,12 @@ impl Mat {
 }
 
 /// Reusable per-worker scratch buffers: current/next embeddings, two
-/// kernel temporaries, the pooled vector, the MLP ping-pong pair, and the
-/// streaming-aggregation partials. After the first call at a given model
-/// shape, a forward pass performs no heap allocation besides its output.
+/// kernel temporaries, the pooled vector, and the MLP ping-pong pair.
+/// (Aggregation state lives in kernel registers now — the lane-tiled
+/// kernels need no per-node partial buffers.) After the first call at a
+/// given model shape, a forward pass performs no heap allocation besides
+/// its output.
+#[derive(Default)]
 struct Scratch {
     h: Embeds,
     out: Embeds,
@@ -145,22 +199,6 @@ struct Scratch {
     pooled: Vec<f32>,
     z: Vec<f32>,
     z2: Vec<f32>,
-    agg: PartialAgg,
-}
-
-impl Default for Scratch {
-    fn default() -> Scratch {
-        Scratch {
-            h: Embeds::default(),
-            out: Embeds::default(),
-            t0: Embeds::default(),
-            t1: Embeds::default(),
-            pooled: Vec::new(),
-            z: Vec::new(),
-            z2: Vec::new(),
-            agg: PartialAgg::new(0),
-        }
-    }
 }
 
 /// A pool of per-worker scratch slots backing the batched forward.
@@ -275,13 +313,13 @@ impl Engine {
     /// f32 forward pass over one graph. `x` is [num_nodes * in_dim].
     /// Crate-internal baseline (the public entry is `session::Session`).
     pub(crate) fn forward(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
-        self.run_view(g.view(), x, None, &mut Scratch::default())
+        self.run_view(g.view(), x, Mode::exact(None), &mut Scratch::default())
     }
 
     /// f32 forward over a borrowed graph view (single graph or one slot of
     /// a packed batch).
     pub(crate) fn forward_view(&self, g: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
-        self.run_view(g, x, None, &mut Scratch::default())
+        self.run_view(g, x, Mode::exact(None), &mut Scratch::default())
     }
 
     /// f32 forward over a packed batch, parallelized over graphs across
@@ -292,20 +330,20 @@ impl Engine {
         batch: &GraphBatch,
         ws: &Workspace,
     ) -> Result<Vec<Vec<f32>>> {
-        self.batch_run(batch, None, ws).into_iter().collect()
+        self.batch_run(batch, Mode::exact(None), ws).into_iter().collect()
     }
 
-    /// One forward pass at an explicit quantization through a leased
-    /// workspace scratch slot — the session/dispatcher whole-graph entry.
+    /// One forward pass at explicit numerics through a leased workspace
+    /// scratch slot — the session/dispatcher whole-graph entry.
     pub(crate) fn run_one(
         &self,
         g: GraphView<'_>,
         x: &[f32],
-        q: Option<FixedPointFormat>,
+        mode: Mode,
         ws: &Workspace,
     ) -> Result<Vec<f32>> {
         let mut s = ws.acquire();
-        self.run_view(g, x, q, &mut s)
+        self.run_view(g, x, mode, &mut s)
     }
 
     /// Many feature sets over ONE graph view, parallelized across the
@@ -316,7 +354,7 @@ impl Engine {
         &self,
         g: GraphView<'_>,
         xs: &[S],
-        q: Option<FixedPointFormat>,
+        mode: Mode,
         ws: &Workspace,
     ) -> Vec<Result<Vec<f32>>> {
         let n = xs.len();
@@ -324,16 +362,16 @@ impl Engine {
             return Vec::new();
         }
         let threads = ws.threads().min(n);
-        par_map(n, threads, |i| self.run_one(g, xs[i].as_ref(), q, ws))
+        par_map(n, threads, |i| self.run_one(g, xs[i].as_ref(), mode, ws))
     }
 
-    /// Per-graph results of a batched forward at an explicit quantization
+    /// Per-graph results of a batched forward at explicit numerics
     /// — one bad graph (e.g. over MAX_NODES) fails alone instead of
     /// poisoning the whole batch. The serving dispatcher's batch entry.
     pub(crate) fn batch_run(
         &self,
         batch: &GraphBatch,
-        q: Option<FixedPointFormat>,
+        mode: Mode,
         ws: &Workspace,
     ) -> Vec<Result<Vec<f32>>> {
         let n = batch.len();
@@ -343,7 +381,7 @@ impl Engine {
         let threads = ws.threads().min(n);
         par_map(n, threads, |i| {
             let mut s = ws.acquire();
-            self.run_view(batch.view(i), batch.x_view(i), q, &mut s)
+            self.run_view(batch.view(i), batch.x_view(i), mode, &mut s)
         })
     }
 
@@ -351,7 +389,7 @@ impl Engine {
         &self,
         g: GraphView<'_>,
         x: &[f32],
-        q: Option<FixedPointFormat>,
+        mode: Mode,
         s: &mut Scratch,
     ) -> Result<Vec<f32>> {
         let cfg = &*self.cfg;
@@ -370,14 +408,14 @@ impl Engine {
 
         s.h.reset(n, cfg.graph_input_dim);
         s.h.data.copy_from_slice(x);
-        layers::maybe_quantize(&mut s.h.data, q);
+        layers::maybe_quantize(&mut s.h.data, mode.q);
 
         for conv in self.convs.iter() {
-            self.conv_step(conv, g, &s.h, q, &mut s.t0, &mut s.t1, &mut s.agg, &mut s.out);
+            self.conv_step(conv, g, &s.h, mode, &mut s.t0, &mut s.t1, &mut s.out);
             std::mem::swap(&mut s.h, &mut s.out);
         }
 
-        Ok(self.head(q, s))
+        Ok(self.head(mode, s))
     }
 
     /// One GNN layer: conv dispatch + activation + skip + quantize, from
@@ -390,23 +428,22 @@ impl Engine {
         conv: &ConvWeights,
         g: GraphView<'_>,
         h: &Embeds,
-        q: Option<FixedPointFormat>,
+        mode: Mode,
         t0: &mut Embeds,
         t1: &mut Embeds,
-        agg: &mut PartialAgg,
         out: &mut Embeds,
     ) {
         let cfg = &*self.cfg;
         match conv {
-            ConvWeights::Gcn { w, b } => layers::gcn_conv_into(g, h, w, b, q, t0, out),
+            ConvWeights::Gcn { w, b } => layers::gcn_conv_into(g, h, w, b, mode, t0, t1, out),
             ConvWeights::Sage { w_root, w_nbr, b } => {
-                layers::sage_conv_into(g, h, w_root, w_nbr, b, q, t0, t1, agg, out)
+                layers::sage_conv_into(g, h, w_root, w_nbr, b, mode, t0, t1, out)
             }
             ConvWeights::Gin { w1, b1, w2, b2 } => {
-                layers::gin_conv_into(g, h, w1, b1, w2, b2, q, t0, t1, agg, out)
+                layers::gin_conv_into(g, h, w1, b1, w2, b2, mode, t0, t1, out)
             }
             ConvWeights::Pna { w, b } => {
-                layers::pna_conv_into(g, h, w, b, self.pna_delta, q, t0, t1, agg, out)
+                layers::pna_conv_into(g, h, w, b, self.pna_delta, mode, t0, t1, out)
             }
         }
         // activation
@@ -419,13 +456,13 @@ impl Engine {
                 *o += prev;
             }
         }
-        layers::maybe_quantize(&mut out.data, q);
+        layers::maybe_quantize(&mut out.data, mode.q);
     }
 
     /// Global pooling + MLP head over final node embeddings in `s.h`.
     /// Factored out of `run_view` so the sharded path reuses the exact
     /// same op order after gathering shard embeddings back together.
-    fn head(&self, q: Option<FixedPointFormat>, s: &mut Scratch) -> Vec<f32> {
+    fn head(&self, mode: Mode, s: &mut Scratch) -> Vec<f32> {
         let cfg = &*self.cfg;
 
         // global pooling
@@ -435,20 +472,20 @@ impl Engine {
         for (pi, p) in cfg.global_pooling.iter().enumerate() {
             layers::global_pool_into(&s.h, *p, &mut s.pooled[pi * f..(pi + 1) * f]);
         }
-        layers::maybe_quantize(&mut s.pooled, q);
+        layers::maybe_quantize(&mut s.pooled, mode.q);
 
         // MLP head
         let n_mlp = self.mlp.len();
         s.z.clear();
         s.z.extend_from_slice(&s.pooled);
         for (l, (w, b)) in self.mlp.iter().enumerate() {
-            layers::vec_linear_into(&s.z, w, b, q, &mut s.z2);
+            layers::vec_linear_into(&s.z, w, b, mode, &mut s.z2);
             if l < n_mlp - 1 {
                 for v in s.z2.iter_mut() {
                     *v = cfg.mlp_activation.apply(*v);
                 }
             }
-            layers::maybe_quantize(&mut s.z2, q);
+            layers::maybe_quantize(&mut s.z2, mode.q);
             std::mem::swap(&mut s.z, &mut s.z2);
         }
         s.z.clone()
@@ -464,7 +501,7 @@ impl Engine {
     /// True fixed-point forward pass (quantizes inputs, weights, and every
     /// intermediate to the config's ap_fixed format).
     pub(crate) fn forward_fixed(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
-        self.run_view(g.view(), x, Some(self.cfg.fpx), &mut Scratch::default())
+        self.run_view(g.view(), x, Mode::exact(Some(self.cfg.fpx)), &mut Scratch::default())
     }
 
     /// Fixed-point twin of the batched forward.
@@ -473,7 +510,7 @@ impl Engine {
         batch: &GraphBatch,
         ws: &Workspace,
     ) -> Result<Vec<Vec<f32>>> {
-        self.batch_run(batch, Some(self.cfg.fpx), ws).into_iter().collect()
+        self.batch_run(batch, Mode::exact(Some(self.cfg.fpx)), ws).into_iter().collect()
     }
 
     /// Per-graph results of an f32 batched forward.
@@ -482,7 +519,7 @@ impl Engine {
         batch: &GraphBatch,
         ws: &Workspace,
     ) -> Vec<Result<Vec<f32>>> {
-        self.batch_run(batch, None, ws)
+        self.batch_run(batch, Mode::exact(None), ws)
     }
 }
 

@@ -1,0 +1,140 @@
+//! Retained scalar reference kernels (`MathMode::Reference`).
+//!
+//! One plain scalar fold per output element, in exactly the operation
+//! order the tiled kernels in `layers` commit to under `MathMode::Exact`.
+//! This module is the *semantic definition* of the engine's exact math:
+//! the property suite (`tests/kernels.rs` and the in-crate kernel tests)
+//! pins the tiled kernels bit-identical to it across conv types,
+//! aggregators, and degree skews, and the benches run it as the scalar
+//! baseline that kernel speedups are quoted against.
+//!
+//! Keep it boring on purpose: no tiling, no unrolling, no zero-skips,
+//! no accumulator banks. Any change here is a semantics change for the
+//! whole engine.
+
+use super::aggregations::Aggregator;
+use super::layers::maybe_quantize;
+use super::{Embeds, Mat};
+use crate::graph::GraphView;
+use crate::model::FixedPointFormat;
+
+/// out[N, M] = h[N, K] @ w[K, M] (+ b): one ascending-k fold per output
+/// column, starting from the bias (or 0 for the φ-hoisted transforms).
+pub(crate) fn linear_into(
+    h: &Embeds,
+    w: &Mat,
+    b: Option<&[f32]>,
+    q: Option<FixedPointFormat>,
+    out: &mut Embeds,
+) {
+    let m = w.cols;
+    out.reshape(h.rows, m); // every element is written below
+    for r in 0..h.rows {
+        let hrow = h.row(r);
+        let orow = out.row_mut(r);
+        for c in 0..m {
+            let mut acc = b.map_or(0.0, |b| b[c]);
+            for (k, &hv) in hrow.iter().enumerate() {
+                acc += hv * w.data[k * m + c];
+            }
+            orow[c] = acc;
+        }
+        if q.is_some() {
+            maybe_quantize(orow, q);
+        }
+    }
+}
+
+/// 1-D linear for the MLP head: z[K] @ w[K, M] + b[M], one ascending-k
+/// fold per output column.
+pub(crate) fn vec_linear_into(
+    z: &[f32],
+    w: &Mat,
+    b: &[f32],
+    q: Option<FixedPointFormat>,
+    out: &mut Vec<f32>,
+) {
+    let m = w.cols;
+    out.clear();
+    out.resize(m, 0.0);
+    for c in 0..m {
+        let mut acc = b[c];
+        for (k, &zv) in z.iter().enumerate() {
+            acc += zv * w.data[k * m + c];
+        }
+        out[c] = acc;
+    }
+    maybe_quantize(out, q);
+}
+
+/// Per-node neighbor aggregation, one independent scalar fold per lane.
+/// Semantics shared with the tiled kernels: `Mean` ≡ sum × (1/count)
+/// (matching [`PartialAgg::finalize`](super::PartialAgg::finalize)),
+/// `Var`/`Std` via the Welford recurrence with a population divisor, and
+/// empty neighborhoods → 0 for every requested statistic.
+pub(crate) fn aggregate_into(g: GraphView<'_>, h: &Embeds, ops: &[Aggregator], out: &mut Embeds) {
+    let f = h.cols;
+    out.reshape(h.rows, ops.len() * f);
+    for i in 0..g.num_nodes {
+        let nbrs = g.neighbors(i);
+        let orow = out.row_mut(i);
+        if nbrs.is_empty() {
+            orow.fill(0.0);
+            continue;
+        }
+        let count = nbrs.len() as f32;
+        let invc = 1.0 / count;
+        for j in 0..f {
+            let mut sum = 0.0f32;
+            let mut mean = 0.0f32;
+            let mut m2 = 0.0f32;
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            let mut seen = 0.0f32;
+            for &nb in nbrs {
+                let v = h.row(nb as usize)[j];
+                seen += 1.0;
+                let inv = 1.0 / seen;
+                let d = v - mean;
+                mean += d * inv;
+                m2 += d * (v - mean);
+                mn = mn.min(v);
+                mx = mx.max(v);
+                sum += v;
+            }
+            for (oi, &op) in ops.iter().enumerate() {
+                orow[oi * f + j] = match op {
+                    Aggregator::Sum => sum,
+                    Aggregator::Mean => sum * invc,
+                    Aggregator::Min => mn,
+                    Aggregator::Max => mx,
+                    Aggregator::Var => (m2 / count).max(0.0),
+                    Aggregator::Std => (m2 / count).max(0.0).sqrt(),
+                };
+            }
+        }
+    }
+}
+
+/// Post-transform GCN gather:
+/// out_i = Σ_{j∈N(i)} (1/√d~_i)(1/√d~_j) · xw_j + xw_i / d~_i + b
+/// with d~ = in-degree + 1 (self-loop augmented), one scalar fold per
+/// output element in neighbor-table order.
+pub(crate) fn gcn_gather(g: GraphView<'_>, xw: &Embeds, b: &[f32], out: &mut Embeds) {
+    let m = xw.cols;
+    out.reshape(g.num_nodes, m); // every element is written below
+    for i in 0..g.num_nodes {
+        let deg_i = (g.in_deg[i] as f32 + 1.0).max(1.0);
+        let si = 1.0 / deg_i.sqrt();
+        let self_coef = 1.0 / deg_i;
+        for c in 0..m {
+            let mut acc = 0.0f32;
+            for &nb in g.neighbors(i) {
+                let deg_j = (g.in_deg[nb as usize] as f32 + 1.0).max(1.0);
+                let coef = si * (1.0 / deg_j.sqrt());
+                acc += coef * xw.row(nb as usize)[c];
+            }
+            out.row_mut(i)[c] = acc + (self_coef * xw.row(i)[c] + b[c]);
+        }
+    }
+}

@@ -29,11 +29,10 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
-use crate::model::FixedPointFormat;
 use crate::partition::ShardedGraph;
 use crate::util::pool::par_map;
 
-use super::{layers, Embeds, Engine, Workspace};
+use super::{layers, Embeds, Engine, Mode, Workspace};
 
 /// Test-only conveniences mirroring the old `forward_sharded*` entries;
 /// real callers dispatch through `session::Session` / the coordinator.
@@ -47,7 +46,7 @@ impl Engine {
         x: &[f32],
         ws: &Workspace,
     ) -> Result<Vec<f32>> {
-        self.sharded_run(sg, x, None, ws)
+        self.sharded_run(sg, x, Mode::exact(None), ws)
     }
 
     /// True fixed-point twin — bit-identical to the whole-graph
@@ -58,18 +57,18 @@ impl Engine {
         x: &[f32],
         ws: &Workspace,
     ) -> Result<Vec<f32>> {
-        self.sharded_run(sg, x, Some(self.cfg.fpx), ws)
+        self.sharded_run(sg, x, Mode::exact(Some(self.cfg.fpx)), ws)
     }
 }
 
 impl Engine {
-    /// Partitioned forward at an explicit quantization — the
-    /// session/dispatcher sharded entry.
+    /// Partitioned forward at explicit numerics — the session/dispatcher
+    /// sharded entry.
     pub(crate) fn sharded_run(
         &self,
         sg: &ShardedGraph,
         x: &[f32],
-        q: Option<FixedPointFormat>,
+        mode: Mode,
         ws: &Workspace,
     ) -> Result<Vec<f32>> {
         let cfg = &*self.cfg;
@@ -99,7 +98,7 @@ impl Engine {
                     let gid = gid as usize;
                     e.row_mut(li).copy_from_slice(&x[gid * d..(gid + 1) * d]);
                 }
-                layers::maybe_quantize(&mut e.data, q);
+                layers::maybe_quantize(&mut e.data, mode.q);
                 Mutex::new(e)
             })
             .collect();
@@ -119,10 +118,9 @@ impl Engine {
                     conv,
                     sg.shards[s].view(),
                     &h,
-                    q,
+                    mode,
                     &mut sc.t0,
                     &mut sc.t1,
-                    &mut sc.agg,
                     &mut out,
                 );
             });
@@ -182,7 +180,7 @@ impl Engine {
                 sc.h.row_mut(gid).copy_from_slice(buf.row(li));
             }
         }
-        Ok(self.head(q, sc))
+        Ok(self.head(mode, sc))
     }
 }
 
@@ -314,9 +312,9 @@ mod tests {
         let whole = engine.forward(&ng.graph, &ng.x).unwrap();
         let sharded = engine.forward_sharded(&sg, &ng.x, &ws).unwrap();
         assert_eq!(sharded, whole);
-        // and the explicit-quantization entry with q = None is the same path
-        let via_q = engine.sharded_run(&sg, &ng.x, None, &ws).unwrap();
-        assert_eq!(via_q, whole);
+        // and the explicit-numerics entry at exact f32 is the same path
+        let via_mode = engine.sharded_run(&sg, &ng.x, Mode::exact(None), &ws).unwrap();
+        assert_eq!(via_mode, whole);
     }
 
     /// Workspace reuse across sharded calls (and interleaved with batched

@@ -10,7 +10,7 @@
 //! single-graph path — the engine's batched forward must and does produce
 //! exactly the same f32 outputs.
 
-use super::Graph;
+use super::{Graph, AGG_LOW_DEG};
 use crate::runtime::GraphInput;
 
 /// A borrowed, zero-copy view of one graph's topology — either a whole
@@ -25,8 +25,16 @@ pub struct GraphView<'a> {
     pub nbr: &'a [u32],
     /// neighbor offsets: node i's neighbors are nbr[offsets[i]..offsets[i+1]]
     pub offsets: &'a [u32],
-    /// in-degree per node
+    /// in-degree per node. The sharded path splices the **global** degree
+    /// table here (GCN/PNA coefficients), so kernels must derive
+    /// iteration counts from `offsets`, never from `in_deg`.
     pub in_deg: &'a [u32],
+    /// aggregation schedule: node ids with local in-degree ≤
+    /// [`AGG_LOW_DEG`] (ascending), then the rest (ascending) — bucket
+    /// classification always follows the *local* neighbor-list lengths
+    pub agg_order: &'a [u32],
+    /// boundary inside `agg_order` between the two buckets
+    pub num_low: usize,
 }
 
 impl<'a> GraphView<'a> {
@@ -41,6 +49,18 @@ impl<'a> GraphView<'a> {
     #[inline]
     pub fn in_degree(&self, node: usize) -> u32 {
         self.in_deg[node]
+    }
+
+    /// Node ids of the low-degree bucket (in-degree ≤ [`AGG_LOW_DEG`]).
+    #[inline]
+    pub fn low_nodes(&self) -> &'a [u32] {
+        &self.agg_order[..self.num_low]
+    }
+
+    /// Node ids of the high-degree bucket (in-degree > [`AGG_LOW_DEG`]).
+    #[inline]
+    pub fn high_nodes(&self) -> &'a [u32] {
+        &self.agg_order[self.num_low..]
     }
 
     /// Pad node features + COO into the accelerator's static wire layout
@@ -95,6 +115,11 @@ pub struct GraphBatch {
     edges: Vec<(u32, u32)>,
     /// packed node features, row-major per graph
     x: Vec<f32>,
+    /// packed per-graph aggregation schedules (local node ids), aligned
+    /// with `node_offsets`
+    agg_order: Vec<u32>,
+    /// per-graph low-bucket size, len num_graphs
+    num_low: Vec<u32>,
 }
 
 impl GraphBatch {
@@ -123,6 +148,8 @@ impl GraphBatch {
             in_deg: Vec::new(),
             edges: Vec::new(),
             x: Vec::new(),
+            agg_order: Vec::new(),
+            num_low: Vec::new(),
         }
     }
 
@@ -145,6 +172,8 @@ impl GraphBatch {
         self.in_deg.extend_from_slice(g.in_deg);
         self.edges.extend_from_slice(g.edges);
         self.x.extend_from_slice(x);
+        self.agg_order.extend_from_slice(g.agg_order);
+        self.num_low.push(g.num_low as u32);
     }
 
     /// Number of graphs in the batch.
@@ -182,6 +211,8 @@ impl GraphBatch {
             nbr: &self.nbr[e_lo..e_hi],
             offsets: &self.offsets[off_lo..off_hi],
             in_deg: &self.in_deg[n_lo..n_hi],
+            agg_order: &self.agg_order[n_lo..n_hi],
+            num_low: self.num_low[i] as usize,
         }
     }
 
@@ -203,6 +234,8 @@ impl GraphBatch {
             || self.edges.len() != self.total_edges()
             || self.in_deg.len() != self.total_nodes()
             || self.offsets.len() != self.total_nodes() + n
+            || self.agg_order.len() != self.total_nodes()
+            || self.num_low.len() != n
         {
             return false;
         }
@@ -219,6 +252,23 @@ impl GraphBatch {
             }
             if !v.to_graph().check() {
                 return false;
+            }
+            // the packed schedule must be a valid bucket split of this
+            // slot's *local* degrees (slice widths from `offsets`)
+            if v.agg_order.len() != v.num_nodes || v.num_low > v.num_nodes {
+                return false;
+            }
+            let mut seen = vec![false; v.num_nodes];
+            for (pos, &id) in v.agg_order.iter().enumerate() {
+                let id = id as usize;
+                if id >= v.num_nodes || seen[id] {
+                    return false;
+                }
+                seen[id] = true;
+                let low = v.neighbors(id).len() <= AGG_LOW_DEG;
+                if low != (pos < v.num_low) {
+                    return false;
+                }
             }
         }
         true
@@ -257,6 +307,8 @@ mod tests {
         assert_eq!(v.offsets, g.offsets.as_slice());
         assert_eq!(v.in_deg, g.in_deg.as_slice());
         assert_eq!(v.edges, g.edges.as_slice());
+        assert_eq!(v.agg_order, g.agg_order.as_slice());
+        assert_eq!(v.num_low, g.num_low);
         assert_eq!(b.x_view(0), x.as_slice());
         assert!(b.check());
     }
@@ -279,6 +331,8 @@ mod tests {
             assert_eq!(v.offsets, g.offsets.as_slice(), "graph {i}");
             assert_eq!(v.in_deg, g.in_deg.as_slice(), "graph {i}");
             assert_eq!(v.edges, g.edges.as_slice(), "graph {i}");
+            assert_eq!(v.agg_order, g.agg_order.as_slice(), "graph {i}");
+            assert_eq!(v.num_low, g.num_low, "graph {i}");
             assert_eq!(b.x_view(i), feats[i].as_slice(), "graph {i}");
             // neighbor queries agree node by node
             for node in 0..g.num_nodes {

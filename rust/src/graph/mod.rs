@@ -12,6 +12,14 @@ pub use batch::{GraphBatch, GraphView};
 
 use crate::runtime::GraphInput;
 
+/// Degree-bucket threshold for the engine's aggregation kernels: nodes
+/// with at most this many in-neighbors take the branch-free unrolled
+/// fold; everything above streams through the tiled high-degree path.
+/// The split is precomputed at graph construction ([`Graph::from_coo`])
+/// so the kernels iterate two dense node lists instead of branching on
+/// degree per node.
+pub const AGG_LOW_DEG: usize = 4;
+
 /// A directed graph in COO form with derived CSR-style neighbor tables.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Graph {
@@ -27,6 +35,13 @@ pub struct Graph {
     pub in_deg: Vec<u32>,
     /// out-degree per node
     pub out_deg: Vec<u32>,
+    /// aggregation schedule: node ids with in-degree ≤ [`AGG_LOW_DEG`]
+    /// (ascending), then the high-degree rest (ascending) — a
+    /// permutation of `0..num_nodes`
+    pub agg_order: Vec<u32>,
+    /// boundary inside `agg_order`: the first `num_low` entries are the
+    /// low-degree bucket
+    pub num_low: usize,
 }
 
 impl Graph {
@@ -54,6 +69,16 @@ impl Graph {
             nbr[*c as usize] = s;
             *c += 1;
         }
+        // degree-bucket schedule for the aggregation kernels: low-degree
+        // tail first (ascending), then the high-degree hubs (ascending)
+        let mut agg_order = Vec::with_capacity(num_nodes);
+        agg_order.extend(
+            (0..num_nodes as u32).filter(|&i| in_deg[i as usize] as usize <= AGG_LOW_DEG),
+        );
+        let num_low = agg_order.len();
+        agg_order.extend(
+            (0..num_nodes as u32).filter(|&i| in_deg[i as usize] as usize > AGG_LOW_DEG),
+        );
         Graph {
             num_nodes,
             num_edges,
@@ -62,6 +87,8 @@ impl Graph {
             offsets,
             in_deg,
             out_deg,
+            agg_order,
+            num_low,
         }
     }
 
@@ -79,6 +106,8 @@ impl Graph {
             nbr: &self.nbr,
             offsets: &self.offsets,
             in_deg: &self.in_deg,
+            agg_order: &self.agg_order,
+            num_low: self.num_low,
         }
     }
 
@@ -126,7 +155,32 @@ impl Graph {
         for &(_, d) in &self.edges {
             counts[d as usize] += 1;
         }
-        counts == self.in_deg
+        if counts != self.in_deg {
+            return false;
+        }
+        // the aggregation schedule is a permutation of 0..n, split at
+        // num_low into (deg ≤ AGG_LOW_DEG, ascending) ++ (deg >, ascending)
+        if self.agg_order.len() != self.num_nodes || self.num_low > self.num_nodes {
+            return false;
+        }
+        let mut seen = vec![false; self.num_nodes];
+        for (pos, &i) in self.agg_order.iter().enumerate() {
+            let i = i as usize;
+            if i >= self.num_nodes || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+            let low = self.in_deg[i] as usize <= AGG_LOW_DEG;
+            if low != (pos < self.num_low) {
+                return false;
+            }
+        }
+        for w in [&self.agg_order[..self.num_low], &self.agg_order[self.num_low..]] {
+            if w.windows(2).any(|p| p[0] >= p[1]) {
+                return false;
+            }
+        }
+        true
     }
 }
 
@@ -162,6 +216,26 @@ mod tests {
     fn neighbor_table_stable_by_input_order() {
         let g = Graph::from_coo(3, &[(2, 0), (1, 0), (0, 0)]);
         assert_eq!(g.neighbors(0), &[2, 1, 0]);
+    }
+
+    #[test]
+    fn degree_buckets_split_at_threshold() {
+        // star: node 0 receives AGG_LOW_DEG + 2 in-edges (a hub), every
+        // other node has in-degree 0 (low bucket)
+        let n = AGG_LOW_DEG + 3;
+        let edges: Vec<(u32, u32)> = (1..n as u32).map(|s| (s, 0)).collect();
+        let g = Graph::from_coo(n, &edges);
+        assert_eq!(g.num_low, n - 1);
+        assert_eq!(g.agg_order[..g.num_low], (1..n as u32).collect::<Vec<_>>());
+        assert_eq!(&g.agg_order[g.num_low..], &[0]);
+        assert!(g.check());
+        // exactly at the threshold stays in the low bucket
+        let at = Graph::from_coo(
+            AGG_LOW_DEG + 1,
+            &(1..=AGG_LOW_DEG as u32).map(|s| (s, 0)).collect::<Vec<_>>(),
+        );
+        assert_eq!(at.num_low, at.num_nodes);
+        assert!(at.check());
     }
 
     #[test]

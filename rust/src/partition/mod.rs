@@ -429,7 +429,9 @@ impl Subgraph {
 
     /// The view the engine computes on: local topology with the **global**
     /// in-degree table spliced in (GCN/PNA need true degrees of halo
-    /// neighbors; neighbor slicing only uses `offsets`/`nbr`).
+    /// neighbors; neighbor slicing only uses `offsets`/`nbr`). The
+    /// aggregation buckets come from the *local* graph — they schedule
+    /// the fold over local neighbor lists, which halo truncation shrinks.
     pub fn view(&self) -> GraphView<'_> {
         GraphView {
             num_nodes: self.graph.num_nodes,
@@ -438,6 +440,8 @@ impl Subgraph {
             nbr: &self.graph.nbr,
             offsets: &self.graph.offsets,
             in_deg: &self.global_in_deg,
+            agg_order: &self.graph.agg_order,
+            num_low: self.graph.num_low,
         }
     }
 }

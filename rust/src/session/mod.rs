@@ -44,10 +44,12 @@ use std::sync::{Arc, OnceLock};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{PlanCache, ShardStats};
-use crate::engine::{Engine, Workspace};
+use crate::engine::{Engine, Mode, Workspace};
 use crate::graph::{Graph, GraphBatch, GraphView};
 use crate::model::{FixedPointFormat, Numerics};
 use crate::partition::{adaptive_k, topology_hash, ShardedGraph};
+
+pub use crate::engine::MathMode;
 
 /// Numerics selection for a session: explicit, or deferred to the model
 /// config's [`Numerics`] (`Auto`).
@@ -244,6 +246,7 @@ enum Path {
 pub struct SessionBuilder {
     pub(crate) engine: Engine,
     pub(crate) precision: Precision,
+    pub(crate) math: MathMode,
     pub(crate) plan: ExecutionPlan,
     pub(crate) policy: ShardPolicy,
     pub(crate) plan_cache: Option<Arc<PlanCache>>,
@@ -255,6 +258,17 @@ impl SessionBuilder {
     /// Numerics selection (default: [`Precision::Auto`]).
     pub fn precision(mut self, p: Precision) -> Self {
         self.precision = p;
+        self
+    }
+
+    /// f32 accumulation-order contract (default: [`MathMode::Exact`],
+    /// the bit-reproducible path). Opting into [`MathMode::Relaxed`]
+    /// allows deterministic SIMD reassociation in the kernels — outputs
+    /// stay identical across execution paths but are no longer bit-equal
+    /// to exact mode. [`MathMode::Reference`] runs the retained scalar
+    /// kernels (property suites, bench baselines).
+    pub fn math_mode(mut self, m: MathMode) -> Self {
+        self.math = m;
         self
     }
 
@@ -373,7 +387,7 @@ impl SessionBuilder {
         Ok(Session {
             engine: self.engine,
             numerics,
-            q,
+            mode: Mode { q, kind: self.math },
             seed: self.policy.seed,
             plans,
             ws,
@@ -406,6 +420,7 @@ impl SessionBuilder {
             ));
         }
         let (_, q) = self.resolve_numerics();
+        let mode = Mode { q, kind: self.math };
         let mut policy = self.policy;
         // an explicit Sharded plan pins the policy's K so per-request
         // resolution and the plan agree on the shard count
@@ -415,7 +430,7 @@ impl SessionBuilder {
         let ws = Self::resolve_workspace(self.workspace, &self.plan);
         Ok(Dispatcher {
             engine: self.engine,
-            q,
+            mode,
             plan: self.plan,
             policy,
             plans: self.plan_cache.unwrap_or(fallback_cache),
@@ -434,7 +449,7 @@ impl SessionBuilder {
 pub struct Session {
     engine: Engine,
     numerics: Numerics,
-    q: Option<FixedPointFormat>,
+    mode: Mode,
     seed: u64,
     plans: Arc<PlanCache>,
     ws: Arc<Workspace>,
@@ -448,6 +463,7 @@ impl Session {
         SessionBuilder {
             engine,
             precision: Precision::default(),
+            math: MathMode::default(),
             plan: ExecutionPlan::default(),
             policy: ShardPolicy::default(),
             plan_cache: None,
@@ -460,10 +476,10 @@ impl Session {
     /// `num_nodes * graph_input_dim` node features.
     pub fn run(&self, x: &[f32]) -> Result<Vec<f32>> {
         match &self.path {
-            Path::Whole { .. } => self.engine.run_one(self.graph.view(), x, self.q, &self.ws),
+            Path::Whole { .. } => self.engine.run_one(self.graph.view(), x, self.mode, &self.ws),
             Path::Sharded { .. } => {
                 let sg = self.shard_plan_or_build();
-                self.engine.sharded_run(&sg, x, self.q, &self.ws)
+                self.engine.sharded_run(&sg, x, self.mode, &self.ws)
             }
         }
     }
@@ -478,7 +494,7 @@ impl Session {
         match &self.path {
             Path::Whole { parallel_batch: true } => self
                 .engine
-                .run_many(self.graph.view(), xs, self.q, &self.ws)
+                .run_many(self.graph.view(), xs, self.mode, &self.ws)
                 .into_iter()
                 .collect(),
             Path::Whole { parallel_batch: false } => {
@@ -520,6 +536,11 @@ impl Session {
     /// The numerics this session resolved to.
     pub fn numerics(&self) -> Numerics {
         self.numerics
+    }
+
+    /// The f32 accumulation-order contract this session runs under.
+    pub fn math_mode(&self) -> MathMode {
+        self.mode.kind
     }
 
     /// The execution path this session resolved to at build time.
@@ -568,7 +589,7 @@ impl Session {
 /// path-selection implementation.
 pub(crate) struct Dispatcher {
     pub(crate) engine: Engine,
-    q: Option<FixedPointFormat>,
+    mode: Mode,
     plan: ExecutionPlan,
     pub(crate) policy: ShardPolicy,
     pub(crate) plans: Arc<PlanCache>,
@@ -603,9 +624,9 @@ impl Dispatcher {
                 if let Some(stats) = &self.stats {
                     stats.record(&sg);
                 }
-                self.engine.sharded_run(&sg, x, self.q, &self.ws)
+                self.engine.sharded_run(&sg, x, self.mode, &self.ws)
             }
-            None => self.engine.run_one(g, x, self.q, &self.ws),
+            None => self.engine.run_one(g, x, self.mode, &self.ws),
         }
     }
 
@@ -616,7 +637,7 @@ impl Dispatcher {
         // packed batch runner
         let any_big = (0..batch.len()).any(|i| self.route(&batch.view(i)).is_some());
         if !any_big {
-            return self.engine.batch_run(batch, self.q, &self.ws);
+            return self.engine.batch_run(batch, self.mode, &self.ws);
         }
         // mixed dispatch: sharded graphs run individually; the rest are
         // repacked so they keep the parallel batch runner instead of
@@ -634,7 +655,7 @@ impl Dispatcher {
             }
         }
         if !small.is_empty() {
-            let small_results = self.engine.batch_run(&small, self.q, &self.ws);
+            let small_results = self.engine.batch_run(&small, self.mode, &self.ws);
             for (j, r) in small_results.into_iter().enumerate() {
                 results[small_idx[j]] = Some(r);
             }

@@ -1,0 +1,224 @@
+//! Kernel-contract property suite through the public `Session` API.
+//!
+//! Pins the three f32 accumulation-order contracts the engine ships:
+//!
+//! - **Exact** (the default): the tiled/unrolled kernels are
+//!   **bit-identical** to the retained scalar reference
+//!   (`MathMode::Reference`), across every conv type, precision, and a
+//!   set of degree-skewed topologies chosen to hit every aggregation
+//!   bucket (star hubs, chains, isolated nodes, random graphs).
+//! - **Relaxed** (opt-in): deterministic accumulator-bank reassociation;
+//!   outputs stay bit-identical *across execution paths* and across
+//!   repeated runs, but only approximately equal to exact mode.
+//! - **Reference**: the scalar baseline itself flows through every
+//!   execution path (it dispatches at the primitive level), so the
+//!   cross-path conformance contract holds per mode, not just for the
+//!   default.
+//!
+//! `tests/conformance.rs` sweeps path × precision under the default
+//! mode; this suite is the math-mode axis.
+
+use gnnbuilder::engine::{synth_weights, Engine};
+use gnnbuilder::graph::Graph;
+use gnnbuilder::model::{ConvType, ModelConfig, Pooling};
+use gnnbuilder::session::{ExecutionPlan, MathMode, Precision, Session, ShardK, ShardPolicy};
+use gnnbuilder::util::rng::Rng;
+
+fn engine_for(conv: ConvType, dim: usize) -> Engine {
+    let cfg = ModelConfig {
+        name: format!("kern_{}", conv.as_str()),
+        graph_input_dim: dim,
+        gnn_conv: conv,
+        // hidden == in == out so skip connections engage at every layer
+        gnn_hidden_dim: dim,
+        gnn_out_dim: dim,
+        gnn_num_layers: 2,
+        global_pooling: vec![Pooling::Add, Pooling::Mean, Pooling::Max],
+        mlp_hidden_dim: 5,
+        mlp_num_layers: 1,
+        output_dim: 3,
+        max_nodes: 600,
+        max_edges: 2400,
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, 0xbeef + conv as u64);
+    Engine::new(cfg, &weights, 2.3).unwrap()
+}
+
+/// Degree-skewed topologies: each one exercises a different aggregation
+/// bucket mix (edges are `(src, dst)`; aggregation reads in-neighbors).
+fn skew_graphs() -> Vec<(&'static str, Graph)> {
+    let n = 48usize;
+    // star: node 0 takes an in-edge from everyone → one huge streaming
+    // fold, everyone else lands in the low-degree bucket (deg 0 or 1)
+    let star: Vec<(u32, u32)> = (1..n as u32).map(|i| (i, 0)).collect();
+    // chain: every node has in-degree exactly 1 (the [a] unrolled arm)
+    let chain: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+    // hub: a dense core of medium/high-degree nodes + a tail of
+    // isolated nodes (the empty-neighborhood → 0 path)
+    let mut hub: Vec<(u32, u32)> = Vec::new();
+    for d in 0..8u32 {
+        for s in 0..(2 * d + 1) {
+            hub.push(((8 + s) % n as u32, d));
+        }
+    }
+    // random: mixed degrees, self-loops and duplicate edges allowed
+    let mut rng = Rng::seed_from(0x5eed);
+    let random: Vec<(u32, u32)> = (0..n * 3)
+        .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+        .collect();
+    vec![
+        ("star", Graph::from_coo(n, &star)),
+        ("chain", Graph::from_coo(n, &chain)),
+        ("hub", Graph::from_coo(n, &hub)),
+        ("random", Graph::from_coo(n, &random)),
+    ]
+}
+
+fn features(g: &Graph, dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from(seed);
+    (0..g.num_nodes * dim)
+        .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+        .collect()
+}
+
+fn session_for(
+    engine: &Engine,
+    g: &Graph,
+    precision: Precision,
+    math: MathMode,
+    plan: ExecutionPlan,
+) -> Session {
+    Session::builder(engine.clone())
+        .precision(precision)
+        .math_mode(math)
+        .plan(plan)
+        .shard_policy(ShardPolicy {
+            seed: 11,
+            ..ShardPolicy::default()
+        })
+        .graph(g.clone())
+        .build()
+        .unwrap()
+}
+
+fn sharded_plan() -> ExecutionPlan {
+    ExecutionPlan::Sharded {
+        k: ShardK::Fixed(3),
+        plan: None,
+    }
+}
+
+/// The default-mode contract: tiled exact kernels are bit-identical to
+/// the scalar reference for every conv type × precision × degree skew,
+/// on both the whole-graph and the sharded path.
+#[test]
+fn exact_is_bit_identical_to_scalar_reference() {
+    for conv in ConvType::ALL {
+        let dim = 6;
+        let engine = engine_for(conv, dim);
+        for (skew, g) in skew_graphs() {
+            let x = features(&g, dim, 0xfeed ^ conv as u64);
+            for precision in [Precision::F32, Precision::ApFixed] {
+                let tiled =
+                    session_for(&engine, &g, precision, MathMode::Exact, ExecutionPlan::Single);
+                let scalar = session_for(
+                    &engine,
+                    &g,
+                    precision,
+                    MathMode::Reference,
+                    ExecutionPlan::Single,
+                );
+                let want = scalar.run(&x).unwrap();
+                assert_eq!(
+                    tiled.run(&x).unwrap(),
+                    want,
+                    "{}/{skew}/{precision:?}: tiled exact != scalar reference",
+                    conv.as_str()
+                );
+                // the reference kernels dispatch at the primitive level,
+                // so they flow through the sharded path too — and both
+                // modes stay cross-path bit-identical
+                let tiled_sh =
+                    session_for(&engine, &g, precision, MathMode::Exact, sharded_plan());
+                let scalar_sh =
+                    session_for(&engine, &g, precision, MathMode::Reference, sharded_plan());
+                assert_eq!(
+                    tiled_sh.run(&x).unwrap(),
+                    want,
+                    "{}/{skew}/{precision:?}: sharded exact diverged",
+                    conv.as_str()
+                );
+                assert_eq!(
+                    scalar_sh.run(&x).unwrap(),
+                    want,
+                    "{}/{skew}/{precision:?}: sharded reference diverged",
+                    conv.as_str()
+                );
+            }
+        }
+    }
+}
+
+/// Relaxed mode is opt-in, deterministic, cross-path bit-identical, and
+/// within a small relative tolerance of exact mode.
+#[test]
+fn relaxed_is_deterministic_and_near_exact() {
+    for conv in ConvType::ALL {
+        let dim = 6;
+        let engine = engine_for(conv, dim);
+        for (skew, g) in skew_graphs() {
+            let x = features(&g, dim, 0xace ^ conv as u64);
+            let exact =
+                session_for(&engine, &g, Precision::F32, MathMode::Exact, ExecutionPlan::Single);
+            let relaxed = session_for(
+                &engine,
+                &g,
+                Precision::F32,
+                MathMode::Relaxed,
+                ExecutionPlan::Single,
+            );
+            let want = exact.run(&x).unwrap();
+            let got = relaxed.run(&x).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, e) in got.iter().zip(&want) {
+                assert!(
+                    (a - e).abs() <= 1e-3 * (1.0 + e.abs()),
+                    "{}/{skew}: relaxed drifted past tolerance ({a} vs {e})",
+                    conv.as_str()
+                );
+            }
+            // deterministic: repeat runs are bitwise stable
+            assert_eq!(relaxed.run(&x).unwrap(), got);
+            // cross-path: the sharded runner reassociates identically
+            let relaxed_sh =
+                session_for(&engine, &g, Precision::F32, MathMode::Relaxed, sharded_plan());
+            assert_eq!(
+                relaxed_sh.run(&x).unwrap(),
+                got,
+                "{}/{skew}: relaxed mode is not cross-path bit-identical",
+                conv.as_str()
+            );
+        }
+    }
+}
+
+/// Builders that never mention math mode get the exact (bit-reproducible)
+/// contract — relaxed reassociation is strictly opt-in.
+#[test]
+fn default_math_mode_is_exact() {
+    let dim = 6;
+    let engine = engine_for(ConvType::Sage, dim);
+    let (_, g) = skew_graphs().remove(3);
+    let x = features(&g, dim, 0xd0d0);
+    let default_session = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Single)
+        .graph(g.clone())
+        .build()
+        .unwrap();
+    assert_eq!(default_session.math_mode(), MathMode::Exact);
+    let explicit =
+        session_for(&engine, &g, Precision::F32, MathMode::Exact, ExecutionPlan::Single);
+    assert_eq!(default_session.run(&x).unwrap(), explicit.run(&x).unwrap());
+}

@@ -6,6 +6,13 @@
 //! dispatch while the per-request server (max_batch = 1) pays one
 //! dispatch per request. Emits `BENCH_serve.json` with latency,
 //! throughput, and dispatches-per-burst for both arms.
+//!
+//! A third arm measures the observability tax: the coalesced
+//! configuration with request tracing on (default sink) vs off
+//! (`trace_capacity = 0`, the only sanctioned use of that knob). The
+//! fractional overhead is emitted as `tracing_overhead_frac` and — on
+//! full (non-`GNNB_BENCH_FAST`) runs — asserted below 5 %, the
+//! always-on-cheap contract of `obs/`.
 
 use std::sync::atomic::Ordering;
 use std::time::Duration;
@@ -18,15 +25,20 @@ use gnnbuilder::serve::{BatchPolicy, Endpoint, Server, ServerConfig};
 use gnnbuilder::session::{ExecutionPlan, Precision, Session};
 use gnnbuilder::util::json::Json;
 
-fn server_with(max_batch: usize) -> Server {
+fn server_traced(max_batch: usize, trace_capacity: usize) -> Server {
     Server::start(ServerConfig {
         policy: BatchPolicy {
             max_batch,
             max_wait: Duration::from_micros(300),
         },
         queue_capacity: 8192,
+        trace_capacity,
         ..ServerConfig::default()
     })
+}
+
+fn server_with(max_batch: usize) -> Server {
+    server_traced(max_batch, ServerConfig::default().trace_capacity)
 }
 
 fn burst(ep: &Endpoint, x: &[f32], clients: usize) {
@@ -126,6 +138,38 @@ fn main() {
             ("coalesced_speedup", Json::num(co_rps / pr_rps)),
         ]));
     }
+    // observability tax: coalesced arm, tracing on vs off. The drain in
+    // the loop plays the scrape consumer so the sink stays in its
+    // steady state instead of saturating into the (cheaper) drop path.
+    let overhead_clients = 8usize;
+    let arm = |trace_capacity: usize, label: &str| {
+        let server = server_traced(64, trace_capacity);
+        let ep = server.deploy("bench", builder()).unwrap();
+        let r = b.run(&format!("serve/tracing_{label}/c{overhead_clients}"), || {
+            burst(&ep, &ng.x, overhead_clients);
+            server.drain_spans();
+        });
+        server.shutdown();
+        r
+    };
+    let off = arm(0, "off");
+    let on = arm(ServerConfig::default().trace_capacity, "on");
+    let overhead_frac = (on.summary.mean - off.summary.mean) / off.summary.mean.max(1e-12);
+    println!(
+        "tracing overhead on the coalesced arm: {:+.2}% (on {:.3} ms vs off {:.3} ms)",
+        overhead_frac * 100.0,
+        on.summary.mean * 1e3,
+        off.summary.mean * 1e3
+    );
+    if std::env::var("GNNB_BENCH_FAST").is_err() {
+        assert!(
+            overhead_frac < 0.05,
+            "always-on tracing must cost < 5% on the coalesced serve path \
+             (measured {:.2}%)",
+            overhead_frac * 100.0
+        );
+    }
+
     let report = Json::obj(vec![
         (
             "graph",
@@ -136,6 +180,15 @@ fn main() {
             ]),
         ),
         ("cells", Json::arr(cells)),
+        (
+            "tracing",
+            Json::obj(vec![
+                ("clients", Json::num(overhead_clients as f64)),
+                ("on_mean_s", Json::num(on.summary.mean)),
+                ("off_mean_s", Json::num(off.summary.mean)),
+                ("tracing_overhead_frac", Json::num(overhead_frac)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve.json", report.to_string_pretty()).unwrap();
     println!("wrote BENCH_serve.json");

@@ -42,9 +42,9 @@ pub fn pyg_cpu(exe: &Executable, graphs: &[MolGraph], repeats: usize) -> Result<
     for _ in 0..repeats {
         for g in graphs {
             let input = g.graph.to_input(&g.x, g.node_dim, cfg.max_nodes, cfg.max_edges);
-            let t0 = std::time::Instant::now();
+            let t0 = crate::obs::clock::now_ns();
             exe.run(&input)?;
-            times.push(t0.elapsed().as_secs_f64());
+            times.push(crate::obs::clock::secs_since(t0));
         }
     }
     Ok(BaselineResult {
@@ -58,10 +58,10 @@ pub fn cpp_cpu(engine: &Engine, graphs: &[MolGraph], repeats: usize) -> Result<B
     let mut times = Vec::with_capacity(graphs.len() * repeats);
     for _ in 0..repeats {
         for g in graphs {
-            let t0 = std::time::Instant::now();
+            let t0 = crate::obs::clock::now_ns();
             let out = engine.forward(&g.graph, &g.x)?;
             std::hint::black_box(&out);
-            times.push(t0.elapsed().as_secs_f64());
+            times.push(crate::obs::clock::secs_since(t0));
         }
     }
     Ok(BaselineResult {
@@ -91,10 +91,10 @@ pub fn cpp_cpu_batched(
     let mut times = Vec::with_capacity(graphs.len() * repeats);
     for _ in 0..repeats {
         for b in &batches {
-            let t0 = std::time::Instant::now();
+            let t0 = crate::obs::clock::now_ns();
             let out = engine.forward_batch(b, &ws)?;
             std::hint::black_box(&out);
-            let per_graph = t0.elapsed().as_secs_f64() / b.len() as f64;
+            let per_graph = crate::obs::clock::secs_since(t0) / b.len() as f64;
             times.extend(std::iter::repeat(per_graph).take(b.len()));
         }
     }

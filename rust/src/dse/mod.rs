@@ -70,7 +70,7 @@ pub fn random_search(
     budget: usize,
     seed: u64,
 ) -> SearchResult {
-    let t0 = std::time::Instant::now();
+    let t0 = crate::obs::clock::now_ns();
     let mut rng = Rng::seed_from(seed);
     let size = space.size();
     let mut best: Option<Candidate> = None;
@@ -99,7 +99,7 @@ pub fn random_search(
         best,
         evaluated,
         feasible,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_seconds: crate::obs::clock::secs_since(t0),
     }
 }
 
@@ -112,7 +112,7 @@ pub fn brute_force(
     constraints: &Constraints,
     limit: u64,
 ) -> SearchResult {
-    let t0 = std::time::Instant::now();
+    let t0 = crate::obs::clock::now_ns();
     let n = space.size().min(limit);
     let mut best: Option<Candidate> = None;
     let mut feasible = 0usize;
@@ -138,7 +138,7 @@ pub fn brute_force(
         best,
         evaluated: n as usize,
         feasible,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_seconds: crate::obs::clock::secs_since(t0),
     }
 }
 

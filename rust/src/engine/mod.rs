@@ -39,6 +39,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::graph::{Graph, GraphBatch, GraphView};
 use crate::model::{ConvType, FixedPointFormat, ModelConfig};
+use crate::obs::span::{Stage, TraceCtx};
 use crate::util::binio::{Tensor, Weights};
 use crate::util::pool::par_map;
 
@@ -313,13 +314,13 @@ impl Engine {
     /// f32 forward pass over one graph. `x` is [num_nodes * in_dim].
     /// Crate-internal baseline (the public entry is `session::Session`).
     pub(crate) fn forward(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
-        self.run_view(g.view(), x, Mode::exact(None), &mut Scratch::default())
+        self.run_view(g.view(), x, Mode::exact(None), &mut Scratch::default(), None)
     }
 
     /// f32 forward over a borrowed graph view (single graph or one slot of
     /// a packed batch).
     pub(crate) fn forward_view(&self, g: GraphView<'_>, x: &[f32]) -> Result<Vec<f32>> {
-        self.run_view(g, x, Mode::exact(None), &mut Scratch::default())
+        self.run_view(g, x, Mode::exact(None), &mut Scratch::default(), None)
     }
 
     /// f32 forward over a packed batch, parallelized over graphs across
@@ -342,8 +343,22 @@ impl Engine {
         mode: Mode,
         ws: &Workspace,
     ) -> Result<Vec<f32>> {
+        self.run_one_traced(g, x, mode, ws, None)
+    }
+
+    /// `run_one` with an optional trace context: kernel stages (layer,
+    /// head) emit spans parented under `ctx.parent` (the serving layer's
+    /// dispatch span).
+    pub(crate) fn run_one_traced(
+        &self,
+        g: GraphView<'_>,
+        x: &[f32],
+        mode: Mode,
+        ws: &Workspace,
+        ctx: Option<TraceCtx<'_>>,
+    ) -> Result<Vec<f32>> {
         let mut s = ws.acquire();
-        self.run_view(g, x, mode, &mut s)
+        self.run_view(g, x, mode, &mut s, ctx)
     }
 
     /// Many feature sets over ONE graph view, parallelized across the
@@ -357,12 +372,31 @@ impl Engine {
         mode: Mode,
         ws: &Workspace,
     ) -> Vec<Result<Vec<f32>>> {
+        self.run_many_traced(g, xs, mode, ws, None)
+    }
+
+    /// `run_many` with an optional trace context. Only the **first**
+    /// feature set runs traced: a coalesced flush's kernel subtree
+    /// samples one representative pass instead of multiplying span
+    /// volume by the batch size (the per-request timing lives in the
+    /// dispatch spans the serving layer records).
+    pub(crate) fn run_many_traced<S: AsRef<[f32]> + Sync>(
+        &self,
+        g: GraphView<'_>,
+        xs: &[S],
+        mode: Mode,
+        ws: &Workspace,
+        ctx: Option<TraceCtx<'_>>,
+    ) -> Vec<Result<Vec<f32>>> {
         let n = xs.len();
         if n == 0 {
             return Vec::new();
         }
         let threads = ws.threads().min(n);
-        par_map(n, threads, |i| self.run_one(g, xs[i].as_ref(), mode, ws))
+        par_map(n, threads, |i| {
+            let ctx = if i == 0 { ctx } else { None };
+            self.run_one_traced(g, xs[i].as_ref(), mode, ws, ctx)
+        })
     }
 
     /// Per-graph results of a batched forward at explicit numerics
@@ -381,7 +415,7 @@ impl Engine {
         let threads = ws.threads().min(n);
         par_map(n, threads, |i| {
             let mut s = ws.acquire();
-            self.run_view(batch.view(i), batch.x_view(i), mode, &mut s)
+            self.run_view(batch.view(i), batch.x_view(i), mode, &mut s, None)
         })
     }
 
@@ -391,6 +425,7 @@ impl Engine {
         x: &[f32],
         mode: Mode,
         s: &mut Scratch,
+        ctx: Option<TraceCtx<'_>>,
     ) -> Result<Vec<f32>> {
         let cfg = &*self.cfg;
         let n = g.num_nodes;
@@ -410,11 +445,13 @@ impl Engine {
         s.h.data.copy_from_slice(x);
         layers::maybe_quantize(&mut s.h.data, mode.q);
 
-        for conv in self.convs.iter() {
+        for (li, conv) in self.convs.iter().enumerate() {
+            let _sp = ctx.map(|c| c.child(Stage::Layer, li as u64));
             self.conv_step(conv, g, &s.h, mode, &mut s.t0, &mut s.t1, &mut s.out);
             std::mem::swap(&mut s.h, &mut s.out);
         }
 
+        let _sp = ctx.map(|c| c.child(Stage::Head, 0));
         Ok(self.head(mode, s))
     }
 
@@ -501,7 +538,13 @@ impl Engine {
     /// True fixed-point forward pass (quantizes inputs, weights, and every
     /// intermediate to the config's ap_fixed format).
     pub(crate) fn forward_fixed(&self, g: &Graph, x: &[f32]) -> Result<Vec<f32>> {
-        self.run_view(g.view(), x, Mode::exact(Some(self.cfg.fpx)), &mut Scratch::default())
+        self.run_view(
+            g.view(),
+            x,
+            Mode::exact(Some(self.cfg.fpx)),
+            &mut Scratch::default(),
+            None,
+        )
     }
 
     /// Fixed-point twin of the batched forward.

@@ -29,6 +29,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
+use crate::obs::span::{Stage, TraceCtx};
 use crate::partition::ShardedGraph;
 use crate::util::pool::par_map;
 
@@ -71,6 +72,23 @@ impl Engine {
         mode: Mode,
         ws: &Workspace,
     ) -> Result<Vec<f32>> {
+        self.sharded_run_traced(sg, x, mode, ws, None)
+    }
+
+    /// `sharded_run` with an optional trace context: each layer superstep
+    /// emits a `layer` span wrapping per-shard `shard_compute` spans
+    /// (meta = shard index, pushed from the worker threads) and the
+    /// `halo_exchange` span between supersteps; the gather + readout is
+    /// the `head` span. Tracing never changes execution: the kernels and
+    /// locks run identically with `ctx = None`.
+    pub(crate) fn sharded_run_traced(
+        &self,
+        sg: &ShardedGraph,
+        x: &[f32],
+        mode: Mode,
+        ws: &Workspace,
+        ctx: Option<TraceCtx<'_>>,
+    ) -> Result<Vec<f32>> {
         let cfg = &*self.cfg;
         let n = sg.num_nodes;
         let d = cfg.graph_input_dim;
@@ -108,8 +126,16 @@ impl Engine {
         let threads = ws_ref.threads().min(k);
         let last_layer = self.convs.len() - 1;
         for (li, conv) in self.convs.iter().enumerate() {
+            // one span per layer superstep; shard_compute / halo_exchange
+            // children hang under it (worker threads push via the Copy ctx)
+            let layer_span = ctx.map(|c| c.child(Stage::Layer, li as u64));
+            let layer_ctx = match (ctx, &layer_span) {
+                (Some(c), Some(g)) => Some(c.under(g.id())),
+                _ => None,
+            };
             // superstep: node-parallel conv across shards
             par_map(k, threads, |s| {
+                let _sp = layer_ctx.map(|c| c.child(Stage::ShardCompute, s as u64));
                 let mut scratch = ws_ref.acquire();
                 let sc = &mut *scratch;
                 let h = cur[s].lock().unwrap();
@@ -135,6 +161,7 @@ impl Engine {
             // task never waits on a lower-indexed lock while holding a
             // higher one — concurrent destinations cannot deadlock.
             if sg.exchange.iter().any(|r| !r.is_empty()) {
+                let _hx = layer_ctx.map(|c| c.child(Stage::HaloExchange, li as u64));
                 let cur_ref = &cur;
                 par_map(k, threads, |s| {
                     let routes = &sg.exchange[s];
@@ -168,6 +195,7 @@ impl Engine {
         // gather owned rows back into global node order, then run the
         // shared pooling + MLP head — same op order as the whole-graph
         // path, hence bit-identical outputs
+        let _sp = ctx.map(|c| c.child(Stage::Head, 0));
         let mut scratch = ws.acquire();
         let sc = &mut *scratch;
         let f = cfg.gnn_out_dim;

@@ -193,9 +193,9 @@ pub fn fig5(opt: &Options) -> Result<Json> {
     let pm = perfmodel::PerfModel::fit(&db, &ForestParams { seed: opt.seed, ..Default::default() });
     let mut fit_call_seconds = Vec::with_capacity(db.len());
     for cfg in &db.configs {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::obs::clock::now_ns();
         std::hint::black_box(pm.predict(cfg));
-        fit_call_seconds.push(t0.elapsed().as_secs_f64());
+        fit_call_seconds.push(crate::obs::clock::secs_since(t0));
     }
     let rf_total: f64 = fit_call_seconds.iter().sum();
     let sim_total: f64 = db.sim_seconds.iter().sum();

@@ -10,7 +10,7 @@
 //! unrolled operator count). The substitution is documented in DESIGN.md;
 //! EXPERIMENTS.md reports both timelines.
 
-use std::time::Instant;
+use crate::obs::clock;
 
 use crate::model::ModelConfig;
 use crate::util::rng::Rng;
@@ -50,10 +50,10 @@ pub fn modeled_synth_seconds(cfg: &ModelConfig, res: &Resources, seed: u64) -> f
 /// Run one "synthesis": simulate latency + resources, time it, and attach
 /// the modeled Vitis wallclock.
 pub fn run_synthesis(cfg: &ModelConfig, stats: &GraphStats, seed: u64) -> SynthReport {
-    let t0 = Instant::now();
+    let t0 = clock::now_ns();
     let latency = estimate_latency(cfg, stats);
     let resources = estimate_resources(cfg);
-    let sim_seconds = t0.elapsed().as_secs_f64();
+    let sim_seconds = clock::secs_since(t0);
     SynthReport {
         name: cfg.name.clone(),
         modeled_synth_seconds: modeled_synth_seconds(cfg, &resources, seed),

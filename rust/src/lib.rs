@@ -13,8 +13,10 @@
 //!   simulator ([`hls`]), direct-fit performance models ([`perfmodel`]),
 //!   design-space exploration ([`dse`]), the PJRT deployment runtime
 //!   ([`runtime`]), baselines ([`baselines`]), the fixed/float testbench
-//!   ([`testbench`]), and the multi-tenant serving layer ([`serve`],
-//!   with [`coordinator`] as its legacy facade).
+//!   ([`testbench`]), the multi-tenant serving layer ([`serve`],
+//!   with [`coordinator`] as its legacy facade), and the observability
+//!   subsystem ([`obs`]: request tracing, mergeable latency histograms,
+//!   Prometheus/JSON exporters, perfmodel calibration feedback).
 //!
 //! Inference has ONE public entry point: the typed [`session`] API.
 //! [`session::Session::builder`] takes an [`engine::Engine`], a
@@ -59,6 +61,18 @@
 //! so warm runs re-hash and re-partition nothing; the [`coordinator`]
 //! routes per-request graphs over a node-count threshold
 //! ([`session::ShardPolicy`]) through the same dispatcher.
+//!
+//! Observability is end-to-end and always on: every serve request owns
+//! an [`obs::Span`] trace (admit → queue → flush → dispatch →
+//! per-layer, plus per-shard compute and halo-exchange supersteps on
+//! the sharded path) drainable from the server's [`obs::TraceSink`];
+//! [`serve::Metrics`] distributions are mergeable log-scale
+//! [`obs::Histogram`]s with per-tenant/per-stage p50/p99/p999, rendered
+//! by [`serve::Server::export_metrics`] (Prometheus text) and the
+//! `gnnbuilder metrics` subcommand (JSON); measured per-dispatch
+//! service times aggregate into [`obs::CalibrationRecord`]s consumed by
+//! [`perfmodel::calibration`] to recalibrate the paper's latency model
+//! from live traffic.
 
 pub mod baselines;
 pub mod bench;
@@ -72,6 +86,7 @@ pub mod fixed;
 pub mod graph;
 pub mod hls;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod perfmodel;
 pub mod runtime;

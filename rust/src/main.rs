@@ -15,6 +15,7 @@ use gnnbuilder::experiments::{self, Options};
 use gnnbuilder::hls::{self, GraphStats};
 use gnnbuilder::model::space::DesignSpace;
 use gnnbuilder::model::{benchmark_config, ConvType, ModelConfig};
+use gnnbuilder::obs::clock;
 use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
 use gnnbuilder::serve::{BatchPolicy, Server, ServerConfig};
 use gnnbuilder::session::{
@@ -37,7 +38,10 @@ USAGE:
                                             (Session-driven partition + sharded inference)
   gnnbuilder serve   [--tenants N] [--requests N] [--nodes N] [--conv ...] [--hidden N]
                      [--max-batch N] [--wait-us N] [--queue-cap N] [--tenant-quota N]
-                     [--seed N]              (multi-tenant micro-batched serving demo)
+                     [--seed N]              (multi-tenant micro-batched serving demo;
+                                              dumps Prometheus metrics to artifacts/)
+  gnnbuilder metrics [--json] [--requests N] [--nodes N] [--conv ...] [--seed N]
+                                            (serve a demo burst, print the exporters)
   gnnbuilder list                                             (artifacts in manifest)
 ";
 
@@ -50,6 +54,7 @@ fn main() -> Result<()> {
         "dse" => cmd_dse(),
         "shard" => cmd_shard(),
         "serve" => cmd_serve(),
+        "metrics" => cmd_metrics(),
         "list" => cmd_list(),
         _ => {
             print!("{USAGE}");
@@ -317,17 +322,17 @@ fn cmd_shard() -> Result<()> {
         println!("adaptive K = {k} (node count / degree / core count derived)");
     }
 
-    let t0 = std::time::Instant::now();
+    let t0 = clock::now_ns();
     let whole = single.run(&ng.x)?;
-    let whole_s = t0.elapsed().as_secs_f64();
+    let whole_s = clock::secs_since(t0);
 
     // cold run pays hash + partition + forward; warm runs pay forward only
-    let t0 = std::time::Instant::now();
+    let t0 = clock::now_ns();
     let sharded = session.run(&ng.x)?;
-    let cold_s = t0.elapsed().as_secs_f64();
-    let t0 = std::time::Instant::now();
+    let cold_s = clock::secs_since(t0);
+    let t0 = clock::now_ns();
     let warm = session.run(&ng.x)?;
-    let warm_s = t0.elapsed().as_secs_f64();
+    let warm_s = clock::secs_since(t0);
 
     let sg = session.shard_plan().expect("sharded session has a plan after running");
     let (max_s, min_s) = sg.plan.shard_sizes();
@@ -378,7 +383,7 @@ fn cmd_serve() -> Result<()> {
     args.reject_unknown()?;
 
     let stats = &datasets::PUBMED;
-    let server = Server::start(ServerConfig {
+    let server = Arc::new(Server::start(ServerConfig {
         policy: BatchPolicy {
             max_batch,
             max_wait: std::time::Duration::from_micros(wait_us),
@@ -387,11 +392,27 @@ fn cmd_serve() -> Result<()> {
         tenant_quota: quota,
         idle_ttl: None,
         plan_cache: None,
-    });
+        ..ServerConfig::default()
+    }));
     println!(
         "server up: max_batch {max_batch}, max_wait {wait_us} µs, \
          queue capacity {queue_cap}, tenant quota {quota}"
     );
+
+    // periodic observability dump: a scrape-loop stand-in writing the
+    // Prometheus rendering to artifacts/ every 500 ms while clients run
+    let prom_path = gnnbuilder::artifacts_dir().join("serve_metrics.prom");
+    let dump_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let dumper = {
+        let (server, stop, path) = (server.clone(), dump_stop.clone(), prom_path.clone());
+        std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let _ = std::fs::create_dir_all(path.parent().unwrap());
+                let _ = std::fs::write(&path, server.export_metrics());
+                std::thread::sleep(std::time::Duration::from_millis(500));
+            }
+        })
+    };
 
     // one deployed topology per tenant — same model, distinct citation
     // graphs — exercising the (tenant, model, topology) registry keying
@@ -434,7 +455,7 @@ fn cmd_serve() -> Result<()> {
     // mixed-tenant synthetic workload: one client thread per tenant
     // bursting `requests` feature sets against its deployed topology
     println!("streaming {requests} requests per tenant ({tenants} tenants)…");
-    let t0 = std::time::Instant::now();
+    let t0 = clock::now_ns();
     let (served, rejected): (usize, usize) = std::thread::scope(|s| {
         let handles: Vec<_> = deployed
             .iter()
@@ -470,7 +491,7 @@ fn cmd_serve() -> Result<()> {
             .map(|h| h.join().expect("client thread panicked"))
             .fold((0, 0), |(a, b), (ok, rej)| (a + ok, b + rej))
     });
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = clock::secs_since(t0);
 
     let m = server.metrics();
     let lat = m.latency_summary();
@@ -511,6 +532,79 @@ fn cmd_serve() -> Result<()> {
         m.errors.load(std::sync::atomic::Ordering::Relaxed),
         m.plan_cache.stats().snapshot()
     );
+    let wait = m.wait_latency_summary();
+    let spans = server.drain_spans();
+    println!(
+        "wait-side e2e (ticket admission → wait return): p50 {:.2} ms p99 {:.2} ms \
+         | {} trace spans buffered | {} calibration shapes",
+        wait.p50 * 1e3,
+        wait.p99 * 1e3,
+        spans.len(),
+        m.calibration_snapshot().len()
+    );
+    dump_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = dumper.join();
+    let _ = std::fs::create_dir_all(prom_path.parent().unwrap());
+    std::fs::write(&prom_path, server.export_metrics())?;
+    println!("final Prometheus rendering written to {}", prom_path.display());
+    server.shutdown();
+    Ok(())
+}
+
+/// `gnnbuilder metrics` — run a small synthetic burst through a server
+/// and print what the exporters see: Prometheus text by default, the
+/// JSON snapshot (histograms + calibration + trace stats) with --json.
+fn cmd_metrics() -> Result<()> {
+    let args = Args::from_env(2, &["json"])?;
+    let requests = args.get_usize("requests", 64)?;
+    let nodes = args.get_usize("nodes", 500)?;
+    let conv = parse_conv(&args)?;
+    let seed = args.get_u64("seed", 2023)?;
+    args.reject_unknown()?;
+
+    let stats = &datasets::PUBMED;
+    let ng = datasets::gen_citation_graph(stats, nodes, seed);
+    let cfg = ModelConfig {
+        name: format!("metrics_{}", conv.as_str()),
+        graph_input_dim: stats.node_dim,
+        gnn_conv: conv,
+        gnn_hidden_dim: 16,
+        gnn_out_dim: 16,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 16,
+        mlp_num_layers: 1,
+        output_dim: ng.num_classes,
+        max_nodes: ng.graph.num_nodes,
+        max_edges: ng.graph.num_edges.max(1),
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, seed);
+    let engine = Engine::new(cfg, &weights, stats.mean_degree)?;
+
+    let server = Server::start(ServerConfig::default());
+    let ep = server.deploy(
+        "demo",
+        Session::builder(engine)
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Batched { workspace: 0 })
+            .graph(ng.graph.clone()),
+    )?;
+    let tickets: Vec<_> = (0..requests)
+        .filter_map(|i| {
+            let jitter = i as f32 * 1e-3;
+            let xs: Vec<f32> = ng.x.iter().map(|v| v + jitter).collect();
+            ep.submit(xs).ok()
+        })
+        .collect();
+    for t in tickets {
+        let _ = t.wait();
+    }
+
+    if args.flag("json") {
+        println!("{}", server.export_metrics_json().to_string_pretty());
+    } else {
+        print!("{}", server.export_metrics());
+    }
     server.shutdown();
     Ok(())
 }

@@ -140,7 +140,7 @@ impl Default for FixedPointFormat {
 }
 
 /// Numerics mode of a generated accelerator.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Numerics {
     Float,
     Fixed,

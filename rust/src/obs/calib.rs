@@ -1,0 +1,198 @@
+//! perfmodel feedback — aggregate observed per-dispatch service
+//! latencies into calibration records the cost model can consume.
+//!
+//! The paper's pitch is a latency model accurate enough (≤ 36 % error)
+//! to drive design-space exploration; the ROADMAP's planner item needs
+//! that model *recalibrated from serving traffic* ("observed
+//! per-dispatch latencies fed back"). This module is the data artery:
+//! every pinned flush folds its measured engine time into a
+//! [`CalibrationBank`] cell keyed by the workload shape the perfmodel
+//! predicts over — conv type, numerics, execution path, shard count,
+//! and log₂-bucketed graph size. A calibration consumer
+//! ([`crate::perfmodel::calibration::LatencyCalibrator`]) drains the
+//! bank periodically and turns records into per-shape correction
+//! factors.
+//!
+//! Keys bucket node/edge counts by log₂ so one serving deployment
+//! produces a handful of dense cells instead of a sparse point cloud.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::model::{ConvType, Numerics};
+
+/// Workload shape one calibration cell aggregates over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CalibKey {
+    pub conv: ConvType,
+    pub numerics: Numerics,
+    /// whether dispatches ran the sharded path
+    pub sharded: bool,
+    /// shard count (1 on the whole-graph path)
+    pub k: usize,
+    /// ⌊log₂(num_nodes)⌋ (0 for empty graphs)
+    pub nodes_log2: u8,
+    /// ⌊log₂(num_edges)⌋ (0 for edgeless graphs)
+    pub edges_log2: u8,
+}
+
+impl CalibKey {
+    /// log₂ size bucket used for the node/edge fields.
+    pub fn log2_bucket(n: usize) -> u8 {
+        if n <= 1 {
+            0
+        } else {
+            (usize::BITS - 1 - n.leading_zeros()) as u8
+        }
+    }
+
+    /// Deterministic sort key (bank drains in HashMap order otherwise).
+    fn sort_key(&self) -> (&'static str, &'static str, bool, usize, u8, u8) {
+        let num = match self.numerics {
+            Numerics::Float => "float",
+            Numerics::Fixed => "fixed",
+        };
+        (
+            self.conv.as_str(),
+            num,
+            self.sharded,
+            self.k,
+            self.nodes_log2,
+            self.edges_log2,
+        )
+    }
+}
+
+/// Aggregated observations for one [`CalibKey`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationRecord {
+    pub key: CalibKey,
+    /// engine dispatches folded into this cell
+    pub dispatches: u64,
+    /// graphs served across those dispatches (≥ dispatches when batched)
+    pub graphs: u64,
+    /// summed engine service time across dispatches, seconds
+    pub total_service_secs: f64,
+}
+
+impl CalibrationRecord {
+    /// Mean engine time per served graph — the number the perfmodel's
+    /// latency prediction is compared against.
+    pub fn mean_service_secs(&self) -> f64 {
+        if self.graphs == 0 {
+            0.0
+        } else {
+            self.total_service_secs / self.graphs as f64
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Cell {
+    dispatches: u64,
+    graphs: u64,
+    total_service_secs: f64,
+}
+
+/// Accumulates per-dispatch service observations per workload shape.
+/// Recording is a short mutex hold on a small map (one entry per live
+/// shape, typically < 10 in a deployment); draining swaps the map out.
+#[derive(Debug, Default)]
+pub struct CalibrationBank {
+    cells: Mutex<HashMap<CalibKey, Cell>>,
+}
+
+impl CalibrationBank {
+    pub fn new() -> CalibrationBank {
+        CalibrationBank::default()
+    }
+
+    /// Fold one dispatch: `graphs` served in `service_secs` of engine time.
+    pub fn record(&self, key: CalibKey, graphs: usize, service_secs: f64) {
+        let mut cells = self.cells.lock().unwrap();
+        let c = cells.entry(key).or_default();
+        c.dispatches = c.dispatches.saturating_add(1);
+        c.graphs = c.graphs.saturating_add(graphs as u64);
+        c.total_service_secs += service_secs.max(0.0);
+    }
+
+    fn collect(map: &HashMap<CalibKey, Cell>) -> Vec<CalibrationRecord> {
+        let mut out: Vec<CalibrationRecord> = map
+            .iter()
+            .map(|(k, c)| CalibrationRecord {
+                key: *k,
+                dispatches: c.dispatches,
+                graphs: c.graphs,
+                total_service_secs: c.total_service_secs,
+            })
+            .collect();
+        out.sort_by_key(|r| r.key.sort_key());
+        out
+    }
+
+    /// Take every record, leaving the bank empty (consumer form).
+    pub fn drain(&self) -> Vec<CalibrationRecord> {
+        let map = std::mem::take(&mut *self.cells.lock().unwrap());
+        Self::collect(&map)
+    }
+
+    /// Copy every record without clearing (exporter form).
+    pub fn snapshot(&self) -> Vec<CalibrationRecord> {
+        Self::collect(&self.cells.lock().unwrap())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(k: usize, nodes: usize) -> CalibKey {
+        CalibKey {
+            conv: ConvType::Gcn,
+            numerics: Numerics::Float,
+            sharded: k > 1,
+            k,
+            nodes_log2: CalibKey::log2_bucket(nodes),
+            edges_log2: CalibKey::log2_bucket(nodes * 4),
+        }
+    }
+
+    #[test]
+    fn log2_buckets() {
+        assert_eq!(CalibKey::log2_bucket(0), 0);
+        assert_eq!(CalibKey::log2_bucket(1), 0);
+        assert_eq!(CalibKey::log2_bucket(2), 1);
+        assert_eq!(CalibKey::log2_bucket(1023), 9);
+        assert_eq!(CalibKey::log2_bucket(1024), 10);
+    }
+
+    #[test]
+    fn records_aggregate_per_key_and_drain_clears() {
+        let bank = CalibrationBank::new();
+        bank.record(key(1, 2000), 8, 0.004);
+        bank.record(key(1, 2000), 4, 0.002);
+        bank.record(key(4, 100_000), 1, 0.050);
+        let recs = bank.drain();
+        assert_eq!(recs.len(), 2);
+        let whole = recs.iter().find(|r| r.key.k == 1).unwrap();
+        assert_eq!(whole.dispatches, 2);
+        assert_eq!(whole.graphs, 12);
+        assert!((whole.mean_service_secs() - 0.0005).abs() < 1e-12);
+        assert!(bank.is_empty(), "drain must clear");
+    }
+
+    #[test]
+    fn snapshot_is_non_destructive_and_sorted() {
+        let bank = CalibrationBank::new();
+        bank.record(key(4, 100_000), 1, 0.05);
+        bank.record(key(1, 2000), 1, 0.01);
+        let a = bank.snapshot();
+        let b = bank.snapshot();
+        assert_eq!(a, b);
+        assert!(a[0].key.k <= a[1].key.k, "deterministic order");
+    }
+}

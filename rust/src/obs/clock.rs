@@ -1,0 +1,80 @@
+//! The crate's single monotonic wallclock.
+//!
+//! Every timed code path outside the bench harness reads time through
+//! this facade: a `u64` nanosecond offset from a lazily pinned process
+//! epoch. Two reasons it exists instead of scattering
+//! `std::time::Instant` around:
+//!
+//! - **spans are `Copy`**: a [`Span`](super::span::Span) holds two
+//!   `u64`s, not two `Instant`s, so trace buffers are flat arrays and
+//!   cross-thread timestamp math (queue-wait measured at flush time
+//!   against an admission stamp taken on the caller's thread) is plain
+//!   integer subtraction.
+//! - **one guarded call site**: CI greps for raw `Instant::now()`
+//!   outside `src/obs` and `src/bench`; timing either goes through here
+//!   (and is therefore visible to the tracing layer) or through the
+//!   bench harness (which owns its own wallclock on purpose — a bench
+//!   must not measure the profiler).
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process epoch (first call wins the epoch).
+/// Monotonic, never decreases; saturates after ~584 years of uptime.
+pub fn now_ns() -> u64 {
+    u64::try_from(epoch().elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Nanoseconds elapsed since an earlier [`now_ns`] stamp.
+pub fn ns_since(start_ns: u64) -> u64 {
+    now_ns().saturating_sub(start_ns)
+}
+
+/// Seconds elapsed since an earlier [`now_ns`] stamp.
+pub fn secs_since(start_ns: u64) -> f64 {
+    ns_to_secs(ns_since(start_ns))
+}
+
+/// Convert a nanosecond delta to seconds.
+pub fn ns_to_secs(ns: u64) -> f64 {
+    ns as f64 * 1e-9
+}
+
+/// Convert a nanosecond delta to a [`Duration`].
+pub fn ns_to_duration(ns: u64) -> Duration {
+    Duration::from_nanos(ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn ns_since_measures_forward_time() {
+        let t0 = now_ns();
+        std::thread::sleep(Duration::from_millis(2));
+        let d = ns_since(t0);
+        assert!(d >= 1_000_000, "slept 2ms but measured {d}ns");
+        assert!(secs_since(t0) >= 1e-3);
+    }
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(ns_to_duration(1_500_000_000), Duration::from_millis(1500));
+        assert!((ns_to_secs(2_000_000_000) - 2.0).abs() < 1e-12);
+        // a stamp from the "future" saturates to zero, never underflows
+        assert_eq!(now_ns().saturating_sub(u64::MAX), 0);
+    }
+}

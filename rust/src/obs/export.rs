@@ -1,0 +1,231 @@
+//! Metric exporters — Prometheus text exposition and JSON snapshots.
+//!
+//! [`PromWriter`] is a small, allocation-light renderer for the
+//! Prometheus text format (version 0.0.4): `# HELP` / `# TYPE` headers,
+//! label escaping, cumulative `_bucket{le="…"}` series from
+//! [`Histogram::cumulative_octaves`], and quantile gauges for the
+//! p50/p99/p999 views dashboards actually alert on. The composition —
+//! which families exist, with which labels — lives at the owner of the
+//! data ([`Server::export_metrics`](crate::serve::Server::export_metrics));
+//! this module only knows how to render one family at a time, which
+//! keeps it golden-testable without a serving stack.
+//!
+//! JSON snapshots reuse [`crate::util::json::Json`] (BTreeMap-backed,
+//! so key order — and therefore the rendered text — is deterministic).
+
+use crate::util::json::Json;
+
+use super::calib::CalibrationRecord;
+use super::hist::{HistSummary, Histogram};
+
+/// Incremental Prometheus text renderer.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    buf: String,
+}
+
+/// Escape a label value per the exposition format.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn format_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else if v.is_nan() {
+        "NaN".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn write_labels(buf: &mut String, labels: &[(&str, &str)]) {
+    if labels.is_empty() {
+        return;
+    }
+    buf.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        buf.push_str(k);
+        buf.push_str("=\"");
+        buf.push_str(&escape_label(v));
+        buf.push('"');
+    }
+    buf.push('}');
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    /// Start a metric family: `# HELP` + `# TYPE`. Call once per family,
+    /// before its samples. `kind` ∈ {counter, gauge, histogram, summary}.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.buf
+            .push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// One sample line with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.buf.push_str(name);
+        write_labels(&mut self.buf, labels);
+        self.buf.push(' ');
+        self.buf.push_str(&format_value(value));
+        self.buf.push('\n');
+    }
+
+    pub fn sample_u64(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.buf.push_str(name);
+        write_labels(&mut self.buf, labels);
+        self.buf.push_str(&format!(" {value}\n"));
+    }
+
+    /// Render one histogram's cumulative buckets + `_sum` + `_count`
+    /// under `name` (family header emitted separately via [`family`]).
+    ///
+    /// [`family`]: PromWriter::family
+    pub fn histogram(&mut self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        let bucket_name = format!("{name}_bucket");
+        let mut with_le: Vec<(&str, &str)> = Vec::with_capacity(labels.len() + 1);
+        for (upper, cum) in h.cumulative_octaves() {
+            let le = format_value(upper);
+            with_le.clear();
+            with_le.extend_from_slice(labels);
+            with_le.push(("le", &le));
+            self.sample_u64(&bucket_name, &with_le, cum);
+        }
+        self.sample(&format!("{name}_sum"), labels, h.sum_secs());
+        self.sample_u64(&format!("{name}_count"), labels, h.count());
+    }
+
+    /// Render p50/p95/p99/p999 quantile samples from a summary under
+    /// `name{quantile="…"}` (Prometheus `summary` convention).
+    pub fn quantiles(&mut self, name: &str, labels: &[(&str, &str)], s: &HistSummary) {
+        let mut with_q: Vec<(&str, &str)> = Vec::with_capacity(labels.len() + 1);
+        for (q, v) in [
+            ("0.5", s.p50),
+            ("0.95", s.p95),
+            ("0.99", s.p99),
+            ("0.999", s.p999),
+        ] {
+            with_q.clear();
+            with_q.extend_from_slice(labels);
+            with_q.push(("quantile", q));
+            self.sample(name, &with_q, v);
+        }
+        self.sample(&format!("{name}_sum"), labels, s.mean * s.n as f64);
+        self.sample_u64(&format!("{name}_count"), labels, s.n as u64);
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+/// JSON form of a [`HistSummary`] (seconds, or counts for size hists).
+pub fn summary_json(s: &HistSummary) -> Json {
+    Json::obj(vec![
+        ("n", Json::num(s.n as f64)),
+        ("mean", Json::num(s.mean)),
+        ("min", Json::num(s.min)),
+        ("p50", Json::num(s.p50)),
+        ("p95", Json::num(s.p95)),
+        ("p99", Json::num(s.p99)),
+        ("p999", Json::num(s.p999)),
+        ("max", Json::num(s.max)),
+    ])
+}
+
+/// JSON form of a calibration record set.
+pub fn calibration_json(records: &[CalibrationRecord]) -> Json {
+    Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("conv", Json::str(r.key.conv.as_str())),
+                    (
+                        "numerics",
+                        Json::str(match r.key.numerics {
+                            crate::model::Numerics::Float => "float",
+                            crate::model::Numerics::Fixed => "fixed",
+                        }),
+                    ),
+                    ("sharded", Json::Bool(r.key.sharded)),
+                    ("k", Json::num(r.key.k as f64)),
+                    ("nodes_log2", Json::num(r.key.nodes_log2 as f64)),
+                    ("edges_log2", Json::num(r.key.edges_log2 as f64)),
+                    ("dispatches", Json::num(r.dispatches as f64)),
+                    ("graphs", Json::num(r.graphs as f64)),
+                    ("total_service_secs", Json::num(r.total_service_secs)),
+                    ("mean_service_secs", Json::num(r.mean_service_secs())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_escaped() {
+        let mut w = PromWriter::new();
+        w.sample("x", &[("tenant", "a\"b\\c\nd")], 1.0);
+        assert_eq!(w.finish(), "x{tenant=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_with_inf() {
+        let h = Histogram::new();
+        h.record_ns(2_000); // 2µs
+        h.record_ns(2_000_000); // 2ms
+        let mut w = PromWriter::new();
+        w.family("lat_seconds", "histogram", "test");
+        w.histogram("lat_seconds", &[("stage", "queue")], &h);
+        let text = w.finish();
+        assert!(text.starts_with("# HELP lat_seconds test\n# TYPE lat_seconds histogram\n"));
+        assert!(text.contains("lat_seconds_bucket{stage=\"queue\",le=\"+Inf\"} 2\n"));
+        assert!(text.contains("lat_seconds_count{stage=\"queue\"} 2\n"));
+        // every bucket line parses: name{..le="x"} <int>
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "cumulative counts must be monotone");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn quantile_lines_follow_summary_convention() {
+        let s = HistSummary {
+            n: 4,
+            mean: 0.5,
+            min: 0.1,
+            p50: 0.4,
+            p95: 0.9,
+            p99: 0.95,
+            p999: 0.99,
+            max: 1.0,
+        };
+        let mut w = PromWriter::new();
+        w.quantiles("lat", &[("tenant", "acme")], &s);
+        let text = w.finish();
+        assert!(text.contains("lat{tenant=\"acme\",quantile=\"0.5\"} 0.4\n"));
+        assert!(text.contains("lat{tenant=\"acme\",quantile=\"0.999\"} 0.99\n"));
+        assert!(text.contains("lat_count{tenant=\"acme\"} 4\n"));
+    }
+}

@@ -1,0 +1,477 @@
+//! Fixed-bucket log-scale latency histograms (HDR-style).
+//!
+//! A serving daemon cannot keep sample vectors: a 65536-sample sliding
+//! window costs 512 KiB per distribution, loses the tail as soon as
+//! traffic outruns the window, and needs a mutex + full scan per
+//! summary. A [`Histogram`] instead keeps ~210 atomic counters covering
+//! 1 µs … 68 s in log-linear buckets (8 sub-buckets per power-of-two
+//! octave → ≤ 12.5 % relative quantile error), so:
+//!
+//! - **record is lock-free**: one index computation + three relaxed
+//!   atomic bumps, safe from any thread;
+//! - **memory is O(1)** regardless of traffic volume, and the p999 is
+//!   exact-to-bucket even after billions of samples;
+//! - **histograms merge**: per-tenant and per-endpoint histograms sum
+//!   bucket-wise into fleet totals (saturating — a long-running daemon
+//!   must degrade precision, never panic or wrap).
+//!
+//! `Ordering` policy (the crate-wide audit): every counter here is
+//! independently meaningful — nothing reads one atomic to decide
+//! whether another atomic's value is published — so both bumps and
+//! snapshot loads are `Relaxed`. Acquire/Release pairs are reserved for
+//! actual publication flags (e.g. `Server::down`, which uses `SeqCst`).
+//! Bucket/count bumps use wrapping `fetch_add`: overflowing a `u64`
+//! *event count* needs 1.8 × 10¹⁹ events and is unreachable in a
+//! process lifetime. The nanosecond *sum* is different — at 10⁶ req/s ×
+//! 1 ms each it wraps in ~8 months — so it saturates via a CAS loop.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Values below 2^MIN_EXP ns (≈ 1 µs) share the underflow bucket.
+const MIN_EXP: u32 = 10;
+/// Values at or above 2^MAX_EXP ns (≈ 68.7 s) share the overflow bucket.
+const MAX_EXP: u32 = 36;
+/// Log-linear sub-buckets per power-of-two octave.
+const SUBS: usize = 8;
+/// underflow + (octaves × sub-buckets) + overflow
+const N_BUCKETS: usize = 1 + (MAX_EXP - MIN_EXP) as usize * SUBS + 1;
+
+/// Saturating add on an atomic counter (CAS loop; uncontended in
+/// practice — merges and the ns-sum are the only callers).
+fn sat_add(a: &AtomicU64, v: u64) {
+    if v == 0 {
+        return;
+    }
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(v);
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value.
+fn bucket_index(ns: u64) -> usize {
+    if ns < (1u64 << MIN_EXP) {
+        return 0;
+    }
+    let exp = 63 - ns.leading_zeros();
+    if exp >= MAX_EXP {
+        return N_BUCKETS - 1;
+    }
+    // the three bits below the leading bit pick the sub-bucket
+    let sub = ((ns >> (exp - 3)) & 0x7) as usize;
+    1 + (exp - MIN_EXP) as usize * SUBS + sub
+}
+
+/// Upper bound (ns, exclusive) of a bucket; +∞ for the overflow bucket.
+fn bucket_upper_ns(i: usize) -> f64 {
+    if i == 0 {
+        return (1u64 << MIN_EXP) as f64;
+    }
+    if i == N_BUCKETS - 1 {
+        return f64::INFINITY;
+    }
+    let j = i - 1;
+    let exp = MIN_EXP as usize + j / SUBS;
+    let sub = (j % SUBS) as f64;
+    (1u64 << exp) as f64 * (1.0 + (sub + 1.0) / SUBS as f64)
+}
+
+/// Point summary of one histogram, in the histogram's native unit
+/// (seconds for latency histograms, counts for size histograms).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSummary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub max: f64,
+}
+
+/// Lock-free mergeable log-scale latency histogram over nanoseconds.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one nanosecond sample.
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        sat_add(&self.sum_ns, ns);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record one sample given in seconds (negative clamps to zero).
+    pub fn record_secs(&self, secs: f64) {
+        let ns = (secs.max(0.0) * 1e9).min(u64::MAX as f64) as u64;
+        self.record_ns(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Mean in seconds (exact up to sum saturation, not bucketed).
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 * 1e-9 / n as f64
+    }
+
+    pub fn min_secs(&self) -> f64 {
+        let m = self.min_ns.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0.0
+        } else {
+            m as f64 * 1e-9
+        }
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Quantile in seconds: the upper bound of the bucket holding the
+    /// q-th sample, clamped to the observed [min, max] (so a
+    /// single-sample histogram reports that sample exactly). Relative
+    /// error ≤ 1/SUBS = 12.5 %.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let snapshot: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = snapshot.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        let mut upper_ns = bucket_upper_ns(0);
+        for (i, c) in snapshot.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                upper_ns = bucket_upper_ns(i);
+                break;
+            }
+        }
+        let min = self.min_ns.load(Ordering::Relaxed);
+        let max = self.max_ns.load(Ordering::Relaxed) as f64;
+        let min = if min == u64::MAX { 0.0 } else { min as f64 };
+        upper_ns.clamp(min, max) * 1e-9
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            n: self.count() as usize,
+            mean: self.mean_secs(),
+            min: self.min_secs(),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+            max: self.max_secs(),
+        }
+    }
+
+    /// Fold another histogram into this one, bucket-wise and saturating.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            sat_add(a, b.load(Ordering::Relaxed));
+        }
+        sat_add(&self.count, other.count.load(Ordering::Relaxed));
+        sat_add(&self.sum_ns, other.sum_ns.load(Ordering::Relaxed));
+        self.min_ns
+            .fetch_min(other.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns
+            .fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Cumulative bucket counts coarsened to one entry per octave —
+    /// `(upper_bound_seconds, cumulative_count)`, Prometheus `le`
+    /// semantics, ending with `(+∞, total)`.
+    pub fn cumulative_octaves(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity((MAX_EXP - MIN_EXP) as usize + 2);
+        let mut cum = self.buckets[0].load(Ordering::Relaxed);
+        out.push(((1u64 << MIN_EXP) as f64 * 1e-9, cum));
+        for exp in MIN_EXP..MAX_EXP {
+            let base = 1 + (exp - MIN_EXP) as usize * SUBS;
+            for b in &self.buckets[base..base + SUBS] {
+                cum += b.load(Ordering::Relaxed);
+            }
+            out.push(((1u64 << (exp + 1)) as f64 * 1e-9, cum));
+        }
+        cum += self.buckets[N_BUCKETS - 1].load(Ordering::Relaxed);
+        out.push((f64::INFINITY, cum));
+        out
+    }
+
+    /// Sum of recorded values in seconds (Prometheus `_sum`).
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+/// Power-of-two count histogram for small integer distributions (batch
+/// sizes). Bucket = smallest power of two ≥ the value, matching the old
+/// sample-vector `pow2_histogram` so `batch_histogram()` call sites and
+/// their asserted shapes are unchanged.
+#[derive(Debug)]
+pub struct CountHistogram {
+    /// bucket e counts values whose pow2 ceiling is 2^e
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+const COUNT_BUCKETS: usize = usize::BITS as usize + 1;
+
+impl Default for CountHistogram {
+    fn default() -> Self {
+        CountHistogram::new()
+    }
+}
+
+impl CountHistogram {
+    pub fn new() -> CountHistogram {
+        CountHistogram {
+            buckets: (0..COUNT_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, n: usize) {
+        let e = if n <= 1 {
+            0
+        } else {
+            n.next_power_of_two().trailing_zeros() as usize
+        };
+        self.buckets[e].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        sat_add(&self.sum, n as u64);
+        self.min.fetch_min(n as u64, Ordering::Relaxed);
+        self.max.fetch_max(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// `[(pow2_bucket, count)]` for non-empty buckets, ascending.
+    pub fn to_vec(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(e, c)| {
+                let c = c.load(Ordering::Relaxed);
+                (c > 0).then_some((1usize << e, c))
+            })
+            .collect()
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        let n = self.count();
+        if n == 0 {
+            return HistSummary::default();
+        }
+        let min = self.min.load(Ordering::Relaxed) as f64;
+        let max = self.max.load(Ordering::Relaxed) as f64;
+        let q = |q: f64| -> f64 {
+            let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+            let mut cum = 0u64;
+            for (e, c) in self.buckets.iter().enumerate() {
+                cum += c.load(Ordering::Relaxed);
+                if cum >= target {
+                    return ((1u64 << e) as f64).clamp(min, max);
+                }
+            }
+            max
+        };
+        HistSummary {
+            n: n as usize,
+            mean: self.sum.load(Ordering::Relaxed) as f64 / n as f64,
+            min,
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+            p999: q(0.999),
+            max,
+        }
+    }
+
+    pub fn merge_from(&self, other: &CountHistogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            sat_add(a, b.load(Ordering::Relaxed));
+        }
+        sat_add(&self.count, other.count.load(Ordering::Relaxed));
+        sat_add(&self.sum, other.sum.load(Ordering::Relaxed));
+        self.min
+            .fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        for exp in 0..64 {
+            let v = 1u64 << exp;
+            for probe in [v, v + v / 3, v + v / 2] {
+                let i = bucket_index(probe);
+                assert!(i < N_BUCKETS);
+                assert!(i >= prev, "index not monotone at {probe}");
+                prev = i;
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let h = Histogram::new();
+        let s = h.summary();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p999, 0.0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_reported_exactly() {
+        let h = Histogram::new();
+        h.record_secs(3.5e-3);
+        let s = h.summary();
+        assert_eq!(s.n, 1);
+        assert!((s.p50 - 3.5e-3).abs() < 1e-12, "p50 {}", s.p50);
+        assert!((s.p999 - 3.5e-3).abs() < 1e-12);
+        assert!((s.mean - 3.5e-3).abs() < 1e-9);
+        assert_eq!(s.min, s.max);
+    }
+
+    #[test]
+    fn quantile_error_is_within_a_sub_bucket() {
+        let h = Histogram::new();
+        // 1000 samples spread 100µs..10ms
+        for i in 0..1000u64 {
+            h.record_ns(100_000 + i * 9_900);
+        }
+        let s = h.summary();
+        let exact_p50 = (100_000.0 + 500.0 * 9_900.0) * 1e-9;
+        assert!(
+            (s.p50 - exact_p50).abs() / exact_p50 < 0.125 + 1e-9,
+            "p50 {} vs exact {exact_p50}",
+            s.p50
+        );
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.p999);
+        assert!(s.p999 <= s.max + 1e-12);
+        assert!(s.min <= s.p50);
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_in_one() {
+        let (a, b, all) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 0..500u64 {
+            let v = 1_000 + i * 37_001;
+            if i % 2 == 0 {
+                a.record_ns(v);
+            } else {
+                b.record_ns(v);
+            }
+            all.record_ns(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.summary(), all.summary());
+        assert_eq!(a.cumulative_octaves(), all.cumulative_octaves());
+    }
+
+    #[test]
+    fn merge_saturates_instead_of_wrapping() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_ns(u64::MAX); // sum saturates immediately
+        b.record_ns(u64::MAX);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.sum_ns.load(Ordering::Relaxed), u64::MAX, "saturated, not wrapped");
+    }
+
+    #[test]
+    fn cumulative_octaves_are_monotone_and_total() {
+        let h = Histogram::new();
+        for ns in [500u64, 2_000, 2_000_000, 3_000_000_000, u64::MAX] {
+            h.record_ns(ns);
+        }
+        let cum = h.cumulative_octaves();
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1 && w[0].0 < w[1].0));
+        let (last_upper, last_cum) = *cum.last().unwrap();
+        assert!(last_upper.is_infinite());
+        assert_eq!(last_cum, 5);
+    }
+
+    #[test]
+    fn count_histogram_matches_pow2_bucketing() {
+        let c = CountHistogram::new();
+        c.record(3);
+        c.record(8);
+        assert_eq!(c.to_vec(), vec![(4, 1), (8, 1)]);
+        let s = c.summary();
+        assert_eq!(s.n, 2);
+        assert_eq!(s.max, 8.0);
+        assert_eq!(s.min, 3.0);
+        assert!((s.mean - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn count_histogram_single_value_quantiles_clamp() {
+        let c = CountHistogram::new();
+        c.record(5);
+        let s = c.summary();
+        assert_eq!(s.p50, 5.0, "pow2 upper bound (8) must clamp to observed max");
+        assert_eq!(s.p999, 5.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! Observability — request tracing, latency histograms, exporters, and
+//! the perfmodel calibration feed.
+//!
+//! Four pieces, layered bottom-up:
+//!
+//! - [`clock`] — the crate's single monotonic wallclock (`u64` ns since
+//!   a process epoch). Every timed path outside the bench harness goes
+//!   through it; CI greps for raw `Instant::now()` elsewhere.
+//! - [`hist`] — HDR-style fixed-bucket log-scale latency histograms:
+//!   lock-free recording, O(1) memory, mergeable, saturating. These
+//!   back every distribution in [`crate::serve::Metrics`] (the old
+//!   65536-sample sliding windows are gone).
+//! - [`span`] — structured tracing: each serve request owns a trace
+//!   (admit → queue → flush → dispatch → per-layer kernel stages, plus
+//!   per-shard compute and halo-exchange supersteps on the sharded
+//!   path), buffered in a sharded, bounded [`span::TraceSink`] and
+//!   drained wholesale. A span costs two clock reads and one short
+//!   shard-mutex push — cheap enough to leave on in production
+//!   (bench-asserted < 5 % on the coalesced serving arm).
+//! - [`export`] — Prometheus text and JSON renderers over the above;
+//!   [`calib`] — per-workload-shape aggregation of observed service
+//!   latencies, the feedback artery for
+//!   [`crate::perfmodel::calibration`].
+//!
+//! The serving layer owns the wiring: `ServerConfig::trace_capacity`
+//! sizes the sink, `Server::export_metrics` renders Prometheus,
+//! `Server::drain_spans` / `Server::drain_calibration` hand traces and
+//! calibration records to consumers.
+
+pub mod calib;
+pub mod clock;
+pub mod export;
+pub mod hist;
+pub mod span;
+
+pub use calib::{CalibKey, CalibrationBank, CalibrationRecord};
+pub use hist::{CountHistogram, HistSummary, Histogram};
+pub use span::{Span, SpanGuard, SpanId, Stage, TraceCtx, TraceId, TraceSink, NO_PARENT};

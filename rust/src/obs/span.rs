@@ -1,0 +1,372 @@
+//! Structured request tracing — spans, span buffers, and the trace sink.
+//!
+//! Every serve request owns a **trace**: a tree of [`Span`]s rooted at
+//! admission. The full pinned-path taxonomy (see the README table):
+//!
+//! ```text
+//! admit                       Endpoint::submit → queue push
+//! └─ queue                    admission → flush drain (per request)
+//! └─ flush                    batch assembly + dispatch (carrier request)
+//!    └─ dispatch              Session::run_batch (meta = batch size)
+//!       ├─ layer              one conv step       (meta = layer index)
+//!       │  ├─ shard_compute   sharded path only   (meta = shard index)
+//!       │  └─ halo_exchange   sharded path only   (meta = layer index)
+//!       └─ head               pooling + MLP head
+//! ```
+//!
+//! A coalesced flush serves many requests with one engine call; the
+//! engine subtree can only hang off *one* trace, so the first request
+//! in each flush is the **carrier**: its trace gets `flush` → `dispatch`
+//! → kernel spans, while every other rider still gets its own complete
+//! `admit` → `queue` → `dispatch` chain (the dispatch span is recorded
+//! per request against the shared timestamps). A single uncontended
+//! request is always its own carrier, which is what makes "one traced
+//! request yields the whole tree" hold.
+//!
+//! Cost model: an open span is two `u64` reads of the monotonic clock;
+//! closing pushes a 56-byte `Copy` struct into a sharded-mutex buffer
+//! (threads are spread round-robin across [`SINK_SHARDS`] shards, so
+//! the engine worker pool almost never contends on a shard lock, and
+//! the critical section is a bounds check + `Vec::push`). Buffers are
+//! ring-bounded: when a shard is full new spans are counted in
+//! `dropped` and discarded — tracing degrades, serving never blocks.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::clock;
+
+/// Stable identifier of one request's span tree.
+pub type TraceId = u64;
+/// Identifier of one span, unique within the sink's lifetime.
+pub type SpanId = u64;
+/// `parent` value of a root span.
+pub const NO_PARENT: SpanId = 0;
+
+/// Pipeline stage a span measures. `as_str` names are the public,
+/// exporter-visible taxonomy — tests and dashboards key on them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// `Endpoint::submit` admission (validation + queue push)
+    Admit,
+    /// time spent queued, admission → flush drain
+    Queue,
+    /// batch assembly + dispatch, carrier request only
+    Flush,
+    /// the engine call (`Session::run_batch` / backend), meta = batch size
+    Dispatch,
+    /// one message-passing layer, meta = layer index
+    Layer,
+    /// per-shard conv superstep, meta = shard index
+    ShardCompute,
+    /// halo-exchange superstep, meta = layer index
+    HaloExchange,
+    /// readout: pooling + MLP head
+    Head,
+}
+
+impl Stage {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::Queue => "queue",
+            Stage::Flush => "flush",
+            Stage::Dispatch => "dispatch",
+            Stage::Layer => "layer",
+            Stage::ShardCompute => "shard_compute",
+            Stage::HaloExchange => "halo_exchange",
+            Stage::Head => "head",
+        }
+    }
+}
+
+/// One closed span. `Copy` and flat on purpose: span buffers are plain
+/// vectors and draining is a memcpy, not a pointer chase.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub trace: TraceId,
+    pub id: SpanId,
+    /// [`NO_PARENT`] for the trace root
+    pub parent: SpanId,
+    pub stage: Stage,
+    /// [`clock::now_ns`] stamps
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// stage-specific payload: batch size (dispatch), layer index
+    /// (layer / halo_exchange), shard index (shard_compute), else 0
+    pub meta: u64,
+}
+
+impl Span {
+    /// Span duration in seconds.
+    pub fn secs(&self) -> f64 {
+        clock::ns_to_secs(self.end_ns.saturating_sub(self.start_ns))
+    }
+}
+
+/// Shard count of the sink. A power of two comfortably above the worker
+/// pool sizes the engine uses, so round-robin thread assignment rarely
+/// doubles up while a flush is in flight.
+const SINK_SHARDS: usize = 16;
+
+thread_local! {
+    /// Which sink shard this thread pushes to (assigned on first push).
+    static MY_SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// Bounded, sharded span buffer. Producers push closed spans from any
+/// thread; a consumer swaps the buffers out with [`TraceSink::drain`].
+#[derive(Debug)]
+pub struct TraceSink {
+    shards: Vec<Mutex<Vec<Span>>>,
+    /// per-shard capacity; a full shard drops (and counts) new spans
+    shard_capacity: usize,
+    dropped: AtomicU64,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    next_shard: AtomicUsize,
+}
+
+impl TraceSink {
+    /// A sink holding at most `capacity` spans across all shards.
+    pub fn new(capacity: usize) -> TraceSink {
+        TraceSink {
+            shards: (0..SINK_SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+            shard_capacity: (capacity / SINK_SHARDS).max(1),
+            dropped: AtomicU64::new(0),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            next_shard: AtomicUsize::new(0),
+        }
+    }
+
+    /// Allocate a fresh trace id (never 0).
+    pub fn begin_trace(&self) -> TraceId {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Allocate a fresh span id (never [`NO_PARENT`]).
+    pub fn next_span_id(&self) -> SpanId {
+        self.next_span.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Spans discarded because their shard buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    fn shard_for_thread(&self) -> usize {
+        MY_SHARD.with(|s| {
+            let mut idx = s.get();
+            if idx == usize::MAX {
+                idx = self.next_shard.fetch_add(1, Ordering::Relaxed) % SINK_SHARDS;
+                s.set(idx);
+            }
+            idx
+        })
+    }
+
+    /// Push a closed span (drops it, counted, if the shard is full).
+    pub fn push(&self, span: Span) {
+        let mut buf = self.shards[self.shard_for_thread()].lock().unwrap();
+        if buf.len() >= self.shard_capacity {
+            drop(buf);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        buf.push(span);
+    }
+
+    /// Record a span whose start/end were stamped elsewhere — the
+    /// cross-thread form (queue wait is stamped on the submitting thread
+    /// and closed on the dispatcher). Returns the new span's id.
+    pub fn record(
+        &self,
+        trace: TraceId,
+        parent: SpanId,
+        stage: Stage,
+        start_ns: u64,
+        end_ns: u64,
+        meta: u64,
+    ) -> SpanId {
+        let id = self.next_span_id();
+        self.push(Span {
+            trace,
+            id,
+            parent,
+            stage,
+            start_ns,
+            end_ns,
+            meta,
+        });
+        id
+    }
+
+    /// Open a same-thread RAII span; it closes (end stamp + push) on drop.
+    pub fn start(&self, trace: TraceId, parent: SpanId, stage: Stage, meta: u64) -> SpanGuard<'_> {
+        SpanGuard {
+            sink: self,
+            span: Span {
+                trace,
+                id: self.next_span_id(),
+                parent,
+                stage,
+                start_ns: clock::now_ns(),
+                end_ns: 0,
+                meta,
+            },
+        }
+    }
+
+    /// Swap out and return every buffered span (producer buffers are
+    /// replaced with empty vectors; producers are blocked only for the
+    /// swap). Ordering across shards is arbitrary — consumers sort or
+    /// group by `(trace, start_ns)`.
+    pub fn drain(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut buf = shard.lock().unwrap();
+            if out.is_empty() {
+                out = std::mem::take(&mut *buf);
+            } else {
+                out.append(&mut buf);
+            }
+        }
+        out
+    }
+
+    /// Spans currently buffered (racy snapshot, for tests/introspection).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// RAII handle for a same-thread span: stamps `end_ns` and pushes into
+/// the sink on drop.
+#[derive(Debug)]
+pub struct SpanGuard<'a> {
+    sink: &'a TraceSink,
+    span: Span,
+}
+
+impl SpanGuard<'_> {
+    /// This span's id — parent handle for child spans.
+    pub fn id(&self) -> SpanId {
+        self.span.id
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.span.end_ns = clock::now_ns();
+        self.sink.push(self.span);
+    }
+}
+
+/// Trace context threaded through the engine: which sink to push to and
+/// which span to parent kernel stages under. `Copy` so the sharded
+/// path's `par_map` closures capture it by value.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceCtx<'a> {
+    pub sink: &'a TraceSink,
+    pub trace: TraceId,
+    pub parent: SpanId,
+}
+
+impl<'a> TraceCtx<'a> {
+    /// Open a child span under this context's parent.
+    pub fn child(&self, stage: Stage, meta: u64) -> SpanGuard<'a> {
+        self.sink.start(self.trace, self.parent, stage, meta)
+    }
+
+    /// The same context re-parented under `parent` (descend one level).
+    pub fn under(&self, parent: SpanId) -> TraceCtx<'a> {
+        TraceCtx {
+            sink: self.sink,
+            trace: self.trace,
+            parent,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_closes_and_pushes_on_drop() {
+        let sink = TraceSink::new(64);
+        let t = sink.begin_trace();
+        let root_id;
+        {
+            let root = sink.start(t, NO_PARENT, Stage::Admit, 0);
+            root_id = root.id();
+            let _child = sink.start(t, root.id(), Stage::Queue, 0);
+        }
+        let spans = sink.drain();
+        assert_eq!(spans.len(), 2);
+        for s in &spans {
+            assert_eq!(s.trace, t);
+            assert!(s.end_ns >= s.start_ns, "span closed with end < start");
+        }
+        let child = spans.iter().find(|s| s.stage == Stage::Queue).unwrap();
+        assert_eq!(child.parent, root_id);
+        assert!(sink.is_empty(), "drain must swap buffers out");
+    }
+
+    #[test]
+    fn full_shards_drop_and_count_instead_of_growing() {
+        let sink = TraceSink::new(SINK_SHARDS); // capacity 1 per shard
+        let t = sink.begin_trace();
+        for _ in 0..5 {
+            sink.record(t, NO_PARENT, Stage::Admit, 0, 1, 0);
+        }
+        // this thread maps to exactly one shard: 1 kept, 4 dropped
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink.dropped(), 4);
+    }
+
+    #[test]
+    fn ids_are_unique_across_threads() {
+        let sink = std::sync::Arc::new(TraceSink::new(4096));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s = sink.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..100).map(|_| s.next_span_id()).collect::<Vec<_>>()
+            }));
+        }
+        let mut ids: Vec<SpanId> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 800);
+    }
+
+    #[test]
+    fn ctx_under_reparents() {
+        let sink = TraceSink::new(64);
+        let t = sink.begin_trace();
+        let ctx = TraceCtx {
+            sink: &sink,
+            trace: t,
+            parent: NO_PARENT,
+        };
+        let root = ctx.child(Stage::Dispatch, 3);
+        let sub = ctx.under(root.id());
+        drop(sub.child(Stage::Layer, 0));
+        drop(root);
+        let spans = sink.drain();
+        let layer = spans.iter().find(|s| s.stage == Stage::Layer).unwrap();
+        let disp = spans.iter().find(|s| s.stage == Stage::Dispatch).unwrap();
+        assert_eq!(layer.parent, disp.id);
+        assert_eq!(disp.meta, 3);
+    }
+}

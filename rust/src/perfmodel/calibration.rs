@@ -1,0 +1,272 @@
+//! Serving-traffic feedback for the direct-fit latency model.
+//!
+//! The paper's latency forest predicts from the config alone (§VII-B)
+//! and tolerates ≈36 % error — good enough to rank designs during DSE,
+//! not good enough to promise latency SLOs for a live deployment. The
+//! observability layer closes that gap: every pinned flush folds its
+//! measured engine time into [`crate::obs::calib::CalibrationBank`]
+//! cells keyed by workload shape, and a [`LatencyCalibrator`] absorbs
+//! the drained [`CalibrationRecord`]s into per-shape EWMA state. The
+//! calibrated prediction is then
+//!
+//! ```text
+//! calibrate(key, predicted) = predicted × EWMA(observed / predicted)
+//! ```
+//!
+//! — a multiplicative correction, matching the log-target convention
+//! the latency forest is fitted under (multiplicative error is what
+//! MAPE measures). Shapes never observed pass predictions through
+//! unchanged, so a cold calibrator is exactly the uncalibrated model.
+
+use std::collections::HashMap;
+
+use crate::model::Numerics;
+use crate::obs::calib::{CalibKey, CalibrationRecord};
+
+/// EWMA state for one workload shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibCell {
+    /// EWMA of observed mean service seconds per graph
+    pub observed_secs: f64,
+    /// EWMA of observed / predicted (1.0 until a prediction is supplied)
+    pub correction: f64,
+    /// total graphs folded into this cell
+    pub graphs: u64,
+    /// drained records folded into this cell
+    pub records: u64,
+}
+
+/// Absorbs drained calibration records and maintains per-shape
+/// multiplicative correction factors for the latency model.
+///
+/// Single-consumer by design (`&mut self` absorption): the serving
+/// layer's bank handles concurrent producers; whoever drains it — a
+/// janitor thread, the metrics dump loop — owns the calibrator.
+#[derive(Debug)]
+pub struct LatencyCalibrator {
+    /// base EWMA weight for one record carrying one graph
+    alpha: f64,
+    /// corrections are clamped to [1/limit, limit] so one pathological
+    /// observation (page cache miss, CPU contention) cannot poison a cell
+    correction_limit: f64,
+    cells: HashMap<CalibKey, CalibCell>,
+}
+
+impl Default for LatencyCalibrator {
+    fn default() -> Self {
+        LatencyCalibrator::new(0.3)
+    }
+}
+
+impl LatencyCalibrator {
+    /// A calibrator with EWMA weight `alpha` per single-graph record
+    /// (clamped to (0, 1]). Heavier records pull harder: a record of
+    /// `g` graphs updates with weight `1 - (1 - alpha)^g`.
+    pub fn new(alpha: f64) -> LatencyCalibrator {
+        LatencyCalibrator {
+            alpha: alpha.clamp(1e-6, 1.0),
+            correction_limit: 100.0,
+            cells: HashMap::new(),
+        }
+    }
+
+    /// Effective EWMA weight of a record covering `graphs` graphs.
+    fn weight(&self, graphs: u64) -> f64 {
+        1.0 - (1.0 - self.alpha).powi(graphs.min(i32::MAX as u64) as i32)
+    }
+
+    /// Fold one drained record; `predicted_secs` is the uncalibrated
+    /// model's per-graph latency for this shape (None updates only the
+    /// observed EWMA, leaving the correction untouched).
+    pub fn observe(&mut self, rec: &CalibrationRecord, predicted_secs: Option<f64>) {
+        if rec.graphs == 0 {
+            return;
+        }
+        let obs = rec.mean_service_secs();
+        let w = self.weight(rec.graphs);
+        let cell = self.cells.entry(rec.key).or_insert(CalibCell {
+            observed_secs: obs,
+            correction: 1.0,
+            graphs: 0,
+            records: 0,
+        });
+        cell.observed_secs += w * (obs - cell.observed_secs);
+        if let Some(pred) = predicted_secs {
+            if pred > 0.0 {
+                let ratio = (obs / pred).clamp(
+                    1.0 / self.correction_limit,
+                    self.correction_limit,
+                );
+                cell.correction += w * (ratio - cell.correction);
+            }
+        }
+        cell.graphs = cell.graphs.saturating_add(rec.graphs);
+        cell.records = cell.records.saturating_add(1);
+    }
+
+    /// Fold a whole drained batch, resolving predictions per key —
+    /// the bank-drain integration point:
+    ///
+    /// ```ignore
+    /// calibrator.absorb(&server.drain_calibration(), |key| {
+    ///     Some(predict_for(key))
+    /// });
+    /// ```
+    pub fn absorb<F>(&mut self, records: &[CalibrationRecord], mut predict: F)
+    where
+        F: FnMut(&CalibKey) -> Option<f64>,
+    {
+        for rec in records {
+            let pred = predict(&rec.key);
+            self.observe(rec, pred);
+        }
+    }
+
+    /// Calibrated latency: `predicted_secs` scaled by this shape's
+    /// correction factor; shapes never observed pass through unchanged.
+    pub fn calibrate(&self, key: &CalibKey, predicted_secs: f64) -> f64 {
+        match self.cells.get(key) {
+            Some(c) => predicted_secs * c.correction,
+            None => predicted_secs,
+        }
+    }
+
+    /// The correction factor for a shape (1.0 when unobserved).
+    pub fn correction(&self, key: &CalibKey) -> f64 {
+        self.cells.get(key).map_or(1.0, |c| c.correction)
+    }
+
+    /// EWMA of observed mean service seconds for a shape, if observed.
+    pub fn observed_secs(&self, key: &CalibKey) -> Option<f64> {
+        self.cells.get(key).map(|c| c.observed_secs)
+    }
+
+    /// Relax every correction toward 1.0 by `factor` in [0, 1] — the
+    /// aging hook for deployments whose workload drifts (call it on the
+    /// same cadence as bank drains; 0 forgets everything, 1 keeps all).
+    pub fn decay(&mut self, factor: f64) {
+        let f = factor.clamp(0.0, 1.0);
+        for cell in self.cells.values_mut() {
+            cell.correction = 1.0 + f * (cell.correction - 1.0);
+        }
+    }
+
+    /// Snapshot of every cell in deterministic shape order.
+    pub fn cells(&self) -> Vec<(CalibKey, CalibCell)> {
+        let mut out: Vec<(CalibKey, CalibCell)> =
+            self.cells.iter().map(|(k, c)| (*k, *c)).collect();
+        out.sort_by_key(|(k, _)| {
+            (
+                k.conv.as_str(),
+                matches!(k.numerics, Numerics::Fixed),
+                k.sharded,
+                k.k,
+                k.nodes_log2,
+                k.edges_log2,
+            )
+        });
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ConvType;
+
+    fn key(k: usize) -> CalibKey {
+        CalibKey {
+            conv: ConvType::Gcn,
+            numerics: Numerics::Float,
+            sharded: k > 1,
+            k,
+            nodes_log2: 11,
+            edges_log2: 13,
+        }
+    }
+
+    fn rec(k: usize, graphs: u64, mean_secs: f64) -> CalibrationRecord {
+        CalibrationRecord {
+            key: key(k),
+            dispatches: 1,
+            graphs,
+            total_service_secs: mean_secs * graphs as f64,
+        }
+    }
+
+    #[test]
+    fn cold_calibrator_is_the_identity() {
+        let cal = LatencyCalibrator::default();
+        assert_eq!(cal.calibrate(&key(1), 0.004), 0.004);
+        assert_eq!(cal.correction(&key(1)), 1.0);
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn corrections_converge_toward_the_observed_ratio() {
+        let mut cal = LatencyCalibrator::new(0.5);
+        // model predicts 2 ms, reality is 4 ms: ratio 2.0
+        for _ in 0..16 {
+            cal.observe(&rec(1, 1, 0.004), Some(0.002));
+        }
+        let c = cal.correction(&key(1));
+        assert!((c - 2.0).abs() < 0.01, "correction {c} should approach 2");
+        let calibrated = cal.calibrate(&key(1), 0.002);
+        assert!((calibrated - 0.004).abs() < 2e-5);
+        // untouched shape is still identity
+        assert_eq!(cal.correction(&key(4)), 1.0);
+    }
+
+    #[test]
+    fn heavier_records_pull_harder() {
+        let mut a = LatencyCalibrator::new(0.2);
+        let mut b = LatencyCalibrator::new(0.2);
+        a.observe(&rec(1, 1, 0.004), Some(0.002));
+        b.observe(&rec(1, 32, 0.004), Some(0.002));
+        assert!(
+            b.correction(&key(1)) > a.correction(&key(1)),
+            "32-graph record must outweigh a 1-graph record"
+        );
+    }
+
+    #[test]
+    fn absorb_resolves_predictions_per_key_and_decay_relaxes() {
+        let mut cal = LatencyCalibrator::new(1.0); // jump straight to ratio
+        let records = vec![rec(1, 8, 0.004), rec(4, 2, 0.040)];
+        cal.absorb(&records, |k| Some(if k.k == 1 { 0.002 } else { 0.080 }));
+        assert!((cal.correction(&key(1)) - 2.0).abs() < 1e-9);
+        assert!((cal.correction(&key(4)) - 0.5).abs() < 1e-9);
+        assert_eq!(cal.len(), 2);
+        let cells = cal.cells();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].0.k <= cells[1].0.k, "deterministic order");
+        cal.decay(0.5);
+        assert!((cal.correction(&key(1)) - 1.5).abs() < 1e-9);
+        assert!((cal.correction(&key(4)) - 0.75).abs() < 1e-9);
+        cal.decay(0.0);
+        assert_eq!(cal.correction(&key(1)), 1.0);
+    }
+
+    #[test]
+    fn pathological_observations_are_clamped_and_zero_graph_records_skipped() {
+        let mut cal = LatencyCalibrator::new(1.0);
+        cal.observe(&rec(1, 1, 1e6), Some(1e-9)); // absurd ratio
+        assert!(cal.correction(&key(1)) <= 100.0);
+        let before = cal.len();
+        cal.observe(&rec(2, 0, 0.0), Some(0.001));
+        assert_eq!(cal.len(), before, "zero-graph record must not create a cell");
+        // missing prediction updates observation but not correction
+        let mut only_obs = LatencyCalibrator::new(1.0);
+        only_obs.observe(&rec(1, 4, 0.004), None);
+        assert_eq!(only_obs.correction(&key(1)), 1.0);
+        assert_eq!(only_obs.observed_secs(&key(1)), Some(0.004));
+    }
+}

@@ -6,11 +6,18 @@
 //! inference (the paper's Fig. 4/Fig. 5 evaluation). The design database is
 //! built by sparsely sampling the Listing-2 space and "synthesizing" each
 //! config through the accelerator simulator ([`crate::hls`]).
+//!
+//! Live deployments close the loop: [`calibration`] absorbs the serving
+//! layer's observed per-dispatch latencies ([`crate::obs::calib`]) into
+//! per-workload-shape multiplicative corrections on top of the fitted
+//! forest, so latency predictions track measured traffic.
 
+pub mod calibration;
 pub mod comparators;
 pub mod forest;
 pub mod tree;
 
+pub use calibration::LatencyCalibrator;
 pub use forest::{Forest, ForestParams};
 pub use tree::{Tree, TreeParams};
 

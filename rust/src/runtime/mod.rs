@@ -9,7 +9,6 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -149,7 +148,7 @@ impl Runtime {
         if let Some(e) = self.cache.get(&meta.name) {
             return Ok(e.clone());
         }
-        let t0 = Instant::now();
+        let t0 = crate::obs::clock::now_ns();
         let path = meta
             .hlo_path
             .to_str()
@@ -160,7 +159,7 @@ impl Runtime {
         let built = Arc::new(Executable {
             meta: meta.clone(),
             exe,
-            compile_seconds: t0.elapsed().as_secs_f64(),
+            compile_seconds: crate::obs::clock::secs_since(t0),
         });
         self.cache.insert(meta.name.clone(), built.clone());
         Ok(built)

@@ -1,57 +1,80 @@
-//! Serving observability — the live counters for the multi-tenant
-//! serving layer, shared by [`Server`](super::Server), every endpoint's
-//! micro-batch dispatcher, and the legacy
-//! [`Coordinator`](crate::coordinator::Coordinator) facade (which
-//! re-exports this type, so existing `coordinator::Metrics` call sites
-//! keep working).
+//! Serving observability — the live counters and latency distributions
+//! for the multi-tenant serving layer, shared by
+//! [`Server`](super::Server), every endpoint's micro-batch dispatcher,
+//! and the legacy [`Coordinator`](crate::coordinator::Coordinator)
+//! facade (which re-exports this type, so existing
+//! `coordinator::Metrics` call sites keep working).
 //!
-//! Three families of signals:
+//! Four families of signals:
 //!
 //! - **flow counters** — submitted / completed / errors / batches plus
 //!   the admission-control counters the scheduler adds: `rejected`
 //!   (queue-full backpressure, also tracked per tenant), `retired`, and
 //!   `idle_evictions` (registry lifecycle).
+//! - **stage latency histograms** — mergeable log-scale
+//!   [`Histogram`]s (see [`crate::obs::hist`]; the old 65536-sample
+//!   sliding windows are gone) per stage × scope: queue wait, engine
+//!   service, dispatch-side end-to-end (queue + service, stamped by the
+//!   dispatcher) and *wait-side* end-to-end (submit →
+//!   [`Ticket::wait`](super::Ticket::wait) observing the response —
+//!   includes response-channel and waiter-scheduling time the
+//!   dispatcher can't see). Global and per tenant, each with
+//!   p50/p99/p999.
 //! - **coalescing evidence** — `pinned_dispatches` counts actual
 //!   [`Session::run_batch`](crate::session::Session::run_batch) calls on
 //!   pinned endpoints; together with the coalesced-batch histogram it
 //!   carries the serving acceptance gate: N concurrent requests against
 //!   one deployed topology must collapse into ≲ N/max_batch dispatches.
-//! - **depth gauges** — live queue depth per model *and* per tenant, plus
-//!   the global peak, so multi-tenant overload is attributable.
+//! - **depth gauges + calibration** — live queue depth per model *and*
+//!   per tenant plus the global peak; and a [`CalibrationBank`] folding
+//!   measured per-dispatch service time into per-workload-shape records
+//!   for [`crate::perfmodel::calibration`].
+//!
+//! `Ordering` audit: every atomic here is an independently meaningful
+//! monotonic counter or gauge — no counter's value gates the visibility
+//! of another's — so bumps *and* snapshot loads are `Relaxed`
+//! (Acquire/Release pairs are reserved for true publication flags like
+//! `Server::down`, which is `SeqCst`). Count bumps use wrapping
+//! `fetch_add` (a u64 event counter cannot overflow in a process
+//! lifetime); summed quantities and merges saturate — a long-running
+//! daemon degrades precision, never wraps or panics.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::PlanCache;
-use crate::util::stats::Summary;
+use crate::obs::calib::{CalibKey, CalibrationBank, CalibrationRecord};
+use crate::obs::hist::{CountHistogram, HistSummary, Histogram};
 
-/// Most-recent samples kept per distribution. A serving daemon runs
-/// indefinitely; unbounded sample vectors would be a slow leak (and
-/// summaries would scan an ever-growing history under a mutex), so
-/// each distribution keeps a sliding window of the latest samples.
-const SAMPLE_WINDOW: usize = 65_536;
-
-/// Fixed-capacity sliding window of f64 samples (ring overwrite once
-/// full; sample order is irrelevant to summaries and histograms).
+/// One scope's stage latency histograms (the global set, plus one per
+/// tenant). All values in seconds.
 #[derive(Debug, Default)]
-struct SampleWindow {
-    buf: Vec<f64>,
-    next: usize,
+pub struct StageTimes {
+    /// admission → flush drain (queue wait)
+    pub queue: Histogram,
+    /// engine time attributed to one request (service share of a flush)
+    pub service: Histogram,
+    /// dispatch-side end-to-end: queue + service, stamped by the dispatcher
+    pub e2e_dispatch: Histogram,
+    /// wait-side end-to-end: submit → the caller's `Ticket` observed the
+    /// response (dispatch latency plus channel + waiter wakeup)
+    pub e2e_wait: Histogram,
 }
 
-impl SampleWindow {
-    fn push(&mut self, v: f64) {
-        if self.buf.len() < SAMPLE_WINDOW {
-            self.buf.push(v);
-        } else {
-            self.buf[self.next] = v;
-            self.next = (self.next + 1) % SAMPLE_WINDOW;
-        }
+impl StageTimes {
+    /// `(stage_name, histogram)` in export order.
+    pub fn stages(&self) -> [(&'static str, &Histogram); 4] {
+        [
+            ("queue", &self.queue),
+            ("service", &self.service),
+            ("e2e_dispatch", &self.e2e_dispatch),
+            ("e2e_wait", &self.e2e_wait),
+        ]
     }
 }
 
-/// Live counters exposed by the serving layer.
+/// Live counters and distributions exposed by the serving layer.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// requests accepted into an admission queue (plus unknown-model
@@ -80,30 +103,15 @@ pub struct Metrics {
     /// workload is the "zero re-partitions" guarantee
     pub plan_cache: Arc<PlanCache>,
     depth: AtomicUsize,
-    latencies: Mutex<SampleWindow>,
-    batch_sizes: Mutex<SampleWindow>,
-    coalesced_sizes: Mutex<SampleWindow>,
+    /// global stage histograms (per-tenant sets live in `tenants`)
+    stages: StageTimes,
+    tenants: Mutex<HashMap<String, Arc<StageTimes>>>,
+    batch_sizes: CountHistogram,
+    coalesced_sizes: CountHistogram,
     queue_depths: Mutex<HashMap<String, usize>>,
     tenant_depths: Mutex<HashMap<String, usize>>,
     tenant_rejects: Mutex<HashMap<String, u64>>,
-}
-
-/// Power-of-two histogram of a sample set:
-/// `[(bucket_upper_bound, count), ...]` for non-empty buckets.
-fn pow2_histogram(sizes: &[f64]) -> Vec<(usize, u64)> {
-    let mut buckets: Vec<(usize, u64)> = Vec::new();
-    for &s in sizes {
-        let mut hi = 1usize;
-        while (hi as f64) < s {
-            hi *= 2;
-        }
-        match buckets.iter_mut().find(|(b, _)| *b == hi) {
-            Some((_, c)) => *c += 1,
-            None => buckets.push((hi, 1)),
-        }
-    }
-    buckets.sort_unstable_by_key(|&(b, _)| b);
-    buckets
+    calib: CalibrationBank,
 }
 
 impl Metrics {
@@ -116,31 +124,88 @@ impl Metrics {
         }
     }
 
-    /// End-to-end latency distribution (queue + service share) over the
-    /// most recent [`SAMPLE_WINDOW`] completions.
-    pub fn latency_summary(&self) -> Summary {
-        Summary::of(&self.latencies.lock().unwrap().buf)
+    /// Dispatch-side end-to-end latency distribution (queue + service).
+    pub fn latency_summary(&self) -> HistSummary {
+        self.stages.e2e_dispatch.summary()
     }
 
-    /// Distribution of dispatched batch sizes (all endpoints) over the
-    /// most recent [`SAMPLE_WINDOW`] flushes.
-    pub fn batch_size_summary(&self) -> Summary {
-        Summary::of(&self.batch_sizes.lock().unwrap().buf)
+    /// Wait-side end-to-end latency distribution: submit → the caller's
+    /// ticket observed the response. The gap between this and
+    /// [`latency_summary`](Metrics::latency_summary) is response-channel
+    /// + waiter-wakeup time, invisible to the dispatcher.
+    pub fn wait_latency_summary(&self) -> HistSummary {
+        self.stages.e2e_wait.summary()
+    }
+
+    /// Queue-wait distribution (admission → flush drain).
+    pub fn queue_summary(&self) -> HistSummary {
+        self.stages.queue.summary()
+    }
+
+    /// Per-request engine service-time distribution.
+    pub fn service_summary(&self) -> HistSummary {
+        self.stages.service.summary()
+    }
+
+    /// The global stage histogram set (exporters iterate this).
+    pub fn stage_times(&self) -> &StageTimes {
+        &self.stages
+    }
+
+    /// One tenant's stage histogram set, creating it on first use.
+    /// Endpoints resolve this once at construction, so per-request
+    /// recording never touches the tenant map.
+    pub fn tenant_stages(&self, tenant: &str) -> Arc<StageTimes> {
+        let mut t = self.tenants.lock().unwrap();
+        if let Some(s) = t.get(tenant) {
+            return s.clone();
+        }
+        let s = Arc::new(StageTimes::default());
+        t.insert(tenant.to_string(), s.clone());
+        s
+    }
+
+    /// Snapshot of every tenant's stage set, sorted by tenant name
+    /// (deterministic export order).
+    pub fn tenants(&self) -> Vec<(String, Arc<StageTimes>)> {
+        let mut v: Vec<(String, Arc<StageTimes>)> = self
+            .tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// One tenant's dispatch-side end-to-end summary.
+    pub fn tenant_latency_summary(&self, tenant: &str) -> Option<HistSummary> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .map(|s| s.e2e_dispatch.summary())
+    }
+
+    /// Distribution of dispatched batch sizes (all endpoints).
+    pub fn batch_size_summary(&self) -> HistSummary {
+        self.batch_sizes.summary()
     }
 
     /// Power-of-two histogram of dispatched batch sizes.
     pub fn batch_histogram(&self) -> Vec<(usize, u64)> {
-        pow2_histogram(&self.batch_sizes.lock().unwrap().buf)
+        self.batch_sizes.to_vec()
     }
 
     /// Distribution of coalesced `run_batch` sizes on pinned endpoints.
-    pub fn coalesced_summary(&self) -> Summary {
-        Summary::of(&self.coalesced_sizes.lock().unwrap().buf)
+    pub fn coalesced_summary(&self) -> HistSummary {
+        self.coalesced_sizes.summary()
     }
 
     /// Power-of-two histogram of coalesced `run_batch` sizes.
     pub fn coalesced_histogram(&self) -> Vec<(usize, u64)> {
-        pow2_histogram(&self.coalesced_sizes.lock().unwrap().buf)
+        self.coalesced_sizes.to_vec()
     }
 
     /// Current queued depth of one model's pending requests (summed over
@@ -190,23 +255,48 @@ impl Metrics {
         self.tenant_rejects.lock().unwrap().clone()
     }
 
+    /// Take accumulated perfmodel calibration records, clearing the bank.
+    pub fn drain_calibration(&self) -> Vec<CalibrationRecord> {
+        self.calib.drain()
+    }
+
+    /// Copy accumulated calibration records without clearing.
+    pub fn calibration_snapshot(&self) -> Vec<CalibrationRecord> {
+        self.calib.snapshot()
+    }
+
     pub(crate) fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(size as f64);
+        self.batch_sizes.record(size);
     }
 
     pub(crate) fn record_coalesced(&self, size: usize) {
         self.pinned_dispatches.fetch_add(1, Ordering::Relaxed);
-        self.coalesced_sizes.lock().unwrap().push(size as f64);
+        self.coalesced_sizes.record(size);
     }
 
-    pub(crate) fn record_latency(&self, seconds: f64) {
-        self.latencies.lock().unwrap().push(seconds);
+    /// One request completed on the dispatch side: fold its queue wait
+    /// and service share into the global + tenant stage histograms.
+    pub(crate) fn record_request(&self, tenant: &StageTimes, queue_s: f64, service_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.stages.queue.record_secs(queue_s);
+        self.stages.service.record_secs(service_s);
+        self.stages.e2e_dispatch.record_secs(queue_s + service_s);
+        tenant.queue.record_secs(queue_s);
+        tenant.service.record_secs(service_s);
+        tenant.e2e_dispatch.record_secs(queue_s + service_s);
     }
 
-    #[cfg(test)]
-    fn latency_count(&self) -> usize {
-        self.latencies.lock().unwrap().buf.len()
+    /// One caller observed its response (`Ticket` wait side).
+    pub(crate) fn record_wait(&self, tenant: &StageTimes, total_s: f64) {
+        self.stages.e2e_wait.record_secs(total_s);
+        tenant.e2e_wait.record_secs(total_s);
+    }
+
+    /// One dispatch's measured engine time, folded into the perfmodel
+    /// calibration bank.
+    pub(crate) fn record_calibration(&self, key: CalibKey, graphs: usize, service_secs: f64) {
+        self.calib.record(key, graphs, service_secs);
     }
 
     /// One request entered an admission queue.
@@ -302,17 +392,56 @@ mod tests {
     }
 
     #[test]
-    fn sample_windows_are_bounded() {
+    fn histograms_keep_the_tail_without_sample_windows() {
+        // the old 65536-sample windows evicted the tail under sustained
+        // traffic; histograms count everything in O(1) memory
         let m = Metrics::default();
-        for i in 0..(SAMPLE_WINDOW + 100) {
-            m.record_latency(i as f64);
+        let t = m.tenant_stages("acme");
+        m.record_request(&t, 0.0, 1e-4); // 100µs
+        for _ in 0..100_000 {
+            m.record_request(&t, 0.0, 1e-3); // 1ms steady state
         }
-        assert_eq!(m.latency_count(), SAMPLE_WINDOW, "window must not grow");
+        m.record_request(&t, 0.0, 0.5); // one 500ms outlier
         let s = m.latency_summary();
-        assert_eq!(s.n, SAMPLE_WINDOW);
-        // the oldest 100 samples were overwritten by the newest 100
-        assert_eq!(s.max, (SAMPLE_WINDOW + 99) as f64);
-        assert!(s.min >= 100.0, "oldest samples evicted, min {}", s.min);
+        assert_eq!(s.n, 100_002, "every completion counted, none evicted");
+        assert!((s.max - 0.5).abs() < 1e-9, "outlier retained: {}", s.max);
+        assert!(s.min <= 1.1e-4, "early sample retained: {}", s.min);
+        assert!(s.p50 >= 0.8e-3 && s.p50 <= 1.2e-3, "p50 {}", s.p50);
+        assert!(s.p999 <= 2e-3, "p999 {} dominated by steady state", s.p999);
+    }
+
+    #[test]
+    fn wait_side_and_dispatch_side_latencies_are_split() {
+        let m = Metrics::default();
+        let t = m.tenant_stages("acme");
+        m.record_request(&t, 1e-3, 2e-3); // dispatch-side: 3ms
+        m.record_wait(&t, 4e-3); // wait-side observed 4ms
+        assert_eq!(m.latency_summary().n, 1);
+        assert_eq!(m.wait_latency_summary().n, 1);
+        assert!(m.wait_latency_summary().mean > m.latency_summary().mean);
+        assert!((m.queue_summary().mean - 1e-3).abs() < 1e-8);
+        assert!((m.service_summary().mean - 2e-3).abs() < 1e-8);
+    }
+
+    #[test]
+    fn tenant_stage_sets_are_isolated_and_mergeable() {
+        let m = Metrics::default();
+        let a = m.tenant_stages("acme");
+        let u = m.tenant_stages("umbrella");
+        assert!(Arc::ptr_eq(&a, &m.tenant_stages("acme")), "cached handle");
+        m.record_request(&a, 0.0, 1e-3);
+        m.record_request(&a, 0.0, 1e-3);
+        m.record_request(&u, 0.0, 5e-3);
+        assert_eq!(m.tenant_latency_summary("acme").unwrap().n, 2);
+        assert_eq!(m.tenant_latency_summary("umbrella").unwrap().n, 1);
+        assert!(m.tenant_latency_summary("nobody").is_none());
+        // tenant histograms merge into a fleet view
+        let fleet = Histogram::new();
+        for (_, st) in m.tenants() {
+            fleet.merge_from(&st.e2e_dispatch);
+        }
+        assert_eq!(fleet.count(), 3);
+        assert_eq!(fleet.summary(), m.latency_summary());
     }
 
     #[test]
@@ -326,5 +455,27 @@ mod tests {
         assert_eq!(m.batch_histogram(), vec![(4, 1), (8, 1)]);
         assert_eq!(m.coalesced_histogram(), vec![(8, 1)]);
         assert_eq!(m.coalesced_summary().n, 1);
+    }
+
+    #[test]
+    fn calibration_flows_through_the_bank() {
+        use crate::model::{ConvType, Numerics};
+        let m = Metrics::default();
+        let key = CalibKey {
+            conv: ConvType::Gcn,
+            numerics: Numerics::Float,
+            sharded: false,
+            k: 1,
+            nodes_log2: 10,
+            edges_log2: 12,
+        };
+        m.record_calibration(key, 8, 0.004);
+        m.record_calibration(key, 8, 0.004);
+        let snap = m.calibration_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].dispatches, 2);
+        let drained = m.drain_calibration();
+        assert_eq!(drained, snap);
+        assert!(m.calibration_snapshot().is_empty());
     }
 }

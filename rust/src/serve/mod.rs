@@ -61,9 +61,10 @@ mod metrics;
 mod registry;
 mod scheduler;
 
-pub use metrics::Metrics;
+pub use metrics::{Metrics, StageTimes};
 pub use registry::SessionKey;
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
@@ -71,7 +72,12 @@ use std::time::Duration;
 
 use crate::coordinator::{BackendSpec, PlanCache};
 use crate::graph::Graph;
+use crate::obs::calib::CalibrationRecord;
+use crate::obs::clock;
+use crate::obs::export::{self, PromWriter};
+use crate::obs::span::{Span, TraceSink};
 use crate::session::{Session, SessionBuilder};
+use crate::util::json::Json;
 use crate::util::pool::ServiceHandle;
 
 use registry::SessionRegistry;
@@ -157,21 +163,74 @@ impl std::error::Error for ServeError {}
 /// A streaming response handle: submission returns immediately, the
 /// result (or a typed error) arrives on the ticket. Dropping a ticket
 /// abandons the response, never the request — the flush still runs.
+///
+/// A ticket carries its **admission timestamp**: the first successful
+/// response it observes is recorded as *wait-side* end-to-end latency
+/// (submit → caller saw the result), which includes response-channel
+/// and waiter-wakeup time the dispatcher cannot see. Compare
+/// [`Metrics::wait_latency_summary`] against
+/// [`Metrics::latency_summary`] for the split.
 #[derive(Debug)]
 pub struct Ticket {
     rx: Receiver<Result<Response, ServeError>>,
+    /// [`clock::now_ns`] at admission (0 for failed/untracked tickets)
+    admit_ns: u64,
+    /// where to record the wait-side latency (global + tenant)
+    track: Option<(Arc<Metrics>, Arc<StageTimes>)>,
+    /// first-success guard so repeated polls record exactly once
+    observed: Cell<bool>,
 }
 
 impl Ticket {
-    fn new(rx: Receiver<Result<Response, ServeError>>) -> Ticket {
-        Ticket { rx }
+    /// A live ticket recording wait-side latency on first success.
+    pub(crate) fn tracked(
+        rx: Receiver<Result<Response, ServeError>>,
+        metrics: Arc<Metrics>,
+        tenant: Arc<StageTimes>,
+        admit_ns: u64,
+    ) -> Ticket {
+        Ticket {
+            rx,
+            admit_ns,
+            track: Some((metrics, tenant)),
+            observed: Cell::new(false),
+        }
     }
 
     /// A ticket that already failed (facade routing errors).
     pub(crate) fn failed(e: ServeError) -> Ticket {
         let (tx, rx) = channel();
         let _ = tx.send(Err(e));
-        Ticket { rx }
+        Ticket {
+            rx,
+            admit_ns: 0,
+            track: None,
+            observed: Cell::new(false),
+        }
+    }
+
+    /// The admission timestamp ([`clock::now_ns`] domain; 0 when the
+    /// ticket never reached admission).
+    pub fn admitted_ns(&self) -> u64 {
+        self.admit_ns
+    }
+
+    /// Seconds this request has been in flight since admission.
+    pub fn waited_secs(&self) -> f64 {
+        if self.admit_ns == 0 {
+            0.0
+        } else {
+            clock::secs_since(self.admit_ns)
+        }
+    }
+
+    fn observe_success(&self) {
+        if self.observed.replace(true) {
+            return;
+        }
+        if let Some((m, tenant)) = &self.track {
+            m.record_wait(tenant, clock::secs_since(self.admit_ns));
+        }
     }
 
     /// Block until the response (or its typed error) arrives. A worker
@@ -179,7 +238,12 @@ impl Ticket {
     /// never a hang.
     pub fn wait(self) -> Result<Response, ServeError> {
         match self.rx.recv() {
-            Ok(r) => r,
+            Ok(r) => {
+                if r.is_ok() {
+                    self.observe_success();
+                }
+                r
+            }
             Err(_) => Err(ServeError::Backend(
                 "the serving worker dropped the request".into(),
             )),
@@ -190,7 +254,12 @@ impl Ticket {
     /// it elapses (the request stays in flight — wait again to retry).
     pub fn wait_timeout(&self, d: Duration) -> Result<Response, ServeError> {
         match self.rx.recv_timeout(d) {
-            Ok(r) => r,
+            Ok(r) => {
+                if r.is_ok() {
+                    self.observe_success();
+                }
+                r
+            }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::Backend(
                 "the serving worker dropped the request".into(),
@@ -201,7 +270,12 @@ impl Ticket {
     /// Non-blocking poll: `None` while the request is still in flight.
     pub fn try_wait(&self) -> Option<Result<Response, ServeError>> {
         match self.rx.try_recv() {
-            Ok(r) => Some(r),
+            Ok(r) => {
+                if r.is_ok() {
+                    self.observe_success();
+                }
+                Some(r)
+            }
             Err(TryRecvError::Empty) => None,
             Err(TryRecvError::Disconnected) => Some(Err(ServeError::Backend(
                 "the serving worker dropped the request".into(),
@@ -255,7 +329,9 @@ impl Endpoint {
                 x.len()
             )));
         }
-        self.inner.offer(Payload::Features(x)).map(Ticket::new)
+        self.inner
+            .offer(Payload::Features(x))
+            .map(|(rx, admit_ns)| self.ticket(rx, admit_ns))
     }
 
     /// Submit a per-request graph + features (floating endpoints only).
@@ -267,7 +343,16 @@ impl Endpoint {
         }
         self.inner
             .offer(Payload::GraphFeatures(graph, x))
-            .map(Ticket::new)
+            .map(|(rx, admit_ns)| self.ticket(rx, admit_ns))
+    }
+
+    fn ticket(&self, rx: scheduler::RespondRx, admit_ns: u64) -> Ticket {
+        Ticket::tracked(
+            rx,
+            self.inner.metrics.clone(),
+            self.inner.tenant_stages.clone(),
+            admit_ns,
+        )
     }
 
     /// Current admission-queue depth of this endpoint.
@@ -310,6 +395,11 @@ pub struct ServerConfig {
     pub idle_ttl: Option<Duration>,
     /// share an existing shard-plan cache (default: a fresh server-wide one)
     pub plan_cache: Option<Arc<PlanCache>>,
+    /// span-buffer capacity of the request-tracing sink (total across
+    /// shards; full shards drop-and-count). 0 disables tracing — the
+    /// only reason to do so is measuring tracing's own overhead, which
+    /// `bench_serve` does.
+    pub trace_capacity: usize,
 }
 
 impl Default for ServerConfig {
@@ -320,6 +410,7 @@ impl Default for ServerConfig {
             tenant_quota: 64,
             idle_ttl: None,
             plan_cache: None,
+            trace_capacity: 65_536,
         }
     }
 }
@@ -335,6 +426,7 @@ pub struct Server {
     queue_capacity: usize,
     registry: Arc<SessionRegistry>,
     metrics: Arc<Metrics>,
+    sink: Option<Arc<TraceSink>>,
     janitor: Option<Janitor>,
     down: AtomicBool,
 }
@@ -345,6 +437,7 @@ impl Server {
             Some(c) => Metrics::with_plan_cache(c),
             None => Metrics::default(),
         });
+        let sink = (cfg.trace_capacity > 0).then(|| Arc::new(TraceSink::new(cfg.trace_capacity)));
         let registry = Arc::new(SessionRegistry::new(cfg.tenant_quota));
         let janitor = cfg.idle_ttl.map(|ttl| {
             let stop = Arc::new((Mutex::new(false), Condvar::new()));
@@ -358,6 +451,7 @@ impl Server {
             queue_capacity: cfg.queue_capacity,
             registry,
             metrics,
+            sink,
             janitor,
             down: AtomicBool::new(false),
         }
@@ -365,6 +459,24 @@ impl Server {
 
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// The request-tracing sink (`None` when tracing is disabled).
+    pub fn trace_sink(&self) -> Option<&Arc<TraceSink>> {
+        self.sink.as_ref()
+    }
+
+    /// Take every buffered span out of the tracing sink (empty when
+    /// tracing is disabled). Consumers group by `Span::trace`.
+    pub fn drain_spans(&self) -> Vec<Span> {
+        self.sink.as_ref().map(|s| s.drain()).unwrap_or_default()
+    }
+
+    /// Take accumulated perfmodel calibration records (per workload
+    /// shape, from measured dispatch service times) — the feed for
+    /// [`crate::perfmodel::calibration::LatencyCalibrator`].
+    pub fn drain_calibration(&self) -> Vec<CalibrationRecord> {
+        self.metrics.drain_calibration()
     }
 
     /// Deploy a pinned, pre-warmed session for `tenant`. The builder must
@@ -403,6 +515,7 @@ impl Server {
             self.policy,
             self.queue_capacity,
             self.metrics.clone(),
+            self.sink.clone(),
         );
         let ep = Endpoint { inner };
         self.registry.insert(ep.clone())?;
@@ -435,6 +548,7 @@ impl Server {
             self.policy,
             self.queue_capacity,
             self.metrics.clone(),
+            self.sink.clone(),
         );
         let ep = Endpoint { inner };
         self.registry.insert(ep.clone())?;
@@ -480,6 +594,206 @@ impl Server {
         self.registry.tenant_count(tenant)
     }
 
+    /// Render the full metric surface in Prometheus text exposition
+    /// format: flow counters, depth gauges, per-stage latency
+    /// histograms (cumulative log-scale buckets), and per-tenant
+    /// per-stage p50/p95/p99/p999 quantile summaries — all backed by
+    /// the mergeable histograms in [`Metrics`], no sample vectors.
+    pub fn export_metrics(&self) -> String {
+        let m = &self.metrics;
+        let mut w = PromWriter::new();
+
+        w.family(
+            "gnnb_requests_total",
+            "counter",
+            "requests by outcome across all endpoints",
+        );
+        for (outcome, v) in [
+            ("submitted", m.submitted.load(Ordering::Relaxed)),
+            ("completed", m.completed.load(Ordering::Relaxed)),
+            ("errors", m.errors.load(Ordering::Relaxed)),
+            ("rejected", m.rejected.load(Ordering::Relaxed)),
+        ] {
+            w.sample_u64("gnnb_requests_total", &[("outcome", outcome)], v);
+        }
+
+        w.family("gnnb_batches_total", "counter", "dispatched flushes");
+        w.sample_u64("gnnb_batches_total", &[], m.batches.load(Ordering::Relaxed));
+        w.family(
+            "gnnb_pinned_dispatches_total",
+            "counter",
+            "coalesced run_batch calls on pinned endpoints",
+        );
+        w.sample_u64(
+            "gnnb_pinned_dispatches_total",
+            &[],
+            m.pinned_dispatches.load(Ordering::Relaxed),
+        );
+        w.family(
+            "gnnb_endpoints_retired_total",
+            "counter",
+            "endpoints retired explicitly",
+        );
+        w.sample_u64(
+            "gnnb_endpoints_retired_total",
+            &[],
+            m.retired.load(Ordering::Relaxed),
+        );
+        w.family(
+            "gnnb_idle_evictions_total",
+            "counter",
+            "endpoints evicted by the idle janitor",
+        );
+        w.sample_u64(
+            "gnnb_idle_evictions_total",
+            &[],
+            m.idle_evictions.load(Ordering::Relaxed),
+        );
+
+        w.family(
+            "gnnb_peak_queue_depth",
+            "gauge",
+            "highest global queued depth observed",
+        );
+        w.sample_u64(
+            "gnnb_peak_queue_depth",
+            &[],
+            m.peak_queue.load(Ordering::Relaxed) as u64,
+        );
+        w.family("gnnb_queue_depth", "gauge", "live queued depth per model");
+        for (model, d) in sorted(m.queue_depths()) {
+            w.sample_u64("gnnb_queue_depth", &[("model", &model)], d as u64);
+        }
+        w.family(
+            "gnnb_tenant_queue_depth",
+            "gauge",
+            "live queued depth per tenant",
+        );
+        for (tenant, d) in sorted(m.tenant_queue_depths()) {
+            w.sample_u64("gnnb_tenant_queue_depth", &[("tenant", &tenant)], d as u64);
+        }
+        w.family(
+            "gnnb_tenant_rejected_total",
+            "counter",
+            "admission rejections per tenant",
+        );
+        for (tenant, v) in sorted(m.rejects_by_tenant()) {
+            w.sample_u64("gnnb_tenant_rejected_total", &[("tenant", &tenant)], v);
+        }
+
+        w.family(
+            "gnnb_stage_latency_seconds",
+            "histogram",
+            "request latency per pipeline stage (queue wait, engine service, dispatch-side and wait-side end-to-end)",
+        );
+        for (stage, h) in m.stage_times().stages() {
+            w.histogram("gnnb_stage_latency_seconds", &[("stage", stage)], h);
+        }
+
+        w.family(
+            "gnnb_tenant_stage_latency_seconds",
+            "summary",
+            "per-tenant per-stage latency quantiles",
+        );
+        for (tenant, st) in m.tenants() {
+            for (stage, h) in st.stages() {
+                w.quantiles(
+                    "gnnb_tenant_stage_latency_seconds",
+                    &[("tenant", &tenant), ("stage", stage)],
+                    &h.summary(),
+                );
+            }
+        }
+
+        w.family(
+            "gnnb_batch_size",
+            "summary",
+            "dispatched batch sizes (kind=all) and coalesced pinned flushes (kind=coalesced)",
+        );
+        w.quantiles("gnnb_batch_size", &[("kind", "all")], &m.batch_size_summary());
+        w.quantiles(
+            "gnnb_batch_size",
+            &[("kind", "coalesced")],
+            &m.coalesced_summary(),
+        );
+
+        if let Some(sink) = &self.sink {
+            w.family(
+                "gnnb_trace_spans_dropped_total",
+                "counter",
+                "spans discarded because a sink shard was full",
+            );
+            w.sample_u64("gnnb_trace_spans_dropped_total", &[], sink.dropped());
+            w.family(
+                "gnnb_trace_spans_buffered",
+                "gauge",
+                "spans currently buffered in the sink",
+            );
+            w.sample_u64("gnnb_trace_spans_buffered", &[], sink.len() as u64);
+        }
+        w.finish()
+    }
+
+    /// JSON snapshot of the same metric surface (plus the calibration
+    /// bank), deterministic key order — the `gnnbuilder metrics`
+    /// subcommand and the periodic dump in `gnnbuilder serve` emit this.
+    pub fn export_metrics_json(&self) -> Json {
+        let m = &self.metrics;
+        let counters = Json::obj(vec![
+            ("submitted", Json::num(m.submitted.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::num(m.completed.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::num(m.errors.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::num(m.rejected.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::num(m.batches.load(Ordering::Relaxed) as f64)),
+            (
+                "pinned_dispatches",
+                Json::num(m.pinned_dispatches.load(Ordering::Relaxed) as f64),
+            ),
+            ("retired", Json::num(m.retired.load(Ordering::Relaxed) as f64)),
+            (
+                "idle_evictions",
+                Json::num(m.idle_evictions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "peak_queue",
+                Json::num(m.peak_queue.load(Ordering::Relaxed) as f64),
+            ),
+        ]);
+        let stage_obj = |st: &StageTimes| {
+            Json::obj(
+                st.stages()
+                    .iter()
+                    .map(|(name, h)| (*name, export::summary_json(&h.summary())))
+                    .collect(),
+            )
+        };
+        let tenants = Json::obj(
+            m.tenants()
+                .iter()
+                .map(|(t, st)| (t.as_str(), stage_obj(st)))
+                .collect(),
+        );
+        let trace = match &self.sink {
+            Some(sink) => Json::obj(vec![
+                ("dropped", Json::num(sink.dropped() as f64)),
+                ("buffered", Json::num(sink.len() as f64)),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("counters", counters),
+            ("stages", stage_obj(m.stage_times())),
+            ("tenants", tenants),
+            ("batch_sizes", export::summary_json(&m.batch_size_summary())),
+            ("coalesced", export::summary_json(&m.coalesced_summary())),
+            (
+                "calibration",
+                export::calibration_json(&m.calibration_snapshot()),
+            ),
+            ("trace", trace),
+        ])
+    }
+
     /// Retire an endpoint: remove it from the registry, flush its queued
     /// work, and join its dispatcher. Idempotent; requests submitted
     /// after retirement fail with [`ServeError::Retired`].
@@ -515,6 +829,13 @@ impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Deterministic export order for label-keyed gauge/counter maps.
+fn sorted<V>(m: std::collections::HashMap<String, V>) -> Vec<(String, V)> {
+    let mut v: Vec<(String, V)> = m.into_iter().collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
 }
 
 fn janitor_loop(

@@ -30,29 +30,44 @@
 //!   pool (`run_batch` scratch slots, sharded supersteps), so a single
 //!   hot endpoint still saturates the machine.
 //!
+//! **Tracing** (see [`crate::obs::span`]): when the server carries a
+//! [`TraceSink`], every admitted request opens a trace — an `admit`
+//! root span stamped on the caller's thread, a `queue` span closed at
+//! flush drain, and a `dispatch` span over the engine call. A coalesced
+//! flush runs the engine once for many requests, so the first traced
+//! request of each flush is the **carrier**: its trace additionally
+//! gets the `flush` span and parents the per-layer / per-shard kernel
+//! spans the engine emits via [`TraceCtx`]. All timestamps come from
+//! [`clock::now_ns`] — `u64` stamps that cross threads as plain
+//! integers. Measured engine time also feeds the perfmodel calibration
+//! bank keyed by the session's workload shape.
+//!
 //! Floating endpoints (requests carry their own graph — the legacy
 //! coordinator path and PJRT replicas) share the same admission + flush
 //! machinery; only the executor differs: jobs are packed into one
 //! [`GraphBatch`] arena and handed to
 //! [`Backend::infer_batch`](crate::coordinator::Backend). The backend is
 //! constructed *on* the dispatcher thread via its factory (PJRT handles
-//! are not `Send`), exactly like the old per-model worker.
+//! are not `Send`), exactly like the old per-model worker. Floating
+//! traces carry `admit` → `queue` → `dispatch` (the boxed backend has
+//! no kernel-stage visibility).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
 
 use anyhow::anyhow;
 
 use crate::coordinator::{Backend, BackendFactory};
 use crate::graph::{Graph, GraphBatch};
+use crate::obs::clock;
+use crate::obs::span::{Span, SpanId, Stage, TraceCtx, TraceId, TraceSink, NO_PARENT};
 use crate::session::Session;
 use crate::util::pool::ServiceHandle;
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, StageTimes};
 use super::registry::SessionKey;
 use super::{BatchPolicy, Response, ServeError};
 
@@ -69,10 +84,17 @@ pub(crate) enum Payload {
     GraphFeatures(Graph, Vec<f32>),
 }
 
-/// One admitted request: payload + arrival time + response channel.
+/// One admitted request: payload + admission stamp + trace identity +
+/// response channel.
 pub(crate) struct Job {
     payload: Payload,
-    submitted: Instant,
+    /// [`clock::now_ns`] at admission (`offer` entry) — queue wait is
+    /// measured from submit, not from flush
+    submitted_ns: u64,
+    /// 0 when the endpoint is untraced
+    trace: TraceId,
+    /// the admit root span's id (0 when untraced)
+    admit_span: SpanId,
     tx: RespondTx,
 }
 
@@ -103,9 +125,16 @@ pub(crate) struct EndpointInner {
     pub(crate) policy: BatchPolicy,
     pub(crate) capacity: usize,
     pub(crate) metrics: Arc<Metrics>,
+    /// this tenant's stage histograms, resolved once so per-request
+    /// recording never touches the tenant map
+    pub(crate) tenant_stages: Arc<StageTimes>,
+    /// the server's span sink (`None` = tracing disabled)
+    pub(crate) sink: Option<Arc<TraceSink>>,
     /// flushes dispatched by this endpoint (pinned: `run_batch` calls)
     pub(crate) dispatches: AtomicU64,
-    last_used: Mutex<Instant>,
+    /// [`clock::now_ns`] of the last submit/flush (idle-eviction gauge;
+    /// `Relaxed` — a stale read only shifts eviction by one janitor tick)
+    last_used_ns: AtomicU64,
     state: Mutex<QueueState>,
     ready: Condvar,
     pub(crate) worker: ServiceHandle,
@@ -118,20 +147,24 @@ impl EndpointInner {
         mut policy: BatchPolicy,
         capacity: usize,
         metrics: Arc<Metrics>,
+        sink: Option<Arc<TraceSink>>,
     ) -> Arc<EndpointInner> {
         // max_batch == 0 would make the size trigger (len >= 0) fire
         // before the closed/empty exit in next_batch is ever reached —
         // an empty-flush busy spin that also deadlocks shutdown. Clamp.
         policy.max_batch = policy.max_batch.max(1);
         let name = format!("gnnb-serve/{}/{}", key.tenant, key.model);
+        let tenant_stages = metrics.tenant_stages(&key.tenant);
         Arc::new(EndpointInner {
             key,
             session,
             policy,
             capacity,
             metrics,
+            tenant_stages,
+            sink,
             dispatches: AtomicU64::new(0),
-            last_used: Mutex::new(Instant::now()),
+            last_used_ns: AtomicU64::new(clock::now_ns()),
             state: Mutex::new(QueueState {
                 q: VecDeque::new(),
                 closed: None,
@@ -143,7 +176,10 @@ impl EndpointInner {
     }
 
     /// Admit one request, or reject with a typed error. Never blocks.
-    pub(crate) fn offer(&self, payload: Payload) -> Result<RespondRx, ServeError> {
+    /// On success returns the response channel and the admission stamp
+    /// (the `Ticket` measures wait-side latency from it).
+    pub(crate) fn offer(&self, payload: Payload) -> Result<(RespondRx, u64), ServeError> {
+        let admit_ns = clock::now_ns();
         let mut s = self.state.lock().unwrap();
         match s.closed {
             Some(CloseReason::Retired) => return Err(ServeError::Retired),
@@ -164,10 +200,16 @@ impl EndpointInner {
                 depth,
             });
         }
+        let (trace, admit_span) = match &self.sink {
+            Some(sink) => (sink.begin_trace(), sink.next_span_id()),
+            None => (0, 0),
+        };
         let (tx, rx) = channel();
         s.q.push_back(Job {
             payload,
-            submitted: Instant::now(),
+            submitted_ns: admit_ns,
+            trace,
+            admit_span,
             tx,
         });
         // gauge updates happen under the queue lock so admit/drain
@@ -175,9 +217,21 @@ impl EndpointInner {
         // nothing acquires the queue lock while holding them)
         self.metrics.record_admit(&self.key.model, &self.key.tenant);
         drop(s);
-        *self.last_used.lock().unwrap() = Instant::now();
+        // the admit span covers validation + queue push, root of the trace
+        if let Some(sink) = &self.sink {
+            sink.push(Span {
+                trace,
+                id: admit_span,
+                parent: NO_PARENT,
+                stage: Stage::Admit,
+                start_ns: admit_ns,
+                end_ns: clock::now_ns(),
+                meta: 0,
+            });
+        }
+        self.touch();
         self.ready.notify_all();
-        Ok(rx)
+        Ok((rx, admit_ns))
     }
 
     /// Block until a flush is due (size or deadline), then drain up to
@@ -197,7 +251,7 @@ impl EndpointInner {
             }
             match s.q.front() {
                 Some(oldest) => {
-                    let age = oldest.submitted.elapsed();
+                    let age = clock::ns_to_duration(clock::ns_since(oldest.submitted_ns));
                     if age >= self.policy.max_wait {
                         break;
                     }
@@ -253,11 +307,12 @@ impl EndpointInner {
             return false;
         }
         drop(s);
-        self.last_used.lock().unwrap().elapsed() >= ttl
+        let idle_ns = clock::ns_since(self.last_used_ns.load(Ordering::Relaxed));
+        clock::ns_to_duration(idle_ns) >= ttl
     }
 
     fn touch(&self) {
-        *self.last_used.lock().unwrap() = Instant::now();
+        self.last_used_ns.store(clock::now_ns(), Ordering::Relaxed);
     }
 }
 
@@ -273,14 +328,30 @@ pub(crate) fn pinned_loop(inner: Arc<EndpointInner>) {
     }
 }
 
+/// Per-request metadata a pinned flush keeps after moving features out.
+struct PinMeta {
+    submitted_ns: u64,
+    queued_s: f64,
+    trace: TraceId,
+    admit_span: SpanId,
+    tx: RespondTx,
+}
+
 fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
     let m = &inner.metrics;
+    let flush_start = clock::now_ns();
     let mut xs: Vec<Vec<f32>> = Vec::with_capacity(batch.len());
-    let mut meta: Vec<(f64, RespondTx)> = Vec::with_capacity(batch.len());
+    let mut meta: Vec<PinMeta> = Vec::with_capacity(batch.len());
     for job in batch {
         match job.payload {
             Payload::Features(x) => {
-                meta.push((job.submitted.elapsed().as_secs_f64(), job.tx));
+                meta.push(PinMeta {
+                    submitted_ns: job.submitted_ns,
+                    queued_s: clock::ns_to_secs(flush_start.saturating_sub(job.submitted_ns)),
+                    trace: job.trace,
+                    admit_span: job.admit_span,
+                    tx: job.tx,
+                });
                 xs.push(x);
             }
             // offer() guards this; defensive so a routing bug degrades to
@@ -300,17 +371,78 @@ fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
     m.record_batch(n);
     m.record_coalesced(n);
     inner.dispatches.fetch_add(1, Ordering::Relaxed);
-    let t0 = Instant::now();
-    let out = catch_unwind(AssertUnwindSafe(|| session.run_batch(&xs)));
-    let service = t0.elapsed().as_secs_f64() / n as f64;
+    // queue spans: admission → this drain, per traced request
+    if let Some(sink) = &inner.sink {
+        for pm in &meta {
+            if pm.trace != 0 {
+                sink.record(
+                    pm.trace,
+                    pm.admit_span,
+                    Stage::Queue,
+                    pm.submitted_ns,
+                    flush_start,
+                    0,
+                );
+            }
+        }
+    }
+    // the first traced request carries the flush span and the engine's
+    // kernel subtree; span ids are allocated up front so the engine can
+    // parent on the dispatch span while it is still open
+    let carrier = meta
+        .iter()
+        .find(|pm| pm.trace != 0)
+        .map(|pm| (pm.trace, pm.admit_span));
+    let ids = match (&inner.sink, carrier) {
+        (Some(sink), Some((trace, admit))) => {
+            Some((sink, trace, admit, sink.next_span_id(), sink.next_span_id()))
+        }
+        _ => None,
+    };
+    let ctx: Option<TraceCtx<'_>> = ids.map(|(sink, trace, _, _, disp)| TraceCtx {
+        sink: sink.as_ref(),
+        trace,
+        parent: disp,
+    });
+    let t0 = clock::now_ns();
+    let out = catch_unwind(AssertUnwindSafe(|| session.run_batch_traced(&xs, ctx)));
+    let t1 = clock::now_ns();
+    let total_service = clock::ns_to_secs(t1.saturating_sub(t0));
+    let service = total_service / n as f64;
+    if let Some((sink, trace, admit, flush_id, disp_id)) = ids {
+        sink.push(Span {
+            trace,
+            id: flush_id,
+            parent: admit,
+            stage: Stage::Flush,
+            start_ns: flush_start,
+            end_ns: t1,
+            meta: n as u64,
+        });
+        sink.push(Span {
+            trace,
+            id: disp_id,
+            parent: flush_id,
+            stage: Stage::Dispatch,
+            start_ns: t0,
+            end_ns: t1,
+            meta: n as u64,
+        });
+        // riders still get their own dispatch span under their admit root
+        for pm in &meta {
+            if pm.trace != 0 && pm.trace != trace {
+                sink.record(pm.trace, pm.admit_span, Stage::Dispatch, t0, t1, n as u64);
+            }
+        }
+    }
     match out {
         Ok(Ok(ys)) if ys.len() == n => {
-            for ((qs, tx), y) in meta.into_iter().zip(ys) {
-                m.completed.fetch_add(1, Ordering::Relaxed);
-                m.record_latency(qs + service);
-                let _ = tx.send(Ok(Response {
+            m.record_calibration(session.calib_key(), n, total_service);
+            for (pm, y) in meta.into_iter().zip(ys) {
+                m.record_request(&inner.tenant_stages, pm.queued_s, service);
+                let _ = pm.tx.send(Ok(Response {
                     output: y,
-                    queue_seconds: qs,
+                    queue_seconds: pm.queued_s,
                     service_seconds: service,
                     batch_size: n,
                 }));
@@ -318,16 +450,20 @@ fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
         }
         Ok(Ok(ys)) => fail_all(
             m,
-            meta,
+            meta.into_iter().map(|pm| pm.tx),
             ServeError::Backend(format!(
                 "session returned {} results for a {n}-request flush",
                 ys.len()
             )),
         ),
-        Ok(Err(e)) => fail_all(m, meta, ServeError::Backend(e.to_string())),
+        Ok(Err(e)) => fail_all(
+            m,
+            meta.into_iter().map(|pm| pm.tx),
+            ServeError::Backend(e.to_string()),
+        ),
         Err(p) => fail_all(
             m,
-            meta,
+            meta.into_iter().map(|pm| pm.tx),
             ServeError::Backend(format!("serving worker panicked: {}", panic_msg(&p))),
         ),
     }
@@ -367,19 +503,34 @@ struct FloatJob {
     graph: Graph,
     x: Vec<f32>,
     queued: f64,
+    trace: TraceId,
+    admit_span: SpanId,
     tx: RespondTx,
 }
 
 fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>) {
     let m = &inner.metrics;
+    let flush_start = clock::now_ns();
     let mut jobs: Vec<FloatJob> = Vec::with_capacity(batch.len());
     for job in batch {
         match job.payload {
             Payload::GraphFeatures(graph, x) => {
+                if let (Some(sink), true) = (&inner.sink, job.trace != 0) {
+                    sink.record(
+                        job.trace,
+                        job.admit_span,
+                        Stage::Queue,
+                        job.submitted_ns,
+                        flush_start,
+                        0,
+                    );
+                }
                 jobs.push(FloatJob {
                     graph,
                     x,
-                    queued: job.submitted.elapsed().as_secs_f64(),
+                    queued: clock::ns_to_secs(flush_start.saturating_sub(job.submitted_ns)),
+                    trace: job.trace,
+                    admit_span: job.admit_span,
                     tx: job.tx,
                 });
             }
@@ -399,10 +550,20 @@ fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>)
     inner.dispatches.fetch_add(1, Ordering::Relaxed);
     // pack the flush into one arena; backends consume views
     let packed = GraphBatch::pack(jobs.iter().map(|j| (&j.graph, j.x.as_slice())));
-    let t0 = Instant::now();
+    let t0 = clock::now_ns();
     let out = catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&packed)));
     drop(packed);
-    let service = t0.elapsed().as_secs_f64() / n as f64;
+    let t1 = clock::now_ns();
+    let service = clock::ns_to_secs(t1.saturating_sub(t0)) / n as f64;
+    // a boxed backend exposes no kernel stages: every traced request gets
+    // a dispatch span under its own admit root
+    if let Some(sink) = &inner.sink {
+        for j in &jobs {
+            if j.trace != 0 {
+                sink.record(j.trace, j.admit_span, Stage::Dispatch, t0, t1, n as u64);
+            }
+        }
+    }
     match out {
         Ok(mut results) => {
             // enforce the trait's length contract so a misbehaving backend
@@ -417,8 +578,7 @@ fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>)
             for (job, result) in jobs.into_iter().zip(results) {
                 match result {
                     Ok(output) => {
-                        m.completed.fetch_add(1, Ordering::Relaxed);
-                        m.record_latency(job.queued + service);
+                        m.record_request(&inner.tenant_stages, job.queued, service);
                         let _ = job.tx.send(Ok(Response {
                             output,
                             queue_seconds: job.queued,
@@ -447,8 +607,8 @@ fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>)
     inner.touch();
 }
 
-fn fail_all(m: &Metrics, meta: Vec<(f64, RespondTx)>, e: ServeError) {
-    for (_, tx) in meta {
+fn fail_all(m: &Metrics, txs: impl IntoIterator<Item = RespondTx>, e: ServeError) {
+    for tx in txs {
         m.errors.fetch_add(1, Ordering::Relaxed);
         let _ = tx.send(Err(e.clone()));
     }

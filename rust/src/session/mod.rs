@@ -47,6 +47,8 @@ use crate::coordinator::{PlanCache, ShardStats};
 use crate::engine::{Engine, Mode, Workspace};
 use crate::graph::{Graph, GraphBatch, GraphView};
 use crate::model::{FixedPointFormat, Numerics};
+use crate::obs::calib::CalibKey;
+use crate::obs::span::TraceCtx;
 use crate::partition::{adaptive_k, topology_hash, ShardedGraph};
 
 pub use crate::engine::MathMode;
@@ -475,11 +477,21 @@ impl Session {
     /// One inference over the deployed graph. `x` is
     /// `num_nodes * graph_input_dim` node features.
     pub fn run(&self, x: &[f32]) -> Result<Vec<f32>> {
+        self.run_with(x, None)
+    }
+
+    /// One forward on the resolved path, optionally traced (kernel spans
+    /// parented under the serving layer's dispatch span).
+    fn run_with(&self, x: &[f32], ctx: Option<TraceCtx<'_>>) -> Result<Vec<f32>> {
         match &self.path {
-            Path::Whole { .. } => self.engine.run_one(self.graph.view(), x, self.mode, &self.ws),
+            Path::Whole { .. } => {
+                self.engine
+                    .run_one_traced(self.graph.view(), x, self.mode, &self.ws, ctx)
+            }
             Path::Sharded { .. } => {
                 let sg = self.shard_plan_or_build();
-                self.engine.sharded_run(&sg, x, self.mode, &self.ws)
+                self.engine
+                    .sharded_run_traced(&sg, x, self.mode, &self.ws, ctx)
             }
         }
     }
@@ -491,16 +503,47 @@ impl Session {
     /// slots, `Single` runs serially, `Sharded` runs each set through the
     /// (internally parallel) partitioned forward.
     pub fn run_batch<S: AsRef<[f32]> + Sync>(&self, xs: &[S]) -> Result<Vec<Vec<f32>>> {
+        self.run_batch_traced(xs, None)
+    }
+
+    /// [`Session::run_batch`] with an optional trace context (the serving
+    /// scheduler's carrier-request hook). One representative pass — the
+    /// first feature set — emits kernel spans; outputs are identical to
+    /// the untraced call on every path.
+    pub(crate) fn run_batch_traced<S: AsRef<[f32]> + Sync>(
+        &self,
+        xs: &[S],
+        ctx: Option<TraceCtx<'_>>,
+    ) -> Result<Vec<Vec<f32>>> {
         match &self.path {
             Path::Whole { parallel_batch: true } => self
                 .engine
-                .run_many(self.graph.view(), xs, self.mode, &self.ws)
+                .run_many_traced(self.graph.view(), xs, self.mode, &self.ws, ctx)
                 .into_iter()
                 .collect(),
-            Path::Whole { parallel_batch: false } => {
-                xs.iter().map(|x| self.run(x.as_ref())).collect()
-            }
-            Path::Sharded { .. } => xs.iter().map(|x| self.run(x.as_ref())).collect(),
+            Path::Whole { parallel_batch: false } | Path::Sharded { .. } => xs
+                .iter()
+                .enumerate()
+                .map(|(i, x)| self.run_with(x.as_ref(), if i == 0 { ctx } else { None }))
+                .collect(),
+        }
+    }
+
+    /// The workload-shape key this session's dispatches calibrate under
+    /// ([`crate::obs::calib`]): conv type, resolved numerics, resolved
+    /// execution path, and the deployed graph's log₂ size buckets.
+    pub fn calib_key(&self) -> CalibKey {
+        let (sharded, k) = match self.resolved_path() {
+            ResolvedPath::Whole => (false, 1),
+            ResolvedPath::Sharded { k } => (true, k),
+        };
+        CalibKey {
+            conv: self.engine.cfg.gnn_conv,
+            numerics: self.numerics,
+            sharded,
+            k,
+            nodes_log2: CalibKey::log2_bucket(self.graph.num_nodes()),
+            edges_log2: CalibKey::log2_bucket(self.graph.num_edges()),
         }
     }
 

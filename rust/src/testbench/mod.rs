@@ -14,7 +14,7 @@
 //! cells of one precision must report identical error statistics — the
 //! suites below assert exactly that.
 
-use std::time::Instant;
+use crate::obs::clock;
 
 use anyhow::Result;
 
@@ -87,9 +87,9 @@ fn compare(
             graph: Graph::from_coo(gold.num_nodes, &pairs),
             x: &gold.x,
         };
-        let t0 = Instant::now();
+        let t0 = clock::now_ns();
         outputs.push(run(&case)?);
-        times.push(t0.elapsed().as_secs_f64());
+        times.push(clock::secs_since(t0));
     }
     Ok(report_from_outputs(implementation, outputs.iter(), vecs, &times))
 }
@@ -153,7 +153,7 @@ pub fn run_engine_with_policy(
             .graph(graph)
             .build()?;
         session.prepare(); // sharded cells partition outside the timed region
-        let t0 = Instant::now();
+        let t0 = clock::now_ns();
         let out = if batched {
             // drive the parallel feature-batch runner even for one set
             let mut ys = session.run_batch(std::slice::from_ref(&gold.x))?;
@@ -161,7 +161,7 @@ pub fn run_engine_with_policy(
         } else {
             session.run(&gold.x)?
         };
-        times.push(t0.elapsed().as_secs_f64());
+        times.push(clock::secs_since(t0));
         outputs.push(out);
     }
     Ok(report_from_outputs(&label, outputs.iter(), vecs, &times))

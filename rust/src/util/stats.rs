@@ -2,8 +2,6 @@
 //! summary stats, percentiles, MAPE / geometric mean (the paper's metrics),
 //! and a tiny wallclock timer.
 
-use std::time::Instant;
-
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -113,11 +111,11 @@ impl Summary {
     }
 }
 
-/// Measure wallclock of `f` in seconds.
+/// Measure wallclock of `f` in seconds (monotonic, via [`crate::obs::clock`]).
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
-    let t0 = Instant::now();
+    let t0 = crate::obs::clock::now_ns();
     let v = f();
-    (v, t0.elapsed().as_secs_f64())
+    (v, crate::obs::clock::secs_since(t0))
 }
 
 #[cfg(test)]

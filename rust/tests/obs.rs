@@ -1,0 +1,439 @@
+//! Observability acceptance suite — end-to-end request tracing,
+//! exporter structure, and the perfmodel calibration feed.
+//!
+//! Covers the obs/ contracts through the serving front door:
+//! - span-tree well-formedness under an 8-thread submit hammer: every
+//!   span closed (`end ≥ start`), every parent exists in the same trace
+//!   and opened no later than its child, exactly one `admit` root per
+//!   trace, no cross-trace leakage, and at least one carrier trace with
+//!   the complete `admit → queue → flush → dispatch → layer → head`
+//!   chain;
+//! - the sharded path emits `shard_compute` (meta = shard index) and
+//!   `halo_exchange` supersteps under their layer spans;
+//! - `Server::export_metrics` renders structurally valid Prometheus
+//!   text with exact counts and per-tenant quantile series;
+//! - tickets record wait-side end-to-end latency exactly once;
+//! - pinned dispatches accumulate calibration records that a
+//!   `LatencyCalibrator` can absorb into correction factors.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use gnnbuilder::datasets::{self, LargeGraphStats};
+use gnnbuilder::engine::{synth_weights, Engine};
+use gnnbuilder::model::{ConvType, ModelConfig, Numerics};
+use gnnbuilder::obs::span::{Span, SpanId, Stage, TraceId, NO_PARENT};
+use gnnbuilder::obs::CalibKey;
+use gnnbuilder::perfmodel::LatencyCalibrator;
+use gnnbuilder::serve::{BatchPolicy, Server, ServerConfig};
+use gnnbuilder::session::{ExecutionPlan, Precision, Session, SessionBuilder, ShardK, ShardPolicy};
+
+const TEST_STATS: LargeGraphStats = LargeGraphStats {
+    name: "obs_test",
+    num_nodes: 1200,
+    num_edges: 5400,
+    node_dim: 16,
+    num_classes: 4,
+    task: "node_classification",
+    mean_degree: 4.5,
+};
+
+fn test_engine(name: &str, seed: u64) -> Engine {
+    let cfg = ModelConfig {
+        name: name.into(),
+        graph_input_dim: TEST_STATS.node_dim,
+        gnn_conv: ConvType::Gcn,
+        gnn_hidden_dim: 8,
+        gnn_out_dim: 6,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 6,
+        mlp_num_layers: 1,
+        output_dim: TEST_STATS.num_classes,
+        max_nodes: 2000,
+        max_edges: 20_000,
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, seed);
+    Engine::new(cfg, &weights, TEST_STATS.mean_degree).unwrap()
+}
+
+fn server_with(policy: BatchPolicy) -> Server {
+    Server::start(ServerConfig {
+        policy,
+        queue_capacity: 4096,
+        ..ServerConfig::default()
+    })
+}
+
+fn batched_builder(engine: Engine, graph: gnnbuilder::graph::Graph) -> SessionBuilder {
+    Session::builder(engine)
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Batched { workspace: 0 })
+        .graph(graph)
+}
+
+/// Verify the structural invariants every drained span set must satisfy
+/// and return the spans grouped by trace.
+fn check_well_formed(spans: &[Span]) -> HashMap<TraceId, Vec<Span>> {
+    let mut by_trace: HashMap<TraceId, Vec<Span>> = HashMap::new();
+    for s in spans {
+        assert_ne!(s.trace, 0, "span {} has no trace", s.id);
+        assert_ne!(s.id, NO_PARENT, "span id collides with NO_PARENT");
+        assert!(
+            s.end_ns >= s.start_ns,
+            "{} span {} closed before it opened ({} < {})",
+            s.stage.as_str(),
+            s.id,
+            s.end_ns,
+            s.start_ns
+        );
+        by_trace.entry(s.trace).or_default().push(*s);
+    }
+    for (trace, ss) in &by_trace {
+        let ids: HashMap<SpanId, &Span> = ss.iter().map(|s| (s.id, s)).collect();
+        assert_eq!(ids.len(), ss.len(), "duplicate span ids in trace {trace}");
+        let roots: Vec<&Span> = ss.iter().filter(|s| s.parent == NO_PARENT).collect();
+        assert_eq!(
+            roots.len(),
+            1,
+            "trace {trace} has {} roots (want exactly one admit)",
+            roots.len()
+        );
+        assert_eq!(roots[0].stage, Stage::Admit, "trace {trace} root is not admit");
+        for s in ss {
+            if s.parent == NO_PARENT {
+                continue;
+            }
+            // parent must live in the same trace — a parent id that
+            // resolves nowhere, or in another trace, is leakage
+            let p = ids.get(&s.parent).unwrap_or_else(|| {
+                panic!(
+                    "{} span {} in trace {trace}: parent {} not in its trace",
+                    s.stage.as_str(),
+                    s.id,
+                    s.parent
+                )
+            });
+            assert!(
+                p.start_ns <= s.start_ns,
+                "trace {trace}: {} span opened at {} before its {} parent at {}",
+                s.stage.as_str(),
+                s.start_ns,
+                p.stage.as_str(),
+                p.start_ns
+            );
+        }
+    }
+    by_trace
+}
+
+fn count_stage(ss: &[Span], stage: Stage) -> usize {
+    ss.iter().filter(|s| s.stage == stage).count()
+}
+
+/// The tentpole gate: 8 threads hammer one pinned endpoint, and every
+/// drained span tree is well-formed — closed spans, parents in-trace and
+/// opened first, one admit root per request — with at least one carrier
+/// trace holding the full admit → queue → flush → dispatch → layer →
+/// head chain, and nothing dropped.
+#[test]
+fn span_trees_stay_well_formed_under_an_eight_thread_hammer() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 1200, 7);
+    let engine = test_engine("obs_hammer", 3);
+    let server = Arc::new(server_with(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    }));
+    let ep = server
+        .deploy("acme", batched_builder(engine, ng.graph.clone()))
+        .unwrap();
+
+    let threads = 8usize;
+    let per_thread = 12usize;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let ep = ep.clone();
+            let x = ng.x.clone();
+            scope.spawn(move || {
+                for i in 0..per_thread {
+                    let jittered: Vec<f32> =
+                        x.iter().map(|v| v + (t * per_thread + i) as f32 * 0.01).collect();
+                    ep.submit(jittered).unwrap().wait().unwrap();
+                }
+            });
+        }
+    });
+
+    let sink = server.trace_sink().expect("tracing on by default");
+    assert_eq!(sink.dropped(), 0, "default capacity must absorb the hammer");
+    let spans = server.drain_spans();
+    let by_trace = check_well_formed(&spans);
+    assert_eq!(
+        by_trace.len(),
+        threads * per_thread,
+        "every request owns exactly one trace"
+    );
+
+    // every request's trace carries the admit → queue → dispatch chain
+    let mut carriers = 0;
+    let mut complete_chains = 0;
+    for (trace, ss) in &by_trace {
+        assert_eq!(count_stage(ss, Stage::Admit), 1, "trace {trace}");
+        assert_eq!(count_stage(ss, Stage::Queue), 1, "trace {trace}");
+        assert_eq!(count_stage(ss, Stage::Dispatch), 1, "trace {trace}");
+        let dispatch = ss.iter().find(|s| s.stage == Stage::Dispatch).unwrap();
+        assert!(dispatch.meta >= 1, "dispatch meta is the batch size");
+
+        let Some(flush) = ss.iter().find(|s| s.stage == Stage::Flush) else {
+            continue; // rider: the carrier of its flush holds the subtree
+        };
+        carriers += 1;
+        // carrier chain: flush under admit, dispatch under flush, the
+        // engine's layer/head spans under dispatch
+        let admit = ss.iter().find(|s| s.stage == Stage::Admit).unwrap();
+        assert_eq!(flush.parent, admit.id, "trace {trace}: flush off-root");
+        assert_eq!(dispatch.parent, flush.id, "trace {trace}: dispatch off-flush");
+        let layers: Vec<&Span> = ss.iter().filter(|s| s.stage == Stage::Layer).collect();
+        let heads: Vec<&Span> = ss.iter().filter(|s| s.stage == Stage::Head).collect();
+        if layers.is_empty() {
+            continue;
+        }
+        assert_eq!(layers.len(), 2, "trace {trace}: one span per GNN layer");
+        let mut metas: Vec<u64> = layers.iter().map(|s| s.meta).collect();
+        metas.sort_unstable();
+        assert_eq!(metas, vec![0, 1], "layer spans carry layer indices");
+        assert_eq!(heads.len(), 1, "trace {trace}: one head span");
+        for s in layers.iter().chain(heads.iter()) {
+            assert_eq!(s.parent, dispatch.id, "trace {trace}: kernel span off-dispatch");
+        }
+        complete_chains += 1;
+    }
+    assert!(carriers >= 1, "every flush elects a carrier");
+    assert!(
+        complete_chains >= 1,
+        "at least one trace holds the complete admit→…→head chain"
+    );
+    server.shutdown();
+}
+
+/// The sharded execution path emits per-shard compute supersteps and the
+/// halo exchange under their layer spans, and its dispatches land in the
+/// calibration bank under a sharded key.
+#[test]
+fn sharded_path_emits_shard_compute_and_halo_exchange_spans() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 1200, 9);
+    let engine = test_engine("obs_sharded", 5);
+    let k = 3usize;
+    let policy = ShardPolicy {
+        min_nodes: 1,
+        k: ShardK::Fixed(k),
+        seed: 11,
+    };
+    let server = server_with(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    });
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Sharded { k: policy.k, plan: None })
+                .shard_policy(policy)
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    ep.submit(ng.x.clone()).unwrap().wait().unwrap();
+
+    let spans = server.drain_spans();
+    let by_trace = check_well_formed(&spans);
+    assert_eq!(by_trace.len(), 1);
+    let ss = by_trace.into_values().next().unwrap();
+
+    let layers: Vec<&Span> = ss.iter().filter(|s| s.stage == Stage::Layer).collect();
+    assert_eq!(layers.len(), 2, "one layer span per superstep");
+    for layer in &layers {
+        let shards: Vec<&Span> = ss
+            .iter()
+            .filter(|s| s.stage == Stage::ShardCompute && s.parent == layer.id)
+            .collect();
+        assert_eq!(shards.len(), k, "layer {} shard fan-out", layer.meta);
+        let mut metas: Vec<u64> = shards.iter().map(|s| s.meta).collect();
+        metas.sort_unstable();
+        assert_eq!(
+            metas,
+            (0..k as u64).collect::<Vec<_>>(),
+            "shard_compute meta is the shard index"
+        );
+    }
+    // the final layer skips the exchange (ghosts are never read again),
+    // so a 2-layer model emits exactly one halo_exchange — under layer 0
+    let halos: Vec<&Span> = ss.iter().filter(|s| s.stage == Stage::HaloExchange).collect();
+    assert_eq!(halos.len(), 1, "L-1 exchanges for L layers");
+    let layer0 = layers.iter().find(|s| s.meta == 0).unwrap();
+    assert_eq!(halos[0].parent, layer0.id);
+    assert_eq!(halos[0].meta, 0, "halo meta is the layer index");
+    assert_eq!(count_stage(&ss, Stage::Head), 1);
+
+    let recs = server.drain_calibration();
+    assert_eq!(recs.len(), 1);
+    assert!(recs[0].key.sharded);
+    assert_eq!(recs[0].key.k, k);
+    server.shutdown();
+}
+
+/// Structural golden test of the Prometheus exporter: exact counts for
+/// the flow counters, cumulative stage histograms, per-tenant quantile
+/// summaries, sink health — and every non-comment line parses as
+/// `name{labels} value`.
+#[test]
+fn prometheus_export_is_structurally_valid_with_exact_counts() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 400, 4);
+    let engine = test_engine("obs_prom", 2);
+    let server = server_with(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    });
+    let ep = server
+        .deploy("acme", batched_builder(engine, ng.graph.clone()))
+        .unwrap();
+    let n = 24usize;
+    let tickets: Vec<_> = (0..n).map(|_| ep.submit(ng.x.clone()).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+
+    let text = server.export_metrics();
+    for needle in [
+        "# HELP gnnb_requests_total ",
+        "# TYPE gnnb_requests_total counter",
+        "gnnb_requests_total{outcome=\"submitted\"} 24\n",
+        "gnnb_requests_total{outcome=\"completed\"} 24\n",
+        "gnnb_requests_total{outcome=\"rejected\"} 0\n",
+        "# TYPE gnnb_stage_latency_seconds histogram",
+        "gnnb_stage_latency_seconds_bucket{stage=\"queue\",le=\"+Inf\"} 24\n",
+        "gnnb_stage_latency_seconds_count{stage=\"e2e_dispatch\"} 24\n",
+        // every ticket was waited on, so the wait-side series is full too
+        "gnnb_stage_latency_seconds_count{stage=\"e2e_wait\"} 24\n",
+        "# TYPE gnnb_tenant_stage_latency_seconds summary",
+        "gnnb_tenant_stage_latency_seconds{tenant=\"acme\",stage=\"service\",quantile=\"0.5\"}",
+        "gnnb_tenant_stage_latency_seconds_count{tenant=\"acme\",stage=\"e2e_wait\"} 24\n",
+        "# TYPE gnnb_batch_size summary",
+        "gnnb_trace_spans_dropped_total 0\n",
+        "gnnb_trace_spans_buffered",
+    ] {
+        assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
+    }
+
+    // structural sweep: every sample line is `name[{labels}] value`
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("sample line without a value: `{line}`")
+        });
+        assert!(series.starts_with("gnnb_"), "foreign series `{series}`");
+        if let Some(open) = series.find('{') {
+            assert!(series.ends_with('}'), "unclosed labels in `{series}`");
+            assert!(open > 0);
+        }
+        let ok = value.parse::<f64>().is_ok()
+            || matches!(value, "+Inf" | "-Inf" | "NaN");
+        assert!(ok, "unparseable value `{value}` in `{line}`");
+    }
+
+    // the JSON snapshot mirrors the same counters deterministically
+    let json = server.export_metrics_json().to_string_pretty();
+    assert!(json.contains("\"completed\": 24"));
+    assert!(json.contains("\"calibration\""));
+    server.shutdown();
+}
+
+/// Wait-side latency is recorded exactly once per ticket: the first
+/// successful observation counts, later polls of the same ticket don't.
+#[test]
+fn tickets_record_wait_side_latency_exactly_once() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 300, 6);
+    let engine = test_engine("obs_wait", 8);
+    let server = server_with(BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+    });
+    let ep = server
+        .deploy("acme", batched_builder(engine, ng.graph.clone()))
+        .unwrap();
+
+    let ticket = ep.submit(ng.x.clone()).unwrap();
+    assert!(ticket.admitted_ns() > 0, "tickets carry their admission stamp");
+    let r = ticket.wait_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r.batch_size, 1);
+    let m = server.metrics();
+    assert_eq!(m.wait_latency_summary().n, 1);
+    // the response was already consumed: a second wait on the same ticket
+    // errors and must not double-record
+    assert!(ticket.wait().is_err());
+    assert_eq!(m.wait_latency_summary().n, 1, "first-success guard");
+    assert!(m.wait_latency_summary().mean > 0.0);
+    assert_eq!(m.latency_summary().n, 1, "dispatch-side series recorded too");
+
+    // an abandoned ticket never records a wait-side sample
+    drop(ep.submit(ng.x.clone()).unwrap());
+    while m.completed.load(std::sync::atomic::Ordering::Relaxed) < 2 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(m.wait_latency_summary().n, 1, "dropped ticket observed nothing");
+    server.shutdown();
+}
+
+/// Pinned dispatches feed the calibration bank, and a drained batch of
+/// records turns into per-shape correction factors in a
+/// `LatencyCalibrator` — the serving → perfmodel feedback loop.
+#[test]
+fn calibration_records_flow_from_serving_into_the_calibrator() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 1200, 3);
+    let engine = test_engine("obs_calib", 1);
+    let server = server_with(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    });
+    let ep = server
+        .deploy("acme", batched_builder(engine, ng.graph.clone()))
+        .unwrap();
+    let n = 16usize;
+    let tickets: Vec<_> = (0..n).map(|_| ep.submit(ng.x.clone()).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+
+    let recs = server.drain_calibration();
+    assert_eq!(recs.len(), 1, "one workload shape in play");
+    let rec = &recs[0];
+    assert_eq!(rec.key.conv, ConvType::Gcn);
+    assert_eq!(rec.key.numerics, Numerics::Float);
+    assert!(!rec.key.sharded);
+    assert_eq!(rec.key.k, 1);
+    assert_eq!(rec.key.nodes_log2, CalibKey::log2_bucket(1200));
+    assert_eq!(rec.graphs, n as u64);
+    assert!(rec.dispatches >= 1 && rec.dispatches <= n as u64);
+    assert!(rec.mean_service_secs() > 0.0);
+    assert!(server.drain_calibration().is_empty(), "drain clears the bank");
+
+    // absorb into the calibrator against a deliberately-low prediction:
+    // the correction must rise above 1 and scale calibrate() accordingly
+    let mut cal = LatencyCalibrator::new(1.0);
+    let pred = rec.mean_service_secs() / 2.0;
+    cal.absorb(&recs, |_| Some(pred));
+    assert_eq!(cal.len(), 1);
+    assert!(
+        cal.correction(&rec.key) > 1.0,
+        "observed 2x the prediction → correction above 1"
+    );
+    let calibrated = cal.calibrate(&rec.key, pred);
+    assert!(
+        (calibrated - rec.mean_service_secs()).abs() < rec.mean_service_secs() * 0.05,
+        "alpha=1 jumps straight to the observed latency"
+    );
+    server.shutdown();
+}

@@ -5,7 +5,9 @@
 //! sessions at K ∈ {1, 4, 16} plus the adaptive K, times the sharded
 //! forward against the whole-graph baseline, verifies bit-identity,
 //! measures the shard-plan cache cold (partition + extraction) vs warm
-//! (memoized-hash map hit) latency, and emits `BENCH_shard.json` with
+//! (memoized-hash map hit) latency, runs a `planner_vs_auto` arm (a
+//! `Planned` session scored by the calibrated cost model against the
+//! `Auto` heuristic reference), and emits `BENCH_shard.json` with
 //! latency plus the partition quality metrics (cut-edge fraction,
 //! halo-node fraction).
 
@@ -18,6 +20,7 @@ use gnnbuilder::datasets::{self, LargeGraphStats};
 use gnnbuilder::engine::{synth_weights, Engine, Workspace};
 use gnnbuilder::model::{ConvType, ModelConfig};
 use gnnbuilder::partition::{adaptive_k, ShardedGraph};
+use gnnbuilder::planner::{PlannedPath, Planner};
 use gnnbuilder::session::{ExecutionPlan, MathMode, Precision, Session, ShardK, ShardPolicy};
 use gnnbuilder::util::json::Json;
 use gnnbuilder::util::pool;
@@ -191,7 +194,7 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
         })
         .shard_policy(policy)
         .plan_cache(cache.clone())
-        .workspace(ws)
+        .workspace(ws.clone())
         .graph(ng.graph.clone())
         .build()
         .unwrap();
@@ -219,6 +222,48 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
         cache_warm_s * 1e3,
         cache_cold_s / cache_warm_s.max(1e-9),
         whole.summary.mean / auto_run.summary.mean.max(1e-12)
+    );
+
+    // ---- calibrated planner vs the Auto heuristic ----------------------
+    // `ExecutionPlan::Planned` enumerates whole/sharded candidates, scores
+    // them under the (here uncalibrated) cost model, and picks the argmin;
+    // the report always carries the Auto reference for comparison.
+    let planner = Arc::new(Planner::default());
+    let planned_session = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Planned)
+        .shard_policy(policy)
+        .plan_cache(cache.clone())
+        .planner(planner)
+        .workspace(ws)
+        .graph(ng.graph.clone())
+        .build()
+        .unwrap();
+    let report = planned_session
+        .plan_report()
+        .expect("planned session carries a report")
+        .clone();
+    let chosen = *report.chosen();
+    let auto_ref = *report.auto_reference();
+    assert!(
+        chosen.total_secs <= auto_ref.total_secs,
+        "planner chose a plan it predicts slower than Auto"
+    );
+    let planned_out = planned_session.run(&ng.x).unwrap();
+    assert_eq!(planned_out, baseline, "planned path diverged from whole-graph");
+    let planned_run = b.run(&format!("engine_planned/{}/n{nodes}", stats.name), || {
+        planned_session.run(&ng.x).unwrap()
+    });
+    let (chosen_path, chosen_k) = match chosen.path {
+        PlannedPath::Whole => ("whole", 1usize),
+        PlannedPath::Sharded { k, .. } => ("sharded", k),
+    };
+    println!(
+        "  planner chose {chosen_path} K={chosen_k}: predicted {:.2} ms \
+         (auto ref {:.2} ms), measured speedup vs whole {:.2}x",
+        chosen.total_secs * 1e3,
+        auto_ref.total_secs * 1e3,
+        whole.summary.mean / planned_run.summary.mean.max(1e-12)
     );
 
     Json::obj(vec![
@@ -295,6 +340,26 @@ fn bench_one(b: &Bench, stats: &'static LargeGraphStats, nodes: usize) -> Json {
                         auto_k,
                     ) as f64),
                 ),
+            ]),
+        ),
+        (
+            "planner_vs_auto",
+            Json::obj(vec![
+                ("chosen_path", Json::str(chosen_path)),
+                ("chosen_k", Json::num(chosen_k as f64)),
+                ("predicted_chosen_s", Json::num(chosen.total_secs)),
+                ("predicted_auto_s", Json::num(auto_ref.total_secs)),
+                (
+                    "never_worse_predicted",
+                    Json::Bool(chosen.total_secs <= auto_ref.total_secs),
+                ),
+                ("mean_s", Json::num(planned_run.summary.mean)),
+                ("p95_s", Json::num(planned_run.summary.p95)),
+                (
+                    "speedup_vs_whole",
+                    Json::num(whole.summary.mean / planned_run.summary.mean.max(1e-12)),
+                ),
+                ("bit_identical", Json::Bool(true)),
             ]),
         ),
         ("k4_beats_k1", Json::Bool(k4 < k1)),

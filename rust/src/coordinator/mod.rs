@@ -229,8 +229,7 @@ impl Coordinator {
             policy,
             queue_capacity: usize::MAX,
             tenant_quota: usize::MAX,
-            idle_ttl: None,
-            plan_cache: None,
+            ..ServerConfig::default()
         });
         let mut endpoints = HashMap::new();
         for spec in backends {
@@ -594,13 +593,12 @@ mod tests {
             k: ShardK::Fixed(4),
             seed: 1,
         };
+        // Auto: min_nodes gates the sharded path per request (an explicit
+        // `Sharded` plan would shard unconditionally, molecules included)
         let (spec, shard_stats) = BackendSpec::session(
             Session::builder(engine.clone())
                 .precision(Precision::F32)
-                .plan(ExecutionPlan::Sharded {
-                    k: policy.k,
-                    plan: None,
-                })
+                .plan(ExecutionPlan::Auto)
                 .shard_policy(policy),
         );
         let c = Coordinator::start(vec![spec], BatchPolicy::default());
@@ -778,7 +776,10 @@ mod tests {
         );
         assert!(k >= 1 && k <= crate::util::pool::default_threads());
 
-        // a backend with Fixed(1) never routes through the sharded path
+        // an explicit Sharded plan with Fixed(1) routes through the
+        // sharded path at K = 1 — parity with a deployed build, which
+        // resolves the same config to `ResolvedPath::Sharded { k: 1 }`
+        // (min_nodes gates only `Auto`; see ShardPolicy::resolve_path)
         let cfg = ModelConfig {
             name: "fixed1".into(),
             graph_input_dim: datasets::PUBMED.node_dim,
@@ -810,8 +811,8 @@ mod tests {
                 .into_dispatcher(None, Arc::new(PlanCache::with_capacity(4)))
                 .unwrap(),
         };
-        assert_eq!(backend.d.route(&big.graph.view()), None);
-        // adaptive + molecule-sized graph also stays whole (K resolves 1)
+        assert_eq!(backend.d.route(&big.graph.view()), Some(1));
+        // adaptive + molecule-sized graph stays whole (K resolves 1)
         let tiny = datasets::gen_citation_graph(&datasets::PUBMED, 60, 1);
         let backend_auto = EngineBackend {
             d: Session::builder(engine)

@@ -162,6 +162,36 @@ pub fn pareto_front(mut cands: Vec<Candidate>) -> Vec<Candidate> {
     front
 }
 
+/// Re-rank evaluated candidates under serving-calibrated latency: each
+/// candidate's predicted latency is scaled by the correction the
+/// [`LatencyCalibrator`](crate::perfmodel::LatencyCalibrator) learned
+/// for its workload shape (`key_for` maps a candidate to the
+/// [`CalibKey`](crate::obs::calib::CalibKey) its deployment reports
+/// under; never-observed shapes pass through unchanged). Returns the
+/// candidates sorted by calibrated latency ascending — the DSE-side
+/// consumer of the planner's feedback artery: a design that looked fast
+/// under the direct-fit model but measures slow in serving sinks in the
+/// ranking.
+pub fn rerank_calibrated<F>(
+    mut cands: Vec<Candidate>,
+    cal: &crate::perfmodel::LatencyCalibrator,
+    mut key_for: F,
+) -> Vec<Candidate>
+where
+    F: FnMut(&Candidate) -> crate::obs::calib::CalibKey,
+{
+    for c in &mut cands {
+        let key = key_for(c);
+        c.pred_latency_ms = cal.calibrate(&key, c.pred_latency_ms * 1e-3) * 1e3;
+    }
+    cands.sort_by(|a, b| {
+        a.pred_latency_ms
+            .total_cmp(&b.pred_latency_ms)
+            .then_with(|| a.config.name.cmp(&b.config.name))
+    });
+    cands
+}
+
 /// Evaluate a seeded sample of candidates (for Pareto plots).
 pub fn sample_candidates(
     space: &DesignSpace,
@@ -257,6 +287,57 @@ mod tests {
             assert!(w[0].pred_latency_ms <= w[1].pred_latency_ms);
             assert!(w[0].pred_bram > w[1].pred_bram);
         }
+    }
+
+    /// A serving-measured slowdown on one workload shape re-orders the
+    /// DSE ranking; uncalibrated shapes pass through untouched.
+    #[test]
+    fn calibrated_rerank_demotes_shapes_that_measured_slow() {
+        use crate::model::{ConvType, Numerics};
+        use crate::obs::calib::{CalibKey, CalibrationRecord};
+        use crate::perfmodel::LatencyCalibrator;
+
+        let mk = |name: &str, conv: ConvType, lat: f64| Candidate {
+            config: ModelConfig {
+                name: name.into(),
+                gnn_conv: conv,
+                ..ModelConfig::default()
+            },
+            pred_latency_ms: lat,
+            pred_bram: 100.0,
+        };
+        let cands = vec![
+            mk("gcn_fast", ConvType::Gcn, 1.0),
+            mk("sage_mid", ConvType::Sage, 1.5),
+            mk("gcn_slow", ConvType::Gcn, 3.0),
+        ];
+        // one calibration shape per conv type
+        let key_of = |conv: ConvType| CalibKey {
+            conv,
+            numerics: Numerics::Float,
+            sharded: false,
+            k: 1,
+            nodes_log2: 5,
+            edges_log2: 6,
+        };
+        let mut cal = LatencyCalibrator::new(1.0);
+        // GCN designs measured 10x slower than predicted
+        cal.observe(
+            &CalibrationRecord {
+                key: key_of(ConvType::Gcn),
+                dispatches: 8,
+                graphs: 8,
+                total_service_secs: 8.0 * 10.0,
+            },
+            Some(1.0),
+        );
+        let reranked = rerank_calibrated(cands, &cal, |c| key_of(c.config.gnn_conv));
+        // 10x demotes gcn_fast (1.0 → 10.0) behind sage_mid (untouched)
+        let names: Vec<&str> = reranked.iter().map(|c| c.config.name.as_str()).collect();
+        assert_eq!(names, ["sage_mid", "gcn_fast", "gcn_slow"]);
+        assert_eq!(reranked[0].pred_latency_ms, 1.5);
+        assert!((reranked[1].pred_latency_ms - 10.0).abs() < 1e-9);
+        assert!((reranked[2].pred_latency_ms - 30.0).abs() < 1e-9);
     }
 
     #[test]

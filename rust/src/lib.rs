@@ -11,7 +11,8 @@
 //! - **L3** is this crate: the GNNBuilder framework itself — model IR
 //!   ([`model`]), HLS code generation ([`codegen`]), the accelerator
 //!   simulator ([`hls`]), direct-fit performance models ([`perfmodel`]),
-//!   design-space exploration ([`dse`]), the PJRT deployment runtime
+//!   design-space exploration ([`dse`]), the calibrated execution
+//!   planner ([`planner`]), the PJRT deployment runtime
 //!   ([`runtime`]), baselines ([`baselines`]), the fixed/float testbench
 //!   ([`testbench`]), the multi-tenant serving layer ([`serve`],
 //!   with [`coordinator`] as its legacy facade), and the observability
@@ -73,6 +74,18 @@
 //! service times aggregate into [`obs::CalibrationRecord`]s consumed by
 //! [`perfmodel::calibration`] to recalibrate the paper's latency model
 //! from live traffic.
+//!
+//! That feedback loop is closed by the [`planner`]: sessions built with
+//! [`session::ExecutionPlan::Planned`] enumerate candidate execution
+//! plans (whole-graph, plus a K-ladder × partition-seed set of sharded
+//! candidates), score each with an analytic compute model plus a
+//! halo-exchange term from the candidate's real
+//! [`partition::PlanCommStats`], apply the calibration corrections
+//! drained from serving traffic ([`serve::Server::calibrate_now`]), and
+//! pin the argmin — with the `Auto` heuristic's resolution always among
+//! the scored candidates, so a planned session never scores worse than
+//! `Auto` under the calibrated model. `gnnbuilder plan --explain`
+//! prints the scored table.
 
 pub mod baselines;
 pub mod bench;
@@ -89,6 +102,7 @@ pub mod model;
 pub mod obs;
 pub mod partition;
 pub mod perfmodel;
+pub mod planner;
 pub mod runtime;
 pub mod serve;
 pub mod session;

@@ -17,6 +17,7 @@ use gnnbuilder::model::space::DesignSpace;
 use gnnbuilder::model::{benchmark_config, ConvType, ModelConfig};
 use gnnbuilder::obs::clock;
 use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
+use gnnbuilder::planner::{PlannedPath, Planner};
 use gnnbuilder::serve::{BatchPolicy, Server, ServerConfig};
 use gnnbuilder::session::{
     ExecutionPlan, Precision, ResolvedPath, Session, ShardK, ShardPolicy,
@@ -36,6 +37,11 @@ USAGE:
                      [--conv ...] [--hidden N] [--layers N] [--seed N]
                      [--plan-cache-bytes N (0 = count-bounded cache)]
                                             (Session-driven partition + sharded inference)
+  gnnbuilder plan    [--dataset cora|pubmed|reddit] [--nodes N] [--conv ...] [--hidden N]
+                     [--layers N] [--seed N] [--explain]
+                                            (score candidate execution plans with the
+                                             calibrated cost model; --explain prints the
+                                             full scored candidate table)
   gnnbuilder serve   [--tenants N] [--requests N] [--nodes N] [--conv ...] [--hidden N]
                      [--max-batch N] [--wait-us N] [--queue-cap N] [--tenant-quota N]
                      [--seed N]              (multi-tenant micro-batched serving demo;
@@ -53,6 +59,7 @@ fn main() -> Result<()> {
         "synth" => cmd_synth(),
         "dse" => cmd_dse(),
         "shard" => cmd_shard(),
+        "plan" => cmd_plan(),
         "serve" => cmd_serve(),
         "metrics" => cmd_metrics(),
         "list" => cmd_list(),
@@ -368,6 +375,97 @@ fn cmd_shard() -> Result<()> {
     }
 }
 
+/// `gnnbuilder plan` — build a synthetic citation graph, score every
+/// candidate execution plan with the calibrated cost model, pin the
+/// argmin in a `Planned` session, and verify it answers bit-identically
+/// to the whole-graph forward.
+fn cmd_plan() -> Result<()> {
+    let args = Args::from_env(2, &["explain"])?;
+    let name = args.get_or("dataset", "pubmed");
+    let stats = datasets::large_by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown large-graph dataset `{name}`"))?;
+    let nodes = args.get_usize("nodes", 4000)?;
+    let conv = parse_conv(&args)?;
+    let hidden = args.get_usize("hidden", 64)?;
+    let layers = args.get_usize("layers", 2)?;
+    let seed = args.get_u64("seed", 2023)?;
+    args.reject_unknown()?;
+
+    println!("generating a {name}-profile citation graph at {nodes} nodes…");
+    let ng = datasets::gen_citation_graph(stats, nodes, seed);
+    let cfg = ModelConfig {
+        name: format!("plan_{}_{}", conv.as_str(), stats.name),
+        graph_input_dim: stats.node_dim,
+        gnn_conv: conv,
+        gnn_hidden_dim: hidden,
+        gnn_out_dim: hidden,
+        gnn_num_layers: layers,
+        mlp_hidden_dim: hidden,
+        mlp_num_layers: 1,
+        output_dim: ng.num_classes,
+        max_nodes: ng.graph.num_nodes,
+        max_edges: ng.graph.num_edges.max(1),
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, seed);
+    let engine = Engine::new(cfg, &weights, stats.mean_degree)?;
+
+    let planner = Arc::new(Planner::default());
+    let session = Session::builder(engine.clone())
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Planned)
+        .shard_policy(ShardPolicy { seed, ..ShardPolicy::default() })
+        .planner(planner)
+        .graph(ng.graph.clone())
+        .build()?;
+    session.prepare();
+    let report = session
+        .plan_report()
+        .expect("a Planned session always carries its report");
+    println!(
+        "scored {} candidate plans for {} nodes / {} directed edges:",
+        report.candidates().len(),
+        ng.graph.num_nodes,
+        ng.graph.num_edges
+    );
+    if args.flag("explain") {
+        print!("{}", report.render_table());
+    }
+    let chosen = report.chosen();
+    let auto = report.auto_reference();
+    match chosen.path {
+        PlannedPath::Whole => println!(
+            "chosen: whole-graph forward, predicted {:.3} ms",
+            chosen.total_secs * 1e3
+        ),
+        PlannedPath::Sharded { k, seed } => println!(
+            "chosen: sharded K={k} (seed {seed:#x}), predicted {:.3} ms \
+             ({} cut edges, {} halo slots)",
+            chosen.total_secs * 1e3,
+            chosen.cut_edges,
+            chosen.halo_nodes
+        ),
+    }
+    println!(
+        "auto reference ({}): predicted {:.3} ms | planner advantage {:.1}%",
+        auto.path.as_str(),
+        auto.total_secs * 1e3,
+        (1.0 - chosen.total_secs / auto.total_secs.max(1e-12)) * 100.0
+    );
+
+    let single = Session::builder(engine)
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Single)
+        .graph(ng.graph.clone())
+        .build()?;
+    if session.run(&ng.x)? == single.run(&ng.x)? {
+        println!("planned output bit-identical to the whole-graph forward: yes");
+        Ok(())
+    } else {
+        bail!("planned output diverged from the whole-graph forward")
+    }
+}
+
 fn cmd_serve() -> Result<()> {
     let args = Args::from_env(2, &[])?;
     let tenants = args.get_usize("tenants", 3)?;
@@ -541,6 +639,14 @@ fn cmd_serve() -> Result<()> {
         wait.p99 * 1e3,
         spans.len(),
         m.calibration_snapshot().len()
+    );
+    // fold the measured service times into the server's planner (the
+    // closed loop a long-running deployment drives from the janitor)
+    let folded = server.calibrate_now();
+    println!(
+        "calibration: {} records folded into the planner ({} live shapes)",
+        folded,
+        server.planner().calibration_len()
     );
     dump_stop.store(true, std::sync::atomic::Ordering::Relaxed);
     let _ = dumper.join();

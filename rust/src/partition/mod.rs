@@ -159,6 +159,54 @@ impl ShardPlan {
             .count();
         cut == self.cut_edges
     }
+
+    /// Exact communication stats of this plan **without extracting
+    /// shards** — what the execution planner scores candidate partitions
+    /// with. Extraction ([`Subgraph::extract`]) builds local id maps,
+    /// re-coos edges, and clones degree tables per shard; a planner
+    /// scoring a K-ladder × seed candidate set only needs the halo
+    /// volume, so this walks the in-neighbor lists once with a stamp
+    /// array (O(V + E), no allocation besides the stamp).
+    ///
+    /// `halo_nodes` counts ghost *slots* exactly like
+    /// [`ShardedGraph::halo_nodes`]: a node neighboring M foreign shards
+    /// is counted M times.
+    pub fn comm_stats(&self, g: GraphView<'_>) -> PlanCommStats {
+        assert_eq!(self.num_nodes, g.num_nodes);
+        // stamp[v] = last shard that counted v as halo; shard ids are
+        // < k ≤ n < u32::MAX, so MAX is a safe "never counted" init
+        let mut stamp = vec![u32::MAX; g.num_nodes];
+        let mut halo_nodes = 0usize;
+        for (s, nodes) in self.shards.iter().enumerate() {
+            let s32 = s as u32;
+            for &gid in nodes {
+                for &src in g.neighbors(gid as usize) {
+                    let si = src as usize;
+                    if self.owner[si] != s32 && stamp[si] != s32 {
+                        stamp[si] = s32;
+                        halo_nodes += 1;
+                    }
+                }
+            }
+        }
+        PlanCommStats {
+            cut_edges: self.cut_edges,
+            halo_nodes,
+            max_shard_nodes: self.shard_sizes().0,
+        }
+    }
+}
+
+/// Communication-relevant stats of a candidate [`ShardPlan`], computed
+/// by [`ShardPlan::comm_stats`] without shard extraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCommStats {
+    /// directed edges crossing a shard boundary
+    pub cut_edges: usize,
+    /// total ghost slots across shards (== [`ShardedGraph::halo_nodes`])
+    pub halo_nodes: usize,
+    /// owned-node count of the largest shard (critical-path compute)
+    pub max_shard_nodes: usize,
 }
 
 /// Undirected adjacency in CSR form (in-neighbors ∪ out-neighbors, with
@@ -601,6 +649,25 @@ mod tests {
         let a = partition(g.view(), 4, 7);
         let b = partition(g.view(), 4, 7);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn comm_stats_match_the_extracted_sharded_graph_exactly() {
+        let mut rng = Rng::seed_from(29);
+        for case in 0..60 {
+            let g = random_graph(&mut rng, 70, 200);
+            let k = rng.range(1, 7);
+            let plan = partition(g.view(), k, 1000 + case);
+            let stats = plan.comm_stats(g.view());
+            let sg = ShardedGraph::from_plan(g.view(), plan);
+            assert_eq!(
+                stats.halo_nodes,
+                sg.halo_nodes(),
+                "case {case}: halo mismatch"
+            );
+            assert_eq!(stats.cut_edges, sg.plan.cut_edges);
+            assert_eq!(stats.max_shard_nodes, sg.plan.shard_sizes().0);
+        }
     }
 
     #[test]

@@ -34,7 +34,23 @@ pub struct CalibCell {
     pub graphs: u64,
     /// drained records folded into this cell
     pub records: u64,
+    /// staleness weight: 1.0 right after an observation, multiplied by
+    /// the factor on every [`LatencyCalibrator::decay`] call. Below
+    /// [`STALE_FRESHNESS`] the cell's absolute `observed_secs` is no
+    /// longer trusted (hidden from [`LatencyCalibrator::observed_secs`]);
+    /// below [`EVICT_FRESHNESS`] the whole cell is dropped.
+    pub freshness: f64,
 }
+
+/// Freshness below which a cell's absolute observed latency is treated
+/// as stale: [`LatencyCalibrator::observed_secs`] returns `None` even
+/// though the (relaxing) correction is still applied.
+pub const STALE_FRESHNESS: f64 = 0.05;
+
+/// Freshness below which a decayed cell is evicted outright — its
+/// correction has relaxed to ≈1.0 anyway, so dropping it restores the
+/// cold identity behavior instead of keeping dead state around.
+pub const EVICT_FRESHNESS: f64 = 1e-3;
 
 /// Absorbs drained calibration records and maintains per-shape
 /// multiplicative correction factors for the latency model.
@@ -89,8 +105,10 @@ impl LatencyCalibrator {
             correction: 1.0,
             graphs: 0,
             records: 0,
+            freshness: 1.0,
         });
         cell.observed_secs += w * (obs - cell.observed_secs);
+        cell.freshness = 1.0;
         if let Some(pred) = predicted_secs {
             if pred > 0.0 {
                 let ratio = (obs / pred).clamp(
@@ -136,19 +154,34 @@ impl LatencyCalibrator {
         self.cells.get(key).map_or(1.0, |c| c.correction)
     }
 
-    /// EWMA of observed mean service seconds for a shape, if observed.
+    /// EWMA of observed mean service seconds for a shape, if observed
+    /// *recently*: cells whose freshness decayed below
+    /// [`STALE_FRESHNESS`] return `None` — under workload drift an
+    /// absolute latency ages out instead of being trusted forever.
     pub fn observed_secs(&self, key: &CalibKey) -> Option<f64> {
-        self.cells.get(key).map(|c| c.observed_secs)
+        self.cells
+            .get(key)
+            .filter(|c| c.freshness >= STALE_FRESHNESS)
+            .map(|c| c.observed_secs)
     }
 
     /// Relax every correction toward 1.0 by `factor` in [0, 1] — the
     /// aging hook for deployments whose workload drifts (call it on the
     /// same cadence as bank drains; 0 forgets everything, 1 keeps all).
+    ///
+    /// Observed state ages with the same factor: each cell's freshness
+    /// is multiplied by `factor`, staleness-marking its absolute
+    /// `observed_secs` below [`STALE_FRESHNESS`] and evicting the cell
+    /// entirely below [`EVICT_FRESHNESS`] — a shape that stops being
+    /// served eventually reverts to the cold identity, it does not keep
+    /// reporting latencies measured under a long-gone workload.
     pub fn decay(&mut self, factor: f64) {
         let f = factor.clamp(0.0, 1.0);
         for cell in self.cells.values_mut() {
             cell.correction = 1.0 + f * (cell.correction - 1.0);
+            cell.freshness *= f;
         }
+        self.cells.retain(|_, c| c.freshness >= EVICT_FRESHNESS);
     }
 
     /// Snapshot of every cell in deterministic shape order.
@@ -268,5 +301,41 @@ mod tests {
         only_obs.observe(&rec(1, 4, 0.004), None);
         assert_eq!(only_obs.correction(&key(1)), 1.0);
         assert_eq!(only_obs.observed_secs(&key(1)), Some(0.004));
+    }
+
+    /// Decay must age the *observed* state too, not just the correction:
+    /// a drifted workload's absolute latency goes stale, then the cell is
+    /// evicted outright — while a fresh observation resets its age.
+    #[test]
+    fn decay_staleness_marks_and_eventually_evicts_observed_state() {
+        let mut cal = LatencyCalibrator::new(1.0);
+        cal.observe(&rec(1, 4, 0.004), Some(0.002));
+        assert_eq!(cal.observed_secs(&key(1)), Some(0.004));
+
+        // a few drain-cadence decays: correction relaxes toward 1.0 and
+        // the absolute observation stops being reported as current
+        for _ in 0..6 {
+            cal.decay(0.5); // freshness 0.5^6 ≈ 0.016 < STALE_FRESHNESS
+        }
+        assert!(cal.correction(&key(1)) > 1.0, "correction still relaxing");
+        assert!(cal.correction(&key(1)) < 1.05, "correction nearly relaxed");
+        assert_eq!(
+            cal.observed_secs(&key(1)),
+            None,
+            "stale absolute latency must not be trusted"
+        );
+        assert_eq!(cal.len(), 1, "stale-but-live cell still applies its correction");
+
+        // further aging evicts the cell entirely → cold identity again
+        for _ in 0..6 {
+            cal.decay(0.5); // freshness ≈ 2.4e-4 < EVICT_FRESHNESS
+        }
+        assert!(cal.is_empty(), "fully decayed cell must be evicted");
+        assert_eq!(cal.correction(&key(1)), 1.0);
+
+        // re-observing restores freshness: the shape is current again
+        cal.observe(&rec(1, 4, 0.006), Some(0.002));
+        cal.decay(0.5);
+        assert_eq!(cal.observed_secs(&key(1)), Some(0.006));
     }
 }

@@ -1,0 +1,727 @@
+//! Calibrated cost-model execution planning.
+//!
+//! The paper's thesis is that a performance model accurate enough to
+//! rank designs (§VII: latency within ≈36 %) lets the framework *choose*
+//! instead of guess. This module applies that idea to execution-path
+//! selection, replacing the static `min_nodes` / [`adaptive_k`]
+//! heuristic for sessions that opt in via
+//! [`crate::session::ExecutionPlan::Planned`]:
+//!
+//! 1. **Enumerate** candidate plans for a deployed graph: the
+//!    whole-graph path plus sharded candidates over a K ladder around
+//!    the policy's resolution ({2, K/2, K, 2K, threads}, clamped and
+//!    deduped) × partition seeds (the policy's seed plus
+//!    [`PlannerConfig::extra_seeds`] derived ones).
+//! 2. **Score** each candidate with an analytic latency model: per-layer
+//!    compute (node transforms + edge aggregation MACs) plus, for
+//!    sharded candidates, a halo-exchange communication term derived
+//!    from the real partition's
+//!    [`ShardPlan::comm_stats`](crate::partition::ShardPlan::comm_stats)
+//!    — cut/halo
+//!    volumes of the actual candidate plan, not a density guess
+//!    (communication is the dominant partitioned-GNN cost to model, per
+//!    Guirado et al.).
+//! 3. **Calibrate** each score with the serving feedback loop: the
+//!    multiplicative per-shape corrections a [`LatencyCalibrator`]
+//!    learned from drained [`CalibrationRecord`]s, keyed by the same
+//!    [`CalibKey`] the planned session will report its own dispatches
+//!    under — so mispredicted shapes self-correct while serving, and
+//!    corrections land exactly on the scores that produced them.
+//! 4. **Pick** the argmin. The `Auto` heuristic's resolution is always
+//!    one of the scored candidates (the *auto reference*), so a planned
+//!    session never scores worse than `Auto` under the calibrated model.
+//!
+//! The absolute constants ([`PlannerConfig`]) are deliberately crude —
+//! they only need to rank paths for one graph, and the calibration loop
+//! owns absolute accuracy: `serve::Server` drains its calibration bank
+//! into a server-owned planner on the janitor/metrics cadence
+//! (`Server::calibrate_now`) and decays corrections between drains, so
+//! stale shapes relax back to the analytic model.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use crate::engine::Engine;
+use crate::graph::GraphView;
+use crate::model::{ConvType, ModelConfig, Numerics};
+use crate::obs::calib::{CalibKey, CalibrationRecord};
+use crate::partition::{adaptive_k, partition};
+use crate::perfmodel::LatencyCalibrator;
+use crate::session::ShardPolicy;
+
+/// Cost constants + search knobs for a [`Planner`].
+///
+/// The latency constants are order-of-magnitude CPU figures; they decide
+/// *rankings* (whole vs sharded, K vs 2K), while absolute accuracy comes
+/// from calibration. All scoring is deterministic.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerConfig {
+    /// seconds per multiply-accumulate in the compute term
+    pub mac_secs: f64,
+    /// seconds per exchanged feature scalar in the halo term
+    pub copy_secs: f64,
+    /// per-shard superstep overhead (fork/join + barrier), seconds per
+    /// layer
+    pub sync_secs: f64,
+    /// additional partition seeds scored per candidate K (0 = only the
+    /// policy's seed)
+    pub extra_seeds: usize,
+    /// EWMA weight of the owned [`LatencyCalibrator`]
+    pub alpha: f64,
+    /// correction decay factor applied per [`Planner::decay`] call
+    pub decay: f64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            mac_secs: 1e-9,
+            copy_secs: 4e-9,
+            sync_secs: 5e-6,
+            extra_seeds: 1,
+            alpha: 0.3,
+            decay: 0.9,
+        }
+    }
+}
+
+/// The workload shape one planning query scores under: model
+/// architecture dimensions, resolved numerics, the session's
+/// [`ShardPolicy`] (seed + the `Auto` reference), and the worker-pool
+/// width.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanContext {
+    pub conv: ConvType,
+    pub numerics: Numerics,
+    /// GNN layer count (supersteps on the sharded path)
+    pub layers: usize,
+    /// representative feature width (max of input/hidden/output dims)
+    pub width: usize,
+    /// the session's policy: partition seed + the `Auto` reference
+    pub policy: ShardPolicy,
+    /// worker-pool width — shards beyond this serialize into waves
+    pub threads: usize,
+}
+
+impl PlanContext {
+    /// Context for a model config under `numerics` and `policy`.
+    pub fn for_model(cfg: &ModelConfig, numerics: Numerics, policy: &ShardPolicy) -> PlanContext {
+        PlanContext {
+            conv: cfg.gnn_conv,
+            numerics,
+            layers: cfg.gnn_num_layers.max(1),
+            width: cfg
+                .gnn_hidden_dim
+                .max(cfg.gnn_out_dim)
+                .max(cfg.graph_input_dim)
+                .max(1),
+            policy: *policy,
+            threads: crate::util::pool::default_threads().max(1),
+        }
+    }
+
+    /// Context for a built engine (its config) — what
+    /// [`crate::session::SessionBuilder::build`] uses for `Planned`
+    /// sessions.
+    pub fn for_engine(engine: &Engine, numerics: Numerics, policy: &ShardPolicy) -> PlanContext {
+        Self::for_model(&engine.cfg, numerics, policy)
+    }
+}
+
+/// A candidate execution path, fully determined: sharded candidates pin
+/// both K and the partition seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannedPath {
+    /// whole-graph forward (with parallel `run_batch`)
+    Whole,
+    /// partitioned forward at exactly this shard count and seed
+    Sharded { k: usize, seed: u64 },
+}
+
+impl PlannedPath {
+    /// Deterministic tie-break rank: whole first, then lower K, then
+    /// lower seed — equal scores resolve to the cheaper setup.
+    fn rank(&self) -> (u8, usize, u64) {
+        match *self {
+            PlannedPath::Whole => (0, 0, 0),
+            PlannedPath::Sharded { k, seed } => (1, k, seed),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlannedPath::Whole => "whole",
+            PlannedPath::Sharded { .. } => "sharded",
+        }
+    }
+}
+
+/// One scored candidate.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoredPlan {
+    pub path: PlannedPath,
+    /// the calibration key a session running this candidate reports
+    /// under — identical to [`crate::session::Session::calib_key`] for
+    /// the built session, which is what closes the feedback loop
+    pub key: CalibKey,
+    /// predicted compute seconds (uncalibrated)
+    pub base_secs: f64,
+    /// predicted halo-exchange + superstep-sync seconds (0 for whole)
+    pub comm_secs: f64,
+    /// calibration multiplier applied (1.0 for never-observed shapes)
+    pub correction: f64,
+    /// `(base_secs + comm_secs) × correction` — the ranking score
+    pub total_secs: f64,
+    /// cross-shard directed edges of the candidate partition
+    pub cut_edges: usize,
+    /// ghost slots of the candidate partition (exact, via
+    /// [`ShardPlan::comm_stats`](crate::partition::ShardPlan::comm_stats))
+    pub halo_nodes: usize,
+}
+
+/// The scored candidate table of one planning query, sorted by
+/// calibrated total ascending — row 0 is the chosen plan.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    candidates: Vec<ScoredPlan>,
+    auto_index: usize,
+}
+
+impl PlanReport {
+    /// The argmin candidate (always present — the whole-graph path is
+    /// always enumerated).
+    pub fn chosen(&self) -> &ScoredPlan {
+        &self.candidates[0]
+    }
+
+    /// Every scored candidate, best first.
+    pub fn candidates(&self) -> &[ScoredPlan] {
+        &self.candidates
+    }
+
+    /// The candidate `ExecutionPlan::Auto` would have picked for this
+    /// graph — the planner's reference. By argmin,
+    /// `chosen().total_secs <= auto_reference().total_secs` always.
+    pub fn auto_reference(&self) -> &ScoredPlan {
+        &self.candidates[self.auto_index]
+    }
+
+    /// Render the scored table (the `plan --explain` output): one row
+    /// per candidate, best first, the chosen row marked.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<8} {:>4} {:>18} {:>10} {:>10} {:>7} {:>10} {:>8} {:>8}",
+            "path", "K", "seed", "base_ms", "comm_ms", "corr", "total_ms", "cut", "halo"
+        );
+        for (i, c) in self.candidates.iter().enumerate() {
+            let (k, seed) = match c.path {
+                PlannedPath::Whole => (1, String::from("-")),
+                PlannedPath::Sharded { k, seed } => (k, format!("{seed:#x}")),
+            };
+            let mut marks = String::new();
+            if i == 0 {
+                marks.push_str("  <- chosen");
+            }
+            if i == self.auto_index {
+                marks.push_str("  [auto]");
+            }
+            let _ = writeln!(
+                out,
+                "{:<8} {:>4} {:>18} {:>10.4} {:>10.4} {:>7.3} {:>10.4} {:>8} {:>8}{}",
+                c.path.as_str(),
+                k,
+                seed,
+                c.base_secs * 1e3,
+                c.comm_secs * 1e3,
+                c.correction,
+                c.total_secs * 1e3,
+                c.cut_edges,
+                c.halo_nodes,
+                marks
+            );
+        }
+        out
+    }
+}
+
+/// The execution planner: scores candidate plans for deployed graphs and
+/// owns the [`LatencyCalibrator`] the serving layer feeds.
+///
+/// Shareable (`&self` API, internal mutexes): the serving layer owns one
+/// planner per [`crate::serve::Server`], injects it into every deployed
+/// builder, and drains calibration records into it on the janitor /
+/// metrics cadence — so every `Planned` deployment plans under the
+/// corrections learned from the whole server's live traffic.
+#[derive(Debug)]
+pub struct Planner {
+    cfg: PlannerConfig,
+    cal: Mutex<LatencyCalibrator>,
+    /// contexts seen by `plan()`, keyed by (conv, numerics): lets
+    /// `absorb` reconstruct a prediction for a drained record's key
+    /// without the graph in hand
+    contexts: Mutex<HashMap<(ConvType, Numerics), PlanContext>>,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Planner::new(PlannerConfig::default())
+    }
+}
+
+impl Planner {
+    pub fn new(cfg: PlannerConfig) -> Planner {
+        Planner {
+            cfg,
+            cal: Mutex::new(LatencyCalibrator::new(cfg.alpha)),
+            contexts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    /// Predicted whole-graph seconds for `nodes`/`edges` (f64 so the
+    /// same formula serves graphs and bucket-midpoint reconstructions).
+    fn whole_secs(&self, ctx: &PlanContext, nodes: f64, edges: f64) -> f64 {
+        let w = ctx.width as f64;
+        ctx.layers as f64 * (nodes * w * w + edges * w) * self.cfg.mac_secs
+    }
+
+    /// Predicted (compute, communication) seconds for a K-way candidate
+    /// with `halo` total ghost slots and `max_shard` owned nodes in the
+    /// largest shard.
+    fn sharded_secs(
+        &self,
+        ctx: &PlanContext,
+        edges: f64,
+        k: usize,
+        halo: f64,
+        max_shard: f64,
+    ) -> (f64, f64) {
+        let w = ctx.width as f64;
+        let kf = k as f64;
+        let layers = ctx.layers as f64;
+        // shards beyond the pool width serialize into waves
+        let lanes = ctx.threads.min(k).max(1) as f64;
+        let waves = (kf / lanes).ceil();
+        let per_shard = (max_shard + halo / kf) * w * w + (edges / kf) * w;
+        let base = layers * per_shard * self.cfg.mac_secs * waves;
+        let comm = layers * (halo * w * self.cfg.copy_secs + kf * self.cfg.sync_secs);
+        (base, comm)
+    }
+
+    /// The calibration key a session executing `path` over a graph of
+    /// this size reports under — constructed exactly like
+    /// [`crate::session::Session::calib_key`].
+    fn key_for(&self, ctx: &PlanContext, nodes: usize, edges: usize, path: PlannedPath) -> CalibKey {
+        let (sharded, k) = match path {
+            PlannedPath::Whole => (false, 1),
+            PlannedPath::Sharded { k, .. } => (true, k),
+        };
+        CalibKey {
+            conv: ctx.conv,
+            numerics: ctx.numerics,
+            sharded,
+            k,
+            nodes_log2: CalibKey::log2_bucket(nodes),
+            edges_log2: CalibKey::log2_bucket(edges),
+        }
+    }
+
+    /// Uncalibrated prediction for a drained record's key, reconstructed
+    /// from the key's log₂ buckets (midpoint sizes; halo approximated —
+    /// the real plan is gone by drain time). This is the denominator of
+    /// the correction ratio, so it only needs to be *consistent*, which
+    /// it is: the same formulas score live candidates.
+    pub fn predict_for_key(&self, ctx: &PlanContext, key: &CalibKey) -> f64 {
+        let nodes = 1.5 * (1u64 << key.nodes_log2.min(62)) as f64;
+        let edges = 1.5 * (1u64 << key.edges_log2.min(62)) as f64;
+        if !key.sharded || key.k <= 1 {
+            self.whole_secs(ctx, nodes, edges)
+        } else {
+            let k = key.k;
+            let halo = nodes * 0.25 * (((k - 1) as f64).min(4.0));
+            let (base, comm) = self.sharded_secs(ctx, edges, k, halo, nodes / k as f64);
+            base + comm
+        }
+    }
+
+    /// Score every candidate for `g` under `ctx` and return the sorted
+    /// table. Deterministic: candidate partitions come from seeded
+    /// [`partition`] runs, scores from closed-form costs, corrections
+    /// from the current calibrator state.
+    pub fn plan(&self, ctx: &PlanContext, g: GraphView<'_>) -> PlanReport {
+        self.contexts
+            .lock()
+            .unwrap()
+            .insert((ctx.conv, ctx.numerics), *ctx);
+
+        let n = g.num_nodes;
+        let e = g.num_edges;
+        let nf = n as f64;
+        let ef = e as f64;
+        let cal = self.cal.lock().unwrap();
+        let mut candidates: Vec<ScoredPlan> = Vec::new();
+
+        // whole-graph candidate — per-request latency of the batched
+        // path is identical (batch parallelism is across feature sets),
+        // so "whole" covers both and the built path keeps parallel
+        // run_batch
+        let whole_key = self.key_for(ctx, n, e, PlannedPath::Whole);
+        let whole_base = self.whole_secs(ctx, nf, ef);
+        let whole_corr = cal.correction(&whole_key);
+        candidates.push(ScoredPlan {
+            path: PlannedPath::Whole,
+            key: whole_key,
+            base_secs: whole_base,
+            comm_secs: 0.0,
+            correction: whole_corr,
+            total_secs: whole_base * whole_corr,
+            cut_edges: 0,
+            halo_nodes: 0,
+        });
+
+        // K ladder around the policy resolution (which the `Auto`
+        // reference uses), clamped the way the partitioner clamps
+        let base_k = ctx.policy.resolve_k(&g).clamp(1, n.max(1));
+        let mut ks = vec![
+            2,
+            base_k / 2,
+            base_k,
+            base_k * 2,
+            ctx.threads,
+            adaptive_k(n, e, ctx.threads),
+        ];
+        ks.retain(|&k| k >= 2 && k <= n);
+        ks.sort_unstable();
+        ks.dedup();
+        let seeds: Vec<u64> = (0..=self.cfg.extra_seeds as u64)
+            .map(|i| ctx.policy.seed ^ i.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .collect();
+
+        for &k in &ks {
+            for &seed in &seeds {
+                let plan = partition(g, k, seed);
+                let stats = plan.comm_stats(g);
+                let (base, comm) = self.sharded_secs(
+                    ctx,
+                    ef,
+                    k,
+                    stats.halo_nodes as f64,
+                    stats.max_shard_nodes as f64,
+                );
+                let path = PlannedPath::Sharded { k, seed };
+                let key = self.key_for(ctx, n, e, path);
+                let corr = cal.correction(&key);
+                candidates.push(ScoredPlan {
+                    path,
+                    key,
+                    base_secs: base,
+                    comm_secs: comm,
+                    correction: corr,
+                    total_secs: (base + comm) * corr,
+                    cut_edges: stats.cut_edges,
+                    halo_nodes: stats.halo_nodes,
+                });
+            }
+        }
+        drop(cal);
+
+        // what Auto would have picked — guaranteed to be in the set:
+        // its Whole resolution is candidate 0, and its sharded
+        // resolution is (base_k, policy seed), which the ladder includes
+        let auto_path = match ctx.policy.resolve_path(&crate::session::ExecutionPlan::Auto, &g) {
+            crate::session::ResolvedPath::Whole => PlannedPath::Whole,
+            crate::session::ResolvedPath::Sharded { k } => PlannedPath::Sharded {
+                k,
+                seed: ctx.policy.seed,
+            },
+        };
+
+        candidates.sort_by(|a, b| {
+            a.total_secs
+                .total_cmp(&b.total_secs)
+                .then_with(|| a.path.rank().cmp(&b.path.rank()))
+        });
+        let auto_index = candidates
+            .iter()
+            .position(|c| c.path == auto_path)
+            .expect("the Auto reference is always enumerated");
+        PlanReport {
+            candidates,
+            auto_index,
+        }
+    }
+
+    /// Fold drained calibration records into the owned calibrator,
+    /// resolving per-key predictions from the contexts this planner has
+    /// planned under (records for never-planned shapes update only the
+    /// observed EWMA). Returns the number of records folded.
+    pub fn absorb(&self, records: &[CalibrationRecord]) -> usize {
+        if records.is_empty() {
+            return 0;
+        }
+        let contexts = self.contexts.lock().unwrap();
+        let mut cal = self.cal.lock().unwrap();
+        for rec in records {
+            let pred = contexts
+                .get(&(rec.key.conv, rec.key.numerics))
+                .map(|ctx| self.predict_for_key(ctx, &rec.key));
+            cal.observe(rec, pred);
+        }
+        records.len()
+    }
+
+    /// Age the calibrator by the configured decay factor — call on the
+    /// same cadence as [`Planner::absorb`] so corrections for shapes
+    /// that stopped being served relax back to 1.0 (and their stale
+    /// observed state ages out).
+    pub fn decay(&self) {
+        self.cal.lock().unwrap().decay(self.cfg.decay);
+    }
+
+    /// The current correction multiplier for a shape (1.0 when cold).
+    pub fn correction(&self, key: &CalibKey) -> f64 {
+        self.cal.lock().unwrap().correction(key)
+    }
+
+    /// Number of live calibration cells.
+    pub fn calibration_len(&self) -> usize {
+        self.cal.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::session::{ExecutionPlan, Precision, ResolvedPath, ShardK};
+    use crate::util::rng::Rng;
+
+    fn test_ctx(policy: ShardPolicy) -> PlanContext {
+        PlanContext {
+            conv: ConvType::Gcn,
+            numerics: Numerics::Float,
+            layers: 2,
+            width: 16,
+            policy,
+            threads: 8,
+        }
+    }
+
+    fn random_graph(seed: u64, n: usize, avg_deg: usize) -> Graph {
+        let mut rng = Rng::seed_from(seed);
+        let edges: Vec<(u32, u32)> = (0..n * avg_deg)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+            .collect();
+        Graph::from_coo(n, &edges)
+    }
+
+    #[test]
+    fn whole_wins_small_graphs_and_sharding_wins_large_ones() {
+        let planner = Planner::default();
+        let ctx = test_ctx(ShardPolicy::default());
+
+        let small = random_graph(1, 50, 3);
+        let r = planner.plan(&ctx, small.view());
+        assert_eq!(r.chosen().path, PlannedPath::Whole, "{}", r.render_table());
+
+        let big = random_graph(2, 4000, 3);
+        let r = planner.plan(&ctx, big.view());
+        assert!(
+            matches!(r.chosen().path, PlannedPath::Sharded { .. }),
+            "{}",
+            r.render_table()
+        );
+        // the report is internally consistent: sorted, and the chosen
+        // row's score is reflected in the table
+        let totals: Vec<f64> = r.candidates().iter().map(|c| c.total_secs).collect();
+        assert!(totals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn chosen_never_scores_worse_than_the_auto_reference() {
+        let planner = Planner::default();
+        for (seed, n, deg, min_nodes, k) in [
+            (3u64, 40usize, 2usize, 4096usize, ShardK::Auto),
+            (4, 900, 3, 256, ShardK::Auto),
+            (5, 2000, 4, 256, ShardK::Fixed(4)),
+            (6, 2000, 4, 4096, ShardK::Fixed(3)),
+            (7, 12, 1, 1, ShardK::Fixed(64)),
+        ] {
+            let policy = ShardPolicy {
+                min_nodes,
+                k,
+                seed: 0x5eed,
+            };
+            let ctx = test_ctx(policy);
+            let g = random_graph(seed, n, deg);
+            let r = planner.plan(&ctx, g.view());
+            assert!(
+                r.chosen().total_secs <= r.auto_reference().total_secs + 1e-15,
+                "planner chose a worse plan than Auto: n={n}\n{}",
+                r.render_table()
+            );
+            // and the auto reference really is what Auto resolves to
+            let auto = policy.resolve_path(&ExecutionPlan::Auto, &g.view());
+            match (auto, r.auto_reference().path) {
+                (ResolvedPath::Whole, PlannedPath::Whole) => {}
+                (ResolvedPath::Sharded { k: a }, PlannedPath::Sharded { k: b, seed })
+                    if a == b && seed == policy.seed => {}
+                (a, b) => panic!("auto reference mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let planner = Planner::default();
+        let ctx = test_ctx(ShardPolicy::default());
+        let g = random_graph(9, 1500, 3);
+        let a = planner.plan(&ctx, g.view());
+        let b = planner.plan(&ctx, g.view());
+        assert_eq!(a.candidates().len(), b.candidates().len());
+        for (x, y) in a.candidates().iter().zip(b.candidates()) {
+            assert_eq!(x.path, y.path);
+            assert_eq!(x.total_secs, y.total_secs);
+            assert_eq!(x.halo_nodes, y.halo_nodes);
+        }
+    }
+
+    #[test]
+    fn degenerate_graphs_plan_whole() {
+        let planner = Planner::default();
+        let ctx = test_ctx(ShardPolicy::default());
+        for g in [Graph::from_coo(0, &[]), Graph::from_coo(1, &[(0, 0)])] {
+            let r = planner.plan(&ctx, g.view());
+            assert_eq!(r.chosen().path, PlannedPath::Whole);
+            assert_eq!(r.candidates().len(), 1, "no sharded candidates fit");
+        }
+    }
+
+    /// The closed loop, planner-side: an injected misprediction flips
+    /// the choice away from the (otherwise winning) sharded path, then
+    /// drain-cadence decay relaxes the correction until the original
+    /// choice returns.
+    #[test]
+    fn injected_misprediction_flips_the_choice_and_decay_restores_it() {
+        let planner = Planner::new(PlannerConfig {
+            alpha: 1.0, // jump straight to observed ratios
+            ..PlannerConfig::default()
+        });
+        let ctx = test_ctx(ShardPolicy::default());
+        let g = random_graph(10, 4000, 3);
+
+        let before = planner.plan(&ctx, g.view());
+        assert!(
+            matches!(before.chosen().path, PlannedPath::Sharded { .. }),
+            "{}",
+            before.render_table()
+        );
+
+        // report every sharded shape as 50x slower than predicted
+        let records: Vec<CalibrationRecord> = before
+            .candidates()
+            .iter()
+            .filter(|c| c.key.sharded)
+            .map(|c| CalibrationRecord {
+                key: c.key,
+                dispatches: 4,
+                graphs: 4,
+                total_service_secs: 4.0 * 50.0 * planner.predict_for_key(&ctx, &c.key),
+            })
+            .collect();
+        assert!(planner.absorb(&records) > 0);
+        let flipped = planner.plan(&ctx, g.view());
+        assert_eq!(
+            flipped.chosen().path,
+            PlannedPath::Whole,
+            "a 50x observed slowdown must flip the choice:\n{}",
+            flipped.render_table()
+        );
+
+        // decay on the drain cadence: corrections relax toward 1.0 and
+        // the cost model's original ranking returns
+        for _ in 0..200 {
+            planner.decay();
+        }
+        let restored = planner.plan(&ctx, g.view());
+        assert_eq!(restored.chosen().path, before.chosen().path);
+        assert_eq!(
+            planner.calibration_len(),
+            0,
+            "fully decayed cells are evicted"
+        );
+    }
+
+    /// Records for shapes the planner never planned update only observed
+    /// state — no prediction exists, so no correction is fabricated.
+    #[test]
+    fn absorb_skips_corrections_for_unknown_shapes() {
+        let planner = Planner::default();
+        let key = CalibKey {
+            conv: ConvType::Sage,
+            numerics: Numerics::Fixed,
+            sharded: true,
+            k: 4,
+            nodes_log2: 11,
+            edges_log2: 12,
+        };
+        let rec = CalibrationRecord {
+            key,
+            dispatches: 1,
+            graphs: 1,
+            total_service_secs: 0.5,
+        };
+        assert_eq!(planner.absorb(&[rec]), 1);
+        assert_eq!(planner.correction(&key), 1.0);
+    }
+
+    /// The glue that closes the loop end-to-end: a `Planned` session's
+    /// own `calib_key()` equals the chosen candidate's key, so serving
+    /// records land exactly on the score that selected the plan.
+    #[test]
+    fn planned_session_calib_key_matches_the_chosen_candidate() {
+        use crate::engine::{synth_weights, Engine};
+        use crate::session::Session;
+        use std::sync::Arc;
+
+        let cfg = ModelConfig {
+            name: "planner_glue".into(),
+            graph_input_dim: 5,
+            gnn_conv: ConvType::Sage,
+            gnn_hidden_dim: 6,
+            gnn_out_dim: 5,
+            gnn_num_layers: 2,
+            mlp_hidden_dim: 4,
+            mlp_num_layers: 1,
+            output_dim: 2,
+            max_nodes: 2000,
+            max_edges: 16000,
+            ..ModelConfig::default()
+        };
+        let weights = synth_weights(&cfg, 3);
+        let engine = Engine::new(cfg, &weights, 2.2).unwrap();
+        let planner = Arc::new(Planner::default());
+        let g = random_graph(11, 600, 3);
+        let session = Session::builder(engine)
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Planned)
+            .planner(planner.clone())
+            .graph(g)
+            .build()
+            .unwrap();
+        let report = session.plan_report().expect("planned sessions carry a report");
+        assert_eq!(session.calib_key(), report.chosen().key);
+        match report.chosen().path {
+            PlannedPath::Whole => assert_eq!(session.resolved_path(), ResolvedPath::Whole),
+            PlannedPath::Sharded { k, .. } => {
+                assert_eq!(session.resolved_path(), ResolvedPath::Sharded { k });
+            }
+        }
+    }
+}

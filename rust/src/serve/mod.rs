@@ -76,6 +76,7 @@ use crate::obs::calib::CalibrationRecord;
 use crate::obs::clock;
 use crate::obs::export::{self, PromWriter};
 use crate::obs::span::{Span, TraceSink};
+use crate::planner::Planner;
 use crate::session::{Session, SessionBuilder};
 use crate::util::json::Json;
 use crate::util::pool::ServiceHandle;
@@ -395,6 +396,12 @@ pub struct ServerConfig {
     pub idle_ttl: Option<Duration>,
     /// share an existing shard-plan cache (default: a fresh server-wide one)
     pub plan_cache: Option<Arc<PlanCache>>,
+    /// share an existing execution planner (default: a fresh server-owned
+    /// one). Every deployed builder without its own planner gets this one
+    /// injected, and [`Server::calibrate_now`] drains serving calibration
+    /// into it — so `ExecutionPlan::Planned` deployments plan under the
+    /// corrections learned from the whole server's live traffic.
+    pub planner: Option<Arc<Planner>>,
     /// span-buffer capacity of the request-tracing sink (total across
     /// shards; full shards drop-and-count). 0 disables tracing — the
     /// only reason to do so is measuring tracing's own overhead, which
@@ -410,6 +417,7 @@ impl Default for ServerConfig {
             tenant_quota: 64,
             idle_ttl: None,
             plan_cache: None,
+            planner: None,
             trace_capacity: 65_536,
         }
     }
@@ -427,6 +435,7 @@ pub struct Server {
     registry: Arc<SessionRegistry>,
     metrics: Arc<Metrics>,
     sink: Option<Arc<TraceSink>>,
+    planner: Arc<Planner>,
     janitor: Option<Janitor>,
     down: AtomicBool,
 }
@@ -439,11 +448,13 @@ impl Server {
         });
         let sink = (cfg.trace_capacity > 0).then(|| Arc::new(TraceSink::new(cfg.trace_capacity)));
         let registry = Arc::new(SessionRegistry::new(cfg.tenant_quota));
+        let planner = cfg.planner.unwrap_or_default();
         let janitor = cfg.idle_ttl.map(|ttl| {
             let stop = Arc::new((Mutex::new(false), Condvar::new()));
             let (s, r, m) = (stop.clone(), registry.clone(), metrics.clone());
+            let p = planner.clone();
             let handle =
-                ServiceHandle::spawn("gnnb-serve-janitor", move || janitor_loop(s, r, m, ttl));
+                ServiceHandle::spawn("gnnb-serve-janitor", move || janitor_loop(s, r, m, p, ttl));
             Janitor { stop, handle }
         });
         Server {
@@ -452,6 +463,7 @@ impl Server {
             registry,
             metrics,
             sink,
+            planner,
             janitor,
             down: AtomicBool::new(false),
         }
@@ -479,6 +491,25 @@ impl Server {
         self.metrics.drain_calibration()
     }
 
+    /// The server-owned execution planner (injected into every deployed
+    /// builder that does not carry its own).
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
+    }
+
+    /// One calibration cycle: drain the bank's accumulated per-shape
+    /// records into the server's planner, then decay its corrections —
+    /// the closed loop of the calibrated execution planner. The janitor
+    /// runs this on its eviction cadence when `idle_ttl` is set; callers
+    /// running their own metrics loop (`gnnbuilder serve`, tests) call
+    /// it directly. Returns the number of records folded.
+    pub fn calibrate_now(&self) -> usize {
+        let records = self.metrics.drain_calibration();
+        let folded = self.planner.absorb(&records);
+        self.planner.decay();
+        folded
+    }
+
     /// Deploy a pinned, pre-warmed session for `tenant`. The builder must
     /// carry a deployed graph (`.graph(g)`); the server injects its
     /// shared plan cache unless the builder pinned one, builds the
@@ -496,6 +527,10 @@ impl Server {
         self.registry.quota_check(tenant)?;
         if builder.plan_cache.is_none() {
             builder.plan_cache = Some(self.metrics.plan_cache.clone());
+        }
+        // `Planned` builds score under the server's calibrated planner
+        if builder.planner.is_none() {
+            builder.planner = Some(self.planner.clone());
         }
         let session = Arc::new(
             builder
@@ -842,6 +877,7 @@ fn janitor_loop(
     stop: Arc<(Mutex<bool>, Condvar)>,
     registry: Arc<SessionRegistry>,
     metrics: Arc<Metrics>,
+    planner: Arc<Planner>,
     ttl: Duration,
 ) {
     let interval = (ttl / 4).clamp(Duration::from_millis(5), Duration::from_secs(1));
@@ -864,5 +900,10 @@ fn janitor_loop(
             ep.close_and_join(CloseReason::Retired);
             metrics.idle_evictions.fetch_add(1, Ordering::Relaxed);
         }
+        // the calibration drain rides the same cadence: fold measured
+        // service times into the planner, then age its corrections
+        let records = metrics.drain_calibration();
+        planner.absorb(&records);
+        planner.decay();
     }
 }

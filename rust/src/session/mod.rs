@@ -50,6 +50,7 @@ use crate::model::{FixedPointFormat, Numerics};
 use crate::obs::calib::CalibKey;
 use crate::obs::span::TraceCtx;
 use crate::partition::{adaptive_k, topology_hash, ShardedGraph};
+use crate::planner::{PlanContext, PlanReport, PlannedPath, Planner};
 
 pub use crate::engine::MathMode;
 
@@ -129,6 +130,54 @@ impl ShardPolicy {
             }
         }
     }
+
+    /// THE path-selection implementation: resolve an [`ExecutionPlan`]
+    /// against one graph under this policy. Deployed builds
+    /// ([`SessionBuilder::build`]) and floating per-request dispatch (the
+    /// coordinator's `Dispatcher`) both delegate here, so the same
+    /// builder config can never resolve to different execution paths
+    /// depending on how it was lowered.
+    ///
+    /// The contract:
+    /// - `Single` / `Batched` never shard.
+    /// - explicit `Sharded` shards **unconditionally** at the resolved,
+    ///   clamped K (`min_nodes` does not apply — the caller asked for
+    ///   shards); `ShardK::Auto` inside it defers to this policy's `k`.
+    /// - `Auto` shards only at or above `min_nodes` and only when the
+    ///   resolved K exceeds 1.
+    /// - `Planned` resolves through a [`crate::planner::Planner`] at
+    ///   build time; without one (this policy-only helper) it falls back
+    ///   to the `Auto` heuristic, which is also the planner's reference
+    ///   candidate.
+    ///
+    /// K is always clamped to `[1, num_nodes.max(1)]` — exactly like the
+    /// partitioner — so the resolved path, the plan-cache key, and the
+    /// built plan agree on K even when a pinned `Fixed(k)` exceeds the
+    /// node count.
+    pub fn resolve_path(&self, plan: &ExecutionPlan, g: &GraphView<'_>) -> ResolvedPath {
+        let clamp = |k: usize| k.clamp(1, g.num_nodes.max(1));
+        match plan {
+            ExecutionPlan::Single | ExecutionPlan::Batched { .. } => ResolvedPath::Whole,
+            ExecutionPlan::Sharded { k, .. } => {
+                let k = match k {
+                    ShardK::Fixed(v) => clamp(*v),
+                    ShardK::Auto => clamp(self.resolve_k(g)),
+                };
+                ResolvedPath::Sharded { k }
+            }
+            ExecutionPlan::Auto | ExecutionPlan::Planned => {
+                if g.num_nodes < self.min_nodes {
+                    return ResolvedPath::Whole;
+                }
+                let k = clamp(self.resolve_k(g));
+                if k > 1 {
+                    ResolvedPath::Sharded { k }
+                } else {
+                    ResolvedPath::Whole
+                }
+            }
+        }
+    }
 }
 
 /// Execution-path selection. Every path is bit-identical for a given
@@ -160,6 +209,16 @@ pub enum ExecutionPlan {
     /// parallel `run_batch`.
     #[default]
     Auto,
+    /// Let the calibrated cost model choose ([`crate::planner`]): at
+    /// build time the planner enumerates candidate paths — whole-graph
+    /// plus sharded at a K ladder around [`adaptive_k`], across
+    /// partition seeds — scores each with predicted compute plus
+    /// halo-exchange communication, applies the serving-calibration
+    /// corrections, and pins the argmin. Opt-in: `Auto` stays the
+    /// default and is always one of the scored candidates, so a planned
+    /// session never scores worse than `Auto` under the model. Requires
+    /// a deployed graph (rejected by per-request dispatchers).
+    Planned,
 }
 
 impl ExecutionPlan {
@@ -169,6 +228,7 @@ impl ExecutionPlan {
             ExecutionPlan::Batched { .. } => "batched",
             ExecutionPlan::Sharded { .. } => "sharded",
             ExecutionPlan::Auto => "auto",
+            ExecutionPlan::Planned => "planned",
         }
     }
 }
@@ -254,6 +314,7 @@ pub struct SessionBuilder {
     pub(crate) plan_cache: Option<Arc<PlanCache>>,
     pub(crate) workspace: Option<Arc<Workspace>>,
     pub(crate) graph: Option<DeployedGraph>,
+    pub(crate) planner: Option<Arc<Planner>>,
 }
 
 impl SessionBuilder {
@@ -307,6 +368,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Share an execution planner consulted by
+    /// [`ExecutionPlan::Planned`] builds. Sharing matters: the serving
+    /// layer drains calibration records into *its* planner, so sessions
+    /// built against the same instance get corrections learned from live
+    /// traffic. Default: a private cold planner (uncalibrated scores).
+    pub fn planner(mut self, p: Arc<Planner>) -> Self {
+        self.planner = Some(p);
+        self
+    }
+
     /// Resolved numerics + quantization format of this builder.
     fn resolve_numerics(&self) -> (Numerics, Option<FixedPointFormat>) {
         let numerics = self.precision.resolve(self.engine.cfg.numerics);
@@ -346,55 +417,66 @@ impl SessionBuilder {
         let plans = self
             .plan_cache
             .unwrap_or_else(|| Arc::new(PlanCache::default()));
-        // clamp like the partitioner does, so resolved_path(), the plan
-        // cache key, and the built plan always agree on K
-        let clamp = |k: usize| k.clamp(1, graph.num_nodes().max(1));
+        // the chosen partitioner seed: the policy's, unless the planner
+        // picks a sharded candidate under a different seed below
+        let mut seed = self.policy.seed;
+        let mut plan_report = None;
         let path = match &self.plan {
             ExecutionPlan::Single => Path::Whole {
                 parallel_batch: false,
             },
-            ExecutionPlan::Batched { .. } => Path::Whole {
-                parallel_batch: true,
-            },
-            ExecutionPlan::Sharded { k, plan } => {
-                let k = match k {
-                    ShardK::Fixed(v) => clamp(*v),
-                    ShardK::Auto => clamp(self.policy.resolve_k(&graph.view())),
-                };
-                let cell = OnceLock::new();
-                if let Some(p) = plan {
-                    let _ = cell.set(p.clone());
-                }
-                Path::Sharded { k, plan: cell }
-            }
-            ExecutionPlan::Auto => {
-                let v = graph.view();
-                let k = if v.num_nodes >= self.policy.min_nodes {
-                    clamp(self.policy.resolve_k(&v))
-                } else {
-                    1
-                };
-                if k > 1 {
-                    Path::Sharded {
-                        k,
-                        plan: OnceLock::new(),
-                    }
-                } else {
-                    Path::Whole {
+            // the planner scores candidates against the deployed
+            // topology and pins the argmin — `prepare()` then resolves
+            // the chosen plan eagerly like any other sharded session
+            ExecutionPlan::Planned => {
+                let planner = self.planner.clone().unwrap_or_default();
+                let ctx = PlanContext::for_engine(&self.engine, numerics, &self.policy);
+                let report = planner.plan(&ctx, graph.view());
+                let path = match report.chosen().path {
+                    PlannedPath::Whole => Path::Whole {
                         parallel_batch: true,
+                    },
+                    PlannedPath::Sharded { k, seed: s } => {
+                        seed = s;
+                        Path::Sharded {
+                            k,
+                            plan: OnceLock::new(),
+                        }
                     }
-                }
+                };
+                plan_report = Some(Arc::new(report));
+                path
             }
+            // Batched / Sharded / Auto resolve through THE shared
+            // path-selection implementation (`ShardPolicy::resolve_path`)
+            // so a deployed session and a floating dispatcher built from
+            // the same config always agree
+            plan => match self.policy.resolve_path(plan, &graph.view()) {
+                ResolvedPath::Whole => Path::Whole {
+                    parallel_batch: true,
+                },
+                ResolvedPath::Sharded { k } => {
+                    let cell = OnceLock::new();
+                    if let ExecutionPlan::Sharded {
+                        plan: Some(pinned), ..
+                    } = plan
+                    {
+                        let _ = cell.set(pinned.clone());
+                    }
+                    Path::Sharded { k, plan: cell }
+                }
+            },
         };
         Ok(Session {
             engine: self.engine,
             numerics,
             mode: Mode { q, kind: self.math },
-            seed: self.policy.seed,
+            seed,
             plans,
             ws,
             graph,
             path,
+            plan_report,
         })
     }
 
@@ -421,20 +503,22 @@ impl SessionBuilder {
                  use ExecutionPlan::Sharded {{ plan: None, .. }}"
             ));
         }
+        if matches!(self.plan, ExecutionPlan::Planned) {
+            return Err(anyhow!(
+                "ExecutionPlan::Planned requires a deployed Session (builder \
+                 .graph(..).build()) — the planner scores candidate partitions of one \
+                 deployed topology; a per-request backend would re-plan (and re-partition \
+                 K ways) per request. Use ExecutionPlan::Auto for floating dispatch"
+            ));
+        }
         let (_, q) = self.resolve_numerics();
         let mode = Mode { q, kind: self.math };
-        let mut policy = self.policy;
-        // an explicit Sharded plan pins the policy's K so per-request
-        // resolution and the plan agree on the shard count
-        if let ExecutionPlan::Sharded { k, .. } = &self.plan {
-            policy.k = *k;
-        }
         let ws = Self::resolve_workspace(self.workspace, &self.plan);
         Ok(Dispatcher {
             engine: self.engine,
             mode,
             plan: self.plan,
-            policy,
+            policy: self.policy,
             plans: self.plan_cache.unwrap_or(fallback_cache),
             ws,
             stats,
@@ -457,6 +541,7 @@ pub struct Session {
     ws: Arc<Workspace>,
     graph: DeployedGraph,
     path: Path,
+    plan_report: Option<Arc<PlanReport>>,
 }
 
 impl Session {
@@ -471,6 +556,7 @@ impl Session {
             plan_cache: None,
             workspace: None,
             graph: None,
+            planner: None,
         }
     }
 
@@ -594,6 +680,13 @@ impl Session {
         }
     }
 
+    /// The planner's scored candidate table, for sessions built with
+    /// [`ExecutionPlan::Planned`] (`None` on every other plan). The
+    /// chosen row is the path [`Session::resolved_path`] reports.
+    pub fn plan_report(&self) -> Option<&Arc<PlanReport>> {
+        self.plan_report.as_ref()
+    }
+
     /// The resolved shard plan, if the session is sharded and has run
     /// (or was built with a pinned plan).
     pub fn shard_plan(&self) -> Option<Arc<ShardedGraph>> {
@@ -642,17 +735,14 @@ pub(crate) struct Dispatcher {
 
 impl Dispatcher {
     /// Resolved shard count when this graph should take the sharded path
-    /// under the dispatcher's plan + policy.
+    /// under the dispatcher's plan + policy — a thin wrapper over
+    /// [`ShardPolicy::resolve_path`], the same implementation deployed
+    /// builds use, so the floating resolution, the plan-cache key, and
+    /// any deployed twin of this config agree on both the path and K.
     pub(crate) fn route(&self, g: &GraphView<'_>) -> Option<usize> {
-        match &self.plan {
-            ExecutionPlan::Single | ExecutionPlan::Batched { .. } => None,
-            ExecutionPlan::Sharded { .. } | ExecutionPlan::Auto => {
-                if g.num_nodes < self.policy.min_nodes {
-                    return None;
-                }
-                let k = self.policy.resolve_k(g);
-                (k > 1).then_some(k)
-            }
+        match self.policy.resolve_path(&self.plan, g) {
+            ResolvedPath::Whole => None,
+            ResolvedPath::Sharded { k } => Some(k),
         }
     }
 
@@ -998,6 +1088,139 @@ mod tests {
                     plan.as_str()
                 );
             }
+        }
+    }
+
+    /// Parity across the plan matrix (ISSUE 8): the same builder config
+    /// must resolve to the same execution path whether it is lowered
+    /// into a deployed session or a floating per-request dispatcher —
+    /// both now delegate to `ShardPolicy::resolve_path`.
+    #[test]
+    fn deployed_and_floating_path_selection_agree_across_the_plan_matrix() {
+        let engine = tiny_engine(Numerics::Float);
+        let policy = ShardPolicy {
+            min_nodes: 32,
+            k: ShardK::Fixed(4),
+            seed: 7,
+        };
+        let plans = [
+            ExecutionPlan::Single,
+            ExecutionPlan::Batched { workspace: 2 },
+            ExecutionPlan::Sharded {
+                k: ShardK::Auto,
+                plan: None,
+            },
+            ExecutionPlan::Sharded {
+                k: ShardK::Fixed(3),
+                plan: None,
+            },
+            ExecutionPlan::Sharded {
+                k: ShardK::Fixed(100),
+                plan: None,
+            },
+            ExecutionPlan::Auto,
+        ];
+        for n in [12usize, 64] {
+            let (g, _) = random_graph_and_x(20 + n as u64, n, 5);
+            for plan in &plans {
+                let deployed = Session::builder(engine.clone())
+                    .plan(plan.clone())
+                    .shard_policy(policy)
+                    .graph(g.clone())
+                    .build()
+                    .unwrap();
+                let d = Session::builder(engine.clone())
+                    .plan(plan.clone())
+                    .shard_policy(policy)
+                    .into_dispatcher(None, Arc::new(PlanCache::with_capacity(2)))
+                    .unwrap();
+                let floating = match d.route(&g.view()) {
+                    None => ResolvedPath::Whole,
+                    Some(k) => ResolvedPath::Sharded { k },
+                };
+                assert_eq!(
+                    deployed.resolved_path(),
+                    floating,
+                    "plan {} resolved differently deployed vs floating (n={n})",
+                    plan.as_str()
+                );
+            }
+        }
+    }
+
+    /// K-clamp regression (ISSUE 8): the floating path used to feed the
+    /// UNCLAMPED Fixed K into `PlanCache::get_or_build`, so a deployed
+    /// twin (which clamps at build) keyed the same topology differently.
+    /// Both must clamp, share one cache entry, and answer bit-identically
+    /// to the whole-graph forward.
+    #[test]
+    fn floating_fixed_k_above_node_count_clamps_like_a_deployed_build() {
+        let engine = tiny_engine(Numerics::Float);
+        let (g, x) = random_graph_and_x(13, 3, 5);
+        let cache = Arc::new(PlanCache::with_capacity(4));
+        let plan = ExecutionPlan::Sharded {
+            k: ShardK::Fixed(10),
+            plan: None,
+        };
+        let d = Session::builder(engine.clone())
+            .plan(plan.clone())
+            .plan_cache(cache.clone())
+            .into_dispatcher(None, Arc::new(PlanCache::with_capacity(2)))
+            .unwrap();
+        assert_eq!(d.route(&g.view()), Some(3), "K must clamp to the node count");
+        let via_floating = d.infer_view(g.view(), &x).unwrap();
+
+        let deployed = Session::builder(engine.clone())
+            .plan(plan)
+            .plan_cache(cache.clone())
+            .graph(g.clone())
+            .build()
+            .unwrap();
+        assert_eq!(deployed.resolved_path(), ResolvedPath::Sharded { k: 3 });
+        assert_eq!(via_floating, deployed.run(&x).unwrap());
+        // clamped keys agree → the deployed run hit the floating build
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 1);
+
+        let whole = Session::builder(engine)
+            .plan(ExecutionPlan::Single)
+            .graph(g)
+            .build()
+            .unwrap();
+        assert_eq!(via_floating, whole.run(&x).unwrap());
+    }
+
+    /// `Planned` needs a deployed topology to score; floating lowering
+    /// is a typed error, like a pinned shard plan.
+    #[test]
+    fn planned_plan_is_rejected_for_per_request_backends() {
+        let engine = tiny_engine(Numerics::Float);
+        let err = Session::builder(engine)
+            .plan(ExecutionPlan::Planned)
+            .into_dispatcher(None, Arc::new(PlanCache::with_capacity(2)));
+        assert!(err.is_err());
+    }
+
+    /// Whatever path the planner picks, outputs stay bit-identical to
+    /// the whole-graph forward — planning changes cost, never answers.
+    #[test]
+    fn planned_sessions_answer_bit_identically_to_single() {
+        let engine = tiny_engine(Numerics::Float);
+        for n in [10usize, 150] {
+            let (g, x) = random_graph_and_x(40 + n as u64, n, 5);
+            let planned = Session::builder(engine.clone())
+                .plan(ExecutionPlan::Planned)
+                .graph(g.clone())
+                .build()
+                .unwrap();
+            planned.prepare();
+            let report = planned.plan_report().expect("planned sessions carry a report");
+            assert!(!report.candidates().is_empty());
+            let single = Session::builder(engine.clone())
+                .plan(ExecutionPlan::Single)
+                .graph(g)
+                .build()
+                .unwrap();
+            assert_eq!(planned.run(&x).unwrap(), single.run(&x).unwrap());
         }
     }
 }

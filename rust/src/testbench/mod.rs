@@ -108,6 +108,7 @@ fn engine_label(precision: Precision, plan: &ExecutionPlan) -> String {
         ExecutionPlan::Batched { .. } => "-batched",
         ExecutionPlan::Sharded { .. } => "-sharded",
         ExecutionPlan::Auto => "-auto",
+        ExecutionPlan::Planned => "-planned",
     };
     format!("engine-{}{}", precision.as_str(), suffix)
 }

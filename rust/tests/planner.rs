@@ -1,0 +1,224 @@
+//! Execution-planner acceptance suite: the calibrated cost-model path
+//! selector and its serving feedback loop.
+//!
+//! Covers the planner contracts end-to-end:
+//! - `ExecutionPlan::Planned` sessions answer bit-identically to every
+//!   explicit path (whole, sharded, auto) for both numerics;
+//! - the chosen plan never scores worse than the `Auto` heuristic's
+//!   resolution under the calibrated model;
+//! - the closed loop through the server: measured dispatch service
+//!   times accumulate in the calibration bank, `Server::calibrate_now`
+//!   drains them into the server-owned planner, and the correction
+//!   lands on the deployed session's own calibration key;
+//! - an injected misprediction redirects subsequent `Planned` deploys,
+//!   and drain-cadence decay forgets it.
+
+use std::time::Duration;
+
+use gnnbuilder::datasets::{self, LargeGraphStats};
+use gnnbuilder::engine::{synth_weights, Engine};
+use gnnbuilder::model::{ConvType, ModelConfig};
+use gnnbuilder::obs::calib::CalibrationRecord;
+use gnnbuilder::planner::PlannedPath;
+use gnnbuilder::serve::{BatchPolicy, Server, ServerConfig};
+use gnnbuilder::session::{ExecutionPlan, Precision, Session, ShardK, ShardPolicy};
+
+/// A citation-graph profile small enough to sweep both numerics paths.
+const TEST_STATS: LargeGraphStats = LargeGraphStats {
+    name: "planner_test",
+    num_nodes: 1500,
+    num_edges: 6750,
+    node_dim: 16,
+    num_classes: 4,
+    task: "node_classification",
+    mean_degree: 4.5,
+};
+
+const POLICY: ShardPolicy = ShardPolicy {
+    min_nodes: 64,
+    k: ShardK::Fixed(4),
+    seed: 9,
+};
+
+fn test_engine(name: &str, seed: u64) -> Engine {
+    let cfg = ModelConfig {
+        name: name.into(),
+        graph_input_dim: TEST_STATS.node_dim,
+        gnn_conv: ConvType::Gcn,
+        gnn_hidden_dim: 8,
+        gnn_out_dim: 6,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 6,
+        mlp_num_layers: 1,
+        output_dim: TEST_STATS.num_classes,
+        max_nodes: 2000,
+        max_edges: 20_000,
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, seed);
+    Engine::new(cfg, &weights, TEST_STATS.mean_degree).unwrap()
+}
+
+/// Whatever the planner picks, the answer is the answer: `Planned`
+/// sessions are bit-identical to every explicit path across graph sizes
+/// and both numerics.
+#[test]
+fn planned_sessions_are_bit_identical_to_every_explicit_path() {
+    for nodes in [300usize, 1500] {
+        let ng = datasets::gen_citation_graph(&TEST_STATS, nodes, 21);
+        for (tag, precision) in [("f32", Precision::F32), ("fixed", Precision::ApFixed)] {
+            let engine = test_engine(&format!("planned_{tag}_{nodes}"), 5);
+            let mk = |plan: ExecutionPlan| {
+                Session::builder(engine.clone())
+                    .precision(precision)
+                    .plan(plan)
+                    .shard_policy(POLICY)
+                    .graph(ng.graph.clone())
+                    .build()
+                    .unwrap()
+            };
+            let planned = mk(ExecutionPlan::Planned);
+            let report = planned
+                .plan_report()
+                .expect("planned sessions carry a report")
+                .clone();
+            assert!(
+                report.chosen().total_secs <= report.auto_reference().total_secs,
+                "planner predicted worse than Auto at n={nodes}:\n{}",
+                report.render_table()
+            );
+            let y = planned.run(&ng.x).unwrap();
+            for plan in [
+                ExecutionPlan::Single,
+                ExecutionPlan::Sharded {
+                    k: ShardK::Fixed(4),
+                    plan: None,
+                },
+                ExecutionPlan::Auto,
+            ] {
+                let expect = mk(plan.clone()).run(&ng.x).unwrap();
+                assert_eq!(y, expect, "{tag} n={nodes} diverged on {plan:?}");
+            }
+        }
+    }
+}
+
+/// The feedback artery end-to-end: traffic against a deployed `Planned`
+/// endpoint accumulates measured service times per workload shape;
+/// `Server::calibrate_now` drains them into the server-owned planner;
+/// the learned correction sits on exactly the key the session reports
+/// under — and a second drain finds the bank empty.
+#[test]
+fn server_calibration_loop_feeds_the_planner() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 900, 33);
+    let engine = test_engine("calib_loop", 3);
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        queue_capacity: 1024,
+        ..ServerConfig::default()
+    });
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Planned)
+                .shard_policy(POLICY)
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    // the server injected its own planner: the deployed session planned
+    // under it, and reports dispatches under the chosen candidate's key
+    let session = ep.session().unwrap().clone();
+    let report = session
+        .plan_report()
+        .expect("deployed planned session carries a report")
+        .clone();
+    let key = session.calib_key();
+    assert_eq!(key, report.chosen().key);
+    assert_eq!(server.planner().correction(&key), 1.0, "planner not cold");
+
+    let tickets: Vec<_> = (0..16)
+        .map(|i| {
+            let x: Vec<f32> = ng.x.iter().map(|v| v + i as f32 * 0.01).collect();
+            ep.submit(x).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+
+    let folded = server.calibrate_now();
+    assert!(folded >= 1, "no calibration records drained");
+    assert!(server.planner().calibration_len() >= 1);
+    let corr = server.planner().correction(&key);
+    assert!(corr.is_finite() && corr > 0.0);
+    assert_ne!(corr, 1.0, "measured service time left no correction");
+    // the drain is destructive: the next cycle folds nothing new
+    assert_eq!(server.calibrate_now(), 0);
+    server.shutdown();
+}
+
+/// Misprediction convergence through the server-owned planner: a
+/// fabricated measured slowdown on the winning shape redirects the next
+/// `Planned` deploy, and decay on the drain cadence restores the
+/// analytic choice once the shape stops being (mis)observed.
+#[test]
+fn injected_misprediction_redirects_new_deploys_until_decay_forgets_it() {
+    // small enough that the analytic model robustly prefers the
+    // whole-graph path (per-shard sync overhead dominates)
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 50, 44);
+    let engine = test_engine("misprediction", 7);
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy::default(),
+        queue_capacity: 64,
+        ..ServerConfig::default()
+    });
+    let mk = || {
+        Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Planned)
+            .shard_policy(POLICY)
+            .graph(ng.graph.clone())
+    };
+    let first = server.deploy("t0", mk()).unwrap();
+    let baseline = *first.session().unwrap().plan_report().unwrap().chosen();
+    assert_eq!(baseline.path, PlannedPath::Whole);
+
+    // as if serving had measured the whole-graph path catastrophically
+    // slow on this shape: 64 graphs at 10 s each
+    server.planner().absorb(&[CalibrationRecord {
+        key: baseline.key,
+        dispatches: 64,
+        graphs: 64,
+        total_service_secs: 640.0,
+    }]);
+    assert!(server.planner().correction(&baseline.key) > 1.0);
+    let second = server.deploy("t1", mk()).unwrap();
+    let flipped = second.session().unwrap().plan_report().unwrap().chosen().path;
+    assert!(
+        matches!(flipped, PlannedPath::Sharded { .. }),
+        "a measured slowdown on the whole path did not redirect the plan"
+    );
+    // redirected sessions still answer bit-identically
+    assert_eq!(
+        second.session().unwrap().run(&ng.x).unwrap(),
+        first.session().unwrap().run(&ng.x).unwrap()
+    );
+
+    // the shape stops being observed: decay (normally ridden by the
+    // janitor / metrics cadence) forgets the correction entirely
+    for _ in 0..400 {
+        server.planner().decay();
+    }
+    assert_eq!(server.planner().calibration_len(), 0);
+    let third = server.deploy("t2", mk()).unwrap();
+    assert_eq!(
+        third.session().unwrap().plan_report().unwrap().chosen().path,
+        baseline.path
+    );
+    server.shutdown();
+}

@@ -1,0 +1,219 @@
+//! Incremental graph mutation vs from-scratch rebuild — the dyngraph
+//! acceptance numbers. Builds a PUBMED-profile citation graph (≥10⁴
+//! nodes), applies a representative mixed edge-churn [`GraphDelta`]
+//! through `Graph::apply_delta` and times it against the
+//! `Graph::from_coo` full rebuild of the same post-delta edge list
+//! (`delta_apply_vs_rebuild_speedup`), then times
+//! `ShardedGraph::repair` (only shards owning touched endpoints
+//! re-extract) against a from-scratch `ShardedGraph::build` at the same
+//! K/seed (`plan_repair_vs_rebuild_speedup`). Both arms assert
+//! bit-identity inline — the repaired structures must equal the rebuilt
+//! ones via `PartialEq` — and the report records the repaired vs
+//! freshly-partitioned cut fractions so the quality drift the serving
+//! layer's `cut_degradation` watchdog reacts to is visible. A chained
+//! 64-delta trace closes the run, re-asserting identity at the final
+//! step. Emits `BENCH_mutate.json`.
+
+use gnnbuilder::bench::Bench;
+use gnnbuilder::datasets;
+use gnnbuilder::dyngraph::GraphDelta;
+use gnnbuilder::graph::Graph;
+use gnnbuilder::partition::ShardedGraph;
+use gnnbuilder::util::json::Json;
+use gnnbuilder::util::rng::Rng;
+
+/// Mixed edge churn against `g`: `adds` fresh random edges plus
+/// `removes` existing ones (sampled without replacement from the
+/// current edge list), node count unchanged so repeated application
+/// does identical work every timing iteration.
+fn churn_delta(rng: &mut Rng, g: &Graph, adds: usize, removes: usize) -> GraphDelta {
+    let n = g.num_nodes;
+    let mut d = GraphDelta::new();
+    for _ in 0..adds {
+        d = d.add_edge(rng.below(n) as u32, rng.below(n) as u32);
+    }
+    for i in rng.sample_indices(g.num_edges, removes) {
+        let (s, t) = g.edges[i];
+        d = d.remove_edge(s, t);
+    }
+    d
+}
+
+/// The post-delta edge list, mirrored the way `apply_delta` documents
+/// it: removals cancel the first surviving occurrence, adds append.
+fn mirror_edges(g: &Graph, d: &GraphDelta) -> Vec<(u32, u32)> {
+    let mut need: std::collections::HashMap<(u32, u32), usize> = std::collections::HashMap::new();
+    for &e in &d.remove_edges {
+        *need.entry(e).or_insert(0) += 1;
+    }
+    let mut out = Vec::with_capacity(g.num_edges + d.add_edges.len());
+    for &e in &g.edges {
+        match need.get_mut(&e) {
+            Some(c) if *c > 0 => *c -= 1,
+            _ => out.push(e),
+        }
+    }
+    out.extend_from_slice(&d.add_edges);
+    out
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let stats = &datasets::PUBMED;
+    let nodes = 12_000usize;
+    println!("== {} profile @ {nodes} nodes ==", stats.name);
+    let ng = datasets::gen_citation_graph(stats, nodes, 2023);
+    let g = &ng.graph;
+    let mut rng = Rng::seed_from(0x6d75_7461);
+
+    // ---- CSR delta-apply vs full rebuild -------------------------------
+    // 16 adds + 16 removes: the steady-state churn shape (a handful of
+    // citations appear and retract) on a graph three orders of magnitude
+    // larger — the regime where O(touched) patching must beat O(E).
+    let delta = churn_delta(&mut rng, g, 16, 16);
+    let expected_edges = mirror_edges(g, &delta);
+    let patched = g.apply_delta(&delta).expect("churn delta is valid");
+    let rebuilt = Graph::from_coo(g.num_nodes, &expected_edges);
+    assert_eq!(patched, rebuilt, "apply_delta diverged from from_coo rebuild");
+
+    let apply = b.run(&format!("graph_apply_delta/{}/n{nodes}", stats.name), || {
+        ng.graph.apply_delta(&delta).unwrap()
+    });
+    let rebuild = b.run(&format!("graph_from_coo/{}/n{nodes}", stats.name), || {
+        Graph::from_coo(nodes, &expected_edges)
+    });
+    let apply_speedup = rebuild.summary.mean / apply.summary.mean.max(1e-12);
+    println!(
+        "  apply_delta {:.3} ms vs from_coo {:.3} ms: {apply_speedup:.1}x",
+        apply.summary.mean * 1e3,
+        rebuild.summary.mean * 1e3
+    );
+
+    // ---- shard-plan repair vs full re-partition ------------------------
+    let k = 4usize;
+    let seed = 2023u64;
+    let base_sg = ShardedGraph::build(g.view(), k, seed);
+    let repaired = base_sg.repair(patched.view(), &delta);
+    // repair's contract is structural identity to a full extraction
+    // under the *repaired* plan; a from-scratch partition re-grows the
+    // plan itself, so it is the latency yardstick and the cut-quality
+    // comparison point, not a structural twin
+    assert_eq!(
+        repaired,
+        ShardedGraph::from_plan(patched.view(), base_sg.plan.repair(&delta)),
+        "repair diverged from a full extraction under the repaired plan"
+    );
+    let from_scratch = ShardedGraph::build(patched.view(), k, seed);
+    let repaired_cut = repaired.cut_fraction();
+    let fresh_cut = from_scratch.cut_fraction();
+
+    let repair = b.run(&format!("shard_repair/{}/n{nodes}/k{k}", stats.name), || {
+        base_sg.repair(patched.view(), &delta)
+    });
+    let repartition = b.run(&format!("shard_build/{}/n{nodes}/k{k}", stats.name), || {
+        ShardedGraph::build(patched.view(), k, seed)
+    });
+    let repair_speedup = repartition.summary.mean / repair.summary.mean.max(1e-12);
+    println!(
+        "  repair {:.3} ms vs rebuild {:.3} ms: {repair_speedup:.1}x \
+         (cut repaired {repaired_cut:.4} vs fresh {fresh_cut:.4})",
+        repair.summary.mean * 1e3,
+        repartition.summary.mean * 1e3
+    );
+
+    // ---- chained trace: identity must survive composition --------------
+    // 64 deltas applied back-to-back; the final patched graph must equal
+    // a from_coo rebuild of the mirrored edge list, and a repair chained
+    // across every step must equal a from-scratch partition of the
+    // result. This is the bench-side echo of the 200-step conformance
+    // gate in tests/dyngraph.rs.
+    let trace_steps = 64usize;
+    let mut cur = g.clone();
+    let mut cur_sg = base_sg.clone();
+    let mut edges = g.edges.clone();
+    for _ in 0..trace_steps {
+        let d = churn_delta(&mut rng, &cur, 4, 4);
+        edges = mirror_edges(&cur, &d);
+        let next = cur.apply_delta(&d).expect("trace delta is valid");
+        cur_sg = cur_sg.repair(next.view(), &d);
+        cur = next;
+    }
+    assert_eq!(
+        cur,
+        Graph::from_coo(nodes, &edges),
+        "chained apply_delta diverged from a from_coo rebuild"
+    );
+    assert_eq!(
+        cur_sg,
+        ShardedGraph::from_plan(cur.view(), cur_sg.plan.clone()),
+        "chained repair diverged from a full extraction of its own plan"
+    );
+    println!("  chained {trace_steps}-delta trace: bit-identical to rebuild");
+
+    let report = Json::obj(vec![
+        (
+            "graph",
+            Json::obj(vec![
+                ("profile", Json::str(stats.name)),
+                ("nodes", Json::num(g.num_nodes as f64)),
+                ("edges", Json::num(g.num_edges as f64)),
+                ("mean_degree", Json::num(g.mean_degree())),
+            ]),
+        ),
+        (
+            "delta",
+            Json::obj(vec![
+                ("add_edges", Json::num(delta.add_edges.len() as f64)),
+                ("remove_edges", Json::num(delta.remove_edges.len() as f64)),
+            ]),
+        ),
+        (
+            "apply_delta",
+            Json::obj(vec![
+                ("mean_s", Json::num(apply.summary.mean)),
+                ("p95_s", Json::num(apply.summary.p95)),
+                ("iters", Json::num(apply.iters as f64)),
+                ("bit_identical", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "from_coo_rebuild",
+            Json::obj(vec![
+                ("mean_s", Json::num(rebuild.summary.mean)),
+                ("p95_s", Json::num(rebuild.summary.p95)),
+                ("iters", Json::num(rebuild.iters as f64)),
+            ]),
+        ),
+        ("delta_apply_vs_rebuild_speedup", Json::num(apply_speedup)),
+        (
+            "plan_repair",
+            Json::obj(vec![
+                ("k", Json::num(k as f64)),
+                ("mean_s", Json::num(repair.summary.mean)),
+                ("p95_s", Json::num(repair.summary.p95)),
+                ("iters", Json::num(repair.iters as f64)),
+                ("cut_fraction_repaired", Json::num(repaired_cut)),
+                ("cut_fraction_fresh", Json::num(fresh_cut)),
+                ("bit_identical", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "repartition",
+            Json::obj(vec![
+                ("mean_s", Json::num(repartition.summary.mean)),
+                ("p95_s", Json::num(repartition.summary.p95)),
+                ("iters", Json::num(repartition.iters as f64)),
+            ]),
+        ),
+        ("plan_repair_vs_rebuild_speedup", Json::num(repair_speedup)),
+        (
+            "chained_trace",
+            Json::obj(vec![
+                ("steps", Json::num(trace_steps as f64)),
+                ("bit_identical", Json::Bool(true)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_mutate.json", report.to_string_pretty()).unwrap();
+    println!("wrote BENCH_mutate.json");
+}

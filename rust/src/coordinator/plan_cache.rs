@@ -68,6 +68,10 @@ pub struct PlanCacheStats {
     /// memoized-hash path (`get_or_build_hashed`) never increments it —
     /// zero re-hashes on warm hits is asserted against this counter
     pub hash_computes: AtomicU64,
+    /// entries dropped by [`PlanCache::invalidate_topology`] (endpoint
+    /// retirement, superseded generations) — distinct from LRU
+    /// `evictions`, which are capacity pressure
+    pub invalidations: AtomicU64,
 }
 
 impl PlanCacheStats {
@@ -89,6 +93,11 @@ struct Entry {
     last_used: u64,
     /// node-weighted size estimate charged against the byte budget
     bytes: usize,
+    /// the topology (or chained-version) hash half of this entry's key,
+    /// kept so [`PlanCache::invalidate_topology`] can drop every plan of
+    /// a retired topology without knowing which (K, seed) policies it
+    /// was built under
+    topo: u64,
 }
 
 #[derive(Debug)]
@@ -264,6 +273,7 @@ impl PlanCache {
                         cell: cell.clone(),
                         last_used: tick,
                         bytes,
+                        topo: topo_hash,
                     },
                 );
                 inner.total_bytes += bytes;
@@ -277,6 +287,80 @@ impl PlanCache {
             Arc::new(ShardedGraph::build(g, k, seed))
         })
         .clone()
+    }
+
+    /// Drop every resident plan whose key was minted under `topo_hash`
+    /// (all K/seed policies of one topology — or one mutation
+    /// *generation* of it, since versioned deployments key by chained
+    /// hash). Returns the number of entries dropped. In-flight readers
+    /// keep their `Arc`s and complete normally, which is what makes this
+    /// safe to call while the old generation is still serving; the
+    /// entries just stop being findable. Counted in
+    /// `stats().invalidations`, not `evictions`.
+    pub fn invalidate_topology(&self, topo_hash: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.entries.len();
+        let mut released = 0usize;
+        inner.entries.retain(|_, e| {
+            if e.topo == topo_hash {
+                released += e.bytes;
+                false
+            } else {
+                true
+            }
+        });
+        inner.total_bytes -= released;
+        let dropped = before - inner.entries.len();
+        self.stats
+            .invalidations
+            .fetch_add(dropped as u64, Ordering::Relaxed);
+        dropped
+    }
+
+    /// Seed the cache with an already-built plan under
+    /// `(topo_hash, k, seed)` — how the delta-repair path publishes a
+    /// repaired generation without the cache ever re-partitioning
+    /// (`builds` stays untouched; the repair is counter-asserted
+    /// elsewhere as *not* a build). Subject to the same count/byte
+    /// eviction discipline as a miss; replaces any half-built entry
+    /// already under the key.
+    pub fn insert_prebuilt(&self, topo_hash: u64, k: usize, seed: u64, plan: Arc<ShardedGraph>) {
+        let key = Self::key_from_hash(topo_hash, k, seed);
+        let bytes = Self::estimate_plan_bytes(plan.num_nodes, plan.num_edges, k);
+        let cell = Arc::new(OnceLock::new());
+        cell.set(plan).expect("fresh cell");
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.entries.remove(&key) {
+            inner.total_bytes -= old.bytes;
+        }
+        while !inner.entries.is_empty()
+            && (inner.entries.len() >= self.capacity
+                || self
+                    .byte_budget
+                    .is_some_and(|b| inner.total_bytes + bytes > b))
+        {
+            let lru = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+                .expect("non-empty cache has an LRU entry");
+            let evicted = inner.entries.remove(&lru).expect("lru key resident");
+            inner.total_bytes -= evicted.bytes;
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.entries.insert(
+            key,
+            Entry {
+                cell,
+                last_used: tick,
+                bytes,
+                topo: topo_hash,
+            },
+        );
+        inner.total_bytes += bytes;
     }
 }
 
@@ -465,6 +549,55 @@ mod tests {
         cache.get_or_build(g2.view(), 2, 0);
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 1);
+    }
+
+    /// Topology invalidation drops every policy variant of one topology
+    /// — and releases its charged bytes — while leaving other topologies
+    /// resident.
+    #[test]
+    fn invalidate_topology_drops_all_policy_variants_and_bytes() {
+        let cache = PlanCache::with_capacity(8);
+        let ga = random_graph(90, 25, 60);
+        let gb = random_graph(91, 25, 60);
+        let ha = crate::partition::topology_hash(ga.view());
+        cache.get_or_build(ga.view(), 2, 0);
+        cache.get_or_build(ga.view(), 3, 0);
+        cache.get_or_build(ga.view(), 2, 9);
+        cache.get_or_build(gb.view(), 2, 0);
+        assert_eq!(cache.len(), 4);
+        let bytes_full = cache.approx_bytes();
+        let dropped = cache.invalidate_topology(ha);
+        assert_eq!(dropped, 3);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.approx_bytes() < bytes_full);
+        assert_eq!(cache.stats().invalidations.load(Ordering::Relaxed), 3);
+        // LRU evictions were not charged for invalidation drops
+        assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 0);
+        // the surviving topology still hits
+        let builds = cache.stats().builds.load(Ordering::Relaxed);
+        cache.get_or_build(gb.view(), 2, 0);
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), builds);
+        // the invalidated one rebuilds on next demand
+        cache.get_or_build(ga.view(), 2, 0);
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), builds + 1);
+    }
+
+    /// Prebuilt inserts are served on later lookups without the cache
+    /// ever partitioning (`builds` untouched) — the delta-repair publish
+    /// path.
+    #[test]
+    fn insert_prebuilt_serves_without_building() {
+        let cache = PlanCache::with_capacity(4);
+        let g = random_graph(95, 25, 60);
+        let h = crate::partition::topology_hash(g.view());
+        let plan = Arc::new(ShardedGraph::build(g.view(), 2, 7));
+        cache.insert_prebuilt(h, 2, 7, plan.clone());
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 0);
+        let got = cache.get_or_build_hashed(h, g.view(), 2, 7);
+        assert!(Arc::ptr_eq(&got, &plan), "lookup missed the prebuilt plan");
+        assert_eq!(cache.stats().builds.load(Ordering::Relaxed), 0);
+        assert_eq!(cache.stats().hits.load(Ordering::Relaxed), 1);
     }
 
     /// A cached plan serves forwards bit-identically to a freshly built

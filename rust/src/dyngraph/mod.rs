@@ -1,0 +1,740 @@
+//! Dynamic-graph subsystem: typed topology deltas with incremental repair.
+//!
+//! Production social/citation graphs mutate constantly, but everything
+//! upstream of this module treats topology as frozen: an edge insert
+//! used to mean a brand-new [`Graph`] via [`Graph::from_coo`] (a cold
+//! O(V+E) rebuild), a full topology re-hash, and a cold K-way
+//! re-partition. This module makes mutation a first-class, incremental
+//! operation:
+//!
+//! - [`GraphDelta`] — a typed, validated batch of topology edits: append
+//!   nodes, add edges, remove edges. Feature *width* is preserved (the
+//!   per-node feature dimension never changes; adding nodes grows the
+//!   expected input length, which the serving layer re-validates per
+//!   request).
+//! - [`Graph::apply_delta`] — a pure delta-apply path that patches the
+//!   CSR neighbor table (untouched per-destination slices are run-copied,
+//!   only touched destinations rebuild) and repairs the degree-bucket
+//!   schedule by moving only the nodes whose in-degree crossed the
+//!   [`AGG_LOW_DEG`] boundary. The result is **bit-identical** to
+//!   `Graph::from_coo` over the post-delta edge list — that equivalence
+//!   is the subsystem's conformance gate, asserted by the randomized
+//!   mutation-trace suite in `tests/dyngraph.rs`. (The GCN scale tables
+//!   are derived per-layer from `in_deg` at forward time, so patching
+//!   the degree tables is sufficient — there is no persistent scale
+//!   cache to repair.)
+//! - [`ShardPlan::repair`] — ownership of existing nodes never changes;
+//!   new nodes go to the smallest shard; `cut_edges` is patched edge-by
+//!   -edge instead of recounted.
+//! - [`ShardedGraph::repair`] — only shards owning a touched edge
+//!   destination (or receiving a new node) re-extract their [`Subgraph`];
+//!   clean shards are carried over with just their `global_in_deg`
+//!   entries patched, and their halo-exchange routes are reused verbatim
+//!   (owned-node local ids are append-stable, so existing routes stay
+//!   valid). The repaired extraction is structurally identical to
+//!   [`ShardedGraph::from_plan`] on the repaired plan.
+//!
+//! Validation is fail-closed: a delta naming a nonexistent edge or an
+//! out-of-range node returns a typed [`DeltaError`] *before* any state
+//! is derived — `apply_delta` is a pure function, so the source graph
+//! (and its memoized topology hash upstream) is untouched by a rejected
+//! delta.
+//!
+//! Generation semantics live one layer up ([`crate::session`]): a
+//! mutation produces a *new* `DeployedGraph` whose version hash is
+//! chained from the parent's hash and [`GraphDelta::fingerprint`]
+//! (no O(V+E) re-hash), and whose `generation` counter increments.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::graph::{Graph, GraphView, AGG_LOW_DEG};
+use crate::partition::{mix64, HaloRoute, ShardPlan, ShardedGraph, Subgraph};
+
+/// A typed batch of topology edits, applied atomically by
+/// [`Graph::apply_delta`].
+///
+/// Semantics (all order-sensitive, which is why deltas carry a
+/// [`fingerprint`](GraphDelta::fingerprint) rather than hashing as a
+/// set):
+///
+/// - `add_nodes` appends that many nodes; they take the next global ids
+///   (`old_n..old_n + add_nodes`) and start with no edges.
+/// - `remove_edges` removes, per `(src, dst)` pair, the first matching
+///   occurrences from the *pre-delta* edge list (COO graphs are
+///   multigraphs; each listed removal consumes exactly one instance).
+///   Removals are validated against the pre-delta edges only — they
+///   cannot target edges added by the same delta.
+/// - `add_edges` are appended to the edge list in order, after removals.
+///   Endpoints may reference nodes introduced by `add_nodes`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GraphDelta {
+    /// number of nodes to append (ids `old_n..old_n + add_nodes`)
+    pub add_nodes: usize,
+    /// `(src, dst)` edges to append, in order
+    pub add_edges: Vec<(u32, u32)>,
+    /// `(src, dst)` edge instances to remove from the pre-delta edges
+    pub remove_edges: Vec<(u32, u32)>,
+}
+
+impl GraphDelta {
+    pub fn new() -> GraphDelta {
+        GraphDelta::default()
+    }
+
+    /// Builder: append `n` fresh (isolated) nodes.
+    pub fn with_nodes(mut self, n: usize) -> GraphDelta {
+        self.add_nodes += n;
+        self
+    }
+
+    /// Builder: append one edge.
+    pub fn add_edge(mut self, src: u32, dst: u32) -> GraphDelta {
+        self.add_edges.push((src, dst));
+        self
+    }
+
+    /// Builder: remove one edge instance.
+    pub fn remove_edge(mut self, src: u32, dst: u32) -> GraphDelta {
+        self.remove_edges.push((src, dst));
+        self
+    }
+
+    /// True when applying this delta is a no-op.
+    pub fn is_empty(&self) -> bool {
+        self.add_nodes == 0 && self.add_edges.is_empty() && self.remove_edges.is_empty()
+    }
+
+    /// Total number of edits (for metrics/span metadata).
+    pub fn num_edits(&self) -> usize {
+        self.add_nodes + self.add_edges.len() + self.remove_edges.len()
+    }
+
+    /// Order-sensitive content hash of the delta, used to *chain* version
+    /// hashes: a mutated `DeployedGraph`'s identity is
+    /// `mix64(parent_hash ^ fingerprint)`, so identical delta sequences
+    /// applied to identical anchors converge on the same plan-cache
+    /// identity without ever re-hashing the O(V+E) topology. Length
+    /// prefixes disambiguate adds from removes.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = 0x6479_6e67_7261_7068u64; // "dyngraph"
+        h = (h ^ mix64(self.add_nodes as u64)).wrapping_mul(FNV_PRIME);
+        h = (h ^ mix64(self.add_edges.len() as u64)).wrapping_mul(FNV_PRIME);
+        for &(s, d) in &self.add_edges {
+            h = (h ^ mix64(((s as u64) << 32) | d as u64)).wrapping_mul(FNV_PRIME);
+        }
+        h = (h ^ mix64(self.remove_edges.len() as u64)).wrapping_mul(FNV_PRIME);
+        for &(s, d) in &self.remove_edges {
+            h = (h ^ mix64(((s as u64) << 32) | d as u64)).wrapping_mul(FNV_PRIME);
+        }
+        mix64(h)
+    }
+}
+
+/// Typed rejection of an invalid [`GraphDelta`]. Returned *before* any
+/// mutation is derived — the source graph is never left half-patched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaError {
+    /// An edge endpoint is outside the valid node range (`num_nodes` is
+    /// the bound that was checked: post-delta for adds, pre-delta for
+    /// removes).
+    NodeOutOfRange { node: u32, num_nodes: usize },
+    /// A removal names more instances of `(src, dst)` than the pre-delta
+    /// edge list contains.
+    EdgeNotFound { src: u32, dst: u32 },
+}
+
+impl fmt::Display for DeltaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeltaError::NodeOutOfRange { node, num_nodes } => write!(
+                f,
+                "delta references node {node} but the graph has {num_nodes} nodes"
+            ),
+            DeltaError::EdgeNotFound { src, dst } => write!(
+                f,
+                "delta removes edge ({src}, {dst}) more times than it exists"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DeltaError {}
+
+impl Graph {
+    /// Apply a [`GraphDelta`], producing a new graph **bit-identical** to
+    /// `Graph::from_coo(n + delta.add_nodes, &post_delta_edges)` — the
+    /// conformance contract everything downstream (sharded repair,
+    /// version-hash chaining, serving `update`) leans on.
+    ///
+    /// Incremental work instead of a cold rebuild: untouched
+    /// per-destination neighbor slices are run-copied (`memcpy`-style),
+    /// only destinations named by the delta rebuild their slice, and the
+    /// degree-bucket schedule (`agg_order`/`num_low`) moves only the
+    /// nodes whose in-degree crossed the [`AGG_LOW_DEG`] boundary
+    /// (binary-search remove/insert keeps both buckets ascending). The
+    /// offset table is a cheap O(V) prefix re-sum.
+    ///
+    /// Validation is complete before any allocation of the result:
+    /// out-of-range endpoints and over-removal both return a typed
+    /// [`DeltaError`] with `self` untouched (this is a `&self` pure
+    /// function, so a rejected delta can never corrupt shared state).
+    pub fn apply_delta(&self, delta: &GraphDelta) -> Result<Graph, DeltaError> {
+        let old_n = self.num_nodes;
+        let new_n = old_n + delta.add_nodes;
+
+        // --- validate: endpoints in range -------------------------------
+        for &(s, d) in &delta.add_edges {
+            for node in [s, d] {
+                if node as usize >= new_n {
+                    return Err(DeltaError::NodeOutOfRange { node, num_nodes: new_n });
+                }
+            }
+        }
+        for &(s, d) in &delta.remove_edges {
+            for node in [s, d] {
+                if node as usize >= old_n {
+                    return Err(DeltaError::NodeOutOfRange { node, num_nodes: old_n });
+                }
+            }
+        }
+
+        // --- validate: every removal instance exists --------------------
+        // need[(s, d)] = how many instances the delta removes; each pair's
+        // removals consume its first `need` occurrences in edge order.
+        let mut need: HashMap<(u32, u32), u32> = HashMap::new();
+        for &e in &delta.remove_edges {
+            *need.entry(e).or_insert(0) += 1;
+        }
+        if !need.is_empty() {
+            let mut have: HashMap<(u32, u32), u32> =
+                need.keys().map(|&e| (e, 0)).collect();
+            for &e in &self.edges {
+                if let Some(c) = have.get_mut(&e) {
+                    *c += 1;
+                }
+            }
+            // walk removals in delta order so the first unsatisfiable one
+            // is reported deterministically
+            for &(s, d) in &delta.remove_edges {
+                let c = have.get_mut(&(s, d)).expect("need key");
+                if *c == 0 {
+                    return Err(DeltaError::EdgeNotFound { src: s, dst: d });
+                }
+                *c -= 1;
+            }
+        }
+
+        let new_e = self.num_edges - delta.remove_edges.len() + delta.add_edges.len();
+
+        // --- edge list: run-copy between removed slots, append adds -----
+        let mut edges: Vec<(u32, u32)> = Vec::with_capacity(new_e);
+        if need.is_empty() {
+            edges.extend_from_slice(&self.edges);
+        } else {
+            let mut take = need.clone();
+            let mut run = 0usize;
+            for (i, e) in self.edges.iter().enumerate() {
+                if let Some(c) = take.get_mut(e) {
+                    if *c > 0 {
+                        *c -= 1;
+                        edges.extend_from_slice(&self.edges[run..i]);
+                        run = i + 1;
+                    }
+                }
+            }
+            edges.extend_from_slice(&self.edges[run..]);
+        }
+        edges.extend_from_slice(&delta.add_edges);
+        debug_assert_eq!(edges.len(), new_e);
+
+        // --- degree tables ----------------------------------------------
+        let mut in_deg = Vec::with_capacity(new_n);
+        in_deg.extend_from_slice(&self.in_deg);
+        in_deg.resize(new_n, 0);
+        let mut out_deg = Vec::with_capacity(new_n);
+        out_deg.extend_from_slice(&self.out_deg);
+        out_deg.resize(new_n, 0);
+        for &(s, d) in &delta.remove_edges {
+            out_deg[s as usize] -= 1;
+            in_deg[d as usize] -= 1;
+        }
+        for &(s, d) in &delta.add_edges {
+            out_deg[s as usize] += 1;
+            in_deg[d as usize] += 1;
+        }
+
+        // offsets: O(V) exclusive prefix re-sum, exactly as from_coo
+        let mut offsets = vec![0u32; new_n + 1];
+        for i in 0..new_n {
+            offsets[i + 1] = offsets[i] + in_deg[i];
+        }
+
+        // --- neighbor table: rebuild only touched destinations ----------
+        // sorted unique destinations whose slice content changed
+        let mut touched: Vec<u32> = delta
+            .remove_edges
+            .iter()
+            .chain(delta.add_edges.iter())
+            .map(|&(_, d)| d)
+            .collect();
+        touched.sort_unstable();
+        touched.dedup();
+        let mut adds_by_dst: HashMap<u32, Vec<u32>> = HashMap::new();
+        for &(s, d) in &delta.add_edges {
+            adds_by_dst.entry(d).or_default().push(s);
+        }
+
+        let mut nbr: Vec<u32> = Vec::with_capacity(new_e);
+        let mut take = need.clone();
+        // old-graph destination index up to which slices have been copied
+        let mut copied_from = 0usize;
+        for &d in &touched {
+            let di = d as usize;
+            if di < old_n {
+                // run-copy every untouched slice before this destination
+                nbr.extend_from_slice(
+                    &self.nbr[self.offsets[copied_from] as usize..self.offsets[di] as usize],
+                );
+                copied_from = di + 1;
+                // rebuild this destination's slice: surviving old sources
+                // in order (per-pair, the first `need` occurrences of each
+                // source are exactly the removed edge instances)
+                for &src in self.neighbors(di) {
+                    match take.get_mut(&(src, d)) {
+                        Some(c) if *c > 0 => *c -= 1,
+                        _ => nbr.push(src),
+                    }
+                }
+            } else if copied_from < old_n {
+                // first post-delta destination: flush the old tail before
+                // emitting new-node slices
+                nbr.extend_from_slice(&self.nbr[self.offsets[copied_from] as usize..]);
+                copied_from = old_n;
+            }
+            // then the sources added for this destination, in add order
+            if let Some(srcs) = adds_by_dst.get(&d) {
+                nbr.extend_from_slice(srcs);
+            }
+        }
+        if copied_from < old_n {
+            nbr.extend_from_slice(&self.nbr[self.offsets[copied_from] as usize..]);
+        }
+        debug_assert_eq!(nbr.len(), new_e);
+        debug_assert!(take.values().all(|&c| c == 0));
+
+        // --- degree-bucket schedule: move only boundary-crossing nodes --
+        let mut low: Vec<u32> = self.agg_order[..self.num_low].to_vec();
+        let mut high: Vec<u32> = self.agg_order[self.num_low..].to_vec();
+        for &d in &touched {
+            let di = d as usize;
+            if di >= old_n {
+                continue; // new nodes are appended below
+            }
+            let was_low = self.in_deg[di] as usize <= AGG_LOW_DEG;
+            let is_low = in_deg[di] as usize <= AGG_LOW_DEG;
+            if was_low == is_low {
+                continue;
+            }
+            let (from, to) = if was_low {
+                (&mut low, &mut high)
+            } else {
+                (&mut high, &mut low)
+            };
+            let p = from.binary_search(&d).expect("bucket schedule out of sync");
+            from.remove(p);
+            let q = to.binary_search(&d).unwrap_err();
+            to.insert(q, d);
+        }
+        // new nodes have the maximal ids, so pushing in id order keeps
+        // both buckets ascending
+        for v in old_n..new_n {
+            if in_deg[v] as usize <= AGG_LOW_DEG {
+                low.push(v as u32);
+            } else {
+                high.push(v as u32);
+            }
+        }
+        let num_low = low.len();
+        let mut agg_order = low;
+        agg_order.append(&mut high);
+
+        let g = Graph {
+            num_nodes: new_n,
+            num_edges: new_e,
+            edges,
+            nbr,
+            offsets,
+            in_deg,
+            out_deg,
+            agg_order,
+            num_low,
+        };
+        debug_assert!(g.check());
+        Ok(g)
+    }
+}
+
+impl ShardPlan {
+    /// Repair this plan for a graph that had `delta` applied. Existing
+    /// nodes keep their owner (that is what makes [`ShardedGraph::repair`]
+    /// cheap); new nodes go to the currently smallest shard (ties to the
+    /// lowest shard index — deterministic); `cut_edges` is patched per
+    /// edit instead of recounted.
+    ///
+    /// Call this only with a delta that [`Graph::apply_delta`] accepted —
+    /// all validation (range, existence) happens there. The repaired plan
+    /// passes [`ShardPlan::check`] against the post-delta graph; whether
+    /// the *quality* survived the mutation is the planner's call
+    /// (`Planner::rescore`), which is how the serving layer decides when
+    /// a repair has degraded far enough to justify a background
+    /// re-partition.
+    pub fn repair(&self, delta: &GraphDelta) -> ShardPlan {
+        let old_n = self.num_nodes;
+        let new_n = old_n + delta.add_nodes;
+        let mut owner = self.owner.clone();
+        let mut shards = self.shards.clone();
+        let mut lens: Vec<usize> = shards.iter().map(Vec::len).collect();
+        for v in old_n..new_n {
+            let mut best = 0usize;
+            for s in 1..self.k {
+                if lens[s] < lens[best] {
+                    best = s;
+                }
+            }
+            owner.push(best as u32);
+            shards[best].push(v as u32); // maximal id keeps the list ascending
+            lens[best] += 1;
+        }
+        let mut cut = self.cut_edges;
+        for &(s, d) in &delta.remove_edges {
+            if owner[s as usize] != owner[d as usize] {
+                cut -= 1;
+            }
+        }
+        for &(s, d) in &delta.add_edges {
+            if owner[s as usize] != owner[d as usize] {
+                cut += 1;
+            }
+        }
+        ShardPlan {
+            k: self.k,
+            owner,
+            shards,
+            cut_edges: cut,
+            num_nodes: new_n,
+            num_edges: self.num_edges - delta.remove_edges.len() + delta.add_edges.len(),
+        }
+    }
+}
+
+impl ShardedGraph {
+    /// Repair this extraction for `new_g` — the graph produced by
+    /// [`Graph::apply_delta`] with `delta` — under the plan produced by
+    /// [`ShardPlan::repair`]. Structurally identical to
+    /// `ShardedGraph::from_plan(new_g, repaired_plan)` (asserted by the
+    /// conformance suite), but only *dirty* shards — those owning a
+    /// touched edge destination or receiving a new node — re-extract
+    /// their [`Subgraph`] and rebuild their halo routes. Clean shards are
+    /// carried over: their local topology, halo set, and route tables are
+    /// provably unchanged (changed edges all terminate in dirty shards,
+    /// and owned-node local ids are append-stable), so the only patch
+    /// they need is the `global_in_deg` entries of touched destinations
+    /// appearing in their halo (GCN normalization reads true global
+    /// degrees).
+    pub fn repair(&self, new_g: GraphView<'_>, delta: &GraphDelta) -> ShardedGraph {
+        let old_n = self.num_nodes;
+        let new_n = old_n + delta.add_nodes;
+        assert_eq!(new_g.num_nodes, new_n, "repair: graph/delta mismatch");
+        let plan = self.plan.repair(delta);
+        debug_assert!(plan.check(new_g));
+
+        // dirty = shards whose extraction inputs changed
+        let mut dirty = vec![false; plan.k];
+        for &(_, d) in delta.remove_edges.iter().chain(delta.add_edges.iter()) {
+            dirty[plan.owner[d as usize] as usize] = true;
+        }
+        for v in old_n..new_n {
+            dirty[plan.owner[v] as usize] = true;
+        }
+
+        // sorted unique destinations whose global in-degree changed —
+        // clean shards patch these in their halo degree table
+        let mut touched: Vec<u32> = delta
+            .remove_edges
+            .iter()
+            .chain(delta.add_edges.iter())
+            .map(|&(_, d)| d)
+            .collect();
+        touched.sort_unstable();
+        touched.dedup();
+
+        let shards: Vec<Subgraph> = (0..plan.k)
+            .map(|s| {
+                if dirty[s] {
+                    return Subgraph::extract(new_g, &plan, s);
+                }
+                let mut sub = self.shards[s].clone();
+                for &d in &touched {
+                    // a touched destination is owned by a dirty shard, so
+                    // in a clean shard it can only appear as a halo node
+                    debug_assert!(sub.global_ids[..sub.owned].binary_search(&d).is_err());
+                    if let Ok(p) = sub.global_ids[sub.owned..].binary_search(&d) {
+                        sub.global_in_deg[sub.owned + p] = new_g.in_deg[d as usize];
+                    }
+                }
+                sub
+            })
+            .collect();
+
+        let exchange: Vec<Vec<HaloRoute>> = shards
+            .iter()
+            .enumerate()
+            .map(|(s, sub)| {
+                if !dirty[s] {
+                    // owned lists only ever append maximal ids, so every
+                    // existing (owner_shard, src_local, dst_local) triple
+                    // still points at the same global node — reuse verbatim
+                    return self.exchange[s].clone();
+                }
+                let mut routes: Vec<HaloRoute> = sub
+                    .halo()
+                    .iter()
+                    .enumerate()
+                    .map(|(hi, &gid)| {
+                        let owner_shard = plan.owner[gid as usize];
+                        let src_local = plan.shards[owner_shard as usize]
+                            .binary_search(&gid)
+                            .expect("halo source not in its owner's shard list")
+                            as u32;
+                        HaloRoute {
+                            owner_shard,
+                            src_local,
+                            dst_local: (sub.owned + hi) as u32,
+                        }
+                    })
+                    .collect();
+                routes.sort_unstable_by_key(|r| (r.owner_shard, r.dst_local));
+                routes
+            })
+            .collect();
+
+        ShardedGraph {
+            num_nodes: new_g.num_nodes,
+            num_edges: new_g.num_edges,
+            plan,
+            shards,
+            exchange,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::partition;
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, max_n: usize, max_e: usize) -> Graph {
+        let n = rng.range(2, max_n);
+        let e = rng.range(0, max_e);
+        let coo: Vec<(u32, u32)> = (0..e)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+            .collect();
+        Graph::from_coo(n, &coo)
+    }
+
+    /// A random *valid* delta: removals sampled from existing edges
+    /// (without replacement), adds over old + new nodes.
+    fn random_delta(rng: &mut Rng, g: &Graph) -> GraphDelta {
+        let add_nodes = rng.range(0, 4);
+        let new_n = g.num_nodes + add_nodes;
+        let mut pool: Vec<(u32, u32)> = g.edges.clone();
+        let n_rm = rng.range(0, pool.len() + 1).min(pool.len());
+        let mut remove_edges = Vec::with_capacity(n_rm);
+        for _ in 0..n_rm {
+            let i = rng.below(pool.len());
+            remove_edges.push(pool.swap_remove(i));
+        }
+        let n_add = rng.range(0, 8);
+        let add_edges: Vec<(u32, u32)> = (0..n_add)
+            .map(|_| (rng.below(new_n) as u32, rng.below(new_n) as u32))
+            .collect();
+        GraphDelta {
+            add_nodes,
+            add_edges,
+            remove_edges,
+        }
+    }
+
+    /// Reference semantics: sequential first-occurrence removal, then
+    /// append adds, then a cold from_coo rebuild.
+    fn naive_apply(g: &Graph, delta: &GraphDelta) -> Graph {
+        let mut coo = g.edges.clone();
+        for rm in &delta.remove_edges {
+            let pos = coo.iter().position(|e| e == rm).expect("edge exists");
+            coo.remove(pos);
+        }
+        coo.extend_from_slice(&delta.add_edges);
+        Graph::from_coo(g.num_nodes + delta.add_nodes, &coo)
+    }
+
+    #[test]
+    fn apply_delta_is_bit_identical_to_cold_rebuild() {
+        let mut rng = Rng::seed_from(407);
+        for case in 0..300 {
+            let g = random_graph(&mut rng, 30, 80);
+            let delta = random_delta(&mut rng, &g);
+            let inc = g.apply_delta(&delta).expect("valid delta");
+            let cold = naive_apply(&g, &delta);
+            assert_eq!(inc, cold, "case {case}: delta {delta:?}");
+            assert!(inc.check(), "case {case}");
+        }
+    }
+
+    #[test]
+    fn empty_delta_is_identity() {
+        let mut rng = Rng::seed_from(11);
+        let g = random_graph(&mut rng, 20, 50);
+        let out = g.apply_delta(&GraphDelta::new()).unwrap();
+        assert_eq!(out, g);
+        assert!(GraphDelta::new().is_empty());
+    }
+
+    #[test]
+    fn duplicate_edges_remove_one_instance_each() {
+        // (0,1) exists twice; removing it twice leaves zero instances,
+        // removing three times is an error
+        let g = Graph::from_coo(3, &[(0, 1), (0, 1), (2, 1)]);
+        let once = g.apply_delta(&GraphDelta::new().remove_edge(0, 1)).unwrap();
+        assert_eq!(once.neighbors(1), &[0, 2]);
+        let twice = g
+            .apply_delta(&GraphDelta::new().remove_edge(0, 1).remove_edge(0, 1))
+            .unwrap();
+        assert_eq!(twice.neighbors(1), &[2]);
+        let thrice = g.apply_delta(
+            &GraphDelta::new()
+                .remove_edge(0, 1)
+                .remove_edge(0, 1)
+                .remove_edge(0, 1),
+        );
+        assert_eq!(thrice, Err(DeltaError::EdgeNotFound { src: 0, dst: 1 }));
+    }
+
+    #[test]
+    fn errors_are_typed_and_checked_before_any_work() {
+        let g = Graph::from_coo(3, &[(0, 1)]);
+        assert_eq!(
+            g.apply_delta(&GraphDelta::new().remove_edge(1, 0)),
+            Err(DeltaError::EdgeNotFound { src: 1, dst: 0 })
+        );
+        // removes are bounded by the *pre*-delta node count even when the
+        // same delta adds nodes
+        assert_eq!(
+            g.apply_delta(&GraphDelta::new().with_nodes(2).remove_edge(4, 0)),
+            Err(DeltaError::NodeOutOfRange { node: 4, num_nodes: 3 })
+        );
+        // a rejected delta mutates nothing: the source graph still equals
+        // a fresh build of its own edge list
+        assert_eq!(g, Graph::from_coo(3, &[(0, 1)]));
+    }
+
+    #[test]
+    fn add_bound_is_post_delta_node_count() {
+        let g = Graph::from_coo(3, &[(0, 1)]);
+        // node 3 only exists because the delta adds it
+        let grown = g
+            .apply_delta(&GraphDelta::new().with_nodes(1).add_edge(3, 0))
+            .unwrap();
+        assert_eq!(grown.num_nodes, 4);
+        assert_eq!(grown.neighbors(0), &[3]);
+        assert_eq!(
+            g.apply_delta(&GraphDelta::new().with_nodes(1).add_edge(4, 0)),
+            Err(DeltaError::NodeOutOfRange { node: 4, num_nodes: 4 })
+        );
+    }
+
+    #[test]
+    fn bucket_boundary_crossings_patch_the_schedule() {
+        // node 0 sits exactly at AGG_LOW_DEG; one more in-edge crosses it
+        // into the high bucket, one removal brings it back
+        let n = AGG_LOW_DEG + 2;
+        let coo: Vec<(u32, u32)> = (1..=AGG_LOW_DEG as u32).map(|s| (s, 0)).collect();
+        let g = Graph::from_coo(n, &coo);
+        assert_eq!(g.num_low, n);
+        let up = g
+            .apply_delta(&GraphDelta::new().add_edge((AGG_LOW_DEG + 1) as u32, 0))
+            .unwrap();
+        assert_eq!(up.num_low, n - 1);
+        assert_eq!(&up.agg_order[up.num_low..], &[0]);
+        assert!(up.check());
+        let down = up
+            .apply_delta(&GraphDelta::new().remove_edge(1, 0))
+            .unwrap();
+        assert_eq!(down.num_low, n);
+        assert!(down.check());
+        let coo2 = down.edges.clone();
+        assert_eq!(down, Graph::from_coo(n, &coo2));
+    }
+
+    #[test]
+    fn fingerprint_discriminates_and_is_stable() {
+        let a = GraphDelta::new().add_edge(1, 2);
+        let b = GraphDelta::new().remove_edge(1, 2);
+        let c = GraphDelta::new().with_nodes(1);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(b.fingerprint(), GraphDelta::new().fingerprint());
+        assert_eq!(a.fingerprint(), GraphDelta::new().add_edge(1, 2).fingerprint());
+    }
+
+    #[test]
+    fn plan_repair_matches_a_recount_and_stays_valid() {
+        let mut rng = Rng::seed_from(907);
+        for case in 0..120 {
+            let g = random_graph(&mut rng, 40, 120);
+            let k = rng.range(1, 6);
+            let plan = partition(g.view(), k, case);
+            let delta = random_delta(&mut rng, &g);
+            let new_g = g.apply_delta(&delta).unwrap();
+            let repaired = plan.repair(&delta);
+            assert!(
+                repaired.check(new_g.view()),
+                "case {case}: repaired plan invalid (delta {delta:?})"
+            );
+            // existing nodes kept their owner
+            assert_eq!(&repaired.owner[..g.num_nodes], plan.owner.as_slice());
+        }
+    }
+
+    #[test]
+    fn sharded_repair_is_structurally_identical_to_from_plan() {
+        let mut rng = Rng::seed_from(1301);
+        for case in 0..80 {
+            let g = random_graph(&mut rng, 40, 120);
+            let k = rng.range(1, 6);
+            let sg = ShardedGraph::build(g.view(), k, case);
+            let delta = random_delta(&mut rng, &g);
+            let new_g = g.apply_delta(&delta).unwrap();
+            let repaired = sg.repair(new_g.view(), &delta);
+            let rebuilt = ShardedGraph::from_plan(new_g.view(), sg.plan.repair(&delta));
+            assert_eq!(repaired, rebuilt, "case {case}: delta {delta:?}");
+        }
+    }
+
+    #[test]
+    fn remove_every_edge_leaves_a_valid_empty_topology() {
+        let g = Graph::from_coo(4, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 1)]);
+        let mut delta = GraphDelta::new();
+        for &(s, d) in &g.edges {
+            delta = delta.remove_edge(s, d);
+        }
+        let empty = g.apply_delta(&delta).unwrap();
+        assert_eq!(empty.num_edges, 0);
+        assert!(empty.nbr.is_empty());
+        assert_eq!(empty.num_low, 4);
+        assert!(empty.check());
+        assert_eq!(empty, Graph::from_coo(4, &[]));
+    }
+}

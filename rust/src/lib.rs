@@ -75,6 +75,24 @@
 //! [`perfmodel::calibration`] to recalibrate the paper's latency model
 //! from live traffic.
 //!
+//! Deployed topologies are **dynamic**: [`dyngraph`] defines a typed
+//! [`dyngraph::GraphDelta`] (edge adds/removes, node appends) applied
+//! via [`session::Session::apply_update`] with *incremental plan
+//! repair* — the CSR neighbor table is patched in place of a rebuild,
+//! only the degree-bucket schedule entries that crossed the low/high
+//! boundary move, and a sharded session repairs its
+//! [`partition::ShardedGraph`] by re-extracting only the shards that own
+//! a touched endpoint (halo routes of clean shards are reused). Each
+//! delta advances the [`session::DeployedGraph`] generation under a
+//! chained version hash, so plan-cache entries of the old generation are
+//! invalidated without disturbing warm readers. The serving layer drives
+//! this end-to-end: [`serve::Server::update`] quiesces the endpoint's
+//! flush queue, applies the repair, re-scores the repaired plan under
+//! the calibrated planner, and schedules a background full re-partition
+//! when the score degrades past [`serve::ServerConfig::cut_degradation`]
+//! — every step bit-identical to a from-scratch rebuild
+//! (`tests/dyngraph.rs` pins the 200-delta conformance trace).
+//!
 //! That feedback loop is closed by the [`planner`]: sessions built with
 //! [`session::ExecutionPlan::Planned`] enumerate candidate execution
 //! plans (whole-graph, plus a K-ladder × partition-seed set of sharded
@@ -93,6 +111,7 @@ pub mod codegen;
 pub mod coordinator;
 pub mod datasets;
 pub mod dse;
+pub mod dyngraph;
 pub mod engine;
 pub mod experiments;
 pub mod fixed;

@@ -64,6 +64,9 @@ pub enum Stage {
     HaloExchange,
     /// readout: pooling + MLP head
     Head,
+    /// a topology delta applied to a live endpoint (quiesce → repair →
+    /// swap), meta = resulting graph generation
+    ApplyDelta,
 }
 
 impl Stage {
@@ -77,6 +80,7 @@ impl Stage {
             Stage::ShardCompute => "shard_compute",
             Stage::HaloExchange => "halo_exchange",
             Stage::Head => "head",
+            Stage::ApplyDelta => "apply_delta",
         }
     }
 }

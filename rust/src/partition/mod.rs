@@ -401,7 +401,7 @@ pub fn partition(g: GraphView<'_>, k: usize, seed: u64) -> ShardPlan {
 /// holds exactly the in-edges of owned nodes, in the original input-edge
 /// order, so every owned node's local neighbor list mirrors its global
 /// neighbor list element-for-element (as local ids).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Subgraph {
     /// which shard of the plan this is
     pub shard: usize,
@@ -506,7 +506,7 @@ pub struct HaloRoute {
 /// A partitioned graph ready for sharded inference: the plan, the
 /// extracted shards, and per-shard halo-exchange routes (grouped by owner
 /// shard so the exchange locks each source arena once per destination).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardedGraph {
     pub plan: ShardPlan,
     pub shards: Vec<Subgraph>,
@@ -846,7 +846,8 @@ mod tests {
             let g2 = Graph::from_coo(g.num_nodes, &edges);
             assert_ne!(topology_hash(g.view()), topology_hash(g2.view()), "case {case}");
             // an extra isolated node changes the hash
-            let g3 = Graph::from_coo(g.num_nodes + 1, &g.edges);
+            let base_edges = g.edges.clone();
+            let g3 = Graph::from_coo(g.num_nodes + 1, &base_edges);
             assert_ne!(topology_hash(g.view()), topology_hash(g3.view()), "case {case}");
         }
     }

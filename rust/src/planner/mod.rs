@@ -46,7 +46,7 @@ use crate::engine::Engine;
 use crate::graph::GraphView;
 use crate::model::{ConvType, ModelConfig, Numerics};
 use crate::obs::calib::{CalibKey, CalibrationRecord};
-use crate::partition::{adaptive_k, partition};
+use crate::partition::{adaptive_k, partition, PlanCommStats};
 use crate::perfmodel::LatencyCalibrator;
 use crate::session::ShardPolicy;
 
@@ -455,6 +455,45 @@ impl Planner {
             candidates,
             auto_index,
         }
+    }
+
+    /// Calibrated predicted seconds for an **existing** plan's exact
+    /// communication shape — no K-ladder enumeration and no candidate
+    /// re-partitions, just the closed-form cost of the stats in hand
+    /// under the current calibration state. This is how the serving
+    /// layer judges an incrementally *repaired* partition
+    /// ([`crate::partition::ShardPlan::repair`]) against the score its
+    /// deployment anchored at: comparable numbers come from the same
+    /// formulas that ranked the original candidates. `k <= 1` scores as
+    /// the whole-graph path (`stats` is ignored there).
+    pub fn rescore(
+        &self,
+        ctx: &PlanContext,
+        num_nodes: usize,
+        num_edges: usize,
+        k: usize,
+        stats: &PlanCommStats,
+    ) -> f64 {
+        self.contexts
+            .lock()
+            .unwrap()
+            .insert((ctx.conv, ctx.numerics), *ctx);
+        let nf = num_nodes as f64;
+        let ef = num_edges as f64;
+        if k <= 1 {
+            let key = self.key_for(ctx, num_nodes, num_edges, PlannedPath::Whole);
+            return self.whole_secs(ctx, nf, ef) * self.cal.lock().unwrap().correction(&key);
+        }
+        let (base, comm) = self.sharded_secs(
+            ctx,
+            ef,
+            k,
+            stats.halo_nodes as f64,
+            stats.max_shard_nodes as f64,
+        );
+        // the seed never enters the calibration key, so 0 is fine here
+        let key = self.key_for(ctx, num_nodes, num_edges, PlannedPath::Sharded { k, seed: 0 });
+        (base + comm) * self.cal.lock().unwrap().correction(&key)
     }
 
     /// Fold drained calibration records into the owned calibrator,

@@ -93,6 +93,11 @@ pub struct Metrics {
     pub retired: AtomicU64,
     /// endpoints evicted by the idle janitor
     pub idle_evictions: AtomicU64,
+    /// topology deltas applied to live endpoints (`Server::update`)
+    pub updates: AtomicU64,
+    /// plan swaps on live endpoints: background re-partitions after cut
+    /// degradation plus janitor re-plan swaps
+    pub replans: AtomicU64,
     /// highest global queued depth observed across all endpoints
     pub peak_queue: AtomicUsize,
     /// the deployment's shard-plan cache, shared by every pinned session

@@ -71,11 +71,12 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::{BackendSpec, PlanCache};
+use crate::dyngraph::GraphDelta;
 use crate::graph::Graph;
 use crate::obs::calib::CalibrationRecord;
 use crate::obs::clock;
 use crate::obs::export::{self, PromWriter};
-use crate::obs::span::{Span, TraceSink};
+use crate::obs::span::{Span, Stage, TraceSink, NO_PARENT};
 use crate::planner::Planner;
 use crate::session::{Session, SessionBuilder};
 use crate::util::json::Json;
@@ -311,14 +312,16 @@ impl Endpoint {
     }
 
     /// The pinned session, if this endpoint serves a deployed topology.
-    pub fn session(&self) -> Option<&Arc<Session>> {
-        self.inner.session.as_ref()
+    /// Owned (not borrowed): topology updates swap the pinned session
+    /// between flushes, so this is a snapshot of the current generation.
+    pub fn session(&self) -> Option<Arc<Session>> {
+        self.inner.current_session()
     }
 
     /// Submit one feature set over the deployed topology. Fails fast
     /// with typed errors: wrong input length, queue full, retired.
     pub fn submit(&self, x: Vec<f32>) -> Result<Ticket, ServeError> {
-        let Some(session) = &self.inner.session else {
+        let Some(session) = self.inner.current_session() else {
             return Err(ServeError::BadRequest(
                 "floating endpoint: requests carry their own graph — use submit_graph".into(),
             ));
@@ -337,7 +340,7 @@ impl Endpoint {
 
     /// Submit a per-request graph + features (floating endpoints only).
     pub fn submit_graph(&self, graph: Graph, x: Vec<f32>) -> Result<Ticket, ServeError> {
-        if self.inner.session.is_some() {
+        if self.inner.is_pinned() {
             return Err(ServeError::BadRequest(
                 "pinned endpoint: the topology is deployed — submit features only".into(),
             ));
@@ -380,6 +383,9 @@ impl Endpoint {
     fn close_and_join(&self, reason: CloseReason) {
         self.inner.close(reason, None);
         self.inner.worker.join();
+        // a background re-partition blocked in quiesce observes the
+        // closed queue and bails, so this join is deadlock-free
+        self.inner.join_repartition();
     }
 }
 
@@ -394,6 +400,17 @@ pub struct ServerConfig {
     pub tenant_quota: usize,
     /// evict endpoints idle for this long (`None` = never)
     pub idle_ttl: Option<Duration>,
+    /// re-run the planner over every pinned endpoint on this cadence and
+    /// quiesce-and-swap any whose calibrated argmin moved (`None` =
+    /// never) — long-lived deployments pick up calibration drift without
+    /// a redeploy
+    pub replan_interval: Option<Duration>,
+    /// how much a repaired plan's calibrated score may degrade past the
+    /// score anchored at deploy (or last re-partition) before
+    /// [`Server::update`] schedules a background full re-partition.
+    /// `0.25` = 25% worse. Negative values re-partition on every update
+    /// (useful in tests)
+    pub cut_degradation: f64,
     /// share an existing shard-plan cache (default: a fresh server-wide one)
     pub plan_cache: Option<Arc<PlanCache>>,
     /// share an existing execution planner (default: a fresh server-owned
@@ -416,6 +433,8 @@ impl Default for ServerConfig {
             queue_capacity: 1024,
             tenant_quota: 64,
             idle_ttl: None,
+            replan_interval: None,
+            cut_degradation: 0.25,
             plan_cache: None,
             planner: None,
             trace_capacity: 65_536,
@@ -432,12 +451,28 @@ struct Janitor {
 pub struct Server {
     policy: BatchPolicy,
     queue_capacity: usize,
+    cut_degradation: f64,
     registry: Arc<SessionRegistry>,
     metrics: Arc<Metrics>,
     sink: Option<Arc<TraceSink>>,
     planner: Arc<Planner>,
     janitor: Option<Janitor>,
     down: AtomicBool,
+}
+
+/// What [`Server::update`] reports back after a delta lands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UpdateOutcome {
+    /// graph generation after the update (deploy = 0, +1 per delta)
+    pub generation: u64,
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    /// cut edges / total edges of the repaired shard plan (0.0 for
+    /// whole-graph endpoints)
+    pub cut_fraction: f64,
+    /// a background full re-partition was scheduled because the repaired
+    /// plan's score degraded past [`ServerConfig::cut_degradation`]
+    pub repartition_scheduled: bool,
 }
 
 impl Server {
@@ -449,17 +484,20 @@ impl Server {
         let sink = (cfg.trace_capacity > 0).then(|| Arc::new(TraceSink::new(cfg.trace_capacity)));
         let registry = Arc::new(SessionRegistry::new(cfg.tenant_quota));
         let planner = cfg.planner.unwrap_or_default();
-        let janitor = cfg.idle_ttl.map(|ttl| {
+        let janitor = (cfg.idle_ttl.is_some() || cfg.replan_interval.is_some()).then(|| {
             let stop = Arc::new((Mutex::new(false), Condvar::new()));
             let (s, r, m) = (stop.clone(), registry.clone(), metrics.clone());
             let p = planner.clone();
-            let handle =
-                ServiceHandle::spawn("gnnb-serve-janitor", move || janitor_loop(s, r, m, p, ttl));
+            let (ttl, replan) = (cfg.idle_ttl, cfg.replan_interval);
+            let handle = ServiceHandle::spawn("gnnb-serve-janitor", move || {
+                janitor_loop(s, r, m, p, ttl, replan)
+            });
             Janitor { stop, handle }
         });
         Server {
             policy: cfg.policy,
             queue_capacity: cfg.queue_capacity,
+            cut_degradation: cfg.cut_degradation,
             registry,
             metrics,
             sink,
@@ -546,13 +584,16 @@ impl Server {
         session.prepare();
         let inner = EndpointInner::new(
             key,
-            Some(session),
+            Some(session.clone()),
             self.policy,
             self.queue_capacity,
             self.metrics.clone(),
             self.sink.clone(),
         );
         let ep = Endpoint { inner };
+        // anchor the degradation check: the pre-warmed plan's calibrated
+        // score is what repaired plans are judged against
+        ep.inner.set_base_score(session.plan_score(&self.planner));
         self.registry.insert(ep.clone())?;
         // spawn the dispatcher only once registration succeeded
         let body = ep.inner.clone();
@@ -612,6 +653,141 @@ impl Server {
             return Err(ServeError::ShuttingDown);
         }
         Ok(())
+    }
+
+    /// Apply a topology delta to a live pinned endpoint — the dynamic-
+    /// graph serving path (see [`crate::dyngraph`]). The endpoint's flush
+    /// queue is quiesced (in-flight work admitted against the old
+    /// generation drains first), the delta is applied with incremental
+    /// plan repair ([`Session::apply_update`] — touched shards only, no
+    /// full re-hash or re-partition), and the dispatcher resumes on the
+    /// next-generation session. Admission stays open throughout.
+    ///
+    /// The endpoint keeps its registry key (the **deploy-time** topology
+    /// hash is the stable endpoint identity); the returned
+    /// [`UpdateOutcome`] carries the new generation. The repaired plan is
+    /// re-scored against the score anchored at deploy; degradation past
+    /// [`ServerConfig::cut_degradation`] schedules a background full
+    /// re-partition that swaps in when ready (skipped when one is already
+    /// in flight).
+    ///
+    /// Rejected deltas ([`crate::dyngraph::DeltaError`]) surface as
+    /// [`ServeError::BadRequest`] with the endpoint unchanged.
+    pub fn update(
+        &self,
+        tenant: &str,
+        key: &SessionKey,
+        delta: &GraphDelta,
+    ) -> Result<UpdateOutcome, ServeError> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        if key.tenant != tenant {
+            return Err(ServeError::BadRequest(format!(
+                "endpoint key belongs to tenant `{}`, not `{tenant}`",
+                key.tenant
+            )));
+        }
+        let ep = self
+            .registry
+            .get(key)
+            .ok_or_else(|| ServeError::UnknownEndpoint {
+                model: key.model.clone(),
+            })?;
+        let t0 = clock::now_ns();
+        let swapped = ep.inner.quiesce_and_swap(|cur| {
+            let next = cur
+                .apply_update(delta)
+                .map_err(|e| ServeError::BadRequest(e.to_string()))?;
+            Ok(Some(Arc::new(next)))
+        })?;
+        let next = swapped.expect("update closure always produces a successor");
+        self.metrics.updates.fetch_add(1, Ordering::Relaxed);
+        if let Some(sink) = &self.sink {
+            let trace = sink.begin_trace();
+            sink.push(Span {
+                trace,
+                id: sink.next_span_id(),
+                parent: NO_PARENT,
+                stage: Stage::ApplyDelta,
+                start_ns: t0,
+                end_ns: clock::now_ns(),
+                meta: next.deployed().generation(),
+            });
+        }
+        let view = next.deployed().view();
+        let cut_fraction = next
+            .shard_plan()
+            .map(|sg| {
+                if sg.num_edges == 0 {
+                    0.0
+                } else {
+                    sg.plan.cut_edges as f64 / sg.num_edges as f64
+                }
+            })
+            .unwrap_or(0.0);
+        let mut scheduled = false;
+        if let (Some(base), Some(score)) =
+            (ep.inner.base_score(), next.plan_score(&self.planner))
+        {
+            if score > base * (1.0 + self.cut_degradation) {
+                scheduled = self.spawn_repartition(&ep);
+            }
+        }
+        Ok(UpdateOutcome {
+            generation: next.deployed().generation(),
+            num_nodes: view.num_nodes,
+            num_edges: view.num_edges,
+            cut_fraction,
+            repartition_scheduled: scheduled,
+        })
+    }
+
+    /// Kick off a background full re-partition of `ep`'s current
+    /// topology. The expensive partition runs off-thread against a
+    /// snapshot; the swap is abandoned (`Ok(None)`) if another update
+    /// moved the generation meanwhile. Returns false if a re-partition
+    /// is already in flight.
+    fn spawn_repartition(&self, ep: &Endpoint) -> bool {
+        let mut slot = ep.inner.repartition.lock().unwrap();
+        if let Some(h) = slot.as_ref() {
+            if !h.is_finished() {
+                return false;
+            }
+        }
+        if let Some(h) = slot.take() {
+            let _ = h.join();
+        }
+        let inner = ep.inner.clone();
+        let planner = self.planner.clone();
+        let metrics = self.metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("gnnb-repartition/{}/{}", ep.tenant(), ep.model()))
+            .spawn(move || {
+                let Some(s0) = inner.current_session() else {
+                    return;
+                };
+                let generation = s0.deployed().generation();
+                // the cold partition runs before the quiesce, so the
+                // endpoint keeps serving while it builds
+                let Some(fresh) = s0.repartitioned() else {
+                    return;
+                };
+                let fresh = Arc::new(fresh);
+                let swapped = inner.quiesce_and_swap(|cur| {
+                    if cur.deployed().generation() != generation {
+                        return Ok(None); // a newer delta won; stale plan
+                    }
+                    Ok(Some(fresh.clone()))
+                });
+                if let Ok(Some(next)) = swapped {
+                    metrics.replans.fetch_add(1, Ordering::Relaxed);
+                    inner.set_base_score(next.plan_score(&planner));
+                }
+            })
+            .expect("failed to spawn repartition thread");
+        *slot = Some(handle);
+        true
     }
 
     /// Look up a live endpoint by key.
@@ -684,6 +860,18 @@ impl Server {
             &[],
             m.idle_evictions.load(Ordering::Relaxed),
         );
+        w.family(
+            "gnnb_updates_total",
+            "counter",
+            "topology deltas applied to live endpoints",
+        );
+        w.sample_u64("gnnb_updates_total", &[], m.updates.load(Ordering::Relaxed));
+        w.family(
+            "gnnb_replans_total",
+            "counter",
+            "plan swaps on live endpoints (degradation re-partitions and janitor re-plans)",
+        );
+        w.sample_u64("gnnb_replans_total", &[], m.replans.load(Ordering::Relaxed));
 
         w.family(
             "gnnb_peak_queue_depth",
@@ -789,6 +977,8 @@ impl Server {
                 "idle_evictions",
                 Json::num(m.idle_evictions.load(Ordering::Relaxed) as f64),
             ),
+            ("updates", Json::num(m.updates.load(Ordering::Relaxed) as f64)),
+            ("replans", Json::num(m.replans.load(Ordering::Relaxed) as f64)),
             (
                 "peak_queue",
                 Json::num(m.peak_queue.load(Ordering::Relaxed) as f64),
@@ -835,6 +1025,15 @@ impl Server {
     pub fn retire(&self, ep: &Endpoint) {
         let removed = self.registry.remove(ep.key());
         ep.close_and_join(CloseReason::Retired);
+        // drop the retired topology's cached shard plans (every policy
+        // variant) — nothing will ask for them again under this hash.
+        // Another endpoint serving the same topology keeps the `Arc`
+        // pinned in its session; it re-inserts on its own terms
+        if let Some(session) = ep.session() {
+            self.metrics
+                .plan_cache
+                .invalidate_topology(session.deployed().topology_hash());
+        }
         if removed.is_some() {
             self.metrics.retired.fetch_add(1, Ordering::Relaxed);
         }
@@ -878,10 +1077,17 @@ fn janitor_loop(
     registry: Arc<SessionRegistry>,
     metrics: Arc<Metrics>,
     planner: Arc<Planner>,
-    ttl: Duration,
+    ttl: Option<Duration>,
+    replan_every: Option<Duration>,
 ) {
-    let interval = (ttl / 4).clamp(Duration::from_millis(5), Duration::from_secs(1));
+    let interval = [ttl.map(|t| t / 4), replan_every.map(|t| t / 4)]
+        .into_iter()
+        .flatten()
+        .min()
+        .unwrap_or(Duration::from_secs(1))
+        .clamp(Duration::from_millis(5), Duration::from_secs(1));
     let (lock, cv) = &*stop;
+    let mut last_replan = clock::now_ns();
     loop {
         {
             let mut stopped = lock.lock().unwrap();
@@ -896,14 +1102,37 @@ fn janitor_loop(
                 return;
             }
         }
-        for ep in registry.take_idle(ttl) {
-            ep.close_and_join(CloseReason::Retired);
-            metrics.idle_evictions.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = ttl {
+            for ep in registry.take_idle(t) {
+                ep.close_and_join(CloseReason::Retired);
+                metrics.idle_evictions.fetch_add(1, Ordering::Relaxed);
+            }
         }
         // the calibration drain rides the same cadence: fold measured
         // service times into the planner, then age its corrections
         let records = metrics.drain_calibration();
         planner.absorb(&records);
         planner.decay();
+        // re-plan pass: long-lived pinned endpoints re-run the planner
+        // under the corrections just absorbed; a moved argmin swaps in
+        // via the same quiesce machinery topology updates use. Sessions
+        // whose plan is still the argmin return `None` and are untouched
+        if let Some(every) = replan_every {
+            if clock::ns_to_duration(clock::ns_since(last_replan)) >= every {
+                last_replan = clock::now_ns();
+                for ep in registry.snapshot() {
+                    if !ep.inner.is_pinned() || ep.is_closed() {
+                        continue;
+                    }
+                    let swapped = ep
+                        .inner
+                        .quiesce_and_swap(|cur| Ok(cur.replan(&planner).map(Arc::new)));
+                    if let Ok(Some(next)) = swapped {
+                        metrics.replans.fetch_add(1, Ordering::Relaxed);
+                        ep.inner.set_base_score(next.plan_score(&planner));
+                    }
+                }
+            }
+        }
     }
 }

@@ -113,6 +113,12 @@ struct QueueState {
     q: VecDeque<Job>,
     closed: Option<CloseReason>,
     fail_msg: Option<String>,
+    /// an updater asked the dispatcher to drain and park
+    /// ([`EndpointInner::quiesce_and_swap`])
+    paused: bool,
+    /// the dispatcher acknowledged the pause with an empty queue — every
+    /// request admitted against the old session has been flushed
+    quiesced: bool,
 }
 
 /// Shared state of one endpoint: the admission queue, its policy, the
@@ -120,8 +126,19 @@ struct QueueState {
 pub(crate) struct EndpointInner {
     pub(crate) key: SessionKey,
     /// pinned endpoints coalesce onto this session; floating endpoints
-    /// build their backend on the dispatcher thread instead
-    pub(crate) session: Option<Arc<Session>>,
+    /// build their backend on the dispatcher thread instead. Behind a
+    /// mutex because topology updates swap it
+    /// ([`EndpointInner::quiesce_and_swap`]) — the dispatcher re-reads it
+    /// per flush, never mid-flush
+    session: Mutex<Option<Arc<Session>>>,
+    /// serializes updaters (delta apply, janitor re-plan, background
+    /// re-partition) so at most one quiesce cycle is in flight
+    update_lock: Mutex<()>,
+    /// planner score of the plan as deployed / last re-partitioned — the
+    /// anchor the serving layer judges repair degradation against
+    base_score: Mutex<Option<f64>>,
+    /// in-flight background re-partition, joined on close
+    pub(crate) repartition: Mutex<Option<std::thread::JoinHandle<()>>>,
     pub(crate) policy: BatchPolicy,
     pub(crate) capacity: usize,
     pub(crate) metrics: Arc<Metrics>,
@@ -157,7 +174,10 @@ impl EndpointInner {
         let tenant_stages = metrics.tenant_stages(&key.tenant);
         Arc::new(EndpointInner {
             key,
-            session,
+            session: Mutex::new(session),
+            update_lock: Mutex::new(()),
+            base_score: Mutex::new(None),
+            repartition: Mutex::new(None),
             policy,
             capacity,
             metrics,
@@ -169,10 +189,114 @@ impl EndpointInner {
                 q: VecDeque::new(),
                 closed: None,
                 fail_msg: None,
+                paused: false,
+                quiesced: false,
             }),
             ready: Condvar::new(),
             worker: ServiceHandle::unattached(name),
         })
+    }
+
+    /// The currently pinned session (`None` for floating endpoints).
+    /// Updates swap this atomically between flushes, so two reads may
+    /// legitimately observe different generations.
+    pub(crate) fn current_session(&self) -> Option<Arc<Session>> {
+        self.session.lock().unwrap().clone()
+    }
+
+    /// Whether this endpoint serves a deployed topology.
+    pub(crate) fn is_pinned(&self) -> bool {
+        self.session.lock().unwrap().is_some()
+    }
+
+    /// The planner-score anchor for degradation checks.
+    pub(crate) fn base_score(&self) -> Option<f64> {
+        *self.base_score.lock().unwrap()
+    }
+
+    pub(crate) fn set_base_score(&self, score: Option<f64>) {
+        *self.base_score.lock().unwrap() = score;
+    }
+
+    /// Join a finished (or in-flight) background re-partition thread.
+    /// Called on the close path — after `close`, any such thread's
+    /// pending `quiesce_and_swap` observes the closed queue and bails,
+    /// so the join cannot deadlock.
+    pub(crate) fn join_repartition(&self) {
+        if let Some(h) = self.repartition.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Pause the dispatcher, wait until every request admitted against
+    /// the current session has been flushed, run `f` on that session,
+    /// install its replacement (if any), and resume.
+    ///
+    /// - `Ok(Some(next))` — `f` produced a successor; it is now the
+    ///   pinned session and `next` is returned.
+    /// - `Ok(None)` — `f` declined to swap (e.g. a re-plan that chose
+    ///   the incumbent path); nothing changed.
+    /// - `Err(e)` — the endpoint closed mid-quiesce or `f` rejected the
+    ///   update; nothing changed.
+    ///
+    /// Updaters are serialized by `update_lock`. Admission stays **open**
+    /// throughout — requests admitted during the pause simply queue (up
+    /// to capacity) and are served by the successor session; the
+    /// per-request input-length check in `flush_pinned` turns any
+    /// admission/update shape race into an individual typed error. Under
+    /// sustained saturation the quiesce waits for the first gap in which
+    /// the queue drains empty.
+    pub(crate) fn quiesce_and_swap(
+        &self,
+        f: impl FnOnce(&Arc<Session>) -> Result<Option<Arc<Session>>, ServeError>,
+    ) -> Result<Option<Arc<Session>>, ServeError> {
+        let _serial = self.update_lock.lock().unwrap();
+        let current = self.current_session().ok_or_else(|| {
+            ServeError::BadRequest(
+                "floating endpoint: no deployed topology to update".into(),
+            )
+        })?;
+        {
+            let mut s = self.state.lock().unwrap();
+            loop {
+                if let Some(reason) = s.closed {
+                    let e = self.close_error(reason, &s);
+                    s.paused = false;
+                    s.quiesced = false;
+                    drop(s);
+                    self.ready.notify_all();
+                    return Err(e);
+                }
+                if s.quiesced {
+                    break;
+                }
+                s.paused = true;
+                self.ready.notify_all();
+                s = self.ready.wait(s).unwrap();
+            }
+        }
+        // the dispatcher is parked on an empty queue; run the update
+        // outside the queue lock so admission never blocks on it
+        let result = f(&current);
+        if let Ok(Some(next)) = &result {
+            *self.session.lock().unwrap() = Some(next.clone());
+        }
+        let mut s = self.state.lock().unwrap();
+        s.paused = false;
+        s.quiesced = false;
+        drop(s);
+        self.ready.notify_all();
+        result
+    }
+
+    fn close_error(&self, reason: CloseReason, s: &QueueState) -> ServeError {
+        match reason {
+            CloseReason::Retired => ServeError::Retired,
+            CloseReason::Shutdown => ServeError::ShuttingDown,
+            CloseReason::Failed => ServeError::Backend(
+                s.fail_msg.clone().unwrap_or_else(|| "backend failed".into()),
+            ),
+        }
     }
 
     /// Admit one request, or reject with a typed error. Never blocks.
@@ -240,14 +364,28 @@ impl EndpointInner {
     fn next_batch(&self) -> Option<Vec<Job>> {
         let mut s = self.state.lock().unwrap();
         loop {
-            if s.q.len() >= self.policy.max_batch {
-                break;
-            }
             if s.closed.is_some() {
                 if s.q.is_empty() {
                     return None;
                 }
                 break; // drain the remainder before exiting
+            }
+            if s.paused {
+                // drain pre-pause work first; once quiesced latches, stay
+                // parked even if admissions refill the queue — those are
+                // served by the successor session after the swap
+                if !s.quiesced && !s.q.is_empty() {
+                    break;
+                }
+                if !s.quiesced {
+                    s.quiesced = true;
+                    self.ready.notify_all();
+                }
+                s = self.ready.wait(s).unwrap();
+                continue;
+            }
+            if s.q.len() >= self.policy.max_batch {
+                break;
             }
             match s.q.front() {
                 Some(oldest) => {
@@ -319,11 +457,13 @@ impl EndpointInner {
 /// Dispatcher body for a pinned endpoint: coalesce flushes into
 /// [`Session::run_batch`] over the deployed topology.
 pub(crate) fn pinned_loop(inner: Arc<EndpointInner>) {
-    let session = inner
-        .session
-        .clone()
-        .expect("pinned dispatcher requires a session");
+    // the session is re-read per flush, never mid-flush: topology updates
+    // swap it under quiesce, so every batch runs whole against one
+    // generation
     while let Some(batch) = inner.next_batch() {
+        let session = inner
+            .current_session()
+            .expect("pinned dispatcher requires a session");
         flush_pinned(&inner, &session, batch);
     }
 }
@@ -340,10 +480,23 @@ struct PinMeta {
 fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
     let m = &inner.metrics;
     let flush_start = clock::now_ns();
+    let want = session.expected_input_len();
     let mut xs: Vec<Vec<f32>> = Vec::with_capacity(batch.len());
     let mut meta: Vec<PinMeta> = Vec::with_capacity(batch.len());
     for job in batch {
         match job.payload {
+            // re-validated against the session actually serving the
+            // flush: a request admitted (and length-checked) against the
+            // previous generation of a node-count-changing update fails
+            // individually instead of poisoning the whole batch
+            Payload::Features(x) if x.len() != want => {
+                m.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = job.tx.send(Err(ServeError::BadRequest(format!(
+                    "expected {want} features for the deployed topology (generation {}), got {}",
+                    session.deployed().generation(),
+                    x.len()
+                ))));
+            }
             Payload::Features(x) => {
                 meta.push(PinMeta {
                     submitted_ns: job.submitted_ns,

@@ -44,12 +44,13 @@ use std::sync::{Arc, OnceLock};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{PlanCache, ShardStats};
+use crate::dyngraph::{DeltaError, GraphDelta};
 use crate::engine::{Engine, Mode, Workspace};
 use crate::graph::{Graph, GraphBatch, GraphView};
 use crate::model::{FixedPointFormat, Numerics};
 use crate::obs::calib::CalibKey;
 use crate::obs::span::TraceCtx;
-use crate::partition::{adaptive_k, topology_hash, ShardedGraph};
+use crate::partition::{adaptive_k, mix64, topology_hash, PlanCommStats, ShardedGraph};
 use crate::planner::{PlanContext, PlanReport, PlannedPath, Planner};
 
 pub use crate::engine::MathMode;
@@ -233,17 +234,29 @@ impl ExecutionPlan {
     }
 }
 
-/// A deployed topology: the graph plus its **memoized** content hash.
-/// The hash is computed at most once per handle no matter how many runs,
-/// sessions, or cache lookups consume it — the O(1)-warm-lookup half of
-/// the plan-cache story ([`PlanCache::get_or_build_hashed`] is the other
-/// half). [`DeployedGraph::hash_computes`] counts actual hash
-/// computations so tests can assert "zero re-hashes on warm hits".
+/// A deployed topology: the graph plus its **memoized** identity hash
+/// and mutation generation. The hash is computed at most once per
+/// lineage no matter how many runs, sessions, or cache lookups consume
+/// it — the O(1)-warm-lookup half of the plan-cache story
+/// ([`PlanCache::get_or_build_hashed`] is the other half).
+/// [`DeployedGraph::hash_computes`] counts actual hash computations so
+/// tests can assert "zero re-hashes on warm hits".
+///
+/// Generation semantics ([`crate::dyngraph`]): a handle at generation 0
+/// is identified by the true [`topology_hash`] of its graph; a
+/// [`DeployedGraph::mutate`] produces a *new* handle at generation + 1
+/// whose identity is the **chained version hash**
+/// `mix64(parent_hash ^ delta.fingerprint())` — preset, never computed
+/// from the O(V+E) tables. Identity still implies content (apply is
+/// deterministic, so equal chains from equal anchors are equal graphs),
+/// which is all the plan cache needs; the old generation's entries stay
+/// valid for their warm readers because they key under the old hash.
 #[derive(Debug)]
 pub struct DeployedGraph {
     graph: Arc<Graph>,
     hash: OnceLock<u64>,
     computes: AtomicU64,
+    generation: u64,
 }
 
 impl DeployedGraph {
@@ -252,6 +265,7 @@ impl DeployedGraph {
             graph: graph.into(),
             hash: OnceLock::new(),
             computes: AtomicU64::new(0),
+            generation: 0,
         }
     }
 
@@ -271,7 +285,10 @@ impl DeployedGraph {
         self.graph.num_edges
     }
 
-    /// The memoized [`topology_hash`] — computed on first use, then free.
+    /// The memoized identity hash: the true [`topology_hash`] for
+    /// generation-0 handles (computed on first use, then free), the
+    /// preset chained version hash for mutated ones. Either way this is
+    /// the hash half of every plan-cache key minted for this handle.
     pub fn topology_hash(&self) -> u64 {
         *self.hash.get_or_init(|| {
             self.computes.fetch_add(1, Ordering::Relaxed);
@@ -280,9 +297,50 @@ impl DeployedGraph {
     }
 
     /// How many times the hash was actually computed (0 or 1 — asserted
-    /// by the warm-path tests).
+    /// by the warm-path tests; always 0 for mutated handles, whose
+    /// chained hash is preset).
     pub fn hash_computes(&self) -> u64 {
         self.computes.load(Ordering::Relaxed)
+    }
+
+    /// Mutation generation: 0 at deploy, +1 per applied delta.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Apply a [`GraphDelta`], producing the next generation of this
+    /// topology: the incrementally patched graph
+    /// ([`Graph::apply_delta`] — bit-identical to a cold rebuild) under
+    /// a **preset** chained version hash, so the new handle never
+    /// performs an O(V+E) re-hash (`hash_computes` stays 0 — the
+    /// counter-assert the conformance suite leans on). A rejected delta
+    /// returns the typed error with `self` completely untouched.
+    pub fn mutate(&self, delta: &GraphDelta) -> Result<DeployedGraph, DeltaError> {
+        let next = self.graph.apply_delta(delta)?;
+        let hash = OnceLock::new();
+        let _ = hash.set(mix64(self.topology_hash() ^ delta.fingerprint()));
+        Ok(DeployedGraph {
+            graph: Arc::new(next),
+            hash,
+            computes: AtomicU64::new(0),
+            generation: self.generation + 1,
+        })
+    }
+
+    /// A second handle over the same topology, carrying the memoized
+    /// hash and generation (the underlying graph is `Arc`-shared). Used
+    /// when a re-plan swaps a session without changing the graph.
+    pub fn fork(&self) -> DeployedGraph {
+        let hash = OnceLock::new();
+        if let Some(&h) = self.hash.get() {
+            let _ = hash.set(h);
+        }
+        DeployedGraph {
+            graph: self.graph.clone(),
+            hash,
+            computes: AtomicU64::new(0),
+            generation: self.generation,
+        }
     }
 }
 
@@ -477,6 +535,7 @@ impl SessionBuilder {
             graph,
             path,
             plan_report,
+            policy: self.policy,
         })
     }
 
@@ -542,6 +601,10 @@ pub struct Session {
     graph: DeployedGraph,
     path: Path,
     plan_report: Option<Arc<PlanReport>>,
+    /// the builder's policy (pre-planner-override), kept so updates and
+    /// re-plans evaluate under the same contract the session was built
+    /// with
+    policy: ShardPolicy,
 }
 
 impl Session {
@@ -715,6 +778,143 @@ impl Session {
                 .clone(),
             Path::Whole { .. } => unreachable!("shard_plan_or_build on a whole-graph session"),
         }
+    }
+
+    /// A session over `graph`, inheriting everything else from `self`.
+    fn fork_onto(&self, graph: DeployedGraph, path: Path) -> Session {
+        Session {
+            engine: self.engine.clone(),
+            numerics: self.numerics,
+            mode: self.mode,
+            seed: self.seed,
+            plans: self.plans.clone(),
+            ws: self.ws.clone(),
+            graph,
+            path,
+            plan_report: self.plan_report.clone(),
+            policy: self.policy,
+        }
+    }
+
+    /// Apply a topology delta ([`crate::dyngraph`]), producing the
+    /// next-generation session. The execution path carries over; what
+    /// makes this incremental instead of a cold redeploy:
+    ///
+    /// - the graph is patched via [`Graph::apply_delta`] (bit-identical
+    ///   to a from-scratch rebuild — the conformance gate);
+    /// - the new [`DeployedGraph`] gets a preset chained version hash
+    ///   (generation + 1, zero hash computes);
+    /// - if this session's shard plan is materialized, it is **repaired**
+    ///   ([`ShardedGraph::repair`] — only touched shards re-extract),
+    ///   published into the shared plan cache under the new version hash
+    ///   via [`PlanCache::insert_prebuilt`] (no cache-side build), and
+    ///   the old generation's cache entries are invalidated — warm
+    ///   readers of the old session keep their pinned `Arc`s and are
+    ///   unaffected.
+    ///
+    /// A rejected delta returns the typed [`DeltaError`] with `self`,
+    /// its plan, and the cache untouched. Whether the repaired partition
+    /// is still *good* is deliberately not decided here — the serving
+    /// layer re-scores it ([`Session::plan_score`]) against the score
+    /// anchored at deploy and schedules a background re-partition past
+    /// its cut-degradation threshold.
+    pub fn apply_update(&self, delta: &GraphDelta) -> Result<Session, DeltaError> {
+        let next = self.graph.mutate(delta)?;
+        let path = match &self.path {
+            Path::Whole { parallel_batch } => Path::Whole {
+                parallel_batch: *parallel_batch,
+            },
+            Path::Sharded { k, plan } => {
+                let cell = OnceLock::new();
+                if let Some(current) = plan.get() {
+                    let repaired = Arc::new(current.repair(next.view(), delta));
+                    self.plans
+                        .insert_prebuilt(next.topology_hash(), *k, self.seed, repaired.clone());
+                    self.plans.invalidate_topology(self.graph.topology_hash());
+                    let _ = cell.set(repaired);
+                }
+                Path::Sharded { k: *k, plan: cell }
+            }
+        };
+        Ok(self.fork_onto(next, path))
+    }
+
+    /// Re-run the planner over the *current* topology and calibration
+    /// state, returning a replacement session when the chosen path
+    /// differs from this session's — `None` means the pinned plan is
+    /// still the argmin and nothing should change (the no-spurious-swap
+    /// contract the janitor's re-plan cadence relies on). The graph
+    /// handle is forked (same generation, memoized hash carried over),
+    /// so a re-plan never re-hashes and never mutates topology.
+    pub fn replan(&self, planner: &Planner) -> Option<Session> {
+        let ctx = PlanContext::for_engine(&self.engine, self.numerics, &self.policy);
+        let report = planner.plan(&ctx, self.graph.view());
+        let (chosen_k_seed, chosen_whole) = match report.chosen().path {
+            PlannedPath::Whole => (None, true),
+            PlannedPath::Sharded { k, seed } => (Some((k, seed)), false),
+        };
+        let unchanged = match (&self.path, chosen_k_seed) {
+            (Path::Whole { .. }, None) => true,
+            (Path::Sharded { k, .. }, Some((nk, nseed))) => *k == nk && nseed == self.seed,
+            _ => false,
+        };
+        if unchanged {
+            return None;
+        }
+        // force the memoized hash before forking so the new session
+        // starts warm
+        let _ = self.graph.topology_hash();
+        let path = if chosen_whole {
+            Path::Whole {
+                parallel_batch: true,
+            }
+        } else {
+            let (k, _) = chosen_k_seed.expect("sharded choice");
+            Path::Sharded {
+                k,
+                plan: OnceLock::new(),
+            }
+        };
+        let mut next = self.fork_onto(self.graph.fork(), path);
+        if let Some((_, seed)) = chosen_k_seed {
+            next.seed = seed;
+        }
+        next.plan_report = Some(Arc::new(report));
+        Some(next)
+    }
+
+    /// Calibrated planner score of the **materialized** shard plan (its
+    /// exact cut/halo stats, no re-partition, no K ladder). `None` for
+    /// whole-graph sessions and for sharded sessions that have not
+    /// resolved a plan yet — there is nothing whose degradation could be
+    /// judged.
+    pub(crate) fn plan_score(&self, planner: &Planner) -> Option<f64> {
+        let sg = self.shard_plan()?;
+        let ctx = PlanContext::for_engine(&self.engine, self.numerics, &self.policy);
+        let stats = PlanCommStats {
+            cut_edges: sg.plan.cut_edges,
+            halo_nodes: sg.halo_nodes(),
+            max_shard_nodes: sg.plan.shard_sizes().0,
+        };
+        Some(planner.rescore(&ctx, sg.num_nodes, sg.num_edges, sg.k(), &stats))
+    }
+
+    /// Cold full re-partition of the current topology at this session's
+    /// (K, seed) — the background recovery path when accumulated repairs
+    /// degraded the partition past the serving threshold. Replaces the
+    /// cache entry for the current generation with the fresh build and
+    /// returns the replacement session (`None` on whole-graph paths).
+    pub(crate) fn repartitioned(&self) -> Option<Session> {
+        let k = match &self.path {
+            Path::Whole { .. } => return None,
+            Path::Sharded { k, .. } => *k,
+        };
+        let fresh = Arc::new(ShardedGraph::build(self.graph.view(), k, self.seed));
+        self.plans
+            .insert_prebuilt(self.graph.topology_hash(), k, self.seed, fresh.clone());
+        let cell = OnceLock::new();
+        let _ = cell.set(fresh);
+        Some(self.fork_onto(self.graph.fork(), Path::Sharded { k, plan: cell }))
     }
 }
 

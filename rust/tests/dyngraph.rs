@@ -1,0 +1,573 @@
+//! Dynamic-graph acceptance suite: `GraphDelta` updates with
+//! incremental plan repair, end-to-end through sessions and the server.
+//!
+//! The headline conformance gate: a randomized 200-delta mutation trace
+//! on a citation-profile graph yields forward outputs **bit-identical**
+//! to a from-scratch rebuild at every step — whole-graph and sharded,
+//! both numerics — while counter-asserting that the repairs never
+//! triggered a full re-hash (`hash_computes` stays 0 on mutated
+//! handles) or a full re-partition (plan-cache `builds` stays at the
+//! deploy-time 1; repairs publish via `insert_prebuilt`).
+//!
+//! Satellites: degenerate deltas leave sessions intact (typed errors,
+//! no mutation); `Server::retire` drops the topology's cached plans;
+//! `Server::update` quiesces/repairs/resumes with an `apply_delta`
+//! trace span; degradation past the threshold schedules a background
+//! re-partition; the janitor's re-plan cadence swaps a session whose
+//! calibrated argmin moved.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use gnnbuilder::datasets::{self, LargeGraphStats};
+use gnnbuilder::dyngraph::{DeltaError, GraphDelta};
+use gnnbuilder::engine::{synth_weights, Engine};
+use gnnbuilder::graph::Graph;
+use gnnbuilder::model::{ConvType, ModelConfig};
+use gnnbuilder::obs::calib::CalibrationRecord;
+use gnnbuilder::obs::span::Stage;
+use gnnbuilder::planner::PlannedPath;
+use gnnbuilder::serve::{BatchPolicy, ServeError, Server, ServerConfig};
+use gnnbuilder::session::{
+    ExecutionPlan, Precision, ResolvedPath, Session, ShardK, ShardPolicy,
+};
+use gnnbuilder::util::rng::Rng;
+
+/// Citation-graph profile sized for a 200-step trace with forwards at
+/// every step (real profiles carry 500–1433-dim features).
+const TEST_STATS: LargeGraphStats = LargeGraphStats {
+    name: "dyngraph_test",
+    num_nodes: 400,
+    num_edges: 1800,
+    node_dim: 12,
+    num_classes: 4,
+    task: "node_classification",
+    mean_degree: 4.5,
+};
+
+const POLICY: ShardPolicy = ShardPolicy {
+    min_nodes: 1,
+    k: ShardK::Fixed(3),
+    seed: 17,
+};
+
+fn test_engine(name: &str, seed: u64) -> Engine {
+    let cfg = ModelConfig {
+        name: name.into(),
+        graph_input_dim: TEST_STATS.node_dim,
+        gnn_conv: ConvType::Gcn,
+        gnn_hidden_dim: 8,
+        gnn_out_dim: 6,
+        gnn_num_layers: 2,
+        mlp_hidden_dim: 6,
+        mlp_num_layers: 1,
+        output_dim: TEST_STATS.num_classes,
+        max_nodes: 2000,
+        max_edges: 20_000,
+        ..ModelConfig::default()
+    };
+    let weights = synth_weights(&cfg, seed);
+    Engine::new(cfg, &weights, TEST_STATS.mean_degree).unwrap()
+}
+
+/// Deterministic feature set for a given step and node count.
+fn features(step: usize, num_nodes: usize) -> Vec<f32> {
+    (0..num_nodes * TEST_STATS.node_dim)
+        .map(|i| ((i as f32 * 0.37 + step as f32 * 1.13).sin()) * 0.5)
+        .collect()
+}
+
+/// A random, always-valid delta against the current topology.
+fn random_delta(rng: &mut Rng, num_nodes: usize, edges: &[(u32, u32)]) -> GraphDelta {
+    let add_nodes = if rng.bool(0.3) { rng.range(1, 3) } else { 0 };
+    let n_after = num_nodes + add_nodes;
+    let mut d = GraphDelta::new().with_nodes(add_nodes);
+    for _ in 0..rng.range(1, 7) {
+        d = d.add_edge(rng.below(n_after) as u32, rng.below(n_after) as u32);
+    }
+    let n_remove = rng.range(0, 5).min(edges.len());
+    // distinct indices: duplicate *pairs* may appear, but then the edge
+    // multiset genuinely holds that many instances — still valid
+    for idx in rng.sample_indices(edges.len(), n_remove) {
+        let (s, t) = edges[idx];
+        d = d.remove_edge(s, t);
+    }
+    d
+}
+
+/// Reference application of a delta to a COO mirror: drop the first
+/// remaining occurrence per removal instance, append adds.
+fn mirror_apply(
+    num_nodes: usize,
+    edges: &[(u32, u32)],
+    d: &GraphDelta,
+) -> (usize, Vec<(u32, u32)>) {
+    let mut need: HashMap<(u32, u32), usize> = HashMap::new();
+    for &e in &d.remove_edges {
+        *need.entry(e).or_insert(0) += 1;
+    }
+    let mut out = Vec::with_capacity(edges.len() + d.add_edges.len());
+    for &e in edges {
+        match need.get_mut(&e) {
+            Some(c) if *c > 0 => *c -= 1,
+            _ => out.push(e),
+        }
+    }
+    out.extend_from_slice(&d.add_edges);
+    (num_nodes + d.add_nodes, out)
+}
+
+/// The acceptance gate: 200 random deltas chained through
+/// `Session::apply_update` answer bit-identically to sessions built
+/// from scratch on the rebuilt graph at **every** step — whole-graph
+/// and sharded paths, f32 and true ap_fixed — with zero re-hashes and
+/// zero re-partitions attributable to the repairs.
+#[test]
+fn mutation_trace_matches_cold_rebuild_at_every_step() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, TEST_STATS.num_nodes, 23);
+    let engine = test_engine("trace_gate", 3);
+    let cache = std::sync::Arc::new(gnnbuilder::coordinator::PlanCache::with_capacity(8));
+
+    let chained_builder = |precision: Precision, plan: ExecutionPlan| -> Session {
+        Session::builder(engine.clone())
+            .precision(precision)
+            .plan(plan)
+            .shard_policy(POLICY)
+            .plan_cache(cache.clone())
+            .graph(ng.graph.clone())
+            .build()
+            .unwrap()
+    };
+    let sharded_plan = || ExecutionPlan::Sharded {
+        k: POLICY.k,
+        plan: None,
+    };
+    // the session matrix under test, chained through apply_update
+    let mut chained = vec![
+        ("whole/f32", chained_builder(Precision::F32, ExecutionPlan::Single)),
+        ("whole/fixed", chained_builder(Precision::ApFixed, ExecutionPlan::Single)),
+        ("sharded/f32", chained_builder(Precision::F32, sharded_plan())),
+        ("sharded/fixed", chained_builder(Precision::ApFixed, sharded_plan())),
+    ];
+    for (_, s) in &chained {
+        s.prepare(); // materialize shard plans so updates take the repair path
+    }
+    // numerics does not enter the plan key: both sharded twins share one
+    // (topology, k, seed) entry, so the deploy-time build count is 1
+    let builds_after_deploy = cache.stats().builds.load(Ordering::Relaxed);
+    assert_eq!(builds_after_deploy, 1, "twins should share one partition");
+
+    let mut rng = Rng::seed_from(0xd916);
+    let mut num_nodes = ng.graph.num_nodes;
+    let mut edges = ng.graph.edges.clone();
+    for step in 0..200 {
+        let delta = random_delta(&mut rng, num_nodes, &edges);
+        let (n2, e2) = mirror_apply(num_nodes, &edges, &delta);
+        let rebuilt = Graph::from_coo(n2, &e2);
+        num_nodes = n2;
+        edges = e2;
+
+        let x = features(step, num_nodes);
+        let mut outputs: Vec<(&str, Vec<f32>)> = Vec::new();
+        for (tag, s) in &mut chained {
+            let next = s.apply_update(&delta).unwrap_or_else(|e| {
+                panic!("step {step}: {tag} rejected a valid delta: {e}")
+            });
+            // the delta patched, not rebuilt: the graph is bit-identical
+            // to from_coo on the mirror, the version hash was chained
+            // (never recomputed), and the generation advanced
+            assert_eq!(next.deployed().graph(), &rebuilt, "step {step} {tag}");
+            assert_eq!(next.deployed().generation(), step as u64 + 1);
+            assert_eq!(
+                next.deployed().hash_computes(),
+                0,
+                "step {step} {tag}: a mutated handle recomputed its hash"
+            );
+            outputs.push((*tag, next.run(&x).unwrap()));
+            *s = next;
+        }
+        // repairs are not builds: the cache served every generation via
+        // insert_prebuilt, so builds froze at the deploy-time count
+        assert_eq!(
+            cache.stats().builds.load(Ordering::Relaxed),
+            builds_after_deploy,
+            "step {step}: a repair triggered a full re-partition"
+        );
+
+        // from-scratch rebuild twins (own caches) agree bit-for-bit
+        for (tag, got) in &outputs {
+            let (precision, plan) = match *tag {
+                "whole/f32" => (Precision::F32, ExecutionPlan::Single),
+                "whole/fixed" => (Precision::ApFixed, ExecutionPlan::Single),
+                "sharded/f32" => (Precision::F32, sharded_plan()),
+                _ => (Precision::ApFixed, sharded_plan()),
+            };
+            let fresh = Session::builder(engine.clone())
+                .precision(precision)
+                .plan(plan)
+                .shard_policy(POLICY)
+                .graph(rebuilt.clone())
+                .build()
+                .unwrap();
+            assert_eq!(
+                got,
+                &fresh.run(&x).unwrap(),
+                "step {step}: {tag} diverged from the cold rebuild"
+            );
+        }
+        // and the bit-identity contract holds across paths per numerics
+        assert_eq!(outputs[0].1, outputs[2].1, "step {step}: f32 paths split");
+        assert_eq!(outputs[1].1, outputs[3].1, "step {step}: fixed paths split");
+    }
+    // old generations were invalidated as the chain advanced
+    assert!(cache.stats().invalidations.load(Ordering::Relaxed) > 0);
+}
+
+/// Degenerate deltas at the session level: an empty delta is an
+/// identity update (new generation, same topology, same outputs), and
+/// rejected deltas surface as typed errors with the session — and its
+/// memoized hash — untouched.
+#[test]
+fn degenerate_deltas_leave_the_session_intact() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 300, 31);
+    let engine = test_engine("degenerate", 5);
+    let session = Session::builder(engine)
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Sharded {
+            k: POLICY.k,
+            plan: None,
+        })
+        .shard_policy(POLICY)
+        .graph(ng.graph.clone())
+        .build()
+        .unwrap();
+    session.prepare();
+    let hash_before = session.deployed().topology_hash();
+    let y = session.run(&ng.x).unwrap();
+
+    // empty delta: next generation, identical topology and outputs
+    let next = session.apply_update(&GraphDelta::new()).unwrap();
+    assert_eq!(next.deployed().generation(), 1);
+    assert_eq!(next.deployed().graph(), &ng.graph);
+    assert_eq!(next.run(&ng.x).unwrap(), y);
+
+    // removing more instances of an edge than the multiset holds is a
+    // typed error before any work
+    let (s0, t0) = ng.graph.edges[0];
+    let instances = ng.graph.edges.iter().filter(|e| **e == (s0, t0)).count();
+    let mut missing = GraphDelta::new();
+    for _ in 0..instances + 1 {
+        missing = missing.remove_edge(s0, t0);
+    }
+    assert!(matches!(
+        session.apply_update(&missing),
+        Err(DeltaError::EdgeNotFound { .. })
+    ));
+    // an out-of-range endpoint likewise
+    let oor = GraphDelta::new().add_edge(0, 1_000_000);
+    assert!(matches!(
+        session.apply_update(&oor),
+        Err(DeltaError::NodeOutOfRange { .. })
+    ));
+    // the rejected updates mutated nothing: same hash, same answers,
+    // and no re-hash was spent discovering that
+    assert_eq!(session.deployed().topology_hash(), hash_before);
+    assert_eq!(session.deployed().hash_computes(), 1);
+    assert_eq!(session.run(&ng.x).unwrap(), y);
+}
+
+/// Satellite: retiring an endpoint drops the topology's cached shard
+/// plans — the cache's byte accounting goes to zero and the drop is
+/// counted as invalidations, not evictions.
+#[test]
+fn retire_drops_cached_plans_for_the_topology() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 400, 41);
+    let engine = test_engine("retire_inval", 7);
+    let server = Server::start(ServerConfig::default());
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Sharded {
+                    k: POLICY.k,
+                    plan: None,
+                })
+                .shard_policy(POLICY)
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    let cache = server.metrics().plan_cache.clone();
+    assert!(cache.approx_bytes() > 0, "deploy pre-warmed no plan");
+    let evictions_before = cache.stats().evictions.load(Ordering::Relaxed);
+
+    server.retire(&ep);
+    assert_eq!(cache.approx_bytes(), 0, "retire left plan bytes behind");
+    assert_eq!(cache.len(), 0);
+    assert!(cache.stats().invalidations.load(Ordering::Relaxed) >= 1);
+    assert_eq!(
+        cache.stats().evictions.load(Ordering::Relaxed),
+        evictions_before,
+        "invalidation was miscounted as LRU eviction"
+    );
+    server.shutdown();
+}
+
+/// `Server::update` end-to-end: quiesce, repair, resume. The endpoint
+/// keeps serving (same key, new generation), answers bit-identically
+/// to a cold session on the mutated topology, stamps an `apply_delta`
+/// trace span carrying the generation, and counts in
+/// `gnnb_updates_total`.
+#[test]
+fn server_update_applies_deltas_end_to_end() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 350, 57);
+    let engine = test_engine("serve_update", 9);
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        ..ServerConfig::default()
+    });
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine.clone())
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Sharded {
+                    k: POLICY.k,
+                    plan: None,
+                })
+                .shard_policy(POLICY)
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    // traffic against generation 0
+    assert_eq!(
+        ep.submit(ng.x.clone()).unwrap().wait().unwrap().output,
+        Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Sharded {
+                k: POLICY.k,
+                plan: None
+            })
+            .shard_policy(POLICY)
+            .graph(ng.graph.clone())
+            .build()
+            .unwrap()
+            .run(&ng.x)
+            .unwrap()
+    );
+    let _ = server.drain_spans();
+
+    let delta = GraphDelta::new()
+        .add_edge(0, 1)
+        .add_edge(5, 9)
+        .remove_edge(ng.graph.edges[0].0, ng.graph.edges[0].1);
+    let outcome = server.update("acme", ep.key(), &delta).unwrap();
+    assert_eq!(outcome.generation, 1);
+    assert_eq!(outcome.num_nodes, ng.graph.num_nodes);
+    assert_eq!(outcome.num_edges, ng.graph.num_edges + 1);
+    assert!(outcome.cut_fraction >= 0.0 && outcome.cut_fraction <= 1.0);
+    assert_eq!(server.metrics().updates.load(Ordering::Relaxed), 1);
+
+    // the update stamped a root apply_delta span carrying the generation
+    let spans = server.drain_spans();
+    let apply: Vec<_> = spans
+        .iter()
+        .filter(|s| s.stage == Stage::ApplyDelta)
+        .collect();
+    assert_eq!(apply.len(), 1, "expected exactly one apply_delta span");
+    assert_eq!(apply[0].meta, 1);
+
+    // post-update traffic answers on the mutated topology, bit-identical
+    // to a cold session built on the same mutation
+    let mutated = ng.graph.apply_delta(&delta).unwrap();
+    let cold = Session::builder(engine)
+        .precision(Precision::F32)
+        .plan(ExecutionPlan::Sharded {
+            k: POLICY.k,
+            plan: None,
+        })
+        .shard_policy(POLICY)
+        .graph(mutated)
+        .build()
+        .unwrap();
+    assert_eq!(
+        ep.submit(ng.x.clone()).unwrap().wait().unwrap().output,
+        cold.run(&ng.x).unwrap()
+    );
+    assert_eq!(ep.session().unwrap().deployed().generation(), 1);
+
+    // typed rejections leave the endpoint serving generation 1
+    let bad = GraphDelta::new().add_edge(0, 999_999);
+    match server.update("acme", ep.key(), &bad) {
+        Err(ServeError::BadRequest(_)) => {}
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    match server.update("mallory", ep.key(), &GraphDelta::new()) {
+        Err(ServeError::BadRequest(_)) => {}
+        other => panic!("expected tenant-mismatch BadRequest, got {other:?}"),
+    }
+    assert_eq!(ep.session().unwrap().deployed().generation(), 1);
+    assert!(ep.submit(ng.x.clone()).unwrap().wait().is_ok());
+    server.shutdown();
+}
+
+/// Degradation response: with the threshold forced negative, any update
+/// re-scores worse than `base × (1 + cut_degradation)` and schedules a
+/// background full re-partition, which swaps in without changing the
+/// generation and counts in `gnnb_replans_total`.
+#[test]
+fn degraded_updates_schedule_a_background_repartition() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 400, 71);
+    let engine = test_engine("degradation", 11);
+    let server = Server::start(ServerConfig {
+        cut_degradation: -1.0, // any positive score "degrades"
+        ..ServerConfig::default()
+    });
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Sharded {
+                    k: POLICY.k,
+                    plan: None,
+                })
+                .shard_policy(POLICY)
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    let outcome = server
+        .update("acme", ep.key(), &GraphDelta::new().add_edge(1, 2))
+        .unwrap();
+    assert!(
+        outcome.repartition_scheduled,
+        "negative threshold did not trip the degradation check"
+    );
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.metrics().replans.load(Ordering::Relaxed) == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "background re-partition never swapped in"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the swap kept the generation (same topology, fresh partition) and
+    // the endpoint keeps answering
+    assert_eq!(ep.session().unwrap().deployed().generation(), 1);
+    assert!(ep.submit(ng.x.clone()).unwrap().wait().is_ok());
+    server.shutdown();
+}
+
+/// ROADMAP follow-up (b): the janitor re-plans long-lived deployments
+/// on its cadence. A fabricated calibration slowdown on the deployed
+/// whole-graph shape moves the argmin to a sharded plan; the janitor
+/// quiesce-and-swaps it in without a redeploy.
+#[test]
+fn janitor_replans_a_stale_deployment_on_cadence() {
+    // small enough that the analytic model prefers the whole path
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 50, 83);
+    let engine = test_engine("janitor_replan", 13);
+    let server = Server::start(ServerConfig {
+        replan_interval: Some(Duration::from_millis(20)),
+        ..ServerConfig::default()
+    });
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Planned)
+                .shard_policy(ShardPolicy {
+                    min_nodes: 1,
+                    ..POLICY
+                })
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    let session = ep.session().unwrap();
+    let baseline = *session.plan_report().unwrap().chosen();
+    assert_eq!(baseline.path, PlannedPath::Whole);
+    let y = session.run(&ng.x).unwrap();
+
+    // as if live traffic had measured the whole path catastrophically
+    // slow on this shape (the janitor decays this every tick, so make
+    // it enormous — the first re-plan pass must still see it)
+    server.planner().absorb(&[CalibrationRecord {
+        key: baseline.key,
+        dispatches: 64,
+        graphs: 64,
+        total_service_secs: 64.0 * 1.0e8,
+    }]);
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let current = ep.session().unwrap();
+        if matches!(current.resolved_path(), ResolvedPath::Sharded { .. }) {
+            // swapped sessions still answer bit-identically
+            assert_eq!(current.run(&ng.x).unwrap(), y);
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "janitor never re-planned the stale deployment"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(server.metrics().replans.load(Ordering::Relaxed) >= 1);
+    assert!(ep.submit(ng.x.clone()).unwrap().wait().is_ok());
+    server.shutdown();
+}
+
+/// Requests already admitted when an update lands are drained against
+/// the old generation first; requests validated against the old node
+/// count but flushed after a node-adding update fail individually with
+/// a typed error instead of poisoning the batch.
+#[test]
+fn node_adding_updates_turn_stale_length_requests_into_typed_errors() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 200, 91);
+    let engine = test_engine("stale_len", 15);
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 4,
+            // long deadline: queued work sits until the update quiesce
+            // forces the drain, making the race deterministic
+            max_wait: Duration::from_millis(250),
+        },
+        ..ServerConfig::default()
+    });
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Single)
+                .shard_policy(POLICY)
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    // one queued request admitted against generation 0
+    let pre = ep.submit(ng.x.clone()).unwrap();
+    // the update quiesces: the queued request drains on generation 0
+    let outcome = server
+        .update(
+            "acme",
+            ep.key(),
+            &GraphDelta::new().with_nodes(2).add_edge(200, 0),
+        )
+        .unwrap();
+    assert_eq!(outcome.num_nodes, 202);
+    assert!(pre.wait().is_ok(), "pre-update request lost in the swap");
+    // old-length features no longer fit generation 1
+    match ep.submit(ng.x.clone()) {
+        Err(ServeError::BadRequest(_)) => {}
+        other => panic!("expected a length mismatch, got {other:?}"),
+    }
+    // right-sized features flow
+    let x2 = features(1, 202);
+    assert!(ep.submit(x2).unwrap().wait().is_ok());
+    server.shutdown();
+}

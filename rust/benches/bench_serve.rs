@@ -13,6 +13,13 @@
 //! fractional overhead is emitted as `tracing_overhead_frac` and — on
 //! full (non-`GNNB_BENCH_FAST`) runs — asserted below 5 %, the
 //! always-on-cheap contract of `obs/`.
+//!
+//! A fourth arm measures the idle-endpoint cost of the shared dispatch
+//! core: the same 10-active-endpoint burst with 1000 idle endpoints
+//! deployed alongside (100 under `GNNB_BENCH_FAST`) vs the 10 alone.
+//! Idle endpoints hold registry + timer-wheel state only — no parked
+//! thread each — so the fractional slowdown (`idle_cost_frac`) should
+//! be noise.
 
 use std::sync::atomic::Ordering;
 use std::time::Duration;
@@ -170,6 +177,50 @@ fn main() {
         );
     }
 
+    // idle-endpoint cost: a mostly-idle fleet must be ~free. Deploy a
+    // crowd of idle endpoints (distinct tenants, one small shared
+    // topology) next to 10 active ones and burst only the active set;
+    // the wheel + worker pool should price the idle 99% at zero.
+    let fast = std::env::var("GNNB_BENCH_FAST").is_ok();
+    let idle_count = if fast { 100usize } else { 1000 };
+    let active_count = 10usize;
+    let ng_idle = datasets::gen_citation_graph(stats, 64, 11);
+    let idle_arm = |idle: usize, label: &str| {
+        let server = server_with(64);
+        for i in 0..idle {
+            server
+                .deploy(
+                    &format!("idle{i}"),
+                    Session::builder(engine.clone())
+                        .precision(Precision::F32)
+                        .plan(ExecutionPlan::Batched { workspace: 0 })
+                        .graph(ng_idle.graph.clone()),
+                )
+                .unwrap();
+        }
+        let actives: Vec<_> = (0..active_count)
+            .map(|i| server.deploy(&format!("active{i}"), builder()).unwrap())
+            .collect();
+        let r = b.run(&format!("serve/idle_cost/{label}"), || {
+            for ep in &actives {
+                burst(ep, &ng.x, 4);
+            }
+        });
+        server.shutdown();
+        r
+    };
+    let ten_only = idle_arm(0, "active_only");
+    let with_idle = idle_arm(idle_count, "with_idle_fleet");
+    let idle_cost_frac =
+        (with_idle.summary.mean - ten_only.summary.mean) / ten_only.summary.mean.max(1e-12);
+    println!(
+        "idle-endpoint cost: {idle_count} idle + {active_count} active {:.3} ms vs \
+         {active_count}-only {:.3} ms ({:+.2}%)",
+        with_idle.summary.mean * 1e3,
+        ten_only.summary.mean * 1e3,
+        idle_cost_frac * 100.0
+    );
+
     let report = Json::obj(vec![
         (
             "graph",
@@ -187,6 +238,16 @@ fn main() {
                 ("on_mean_s", Json::num(on.summary.mean)),
                 ("off_mean_s", Json::num(off.summary.mean)),
                 ("tracing_overhead_frac", Json::num(overhead_frac)),
+            ]),
+        ),
+        (
+            "idle_endpoint_cost",
+            Json::obj(vec![
+                ("idle_endpoints", Json::num(idle_count as f64)),
+                ("active_endpoints", Json::num(active_count as f64)),
+                ("with_idle_mean_s", Json::num(with_idle.summary.mean)),
+                ("active_only_mean_s", Json::num(ten_only.summary.mean)),
+                ("idle_cost_frac", Json::num(idle_cost_frac)),
             ]),
         ),
     ]);

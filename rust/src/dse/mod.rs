@@ -39,7 +39,11 @@ pub struct Candidate {
     pub pred_bram: f64,
 }
 
-fn admissible(cfg: &ModelConfig, c: &Constraints) -> bool {
+/// Whether a config satisfies the structural constraints (conv pin,
+/// minimum hidden width) — the pre-resource filter both searches apply,
+/// exported so external candidate sets (e.g. the CLI's
+/// calibrated-rerank sample) can apply the same admission rule.
+pub fn admissible(cfg: &ModelConfig, c: &Constraints) -> bool {
     if let Some(conv) = c.fix_conv {
         if cfg.gnn_conv != conv {
             return false;

@@ -41,7 +41,7 @@
 
 use super::aggregations::Aggregator;
 use super::{reference, Embeds, Mat, MathMode, Mode, GIN_EPS, PNA_AGGREGATORS};
-use crate::fixed::Fixed;
+use crate::fixed::QuantParams;
 use crate::graph::GraphView;
 use crate::model::{FixedPointFormat, Pooling};
 
@@ -54,13 +54,25 @@ const LANES: usize = 16;
 /// per lane: mean, m2, min, max, sum).
 const WEL_LANES: usize = 8;
 
-/// Quantize a buffer in place when a fixed format is active. The format
-/// match is hoisted out of the element loop — callers quantize whole
-/// rows/buffers, never single elements.
+/// Quantize a buffer in place when a fixed format is active. The scale
+/// and saturation bounds are hoisted once into a [`QuantParams`] and the
+/// body runs over `LANES`-wide tiles (fixed-size chunks the compiler
+/// unrolls into independent per-lane round trips, same shape as the
+/// linear/aggregation tiles) with a scalar tail for the `len % LANES`
+/// remainder. `QuantParams::quantize` is pinned bit-identical to the
+/// `Fixed` round trip, so exact-mode parity with `engine/reference` is
+/// unchanged.
 pub(crate) fn maybe_quantize(xs: &mut [f32], q: Option<FixedPointFormat>) {
     if let Some(fmt) = q {
-        for x in xs.iter_mut() {
-            *x = Fixed::from_f32(*x, fmt).to_f32(fmt);
+        let qp = QuantParams::new(fmt);
+        let mut tiles = xs.chunks_exact_mut(LANES);
+        for tile in &mut tiles {
+            for x in tile.iter_mut() {
+                *x = qp.quantize(*x);
+            }
+        }
+        for x in tiles.into_remainder() {
+            *x = qp.quantize(*x);
         }
     }
 }
@@ -736,6 +748,33 @@ mod tests {
         let mut out = vec![0.0; h.cols];
         global_pool_into(h, p, &mut out);
         out
+    }
+
+    #[test]
+    fn maybe_quantize_lane_tiles_match_scalar_round_trip() {
+        use crate::fixed::Fixed;
+        let fmt = FixedPointFormat {
+            total_bits: 16,
+            int_bits: 10,
+        };
+        let mut rng = Rng::new(0x9a7e);
+        // lengths straddling the LANES boundary exercise full tiles,
+        // the scalar remainder, and the degenerate all-tail cases
+        for len in [0, 1, 7, LANES - 1, LANES, LANES + 1, 3 * LANES + 5] {
+            let src: Vec<f32> = (0..len)
+                .map(|_| rng.range_f64(-600.0, 600.0) as f32)
+                .collect();
+            let mut got = src.clone();
+            maybe_quantize(&mut got, Some(fmt));
+            for (i, (&g, &x)) in got.iter().zip(&src).enumerate() {
+                let want = Fixed::from_f32(x, fmt).to_f32(fmt);
+                assert_eq!(g.to_bits(), want.to_bits(), "len {len} idx {i}: {x}");
+            }
+            // None passes through untouched
+            let mut pass = src.clone();
+            maybe_quantize(&mut pass, None);
+            assert_eq!(pass, src);
+        }
     }
 
     #[test]

@@ -116,12 +116,71 @@ impl Fixed {
     }
 }
 
+/// Precomputed constants of one format's fake-quant round trip, hoisted
+/// out of per-element loops so lane-tiled kernels can quantize a whole
+/// tile without re-deriving the scale and saturation bounds per element
+/// (`1u64 << frac_bits` plus two `raw_bounds` casts per value, which the
+/// optimizer cannot hoist across the opaque `FixedPointFormat` match).
+///
+/// [`QuantParams::quantize`] is pinned **bit-identical** to
+/// `Fixed::from_f32(x, fmt).to_f32(fmt)`: same f64 widening, same
+/// multiply-round-saturate order, same division on the way back. The
+/// interior case is exact because `r` is an integral f64 inside the
+/// payload bounds, so the reference's `i64` round trip (`r as i64` then
+/// `raw as f64`) reproduces `r` exactly; the saturation cases compare
+/// against and return the *same* `lo as f64` / `hi as f64` values the
+/// reference computes. `MathMode::Exact` parity with
+/// [`crate::engine::reference`] therefore survives the hoist.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantParams {
+    scale: f64,
+    lo: f64,
+    hi: f64,
+}
+
+impl QuantParams {
+    pub fn new(fmt: FixedPointFormat) -> QuantParams {
+        let (lo, hi) = raw_bounds(fmt);
+        QuantParams {
+            scale: (1u64 << fmt.frac_bits()) as f64,
+            lo: lo as f64,
+            hi: hi as f64,
+        }
+    }
+
+    /// One fake-quant round trip: quantize `x` to the fixed grid and
+    /// back. Bit-identical to `Fixed::from_f32(x, fmt).to_f32(fmt)`
+    /// (see the type docs for the exactness argument), including the
+    /// non-finite saturation branch (±inf and NaN saturate by sign,
+    /// exactly as [`Fixed::from_f64`] does).
+    #[inline]
+    pub fn quantize(self, x: f32) -> f32 {
+        let scaled = x as f64 * self.scale;
+        let r = if !scaled.is_finite() {
+            if scaled.is_sign_negative() {
+                self.lo
+            } else {
+                self.hi
+            }
+        } else {
+            let r = scaled.round();
+            if r <= self.lo {
+                self.lo
+            } else if r >= self.hi {
+                self.hi
+            } else {
+                r
+            }
+        };
+        (r / self.scale) as f32
+    }
+}
+
 /// Quantize an f32 slice to the fixed grid and back (fake-quant round trip,
 /// numerically identical to `python/compile/quant.quantize`).
 pub fn quantize_slice(xs: &[f32], fmt: FixedPointFormat) -> Vec<f32> {
-    xs.iter()
-        .map(|&x| Fixed::from_f32(x, fmt).to_f32(fmt))
-        .collect()
+    let q = QuantParams::new(fmt);
+    xs.iter().map(|&x| q.quantize(x)).collect()
 }
 
 /// Machine epsilon of the format (one LSB).
@@ -223,6 +282,53 @@ mod tests {
                 Err(format!("{x}*{y}: got {got}, want {want}"))
             }
         });
+    }
+
+    #[test]
+    fn quant_params_bit_identical_to_fixed_round_trip() {
+        // the hoisted fast path must be indistinguishable from the
+        // reference op-by-op round trip — compared on raw bits so that
+        // NaN payloads and signed zeros count too
+        let specials = [
+            0.0f32,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -f32::NAN,
+            f32::MAX,
+            f32::MIN,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1e30,
+            -1e30,
+            511.9999,
+            -512.0001,
+            0.0078126,
+            1.0 / 3.0,
+        ];
+        for fmt in [Q16_10, Q32_16] {
+            let q = QuantParams::new(fmt);
+            for &x in &specials {
+                let want = Fixed::from_f32(x, fmt).to_f32(fmt);
+                let got = q.quantize(x);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{fmt:?} x={x}: got {got}, want {want}"
+                );
+            }
+            check("quant-params-bitwise", 500, 1000, |rng, _| {
+                let x = rng.range_f64(-600.0, 600.0) as f32;
+                let want = Fixed::from_f32(x, fmt).to_f32(fmt);
+                let got = q.quantize(x);
+                if got.to_bits() == want.to_bits() {
+                    Ok(())
+                } else {
+                    Err(format!("x={x}: got {got}, want {want}"))
+                }
+            });
+        }
     }
 
     #[test]

@@ -33,13 +33,21 @@
 //! Serving is multi-tenant and topology-aware: the [`serve`] layer pins
 //! pre-warmed sessions per `(tenant, model, topology)` in a
 //! [`serve::SessionKey`]-indexed registry (explicit deploy/retire,
-//! per-tenant quotas, idle eviction) and its micro-batching scheduler
-//! coalesces concurrent requests against one deployed graph into single
-//! [`session::Session::run_batch`] calls — bit-identical to per-request
-//! dispatch, counter-asserted via [`serve::Metrics`]. Submission is
-//! streaming: [`serve::Endpoint::submit`] returns a typed
-//! [`serve::Ticket`] with explicit backpressure
-//! ([`serve::ServeError::Overloaded`]). Requests that carry their own
+//! per-tenant quotas, incremental idle eviction) and its micro-batching
+//! scheduler coalesces concurrent requests against one deployed graph
+//! into single [`session::Session::run_batch`] calls — bit-identical to
+//! per-request dispatch, counter-asserted via [`serve::Metrics`]. All
+//! endpoints share one dispatch core (`serve/dispatch.rs`): flush
+//! deadlines live on a hashed timer wheel (an idle endpoint is a wheel
+//! entry, not a parked thread), ready endpoints drain through a
+//! weighted deficit-round-robin ring
+//! ([`serve::ServerConfig::tenant_weights`]) into a fixed worker pool
+//! sized to cores ([`serve::ServerConfig::dispatch_threads`]), so a
+//! thousand mostly-idle tenants cost a handful of threads. Submission
+//! is streaming: [`serve::Endpoint::submit`] returns a typed,
+//! waker-driven [`serve::Ticket`] (slot completion; `wait`,
+//! `wait_timeout`, `try_wait`, or an `on_ready` callback) with explicit
+//! backpressure ([`serve::ServeError::Overloaded`]). Requests that carry their own
 //! graph (molecule workloads, PJRT replicas) flow through *floating*
 //! endpoints instead: flushes pack a [`graph::GraphBatch`] arena for the
 //! engine's packed-batch runner over per-worker zero-alloc
@@ -103,7 +111,11 @@
 //! pin the argmin — with the `Auto` heuristic's resolution always among
 //! the scored candidates, so a planned session never scores worse than
 //! `Auto` under the calibrated model. `gnnbuilder plan --explain`
-//! prints the scored table.
+//! prints the scored table. Warm corrections persist:
+//! [`serve::Server::export_calibration`] snapshots the planner's cells
+//! to a versioned JSON artifact that `gnnbuilder dse --calibration`
+//! restores ([`perfmodel::calibration::calibrator_from_json`]) to
+//! rerank candidate designs under previously measured traffic.
 
 pub mod baselines;
 pub mod bench;

@@ -15,7 +15,9 @@ use gnnbuilder::experiments::{self, Options};
 use gnnbuilder::hls::{self, GraphStats};
 use gnnbuilder::model::space::DesignSpace;
 use gnnbuilder::model::{benchmark_config, ConvType, ModelConfig};
+use gnnbuilder::obs::calib::CalibKey;
 use gnnbuilder::obs::clock;
+use gnnbuilder::perfmodel::calibration::calibrator_from_json;
 use gnnbuilder::perfmodel::{build_database, ForestParams, PerfModel};
 use gnnbuilder::planner::{PlannedPath, Planner};
 use gnnbuilder::serve::{BatchPolicy, Server, ServerConfig};
@@ -33,6 +35,8 @@ USAGE:
                      [--parallel] [--out DIR] [--run-testbench]
   gnnbuilder synth   --conv ... --dataset ... [--parallel]    (simulated Vitis HLS)
   gnnbuilder dse     [--budget N] [--max-bram N] [--conv ...] [--db-size N] [--seed N]
+                     [--calibration PATH]       (also rerank a candidate sample under a
+                                                 serving-exported calibration artifact)
   gnnbuilder shard   [--dataset cora|pubmed|reddit] [--nodes N] [--k N (0 = adaptive)]
                      [--conv ...] [--hidden N] [--layers N] [--seed N]
                      [--plan-cache-bytes N (0 = count-bounded cache)]
@@ -45,7 +49,8 @@ USAGE:
   gnnbuilder serve   [--tenants N] [--requests N] [--nodes N] [--conv ...] [--hidden N]
                      [--max-batch N] [--wait-us N] [--queue-cap N] [--tenant-quota N]
                      [--seed N]              (multi-tenant micro-batched serving demo;
-                                              dumps Prometheus metrics to artifacts/)
+                                              dumps Prometheus metrics + a calibration
+                                              snapshot to artifacts/)
   gnnbuilder metrics [--json] [--requests N] [--nodes N] [--conv ...] [--seed N]
                                             (serve a demo burst, print the exporters)
   gnnbuilder list                                             (artifacts in manifest)
@@ -196,6 +201,7 @@ fn cmd_dse() -> Result<()> {
     let db_size = args.get_usize("db-size", 400)?;
     let seed = args.get_u64("seed", 2023)?;
     let conv = args.get("conv").map(ConvType::parse).transpose()?;
+    let calibration = args.get("calibration").map(str::to_string);
     args.reject_unknown()?;
 
     let space = DesignSpace::default();
@@ -249,6 +255,47 @@ fn cmd_dse() -> Result<()> {
             );
         }
         None => bail!("no feasible configuration under the constraints"),
+    }
+
+    // serving feedback: re-rank a feasible sample under the corrections a
+    // live deployment exported (`gnnbuilder serve` →
+    // artifacts/serve_calibration.json) — a design that looked fast under
+    // the direct-fit model but measures slow in serving sinks here
+    if let Some(path) = calibration {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading calibration artifact `{path}`: {e}"))?;
+        let cal = calibrator_from_json(&gnnbuilder::util::json::Json::parse(&text)?)?;
+        println!(
+            "calibration: {} cell(s) loaded from {path}; reranking a feasible sample…",
+            cal.len()
+        );
+        let qm9 = GraphStats::from_dataset(&datasets::QM9);
+        let nodes_log2 = CalibKey::log2_bucket(qm9.num_nodes as usize);
+        let edges_log2 = CalibKey::log2_bucket(qm9.num_edges as usize);
+        let sample: Vec<_> = dse::sample_candidates(&space, &pm, 512, seed)
+            .into_iter()
+            .filter(|c| dse::admissible(&c.config, &constraints) && c.pred_bram <= max_bram)
+            .collect();
+        let ranked = dse::rerank_calibrated(sample, &cal, |c| CalibKey {
+            conv: c.config.gnn_conv,
+            numerics: c.config.numerics,
+            sharded: false,
+            k: 1,
+            nodes_log2,
+            edges_log2,
+        });
+        println!("top designs under serving-calibrated latency:");
+        for c in ranked.iter().take(5) {
+            println!(
+                "  {:>8.3} ms  BRAM {:>5.0}  {} hidden={} out={} layers={}",
+                c.pred_latency_ms,
+                c.pred_bram,
+                c.config.gnn_conv.as_str(),
+                c.config.gnn_hidden_dim,
+                c.config.gnn_out_dim,
+                c.config.gnn_num_layers
+            );
+        }
     }
     Ok(())
 }
@@ -653,6 +700,14 @@ fn cmd_serve() -> Result<()> {
     let _ = std::fs::create_dir_all(prom_path.parent().unwrap());
     std::fs::write(&prom_path, server.export_metrics())?;
     println!("final Prometheus rendering written to {}", prom_path.display());
+    // persist the planner's calibration cells so an offline DSE run can
+    // rank designs under serving-observed corrections
+    let cal_path = gnnbuilder::artifacts_dir().join("serve_calibration.json");
+    std::fs::write(&cal_path, server.export_calibration().to_string_pretty())?;
+    println!(
+        "calibration snapshot written to {} (feed it back with `gnnbuilder dse --calibration`)",
+        cal_path.display()
+    );
     server.shutdown();
     Ok(())
 }

@@ -67,6 +67,10 @@ pub enum Stage {
     /// a topology delta applied to a live endpoint (quiesce → repair →
     /// swap), meta = resulting graph generation
     ApplyDelta,
+    /// a flush deadline fired on the shared timer wheel: start = the
+    /// armed deadline, end = when the timer thread actually fired it,
+    /// meta = that wheel lag in nanoseconds (carrier request only)
+    TimerFire,
 }
 
 impl Stage {
@@ -81,6 +85,7 @@ impl Stage {
             Stage::HaloExchange => "halo_exchange",
             Stage::Head => "head",
             Stage::ApplyDelta => "apply_delta",
+            Stage::TimerFire => "timer_fire",
         }
     }
 }

@@ -20,8 +20,11 @@
 
 use std::collections::HashMap;
 
-use crate::model::Numerics;
+use anyhow::{bail, Result};
+
+use crate::model::{ConvType, Numerics};
 use crate::obs::calib::{CalibKey, CalibrationRecord};
+use crate::util::json::Json;
 
 /// EWMA state for one workload shape.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -184,6 +187,14 @@ impl LatencyCalibrator {
         self.cells.retain(|_, c| c.freshness >= EVICT_FRESHNESS);
     }
 
+    /// Install one pre-computed cell verbatim — the artifact-restore
+    /// path ([`calibrator_from_json`]). Live traffic goes through
+    /// [`observe`](LatencyCalibrator::observe); this bypasses the EWMA
+    /// because the cell *is* the EWMA state being restored.
+    pub fn insert_cell(&mut self, key: CalibKey, cell: CalibCell) {
+        self.cells.insert(key, cell);
+    }
+
     /// Snapshot of every cell in deterministic shape order.
     pub fn cells(&self) -> Vec<(CalibKey, CalibCell)> {
         let mut out: Vec<(CalibKey, CalibCell)> =
@@ -210,10 +221,82 @@ impl LatencyCalibrator {
     }
 }
 
+/// Serialize calibration cells into a versioned JSON artifact — the
+/// shape `serve::Server::export_calibration` writes and
+/// `gnnbuilder dse --calibration <path>` reads back, so corrections
+/// learned from live serving traffic survive a process restart and can
+/// steer an offline DSE rerank.
+pub fn calibration_to_json(cells: &[(CalibKey, CalibCell)]) -> Json {
+    let rows = cells
+        .iter()
+        .map(|(k, c)| {
+            Json::obj(vec![
+                ("conv", Json::str(k.conv.as_str())),
+                (
+                    "numerics",
+                    Json::str(match k.numerics {
+                        Numerics::Float => "float",
+                        Numerics::Fixed => "fixed",
+                    }),
+                ),
+                ("sharded", Json::Bool(k.sharded)),
+                ("k", Json::num(k.k as f64)),
+                ("nodes_log2", Json::num(k.nodes_log2 as f64)),
+                ("edges_log2", Json::num(k.edges_log2 as f64)),
+                ("observed_secs", Json::num(c.observed_secs)),
+                ("correction", Json::num(c.correction)),
+                ("graphs", Json::num(c.graphs as f64)),
+                ("records", Json::num(c.records as f64)),
+                ("freshness", Json::num(c.freshness)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("cells", Json::Arr(rows)),
+    ])
+}
+
+/// Rebuild a calibrator from a [`calibration_to_json`] artifact. The
+/// restored cells carry their EWMA state verbatim (correction,
+/// observation, freshness), so a consumer starts exactly where the
+/// exporting server left off.
+pub fn calibrator_from_json(v: &Json) -> Result<LatencyCalibrator> {
+    let version = v.get("version").as_usize()?;
+    if version != 1 {
+        bail!("unsupported calibration artifact version {version}");
+    }
+    let mut cal = LatencyCalibrator::default();
+    for row in v.get("cells").as_array()? {
+        let conv = ConvType::parse(row.get("conv").as_str()?)?;
+        let numerics = match row.get("numerics").as_str()? {
+            "float" => Numerics::Float,
+            "fixed" => Numerics::Fixed,
+            other => bail!("unknown numerics `{other}` in calibration artifact"),
+        };
+        let key = CalibKey {
+            conv,
+            numerics,
+            sharded: row.get("sharded").as_bool()?,
+            k: row.get("k").as_usize()?,
+            nodes_log2: u8::try_from(row.get("nodes_log2").as_usize()?)?,
+            edges_log2: u8::try_from(row.get("edges_log2").as_usize()?)?,
+        };
+        let cell = CalibCell {
+            observed_secs: row.get("observed_secs").as_f64()?,
+            correction: row.get("correction").as_f64()?,
+            graphs: row.get("graphs").as_usize()? as u64,
+            records: row.get("records").as_usize()? as u64,
+            freshness: row.get("freshness").as_f64()?,
+        };
+        cal.insert_cell(key, cell);
+    }
+    Ok(cal)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::ConvType;
 
     fn key(k: usize) -> CalibKey {
         CalibKey {
@@ -301,6 +384,37 @@ mod tests {
         only_obs.observe(&rec(1, 4, 0.004), None);
         assert_eq!(only_obs.correction(&key(1)), 1.0);
         assert_eq!(only_obs.observed_secs(&key(1)), Some(0.004));
+    }
+
+    #[test]
+    fn json_artifact_round_trips_calibrator_state() {
+        let mut cal = LatencyCalibrator::new(1.0);
+        cal.observe(&rec(1, 8, 0.004), Some(0.002));
+        cal.observe(&rec(4, 2, 0.040), Some(0.080));
+        cal.decay(0.9); // non-trivial freshness/correction state
+        let art = calibration_to_json(&cal.cells());
+        // survive an actual serialize → parse cycle, not just the tree
+        let parsed = Json::parse(&art.to_string_pretty()).unwrap();
+        let restored = calibrator_from_json(&parsed).unwrap();
+        assert_eq!(restored.cells(), cal.cells(), "lossless round trip");
+        assert!((restored.correction(&key(1)) - cal.correction(&key(1))).abs() < 1e-12);
+        assert_eq!(restored.observed_secs(&key(4)), cal.observed_secs(&key(4)));
+    }
+
+    #[test]
+    fn calibrator_from_json_rejects_bad_artifacts() {
+        let bad_version = Json::parse(r#"{"version": 2, "cells": []}"#).unwrap();
+        assert!(calibrator_from_json(&bad_version).is_err());
+        let bad_conv = Json::parse(
+            r#"{"version": 1, "cells": [{"conv": "resnet", "numerics": "float",
+                "sharded": false, "k": 1, "nodes_log2": 4, "edges_log2": 5,
+                "observed_secs": 0.1, "correction": 1.0, "graphs": 1,
+                "records": 1, "freshness": 1.0}]}"#,
+        )
+        .unwrap();
+        assert!(calibrator_from_json(&bad_conv).is_err());
+        let empty = Json::parse(r#"{"version": 1, "cells": []}"#).unwrap();
+        assert!(calibrator_from_json(&empty).unwrap().is_empty());
     }
 
     /// Decay must age the *observed* state too, not just the correction:

@@ -47,6 +47,7 @@ use crate::graph::GraphView;
 use crate::model::{ConvType, ModelConfig, Numerics};
 use crate::obs::calib::{CalibKey, CalibrationRecord};
 use crate::partition::{adaptive_k, partition, PlanCommStats};
+use crate::perfmodel::calibration::CalibCell;
 use crate::perfmodel::LatencyCalibrator;
 use crate::session::ShardPolicy;
 
@@ -531,6 +532,15 @@ impl Planner {
     /// Number of live calibration cells.
     pub fn calibration_len(&self) -> usize {
         self.cal.lock().unwrap().len()
+    }
+
+    /// Snapshot of the owned calibrator's cells in deterministic shape
+    /// order — the export side of the persisted-calibration path
+    /// (`serve::Server::export_calibration` →
+    /// [`crate::perfmodel::calibration::calibration_to_json`] →
+    /// `gnnbuilder dse --calibration <path>`).
+    pub fn calibration_cells(&self) -> Vec<(CalibKey, CalibCell)> {
+        self.cal.lock().unwrap().cells()
     }
 }
 

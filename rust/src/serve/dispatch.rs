@@ -1,0 +1,359 @@
+//! The shared dispatch core — one hashed timer wheel, one deficit-
+//! round-robin ready queue, and one fixed worker pool serving *every*
+//! pinned endpoint of a server.
+//!
+//! The old serving layer parked a dedicated dispatcher thread per
+//! endpoint; at the "thousands of mostly-idle tenants" scale that is a
+//! thousand parked stacks doing nothing but holding a flush deadline.
+//! Here a deadline is **data, not a thread**:
+//!
+//! ```text
+//!            offer() size trigger ───────────────┐
+//!                                                ▼
+//!  offer() first job ──► timer wheel ──► DRR ready queue ──► workers
+//!        arm(deadline)     (256 slots,    (per-tenant FIFOs,   (fixed,
+//!                          ~262µs tick,    deficit round-      ~cores)
+//!                          1 timer thread) robin over a ring)
+//! ```
+//!
+//! - **Timer wheel**: arming hashes the absolute deadline into one of
+//!   [`WHEEL_SLOTS`] slot buckets (`deadline >> TICK_SHIFT`, masked);
+//!   the single timer thread sleeps until the earliest armed deadline,
+//!   sweeps the slot range its nap covered, and turns each expired
+//!   entry into a ready-queue enqueue. Cancellation is **lazy**: the
+//!   endpoint bumps its wheel generation and the stale entry is
+//!   discarded when its slot is swept — cancel never touches the wheel
+//!   lock. Entries hold `Weak` endpoint references, so a retired
+//!   endpoint's leftover entries cannot keep it alive.
+//! - **Weighted fairness (DRR)**: ready endpoints queue per tenant, and
+//!   tenants take turns on a ring. Each turn a tenant's deficit grows
+//!   by its quantum (`weight × max_batch` requests) and its endpoints
+//!   are drained until the deficit is spent — so a tenant flooding ten
+//!   endpoints gets the same dispatch bandwidth per round as a quiet
+//!   tenant with one, scaled only by the configured weight. Workers
+//!   charge the *actual* drained request count after each flush, so
+//!   partial flushes do not leak bandwidth.
+//! - **Workers**: a fixed pool (default [`pool_threads`]-sized) popping
+//!   endpoints off the DRR queue and running one coalesced flush each
+//!   (`scheduler::run_worker_flush`). Per-endpoint flush exclusivity
+//!   lives in the endpoint's own queue state (`flushing` latch), not
+//!   here, so two workers never co-flush one endpoint but do flush
+//!   *different* endpoints concurrently.
+//!
+//! Lock order: an endpoint's queue-state lock may be held while taking
+//! the wheel or ready lock (arm/enqueue are called under it); the
+//! reverse never happens — the timer thread collects expired entries
+//! under the wheel lock, **releases it**, and only then touches
+//! endpoint state, and workers pop under the ready lock before locking
+//! any endpoint. Metrics locks stay leaves of everything.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+
+use crate::obs::clock;
+use crate::util::pool::{pool_threads, ServiceHandle};
+
+use super::metrics::Metrics;
+use super::scheduler::{self, EndpointInner};
+
+/// Slot count of the hashed wheel (power of two, masked indexing).
+const WHEEL_SLOTS: usize = 256;
+/// log2 of the wheel tick in nanoseconds: 2^18 ns ≈ 262µs per slot,
+/// ~67ms per rotation — well under serving `max_wait`s, so same-slot
+/// collisions across rotations are separated by the deadline check.
+const TICK_SHIFT: u32 = 18;
+
+/// One armed flush deadline. `gen` must still match the endpoint's
+/// wheel generation when the entry fires, otherwise it was lazily
+/// cancelled (or superseded by a re-arm) and is dropped.
+struct TimerEntry {
+    deadline_ns: u64,
+    gen: u64,
+    ep: Weak<EndpointInner>,
+}
+
+struct Wheel {
+    slots: Vec<Vec<TimerEntry>>,
+    /// armed entries across all slots (includes not-yet-swept stale
+    /// entries — the exported depth gauge is an upper bound)
+    len: usize,
+    /// earliest armed deadline (`u64::MAX` when empty) — the timer
+    /// thread's sleep target
+    earliest: u64,
+    /// wheel tick of the last sweep; the next sweep covers
+    /// `last_tick..=now_tick`
+    last_tick: u64,
+}
+
+impl Wheel {
+    fn new() -> Wheel {
+        Wheel {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            len: 0,
+            earliest: u64::MAX,
+            last_tick: clock::now_ns() >> TICK_SHIFT,
+        }
+    }
+
+    fn push(&mut self, entry: TimerEntry) {
+        // a deadline already in the past (end-of-flush re-arms with an
+        // expired oldest job) hashes to a slot the sweep cursor passed;
+        // clamp it forward so the very next sweep visits it
+        let tick = (entry.deadline_ns >> TICK_SHIFT).max(self.last_tick);
+        self.earliest = self.earliest.min(entry.deadline_ns);
+        self.len += 1;
+        self.slots[(tick as usize) & (WHEEL_SLOTS - 1)].push(entry);
+    }
+
+    /// Remove and return every entry with `deadline <= now` from the
+    /// slot range the clock crossed since the last sweep, then refresh
+    /// `earliest` from what remains.
+    fn sweep(&mut self, now_ns: u64) -> Vec<TimerEntry> {
+        let to = now_ns >> TICK_SHIFT;
+        let steps = (to.saturating_sub(self.last_tick)).min(WHEEL_SLOTS as u64 - 1);
+        let mut expired = Vec::new();
+        for i in 0..=steps {
+            let slot = ((self.last_tick + i) as usize) & (WHEEL_SLOTS - 1);
+            let bucket = &mut self.slots[slot];
+            let mut j = 0;
+            while j < bucket.len() {
+                if bucket[j].deadline_ns <= now_ns {
+                    expired.push(bucket.swap_remove(j));
+                } else {
+                    j += 1;
+                }
+            }
+        }
+        self.last_tick = to;
+        self.len -= expired.len();
+        self.earliest = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|e| e.deadline_ns)
+            .min()
+            .unwrap_or(u64::MAX);
+        expired
+    }
+}
+
+/// One tenant's slice of the DRR ready state.
+#[derive(Default)]
+struct TenantQueue {
+    /// ready endpoints of this tenant, FIFO
+    queue: VecDeque<Arc<EndpointInner>>,
+    /// requests this tenant may still dispatch in the current round;
+    /// grows by one quantum per ring turn, shrinks by actual drained
+    /// counts ([`DispatchCore::charge`])
+    deficit: i64,
+    /// whether the tenant currently sits on the ring
+    active: bool,
+}
+
+#[derive(Default)]
+struct ReadyState {
+    tenants: HashMap<String, TenantQueue>,
+    /// round-robin ring of tenants with ready endpoints
+    ring: VecDeque<String>,
+}
+
+/// The per-server shared dispatch core. See the module docs.
+pub(crate) struct DispatchCore {
+    wheel: Mutex<Wheel>,
+    timer_cv: Condvar,
+    ready: Mutex<ReadyState>,
+    work_cv: Condvar,
+    stopping: AtomicBool,
+    /// dispatch-bandwidth weight per tenant (absent = 1); fixed at
+    /// server construction
+    weights: HashMap<String, u32>,
+    /// requests per unit of weight per DRR round (the server's
+    /// `max_batch`, so weight 1 ≈ one coalesced flush per turn)
+    quantum_unit: usize,
+    metrics: Arc<Metrics>,
+    /// timer thread + worker threads, joined by [`DispatchCore::stop_and_join`]
+    services: Mutex<Vec<ServiceHandle>>,
+}
+
+impl DispatchCore {
+    /// Spawn the core: one timer thread plus `threads` dispatch workers
+    /// (`0` = size to cores via [`pool_threads`]).
+    pub(crate) fn start(
+        threads: usize,
+        quantum_unit: usize,
+        weights: HashMap<String, u32>,
+        metrics: Arc<Metrics>,
+    ) -> Arc<DispatchCore> {
+        let threads = if threads == 0 { pool_threads() } else { threads };
+        let core = Arc::new(DispatchCore {
+            wheel: Mutex::new(Wheel::new()),
+            timer_cv: Condvar::new(),
+            ready: Mutex::new(ReadyState::default()),
+            work_cv: Condvar::new(),
+            stopping: AtomicBool::new(false),
+            weights,
+            quantum_unit: quantum_unit.max(1),
+            metrics,
+            services: Mutex::new(Vec::with_capacity(threads + 1)),
+        });
+        let mut services = core.services.lock().unwrap();
+        let c = core.clone();
+        services.push(ServiceHandle::spawn("gnnb-timer", move || timer_loop(c)));
+        for i in 0..threads {
+            let c = core.clone();
+            services.push(ServiceHandle::spawn(format!("gnnb-dispatch-{i}"), move || {
+                worker_loop(c)
+            }));
+        }
+        drop(services);
+        core
+    }
+
+    fn quantum(&self, tenant: &str) -> i64 {
+        let w = self.weights.get(tenant).copied().unwrap_or(1).max(1);
+        w as i64 * self.quantum_unit as i64
+    }
+
+    /// Arm a flush deadline for `ep`. Called with the endpoint's queue
+    /// state locked; the wheel lock nests inside it.
+    pub(crate) fn arm(&self, ep: &Arc<EndpointInner>, deadline_ns: u64, gen: u64) {
+        let mut w = self.wheel.lock().unwrap();
+        let wakes_earlier = deadline_ns < w.earliest;
+        w.push(TimerEntry {
+            deadline_ns,
+            gen,
+            ep: Arc::downgrade(ep),
+        });
+        self.metrics.set_wheel_depth(w.len);
+        drop(w);
+        if wakes_earlier {
+            self.timer_cv.notify_all();
+        }
+    }
+
+    /// Put `ep` on its tenant's ready queue. Called with the endpoint's
+    /// queue state locked (the caller has set its `enqueued` latch);
+    /// the ready lock nests inside it.
+    pub(crate) fn enqueue(&self, ep: Arc<EndpointInner>) {
+        let tenant = ep.key.tenant.clone();
+        let mut r = self.ready.lock().unwrap();
+        let tq = r.tenants.entry(tenant.clone()).or_default();
+        tq.queue.push_back(ep);
+        if !tq.active {
+            tq.active = true;
+            r.ring.push_back(tenant);
+        }
+        drop(r);
+        self.work_cv.notify_one();
+    }
+
+    /// Charge `n` dispatched requests against a tenant's deficit after
+    /// a flush completes.
+    pub(crate) fn charge(&self, tenant: &str, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut r = self.ready.lock().unwrap();
+        if let Some(tq) = r.tenants.get_mut(tenant) {
+            tq.deficit -= n as i64;
+        }
+    }
+
+    /// DRR selection under the ready lock: the front tenant dispatches
+    /// while its deficit lasts; an exhausted tenant earns a quantum and
+    /// rotates to the back; a drained tenant leaves the ring (and
+    /// forfeits its leftover deficit, so idle tenants never bank
+    /// bandwidth). Terminates: every full ring rotation adds a positive
+    /// quantum to each active tenant.
+    fn select(&self, r: &mut ReadyState) -> Option<Arc<EndpointInner>> {
+        while let Some(front) = r.ring.front().cloned() {
+            let tq = r
+                .tenants
+                .get_mut(&front)
+                .expect("ring tenants always have a queue entry");
+            if tq.queue.is_empty() {
+                tq.active = false;
+                tq.deficit = 0;
+                r.ring.pop_front();
+                continue;
+            }
+            if tq.deficit <= 0 {
+                tq.deficit += self.quantum(&front);
+                r.ring.rotate_left(1);
+                continue;
+            }
+            return tq.queue.pop_front();
+        }
+        None
+    }
+
+    /// Stop the timer and workers and join them. Idempotent; called on
+    /// server shutdown after every endpoint has been closed and drained.
+    pub(crate) fn stop_and_join(&self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // take both locks so parked threads cannot miss the wakeup
+        drop(self.wheel.lock().unwrap());
+        self.timer_cv.notify_all();
+        drop(self.ready.lock().unwrap());
+        self.work_cv.notify_all();
+        for s in self.services.lock().unwrap().drain(..) {
+            s.join();
+        }
+    }
+}
+
+/// The timer thread: sleep until the earliest armed deadline, sweep
+/// expired entries with the wheel lock **released**, and hand each
+/// still-valid one to its endpoint (which enqueues itself).
+fn timer_loop(core: Arc<DispatchCore>) {
+    let mut w = core.wheel.lock().unwrap();
+    loop {
+        if core.stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = clock::now_ns();
+        if w.earliest == u64::MAX {
+            w = core.timer_cv.wait(w).unwrap();
+            continue;
+        }
+        if w.earliest > now {
+            let nap = clock::ns_to_duration(w.earliest - now);
+            let (g, _) = core.timer_cv.wait_timeout(w, nap).unwrap();
+            w = g;
+            continue;
+        }
+        let expired = w.sweep(now);
+        core.metrics.set_wheel_depth(w.len);
+        drop(w);
+        for entry in expired {
+            if let Some(ep) = entry.ep.upgrade() {
+                ep.timer_fire(entry.gen, entry.deadline_ns, now);
+            }
+        }
+        w = core.wheel.lock().unwrap();
+    }
+}
+
+/// One dispatch worker: pop a ready endpoint under DRR, run one
+/// coalesced flush, charge the drained count to its tenant.
+fn worker_loop(core: Arc<DispatchCore>) {
+    loop {
+        let ep = {
+            let mut r = core.ready.lock().unwrap();
+            loop {
+                if core.stopping.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(ep) = core.select(&mut r) {
+                    break ep;
+                }
+                r = core.work_cv.wait(r).unwrap();
+            }
+        };
+        let drained = scheduler::run_worker_flush(&ep);
+        core.charge(&ep.key.tenant, drained);
+    }
+}

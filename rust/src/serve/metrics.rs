@@ -29,6 +29,12 @@
 //!   per tenant plus the global peak; and a [`CalibrationBank`] folding
 //!   measured per-dispatch service time into per-workload-shape records
 //!   for [`crate::perfmodel::calibration`].
+//! - **dispatch-core signals** — `timer_fires` plus the wheel-lag
+//!   histogram (deadline → actual fire, the timer wheel's scheduling
+//!   error), the live wheel-depth gauge (armed flush deadlines), and
+//!   per-tenant dispatched-request counters — the evidence behind the
+//!   deficit-round-robin fairness gate (a flooding tenant's share of
+//!   dispatch bandwidth stays proportional to its weight).
 //!
 //! `Ordering` audit: every atomic here is an independently meaningful
 //! monotonic counter or gauge — no counter's value gates the visibility
@@ -100,6 +106,8 @@ pub struct Metrics {
     pub replans: AtomicU64,
     /// highest global queued depth observed across all endpoints
     pub peak_queue: AtomicUsize,
+    /// timer-wheel entries that fired (deadline-triggered flush wakeups)
+    pub timer_fires: AtomicU64,
     /// the deployment's shard-plan cache, shared by every pinned session
     /// and sharded backend the server spawns (plans depend only on
     /// topology + policy, so one topology served by several models — or
@@ -108,6 +116,10 @@ pub struct Metrics {
     /// workload is the "zero re-partitions" guarantee
     pub plan_cache: Arc<PlanCache>,
     depth: AtomicUsize,
+    /// live number of armed deadlines in the shared timer wheel
+    wheel_depth: AtomicUsize,
+    /// deadline → actual-fire lag of wheel entries, in seconds
+    wheel_lag: Histogram,
     /// global stage histograms (per-tenant sets live in `tenants`)
     stages: StageTimes,
     tenants: Mutex<HashMap<String, Arc<StageTimes>>>,
@@ -116,6 +128,7 @@ pub struct Metrics {
     queue_depths: Mutex<HashMap<String, usize>>,
     tenant_depths: Mutex<HashMap<String, usize>>,
     tenant_rejects: Mutex<HashMap<String, u64>>,
+    tenant_dispatched: Mutex<HashMap<String, u64>>,
     calib: CalibrationBank,
 }
 
@@ -260,6 +273,38 @@ impl Metrics {
         self.tenant_rejects.lock().unwrap().clone()
     }
 
+    /// Requests dispatched (flushed to an engine) on behalf of one
+    /// tenant — the numerator of its dispatch-bandwidth share under
+    /// deficit round-robin.
+    pub fn dispatched(&self, tenant: &str) -> u64 {
+        self.tenant_dispatched
+            .lock()
+            .unwrap()
+            .get(tenant)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Snapshot of per-tenant dispatched-request counts.
+    pub fn dispatched_by_tenant(&self) -> HashMap<String, u64> {
+        self.tenant_dispatched.lock().unwrap().clone()
+    }
+
+    /// Live number of armed flush deadlines in the shared timer wheel.
+    pub fn wheel_depth(&self) -> usize {
+        self.wheel_depth.load(Ordering::Relaxed)
+    }
+
+    /// Timer-wheel scheduling-lag histogram (deadline → actual fire).
+    pub fn wheel_lag(&self) -> &Histogram {
+        &self.wheel_lag
+    }
+
+    /// Summary of the timer-wheel scheduling-lag distribution.
+    pub fn wheel_lag_summary(&self) -> HistSummary {
+        self.wheel_lag.summary()
+    }
+
     /// Take accumulated perfmodel calibration records, clearing the bank.
     pub fn drain_calibration(&self) -> Vec<CalibrationRecord> {
         self.calib.drain()
@@ -322,6 +367,30 @@ impl Metrics {
             });
         drain(&mut self.queue_depths.lock().unwrap(), model, n);
         drain(&mut self.tenant_depths.lock().unwrap(), tenant, n);
+    }
+
+    /// One timer-wheel entry fired: count it and record how far past
+    /// its deadline the fire landed (wheel tick granularity + timer
+    /// thread scheduling).
+    pub(crate) fn record_timer_fire(&self, lag_secs: f64) {
+        self.timer_fires.fetch_add(1, Ordering::Relaxed);
+        self.wheel_lag.record_secs(lag_secs);
+    }
+
+    /// Publish the wheel's current armed-entry count.
+    pub(crate) fn set_wheel_depth(&self, n: usize) {
+        self.wheel_depth.store(n, Ordering::Relaxed);
+    }
+
+    /// `n` requests flushed on behalf of `tenant` (DRR bandwidth
+    /// accounting — mirrors the scheduler's deficit charge).
+    pub(crate) fn record_tenant_dispatch(&self, tenant: &str, n: usize) {
+        *self
+            .tenant_dispatched
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_insert(0) += n as u64;
     }
 
     /// One request bounced off a full admission queue.
@@ -460,6 +529,36 @@ mod tests {
         assert_eq!(m.batch_histogram(), vec![(4, 1), (8, 1)]);
         assert_eq!(m.coalesced_histogram(), vec![(8, 1)]);
         assert_eq!(m.coalesced_summary().n, 1);
+    }
+
+    #[test]
+    fn timer_fires_and_wheel_lag_are_recorded() {
+        let m = Metrics::default();
+        assert_eq!(m.wheel_lag_summary().n, 0);
+        m.record_timer_fire(1e-4);
+        m.record_timer_fire(3e-4);
+        assert_eq!(m.timer_fires.load(Ordering::Relaxed), 2);
+        let s = m.wheel_lag_summary();
+        assert_eq!(s.n, 2);
+        assert!(s.max >= 2e-4 && s.max <= 4e-4, "lag tail {}", s.max);
+        m.set_wheel_depth(7);
+        assert_eq!(m.wheel_depth(), 7);
+        m.set_wheel_depth(0);
+        assert_eq!(m.wheel_depth(), 0);
+    }
+
+    #[test]
+    fn tenant_dispatch_bandwidth_is_counted() {
+        let m = Metrics::default();
+        m.record_tenant_dispatch("acme", 8);
+        m.record_tenant_dispatch("acme", 3);
+        m.record_tenant_dispatch("umbrella", 1);
+        assert_eq!(m.dispatched("acme"), 11);
+        assert_eq!(m.dispatched("umbrella"), 1);
+        assert_eq!(m.dispatched("nobody"), 0);
+        let all = m.dispatched_by_tenant();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all["acme"], 11);
     }
 
     #[test]

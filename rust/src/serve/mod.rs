@@ -21,35 +21,49 @@
 //!                                                  │  bounded admission
 //!  submit(x) ─► Ticket      queue-full ► Overloaded│  queue (per endpoint)
 //!                 ▲                                ▼
-//!                 │            micro-batch dispatcher (deadline-or-size)
+//!                 │      shared dispatch core (one per server):
+//!                 │       timer wheel ──► DRR ready queue ──► worker
+//!                 │       (deadlines as   (per-tenant        pool
+//!                 │        entries, not    weighted          (~cores
+//!                 │        threads)        fairness)         threads)
 //!                 │                                │  coalesced flush
-//!                 └──── responses / typed errors ◄─┤
+//!                 └──── completion slots ◄─────────┤
 //!                                                  ▼
 //!                               Session::run_batch (pinned topology)
 //!                               Backend::infer_batch (floating graphs)
 //! ```
 //!
-//! Three pieces:
+//! Four pieces:
 //!
 //! - the **session registry** (`registry.rs`): pinned, pre-warmed
 //!   sessions keyed by `(tenant, model, topology)` with explicit
 //!   [`Server::deploy`] / [`Server::retire`] lifecycle, per-tenant
-//!   endpoint quotas, and idle eviction; every pinned session shares the
-//!   server's shard-plan cache, so one topology partitions once across
-//!   models *and* tenants.
+//!   endpoint quotas, and incremental idle eviction; every pinned
+//!   session shares the server's shard-plan cache, so one topology
+//!   partitions once across models *and* tenants.
 //! - the **micro-batching scheduler** (`scheduler.rs`): per-endpoint
 //!   bounded admission queues with deadline-or-size flush (generalizing
 //!   [`BatchPolicy`]); N concurrent requests against one deployed graph
 //!   coalesce into ⌈N/max_batch⌉ `run_batch` calls, bit-identical to N
 //!   `run` calls and counter-asserted via
 //!   [`Metrics::pinned_dispatches`].
+//! - the **shared dispatch core** (`dispatch.rs`): an idle endpoint
+//!   costs no thread — its flush deadline is an entry on a hashed timer
+//!   wheel, and due endpoints are drained by a fixed worker pool under
+//!   **deficit-round-robin tenant fairness**
+//!   ([`ServerConfig::tenant_weights`]): a tenant flooding its queues
+//!   gets its weighted share of dispatch bandwidth per round, never the
+//!   whole pool, so quiet tenants stay fast. 1k deployed endpoints with
+//!   10 active cost ~cores threads, not 1k.
 //! - **streaming submission**: [`Endpoint::submit`] returns a typed
-//!   [`Ticket`] immediately; backpressure is explicit
-//!   ([`ServeError::Overloaded`] when the queue is full, never silent
-//!   blocking), worker panics surface as [`ServeError::Backend`] on the
-//!   ticket rather than a hung receiver, and [`Metrics`] reports
-//!   per-tenant queue depth, coalesced-batch histograms, and
-//!   admission-reject counters.
+//!   [`Ticket`] immediately — a waker-driven completion slot
+//!   ([`Ticket::on_ready`] registers a callback for external executors;
+//!   [`Ticket::wait`] blocks) with no thread per waiter. Backpressure is
+//!   explicit ([`ServeError::Overloaded`] when the queue is full, never
+//!   silent blocking), worker panics surface as [`ServeError::Backend`]
+//!   on the ticket rather than a hung waiter, and [`Metrics`] reports
+//!   per-tenant queue depth and dispatch bandwidth, wheel depth/lag,
+//!   coalesced-batch histograms, and admission-reject counters.
 //!
 //! The legacy [`Coordinator`](crate::coordinator::Coordinator) is now a
 //! thin facade over this module: each of its model backends becomes a
@@ -57,6 +71,7 @@
 //! [`GraphBatch`](crate::graph::GraphBatch) arena — the molecule-serving
 //! pattern), scheduled by the same admission/flush machinery.
 
+mod dispatch;
 mod metrics;
 mod registry;
 mod scheduler;
@@ -65,8 +80,8 @@ pub use metrics::{Metrics, StageTimes};
 pub use registry::SessionKey;
 
 use std::cell::Cell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -82,6 +97,7 @@ use crate::session::{Session, SessionBuilder};
 use crate::util::json::Json;
 use crate::util::pool::ServiceHandle;
 
+use dispatch::DispatchCore;
 use registry::SessionRegistry;
 use scheduler::{CloseReason, EndpointInner, Payload};
 
@@ -162,19 +178,113 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// One request's completion slot: the write-once cell a flush completes
+/// into and a [`Ticket`] reads from. Blocking waiters park on the
+/// condvar; a registered waker callback fires on completion — no thread
+/// per waiter either way.
+pub(crate) struct TicketSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+struct SlotState {
+    /// write-once: the first completion wins, later ones are dropped
+    result: Option<Result<Response, ServeError>>,
+    /// fired (outside the lock) when the result lands; re-registering
+    /// replaces the previous callback
+    waker: Option<Box<dyn FnOnce() + Send>>,
+}
+
+impl TicketSlot {
+    pub(crate) fn new() -> TicketSlot {
+        TicketSlot {
+            state: Mutex::new(SlotState {
+                result: None,
+                waker: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// A slot born completed (facade routing errors).
+    fn completed(r: Result<Response, ServeError>) -> TicketSlot {
+        TicketSlot {
+            state: Mutex::new(SlotState {
+                result: Some(r),
+                waker: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Deliver the result: first completion wins; wakes blocking waiters
+    /// and runs the registered waker (outside the lock — it may call
+    /// back into the ticket).
+    pub(crate) fn complete(&self, r: Result<Response, ServeError>) {
+        let waker = {
+            let mut s = self.state.lock().unwrap();
+            if s.result.is_some() {
+                return;
+            }
+            s.result = Some(r);
+            s.waker.take()
+        };
+        self.cv.notify_all();
+        if let Some(w) = waker {
+            w();
+        }
+    }
+}
+
+/// The flush side of one completion slot. Consuming it delivers the
+/// result; dropping it without sending completes the slot with a typed
+/// [`ServeError::Backend`] — a contained panic or a dropped job can
+/// never strand a waiter.
+pub(crate) struct Responder(Option<Arc<TicketSlot>>);
+
+impl Responder {
+    pub(crate) fn new(slot: Arc<TicketSlot>) -> Responder {
+        Responder(Some(slot))
+    }
+
+    pub(crate) fn send(mut self, r: Result<Response, ServeError>) {
+        if let Some(slot) = self.0.take() {
+            slot.complete(r);
+        }
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if let Some(slot) = self.0.take() {
+            slot.complete(Err(ServeError::Backend(
+                "the serving worker dropped the request".into(),
+            )));
+        }
+    }
+}
+
 /// A streaming response handle: submission returns immediately, the
-/// result (or a typed error) arrives on the ticket. Dropping a ticket
-/// abandons the response, never the request — the flush still runs.
+/// result (or a typed error) lands on the ticket's completion slot.
+/// Dropping a ticket abandons the response, never the request — the
+/// flush still runs.
+///
+/// Waiting is **waker-driven**, not channel-backed: [`Ticket::wait`] /
+/// [`Ticket::wait_timeout`] park on the slot's condvar, [`Ticket::try_wait`]
+/// polls it, and [`Ticket::on_ready`] registers a callback that fires on
+/// completion — the hook for composing with an external async executor
+/// (wrap the ticket in a future whose `poll` registers its `Waker` via
+/// `on_ready`) without a thread per in-flight request. Once completed,
+/// the result stays readable: repeated polls return clones.
 ///
 /// A ticket carries its **admission timestamp**: the first successful
 /// response it observes is recorded as *wait-side* end-to-end latency
-/// (submit → caller saw the result), which includes response-channel
-/// and waiter-wakeup time the dispatcher cannot see. Compare
+/// (submit → caller saw the result), which includes completion-slot
+/// and waiter-wakeup time the flush cannot see. Compare
 /// [`Metrics::wait_latency_summary`] against
 /// [`Metrics::latency_summary`] for the split.
-#[derive(Debug)]
 pub struct Ticket {
-    rx: Receiver<Result<Response, ServeError>>,
+    slot: Arc<TicketSlot>,
     /// [`clock::now_ns`] at admission (0 for failed/untracked tickets)
     admit_ns: u64,
     /// where to record the wait-side latency (global + tenant)
@@ -183,16 +293,25 @@ pub struct Ticket {
     observed: Cell<bool>,
 }
 
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket")
+            .field("admit_ns", &self.admit_ns)
+            .field("ready", &self.is_ready())
+            .finish_non_exhaustive()
+    }
+}
+
 impl Ticket {
     /// A live ticket recording wait-side latency on first success.
     pub(crate) fn tracked(
-        rx: Receiver<Result<Response, ServeError>>,
+        slot: Arc<TicketSlot>,
         metrics: Arc<Metrics>,
         tenant: Arc<StageTimes>,
         admit_ns: u64,
     ) -> Ticket {
         Ticket {
-            rx,
+            slot,
             admit_ns,
             track: Some((metrics, tenant)),
             observed: Cell::new(false),
@@ -201,10 +320,8 @@ impl Ticket {
 
     /// A ticket that already failed (facade routing errors).
     pub(crate) fn failed(e: ServeError) -> Ticket {
-        let (tx, rx) = channel();
-        let _ = tx.send(Err(e));
         Ticket {
-            rx,
+            slot: Arc::new(TicketSlot::completed(Err(e))),
             admit_ns: 0,
             track: None,
             observed: Cell::new(false),
@@ -235,54 +352,78 @@ impl Ticket {
         }
     }
 
-    /// Block until the response (or its typed error) arrives. A worker
-    /// that dies without answering yields a [`ServeError::Backend`] —
-    /// never a hang.
-    pub fn wait(self) -> Result<Response, ServeError> {
-        match self.rx.recv() {
-            Ok(r) => {
-                if r.is_ok() {
-                    self.observe_success();
-                }
-                r
-            }
-            Err(_) => Err(ServeError::Backend(
-                "the serving worker dropped the request".into(),
-            )),
+    /// Whether the result has landed (then every wait returns at once).
+    pub fn is_ready(&self) -> bool {
+        self.slot.state.lock().unwrap().result.is_some()
+    }
+
+    /// Register a callback to run when the result lands — immediately,
+    /// on the caller's thread, if it already has; otherwise later, on
+    /// the completing flush's thread. At most one callback is held:
+    /// re-registering replaces the previous one (async executors re-arm
+    /// per poll). The callback should be cheap and non-blocking — wake a
+    /// task, notify a reactor — not process the response.
+    pub fn on_ready(&self, f: impl FnOnce() + Send + 'static) {
+        let mut s = self.slot.state.lock().unwrap();
+        if s.result.is_some() {
+            drop(s);
+            f();
+        } else {
+            s.waker = Some(Box::new(f));
         }
+    }
+
+    /// Block until the response (or its typed error) arrives. A flush
+    /// that dies without answering yields a [`ServeError::Backend`] —
+    /// never a hang (dropping a [`Responder`] completes its slot).
+    pub fn wait(self) -> Result<Response, ServeError> {
+        let r = {
+            let mut s = self.slot.state.lock().unwrap();
+            while s.result.is_none() {
+                s = self.slot.cv.wait(s).unwrap();
+            }
+            s.result.clone().unwrap()
+        };
+        if r.is_ok() {
+            self.observe_success();
+        }
+        r
     }
 
     /// Like [`Ticket::wait`] with a deadline; [`ServeError::Timeout`] if
     /// it elapses (the request stays in flight — wait again to retry).
     pub fn wait_timeout(&self, d: Duration) -> Result<Response, ServeError> {
-        match self.rx.recv_timeout(d) {
-            Ok(r) => {
+        let deadline =
+            clock::now_ns().saturating_add(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+        let mut s = self.slot.state.lock().unwrap();
+        loop {
+            if let Some(r) = s.result.clone() {
+                drop(s);
                 if r.is_ok() {
                     self.observe_success();
                 }
-                r
+                return r;
             }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::Backend(
-                "the serving worker dropped the request".into(),
-            )),
+            let now = clock::now_ns();
+            if now >= deadline {
+                return Err(ServeError::Timeout);
+            }
+            let (g, _) = self
+                .slot
+                .cv
+                .wait_timeout(s, clock::ns_to_duration(deadline - now))
+                .unwrap();
+            s = g;
         }
     }
 
     /// Non-blocking poll: `None` while the request is still in flight.
     pub fn try_wait(&self) -> Option<Result<Response, ServeError>> {
-        match self.rx.try_recv() {
-            Ok(r) => {
-                if r.is_ok() {
-                    self.observe_success();
-                }
-                Some(r)
-            }
-            Err(TryRecvError::Empty) => None,
-            Err(TryRecvError::Disconnected) => Some(Err(ServeError::Backend(
-                "the serving worker dropped the request".into(),
-            ))),
+        let r = self.slot.state.lock().unwrap().result.clone()?;
+        if r.is_ok() {
+            self.observe_success();
         }
+        Some(r)
     }
 }
 
@@ -335,7 +476,7 @@ impl Endpoint {
         }
         self.inner
             .offer(Payload::Features(x))
-            .map(|(rx, admit_ns)| self.ticket(rx, admit_ns))
+            .map(|(slot, admit_ns)| self.ticket(slot, admit_ns))
     }
 
     /// Submit a per-request graph + features (floating endpoints only).
@@ -347,12 +488,12 @@ impl Endpoint {
         }
         self.inner
             .offer(Payload::GraphFeatures(graph, x))
-            .map(|(rx, admit_ns)| self.ticket(rx, admit_ns))
+            .map(|(slot, admit_ns)| self.ticket(slot, admit_ns))
     }
 
-    fn ticket(&self, rx: scheduler::RespondRx, admit_ns: u64) -> Ticket {
+    fn ticket(&self, slot: Arc<TicketSlot>, admit_ns: u64) -> Ticket {
         Ticket::tracked(
-            rx,
+            slot,
             self.inner.metrics.clone(),
             self.inner.tenant_stages.clone(),
             admit_ns,
@@ -382,6 +523,12 @@ impl Endpoint {
 
     fn close_and_join(&self, reason: CloseReason) {
         self.inner.close(reason, None);
+        if self.inner.is_pinned() {
+            // pool workers refuse closed endpoints; the closer flushes
+            // the graceful remainder itself
+            self.inner.drain_on_close();
+        }
+        // floating endpoints: the dedicated dispatcher drains on exit
         self.inner.worker.join();
         // a background re-partition blocked in quiesce observes the
         // closed queue and bails, so this join is deadlock-free
@@ -424,6 +571,19 @@ pub struct ServerConfig {
     /// only reason to do so is measuring tracing's own overhead, which
     /// `bench_serve` does.
     pub trace_capacity: usize,
+    /// worker threads of the shared dispatch core (0 = size to cores).
+    /// This is the server's total pinned-flush parallelism — deployed
+    /// endpoints share it regardless of their count
+    pub dispatch_threads: usize,
+    /// dispatch-bandwidth weight per tenant under deficit round-robin
+    /// (absent = 1): per scheduling round a tenant may dispatch
+    /// `weight × max_batch` requests before yielding to the next tenant
+    pub tenant_weights: HashMap<String, u32>,
+    /// max endpoints the janitor examines per tick (idle eviction +
+    /// re-plan passes walk the registry incrementally with a persistent
+    /// cursor, so a 1k-endpoint table never pays an O(n) sweep under the
+    /// registry lock)
+    pub janitor_slice: usize,
 }
 
 impl Default for ServerConfig {
@@ -438,6 +598,9 @@ impl Default for ServerConfig {
             plan_cache: None,
             planner: None,
             trace_capacity: 65_536,
+            dispatch_threads: 0,
+            tenant_weights: HashMap::new(),
+            janitor_slice: 64,
         }
     }
 }
@@ -447,7 +610,8 @@ struct Janitor {
     handle: ServiceHandle,
 }
 
-/// The multi-tenant serving front door: registry + scheduler + metrics.
+/// The multi-tenant serving front door: registry + scheduler + shared
+/// dispatch core + metrics.
 pub struct Server {
     policy: BatchPolicy,
     queue_capacity: usize,
@@ -456,6 +620,7 @@ pub struct Server {
     metrics: Arc<Metrics>,
     sink: Option<Arc<TraceSink>>,
     planner: Arc<Planner>,
+    core: Arc<DispatchCore>,
     janitor: Option<Janitor>,
     down: AtomicBool,
 }
@@ -484,13 +649,20 @@ impl Server {
         let sink = (cfg.trace_capacity > 0).then(|| Arc::new(TraceSink::new(cfg.trace_capacity)));
         let registry = Arc::new(SessionRegistry::new(cfg.tenant_quota));
         let planner = cfg.planner.unwrap_or_default();
+        let core = DispatchCore::start(
+            cfg.dispatch_threads,
+            cfg.policy.max_batch.max(1),
+            cfg.tenant_weights.clone(),
+            metrics.clone(),
+        );
         let janitor = (cfg.idle_ttl.is_some() || cfg.replan_interval.is_some()).then(|| {
             let stop = Arc::new((Mutex::new(false), Condvar::new()));
             let (s, r, m) = (stop.clone(), registry.clone(), metrics.clone());
             let p = planner.clone();
             let (ttl, replan) = (cfg.idle_ttl, cfg.replan_interval);
+            let slice = cfg.janitor_slice.max(1);
             let handle = ServiceHandle::spawn("gnnb-serve-janitor", move || {
-                janitor_loop(s, r, m, p, ttl, replan)
+                janitor_loop(s, r, m, p, ttl, replan, slice)
             });
             Janitor { stop, handle }
         });
@@ -502,6 +674,7 @@ impl Server {
             metrics,
             sink,
             planner,
+            core,
             janitor,
             down: AtomicBool::new(false),
         }
@@ -589,20 +762,16 @@ impl Server {
             self.queue_capacity,
             self.metrics.clone(),
             self.sink.clone(),
+            Some(self.core.clone()),
         );
         let ep = Endpoint { inner };
         // anchor the degradation check: the pre-warmed plan's calibrated
         // score is what repaired plans are judged against
         ep.inner.set_base_score(session.plan_score(&self.planner));
+        // no per-endpoint dispatcher: flushes are scheduled by the shared
+        // core (timer-wheel deadlines + the fixed worker pool), so a
+        // deployed-but-idle endpoint costs registry + queue memory only
         self.registry.insert(ep.clone())?;
-        // spawn the dispatcher only once registration succeeded
-        let body = ep.inner.clone();
-        ep.inner.worker.attach(
-            std::thread::Builder::new()
-                .name(format!("gnnb-serve/{tenant}/{}", ep.model()))
-                .spawn(move || scheduler::pinned_loop(body))
-                .expect("failed to spawn endpoint dispatcher"),
-        );
         self.undo_if_raced_shutdown(&ep)?;
         Ok(ep)
     }
@@ -625,27 +794,29 @@ impl Server {
             self.queue_capacity,
             self.metrics.clone(),
             self.sink.clone(),
+            None,
         );
         let ep = Endpoint { inner };
         self.registry.insert(ep.clone())?;
+        // floating endpoints keep a dedicated dispatcher ("gnnb-float/…"):
+        // the backend is built on it and stays pinned there (PJRT handles
+        // are not `Send`), so it cannot ride the shared worker pool
         let body = ep.inner.clone();
         let factory = spec.factory;
-        ep.inner.worker.attach(
-            std::thread::Builder::new()
-                .name(format!("gnnb-serve/{tenant}/{}", ep.model()))
-                .spawn(move || scheduler::floating_loop(body, factory))
-                .expect("failed to spawn endpoint dispatcher"),
-        );
+        ep.inner
+            .worker
+            .spawn_on(move || scheduler::floating_loop(body, factory));
         self.undo_if_raced_shutdown(&ep)?;
         Ok(ep)
     }
 
     /// Close the race between `deploy*` and [`Server::shutdown`]: a
     /// deploy that read `down == false` but registered after shutdown's
-    /// `take_all` would leak a never-joined dispatcher. Re-checking after
-    /// the spawn and undoing (remove + close + join — all idempotent
-    /// against a concurrent shutdown that did see the endpoint) makes the
-    /// endpoint either reaped by shutdown or reaped here.
+    /// `take_all` would leak a live endpoint (and, for floating, a
+    /// never-joined dispatcher). Re-checking after registration and
+    /// undoing (remove + close + drain + join — all idempotent against a
+    /// concurrent shutdown that did see the endpoint) makes the endpoint
+    /// either reaped by shutdown or reaped here.
     fn undo_if_raced_shutdown(&self, ep: &Endpoint) -> Result<(), ServeError> {
         if self.down.load(Ordering::SeqCst) {
             self.registry.remove(ep.key());
@@ -756,14 +927,14 @@ impl Server {
             }
         }
         if let Some(h) = slot.take() {
-            let _ = h.join();
+            h.join();
         }
         let inner = ep.inner.clone();
         let planner = self.planner.clone();
         let metrics = self.metrics.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("gnnb-repartition/{}/{}", ep.tenant(), ep.model()))
-            .spawn(move || {
+        let handle = ServiceHandle::spawn(
+            format!("gnnb-repartition/{}/{}", ep.tenant(), ep.model()),
+            move || {
                 let Some(s0) = inner.current_session() else {
                     return;
                 };
@@ -784,8 +955,8 @@ impl Server {
                     metrics.replans.fetch_add(1, Ordering::Relaxed);
                     inner.set_base_score(next.plan_score(&planner));
                 }
-            })
-            .expect("failed to spawn repartition thread");
+            },
+        );
         *slot = Some(handle);
         true
     }
@@ -872,7 +1043,23 @@ impl Server {
             "plan swaps on live endpoints (degradation re-partitions and janitor re-plans)",
         );
         w.sample_u64("gnnb_replans_total", &[], m.replans.load(Ordering::Relaxed));
+        w.family(
+            "gnnb_timer_fires_total",
+            "counter",
+            "flush deadlines fired by the shared timer wheel",
+        );
+        w.sample_u64(
+            "gnnb_timer_fires_total",
+            &[],
+            m.timer_fires.load(Ordering::Relaxed),
+        );
 
+        w.family(
+            "gnnb_wheel_depth",
+            "gauge",
+            "armed entries on the shared timer wheel (upper bound: includes lazily cancelled entries not yet swept)",
+        );
+        w.sample_u64("gnnb_wheel_depth", &[], m.wheel_depth() as u64);
         w.family(
             "gnnb_peak_queue_depth",
             "gauge",
@@ -903,6 +1090,14 @@ impl Server {
         for (tenant, v) in sorted(m.rejects_by_tenant()) {
             w.sample_u64("gnnb_tenant_rejected_total", &[("tenant", &tenant)], v);
         }
+        w.family(
+            "gnnb_tenant_dispatched_total",
+            "counter",
+            "requests dispatched per tenant (deficit-round-robin bandwidth accounting)",
+        );
+        for (tenant, v) in sorted(m.dispatched_by_tenant()) {
+            w.sample_u64("gnnb_tenant_dispatched_total", &[("tenant", &tenant)], v);
+        }
 
         w.family(
             "gnnb_stage_latency_seconds",
@@ -912,6 +1107,13 @@ impl Server {
         for (stage, h) in m.stage_times().stages() {
             w.histogram("gnnb_stage_latency_seconds", &[("stage", stage)], h);
         }
+
+        w.family(
+            "gnnb_wheel_lag_seconds",
+            "histogram",
+            "armed flush deadline to actual timer fire (shared-wheel scheduling lag)",
+        );
+        w.histogram("gnnb_wheel_lag_seconds", &[], m.wheel_lag());
 
         w.family(
             "gnnb_tenant_stage_latency_seconds",
@@ -983,6 +1185,11 @@ impl Server {
                 "peak_queue",
                 Json::num(m.peak_queue.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "timer_fires",
+                Json::num(m.timer_fires.load(Ordering::Relaxed) as f64),
+            ),
+            ("wheel_depth", Json::num(m.wheel_depth() as f64)),
         ]);
         let stage_obj = |st: &StageTimes| {
             Json::obj(
@@ -1005,18 +1212,37 @@ impl Server {
             ]),
             None => Json::Null,
         };
+        let dispatched = Json::obj(
+            sorted(m.dispatched_by_tenant())
+                .iter()
+                .map(|(t, v)| (t.as_str(), Json::num(*v as f64)))
+                .collect(),
+        );
         Json::obj(vec![
             ("counters", counters),
             ("stages", stage_obj(m.stage_times())),
             ("tenants", tenants),
+            ("tenant_dispatched", dispatched),
             ("batch_sizes", export::summary_json(&m.batch_size_summary())),
             ("coalesced", export::summary_json(&m.coalesced_summary())),
+            ("wheel_lag", export::summary_json(&m.wheel_lag_summary())),
             (
                 "calibration",
                 export::calibration_json(&m.calibration_snapshot()),
             ),
             ("trace", trace),
         ])
+    }
+
+    /// Snapshot the server planner's calibrated cells as a portable JSON
+    /// artifact — the bridge from serving reality to offline DSE
+    /// (`gnnbuilder dse --calibration <path>` reranks candidates under
+    /// these corrections via [`crate::dse::rerank_calibrated`]). Call
+    /// [`Server::calibrate_now`] first to fold any pending calibration
+    /// records; round-trips through
+    /// [`crate::perfmodel::calibration::calibrator_from_json`].
+    pub fn export_calibration(&self) -> Json {
+        crate::perfmodel::calibration::calibration_to_json(&self.planner.calibration_cells())
     }
 
     /// Retire an endpoint: remove it from the registry, flush its queued
@@ -1040,9 +1266,9 @@ impl Server {
     }
 
     /// Stop the server: queued work on every endpoint is flushed, then
-    /// all dispatchers (and the janitor) are joined. Idempotent —
-    /// `shutdown()` followed by `Drop` (or a second `shutdown()`) joins
-    /// nothing twice.
+    /// the floating dispatchers, the janitor, and the shared dispatch
+    /// core (timer + worker pool) are joined. Idempotent — `shutdown()`
+    /// followed by `Drop` (or a second `shutdown()`) joins nothing twice.
     pub fn shutdown(&self) {
         if self.down.swap(true, Ordering::SeqCst) {
             return;
@@ -1056,6 +1282,9 @@ impl Server {
         for ep in self.registry.take_all() {
             ep.close_and_join(CloseReason::Shutdown);
         }
+        // every endpoint is closed and drained — stop the core last so
+        // close-time drains never race a worker flush
+        self.core.stop_and_join();
     }
 }
 
@@ -1079,6 +1308,7 @@ fn janitor_loop(
     planner: Arc<Planner>,
     ttl: Option<Duration>,
     replan_every: Option<Duration>,
+    slice: usize,
 ) {
     let interval = [ttl.map(|t| t / 4), replan_every.map(|t| t / 4)]
         .into_iter()
@@ -1087,7 +1317,6 @@ fn janitor_loop(
         .unwrap_or(Duration::from_secs(1))
         .clamp(Duration::from_millis(5), Duration::from_secs(1));
     let (lock, cv) = &*stop;
-    let mut last_replan = clock::now_ns();
     loop {
         {
             let mut stopped = lock.lock().unwrap();
@@ -1102,10 +1331,24 @@ fn janitor_loop(
                 return;
             }
         }
+        // incremental pass: at most `slice` endpoints per tick, resumed
+        // from a persistent cursor — the registry lock is held only for
+        // the key walk, never across idle checks, closes, or quiesces,
+        // so a 1k-endpoint table never blocks admission for an O(n) sweep
+        let scanned = registry.scan_slice(slice);
         if let Some(t) = ttl {
-            for ep in registry.take_idle(t) {
-                ep.close_and_join(CloseReason::Retired);
-                metrics.idle_evictions.fetch_add(1, Ordering::Relaxed);
+            for ep in &scanned {
+                if ep.is_closed() || !ep.is_idle(t) {
+                    continue;
+                }
+                // the idle check runs outside the registry lock, so a
+                // request may land between it and the remove; the
+                // Retired close still drains gracefully, so the race
+                // costs that caller a Retired error, never a lost result
+                if registry.remove(ep.key()).is_some() {
+                    ep.close_and_join(CloseReason::Retired);
+                    metrics.idle_evictions.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
         // the calibration drain rides the same cadence: fold measured
@@ -1116,21 +1359,26 @@ fn janitor_loop(
         // re-plan pass: long-lived pinned endpoints re-run the planner
         // under the corrections just absorbed; a moved argmin swaps in
         // via the same quiesce machinery topology updates use. Sessions
-        // whose plan is still the argmin return `None` and are untouched
+        // whose plan is still the argmin return `None` and are untouched.
+        // The cadence gate is per endpoint (stamped on the endpoint, not
+        // a global timer) so sliced scanning re-plans each endpoint on
+        // its own `replan_every` schedule
         if let Some(every) = replan_every {
-            if clock::ns_to_duration(clock::ns_since(last_replan)) >= every {
-                last_replan = clock::now_ns();
-                for ep in registry.snapshot() {
-                    if !ep.inner.is_pinned() || ep.is_closed() {
-                        continue;
-                    }
-                    let swapped = ep
-                        .inner
-                        .quiesce_and_swap(|cur| Ok(cur.replan(&planner).map(Arc::new)));
-                    if let Ok(Some(next)) = swapped {
-                        metrics.replans.fetch_add(1, Ordering::Relaxed);
-                        ep.inner.set_base_score(next.plan_score(&planner));
-                    }
+            let every_ns = u64::try_from(every.as_nanos()).unwrap_or(u64::MAX);
+            for ep in &scanned {
+                if !ep.inner.is_pinned() || ep.is_closed() {
+                    continue;
+                }
+                if clock::ns_since(ep.inner.last_replan_ns()) < every_ns {
+                    continue;
+                }
+                ep.inner.mark_replanned();
+                let swapped = ep
+                    .inner
+                    .quiesce_and_swap(|cur| Ok(cur.replan(&planner).map(Arc::new)));
+                if let Ok(Some(next)) = swapped {
+                    metrics.replans.fetch_add(1, Ordering::Relaxed);
+                    ep.inner.set_base_score(next.plan_score(&planner));
                 }
             }
         }

@@ -12,13 +12,14 @@
 //! - **quotas**: each tenant may hold at most `quota` live endpoints;
 //!   `insert` enforces it atomically under the registry lock, so racing
 //!   deploys cannot overshoot.
-//! - **idle eviction**: [`SessionRegistry::take_idle`] removes endpoints
-//!   whose queue is empty and which have not been touched for the TTL —
-//!   the janitor closes and joins them outside the lock.
+//! - **incremental scanning**: [`SessionRegistry::scan_slice`] hands the
+//!   janitor a bounded slice of endpoints per tick, resumed from a
+//!   persistent cursor — idle checks, closes, and re-plans all run
+//!   outside the registry lock, so a 1k-endpoint table never blocks
+//!   deploys or lookups for an O(n) sweep.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
-use std::time::Duration;
 
 use super::{Endpoint, ServeError};
 
@@ -54,12 +55,23 @@ impl SessionKey {
     }
 }
 
+/// The janitor's persistent scan cursor: the key order of the last
+/// snapshot plus the resume position within it.
+struct ScanState {
+    keys: Vec<SessionKey>,
+    pos: usize,
+}
+
 /// The server's endpoint table. Lock discipline: the map lock is held
-/// only for map operations — closing and joining dispatcher threads
-/// always happens on the caller's side, outside the lock.
+/// only for map operations — closing endpoints and joining threads
+/// always happens on the caller's side, outside the lock. The scan
+/// cursor has its own lock; the order is cursor → map (only
+/// `scan_slice` takes both, and nothing takes the cursor while holding
+/// the map).
 pub(crate) struct SessionRegistry {
     quota: usize,
     inner: Mutex<HashMap<SessionKey, Endpoint>>,
+    scan: Mutex<ScanState>,
 }
 
 impl SessionRegistry {
@@ -67,6 +79,10 @@ impl SessionRegistry {
         SessionRegistry {
             quota,
             inner: Mutex::new(HashMap::new()),
+            scan: Mutex::new(ScanState {
+                keys: Vec::new(),
+                pos: 0,
+            }),
         }
     }
 
@@ -141,16 +157,29 @@ impl SessionRegistry {
         self.inner.lock().unwrap().drain().map(|(_, ep)| ep).collect()
     }
 
-    /// Remove and return endpoints idle for at least `ttl` (empty queue,
-    /// no submit/flush activity). The caller closes + joins them.
-    pub(crate) fn take_idle(&self, ttl: Duration) -> Vec<Endpoint> {
-        let mut m = self.inner.lock().unwrap();
-        let victims: Vec<SessionKey> = m
-            .iter()
-            .filter(|(_, ep)| ep.is_idle(ttl))
-            .map(|(k, _)| k.clone())
-            .collect();
-        victims.into_iter().filter_map(|k| m.remove(&k)).collect()
+    /// The next bounded slice of the janitor's incremental walk: up to
+    /// `limit` live endpoints starting at the persistent cursor. When
+    /// the cursor exhausts its key snapshot, a fresh snapshot is taken
+    /// (key clones only — the one O(n) moment, and it happens once per
+    /// full cycle, not per tick) and the walk wraps. Keys that vanished
+    /// since the snapshot (retired / evicted) are skipped; keys added
+    /// since are picked up on the next wrap. The caller does all
+    /// endpoint work (idle checks, closes, re-plans) outside both locks.
+    pub(crate) fn scan_slice(&self, limit: usize) -> Vec<Endpoint> {
+        let mut scan = self.scan.lock().unwrap();
+        if scan.pos >= scan.keys.len() {
+            scan.keys = self.inner.lock().unwrap().keys().cloned().collect();
+            scan.pos = 0;
+        }
+        let mut out = Vec::new();
+        let m = self.inner.lock().unwrap();
+        while scan.pos < scan.keys.len() && out.len() < limit {
+            if let Some(ep) = m.get(&scan.keys[scan.pos]) {
+                out.push(ep.clone());
+            }
+            scan.pos += 1;
+        }
+        out
     }
 
     /// Live endpoints held by one tenant.

@@ -1,34 +1,47 @@
 //! Topology-aware micro-batching scheduler — per-endpoint bounded
-//! admission queues drained by dedicated dispatcher threads.
+//! admission queues drained by the server's shared dispatch core.
 //!
 //! Each deployed endpoint owns one [`EndpointInner`]: a bounded FIFO of
-//! pending jobs guarded by a condvar, plus the dispatcher service thread
-//! that drains it. Admission happens directly on the caller's thread
-//! (`offer` is a queue push — there is no router hop), so the only
-//! threads in the serving layer are the dispatchers themselves:
+//! pending jobs plus the scheduling state that connects it to the
+//! shared [`DispatchCore`]. Admission happens directly on the caller's
+//! thread (`offer` is a queue push — there is no router hop), and an
+//! idle endpoint costs **no thread at all**: its flush deadline lives as
+//! an entry on the core's timer wheel until either the deadline fires
+//! or the queue reaches `max_batch`, at which point the endpoint is
+//! enqueued on the core's ready queue and a pool worker drains it.
 //!
 //! - **flush policy** (deadline-or-size, generalizing
-//!   [`BatchPolicy`](super::BatchPolicy)): a dispatcher sleeps until its
-//!   queue holds `max_batch` jobs *or* the oldest job has waited
-//!   `max_wait`, then drains up to `max_batch` jobs as one flush. N
-//!   concurrent requests against one deployed topology therefore
+//!   [`BatchPolicy`](super::BatchPolicy)): the first job into an empty
+//!   queue arms a wheel timer at `submitted + max_wait`; reaching
+//!   `max_batch` queued jobs cancels the timer and enqueues
+//!   immediately. A worker drains up to `max_batch` jobs as one flush.
+//!   N concurrent requests against one deployed topology therefore
 //!   coalesce into ⌈N/max_batch⌉ [`Session::run_batch`] calls instead of
 //!   N `run` calls — counter-asserted via
 //!   [`Metrics::pinned_dispatches`](super::Metrics), and bit-identical
 //!   to per-request dispatch because `run_batch` is bit-identical to
 //!   looped `run` (`tests/session.rs` pins that contract).
+//! - **scheduling latches**: `enqueued` (at most one ready-queue entry
+//!   per endpoint), `flushing` (at most one in-flight flush per
+//!   endpoint — two pool workers never co-flush one endpoint), `armed` +
+//!   `wheel_gen` (lazy timer cancellation: bumping the generation
+//!   invalidates any armed entry without touching the wheel). Invariant:
+//!   a non-empty, open, un-paused queue always has `armed`, `enqueued`,
+//!   or `flushing` set — work is never stranded.
 //! - **backpressure**: `offer` on a full queue fails immediately with a
 //!   typed [`ServeError::Overloaded`](super::ServeError) — never silent
 //!   blocking — and the reject is charged to the tenant.
 //! - **panic containment**: every flush runs under `catch_unwind`; a
 //!   panicking backend (or session) surfaces as
 //!   [`ServeError::Backend`](super::ServeError) on each in-flight ticket
-//!   and the dispatcher keeps serving — a worker panic can never strand
-//!   a receiver.
-//! - **parallelism shape**: endpoints dispatch concurrently (one thread
-//!   each); within a flush the engine parallelizes across the worker
-//!   pool (`run_batch` scratch slots, sharded supersteps), so a single
-//!   hot endpoint still saturates the machine.
+//!   and the workers keep serving — a flush panic can never strand a
+//!   completion slot (and a dropped [`Responder`] completes its ticket
+//!   with a typed error regardless).
+//! - **parallelism shape**: distinct endpoints flush concurrently
+//!   (across the fixed worker pool, under per-tenant DRR fairness);
+//!   within a flush the engine parallelizes across the compute pool
+//!   (`run_batch` scratch slots, sharded supersteps), so a single hot
+//!   endpoint still saturates the machine.
 //!
 //! **Tracing** (see [`crate::obs::span`]): when the server carries a
 //! [`TraceSink`], every admitted request opens a trace — an `admit`
@@ -36,26 +49,28 @@
 //! flush drain, and a `dispatch` span over the engine call. A coalesced
 //! flush runs the engine once for many requests, so the first traced
 //! request of each flush is the **carrier**: its trace additionally
-//! gets the `flush` span and parents the per-layer / per-shard kernel
+//! gets the `flush` span, a `timer_fire` span when the flush was
+//! deadline-triggered (start = armed deadline, end = actual fire, meta
+//! = wheel lag in ns), and parents the per-layer / per-shard kernel
 //! spans the engine emits via [`TraceCtx`]. All timestamps come from
 //! [`clock::now_ns`] — `u64` stamps that cross threads as plain
 //! integers. Measured engine time also feeds the perfmodel calibration
 //! bank keyed by the session's workload shape.
 //!
 //! Floating endpoints (requests carry their own graph — the legacy
-//! coordinator path and PJRT replicas) share the same admission + flush
-//! machinery; only the executor differs: jobs are packed into one
-//! [`GraphBatch`] arena and handed to
-//! [`Backend::infer_batch`](crate::coordinator::Backend). The backend is
-//! constructed *on* the dispatcher thread via its factory (PJRT handles
-//! are not `Send`), exactly like the old per-model worker. Floating
+//! coordinator path and PJRT replicas) share the same admission
+//! machinery but keep a dedicated dispatcher thread with the classic
+//! condvar flush loop ([`floating_loop`]): their backend is constructed
+//! *on* that thread via its factory and stays pinned to it (PJRT
+//! handles are not `Send`), so they cannot migrate across pool workers.
+//! Jobs are packed into one [`GraphBatch`] arena and handed to
+//! [`Backend::infer_batch`](crate::coordinator::Backend). Floating
 //! traces carry `admit` → `queue` → `dispatch` (the boxed backend has
 //! no kernel-stage visibility).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::anyhow;
@@ -67,14 +82,10 @@ use crate::obs::span::{Span, SpanId, Stage, TraceCtx, TraceId, TraceSink, NO_PAR
 use crate::session::Session;
 use crate::util::pool::ServiceHandle;
 
+use super::dispatch::DispatchCore;
 use super::metrics::{Metrics, StageTimes};
 use super::registry::SessionKey;
-use super::{BatchPolicy, Response, ServeError};
-
-/// Sending half of one request's response channel.
-pub(crate) type RespondTx = Sender<Result<Response, ServeError>>;
-/// Receiving half — what a [`super::Ticket`] wraps.
-pub(crate) type RespondRx = Receiver<Result<Response, ServeError>>;
+use super::{BatchPolicy, Responder, Response, ServeError, TicketSlot};
 
 /// What one queued request carries.
 pub(crate) enum Payload {
@@ -85,7 +96,7 @@ pub(crate) enum Payload {
 }
 
 /// One admitted request: payload + admission stamp + trace identity +
-/// response channel.
+/// completion slot.
 pub(crate) struct Job {
     payload: Payload,
     /// [`clock::now_ns`] at admission (`offer` entry) — queue wait is
@@ -95,13 +106,13 @@ pub(crate) struct Job {
     trace: TraceId,
     /// the admit root span's id (0 when untraced)
     admit_span: SpanId,
-    tx: RespondTx,
+    tx: Responder,
 }
 
 /// Why an endpoint stopped admitting work.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum CloseReason {
-    /// graceful: queued jobs are flushed, then the dispatcher exits
+    /// graceful: queued jobs are flushed, then the endpoint goes away
     Retired,
     /// graceful: server-wide stop, queued jobs are flushed
     Shutdown,
@@ -113,23 +124,38 @@ struct QueueState {
     q: VecDeque<Job>,
     closed: Option<CloseReason>,
     fail_msg: Option<String>,
-    /// an updater asked the dispatcher to drain and park
+    /// an updater asked the endpoint to drain and hold
     /// ([`EndpointInner::quiesce_and_swap`])
     paused: bool,
-    /// the dispatcher acknowledged the pause with an empty queue — every
-    /// request admitted against the old session has been flushed
+    /// the drain barrier latched on an empty queue with no flush in
+    /// flight — every request admitted against the old session has been
+    /// flushed
     quiesced: bool,
+    /// this endpoint currently sits on the core's ready queue (at most
+    /// one entry; set by whoever enqueues, cleared when a worker pops)
+    enqueued: bool,
+    /// a flush is in flight (pool worker or close-time drain) — flushes
+    /// on one endpoint never overlap
+    flushing: bool,
+    /// a wheel timer entry with generation `wheel_gen` is armed
+    armed: bool,
+    /// lazy-cancel generation: bumping it invalidates any armed entry
+    /// without touching the wheel
+    wheel_gen: u64,
+    /// a fired-but-not-yet-flushed deadline `(armed deadline, fired at)`
+    /// — consumed by the next flush for the `timer_fire` span
+    pending_fire: Option<(u64, u64)>,
 }
 
 /// Shared state of one endpoint: the admission queue, its policy, the
-/// pinned session (if any), and the dispatcher's service handle.
+/// pinned session (if any), and its link to the shared dispatch core.
 pub(crate) struct EndpointInner {
     pub(crate) key: SessionKey,
     /// pinned endpoints coalesce onto this session; floating endpoints
-    /// build their backend on the dispatcher thread instead. Behind a
+    /// build their backend on their dedicated thread instead. Behind a
     /// mutex because topology updates swap it
-    /// ([`EndpointInner::quiesce_and_swap`]) — the dispatcher re-reads it
-    /// per flush, never mid-flush
+    /// ([`EndpointInner::quiesce_and_swap`]) — flushes re-read it per
+    /// flush, never mid-flush
     session: Mutex<Option<Arc<Session>>>,
     /// serializes updaters (delta apply, janitor re-plan, background
     /// re-partition) so at most one quiesce cycle is in flight
@@ -138,7 +164,10 @@ pub(crate) struct EndpointInner {
     /// anchor the serving layer judges repair degradation against
     base_score: Mutex<Option<f64>>,
     /// in-flight background re-partition, joined on close
-    pub(crate) repartition: Mutex<Option<std::thread::JoinHandle<()>>>,
+    pub(crate) repartition: Mutex<Option<ServiceHandle>>,
+    /// the server's shared dispatch core (`None` = floating endpoint on
+    /// its dedicated thread)
+    core: Option<Arc<DispatchCore>>,
     pub(crate) policy: BatchPolicy,
     pub(crate) capacity: usize,
     pub(crate) metrics: Arc<Metrics>,
@@ -152,8 +181,15 @@ pub(crate) struct EndpointInner {
     /// [`clock::now_ns`] of the last submit/flush (idle-eviction gauge;
     /// `Relaxed` — a stale read only shifts eviction by one janitor tick)
     last_used_ns: AtomicU64,
+    /// [`clock::now_ns`] of the last janitor re-plan pass over this
+    /// endpoint (`Relaxed` — the janitor is the only writer)
+    last_replan_ns: AtomicU64,
     state: Mutex<QueueState>,
-    ready: Condvar,
+    /// wakes floating dispatchers (new work / close / pause) and
+    /// quiesce / close-drain waiters (flush finished, barrier latched)
+    cv: Condvar,
+    /// the floating endpoint's dedicated dispatcher; pinned endpoints
+    /// leave it unattached (their flushes run on the shared pool)
     pub(crate) worker: ServiceHandle,
 }
 
@@ -165,12 +201,12 @@ impl EndpointInner {
         capacity: usize,
         metrics: Arc<Metrics>,
         sink: Option<Arc<TraceSink>>,
+        core: Option<Arc<DispatchCore>>,
     ) -> Arc<EndpointInner> {
-        // max_batch == 0 would make the size trigger (len >= 0) fire
-        // before the closed/empty exit in next_batch is ever reached —
-        // an empty-flush busy spin that also deadlocks shutdown. Clamp.
+        // max_batch == 0 would make the size trigger (len >= 0) fire on
+        // every admit and take zero-job batches. Clamp.
         policy.max_batch = policy.max_batch.max(1);
-        let name = format!("gnnb-serve/{}/{}", key.tenant, key.model);
+        let name = format!("gnnb-float/{}/{}", key.tenant, key.model);
         let tenant_stages = metrics.tenant_stages(&key.tenant);
         Arc::new(EndpointInner {
             key,
@@ -178,6 +214,7 @@ impl EndpointInner {
             update_lock: Mutex::new(()),
             base_score: Mutex::new(None),
             repartition: Mutex::new(None),
+            core,
             policy,
             capacity,
             metrics,
@@ -185,14 +222,20 @@ impl EndpointInner {
             sink,
             dispatches: AtomicU64::new(0),
             last_used_ns: AtomicU64::new(clock::now_ns()),
+            last_replan_ns: AtomicU64::new(clock::now_ns()),
             state: Mutex::new(QueueState {
                 q: VecDeque::new(),
                 closed: None,
                 fail_msg: None,
                 paused: false,
                 quiesced: false,
+                enqueued: false,
+                flushing: false,
+                armed: false,
+                wheel_gen: 0,
+                pending_fire: None,
             }),
-            ready: Condvar::new(),
+            cv: Condvar::new(),
             worker: ServiceHandle::unattached(name),
         })
     }
@@ -224,12 +267,53 @@ impl EndpointInner {
     /// so the join cannot deadlock.
     pub(crate) fn join_repartition(&self) {
         if let Some(h) = self.repartition.lock().unwrap().take() {
-            let _ = h.join();
+            h.join();
         }
     }
 
-    /// Pause the dispatcher, wait until every request admitted against
-    /// the current session has been flushed, run `f` on that session,
+    /// When the janitor last ran a re-plan pass over this endpoint.
+    pub(crate) fn last_replan_ns(&self) -> u64 {
+        self.last_replan_ns.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn mark_replanned(&self) {
+        self.last_replan_ns.store(clock::now_ns(), Ordering::Relaxed);
+    }
+
+    /// `max_wait` as wheel nanoseconds.
+    fn max_wait_ns(&self) -> u64 {
+        u64::try_from(self.policy.max_wait.as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    /// Arm the core's wheel at `deadline_ns` under the state lock (the
+    /// wheel lock nests inside it). A fresh generation supersedes any
+    /// earlier entry.
+    fn arm_locked(self: &Arc<Self>, s: &mut QueueState, deadline_ns: u64) {
+        s.wheel_gen += 1;
+        s.armed = true;
+        if let Some(core) = &self.core {
+            core.arm(self, deadline_ns, s.wheel_gen);
+        }
+    }
+
+    /// Lazily cancel any armed timer: the stale wheel entry is dropped
+    /// at sweep time when its generation no longer matches.
+    fn cancel_timer_locked(s: &mut QueueState) {
+        s.wheel_gen += 1;
+        s.armed = false;
+    }
+
+    /// Put this endpoint on the core's ready queue (caller holds the
+    /// state lock and has checked `!enqueued && !flushing`).
+    fn enqueue_locked(self: &Arc<Self>, s: &mut QueueState) {
+        s.enqueued = true;
+        if let Some(core) = &self.core {
+            core.enqueue(self.clone());
+        }
+    }
+
+    /// Pause dispatch, wait until every request admitted against the
+    /// current session has been flushed, run `f` on that session,
     /// install its replacement (if any), and resume.
     ///
     /// - `Ok(Some(next))` — `f` produced a successor; it is now the
@@ -239,6 +323,13 @@ impl EndpointInner {
     /// - `Err(e)` — the endpoint closed mid-quiesce or `f` rejected the
     ///   update; nothing changed.
     ///
+    /// On the shared core the quiesce is a **drain barrier**, not a
+    /// parked thread: any armed timer is lazily cancelled and the
+    /// endpoint is enqueued for an immediate drain; pool workers keep
+    /// flushing it (`paused` batches still run — against the old
+    /// session, which is the point) until the queue goes empty with no
+    /// flush in flight, which latches `quiesced` and wakes the updater.
+    ///
     /// Updaters are serialized by `update_lock`. Admission stays **open**
     /// throughout — requests admitted during the pause simply queue (up
     /// to capacity) and are served by the successor session; the
@@ -247,7 +338,7 @@ impl EndpointInner {
     /// sustained saturation the quiesce waits for the first gap in which
     /// the queue drains empty.
     pub(crate) fn quiesce_and_swap(
-        &self,
+        self: &Arc<Self>,
         f: impl FnOnce(&Arc<Session>) -> Result<Option<Arc<Session>>, ServeError>,
     ) -> Result<Option<Arc<Session>>, ServeError> {
         let _serial = self.update_lock.lock().unwrap();
@@ -264,19 +355,31 @@ impl EndpointInner {
                     s.paused = false;
                     s.quiesced = false;
                     drop(s);
-                    self.ready.notify_all();
+                    self.cv.notify_all();
                     return Err(e);
                 }
                 if s.quiesced {
                     break;
                 }
-                s.paused = true;
-                self.ready.notify_all();
-                s = self.ready.wait(s).unwrap();
+                if !s.paused {
+                    s.paused = true;
+                    Self::cancel_timer_locked(&mut s);
+                    if s.q.is_empty() && !s.flushing {
+                        s.quiesced = true;
+                        break;
+                    }
+                    // pending work was waiting on its deadline — pull it
+                    // forward so the barrier drains promptly
+                    if !s.enqueued && !s.flushing {
+                        self.enqueue_locked(&mut s);
+                    }
+                }
+                s = self.cv.wait(s).unwrap();
             }
         }
-        // the dispatcher is parked on an empty queue; run the update
-        // outside the queue lock so admission never blocks on it
+        // the endpoint is quiesced (no queued work, no flush in flight);
+        // run the update outside the queue lock so admission never
+        // blocks on it
         let result = f(&current);
         if let Ok(Some(next)) = &result {
             *self.session.lock().unwrap() = Some(next.clone());
@@ -284,8 +387,19 @@ impl EndpointInner {
         let mut s = self.state.lock().unwrap();
         s.paused = false;
         s.quiesced = false;
+        // requests admitted during the pause are waiting — reschedule
+        if s.closed.is_none() && !s.q.is_empty() {
+            if s.q.len() >= self.policy.max_batch {
+                if !s.enqueued && !s.flushing {
+                    self.enqueue_locked(&mut s);
+                }
+            } else {
+                let deadline = s.q.front().unwrap().submitted_ns.saturating_add(self.max_wait_ns());
+                self.arm_locked(&mut s, deadline);
+            }
+        }
         drop(s);
-        self.ready.notify_all();
+        self.cv.notify_all();
         result
     }
 
@@ -300,9 +414,12 @@ impl EndpointInner {
     }
 
     /// Admit one request, or reject with a typed error. Never blocks.
-    /// On success returns the response channel and the admission stamp
+    /// On success returns the completion slot and the admission stamp
     /// (the `Ticket` measures wait-side latency from it).
-    pub(crate) fn offer(&self, payload: Payload) -> Result<(RespondRx, u64), ServeError> {
+    pub(crate) fn offer(
+        self: &Arc<Self>,
+        payload: Payload,
+    ) -> Result<(Arc<TicketSlot>, u64), ServeError> {
         let admit_ns = clock::now_ns();
         let mut s = self.state.lock().unwrap();
         match s.closed {
@@ -328,18 +445,32 @@ impl EndpointInner {
             Some(sink) => (sink.begin_trace(), sink.next_span_id()),
             None => (0, 0),
         };
-        let (tx, rx) = channel();
+        let slot = Arc::new(TicketSlot::new());
         s.q.push_back(Job {
             payload,
             submitted_ns: admit_ns,
             trace,
             admit_span,
-            tx,
+            tx: Responder::new(slot.clone()),
         });
         // gauge updates happen under the queue lock so admit/drain
         // ordering matches queue ordering (metrics locks are leaf locks —
         // nothing acquires the queue lock while holding them)
         self.metrics.record_admit(&self.key.model, &self.key.tenant);
+        // scheduling trigger (shared-core endpoints): size reached →
+        // ready queue now; first into empty → wheel deadline. During a
+        // pause or an in-flight flush, end-of-flush / resume reschedules.
+        if self.core.is_some() && !s.paused && !s.flushing {
+            if s.q.len() >= self.policy.max_batch {
+                if !s.enqueued {
+                    Self::cancel_timer_locked(&mut s);
+                    self.enqueue_locked(&mut s);
+                }
+            } else if s.q.len() == 1 {
+                let deadline = admit_ns.saturating_add(self.max_wait_ns());
+                self.arm_locked(&mut s, deadline);
+            }
+        }
         drop(s);
         // the admit span covers validation + queue push, root of the trace
         if let Some(sink) = &self.sink {
@@ -354,13 +485,157 @@ impl EndpointInner {
             });
         }
         self.touch();
-        self.ready.notify_all();
-        Ok((rx, admit_ns))
+        if self.core.is_none() {
+            self.cv.notify_all();
+        }
+        Ok((slot, admit_ns))
+    }
+
+    /// A wheel deadline armed with generation `gen` expired. Called by
+    /// the core's timer thread with no locks held.
+    pub(crate) fn timer_fire(self: &Arc<Self>, gen: u64, deadline_ns: u64, fired_ns: u64) {
+        let mut s = self.state.lock().unwrap();
+        if !s.armed || gen != s.wheel_gen {
+            return; // lazily cancelled or superseded
+        }
+        s.armed = false;
+        if s.closed.is_some() || s.paused || s.q.is_empty() {
+            return;
+        }
+        s.pending_fire = Some((deadline_ns, fired_ns));
+        self.metrics
+            .record_timer_fire(clock::ns_to_secs(fired_ns.saturating_sub(deadline_ns)));
+        if !s.enqueued && !s.flushing {
+            self.enqueue_locked(&mut s);
+        }
+    }
+
+    /// A pool worker popped this endpoint off the ready queue: decide
+    /// whether a flush is actually due and take it. `None` = nothing to
+    /// do (stale enqueue, in-flight flush, closed — the closer drains, or
+    /// a quiesce barrier latching).
+    fn begin_worker_flush(self: &Arc<Self>) -> Option<(Vec<Job>, Option<(u64, u64)>)> {
+        let mut s = self.state.lock().unwrap();
+        s.enqueued = false;
+        if s.flushing || s.closed.is_some() {
+            return None;
+        }
+        if s.paused {
+            if s.q.is_empty() {
+                if !s.quiesced {
+                    s.quiesced = true;
+                    self.cv.notify_all();
+                }
+                return None;
+            }
+            if s.quiesced {
+                // post-barrier admissions wait for the successor session
+                return None;
+            }
+            // drain-barrier flush: run pre-pause work against the old
+            // session
+            let take = s.q.len().min(self.policy.max_batch);
+            return Some(Self::take_batch(self, &mut s, take));
+        }
+        if s.q.is_empty() {
+            return None;
+        }
+        let take = if s.q.len() >= self.policy.max_batch {
+            self.policy.max_batch
+        } else {
+            let oldest = s.q.front().unwrap().submitted_ns;
+            if clock::ns_since(oldest) >= self.max_wait_ns() {
+                s.q.len()
+            } else {
+                // woken early (an earlier flush resolved the size
+                // trigger) — put the deadline back on the wheel
+                let deadline = oldest.saturating_add(self.max_wait_ns());
+                self.arm_locked(&mut s, deadline);
+                return None;
+            }
+        };
+        Some(Self::take_batch(self, &mut s, take))
+    }
+
+    fn take_batch(
+        self: &Arc<Self>,
+        s: &mut QueueState,
+        take: usize,
+    ) -> (Vec<Job>, Option<(u64, u64)>) {
+        let batch: Vec<Job> = s.q.drain(..take).collect();
+        self.metrics
+            .record_drain(&self.key.model, &self.key.tenant, take);
+        s.flushing = true;
+        // any armed deadline described the jobs just taken — invalidate
+        Self::cancel_timer_locked(s);
+        (batch, s.pending_fire.take())
+    }
+
+    /// A flush finished: release the `flushing` latch, wake barrier /
+    /// close-drain waiters, and reschedule whatever queued up meanwhile.
+    fn end_flush(self: &Arc<Self>) {
+        let mut s = self.state.lock().unwrap();
+        s.flushing = false;
+        self.cv.notify_all();
+        if s.closed.is_some() {
+            return; // the closer drains the remainder
+        }
+        if s.paused {
+            if s.q.is_empty() {
+                s.quiesced = true; // cv already notified above
+            } else if !s.quiesced && !s.enqueued {
+                self.enqueue_locked(&mut s); // barrier still draining
+            }
+            return;
+        }
+        if s.q.is_empty() {
+            return;
+        }
+        if s.q.len() >= self.policy.max_batch {
+            if !s.enqueued {
+                self.enqueue_locked(&mut s);
+            }
+        } else {
+            let deadline = s.q.front().unwrap().submitted_ns.saturating_add(self.max_wait_ns());
+            self.arm_locked(&mut s, deadline);
+        }
+    }
+
+    /// Close-time drain for pinned endpoints: with admission closed and
+    /// pool workers refusing the endpoint, flush the remainder here on
+    /// the closer's thread (graceful reasons only — `Failed` already
+    /// error-drained in [`EndpointInner::close`]).
+    pub(crate) fn drain_on_close(self: &Arc<Self>) {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.flushing {
+                // let the in-flight pool flush finish first
+                s = self.cv.wait(s).unwrap();
+                continue;
+            }
+            if s.closed == Some(CloseReason::Failed) || s.q.is_empty() {
+                return;
+            }
+            let take = s.q.len().min(self.policy.max_batch);
+            let batch: Vec<Job> = s.q.drain(..take).collect();
+            self.metrics
+                .record_drain(&self.key.model, &self.key.tenant, take);
+            s.flushing = true;
+            drop(s);
+            let session = self
+                .current_session()
+                .expect("pinned close drain requires a session");
+            flush_pinned(self, &session, batch, None);
+            s = self.state.lock().unwrap();
+            s.flushing = false;
+            self.cv.notify_all();
+        }
     }
 
     /// Block until a flush is due (size or deadline), then drain up to
-    /// `max_batch` jobs. `None` = closed and fully drained: dispatcher
-    /// exits.
+    /// `max_batch` jobs. `None` = closed and fully drained: the floating
+    /// dispatcher exits. (Floating endpoints only — pinned flushes are
+    /// scheduled by the shared core.)
     fn next_batch(&self) -> Option<Vec<Job>> {
         let mut s = self.state.lock().unwrap();
         loop {
@@ -379,9 +654,9 @@ impl EndpointInner {
                 }
                 if !s.quiesced {
                     s.quiesced = true;
-                    self.ready.notify_all();
+                    self.cv.notify_all();
                 }
-                s = self.ready.wait(s).unwrap();
+                s = self.cv.wait(s).unwrap();
                 continue;
             }
             if s.q.len() >= self.policy.max_batch {
@@ -394,12 +669,12 @@ impl EndpointInner {
                         break;
                     }
                     let (s2, _) = self
-                        .ready
+                        .cv
                         .wait_timeout(s, self.policy.max_wait - age)
                         .unwrap();
                     s = s2;
                 }
-                None => s = self.ready.wait(s).unwrap(),
+                None => s = self.cv.wait(s).unwrap(),
             }
         }
         let take = s.q.len().min(self.policy.max_batch);
@@ -408,26 +683,29 @@ impl EndpointInner {
         Some(batch)
     }
 
-    /// Stop admission. Graceful reasons leave queued jobs for the
-    /// dispatcher to flush; `Failed` error-drains them here (there is no
-    /// dispatcher left to serve them). Idempotent — the first reason wins.
+    /// Stop admission. Graceful reasons leave queued jobs for the close
+    /// path to flush ([`EndpointInner::drain_on_close`] for pinned, the
+    /// dispatcher's exit drain for floating); `Failed` error-drains them
+    /// here (no one is left to serve them). Idempotent — the first
+    /// reason wins.
     pub(crate) fn close(&self, reason: CloseReason, msg: Option<String>) {
         let mut s = self.state.lock().unwrap();
         if s.closed.is_none() {
             s.closed = Some(reason);
             s.fail_msg = msg;
+            Self::cancel_timer_locked(&mut s);
         }
         if s.closed == Some(CloseReason::Failed) && !s.q.is_empty() {
             let n = s.q.len();
             let emsg = s.fail_msg.clone().unwrap_or_else(|| "backend failed".into());
             for job in s.q.drain(..) {
-                let _ = job.tx.send(Err(ServeError::Backend(emsg.clone())));
+                job.tx.send(Err(ServeError::Backend(emsg.clone())));
             }
             self.metrics.record_drain(&self.key.model, &self.key.tenant, n);
             self.metrics.errors.fetch_add(n as u64, Ordering::Relaxed);
         }
         drop(s);
-        self.ready.notify_all();
+        self.cv.notify_all();
     }
 
     pub(crate) fn queue_depth(&self) -> usize {
@@ -454,18 +732,24 @@ impl EndpointInner {
     }
 }
 
-/// Dispatcher body for a pinned endpoint: coalesce flushes into
-/// [`Session::run_batch`] over the deployed topology.
-pub(crate) fn pinned_loop(inner: Arc<EndpointInner>) {
+/// One pool-worker turn on a pinned endpoint: take a due batch (if
+/// any), flush it against the current session, reschedule, and report
+/// how many requests were dispatched (the core charges them against the
+/// tenant's DRR deficit).
+pub(crate) fn run_worker_flush(inner: &Arc<EndpointInner>) -> usize {
+    let Some((batch, fire)) = inner.begin_worker_flush() else {
+        return 0;
+    };
+    let n = batch.len();
     // the session is re-read per flush, never mid-flush: topology updates
     // swap it under quiesce, so every batch runs whole against one
     // generation
-    while let Some(batch) = inner.next_batch() {
-        let session = inner
-            .current_session()
-            .expect("pinned dispatcher requires a session");
-        flush_pinned(&inner, &session, batch);
-    }
+    let session = inner
+        .current_session()
+        .expect("shared-core flushes require a pinned session");
+    flush_pinned(inner, &session, batch, fire);
+    inner.end_flush();
+    n
 }
 
 /// Per-request metadata a pinned flush keeps after moving features out.
@@ -474,10 +758,15 @@ struct PinMeta {
     queued_s: f64,
     trace: TraceId,
     admit_span: SpanId,
-    tx: RespondTx,
+    tx: Responder,
 }
 
-fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
+fn flush_pinned(
+    inner: &EndpointInner,
+    session: &Session,
+    batch: Vec<Job>,
+    fire: Option<(u64, u64)>,
+) {
     let m = &inner.metrics;
     let flush_start = clock::now_ns();
     let want = session.expected_input_len();
@@ -491,7 +780,7 @@ fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
             // individually instead of poisoning the whole batch
             Payload::Features(x) if x.len() != want => {
                 m.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = job.tx.send(Err(ServeError::BadRequest(format!(
+                job.tx.send(Err(ServeError::BadRequest(format!(
                     "expected {want} features for the deployed topology (generation {}), got {}",
                     session.deployed().generation(),
                     x.len()
@@ -508,10 +797,10 @@ fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
                 xs.push(x);
             }
             // offer() guards this; defensive so a routing bug degrades to
-            // a typed per-request error instead of a dead dispatcher
+            // a typed per-request error instead of a dead endpoint
             Payload::GraphFeatures(..) => {
                 m.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = job.tx.send(Err(ServeError::BadRequest(
+                job.tx.send(Err(ServeError::BadRequest(
                     "pinned endpoints serve feature-only requests".into(),
                 )));
             }
@@ -523,6 +812,7 @@ fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
     let n = xs.len();
     m.record_batch(n);
     m.record_coalesced(n);
+    m.record_tenant_dispatch(&inner.key.tenant, n);
     inner.dispatches.fetch_add(1, Ordering::Relaxed);
     // queue spans: admission → this drain, per traced request
     if let Some(sink) = &inner.sink {
@@ -563,6 +853,19 @@ fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
     let total_service = clock::ns_to_secs(t1.saturating_sub(t0));
     let service = total_service / n as f64;
     if let Some((sink, trace, admit, flush_id, disp_id)) = ids {
+        // deadline-triggered flush: one span pinning wheel lag (armed
+        // deadline → actual fire), rooted under the carrier's admit
+        if let Some((deadline_ns, fired_ns)) = fire {
+            sink.push(Span {
+                trace,
+                id: sink.next_span_id(),
+                parent: admit,
+                stage: Stage::TimerFire,
+                start_ns: deadline_ns,
+                end_ns: fired_ns,
+                meta: fired_ns.saturating_sub(deadline_ns),
+            });
+        }
         sink.push(Span {
             trace,
             id: flush_id,
@@ -593,7 +896,7 @@ fn flush_pinned(inner: &EndpointInner, session: &Session, batch: Vec<Job>) {
             m.record_calibration(session.calib_key(), n, total_service);
             for (pm, y) in meta.into_iter().zip(ys) {
                 m.record_request(&inner.tenant_stages, pm.queued_s, service);
-                let _ = pm.tx.send(Ok(Response {
+                pm.tx.send(Ok(Response {
                     output: y,
                     queue_seconds: pm.queued_s,
                     service_seconds: service,
@@ -658,7 +961,7 @@ struct FloatJob {
     queued: f64,
     trace: TraceId,
     admit_span: SpanId,
-    tx: RespondTx,
+    tx: Responder,
 }
 
 fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>) {
@@ -689,7 +992,7 @@ fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>)
             }
             Payload::Features(_) => {
                 m.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = job.tx.send(Err(ServeError::BadRequest(
+                job.tx.send(Err(ServeError::BadRequest(
                     "floating endpoints require a graph per request".into(),
                 )));
             }
@@ -700,6 +1003,7 @@ fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>)
     }
     let n = jobs.len();
     m.record_batch(n);
+    m.record_tenant_dispatch(&inner.key.tenant, n);
     inner.dispatches.fetch_add(1, Ordering::Relaxed);
     // pack the flush into one arena; backends consume views
     let packed = GraphBatch::pack(jobs.iter().map(|j| (&j.graph, j.x.as_slice())));
@@ -732,7 +1036,7 @@ fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>)
                 match result {
                     Ok(output) => {
                         m.record_request(&inner.tenant_stages, job.queued, service);
-                        let _ = job.tx.send(Ok(Response {
+                        job.tx.send(Ok(Response {
                             output,
                             queue_seconds: job.queued,
                             service_seconds: service,
@@ -741,7 +1045,7 @@ fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>)
                     }
                     Err(e) => {
                         m.errors.fetch_add(1, Ordering::Relaxed);
-                        let _ = job.tx.send(Err(ServeError::Backend(e.to_string())));
+                        job.tx.send(Err(ServeError::Backend(e.to_string())));
                     }
                 }
             }
@@ -753,17 +1057,17 @@ fn flush_floating(inner: &EndpointInner, backend: &dyn Backend, batch: Vec<Job>)
             ));
             for job in jobs {
                 m.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = job.tx.send(Err(e.clone()));
+                job.tx.send(Err(e.clone()));
             }
         }
     }
     inner.touch();
 }
 
-fn fail_all(m: &Metrics, txs: impl IntoIterator<Item = RespondTx>, e: ServeError) {
+fn fail_all(m: &Metrics, txs: impl IntoIterator<Item = Responder>, e: ServeError) {
     for tx in txs {
         m.errors.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(Err(e.clone()));
+        tx.send(Err(e.clone()));
     }
 }
 

@@ -311,6 +311,31 @@ impl ServiceHandle {
         *g = Some(t);
     }
 
+    /// Spawn `f` under this handle's name and attach it — the two-phase
+    /// [`ServiceHandle::unattached`]/[`ServiceHandle::attach`] dance in
+    /// one call, for owners that published the handle (inside an `Arc`)
+    /// before the thread body that borrows it could exist. Panics if a
+    /// thread is already attached.
+    pub fn spawn_on(&self, f: impl FnOnce() + Send + 'static) {
+        let t = std::thread::Builder::new()
+            .name(self.name.clone())
+            .spawn(f)
+            .expect("failed to spawn service thread");
+        self.attach(t);
+    }
+
+    /// Whether the attached thread has run to completion. `false` while
+    /// it is still running, and also when no thread is attached or it
+    /// was already joined — callers use this to decide between "work in
+    /// flight" and "slot free to reuse after a join".
+    pub fn is_finished(&self) -> bool {
+        self.handle
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|t| t.is_finished())
+    }
+
     /// Join the service thread. Idempotent: returns `true` iff this call
     /// performed the join. A panic on the service thread is reported, not
     /// propagated.
@@ -476,6 +501,27 @@ mod tests {
         h.attach(t);
         assert!(h.join());
         assert_eq!(n.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn service_handle_spawn_on_and_is_finished() {
+        let h = Arc::new(ServiceHandle::unattached("svc-spawn-on"));
+        assert!(!h.is_finished(), "nothing attached yet");
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = gate.clone();
+        h.spawn_on(move || {
+            let (lock, cv) = &*g2;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        assert!(!h.is_finished(), "thread is parked on the gate");
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        assert!(h.join());
+        assert!(!h.is_finished(), "joined handles report not-finished");
     }
 
     #[test]

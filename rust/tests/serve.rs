@@ -14,8 +14,14 @@
 //!   tenant, never silent blocking;
 //! - deadline flush fires with a single queued request;
 //! - lifecycle: deploy/retire, duplicate-deploy rejection, per-tenant
-//!   quotas, idle eviction, idempotent shutdown.
+//!   quotas, idle eviction, idempotent shutdown;
+//! - the shared dispatch core: 1000 mostly-idle deployed endpoints run
+//!   on a fixed worker pool (thread census in a child process), and
+//!   weighted deficit round-robin bounds a flooding tenant's dispatch
+//!   share so a quiet tenant's queue wait stays bounded;
+//! - the persisted-calibration artifact round-trips through JSON.
 
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
@@ -560,6 +566,231 @@ fn bad_requests_are_rejected_at_admission() {
     ));
     // nothing was admitted or dispatched for any of them
     assert_eq!(server.metrics().submitted.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// Weighted-DRR fairness gate: with one dispatch worker, a tenant
+/// flooding 192 requests cannot monopolize dispatch bandwidth — the
+/// quiet tenant (weight 4 vs the flooder's 1) completes its 8 requests
+/// while most of the flood is still queued, and its queue-wait tail
+/// stays below the flooder's.
+#[test]
+fn weighted_drr_bounds_a_flooding_tenants_dispatch_share() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 1200, 17);
+    let engine = test_engine("drr", 14);
+    let mut weights = HashMap::new();
+    weights.insert("noisy".to_string(), 1u32);
+    weights.insert("quiet".to_string(), 4u32);
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        },
+        queue_capacity: 4096,
+        // a single worker serializes dispatch so shares are observable
+        dispatch_threads: 1,
+        tenant_weights: weights,
+        ..ServerConfig::default()
+    });
+    let mk = || {
+        Session::builder(engine.clone())
+            .precision(Precision::F32)
+            .plan(ExecutionPlan::Batched { workspace: 0 })
+            .graph(ng.graph.clone())
+    };
+    let noisy = server.deploy("noisy", mk()).unwrap();
+    let quiet = server.deploy("quiet", mk()).unwrap();
+
+    let flood: Vec<_> = (0..192)
+        .map(|i| {
+            let x: Vec<f32> = ng.x.iter().map(|v| v + i as f32 * 1e-3).collect();
+            noisy.submit(x).unwrap()
+        })
+        .collect();
+    let polite: Vec<_> = (0..8)
+        .map(|_| quiet.submit(ng.x.clone()).unwrap())
+        .collect();
+    for t in polite {
+        t.wait().unwrap();
+    }
+
+    // snapshot at quiet completion: DRR must have interleaved the quiet
+    // tenant's batch long before the flood drained
+    let m = server.metrics();
+    let noisy_done = m.dispatched("noisy");
+    assert_eq!(m.dispatched("quiet"), 8);
+    assert!(
+        noisy_done <= 192 * 6 / 10,
+        "noisy dispatched {noisy_done}/192 before the quiet tenant finished — starved it"
+    );
+
+    for t in flood {
+        t.wait().unwrap();
+    }
+    assert_eq!(m.dispatched("noisy"), 192);
+    let q = m.tenant_stages("quiet").queue.summary();
+    let n = m.tenant_stages("noisy").queue.summary();
+    assert!(
+        q.p99 < n.p99,
+        "quiet queue p99 {:.4}s not below flooded p99 {:.4}s",
+        q.p99,
+        n.p99
+    );
+    server.shutdown();
+}
+
+/// Child half of the thread-census gate: inert unless the parent test
+/// re-invokes this binary with `GNNB_THREAD_COUNT_CHILD=1`. Deploys
+/// 1000 pinned endpoints (10 of them active), then reads
+/// `/proc/self/task/*/comm` to prove serving runs on the shared core —
+/// a fixed dispatch pool + one timer thread — with zero per-endpoint
+/// dispatcher threads.
+#[test]
+#[cfg(target_os = "linux")]
+fn thread_count_child() {
+    if std::env::var("GNNB_THREAD_COUNT_CHILD").is_err() {
+        return;
+    }
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        queue_capacity: 1024,
+        tenant_quota: 4,
+        dispatch_threads: 4,
+        ..ServerConfig::default()
+    });
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 60, 42);
+    let engine = test_engine("census", 11);
+    let mut eps = Vec::with_capacity(1000);
+    for t in 0..1000 {
+        let ep = server
+            .deploy(
+                &format!("t{t}"),
+                Session::builder(engine.clone())
+                    .precision(Precision::F32)
+                    .plan(ExecutionPlan::Batched { workspace: 0 })
+                    .graph(ng.graph.clone()),
+            )
+            .unwrap();
+        eps.push(ep);
+    }
+    assert_eq!(server.endpoints().len(), 1000);
+    // ~10 active endpoints; the other 990 cost only registry + wheel state
+    for ep in eps.iter().step_by(100) {
+        ep.submit(ng.x.clone()).unwrap().wait().unwrap();
+    }
+
+    let mut dispatch = 0usize;
+    let mut timer = 0usize;
+    let mut janitor = 0usize;
+    let mut float = 0usize;
+    let mut legacy = 0usize;
+    for entry in std::fs::read_dir("/proc/self/task").unwrap() {
+        let comm = std::fs::read_to_string(entry.unwrap().path().join("comm"))
+            .unwrap_or_default();
+        let comm = comm.trim();
+        if comm.starts_with("gnnb-dispatch") {
+            dispatch += 1;
+        } else if comm == "gnnb-timer" {
+            timer += 1;
+        } else if comm.starts_with("gnnb-serve-jani") {
+            janitor += 1;
+        } else if comm.starts_with("gnnb-float") {
+            float += 1;
+        } else if comm.starts_with("gnnb-serve/") {
+            legacy += 1;
+        }
+    }
+    assert!(dispatch <= 4, "worker pool leaked: {dispatch} dispatch threads");
+    assert_eq!(timer, 1, "expected exactly one timer-wheel thread");
+    assert!(janitor <= 1, "{janitor} janitor threads");
+    assert_eq!(float, 0, "no floating endpoints were deployed");
+    assert_eq!(legacy, 0, "per-endpoint dispatcher threads must be gone");
+    let status = std::fs::read_to_string("/proc/self/status").unwrap();
+    let threads: usize = status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line in /proc/self/status")
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(
+        threads < 100,
+        "1000 endpoints cost {threads} OS threads (want ≪ 1000)"
+    );
+    println!("census-ok: {threads} threads for 1000 endpoints");
+    server.shutdown();
+}
+
+/// Tentpole thread-count gate: 1000 mostly-idle deployed endpoints run
+/// on a fixed worker pool sized by `dispatch_threads`, not a thread per
+/// endpoint. The census runs in a child process so the other tests'
+/// threads can't pollute the count.
+#[test]
+#[cfg(target_os = "linux")]
+fn a_thousand_idle_endpoints_share_the_fixed_worker_pool() {
+    let exe = std::env::current_exe().unwrap();
+    let out = std::process::Command::new(exe)
+        .args(["thread_count_child", "--exact", "--test-threads=1", "--nocapture"])
+        .env("GNNB_THREAD_COUNT_CHILD", "1")
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "child census failed:\n{stdout}\n{stderr}"
+    );
+    assert!(
+        stdout.contains("census-ok"),
+        "child did not run the census:\n{stdout}"
+    );
+}
+
+/// Persisted-calibration satellite: `Server::export_calibration` emits a
+/// JSON artifact `calibrator_from_json` restores losslessly — the
+/// serving half of `gnnbuilder dse --calibration`.
+#[test]
+fn export_calibration_round_trips_through_json() {
+    let ng = datasets::gen_citation_graph(&TEST_STATS, 300, 19);
+    let engine = test_engine("calib_export", 15);
+    let server = server_with(
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        },
+        1024,
+    );
+    let ep = server
+        .deploy(
+            "acme",
+            Session::builder(engine)
+                .precision(Precision::F32)
+                .plan(ExecutionPlan::Batched { workspace: 0 })
+                .graph(ng.graph.clone()),
+        )
+        .unwrap();
+    let tickets: Vec<_> = (0..16).map(|_| ep.submit(ng.x.clone()).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert!(
+        server.calibrate_now() > 0,
+        "pinned flushes must produce calibration records"
+    );
+    let text = server.export_calibration().to_string_pretty();
+    let restored = gnnbuilder::perfmodel::calibration::calibrator_from_json(
+        &gnnbuilder::util::json::Json::parse(&text).unwrap(),
+    )
+    .unwrap();
+    assert!(!restored.is_empty(), "artifact carried no cells");
+    assert_eq!(
+        restored.cells(),
+        server.planner().calibration_cells(),
+        "restored calibrator diverged from the exporting planner"
+    );
     server.shutdown();
 }
 
